@@ -1,0 +1,43 @@
+//! Capacity planning example (Fig. 1): demand growth → servers needed,
+//! CPU-only vs accelerator nodes, plus the power picture that motivates the
+//! whole program (§I perf/W goal).
+//!
+//!     cargo run --release --example capacity_planning
+
+use anyhow::Result;
+use fbia::capacity::{capacity_series, power_savings, GrowthScenario};
+use fbia::config::Config;
+use fbia::graph::models::ModelId;
+use fbia::util::table::{f2, Table};
+
+fn main() -> Result<()> {
+    let cfg = Config::default();
+    for (scenario, model) in [
+        (GrowthScenario::recommendation(), ModelId::RecsysComplex),
+        (GrowthScenario::other_ml(), ModelId::XlmR),
+    ] {
+        println!("\n=== Fig. 1 ({}) — serving {} ===", scenario.name, model.name());
+        let pts = capacity_series(model, &scenario, &cfg)?;
+        let mut t = Table::new(&[
+            "quarter", "demand QPS", "CPU servers", "accel servers", "growth vs t0",
+        ]);
+        for p in &pts {
+            t.row(&[
+                p.quarter.to_string(),
+                format!("{:.0}", p.demand_qps),
+                format!("{:.0}", p.cpu_servers),
+                format!("{:.0}", p.accel_servers),
+                f2(p.cpu_norm),
+            ]);
+        }
+        t.print();
+        let last = pts.last().unwrap();
+        println!(
+            "growth over the window: {:.1}x (paper band: 5-7x); accel fleet is {:.0}x smaller",
+            last.cpu_norm,
+            last.cpu_servers / last.accel_servers.max(1.0)
+        );
+        println!("power saved at final quarter: {:.1} kW", power_savings(&pts, &cfg) / 1e3);
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: load an AOT artifact, run one real inference through PJRT,
+//! and sanity-check it against the Rust reference implementation.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end path through the three-layer stack:
+//! Pallas kernel (L1) → JAX model (L2) → HLO text → PJRT runtime (L3).
+
+use anyhow::Result;
+use fbia::numerics::validate;
+use fbia::numerics::weights::WeightGen;
+use fbia::runtime::Engine;
+use fbia::serving::{test_inputs_for, WEIGHT_SEED};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let engine = Arc::new(Engine::load(std::path::Path::new("artifacts"))?);
+    let manifest = engine.manifest().clone();
+    println!("loaded manifest: {} artifacts", manifest.artifacts.len());
+
+    // Pick the int8 DLRM dense partition at batch 32 — the paper's flagship
+    // quantized workload.
+    let name = "dlrm_dense_b32_int8";
+    let art = manifest.get(name)?.clone();
+    println!("artifact {name}: {} inputs, batch {}", art.inputs.len(), art.batch);
+
+    // Generate the deterministic weights and upload them once
+    // (device-resident tensors, §VI-C).
+    let mut gen = WeightGen::new(WEIGHT_SEED);
+    let weights = gen.weights_for(&art);
+    let prepared = engine.prepare(name, &weights)?;
+
+    // One request through the compiled network.
+    let inputs = test_inputs_for(&manifest, &art, 42)?;
+    let t0 = std::time::Instant::now();
+    let outputs = prepared.run(&engine, &inputs)?;
+    let dt = t0.elapsed();
+    let scores = outputs[0].as_f32().expect("scores f32");
+    println!("ran 1 inference in {:.2} ms; first scores: {:?}",
+             dt.as_secs_f64() * 1e3, &scores[..4.min(scores.len())]);
+
+    // Check against the independent Rust reference (§V-C numerics story).
+    let mut gen2 = WeightGen::new(WEIGHT_SEED);
+    let reference = validate::reference_outputs(&manifest, &art, &mut gen2, &inputs)?;
+    let v = validate::compare(name, reference[0].as_f32().unwrap(), scores);
+    println!("reference check: max abs err {:.2e}, cosine {:.6} -> {}",
+             v.max_abs_err, v.cosine, if v.passed { "PASS" } else { "FAIL" });
+    assert!(v.passed);
+    Ok(())
+}

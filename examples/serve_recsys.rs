@@ -1,0 +1,63 @@
+//! End-to-end driver (DESIGN.md §5, "E2E" row): serve the partitioned DLRM
+//! over real PJRT numerics with the Fig. 6 scheme — SLS shards (model
+//! parallel) feeding a dense partition (int8), pipelined across requests —
+//! and report latency/throughput.
+//!
+//!     make artifacts && cargo run --release --example serve_recsys [-- --requests 200]
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use anyhow::Result;
+use fbia::runtime::Engine;
+use fbia::serving::RecsysServer;
+use fbia::util::cli::Args;
+use fbia::util::table::{ms, Table};
+use fbia::workloads::RecsysGen;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let n = args.get_usize("requests", 100);
+    let batch = args.get_usize("batch", 32);
+
+    let engine = Arc::new(Engine::load(std::path::Path::new("artifacts"))?);
+    let m = engine.manifest().clone();
+    let num_tables = m.config_usize("dlrm", "num_tables")?;
+    println!(
+        "DLRM: {} tables x {} rows x {} dim ({} M params), batch {batch}",
+        num_tables,
+        m.config_usize("dlrm", "rows_per_table")?,
+        m.config_usize("dlrm", "embed_dim")?,
+        m.config_usize("dlrm", "params")? / 1_000_000,
+    );
+
+    let mut gen = RecsysGen::new(
+        1,
+        batch,
+        num_tables,
+        m.config_usize("dlrm", "rows_per_table")?,
+        m.config_usize("dlrm", "dense_in")?,
+        m.config_usize("dlrm", "max_lookups")?,
+    );
+    let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
+
+    let mut t = Table::new(&["precision", "requests", "p50", "p95", "p99", "QPS", "items/s"]);
+    for precision in ["fp32", "int8"] {
+        let server = Arc::new(RecsysServer::new(engine.clone(), batch, precision)?);
+        // warmup
+        server.infer(&reqs[0])?;
+        let metrics = server.serve(reqs.clone())?;
+        t.row(&[
+            precision.to_string(),
+            metrics.completed.to_string(),
+            ms(metrics.latency.p50()),
+            ms(metrics.latency.p95()),
+            ms(metrics.latency.p99()),
+            format!("{:.1}", metrics.qps()),
+            format!("{:.0}", metrics.items_per_s()),
+        ]);
+    }
+    println!("\nend-to-end serving (real PJRT numerics, pipelined Fig. 6 scheme):");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,175 @@
+"""AOT driver: lower every artifact variant to HLO *text* + manifest.json.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifact variants follow the paper's static-shape bucket strategy (SVI-A):
+  - DLRM: dense partition at batch {16,32,64} x {fp32,int8}; SLS shards for
+    a 6-card node (4 SLS cards x 2 tables); monolithic reference at b32.
+  - XLM-R: sequence buckets {32,64,128} x batch {1,4}.
+  - CV trunk: batch {1,4}.
+
+Run as: cd python && python -m compile.aot --out-dir ../artifacts
+Python runs ONCE at build time; the rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import dlrm as dlrm_mod
+from .models import xlmr as xlmr_mod
+from .models import cv as cv_mod
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "i8": jnp.int8, "f16": jnp.float16}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, specs):
+    """jit-lower fn over ShapeDtypeStructs from specs; return HLO text and
+    output shape/dtype descriptions."""
+    sds = [jax.ShapeDtypeStruct(shape, DTYPES[dt]) for (_, shape, dt, _) in specs]
+    lowered = jax.jit(fn).lower(*sds)
+    out_tree = jax.eval_shape(fn, *sds)
+    outs = [{"shape": list(o.shape), "dtype": _dt_name(o.dtype)} for o in out_tree]
+    return to_hlo_text(lowered), outs
+
+
+def _dt_name(dtype) -> str:
+    return {jnp.dtype("float32"): "f32", jnp.dtype("int32"): "i32",
+            jnp.dtype("int8"): "i8", jnp.dtype("float16"): "f16"}[jnp.dtype(dtype)]
+
+
+def build_all(out_dir: str, fast: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+
+    dlrm_cfg = dlrm_mod.DlrmConfig()
+    xlmr_cfg = xlmr_mod.XlmrConfig()
+    cv_cfg = cv_mod.CvConfig()
+
+    jobs = []
+
+    # --- DLRM dense partition: batch x precision ---
+    dlrm_batches = [16, 32, 64] if not fast else [32]
+    for b in dlrm_batches:
+        for quant in (False, True):
+            name = f"dlrm_dense_b{b}_{'int8' if quant else 'fp32'}"
+            specs = dlrm_mod.dense_specs(dlrm_cfg, b, quant)
+            fn = dlrm_mod.make_dense_fn(dlrm_cfg, b, quant)
+            jobs.append((name, fn, specs,
+                         {"model": "dlrm", "role": "dense", "batch": b,
+                          "precision": "int8" if quant else "fp32"}))
+
+    # --- DLRM SLS shards: 4 SLS cards x 2 tables each (Fig. 6 scheme) ---
+    sls_cards = 4
+    per_card = dlrm_cfg.num_tables // sls_cards
+    for b in dlrm_batches:
+        for c in range(sls_cards):
+            tables = list(range(c * per_card, (c + 1) * per_card))
+            name = f"dlrm_sls_shard{c}_b{b}"
+            specs = dlrm_mod.sls_shard_specs(dlrm_cfg, tables, b)
+            fn = dlrm_mod.make_sls_shard_fn(dlrm_cfg, tables, b)
+            jobs.append((name, fn, specs,
+                         {"model": "dlrm", "role": "sls", "batch": b,
+                          "shard": c, "tables": tables}))
+
+    # --- XLM-R buckets ---
+    seqs = [32, 64, 128] if not fast else [32]
+    nlp_batches = [1, 4] if not fast else [1]
+    for s in seqs:
+        for b in nlp_batches:
+            name = f"xlmr_s{s}_b{b}"
+            specs = xlmr_mod.model_specs(xlmr_cfg, b, s)
+            fn = xlmr_mod.make_model_fn(xlmr_cfg, b, s)
+            jobs.append((name, fn, specs,
+                         {"model": "xlmr", "role": "full", "batch": b, "seq": s}))
+
+    # --- CV trunk ---
+    cv_batches = [1, 4] if not fast else [1]
+    for b in cv_batches:
+        name = f"cv_trunk_b{b}"
+        specs = cv_mod.model_specs(cv_cfg, b)
+        fn = cv_mod.make_model_fn(cv_cfg, b)
+        jobs.append((name, fn, specs,
+                     {"model": "cv", "role": "full", "batch": b}))
+
+    for name, fn, specs, meta in jobs:
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        print(f"[aot] lowering {name} ...", flush=True)
+        hlo, outs = lower_artifact(fn, specs)
+        with open(path, "w") as f:
+            f.write(hlo)
+        entry = {
+            "name": name,
+            "file": fname,
+            "sha256": hashlib.sha256(hlo.encode()).hexdigest()[:16],
+            "inputs": [
+                {"name": n, "shape": list(shape), "dtype": dt, "kind": kind}
+                for (n, shape, dt, kind) in specs
+            ],
+            "outputs": outs,
+        }
+        entry.update(meta)
+        manifest["artifacts"].append(entry)
+        print(f"[aot]   wrote {fname} ({len(hlo)} chars)", flush=True)
+
+    # model-level metadata the rust side uses for weight generation
+    manifest["configs"] = {
+        "dlrm": {
+            "num_tables": dlrm_cfg.num_tables,
+            "rows_per_table": dlrm_cfg.rows_per_table,
+            "embed_dim": dlrm_cfg.embed_dim,
+            "dense_in": dlrm_cfg.dense_in,
+            "bottom_mlp": list(dlrm_cfg.bottom_mlp),
+            "top_mlp": list(dlrm_cfg.top_mlp),
+            "max_lookups": dlrm_cfg.max_lookups,
+            "params": dlrm_cfg.param_count(),
+        },
+        "xlmr": {
+            "layers": xlmr_cfg.layers, "d_model": xlmr_cfg.d_model,
+            "heads": xlmr_cfg.heads, "ffn": xlmr_cfg.ffn,
+            "vocab": xlmr_cfg.vocab, "max_pos": xlmr_cfg.max_pos,
+            "params": xlmr_cfg.param_count(),
+        },
+        "cv": {
+            "image": cv_cfg.image, "classes": cv_cfg.classes,
+            "stem_ch": cv_cfg.stem_ch, "groups": cv_cfg.groups,
+            "stages": [list(s) for s in cv_cfg.stages],
+            "params": cv_cfg.param_count(),
+        },
+    }
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts -> {mpath}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="single variant per family (CI smoke)")
+    args = ap.parse_args()
+    build_all(args.out_dir, fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

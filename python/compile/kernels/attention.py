@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: tiled scaled-dot-product attention (XLM-R hot loop).
+
+Hardware adaptation (DESIGN.md S3): the paper runs 72.5% of XLM-R time in
+MatMul on the Matrix Engine (Table II). On a TPU-style target the attention
+inner loop tiles queries into VMEM-resident blocks; for the short sequences
+the paper serves (20-70 tokens, padded buckets <= 128) whole K/V for one head
+fit in VMEM, so the kernel grids over (head, query-block) and keeps the
+softmax row-local -- no online-softmax pass is needed at these lengths,
+which mirrors the paper's choice of plain padded GEMMs over fancier
+variable-length schemes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_Q = 32
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (head, q-block) step.
+
+    q_ref: [1, bq, d]; k_ref/v_ref: [1, s, d]; o_ref: [1, bq, d]
+    """
+    q = q_ref[0]                       # [bq, d]
+    k = k_ref[0]                       # [s, d]
+    v = v_ref[0]                       # [s, d]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale       # [bq, s] (MXU)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # [bq, d] (MXU)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              block_q: int = DEFAULT_BLOCK_Q) -> jax.Array:
+    """softmax(QK^T/sqrt(d))V over [heads, seq, head_dim] inputs."""
+    h, s, d = q.shape
+    bq = min(block_q, s)
+    if s % bq != 0:
+        bq = s  # degenerate: single block (short sequences)
+    grid = (h, s // bq)
+    scale = 1.0 / float(d) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((1, s, d), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda hh, qq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def attention_vmem_bytes(block_q: int, seq: int, head_dim: int) -> int:
+    """Static per-step VMEM footprint: Q tile + full K + V + scores + out."""
+    return 4 * (block_q * head_dim + 2 * seq * head_dim
+                + block_q * seq + block_q * head_dim)

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: row-wise int8 quantized fully-connected layer.
+
+Hardware adaptation (DESIGN.md S3): the paper's Matrix Engine computes
+int8 x int8 -> int32 GEMMs. The TPU analogue is the MXU with an int8 matmul
+contraction accumulated in int32, tiled (M, N) with the full K dimension
+resident per tile (the FC weights of interest are tens of MB and row-major;
+K-resident tiles make the epilogue a pure per-tile op). The float epilogue
+(zero-point correction, per-output-channel scale, bias) runs on the vector
+unit, fused -- mirroring the paper's Dequantize fusion remarks (SV-C).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_M = 16
+DEFAULT_BLOCK_N = 64
+
+
+def _quant_fc_kernel(xq_ref, rowsum_ref, wq_ref, scale_ref, zp_ref, bias_ref,
+                     o_ref, *, xs_inv: None):
+    """One (m, n) tile: int32 GEMM + fused dequant epilogue.
+
+    xq_ref:     [bm, k] i8 quantized activations
+    rowsum_ref: [bm] f32 per-row activation sums (zero-point correction)
+    wq_ref:     [bn, k] i8 row-wise quantized weights
+    scale_ref:  [bn] f32, zp_ref: [bn] f32, bias_ref: [bn] f32
+    o_ref:      [bm, bn] f32  (scale includes the activation scale already)
+    """
+    xq = xq_ref[...].astype(jnp.int32)
+    wq = wq_ref[...].astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)              # [bm, bn] int32 (MXU)
+    acc_f = acc.astype(jnp.float32)
+    acc_f = acc_f + rowsum_ref[...][:, None] * zp_ref[...][None, :]
+    o_ref[...] = acc_f * scale_ref[...][None, :] + bias_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def quant_fc(x: jax.Array, wq: jax.Array, scale: jax.Array, zp: jax.Array,
+             bias: jax.Array, block_m: int = DEFAULT_BLOCK_M,
+             block_n: int = DEFAULT_BLOCK_N) -> jax.Array:
+    """y ~= x @ dequant(wq)^T + bias with integer GEMM.
+
+    x: [m, k] f32; wq: [n, k] i8; scale/zp/bias: [n] f32.
+    Dynamic symmetric per-tensor activation quantization happens outside the
+    grid (it needs a global absmax), then the integer GEMM is tiled.
+    """
+    m, k = x.shape
+    n, k2 = wq.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+
+    absmax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    xs = absmax / 127.0
+    xq = jnp.clip(jnp.round(x / xs), -127, 127).astype(jnp.int8)
+    rowsum = jnp.sum(xq.astype(jnp.int32), axis=1).astype(jnp.float32)
+
+    # fold the activation scale into the per-channel weight scale
+    eff_scale = scale * xs
+
+    pad_m = (-m) % block_m
+    pad_n = (-n) % block_n
+    if pad_m or pad_n:
+        xq_p = jnp.pad(xq, ((0, pad_m), (0, 0)))
+        rs_p = jnp.pad(rowsum, (0, pad_m))
+        wq_p = jnp.pad(wq, ((0, pad_n), (0, 0)))
+        sc_p = jnp.pad(eff_scale, (0, pad_n))
+        zp_p = jnp.pad(zp, (0, pad_n))
+        b_p = jnp.pad(bias, (0, pad_n))
+    else:
+        xq_p, rs_p, wq_p, sc_p, zp_p, b_p = xq, rowsum, wq, eff_scale, zp, bias
+
+    mp, np_ = m + pad_m, n + pad_n
+    grid = (mp // block_m, np_ // block_n)
+    out = pl.pallas_call(
+        functools.partial(_quant_fc_kernel, xs_inv=None),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xq_p, rs_p, wq_p, sc_p, zp_p, b_p)
+    return out[:m, :n]
+
+
+def quant_fc_vmem_bytes(block_m: int, block_n: int, k: int) -> int:
+    """Static per-tile VMEM footprint (DESIGN.md S8): activation tile +
+    weight tile + int32 accumulator + epilogue vectors."""
+    return (block_m * k          # xq tile (i8)
+            + block_n * k        # wq tile (i8)
+            + block_m * block_n * 4   # acc (i32)
+            + block_m * block_n * 4   # out (f32)
+            + block_m * 4 + 3 * block_n * 4)
+
+
+def quant_fc_mxu_utilization(block_m: int, block_n: int, k: int,
+                             mxu_dim: int = 128) -> float:
+    """Fraction of MXU lanes busy for one tile: the systolic array processes
+    mxu_dim x mxu_dim tiles; partial tiles waste lanes."""
+    eff_m = block_m / (((block_m + mxu_dim - 1) // mxu_dim) * mxu_dim)
+    eff_n = block_n / (((block_n + mxu_dim - 1) // mxu_dim) * mxu_dim)
+    eff_k = min(k / mxu_dim, 1.0) if k < mxu_dim else 1.0
+    return eff_m * eff_n * eff_k

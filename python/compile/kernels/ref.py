@@ -1,0 +1,141 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the "numeric reference implementations" of the paper's SV-C: every
+kernel that runs on the accelerator (here: lowered through Pallas) has an
+independent, easily-auditable implementation that pytest compares against.
+The Rust side (`fbia::numerics`) re-implements the same math a third time so
+release-over-release validation can run with no Python at all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# SparseLengthsSum (EmbeddingBag) - SII-A
+# ---------------------------------------------------------------------------
+
+def sls(table: jax.Array, indices: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Sum-pool `lengths[b]` rows of `table` per batch element.
+
+    table:   [rows, dim] f32
+    indices: [batch, max_len] i32 -- only the first lengths[b] entries of row
+             b are valid; the rest may be arbitrary (they are masked, matching
+             the paper's "partial tensor" semantics where the tail of the
+             statically-shaped index tensor is unused).
+    lengths: [batch] i32
+    returns: [batch, dim] f32
+    """
+    batch, max_len = indices.shape
+    gathered = table[indices]                                   # [B, L, D]
+    mask = (jnp.arange(max_len)[None, :] < lengths[:, None])    # [B, L]
+    return jnp.sum(gathered * mask[:, :, None].astype(table.dtype), axis=1)
+
+
+def sls_weighted(table: jax.Array, indices: jax.Array, lengths: jax.Array,
+                 weights: jax.Array) -> jax.Array:
+    """SparseLengthsWeightedSum: per-lookup scalar weights."""
+    batch, max_len = indices.shape
+    gathered = table[indices]                                   # [B, L, D]
+    mask = (jnp.arange(max_len)[None, :] < lengths[:, None])
+    w = weights * mask.astype(table.dtype)
+    return jnp.sum(gathered * w[:, :, None], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Row-wise int8 quantization + quantized FC - SV-B
+# ---------------------------------------------------------------------------
+
+def quantize_rowwise_int8(w: jax.Array):
+    """Asymmetric per-row (output-channel) int8 quantization of [out, in]
+    weights. Returns (q int8 [out,in], scale f32 [out], zp f32 [out]) where a
+    stored value v reconstructs as (v - zp) * scale.
+
+    Matches the Caffe2/FBGEMM row-wise scheme the paper deploys.
+    """
+    w = w.astype(jnp.float32)
+    wmin = jnp.minimum(jnp.min(w, axis=1), 0.0)
+    wmax = jnp.maximum(jnp.max(w, axis=1), 0.0)
+    scale = jnp.maximum((wmax - wmin) / 255.0, 1e-8)
+    zp = jnp.round(wmin / scale) + 128.0          # in [-? .. 128], f32
+    q = jnp.clip(jnp.round(w / scale[:, None] - zp[:, None]), -128, 127)
+    return q.astype(jnp.int8), scale, zp
+
+
+def dequantize_rowwise_int8(q: jax.Array, scale: jax.Array, zp: jax.Array) -> jax.Array:
+    return (q.astype(jnp.float32) + zp[:, None]) * scale[:, None]
+
+
+def quant_fc(x: jax.Array, wq: jax.Array, scale: jax.Array, zp: jax.Array,
+             bias: jax.Array) -> jax.Array:
+    """Quantized FC: y ~= x @ dequant(wq)^T + bias, computed as an integer
+    matmul with a float epilogue (the accelerator Matrix Engine formulation).
+
+    x: [m, k] f32. Activations are quantized dynamically (symmetric,
+       per-tensor) as in the paper's SVIII "dynamic quantization" remark.
+    wq: [n, k] int8 row-wise quantized weights; scale/zp: [n] f32.
+    """
+    absmax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    xs = absmax / 127.0
+    xq = jnp.clip(jnp.round(x / xs), -127, 127).astype(jnp.int8)
+    # integer GEMM accumulated in int32
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32).T)
+    # epilogue: add zero-point contribution, apply scales, add bias
+    row_sums = jnp.sum(xq.astype(jnp.int32), axis=1).astype(jnp.float32)  # [m]
+    acc_f = acc.astype(jnp.float32) + row_sums[:, None] * zp[None, :]
+    return acc_f * (xs * scale)[None, :] + bias[None, :]
+
+
+def fc(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Plain fp32 FC used as the accuracy baseline: y = x @ w^T + b."""
+    return jnp.matmul(x, w.T) + bias[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Attention - SII-C (XLM-R transformer hot loop)
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled dot-product attention over [heads, seq, head_dim] arrays."""
+    d = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(d))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Misc ops used by the L2 models (also mirrored in rust `fbia::numerics`)
+# ---------------------------------------------------------------------------
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    # tanh approximation, the deployment-common form
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x ** 3)))
+
+
+def swish(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def dot_interaction(dense: jax.Array, sparse: jax.Array) -> jax.Array:
+    """DLRM dot-product feature interaction (SII-A, [52]).
+
+    dense:  [batch, d]
+    sparse: [batch, num_tables, d]
+    returns [batch, d + num_pairs]: dense passthrough + upper-triangular
+    pairwise dots among {dense} U {sparse features}.
+    """
+    feats = jnp.concatenate([dense[:, None, :], sparse], axis=1)  # [B, F, D]
+    f = feats.shape[1]
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats)                  # [B, F, F]
+    iu, ju = jnp.triu_indices(f, k=1)
+    pairs = z[:, iu, ju]                                          # [B, F*(F-1)/2]
+    return jnp.concatenate([dense, pairs], axis=1)

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: SparseLengthsSum (EmbeddingBag sum-pooling).
+
+Hardware adaptation (DESIGN.md S3): on the paper's card SLS runs on the
+Vector Cores streaming embedding rows from LPDDR. On a TPU-style target the
+natural mapping is: grid over batch blocks, the (small) index/length tensors
+staged whole in VMEM, table rows gathered from HBM a block at a time and
+accumulated into a VMEM output tile. The embedding dimension is the lane
+dimension so every gather-accumulate is a full-width vector op.
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls; the
+kernel still exercises the exact block decomposition.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BATCH_BLOCK = 8
+
+
+def _sls_kernel(indices_ref, lengths_ref, table_ref, o_ref, *, max_len: int):
+    """One grid step: pool a [block_b, max_len] slice of lookups.
+
+    indices_ref: [block_b, max_len] i32 (VMEM)
+    lengths_ref: [block_b] i32 (VMEM)
+    table_ref:   [rows, dim] f32 (whole table; rows gathered on demand)
+    o_ref:       [block_b, dim] f32
+    """
+    idx = indices_ref[...]                                   # [Bb, L]
+    lens = lengths_ref[...]                                  # [Bb]
+    # Gather all candidate rows, then mask-accumulate. The gather is the
+    # VMEM-staged equivalent of the Vector Core's row-stream; masking encodes
+    # the "partial tensor" contract (tail indices are garbage but unused).
+    rows = table_ref[idx]                                    # [Bb, L, D]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1)
+            < lens[:, None]).astype(rows.dtype)              # [Bb, L]
+    o_ref[...] = jnp.sum(rows * mask[:, :, None], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def sls(table: jax.Array, indices: jax.Array, lengths: jax.Array,
+        block_b: int = DEFAULT_BATCH_BLOCK) -> jax.Array:
+    """Pallas SparseLengthsSum.
+
+    table:   [rows, dim] f32
+    indices: [batch, max_len] i32
+    lengths: [batch] i32
+    returns: [batch, dim] f32
+    """
+    batch, max_len = indices.shape
+    rows, dim = table.shape
+    if batch % block_b != 0:
+        # pad batch to a block multiple; extra rows pool zero lookups
+        pad = block_b - batch % block_b
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        lengths = jnp.pad(lengths, (0, pad))
+        out = sls(table, indices, lengths, block_b=block_b)
+        return out[:batch]
+
+    grid = (batch // block_b,)
+    kernel = functools.partial(_sls_kernel, max_len=max_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, max_len), lambda b: (b, 0)),
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((rows, dim), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, dim), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), table.dtype),
+        interpret=True,
+    )(indices, lengths, table)
+
+
+def sls_vmem_bytes(block_b: int, max_len: int, rows: int, dim: int,
+                   dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (DESIGN.md S8).
+
+    The table itself streams from HBM; resident blocks are the index slice,
+    the gathered row block, and the output tile.
+    """
+    idx = block_b * max_len * 4
+    lens = block_b * 4
+    gathered = block_b * max_len * dim * dtype_bytes
+    out = block_b * dim * dtype_bytes
+    return idx + lens + gathered + out

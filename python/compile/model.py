@@ -1,0 +1,4 @@
+"""Facade: re-export the L2 model families (see models/)."""
+from .models.dlrm import DlrmConfig, make_dense_fn, make_sls_shard_fn, make_monolithic_fn  # noqa: F401
+from .models.xlmr import XlmrConfig, make_model_fn as make_xlmr_fn  # noqa: F401
+from .models.cv import CvConfig, make_model_fn as make_cv_fn  # noqa: F401

@@ -1,0 +1,109 @@
+"""L2 model: CV classification trunk (ResNeXt/RegNet-style), SII-B.
+
+A small bottleneck CNN that preserves the paper's CV op mix: 1x1 pointwise
+convs + 3x3 *grouped* convs (the channelwise/groupwise pattern Table II
+shows dominating ResNeXt/RegNetY/FBNetV3), residual adds, global average
+pooling, and a final FC. Convolutions use lax.conv_general_dilated at L2 --
+XLA's fusion is the analogue of the vendor compiler's Conv_Add fusion.
+
+Artifacts are emitted at batch {1, 4}, which feeds the paper's batching
+ablation (SVI-B: batch 1 -> 4 gives 1.6-1.8x on the concept trunk).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref
+
+
+@dataclass(frozen=True)
+class CvConfig:
+    image: int = 64
+    stem_ch: int = 32
+    stages: tuple = ((32, 2), (64, 2), (128, 2))   # (channels, blocks)
+    groups: int = 8
+    classes: int = 100
+
+    def param_count(self) -> int:
+        n = 3 * 3 * 3 * self.stem_ch + self.stem_ch
+        cin = self.stem_ch
+        for ch, blocks in self.stages:
+            for b in range(blocks):
+                n += cin * ch + ch                       # 1x1 in
+                n += 3 * 3 * (ch // self.groups) * ch + ch  # 3x3 grouped
+                n += ch * ch + ch                        # 1x1 out
+                if cin != ch:
+                    n += cin * ch + ch                   # projection
+                cin = ch
+        n += cin * self.classes + self.classes
+        return n
+
+
+def _conv_specs(name, kh, kw, cin, cout):
+    return [(f"{name}_w", (kh, kw, cin, cout), "f32", "weight"),
+            (f"{name}_b", (cout,), "f32", "weight")]
+
+
+def model_specs(cfg: CvConfig, batch: int) -> list:
+    specs = _conv_specs("stem", 3, 3, 3, cfg.stem_ch)
+    cin = cfg.stem_ch
+    for si, (ch, blocks) in enumerate(cfg.stages):
+        for bi in range(blocks):
+            p = f"s{si}b{bi}"
+            specs += _conv_specs(p + "_pw1", 1, 1, cin, ch)
+            specs += _conv_specs(p + "_gw", 3, 3, ch // cfg.groups, ch)
+            specs += _conv_specs(p + "_pw2", 1, 1, ch, ch)
+            if cin != ch:
+                specs += _conv_specs(p + "_proj", 1, 1, cin, ch)
+            cin = ch
+    specs += [("head_w", (cfg.classes, cin), "f32", "weight"),
+              ("head_b", (cfg.classes,), "f32", "weight")]
+    specs.append(("image", (batch, cfg.image, cfg.image, 3), "f32", "input"))
+    return specs
+
+
+def _conv(x, w, b, stride=1, groups=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    return y + b[None, None, None, :]
+
+
+def make_model_fn(cfg: CvConfig, batch: int):
+    """Returns fn(*args) -> (logits [batch, classes], embedding [batch, C]).
+
+    The embedding output mirrors the paper's "backbone models that only
+    produce embeddings" whose quality gate is cosine similarity (SV-A).
+    """
+    names = [s[0] for s in model_specs(cfg, batch)]
+
+    def fn(*args):
+        p = dict(zip(names, args))
+        x = p["image"]
+        x = jax.nn.relu(_conv(x, p["stem_w"], p["stem_b"], stride=2))
+        cin = cfg.stem_ch
+        for si, (ch, blocks) in enumerate(cfg.stages):
+            for bi in range(blocks):
+                pre = f"s{si}b{bi}"
+                stride = 2 if (bi == 0 and si > 0) else 1
+                y = jax.nn.relu(_conv(x, p[pre + "_pw1_w"], p[pre + "_pw1_b"]))
+                y = jax.nn.relu(_conv(y, p[pre + "_gw_w"], p[pre + "_gw_b"],
+                                      stride=stride, groups=cfg.groups))
+                y = _conv(y, p[pre + "_pw2_w"], p[pre + "_pw2_b"])
+                if cin != ch or stride != 1:
+                    sc = _conv(x, p[pre + "_proj_w"], p[pre + "_proj_b"],
+                               stride=stride) if pre + "_proj_w" in p else x
+                    x = jax.nn.relu(y + sc)
+                else:
+                    x = jax.nn.relu(y + x)
+                cin = ch
+        emb = jnp.mean(x, axis=(1, 2))                    # global avg pool
+        logits = ref.fc(emb, p["head_w"], p["head_b"])
+        return (logits, emb)
+
+    return fn

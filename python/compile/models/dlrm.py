@@ -1,0 +1,205 @@
+"""L2 model: DLRM (Deep Learning Recommendation Model), SII-A / Fig. 2.
+
+The model is split exactly along the paper's multi-card partitioning scheme
+(SVI-B, Fig. 6): the *SLS partition* (embedding-table shards, model
+parallel) and the *dense partition* (bottom MLP + dot interaction + top MLP,
+data parallel) are lowered as separate HLO artifacts. The Rust coordinator
+pipelines them across requests.
+
+Weights are HLO *parameters* (not baked constants): the coordinator
+generates them deterministically, uploads them once per card as
+device-resident buffers, and feeds only the request tensors per inference --
+matching the paper's device-resident-tensor optimization (SVI-C).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref
+from ..kernels.sls import sls as pallas_sls
+from ..kernels.quant_fc import quant_fc as pallas_quant_fc
+
+
+@dataclass(frozen=True)
+class DlrmConfig:
+    """Mini-DLRM sized to keep artifacts fast to build while preserving the
+    paper's op mix (SLS + FC dominated, Table II column 1)."""
+    num_tables: int = 8
+    rows_per_table: int = 25_000
+    embed_dim: int = 64
+    dense_in: int = 256
+    bottom_mlp: tuple = (256, 128, 64)   # last must equal embed_dim
+    top_mlp: tuple = (512, 256, 1)
+    max_lookups: int = 32                # static upper bound (partial tensors)
+
+    @property
+    def interaction_dim(self) -> int:
+        f = self.num_tables + 1
+        return self.embed_dim + f * (f - 1) // 2
+
+    def param_count(self) -> int:
+        n = self.num_tables * self.rows_per_table * self.embed_dim
+        d = self.dense_in
+        for h in self.bottom_mlp:
+            n += d * h + h
+            d = h
+        d = self.interaction_dim
+        for h in self.top_mlp:
+            n += d * h + h
+            d = h
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs — shared contract with the Rust weight generator
+# ---------------------------------------------------------------------------
+
+def mlp_param_specs(prefix: str, d_in: int, widths: tuple) -> list:
+    specs = []
+    d = d_in
+    for i, h in enumerate(widths):
+        specs.append((f"{prefix}_w{i}", (h, d), "f32", "weight"))
+        specs.append((f"{prefix}_b{i}", (h,), "f32", "weight"))
+        d = h
+    return specs
+
+
+def mlp_param_specs_int8(prefix: str, d_in: int, widths: tuple) -> list:
+    specs = []
+    d = d_in
+    for i, h in enumerate(widths):
+        specs.append((f"{prefix}_wq{i}", (h, d), "i8", "weight_q"))
+        specs.append((f"{prefix}_scale{i}", (h,), "f32", "weight"))
+        specs.append((f"{prefix}_zp{i}", (h,), "f32", "weight"))
+        specs.append((f"{prefix}_b{i}", (h,), "f32", "weight"))
+        d = h
+    return specs
+
+
+def _mlp_fp32(x, params, prefix, widths, final_act):
+    for i in range(len(widths)):
+        w = params[f"{prefix}_w{i}"]
+        b = params[f"{prefix}_b{i}"]
+        x = ref.fc(x, w, b)
+        if i < len(widths) - 1 or final_act == "relu":
+            x = jax.nn.relu(x)
+    return x
+
+
+def _mlp_int8(x, params, prefix, widths, final_act):
+    for i in range(len(widths)):
+        x = pallas_quant_fc(
+            x,
+            params[f"{prefix}_wq{i}"],
+            params[f"{prefix}_scale{i}"],
+            params[f"{prefix}_zp{i}"],
+            params[f"{prefix}_b{i}"],
+        )
+        if i < len(widths) - 1 or final_act == "relu":
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# SLS partition (model-parallel shard)
+# ---------------------------------------------------------------------------
+
+def sls_shard_specs(cfg: DlrmConfig, tables: list, batch: int) -> list:
+    """Input specs for one SLS shard artifact: tables (weights) then the
+    per-table request tensors (indices + lengths)."""
+    specs = []
+    for t in tables:
+        specs.append((f"table{t}", (cfg.rows_per_table, cfg.embed_dim), "f32", "weight"))
+    for t in tables:
+        specs.append((f"idx{t}", (batch, cfg.max_lookups), "i32", "input"))
+        specs.append((f"len{t}", (batch,), "i32", "input"))
+    return specs
+
+
+def make_sls_shard_fn(cfg: DlrmConfig, tables: list, batch: int):
+    """Returns fn(*args) -> ([batch, len(tables), dim],) pooling each table.
+
+    Uses the L1 Pallas SLS kernel so the kernel lowers into this artifact.
+    """
+    n = len(tables)
+
+    def fn(*args):
+        tbls = args[:n]
+        pooled = []
+        for i in range(n):
+            idx = args[n + 2 * i]
+            lens = args[n + 2 * i + 1]
+            pooled.append(pallas_sls(tbls[i], idx, lens))
+        return (jnp.stack(pooled, axis=1),)   # [B, n, D]
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Dense partition (data-parallel replica)
+# ---------------------------------------------------------------------------
+
+def dense_specs(cfg: DlrmConfig, batch: int, quantized: bool) -> list:
+    mk = mlp_param_specs_int8 if quantized else mlp_param_specs
+    specs = []
+    specs += mk("bot", cfg.dense_in, cfg.bottom_mlp)
+    specs += mk("top", cfg.interaction_dim, cfg.top_mlp)
+    specs.append(("dense", (batch, cfg.dense_in), "f32", "input"))
+    specs.append(("sparse", (batch, cfg.num_tables, cfg.embed_dim), "f32", "input"))
+    return specs
+
+
+def make_dense_fn(cfg: DlrmConfig, batch: int, quantized: bool):
+    """Returns fn(*args) -> ([batch, 1] sigmoid score,).
+
+    args follow dense_specs order: MLP params then dense/sparse inputs.
+    The int8 variant runs both MLPs through the L1 quant_fc Pallas kernel,
+    mirroring the paper's int8 FC deployment with fp32 interaction.
+    """
+    names = [s[0] for s in dense_specs(cfg, batch, quantized)]
+    mlp = _mlp_int8 if quantized else _mlp_fp32
+
+    def fn(*args):
+        params = dict(zip(names, args))
+        dense, sparse = params["dense"], params["sparse"]
+        bot = mlp(dense, params, "bot", cfg.bottom_mlp, "relu")
+        inter = ref.dot_interaction(bot, sparse)
+        # paper SV-B: the *last* FC stays high precision; our int8 MLP keeps
+        # the final layer's epilogue in fp32 which carries the logit.
+        logit = mlp(inter, params, "top", cfg.top_mlp, "none")
+        return (jax.nn.sigmoid(logit),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Monolithic reference (for tests / single-card serving)
+# ---------------------------------------------------------------------------
+
+def make_monolithic_fn(cfg: DlrmConfig, batch: int):
+    """Full DLRM in one graph (reference / single-card path): SLS over all
+    tables + dense partition, fp32."""
+    n = cfg.num_tables
+
+    def fn(*args):
+        # args: tables[n], (idx, len)*n, mlp params..., dense
+        tbls = args[:n]
+        pooled = []
+        for i in range(n):
+            pooled.append(ref.sls(tbls[i], args[n + 2 * i], args[n + 2 * i + 1]))
+        sparse = jnp.stack(pooled, axis=1)
+        rest = args[3 * n:]
+        names = [s[0] for s in mlp_param_specs("bot", cfg.dense_in, cfg.bottom_mlp)]
+        names += [s[0] for s in mlp_param_specs("top", cfg.interaction_dim, cfg.top_mlp)]
+        params = dict(zip(names, rest[:-1]))
+        dense = rest[-1]
+        bot = _mlp_fp32(dense, params, "bot", cfg.bottom_mlp, "relu")
+        inter = ref.dot_interaction(bot, sparse)
+        logit = _mlp_fp32(inter, params, "top", cfg.top_mlp, "none")
+        return (jax.nn.sigmoid(logit),)
+
+    return fn

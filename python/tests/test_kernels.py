@@ -1,0 +1,223 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes/dtypes per the session contract; assert_allclose
+against ref. These are the python half of the paper's SV-C numerics
+validation story (the rust half lives in fbia::numerics).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sls import sls as pallas_sls, sls_vmem_bytes
+from compile.kernels.quant_fc import (
+    quant_fc as pallas_quant_fc, quant_fc_vmem_bytes, quant_fc_mxu_utilization)
+from compile.kernels.attention import attention as pallas_attention, attention_vmem_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# SLS
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 33),
+    max_len=st.integers(1, 24),
+    rows=st.integers(4, 300),
+    dim=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sls_matches_ref(batch, max_len, rows, dim, seed):
+    r = _rng(seed)
+    table = jnp.asarray(r.normal(size=(rows, dim)).astype(np.float32))
+    idx = jnp.asarray(r.integers(0, rows, size=(batch, max_len)).astype(np.int32))
+    lens = jnp.asarray(r.integers(0, max_len + 1, size=(batch,)).astype(np.int32))
+    got = pallas_sls(table, idx, lens)
+    want = ref.sls(table, idx, lens)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sls_zero_lengths_give_zero():
+    table = jnp.ones((10, 4), jnp.float32)
+    idx = jnp.zeros((3, 5), jnp.int32)
+    lens = jnp.zeros((3,), jnp.int32)
+    assert np.all(np.asarray(pallas_sls(table, idx, lens)) == 0.0)
+
+
+def test_sls_masked_tail_ignored():
+    """Garbage in the padded index tail must not change the result (the
+    partial-tensor contract of SVI-C)."""
+    r = _rng(7)
+    table = jnp.asarray(r.normal(size=(50, 8)).astype(np.float32))
+    idx = jnp.asarray(r.integers(0, 50, size=(4, 6)).astype(np.int32))
+    lens = jnp.asarray(np.array([2, 0, 6, 3], np.int32))
+    base = np.asarray(pallas_sls(table, idx, lens))
+    garbage = idx.at[:, 4:].set(49)  # clobber tail beyond all lens<=4 rows
+    lens2 = jnp.asarray(np.array([2, 0, 4, 3], np.int32))
+    got1 = np.asarray(pallas_sls(table, idx, lens2))
+    got2 = np.asarray(pallas_sls(garbage, lens=lens2, indices=garbage) if False else
+                      pallas_sls(table, garbage, lens2))
+    np.testing.assert_allclose(got1, got2, rtol=1e-6)
+    del base
+
+
+def test_sls_weighted_ref_consistency():
+    """Weighted SLS with unit weights equals plain SLS."""
+    r = _rng(3)
+    table = jnp.asarray(r.normal(size=(20, 6)).astype(np.float32))
+    idx = jnp.asarray(r.integers(0, 20, size=(5, 4)).astype(np.int32))
+    lens = jnp.asarray(r.integers(0, 5, size=(5,)).astype(np.int32))
+    w = jnp.ones((5, 4), jnp.float32)
+    np.testing.assert_allclose(ref.sls_weighted(table, idx, lens, w),
+                               ref.sls(table, idx, lens), rtol=1e-6)
+
+
+def test_sls_vmem_estimate_positive_monotone():
+    a = sls_vmem_bytes(8, 32, 1000, 64)
+    b = sls_vmem_bytes(16, 32, 1000, 64)
+    assert 0 < a < b
+
+
+# ---------------------------------------------------------------------------
+# quant FC
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 96),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_fc_matches_ref(m, k, n, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(n, k)).astype(np.float32))
+    b = jnp.asarray(r.normal(size=(n,)).astype(np.float32))
+    wq, sc, zp = ref.quantize_rowwise_int8(w)
+    got = pallas_quant_fc(x, wq, sc, zp, b)
+    want = ref.quant_fc(x, wq, sc, zp, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(8, 64),
+    n=st.integers(8, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_fc_close_to_fp32(m, k, n, seed):
+    """int8 quantization error stays within the coarse bound expected from
+    8-bit row-wise weights (paper: NE impact 0.02-0.05%; here we check the
+    raw op-level error scale)."""
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(n, k)).astype(np.float32))
+    b = jnp.asarray(r.normal(size=(n,)).astype(np.float32))
+    wq, sc, zp = ref.quantize_rowwise_int8(w)
+    got = np.asarray(pallas_quant_fc(x, wq, sc, zp, b))
+    fp = np.asarray(ref.fc(x, w, b))
+    # error grows ~sqrt(k); allow generous constant
+    bound = 0.05 * np.sqrt(k) * np.abs(x).max() + 1e-3
+    assert np.max(np.abs(got - fp)) < bound, (np.max(np.abs(got - fp)), bound)
+
+
+def test_quantize_roundtrip_error_bound():
+    r = _rng(11)
+    w = jnp.asarray(r.normal(size=(37, 53)).astype(np.float32))
+    wq, sc, zp = ref.quantize_rowwise_int8(w)
+    deq = np.asarray(ref.dequantize_rowwise_int8(wq, sc, zp))
+    err = np.abs(deq - np.asarray(w))
+    assert np.max(err / np.asarray(sc)[:, None]) <= 0.75  # within ~half an LSB
+    assert wq.dtype == jnp.int8
+
+
+def test_quant_fc_vmem_and_mxu_estimates():
+    assert quant_fc_vmem_bytes(16, 64, 256) > 0
+    assert 0 < quant_fc_mxu_utilization(16, 64, 256) <= 1.0
+    assert quant_fc_mxu_utilization(128, 128, 128) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(1, 8),
+    s=st.sampled_from([8, 16, 32, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(h, s, d, seed):
+    r = _rng(seed)
+    q = jnp.asarray(r.normal(size=(h, s, d)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(h, s, d)).astype(np.float32))
+    v = jnp.asarray(r.normal(size=(h, s, d)).astype(np.float32))
+    got = pallas_attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_odd_seq_falls_back_to_single_block():
+    r = _rng(5)
+    q = jnp.asarray(r.normal(size=(2, 33, 8)).astype(np.float32))
+    got = pallas_attention(q, q, q)
+    want = ref.attention(q, q, q)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_rows_sum_property():
+    """softmax(scores) rows sum to 1 => attention of constant V returns V."""
+    r = _rng(9)
+    q = jnp.asarray(r.normal(size=(3, 16, 8)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(3, 16, 8)).astype(np.float32))
+    v = jnp.ones((3, 16, 8), jnp.float32) * 2.5
+    got = np.asarray(pallas_attention(q, k, v))
+    np.testing.assert_allclose(got, 2.5 * np.ones_like(got), rtol=1e-5)
+
+
+def test_attention_vmem_estimate():
+    assert attention_vmem_bytes(32, 128, 32) > 0
+
+
+# ---------------------------------------------------------------------------
+# misc reference ops
+# ---------------------------------------------------------------------------
+
+def test_layernorm_zero_mean_unit_var():
+    r = _rng(2)
+    x = jnp.asarray(r.normal(size=(4, 32)).astype(np.float32))
+    g = jnp.ones((32,), jnp.float32)
+    b = jnp.zeros((32,), jnp.float32)
+    y = np.asarray(ref.layernorm(x, g, b))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.var(axis=-1), 1.0, atol=1e-3)
+
+
+def test_gelu_fixed_points():
+    x = jnp.asarray(np.array([0.0, 10.0, -10.0], np.float32))
+    y = np.asarray(ref.gelu(x))
+    np.testing.assert_allclose(y[0], 0.0, atol=1e-7)
+    np.testing.assert_allclose(y[1], 10.0, rtol=1e-4)
+    np.testing.assert_allclose(y[2], 0.0, atol=1e-3)
+
+
+def test_dot_interaction_shape_and_symmetry():
+    r = _rng(4)
+    dense = jnp.asarray(r.normal(size=(3, 8)).astype(np.float32))
+    sparse = jnp.asarray(r.normal(size=(3, 5, 8)).astype(np.float32))
+    out = np.asarray(ref.dot_interaction(dense, sparse))
+    f = 6
+    assert out.shape == (3, 8 + f * (f - 1) // 2)
+    # first d columns are the dense passthrough
+    np.testing.assert_allclose(out[:, :8], np.asarray(dense), rtol=1e-6)

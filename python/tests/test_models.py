@@ -1,0 +1,241 @@
+"""L2 model-level tests: shapes, finiteness, partition-vs-monolith equality,
+quantized-vs-fp accuracy proxies (the paper's offline metrics, SV-A)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.models import dlrm as dlrm_mod
+from compile.models import xlmr as xlmr_mod
+from compile.models import cv as cv_mod
+
+
+SMALL_DLRM = dlrm_mod.DlrmConfig(
+    num_tables=4, rows_per_table=200, embed_dim=16, dense_in=32,
+    bottom_mlp=(32, 16), top_mlp=(32, 1), max_lookups=8)
+SMALL_XLMR = xlmr_mod.XlmrConfig(layers=2, d_model=32, heads=4, ffn=64,
+                                 vocab=100, max_pos=64)
+SMALL_CV = cv_mod.CvConfig(image=16, stem_ch=8, stages=((8, 1), (16, 1)),
+                           groups=4, classes=10)
+
+
+def _make_args(specs, seed=0):
+    r = np.random.default_rng(seed)
+    args = []
+    for (name, shape, dt, kind) in specs:
+        if dt == "f32":
+            args.append(jnp.asarray(r.normal(size=shape).astype(np.float32) * 0.1))
+        elif dt == "i32":
+            if name.startswith("idx"):
+                args.append(jnp.asarray(r.integers(0, 200, size=shape).astype(np.int32)))
+            elif name.startswith("len") or name == "pad_len":
+                hi = shape[0] if name == "pad_len" else 9
+                args.append(jnp.asarray(r.integers(1, 9, size=shape).astype(np.int32)))
+            elif name == "ids":
+                args.append(jnp.asarray(r.integers(0, 100, size=shape).astype(np.int32)))
+            else:
+                args.append(jnp.asarray(r.integers(0, 4, size=shape).astype(np.int32)))
+        elif dt == "i8":
+            args.append(jnp.asarray(r.integers(-127, 128, size=shape).astype(np.int8)))
+        else:
+            raise AssertionError(dt)
+    return args
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+def test_dlrm_dense_fp32_shapes_and_range():
+    cfg, b = SMALL_DLRM, 8
+    specs = dlrm_mod.dense_specs(cfg, b, quantized=False)
+    fn = dlrm_mod.make_dense_fn(cfg, b, quantized=False)
+    (out,) = fn(*_make_args(specs))
+    assert out.shape == (b, 1)
+    o = np.asarray(out)
+    assert np.all(np.isfinite(o)) and np.all(o >= 0) and np.all(o <= 1)
+
+
+def test_dlrm_dense_int8_close_to_fp32():
+    """Quantized dense partition tracks the fp32 one — the op-level proxy for
+    the paper's <=0.05% NE budget."""
+    cfg, b = SMALL_DLRM, 8
+    specs_f = dlrm_mod.dense_specs(cfg, b, quantized=False)
+    fn_f = dlrm_mod.make_dense_fn(cfg, b, quantized=False)
+    args_f = _make_args(specs_f, seed=1)
+    names_f = [s[0] for s in specs_f]
+    p = dict(zip(names_f, args_f))
+
+    # quantize the fp weights into the int8 spec ordering
+    specs_q = dlrm_mod.dense_specs(cfg, b, quantized=True)
+    args_q = []
+    for (name, shape, dt, kind) in specs_q:
+        if name.endswith(tuple(f"wq{i}" for i in range(4))):
+            base = name.replace("wq", "w")
+            pre = name.split("_")[0]
+            i = name[-1]
+            w = p[f"{pre}_w{i}"]
+            wq, sc, zp = ref.quantize_rowwise_int8(w)
+            args_q.append(wq)
+        elif "scale" in name:
+            pre, i = name.split("_scale")
+            wq, sc, zp = ref.quantize_rowwise_int8(p[f"{pre}_w{i}"])
+            args_q.append(sc)
+        elif "zp" in name:
+            pre, i = name.split("_zp")
+            wq, sc, zp = ref.quantize_rowwise_int8(p[f"{pre}_w{i}"])
+            args_q.append(zp)
+        else:
+            args_q.append(p[name])
+    fn_q = dlrm_mod.make_dense_fn(cfg, b, quantized=True)
+    (out_q,) = fn_q(*args_q)
+    (out_f,) = fn_f(*args_f)
+    err = np.max(np.abs(np.asarray(out_q) - np.asarray(out_f)))
+    assert err < 0.05, err   # sigmoid outputs: 5e-2 absolute
+
+
+def test_dlrm_shards_plus_dense_equals_monolith():
+    """Partitioned execution (Fig. 6) must be numerically identical to the
+    unpartitioned net: shard pooling -> concat == monolithic SLS."""
+    cfg, b = SMALL_DLRM, 4
+    r = np.random.default_rng(3)
+    tables = [jnp.asarray(r.normal(size=(cfg.rows_per_table, cfg.embed_dim))
+                          .astype(np.float32)) for _ in range(cfg.num_tables)]
+    idx = [jnp.asarray(r.integers(0, cfg.rows_per_table,
+                                  size=(b, cfg.max_lookups)).astype(np.int32))
+           for _ in range(cfg.num_tables)]
+    lens = [jnp.asarray(r.integers(0, cfg.max_lookups + 1, size=(b,))
+                        .astype(np.int32)) for _ in range(cfg.num_tables)]
+
+    # two shards of two tables each
+    pooled = []
+    for c in range(2):
+        tl = [2 * c, 2 * c + 1]
+        fn = dlrm_mod.make_sls_shard_fn(cfg, tl, b)
+        args = [tables[t] for t in tl]
+        for t in tl:
+            args += [idx[t], lens[t]]
+        (out,) = fn(*args)
+        pooled.append(np.asarray(out))
+    sharded = np.concatenate(pooled, axis=1)         # [b, 4, d]
+
+    mono = np.stack([np.asarray(ref.sls(tables[t], idx[t], lens[t]))
+                     for t in range(cfg.num_tables)], axis=1)
+    np.testing.assert_allclose(sharded, mono, rtol=1e-5, atol=1e-5)
+
+
+def test_dlrm_param_count_formula():
+    cfg = SMALL_DLRM
+    # tables + bottom (32*32+32 + 32*16+16) + top over interaction dim
+    expect = 4 * 200 * 16
+    d = 32
+    for h in (32, 16):
+        expect += d * h + h
+        d = h
+    d = cfg.interaction_dim
+    for h in (32, 1):
+        expect += d * h + h
+        d = h
+    assert cfg.param_count() == expect
+
+
+def test_dlrm_interaction_dim():
+    cfg = SMALL_DLRM  # 4 tables + dense = 5 features
+    assert cfg.interaction_dim == 16 + 5 * 4 // 2
+
+
+# ---------------------------------------------------------------------------
+# XLM-R
+# ---------------------------------------------------------------------------
+
+def test_xlmr_shapes_and_finiteness():
+    cfg, b, s = SMALL_XLMR, 2, 16
+    specs = xlmr_mod.model_specs(cfg, b, s)
+    fn = xlmr_mod.make_model_fn(cfg, b, s)
+    args = _make_args(specs, seed=2)
+    pooled, hidden = fn(*args)
+    assert pooled.shape == (b, cfg.d_model)
+    assert hidden.shape == (b, s, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(pooled)))
+
+
+def test_xlmr_pad_invariance_of_pooled():
+    """Padding a sentence to a larger bucket must not change the pooled
+    embedding (the bucket-switching correctness requirement of SVI-A)."""
+    cfg, b = SMALL_XLMR, 1
+    r = np.random.default_rng(5)
+    # same weights for both buckets
+    specs16 = xlmr_mod.model_specs(cfg, b, 16)
+    args16 = _make_args(specs16, seed=7)
+    names = [s[0] for s in specs16]
+    p16 = dict(zip(names, args16))
+    true_len = 10
+    ids16 = jnp.asarray(np.pad(r.integers(0, cfg.vocab, size=(1, true_len)),
+                               ((0, 0), (0, 16 - true_len))).astype(np.int32))
+    p16["ids"], p16["pad_len"] = ids16, jnp.asarray(np.array([true_len], np.int32))
+
+    fn16 = xlmr_mod.make_model_fn(cfg, b, 16)
+    pooled16, _ = fn16(*[p16[n] for n in names])
+
+    specs32 = xlmr_mod.model_specs(cfg, b, 32)
+    names32 = [s[0] for s in specs32]
+    p32 = dict(p16)
+    ids32 = jnp.asarray(np.pad(np.asarray(ids16), ((0, 0), (0, 16))).astype(np.int32))
+    p32["ids"] = ids32
+    fn32 = xlmr_mod.make_model_fn(cfg, b, 32)
+    pooled32, _ = fn32(*[p32[n] for n in names32])
+
+    # NOTE: padded positions do participate in attention (paper pads with a
+    # pad token and tolerates it); pooled uses only valid positions. With a
+    # nonzero pad embedding the result shifts slightly; require high cosine
+    # similarity, the paper's own embedding-quality metric (>=98%, SV-A).
+    a = np.asarray(pooled16)[0]
+    bb = np.asarray(pooled32)[0]
+    cos = float(np.dot(a, bb) / (np.linalg.norm(a) * np.linalg.norm(bb) + 1e-9))
+    assert cos >= 0.98, cos
+
+
+def test_xlmr_param_count_positive():
+    assert SMALL_XLMR.param_count() > 0
+    assert xlmr_mod.XlmrConfig().param_count() > 3_000_000
+
+
+# ---------------------------------------------------------------------------
+# CV
+# ---------------------------------------------------------------------------
+
+def test_cv_shapes_and_finiteness():
+    cfg, b = SMALL_CV, 2
+    specs = cv_mod.model_specs(cfg, b)
+    fn = cv_mod.make_model_fn(cfg, b)
+    logits, emb = fn(*_make_args(specs, seed=4))
+    assert logits.shape == (b, cfg.classes)
+    assert emb.shape[0] == b
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_cv_batch_consistency():
+    """Running batch=2 equals two batch=1 runs (data-parallel correctness)."""
+    cfg = SMALL_CV
+    specs1 = cv_mod.model_specs(cfg, 1)
+    specs2 = cv_mod.model_specs(cfg, 2)
+    args2 = _make_args(specs2, seed=6)
+    names = [s[0] for s in specs2]
+    p = dict(zip(names, args2))
+    fn2 = cv_mod.make_model_fn(cfg, 2)
+    logits2, _ = fn2(*args2)
+
+    fn1 = cv_mod.make_model_fn(cfg, 1)
+    outs = []
+    for i in range(2):
+        p1 = dict(p)
+        p1["image"] = p["image"][i:i + 1]
+        outs.append(np.asarray(fn1(*[p1[n] for n in names])[0]))
+    np.testing.assert_allclose(np.asarray(logits2),
+                               np.concatenate(outs, 0), rtol=2e-4, atol=2e-5)
+
+
+def test_cv_param_count_positive():
+    assert SMALL_CV.param_count() > 0

@@ -1,0 +1,355 @@
+//! Bench: ablations for every quantified optimization claim in §VI.
+//!
+//!     cargo bench --bench ablations            # all
+//!     cargo bench --bench ablations -- transfers   # one section
+//!
+//! Sections: parallelization, placement, batching, avgpool, sls_balance,
+//! resource_alloc, transfers, netsplit, nlp_int8, buckets, quantization.
+
+use fbia::compiler::parallelize::{parallelize, ParallelPlan};
+use fbia::compiler::partition::partition_recsys;
+use fbia::compiler::placement::schedule;
+use fbia::compiler::{alloc, compile};
+use fbia::config::Config;
+use fbia::graph::models::{xlmr, DlrmSpec, ModelId, XlmrSpec};
+use fbia::graph::ops::OpKind;
+use fbia::sim::{simulate_model, simulate_model_batch};
+use fbia::util::bench::section;
+use fbia::util::table::{f2, ms, pct, Table};
+
+fn want(section_name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| a == section_name)
+}
+
+fn main() {
+    let cfg = Config::default();
+
+    if want("parallelization") {
+        // §VI-B: "we see a 2.6x speedup when parallelizing using this
+        // heuristic compared to not doing so" (NLP)
+        section("Ablation: op-splitting parallelization (paper: 2.6x on NLP)");
+        let g = xlmr(&XlmrSpec::paper(), 1, 32);
+        let card = cfg.node.card.clone();
+        let nodes: Vec<usize> =
+            g.nodes.iter().filter(|n| !n.kind.host_only()).map(|n| n.id).collect();
+        let seq = ParallelPlan::sequential(&g, &card);
+        let par = parallelize(&g, &card, true);
+        let s0 = schedule(&g, &nodes, &seq, &card, card.accel_cores, true);
+        let s1 = schedule(&g, &nodes, &par, &card, card.accel_cores, true);
+        let mut t = Table::new(&["config", "makespan", "core util", "speedup"]);
+        t.row(&["no parallelization".into(), ms(s0.makespan_s), pct(s0.core_utilization), "1.0x".into()]);
+        t.row(&[
+            "split heuristic".into(),
+            ms(s1.makespan_s),
+            pct(s1.core_utilization),
+            format!("{:.1}x", s0.makespan_s / s1.makespan_s),
+        ]);
+        t.print();
+        println!("paper: 2.6x; measured: {:.1}x", s0.makespan_s / s1.makespan_s);
+    }
+
+    if want("placement") {
+        // §VI-B: explicit placement gains <= 10-20% for recsys
+        section("Ablation: explicit placement hints (paper: <=10-20% gain)");
+        let mut t = Table::new(&["model", "vendor default", "with hints", "gain"]);
+        for id in [ModelId::RecsysComplex, ModelId::XlmR] {
+            let g = id.build();
+            let card = cfg.node.card.clone();
+            let nodes: Vec<usize> =
+                g.nodes.iter().filter(|n| !n.kind.host_only()).map(|n| n.id).collect();
+            let par = parallelize(&g, &card, true);
+            let off = schedule(&g, &nodes, &par, &card, card.accel_cores, false);
+            let on = schedule(&g, &nodes, &par, &card, card.accel_cores, true);
+            t.row(&[
+                id.name().to_string(),
+                ms(off.makespan_s),
+                ms(on.makespan_s),
+                pct(off.makespan_s / on.makespan_s - 1.0),
+            ]);
+        }
+        t.print();
+    }
+
+    if want("batching") {
+        // §VI-B: CV batch 1 -> 4 gives 1.6-1.8x
+        section("Ablation: CV batching (paper: 1.6-1.8x at batch 4)");
+        let mut t = Table::new(&["model", "batch", "latency", "items/s", "speedup vs b1"]);
+        for id in [ModelId::ResNeXt101, ModelId::ResNeXt3D] {
+            let b1 = simulate_model_batch(id, 1, &cfg, 100).unwrap();
+            for b in [1usize, 2, 4, 8] {
+                let r = simulate_model_batch(id, b, &cfg, 100).unwrap();
+                t.row(&[
+                    id.name().to_string(),
+                    b.to_string(),
+                    ms(r.latency_s),
+                    format!("{:.0}", r.items_per_s),
+                    format!("{:.2}x", r.items_per_s / b1.items_per_s),
+                ]);
+            }
+        }
+        t.print();
+    }
+
+    if want("avgpool") {
+        // §VI-B: average-pool optimization cut its share from 44% to 6%
+        section("Ablation: average-pool kernel optimization (paper: 44% -> 6% of RegNetY)");
+        let mk = |optimized: bool| {
+            let mut g = ModelId::RegNetY.build();
+            for n in g.nodes.iter_mut() {
+                if let OpKind::AdaptiveAvgPool { optimized: ref mut o } = n.kind {
+                    *o = optimized;
+                }
+            }
+            let c = compile(&g, &cfg).unwrap();
+            let breakdown = fbia::sim::op_breakdown(&c);
+            breakdown
+                .iter()
+                .find(|(k, _)| k == "AdaptiveAvgPool")
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0)
+        };
+        let before = mk(false);
+        let after = mk(true);
+        let mut t = Table::new(&["kernel", "AdaptiveAvgPool share of runtime", "paper"]);
+        t.row(&["unoptimized".into(), pct(before), "44%".into()]);
+        t.row(&["optimized (all pool sizes)".into(), pct(after), "6%".into()]);
+        t.print();
+    }
+
+    if want("sls_balance") {
+        // §VI-B: length-aware SLS balancing cut SLS partition latency 15-34%
+        section("Ablation: SLS length-aware load balancing (paper: 15-34% latency cut)");
+        // skewed lookup distribution across tables
+        let mut spec = DlrmSpec::complex();
+        spec.rows_per_table = 10_000_000;
+        let mut g = fbia::graph::models::dlrm(&spec, 32);
+        for n in g.nodes.iter_mut() {
+            if let OpKind::SparseLengthsSum { ref mut avg_lookups } = n.kind {
+                let idx: usize = n.name.trim_start_matches("sls").parse().unwrap();
+                // hot features cluster at the front of the model definition
+                // (typical: the most predictive sparse features come first)
+                *avg_lookups = if idx < 8 { 60.0 } else { 15.0 };
+            }
+        }
+        let card = cfg.node.card.clone();
+        let par = parallelize(&g, &card, true);
+        let mut t = Table::new(&["balancing", "worst-shard SLS makespan", "cut"]);
+        let mut results = Vec::new();
+        for (label, aware) in [("naive (bytes only)", false), ("length-aware (profiled)", true)] {
+            let mut c = cfg.clone();
+            c.compiler.sls_length_aware = aware;
+            let plan = partition_recsys(&g, &c.compiler, &c.node).unwrap();
+            let worst = plan
+                .partitions
+                .iter()
+                .filter(|p| p.kind == fbia::compiler::partition::PartitionKind::Sls)
+                .map(|p| schedule(&g, &p.nodes, &par, &card, 4, true).makespan_s)
+                .fold(0.0, f64::max);
+            results.push((label, worst));
+        }
+        let base = results[0].1;
+        for (label, worst) in &results {
+            t.row(&[label.to_string(), ms(*worst), pct(1.0 - worst / base)]);
+        }
+        t.print();
+    }
+
+    if want("resource_alloc") {
+        // §VI-B: "generally using 1 in 3 cores for SLS to be a good balance"
+        section("Ablation: Accel Core allocation sweep (paper: 1-in-3 for SLS)");
+        let g = ModelId::RecsysComplex.build();
+        let c = compile(&g, &cfg).unwrap();
+        let ppar = parallelize(&c.graph, &cfg.node.card, true);
+        if let Some(a) = alloc::sweep_plan(&c.graph, &c.plan, &ppar, &cfg.node.card, true) {
+            let mut t = Table::new(&["SLS cores", "dense cores", "SLS time", "dense time", "stage time"]);
+            for p in &a.points {
+                let mark = if p.sls_cores == a.best.sls_cores { " <- best" } else { "" };
+                t.row(&[
+                    format!("{}{}", p.sls_cores, mark),
+                    p.dense_cores.to_string(),
+                    ms(p.sls_time_s),
+                    ms(p.dense_time_s),
+                    ms(p.stage_time_s),
+                ]);
+            }
+            t.print();
+            println!(
+                "best: {} of {} cores for SLS ({:.0}%); paper: 1-in-3 (33%)",
+                a.best.sls_cores,
+                cfg.node.card.accel_cores,
+                100.0 * a.best.sls_cores as f64 / cfg.node.card.accel_cores as f64
+            );
+        }
+    }
+
+    if want("transfers") {
+        // §VI-C: partial tensors, command batching, P2P (paper: PCIe
+        // transfers reduced by over half with P2P)
+        section("Ablation: system-level transfer optimizations (§VI-C)");
+        let base = simulate_model(ModelId::RecsysComplex, &cfg, 100).unwrap();
+        let mut t = Table::new(&[
+            "config", "host-link B/req", "p2p B/req", "DMA cmds", "latency", "QPS",
+        ]);
+        let mut row = |label: &str, c: &Config| {
+            let r = simulate_model(ModelId::RecsysComplex, c, 100).unwrap();
+            t.row(&[
+                label.to_string(),
+                format!("{:.0}", r.transfers.host_link_bytes),
+                format!("{:.0}", r.transfers.p2p_bytes),
+                r.transfers.commands.to_string(),
+                ms(r.latency_s),
+                format!("{:.0}", r.qps),
+            ]);
+            r
+        };
+        row("all optimizations", &cfg);
+        let mut c = cfg.clone();
+        c.transfers.peer_to_peer = false;
+        let no_p2p = row("no P2P (host-mediated)", &c);
+        let mut c = cfg.clone();
+        c.transfers.partial_tensors = false;
+        row("no partial tensors", &c);
+        let mut c = cfg.clone();
+        c.transfers.command_batching = false;
+        row("no command batching", &c);
+        let mut c = cfg.clone();
+        c.transfers.peer_to_peer = false;
+        c.transfers.partial_tensors = false;
+        c.transfers.command_batching = false;
+        c.transfers.fp16_dense_inputs = false;
+        c.transfers.fused_broadcast = false;
+        row("none (§VI-C baseline)", &c);
+        t.print();
+        let cut = 1.0 - base.transfers.host_link_bytes / no_p2p.transfers.host_link_bytes;
+        println!(
+            "P2P host-link traffic cut: {} (paper: 'reducing PCIe transfers by over half')",
+            pct(cut)
+        );
+    }
+
+    if want("netsplit") {
+        // §VI-A: broadcast placement (fused on-card broadcast vs per-table)
+        section("Ablation: net split / broadcast placement (§VI-A)");
+        let mut t = Table::new(&["broadcast strategy", "upload+overhead time", "latency"]);
+        for (label, fused) in [("host concat + single card broadcast", true), ("per-table broadcasts", false)] {
+            let mut c = cfg.clone();
+            c.transfers.fused_broadcast = fused;
+            let r = simulate_model(ModelId::RecsysComplex, &c, 100).unwrap();
+            t.row(&[label.to_string(), ms(r.transfers.time_s), ms(r.latency_s)]);
+        }
+        t.print();
+    }
+
+    if want("nlp_int8") {
+        // §VII: "we anticipate int8 should yield about 1.6X" for XLM-R
+        section("Ablation: XLM-R fp16 vs int8 (paper anticipates ~1.6x)");
+        let fp16 = simulate_model(ModelId::XlmR, &cfg, 100).unwrap();
+        // int8 variant: quantize the MatMuls (the 72.5% in Table II)
+        let mut g = ModelId::XlmR.build();
+        let retype: Vec<usize> = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::MatMul))
+            .flat_map(|n| n.inputs.clone())
+            .collect();
+        for n in g.nodes.iter_mut() {
+            if matches!(n.kind, OpKind::MatMul) {
+                n.kind = OpKind::QuantizedFc;
+            }
+        }
+        for t in retype {
+            if g.tensors[t].kind == fbia::graph::TensorKind::Weight {
+                g.tensors[t].dtype = fbia::graph::DType::I8; // halves weight traffic
+            }
+        }
+        // QuantizedFc expects [x, w, b]: MatMul nodes have [x, w]; the cost
+        // model only reads shapes, so reuse as-is for timing purposes.
+        let c = compile(&g, &cfg).unwrap();
+        let card_time: f64 = c
+            .schedules
+            .iter()
+            .flatten()
+            .map(|s| s.makespan_s)
+            .sum();
+        let fp16_card: f64 = fp16
+            .compiled
+            .schedules
+            .iter()
+            .flatten()
+            .map(|s| s.makespan_s)
+            .sum();
+        let mut t = Table::new(&["precision", "card makespan", "speedup"]);
+        t.row(&["fp16 (deployed)".into(), ms(fp16_card), "1.0x".into()]);
+        t.row(&["int8 (anticipated)".into(), ms(card_time), format!("{:.1}x", fp16_card / card_time)]);
+        t.print();
+        println!("paper: ~1.6x; measured: {:.1}x", fp16_card / card_time);
+    }
+
+    if want("buckets") {
+        // §VI-A: multiple compiled networks at padding boundaries vs a
+        // single max-length network — the padded-token waste they avoid
+        section("Ablation: sequence-length padding buckets (§VI-A)");
+        use fbia::serving::batcher::Batcher;
+        use fbia::workloads::NlpGen;
+        let mut t = Table::new(&["compiled bucket set", "padded tokens", "real tokens", "waste"]);
+        for (label, buckets) in [
+            ("{512} (single max net)", vec![512usize]),
+            ("{128, 512}", vec![128, 512]),
+            ("{32, 64, 128, 512} (paper)", vec![32, 64, 128, 512]),
+        ] {
+            let mut b = Batcher::new(buckets, 8, true);
+            let mut gen = NlpGen::new(21, 1000, 512, 100.0);
+            for _ in 0..512 {
+                b.push(gen.next());
+            }
+            let batches = b.drain();
+            let padded: usize = batches.iter().map(|x| x.padded_tokens()).sum();
+            let real: usize = batches.iter().map(|x| x.real_tokens()).sum();
+            t.row(&[
+                label.to_string(),
+                padded.to_string(),
+                real.to_string(),
+                pct(1.0 - real as f64 / padded.max(1) as f64),
+            ]);
+        }
+        t.print();
+        println!("(compute scales with padded tokens: finer buckets ~= proportional savings)");
+    }
+
+    if want("quantization") {
+        // §V-B/§VI-A: int8 + fp16 dense-feature transfers vs all-fp16
+        section("Ablation: quantization on/off (recsys dense + embedding tables)");
+        let mut t = Table::new(&["config", "dense makespan", "table GB on node", "fits 6x16 GB"]);
+        for (label, q_fc, int4) in [
+            ("int8 FC + mixed int4/int8 tables", true, true),
+            ("int8 FC + int8 tables", true, false),
+            ("fp16 FC + int8 tables", false, false),
+        ] {
+            let mut spec = DlrmSpec::base();
+            spec.quantized_fc = q_fc;
+            spec.mixed_int4 = int4;
+            let g = fbia::graph::models::dlrm(&spec, 32);
+            let gb = g.weight_bytes() as f64 / (1u64 << 30) as f64;
+            let fits = g.weight_bytes() <= 6 * cfg.node.card.lpddr_bytes;
+            let c = compile(&g, &cfg).unwrap();
+            let dense_ms: f64 = c
+                .plan
+                .partitions
+                .iter()
+                .zip(&c.schedules)
+                .filter(|(p, _)| p.kind == fbia::compiler::partition::PartitionKind::Dense)
+                .filter_map(|(_, s)| s.as_ref())
+                .map(|s| s.makespan_s)
+                .sum();
+            t.row(&[
+                label.to_string(),
+                ms(dense_ms),
+                f2(gb),
+                if fits { "yes".into() } else { "NO".into() },
+            ]);
+        }
+        t.print();
+        println!("(fp16 tables would need ~2 B/param: the 70 B-param model would not fit the node at all — the paper's motivation for int8/int4 embeddings, §V-B)");
+    }
+}

@@ -1,0 +1,112 @@
+//! Bench: end-to-end serving over the real PJRT runtime (L3 hot path).
+//!
+//! Times the actual request path — artifact execution, partition pipeline,
+//! batcher — and prints throughput/latency per model family. This is the
+//! harness the §Perf optimization loop measures against.
+//!
+//!     cargo bench --bench e2e_serving
+//!
+//! Requires `make artifacts`.
+
+use fbia::runtime::Engine;
+use fbia::serving::{CvServer, NlpServer, RecsysServer};
+use fbia::util::bench::{bench_with, report, section};
+use fbia::util::table::{ms, pct, Table};
+use fbia::workloads::{CvGen, NlpGen, RecsysGen};
+use std::sync::Arc;
+
+fn main() {
+    let engine = match Engine::load(std::path::Path::new("artifacts")) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!("e2e_serving: skipping (artifacts not built: {e})");
+            return;
+        }
+    };
+    let m = engine.manifest().clone();
+
+    section("E2E: DLRM partitioned serving (real numerics)");
+    {
+        let batch = 32;
+        let mut gen = RecsysGen::new(
+            1,
+            batch,
+            m.config_usize("dlrm", "num_tables").unwrap(),
+            m.config_usize("dlrm", "rows_per_table").unwrap(),
+            m.config_usize("dlrm", "dense_in").unwrap(),
+            m.config_usize("dlrm", "max_lookups").unwrap(),
+        );
+        let reqs: Vec<_> = (0..24).map(|_| gen.next()).collect();
+        let mut t = Table::new(&["precision", "p50", "p99", "QPS", "items/s"]);
+        for precision in ["fp32", "int8"] {
+            let server = Arc::new(RecsysServer::new(engine.clone(), batch, precision).unwrap());
+            server.infer(&reqs[0]).unwrap(); // warmup
+            let metrics = server.serve(reqs.clone()).unwrap();
+            t.row(&[
+                precision.to_string(),
+                ms(metrics.latency.p50()),
+                ms(metrics.latency.p99()),
+                format!("{:.1}", metrics.qps()),
+                format!("{:.0}", metrics.items_per_s()),
+            ]);
+        }
+        t.print();
+
+        // micro: single stages
+        let server = Arc::new(RecsysServer::new(engine.clone(), batch, "fp32").unwrap());
+        let req = reqs[0].clone();
+        let sparse = server.run_sls(&req).unwrap();
+        report(&bench_with("sls partition (4 shards)", 2, 0.4, &mut || {
+            server.run_sls(&req).unwrap();
+        }));
+        report(&bench_with("dense partition (fp32)", 2, 0.4, &mut || {
+            server.run_dense(&req.dense, &sparse).unwrap();
+        }));
+    }
+
+    section("E2E: XLM-R bucket-switched serving (real numerics)");
+    {
+        let server = NlpServer::new(engine.clone()).unwrap();
+        let vocab = m.config_usize("xlmr", "vocab").unwrap();
+        let mk = || {
+            let mut gen = NlpGen::new(1, vocab, 128, 100.0);
+            (0..32).map(|_| gen.next()).collect::<Vec<_>>()
+        };
+        // warmup every bucket
+        let _ = server.serve(mk(), 4, true).unwrap();
+        let mut t = Table::new(&["batching", "sentences/s", "p50", "pad waste"]);
+        for (label, aware) in [("length-aware", true), ("naive", false)] {
+            let (metrics, waste) = server.serve(mk(), 4, aware).unwrap();
+            t.row(&[
+                label.to_string(),
+                format!("{:.1}", metrics.items_per_s()),
+                ms(metrics.latency.p50()),
+                pct(waste),
+            ]);
+        }
+        t.print();
+    }
+
+    section("E2E: CV trunk batched serving (real numerics)");
+    {
+        let server = CvServer::new(engine.clone()).unwrap();
+        let mut gen = CvGen::new(1, server.image);
+        let mut t = Table::new(&["batch", "p50", "images/s", "speedup vs b1"]);
+        let mut base = 0.0f64;
+        for b in server.batch_sizes() {
+            let _ = server.serve(2, b, &mut gen).unwrap(); // warmup
+            let metrics = server.serve(10, b, &mut gen).unwrap();
+            if base == 0.0 {
+                base = metrics.items_per_s();
+            }
+            t.row(&[
+                b.to_string(),
+                ms(metrics.latency.p50()),
+                format!("{:.1}", metrics.items_per_s()),
+                format!("{:.2}x", metrics.items_per_s() / base),
+            ]);
+        }
+        t.print();
+        println!("(paper §VI-B: batch 1->4 gives 1.6-1.8x on the CV concept trunk)");
+    }
+}

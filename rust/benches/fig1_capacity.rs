@@ -1,0 +1,42 @@
+//! Bench: regenerate **Figure 1** — growth in the number of inference
+//! servers for (a) recommendation and (b) other ML over 8 quarters.
+//!
+//!     cargo bench --bench fig1_capacity
+
+use fbia::capacity::{capacity_series, power_savings, GrowthScenario};
+use fbia::config::Config;
+use fbia::graph::models::ModelId;
+use fbia::util::bench::section;
+use fbia::util::table::{f2, Table};
+
+fn main() {
+    let cfg = Config::default();
+    for (scenario, model, label) in [
+        (GrowthScenario::recommendation(), ModelId::RecsysComplex, "Fig. 1a: recommendation"),
+        (GrowthScenario::other_ml(), ModelId::XlmR, "Fig. 1b: other ML (CV/text)"),
+    ] {
+        section(label);
+        let pts = capacity_series(model, &scenario, &cfg).expect("capacity");
+        let mut t = Table::new(&[
+            "quarter", "demand QPS", "servers (CPU fleet)", "servers (accel fleet)", "growth vs t0",
+        ]);
+        for p in &pts {
+            t.row(&[
+                p.quarter.to_string(),
+                format!("{:.0}", p.demand_qps),
+                format!("{:.0}", p.cpu_servers),
+                format!("{:.0}", p.accel_servers),
+                f2(p.cpu_norm),
+            ]);
+        }
+        t.print();
+        let last = pts.last().unwrap();
+        let ok = last.cpu_norm >= 4.5 && last.cpu_norm <= 7.5;
+        println!(
+            "growth over window: {:.1}x (paper: 5-7x) -> {}",
+            last.cpu_norm,
+            if ok { "within band" } else { "OUT OF BAND" }
+        );
+        println!("power saved at final quarter: {:.1} kW", power_savings(&pts, &cfg) / 1e3);
+    }
+}

@@ -1,0 +1,59 @@
+//! Bench: regenerate **Figure 7** — latency and relative QPS of the complex
+//! models on the accelerator node, against their latency bands.
+//!
+//!     cargo bench --bench fig7_latency_qps
+
+use fbia::config::Config;
+use fbia::graph::models::ModelId;
+use fbia::sim::simulate_model;
+use fbia::util::bench::section;
+use fbia::util::table::{ms, pct, Table};
+
+fn main() {
+    let cfg = Config::default();
+    section("Figure 7: latency and relative QPS per model (simulated node)");
+
+    // QPS normalized to the slowest model, like the paper's "relative QPS"
+    let mut rows = Vec::new();
+    for id in ModelId::ALL {
+        let r = simulate_model(id, &cfg, 400).expect("simulate");
+        rows.push((id, r));
+    }
+    let min_qps = rows.iter().map(|(_, r)| r.qps).fold(f64::INFINITY, f64::min);
+
+    let mut t = Table::new(&[
+        "model", "batch", "latency", "band", "within band", "relative QPS", "core util",
+    ]);
+    for (id, r) in &rows {
+        t.row(&[
+            id.name().to_string(),
+            r.batch.to_string(),
+            ms(r.latency_s),
+            format!("<= {}", ms(id.latency_budget_s())),
+            if r.meets_budget { "yes".into() } else { "NO".into() },
+            format!("{:.1}x", r.qps / min_qps),
+            pct(r.core_utilization),
+        ]);
+    }
+    t.print();
+
+    // the paper's headline observations, checked mechanically:
+    let rec = rows.iter().find(|(id, _)| *id == ModelId::RecsysComplex).unwrap();
+    let cu_max = rows
+        .iter()
+        .filter(|(id, _)| !matches!(id, ModelId::RecsysBase | ModelId::RecsysComplex))
+        .map(|(_, r)| r.latency_s)
+        .fold(0.0, f64::max);
+    println!();
+    println!(
+        "paper: 'recommendation models run at much lower latency and higher QPS per batch'\n  -> recsys {} vs slowest CU model {} : {}",
+        ms(rec.1.latency_s),
+        ms(cu_max),
+        if rec.1.latency_s < cu_max { "holds" } else { "VIOLATED" }
+    );
+    let all_meet = rows.iter().all(|(_, r)| r.meets_budget);
+    println!(
+        "paper: 'the accelerator is able to serve all of these complex models within the latency budget' -> {}",
+        if all_meet { "holds" } else { "VIOLATED" }
+    );
+}

@@ -1,0 +1,79 @@
+//! Bench: regenerate **Table I** — model characteristics (params, FLOPs,
+//! arithmetic intensity, latency constraints) from the graph builders, side
+//! by side with the paper's numbers.
+//!
+//!     cargo bench --bench table1_characteristics
+
+use fbia::graph::models::ModelId;
+use fbia::util::bench::section;
+use fbia::util::table::Table;
+
+/// Paper Table I values: (MParams, GFLOPs/batch, arith. intensity).
+fn paper(id: ModelId) -> (f64, f64, f64) {
+    match id {
+        ModelId::RecsysBase => (70_000.0, 0.02, 90.0),
+        ModelId::RecsysComplex => (100_000.0, 0.1, 80.0),
+        ModelId::ResNeXt101 => (44.0, 15.6, 355.0),
+        ModelId::RegNetY => (700.0, 256.0, 395.0),
+        ModelId::FbNetV3 => (28.6, 72.0, 1946.0),
+        ModelId::ResNeXt3D => (58.0, 3.4, 362.0),
+        ModelId::XlmR => (558.0, 20.0, 45.0), // AI = #tokens (20-70)
+    }
+}
+
+fn main() {
+    section("Table I: model characteristics (built graphs vs paper)");
+    let mut t = Table::new(&[
+        "model", "MParams", "paper", "GFLOPs/batch", "paper", "arith. int.", "paper", "latency bound",
+    ]);
+    for id in ModelId::ALL {
+        let g = id.build();
+        g.validate().expect("valid graph");
+        let (pp, pf, pa) = paper(id);
+        t.row(&[
+            id.name().to_string(),
+            format!("{:.1}", g.param_count() as f64 / 1e6),
+            format!("{pp:.1}"),
+            format!("{:.2}", g.total_flops() / 1e9),
+            format!("{pf:.2}"),
+            format!("{:.0}", g.arithmetic_intensity()),
+            format!("{pa:.0}"),
+            format!("{:.0} ms", id.latency_budget_s() * 1e3),
+        ]);
+    }
+    t.print();
+
+    println!();
+    println!("ordering checks (the shape the table must preserve):");
+    let ai = |id: ModelId| id.build().arithmetic_intensity();
+    let checks: Vec<(&str, bool)> = vec![
+        (
+            "CV models have much higher arithmetic intensity than recsys/NLP",
+            ai(ModelId::ResNeXt101) > 3.0 * ai(ModelId::XlmR)
+                && ai(ModelId::ResNeXt101) > 3.0 * ai(ModelId::RecsysBase),
+        ),
+        (
+            "RegNetY ~15x ResNeXt101 in params & FLOPs",
+            {
+                let a = ModelId::ResNeXt101.build();
+                let b = ModelId::RegNetY.build();
+                b.param_count() > 8 * a.param_count() && b.total_flops() > 8.0 * a.total_flops()
+            },
+        ),
+        (
+            "recsys params dwarf everything (embedding tables)",
+            ModelId::RecsysBase.build().param_count() > 50_000_000_000,
+        ),
+        (
+            "complex recsys ~5x base GFLOPs",
+            {
+                let r = ModelId::RecsysComplex.build().total_flops()
+                    / ModelId::RecsysBase.build().total_flops();
+                (2.5..12.0).contains(&r)
+            },
+        ),
+    ];
+    for (name, ok) in checks {
+        println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
+    }
+}

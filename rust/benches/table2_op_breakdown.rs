@@ -1,0 +1,101 @@
+//! Bench: regenerate **Table II** — per-op runtime breakdown for each model,
+//! side by side with the paper's reported shares.
+//!
+//!     cargo bench --bench table2_op_breakdown
+
+use fbia::config::Config;
+use fbia::graph::models::ModelId;
+use fbia::sim::simulate_model;
+use fbia::util::bench::section;
+use fbia::util::table::{pct, Table};
+
+/// Paper Table II values (top rows per model).
+fn paper_shares(id: ModelId) -> &'static [(&'static str, f64)] {
+    match id {
+        ModelId::RecsysBase | ModelId::RecsysComplex => &[
+            ("FC", 0.309),
+            ("SLS", 0.270),
+            ("BatchMatMul", 0.088),
+            ("Quantize", 0.048),
+            ("Transpose", 0.043),
+            ("Dequantize", 0.036),
+        ],
+        ModelId::ResNeXt101 => &[
+            ("ChannelwiseQuantizedConv", 0.573),
+            ("Add", 0.374),
+            ("ConvertTo", 0.025),
+            ("Quantize", 0.006),
+            ("AdaptiveAvgPool", 0.002),
+        ],
+        ModelId::FbNetV3 => &[
+            ("ChannelwiseQuantizedConv", 0.670),
+            ("Fused Conv_Add", 0.272),
+            ("ROIAlign", 0.027),
+            ("ConvertTo", 0.007),
+            ("Quantize", 0.005),
+        ],
+        ModelId::RegNetY => &[
+            ("ChannelwiseQuantizedConv", 0.681),
+            ("Tile", 0.137),
+            ("AdaptiveAvgPool", 0.060),
+            ("Add", 0.060),
+            ("Mul", 0.044),
+        ],
+        ModelId::ResNeXt3D => &[
+            ("Convolution3D", 0.184),
+            ("MatMul", 0.133),
+            ("Convolution", 0.102),
+            ("Add", 0.065),
+            ("Transpose", 0.065),
+            ("MaxPool", 0.061),
+        ],
+        ModelId::XlmR => &[
+            ("MatMul", 0.725),
+            ("Transpose", 0.036),
+            ("Softmax", 0.033),
+            ("Add", 0.030),
+            ("Gelu", 0.022),
+            ("Concat", 0.021),
+        ],
+    }
+}
+
+fn main() {
+    let cfg = Config::default();
+    section("Table II: op-level runtime breakdown (simulated vs paper)");
+
+    for id in ModelId::ALL {
+        let r = simulate_model(id, &cfg, 20).expect("simulate");
+        println!("\n--- {} ---", id.name());
+        let paper = paper_shares(id);
+        let mut t = Table::new(&["op (measured)", "share", "", "op (paper)", "share"]);
+        let n = r.op_breakdown.len().max(paper.len());
+        for i in 0..n.min(8) {
+            let (mk, mv) = r
+                .op_breakdown
+                .get(i)
+                .map(|(k, v)| (k.clone(), pct(*v)))
+                .unwrap_or_default();
+            let (pk, pv) = paper
+                .get(i)
+                .map(|(k, v)| (k.to_string(), pct(*v)))
+                .unwrap_or_default();
+            t.row(&[mk, mv, "|".into(), pk, pv]);
+        }
+        t.print();
+        // shape check: does our top op match the paper's top op family?
+        if let (Some((mk, _)), Some((pk, _))) = (r.op_breakdown.first(), paper.first()) {
+            let fam = |s: &str| {
+                if s.contains("Conv") {
+                    "Conv"
+                } else if s == "FC" || s == "SLS" {
+                    "FC/SLS"
+                } else {
+                    "other"
+                }
+            };
+            let ok = mk == pk || fam(mk) == fam(pk);
+            println!("top-op agreement: measured '{mk}' vs paper '{pk}' -> {}", if ok { "match" } else { "DIFFERS" });
+        }
+    }
+}

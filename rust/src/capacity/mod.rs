@@ -1,0 +1,153 @@
+//! Capacity planning model (Fig. 1): servers needed for inference as demand
+//! grows, CPU-only vs accelerator-augmented fleets.
+//!
+//! Fig. 1 reports 5–7× growth in inference servers over two years for (a)
+//! recommendation and (b) other ML. This module reproduces the *series*: a
+//! demand-growth model converted to server counts through each platform's
+//! measured per-server throughput, normalized like the paper's y-axis.
+
+use crate::config::Config;
+use crate::graph::models::ModelId;
+use crate::sim::simulate_model;
+use anyhow::Result;
+
+/// One growth scenario.
+#[derive(Debug, Clone)]
+pub struct GrowthScenario {
+    pub name: &'static str,
+    /// demand multiplier per quarter.
+    pub quarterly_growth: f64,
+    pub quarters: usize,
+    /// demand at t=0, requests/sec.
+    pub initial_qps: f64,
+}
+
+impl GrowthScenario {
+    /// Fig. 1a: recommendation — ~6x over 8 quarters => 1.25x/quarter.
+    pub fn recommendation() -> Self {
+        GrowthScenario {
+            name: "recommendation",
+            quarterly_growth: 1.25,
+            quarters: 8,
+            initial_qps: 200_000.0,
+        }
+    }
+
+    /// Fig. 1b: other ML (CV/text) — ~5x over 8 quarters.
+    pub fn other_ml() -> Self {
+        GrowthScenario {
+            name: "cv+text",
+            quarterly_growth: 1.22,
+            quarters: 8,
+            initial_qps: 50_000.0,
+        }
+    }
+
+    pub fn demand_at(&self, quarter: usize) -> f64 {
+        self.initial_qps * self.quarterly_growth.powi(quarter as i32)
+    }
+}
+
+/// One point of the capacity series.
+#[derive(Debug, Clone)]
+pub struct CapacityPoint {
+    pub quarter: usize,
+    pub demand_qps: f64,
+    pub cpu_servers: f64,
+    pub accel_servers: f64,
+    /// normalized like Fig. 1 (servers at t / servers at t=0).
+    pub cpu_norm: f64,
+    pub accel_norm: f64,
+}
+
+/// Per-server throughput assumptions. CPU throughput is derived from the
+/// host model in the config; accelerator throughput from the simulator.
+pub fn capacity_series(model: ModelId, scenario: &GrowthScenario, cfg: &Config) -> Result<Vec<CapacityPoint>> {
+    let accel = simulate_model(model, cfg, 200)?;
+    let accel_qps_per_server = accel.items_per_s;
+
+    // CPU server: same host but no cards — serve the model's FLOPs on the
+    // host's sustained GFLOPs (optimistic for the CPU; the paper's point is
+    // that complex models "cannot be easily or efficiently run on CPUs").
+    let g = model.build();
+    let flops = g.total_flops();
+    let cpu_qps_per_server =
+        (cfg.node.host.gflops * 1e9 * 0.5) / flops * model.typical_batch() as f64;
+
+    let mut out = Vec::new();
+    let d0 = scenario.demand_at(0);
+    // normalization uses the raw (un-floored) series so the Fig. 1 y-axis
+    // (growth relative to t=0) is not distorted by the 1-server floor
+    let cpu0 = d0 / cpu_qps_per_server;
+    let acc0 = d0 / accel_qps_per_server;
+    for q in 0..=scenario.quarters {
+        let d = scenario.demand_at(q);
+        let cpu = d / cpu_qps_per_server;
+        let acc = d / accel_qps_per_server;
+        out.push(CapacityPoint {
+            quarter: q,
+            demand_qps: d,
+            cpu_servers: cpu.max(1.0),
+            accel_servers: acc.max(1.0),
+            cpu_norm: cpu / cpu0,
+            accel_norm: acc / acc0,
+        });
+    }
+    Ok(out)
+}
+
+/// Power saved by serving the demand on accelerators instead of CPUs, watts.
+pub fn power_savings(points: &[CapacityPoint], cfg: &Config) -> f64 {
+    let last = match points.last() {
+        Some(p) => p,
+        None => return 0.0,
+    };
+    let cpu_server_w = 300.0; // dual-socket-class serving node
+    let accel_server_w = 150.0 + cfg.node.accel_power_w(); // host + cards
+    last.cpu_servers * cpu_server_w - last.accel_servers * accel_server_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn growth_matches_fig1_band() {
+        // Fig. 1: 5-7x growth over the window
+        for s in [GrowthScenario::recommendation(), GrowthScenario::other_ml()] {
+            let ratio = s.demand_at(s.quarters) / s.demand_at(0);
+            assert!(ratio > 4.5 && ratio < 7.5, "{}: {ratio}", s.name);
+        }
+    }
+
+    #[test]
+    fn accel_needs_fewer_servers() {
+        let cfg = Config::default();
+        let pts = capacity_series(ModelId::RecsysComplex, &GrowthScenario::recommendation(), &cfg)
+            .unwrap();
+        for p in &pts {
+            assert!(p.accel_servers <= p.cpu_servers, "{p:?}");
+        }
+        // normalized growth identical (same demand curve)
+        let last = pts.last().unwrap();
+        assert!((last.cpu_norm - last.accel_norm).abs() / last.cpu_norm < 0.2);
+    }
+
+    #[test]
+    fn series_monotone() {
+        let cfg = Config::default();
+        let pts =
+            capacity_series(ModelId::XlmR, &GrowthScenario::other_ml(), &cfg).unwrap();
+        for w in pts.windows(2) {
+            assert!(w[1].demand_qps > w[0].demand_qps);
+            assert!(w[1].accel_servers >= w[0].accel_servers);
+        }
+    }
+
+    #[test]
+    fn power_savings_positive_for_complex_models() {
+        let cfg = Config::default();
+        let pts = capacity_series(ModelId::RegNetY, &GrowthScenario::other_ml(), &cfg).unwrap();
+        assert!(power_savings(&pts, &cfg) > 0.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Resource allocation: Accel Cores per co-resident partition (§VI-B).
+//!
+//! On each card of the recsys deployment an SLS shard and a dense replica
+//! run concurrently; the compiler sweeps the (small) space of core splits
+//! and picks the one balancing their runtimes — the paper lands on 1-in-3
+//! cores for SLS. Because requests pipeline (Fig. 6 right), steady-state
+//! throughput is set by max(sls_time, dense_time).
+
+use crate::compiler::parallelize::ParallelPlan;
+use crate::compiler::partition::{Partition, PartitionKind, Plan};
+use crate::compiler::placement::schedule;
+use crate::graph::Graph;
+use crate::platform::CardSpec;
+
+/// One point of the allocation sweep.
+#[derive(Debug, Clone)]
+pub struct AllocPoint {
+    pub sls_cores: usize,
+    pub dense_cores: usize,
+    pub sls_time_s: f64,
+    pub dense_time_s: f64,
+    /// pipelined steady-state time per batch.
+    pub stage_time_s: f64,
+}
+
+/// Result of the sweep.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub points: Vec<AllocPoint>,
+    pub best: AllocPoint,
+}
+
+/// Sweep core allocations for a card hosting `sls` and `dense` partitions.
+pub fn sweep_cores(
+    g: &Graph,
+    sls: &Partition,
+    dense: &Partition,
+    plan: &ParallelPlan,
+    card: &CardSpec,
+    use_hints: bool,
+) -> Allocation {
+    assert_eq!(sls.kind, PartitionKind::Sls);
+    let total = card.accel_cores;
+    let mut points = Vec::new();
+    for sls_cores in 1..total {
+        let dense_cores = total - sls_cores;
+        let s = schedule(g, &sls.nodes, plan, card, sls_cores, use_hints);
+        let d = schedule(g, &dense.nodes, plan, card, dense_cores, use_hints);
+        points.push(AllocPoint {
+            sls_cores,
+            dense_cores,
+            sls_time_s: s.makespan_s,
+            dense_time_s: d.makespan_s,
+            stage_time_s: s.makespan_s.max(d.makespan_s),
+        });
+    }
+    let best = points
+        .iter()
+        .min_by(|a, b| a.stage_time_s.partial_cmp(&b.stage_time_s).unwrap())
+        .cloned()
+        .expect("non-empty sweep");
+    Allocation { points, best }
+}
+
+/// Convenience: run the sweep for the first SLS partition of a plan.
+pub fn sweep_plan(
+    g: &Graph,
+    plan: &Plan,
+    ppar: &ParallelPlan,
+    card: &CardSpec,
+    use_hints: bool,
+) -> Option<Allocation> {
+    let sls = plan.partitions.iter().find(|p| p.kind == PartitionKind::Sls)?;
+    let dense = plan.dense_partition()?;
+    Some(sweep_cores(g, sls, dense, ppar, card, use_hints))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::parallelize::parallelize;
+    use crate::compiler::partition::partition_recsys;
+    use crate::config::CompilerConfig;
+    use crate::graph::models::ModelId;
+    use crate::platform::NodeSpec;
+
+    #[test]
+    fn sweep_finds_interior_balance() {
+        let g = ModelId::RecsysComplex.build();
+        let node = NodeSpec::default();
+        let cfg = CompilerConfig::default();
+        let plan = partition_recsys(&g, &cfg, &node).unwrap();
+        let ppar = parallelize(&g, &node.card, true);
+        let alloc = sweep_plan(&g, &plan, &ppar, &node.card, true).unwrap();
+        // the best split gives SLS a minority of cores (paper: 1 in 3)
+        let frac = alloc.best.sls_cores as f64 / node.card.accel_cores as f64;
+        assert!(frac <= 0.5, "sls fraction {frac}");
+        assert!(alloc.best.sls_cores >= 1);
+        // sweep covers all splits
+        assert_eq!(alloc.points.len(), node.card.accel_cores - 1);
+    }
+
+    #[test]
+    fn best_is_min_stage_time() {
+        let g = ModelId::RecsysBase.build();
+        let node = NodeSpec::default();
+        let plan = partition_recsys(&g, &CompilerConfig::default(), &node).unwrap();
+        let ppar = parallelize(&g, &node.card, true);
+        let alloc = sweep_plan(&g, &plan, &ppar, &node.card, true).unwrap();
+        for p in &alloc.points {
+            assert!(alloc.best.stage_time_s <= p.stage_time_s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn stage_time_is_max_of_parts() {
+        let g = ModelId::RecsysBase.build();
+        let node = NodeSpec::default();
+        let plan = partition_recsys(&g, &CompilerConfig::default(), &node).unwrap();
+        let ppar = parallelize(&g, &node.card, true);
+        let alloc = sweep_plan(&g, &plan, &ppar, &node.card, true).unwrap();
+        for p in &alloc.points {
+            assert!((p.stage_time_s - p.sls_time_s.max(p.dense_time_s)).abs() < 1e-15);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Glow-like compiler (§IV-C): graph optimization → quantization →
+//! partitioning → parallelization → placement, driven by [`compile`].
+//!
+//! The output [`CompiledModel`] is what the simulator executes and what the
+//! `fbia compile-report` CLI prints.
+
+pub mod alloc;
+pub mod optimize;
+pub mod parallelize;
+pub mod partition;
+pub mod perf_model;
+pub mod placement;
+pub mod quantize;
+
+use crate::config::Config;
+use crate::graph::Graph;
+use anyhow::Result;
+use parallelize::ParallelPlan;
+use partition::{PartitionKind, Plan};
+use placement::Schedule;
+
+/// A fully compiled model: optimized graph + multi-card plan + per-partition
+/// schedules + the decisions taken along the way.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub graph: Graph,
+    pub plan: Plan,
+    pub parallel: ParallelPlan,
+    /// schedule per partition id (host partitions have no card schedule).
+    pub schedules: Vec<Option<Schedule>>,
+    pub opt_stats: optimize::OptStats,
+    pub quant_report: Option<quantize::QuantReport>,
+    /// chosen SLS core allocation (recsys only).
+    pub sls_cores: Option<usize>,
+}
+
+/// Run the full pipeline on `g` under `cfg`.
+pub fn compile(g: &Graph, cfg: &Config) -> Result<CompiledModel> {
+    // 1. graph optimizations (§IV-C)
+    let (g1, opt_stats) = if cfg.compiler.graph_optimize {
+        optimize::optimize(g)
+    } else {
+        (g.clone(), optimize::OptStats::default())
+    };
+
+    // 2. quantization (§V-B)
+    let (g2, quant_report) = if cfg.compiler.quantize_int8 {
+        let (q, r) = quantize::quantize(&g1, quantize::DEFAULT_ERROR_BUDGET);
+        (q, Some(r))
+    } else {
+        (g1, None)
+    };
+
+    // 3. multi-card partitioning (§VI-B)
+    let plan = partition::partition(&g2, &cfg.compiler, &cfg.node)?;
+
+    // 4. op parallelization (§VI-B)
+    let parallel = parallelize::parallelize(&g2, &cfg.node.card, cfg.compiler.parallelize);
+
+    // 5. core allocation for co-resident partitions (recsys; §VI-B)
+    let has_sls = plan.partitions.iter().any(|p| p.kind == PartitionKind::Sls);
+    let sls_cores = if has_sls {
+        let cores = cfg.node.card.accel_cores;
+        let from_cfg = ((cores as f64) * cfg.compiler.sls_core_fraction).round() as usize;
+        Some(from_cfg.clamp(1, cores - 1))
+    } else {
+        None
+    };
+
+    // 6. placement per partition (§VI-B)
+    let cores = cfg.node.card.accel_cores;
+    let schedules = plan
+        .partitions
+        .iter()
+        .map(|p| match p.kind {
+            PartitionKind::Host => None,
+            PartitionKind::Sls => Some(placement::schedule(
+                &g2,
+                &p.nodes,
+                &parallel,
+                &cfg.node.card,
+                sls_cores.unwrap_or(cores),
+                cfg.compiler.placement_hints,
+            )),
+            PartitionKind::Dense => Some(placement::schedule(
+                &g2,
+                &p.nodes,
+                &parallel,
+                &cfg.node.card,
+                cores - sls_cores.unwrap_or(0),
+                cfg.compiler.placement_hints,
+            )),
+            PartitionKind::Full => Some(placement::schedule(
+                &g2,
+                &p.nodes,
+                &parallel,
+                &cfg.node.card,
+                cores,
+                cfg.compiler.placement_hints,
+            )),
+        })
+        .collect();
+
+    Ok(CompiledModel {
+        graph: g2,
+        plan,
+        parallel,
+        schedules,
+        opt_stats,
+        quant_report,
+        sls_cores,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::graph::models::ModelId;
+
+    #[test]
+    fn compile_all_models() {
+        let cfg = Config::default();
+        for id in ModelId::ALL {
+            let g = id.build();
+            let c = compile(&g, &cfg).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            assert_eq!(c.schedules.len(), c.plan.partitions.len());
+            for (p, s) in c.plan.partitions.iter().zip(&c.schedules) {
+                match p.kind {
+                    PartitionKind::Host => assert!(s.is_none()),
+                    _ => assert!(s.is_some(), "{} partition {}", g.name, p.id),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recsys_gets_sls_core_allocation() {
+        let cfg = Config::default();
+        let c = compile(&ModelId::RecsysBase.build(), &cfg).unwrap();
+        let cores = cfg.node.card.accel_cores;
+        // 1-in-3 of 12 cores = 4
+        assert_eq!(c.sls_cores, Some((cores as f64 / 3.0).round() as usize));
+    }
+
+    #[test]
+    fn cv_has_no_sls_allocation() {
+        let cfg = Config::default();
+        let c = compile(&ModelId::ResNeXt101.build(), &cfg).unwrap();
+        assert_eq!(c.sls_cores, None);
+    }
+
+    #[test]
+    fn quantization_disabled_respected() {
+        let mut cfg = Config::default();
+        cfg.compiler.quantize_int8 = false;
+        let c = compile(&ModelId::XlmR.build(), &cfg).unwrap();
+        assert!(c.quant_report.is_none());
+    }
+}

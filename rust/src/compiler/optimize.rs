@@ -1,0 +1,378 @@
+//! Graph-level optimizations (§IV-C): common-subexpression elimination,
+//! conversion elimination, dead-code elimination, and the fusions the paper
+//! calls out (Conv+Add → Fused Conv_Add; Dequantize+Swish+Quantize;
+//! SLS + LayerNorm is recognized but kept as a fusion *marker* since the
+//! vendor level owns it).
+
+use crate::graph::ops::OpKind;
+use crate::graph::{Graph, NodeId, TensorKind};
+use std::collections::HashMap;
+
+/// Statistics from one optimize() run — surfaced in `fbia compile-report`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OptStats {
+    pub cse_removed: usize,
+    pub conversions_removed: usize,
+    pub dead_removed: usize,
+    pub conv_add_fused: usize,
+    pub quant_chains_fused: usize,
+}
+
+/// Run all graph optimizations; returns the rewritten graph and stats.
+pub fn optimize(g: &Graph) -> (Graph, OptStats) {
+    let mut stats = OptStats::default();
+    let g = cse(g, &mut stats);
+    let g = eliminate_conversions(&g, &mut stats);
+    let g = fuse_conv_add(&g, &mut stats);
+    let g = fuse_quant_chains(&g, &mut stats);
+    let g = dce(&g, &mut stats);
+    (g, stats)
+}
+
+/// Common-subexpression elimination: nodes with identical kind+inputs merge.
+fn cse(g: &Graph, stats: &mut OptStats) -> Graph {
+    let mut seen: HashMap<String, NodeId> = HashMap::new();
+    // tensor substitution map: duplicate node outputs -> canonical outputs
+    let mut subst: HashMap<usize, usize> = HashMap::new();
+    let order = g.topo_order().expect("valid graph");
+    let mut keep: Vec<bool> = vec![true; g.nodes.len()];
+    for &nid in &order {
+        let n = &g.nodes[nid];
+        // rewrite inputs through current substitution before keying
+        let inputs: Vec<usize> =
+            n.inputs.iter().map(|i| *subst.get(i).unwrap_or(i)).collect();
+        let key = format!("{:?}|{:?}", n.kind, inputs);
+        if let Some(&canon) = seen.get(&key) {
+            // redirect this node's outputs to the canonical node's outputs
+            for (dup, orig) in n.outputs.iter().zip(&g.nodes[canon].outputs) {
+                // never eliminate graph outputs (they must stay produced)
+                if g.tensor(*dup).kind == TensorKind::Output {
+                    continue;
+                }
+                subst.insert(*dup, *orig);
+            }
+            // only drop the node if all its outputs were redirected
+            if n.outputs.iter().all(|o| subst.contains_key(o)) {
+                keep[nid] = false;
+                stats.cse_removed += 1;
+            }
+        } else {
+            seen.insert(key, nid);
+        }
+    }
+    rebuild(g, &keep, &subst)
+}
+
+/// Remove ConvertTo chains that cancel (f16->f32->f16) and conversions whose
+/// input already has the output dtype.
+fn eliminate_conversions(g: &Graph, stats: &mut OptStats) -> Graph {
+    let producers = g.producers();
+    let mut keep = vec![true; g.nodes.len()];
+    let mut subst: HashMap<usize, usize> = HashMap::new();
+    for n in &g.nodes {
+        if n.kind != OpKind::ConvertTo {
+            continue;
+        }
+        let src = n.inputs[0];
+        let dst = n.outputs[0];
+        if g.tensor(dst).kind == TensorKind::Output {
+            continue;
+        }
+        // identity conversion
+        if g.tensor(src).dtype == g.tensor(dst).dtype {
+            keep[n.id] = false;
+            subst.insert(dst, src);
+            stats.conversions_removed += 1;
+            continue;
+        }
+        // cancelling chain: producer of src is also a ConvertTo from dst's dtype
+        if let Some(p) = producers[src] {
+            let pn = &g.nodes[p];
+            if pn.kind == OpKind::ConvertTo
+                && g.tensor(pn.inputs[0]).dtype == g.tensor(dst).dtype
+            {
+                keep[n.id] = false;
+                subst.insert(dst, pn.inputs[0]);
+                stats.conversions_removed += 1;
+            }
+        }
+    }
+    rebuild(g, &keep, &subst)
+}
+
+/// Fuse Conv directly followed by a single-consumer Add into ConvAddFused
+/// (Table II "Fused Conv_Add"; the §II-D fusion requirement).
+fn fuse_conv_add(g: &Graph, stats: &mut OptStats) -> Graph {
+    let consumers = g.consumers();
+    let mut out = g.clone();
+    let mut keep = vec![true; g.nodes.len()];
+    let mut subst: HashMap<usize, usize> = HashMap::new();
+    for n in &g.nodes {
+        let (groups, stride, kh, kw, quantized) = match n.kind {
+            OpKind::Conv { groups, stride, kh, kw, quantized } => (groups, stride, kh, kw, quantized),
+            _ => continue,
+        };
+        let conv_out = n.outputs[0];
+        if g.tensor(conv_out).kind == TensorKind::Output {
+            continue;
+        }
+        let cons = &consumers[conv_out];
+        if cons.len() != 1 {
+            continue;
+        }
+        let add = &g.nodes[cons[0]];
+        if add.kind != OpKind::Add || !keep[add.id] {
+            continue;
+        }
+        // fold: conv inherits the add's other input and output
+        let other: Vec<usize> = add.inputs.iter().copied().filter(|&t| t != conv_out).collect();
+        let fused = &mut out.nodes[n.id];
+        fused.kind = OpKind::ConvAddFused { groups, stride, kh, kw, quantized };
+        fused.inputs.extend(other);
+        fused.outputs = add.outputs.clone();
+        keep[add.id] = false;
+        subst.insert(conv_out, add.outputs[0]);
+        stats.conv_add_fused += 1;
+    }
+    rebuild(&out, &keep, &HashMap::new())
+}
+
+/// Fuse Dequantize → {Swish|Gelu|Relu|Sigmoid} → Quantize chains into the
+/// middle op (the card executes the activation in the quantized domain).
+fn fuse_quant_chains(g: &Graph, stats: &mut OptStats) -> Graph {
+    let producers = g.producers();
+    let consumers = g.consumers();
+    let mut keep = vec![true; g.nodes.len()];
+    let mut out = g.clone();
+    for n in &g.nodes {
+        if !matches!(n.kind, OpKind::Swish | OpKind::Gelu | OpKind::Relu | OpKind::Sigmoid) {
+            continue;
+        }
+        let Some(pid) = producers[n.inputs[0]] else { continue };
+        if g.nodes[pid].kind != OpKind::Dequantize || !keep[pid] {
+            continue;
+        }
+        let act_out = n.outputs[0];
+        let cons = &consumers[act_out];
+        if cons.len() != 1 || g.nodes[cons[0]].kind != OpKind::Quantize || !keep[cons[0]] {
+            continue;
+        }
+        let qid = cons[0];
+        if g.tensor(g.nodes[qid].outputs[0]).kind == TensorKind::Output
+            && g.tensor(act_out).kind == TensorKind::Output
+        {
+            continue;
+        }
+        // the activation now consumes the quantized input and produces the
+        // quantized output directly
+        let deq_in = g.nodes[pid].inputs[0];
+        let q_out = g.nodes[qid].outputs[0];
+        let act = &mut out.nodes[n.id];
+        act.inputs = vec![deq_in];
+        act.outputs = vec![q_out];
+        keep[pid] = false;
+        keep[qid] = false;
+        stats.quant_chains_fused += 1;
+    }
+    rebuild(&out, &keep, &HashMap::new())
+}
+
+/// Dead-code elimination: drop nodes whose outputs nothing consumes and that
+/// produce no graph Output.
+fn dce(g: &Graph, stats: &mut OptStats) -> Graph {
+    let consumers = g.consumers();
+    let mut keep = vec![true; g.nodes.len()];
+    // iterate to fixpoint (chains of dead nodes)
+    loop {
+        let mut changed = false;
+        for n in &g.nodes {
+            if !keep[n.id] {
+                continue;
+            }
+            let live = n.outputs.iter().any(|&o| {
+                g.tensor(o).kind == TensorKind::Output
+                    || consumers[o].iter().any(|&c| keep[c])
+            });
+            if !live {
+                keep[n.id] = false;
+                stats.dead_removed += 1;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    rebuild(g, &keep, &HashMap::new())
+}
+
+/// Rebuild a graph keeping only flagged nodes, applying a tensor
+/// substitution to inputs, and dropping now-unreferenced tensors.
+fn rebuild(g: &Graph, keep: &[bool], subst: &HashMap<usize, usize>) -> Graph {
+    let mut out = Graph::new(&g.name);
+    // resolve substitution chains
+    let resolve = |mut t: usize| {
+        let mut hops = 0;
+        while let Some(&n) = subst.get(&t) {
+            t = n;
+            hops += 1;
+            if hops > g.tensors.len() {
+                break;
+            }
+        }
+        t
+    };
+    // find referenced tensors
+    let mut used: Vec<bool> = vec![false; g.tensors.len()];
+    for n in &g.nodes {
+        if !keep[n.id] {
+            continue;
+        }
+        for &i in &n.inputs {
+            used[resolve(i)] = true;
+        }
+        for &o in &n.outputs {
+            used[o] = true;
+        }
+    }
+    let mut remap: Vec<Option<usize>> = vec![None; g.tensors.len()];
+    for t in &g.tensors {
+        if used[t.id] || t.kind == TensorKind::Output {
+            let nid = out.add_tensor(&t.name, t.shape.clone(), t.dtype, t.kind);
+            remap[t.id] = Some(nid);
+        }
+    }
+    for n in &g.nodes {
+        if !keep[n.id] {
+            continue;
+        }
+        let ins: Vec<usize> =
+            n.inputs.iter().map(|&i| remap[resolve(i)].expect("used input")).collect();
+        let outs: Vec<usize> =
+            n.outputs.iter().map(|&o| remap[o].expect("used output")).collect();
+        out.add_node(&n.name, n.kind, ins, outs);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Shape};
+
+    fn act(g: &mut Graph, name: &str, dims: &[usize]) -> usize {
+        g.add_tensor(name, Shape::new(dims), DType::F32, TensorKind::Activation)
+    }
+
+    #[test]
+    fn cse_merges_identical_nodes() {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor("x", Shape::new(&[4]), DType::F32, TensorKind::Input);
+        let a = act(&mut g, "a", &[4]);
+        let b = act(&mut g, "b", &[4]);
+        g.add_node("r1", OpKind::Relu, vec![x], vec![a]);
+        g.add_node("r2", OpKind::Relu, vec![x], vec![b]);
+        let o = g.add_tensor("o", Shape::new(&[4]), DType::F32, TensorKind::Output);
+        g.add_node("add", OpKind::Add, vec![a, b], vec![o]);
+        let (opt, stats) = optimize(&g);
+        assert_eq!(stats.cse_removed, 1);
+        assert_eq!(opt.nodes.len(), 2);
+        opt.validate().unwrap();
+    }
+
+    #[test]
+    fn cancelling_conversions_removed() {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor("x", Shape::new(&[4]), DType::F16, TensorKind::Input);
+        let up = g.add_tensor("up", Shape::new(&[4]), DType::F32, TensorKind::Activation);
+        let down = g.add_tensor("down", Shape::new(&[4]), DType::F16, TensorKind::Activation);
+        g.add_node("c1", OpKind::ConvertTo, vec![x], vec![up]);
+        g.add_node("c2", OpKind::ConvertTo, vec![up], vec![down]);
+        let o = g.add_tensor("o", Shape::new(&[4]), DType::F16, TensorKind::Output);
+        g.add_node("relu", OpKind::Relu, vec![down], vec![o]);
+        let (opt, stats) = optimize(&g);
+        assert!(stats.conversions_removed >= 1, "{stats:?}");
+        assert!(opt.nodes.len() <= 2);
+        opt.validate().unwrap();
+    }
+
+    #[test]
+    fn conv_add_fusion() {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor("x", Shape::new(&[1, 8, 8, 16]), DType::F32, TensorKind::Input);
+        let w = g.add_tensor("w", Shape::new(&[3, 3, 16, 16]), DType::I8, TensorKind::Weight);
+        let y = act(&mut g, "y", &[1, 8, 8, 16]);
+        g.add_node(
+            "conv",
+            OpKind::Conv { groups: 1, stride: 1, kh: 3, kw: 3, quantized: true },
+            vec![x, w],
+            vec![y],
+        );
+        let o = g.add_tensor("o", Shape::new(&[1, 8, 8, 16]), DType::F32, TensorKind::Output);
+        g.add_node("add", OpKind::Add, vec![y, x], vec![o]);
+        let (opt, stats) = optimize(&g);
+        assert_eq!(stats.conv_add_fused, 1);
+        assert_eq!(opt.nodes.len(), 1);
+        assert!(matches!(opt.nodes[0].kind, OpKind::ConvAddFused { .. }));
+        opt.validate().unwrap();
+    }
+
+    #[test]
+    fn dequant_swish_quant_fusion() {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor("x", Shape::new(&[8]), DType::I8, TensorKind::Input);
+        let d = act(&mut g, "d", &[8]);
+        g.add_node("dq", OpKind::Dequantize, vec![x], vec![d]);
+        let s = act(&mut g, "s", &[8]);
+        g.add_node("swish", OpKind::Swish, vec![d], vec![s]);
+        let q = g.add_tensor("q", Shape::new(&[8]), DType::I8, TensorKind::Activation);
+        g.add_node("qz", OpKind::Quantize, vec![s], vec![q]);
+        let o = g.add_tensor("o", Shape::new(&[8]), DType::I8, TensorKind::Output);
+        g.add_node("relu", OpKind::Relu, vec![q], vec![o]);
+        let (opt, stats) = optimize(&g);
+        assert_eq!(stats.quant_chains_fused, 1);
+        assert!(opt.nodes.len() == 2, "{:?}", opt.nodes);
+        opt.validate().unwrap();
+    }
+
+    #[test]
+    fn dce_removes_dead_chain() {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor("x", Shape::new(&[4]), DType::F32, TensorKind::Input);
+        let dead1 = act(&mut g, "d1", &[4]);
+        let dead2 = act(&mut g, "d2", &[4]);
+        g.add_node("n1", OpKind::Relu, vec![x], vec![dead1]);
+        g.add_node("n2", OpKind::Relu, vec![dead1], vec![dead2]);
+        let o = g.add_tensor("o", Shape::new(&[4]), DType::F32, TensorKind::Output);
+        g.add_node("keep", OpKind::Relu, vec![x], vec![o]);
+        let (opt, stats) = optimize(&g);
+        // CSE may fold n1 into keep before DCE runs; either way the dead
+        // chain disappears and only the live node remains.
+        assert!(stats.dead_removed + stats.cse_removed >= 2, "{stats:?}");
+        assert_eq!(opt.nodes.len(), 1);
+        opt.validate().unwrap();
+    }
+
+    #[test]
+    fn optimize_idempotent_on_clean_graph() {
+        let g = crate::graph::models::ModelId::XlmR.build();
+        let (o1, _) = optimize(&g);
+        let (o2, s2) = optimize(&o1);
+        assert_eq!(o1.nodes.len(), o2.nodes.len());
+        assert_eq!(s2.cse_removed + s2.conversions_removed + s2.dead_removed, 0, "{s2:?}");
+    }
+
+    #[test]
+    fn optimize_preserves_model_outputs() {
+        for id in crate::graph::models::ModelId::ALL {
+            let g = id.build();
+            let (o, _) = optimize(&g);
+            o.validate().unwrap();
+            let outs_before =
+                g.tensors.iter().filter(|t| t.kind == TensorKind::Output).count();
+            let outs_after =
+                o.tensors.iter().filter(|t| t.kind == TensorKind::Output).count();
+            assert_eq!(outs_before, outs_after, "{}", g.name);
+        }
+    }
+}

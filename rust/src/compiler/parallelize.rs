@@ -1,0 +1,148 @@
+//! Op-splitting parallelization (§VI-B "Parallelization and placement").
+//!
+//! When a partition doesn't expose enough independent ops to fill the Accel
+//! Cores, Glow splits individual ops. The heuristic follows the paper's
+//! description — split by op type, dimensions, and predecessors: Matrix ops
+//! split along their largest data-parallel dim until they are memory-bound
+//! (no point splitting past the roofline) or the core count is reached.
+//!
+//! We keep splits as a plan (node → split count) consumed by the list
+//! scheduler and the simulator, rather than physically rewriting the graph —
+//! equivalent for timing, and it keeps the IR small.
+
+use crate::compiler::perf_model::{op_cost, OpCost};
+use crate::graph::ops::{Engine, OpKind};
+use crate::graph::{Graph, NodeId};
+use crate::platform::CardSpec;
+
+/// Split decisions per node.
+#[derive(Debug, Clone)]
+pub struct ParallelPlan {
+    pub splits: Vec<usize>,
+    pub costs: Vec<OpCost>,
+}
+
+impl ParallelPlan {
+    /// No-parallelization baseline (every op on one core).
+    pub fn sequential(g: &Graph, card: &CardSpec) -> ParallelPlan {
+        let costs = g.nodes.iter().map(|n| op_cost(g, n, card, false)).collect();
+        ParallelPlan { splits: vec![1; g.nodes.len()], costs }
+    }
+
+    pub fn split_of(&self, n: NodeId) -> usize {
+        self.splits[n]
+    }
+}
+
+/// Maximum split supported by the op's shape (outer data-parallel dim).
+fn max_split(g: &Graph, nid: NodeId) -> usize {
+    let n = &g.nodes[nid];
+    match n.kind {
+        OpKind::Fc | OpKind::QuantizedFc | OpKind::MatMul => {
+            // split along output features
+            g.tensor(n.outputs[0]).shape.0.last().copied().unwrap_or(1)
+        }
+        OpKind::BatchMatMul => g.tensor(n.inputs[0]).shape.dim(0),
+        OpKind::Conv { .. } | OpKind::ConvAddFused { .. } => {
+            // split along output channels
+            g.tensor(n.outputs[0]).shape.0.last().copied().unwrap_or(1)
+        }
+        OpKind::Conv3D { .. } => g.tensor(n.outputs[0]).shape.0.last().copied().unwrap_or(1),
+        OpKind::SparseLengthsSum { .. } | OpKind::SparseLengthsSumSingle => {
+            // split along the batch dimension
+            g.tensor(n.outputs[0]).shape.dim(0)
+        }
+        _ => 1,
+    }
+}
+
+/// Compute the parallelization plan for one card.
+pub fn parallelize(g: &Graph, card: &CardSpec, enabled: bool) -> ParallelPlan {
+    let costs: Vec<OpCost> = g.nodes.iter().map(|n| op_cost(g, n, card, false)).collect();
+    if !enabled {
+        return ParallelPlan { splits: vec![1; g.nodes.len()], costs };
+    }
+    let splits = g
+        .nodes
+        .iter()
+        .map(|n| {
+            if n.kind.engine() != Engine::Matrix
+                && !matches!(n.kind, OpKind::SparseLengthsSum { .. })
+            {
+                return 1;
+            }
+            let c = &costs[n.id];
+            // don't split ops that are already trivial
+            if c.compute_1core_s < 4.0 * crate::compiler::perf_model::OP_OVERHEAD_S {
+                return 1;
+            }
+            card.accel_cores
+                .min(c.saturation_cores())
+                .min(max_split(g, n.id))
+                .max(1)
+        })
+        .collect();
+    ParallelPlan { splits, costs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::{ModelId, XlmrSpec};
+
+    #[test]
+    fn big_matmuls_split_small_ops_dont() {
+        let g = crate::graph::models::xlmr(&XlmrSpec::paper(), 1, 64);
+        let card = CardSpec::default();
+        let plan = parallelize(&g, &card, true);
+        let mut split_some = false;
+        for n in &g.nodes {
+            match n.kind {
+                OpKind::MatMul => {
+                    if plan.split_of(n.id) > 1 {
+                        split_some = true;
+                    }
+                }
+                OpKind::Add | OpKind::Softmax | OpKind::LayerNorm => {
+                    assert_eq!(plan.split_of(n.id), 1, "{}", n.name);
+                }
+                _ => {}
+            }
+        }
+        assert!(split_some);
+    }
+
+    #[test]
+    fn disabled_gives_all_ones() {
+        let g = ModelId::XlmR.build();
+        let plan = parallelize(&g, &CardSpec::default(), false);
+        assert!(plan.splits.iter().all(|&s| s == 1));
+    }
+
+    #[test]
+    fn splits_bounded_by_cores_and_shape() {
+        let g = ModelId::RecsysComplex.build();
+        let card = CardSpec::default();
+        let plan = parallelize(&g, &card, true);
+        for n in &g.nodes {
+            let s = plan.split_of(n.id);
+            assert!(s >= 1 && s <= card.accel_cores, "{}: {s}", n.name);
+            assert!(s <= max_split(&g, n.id).max(1), "{}", n.name);
+        }
+    }
+
+    #[test]
+    fn memory_bound_ops_not_oversplit() {
+        // SLS is memory-bound: splitting past saturation gains nothing, the
+        // heuristic must cap at saturation_cores
+        let g = ModelId::RecsysBase.build();
+        let card = CardSpec::default();
+        let plan = parallelize(&g, &card, true);
+        for n in &g.nodes {
+            if matches!(n.kind, OpKind::SparseLengthsSum { .. }) {
+                let c = &plan.costs[n.id];
+                assert!(plan.split_of(n.id) <= c.saturation_cores().max(1));
+            }
+        }
+    }
+}

@@ -1,0 +1,516 @@
+//! Multi-card model partitioner (§VI-B, Fig. 6).
+//!
+//! Recommendation models: embedding tables are *model-parallel* across the
+//! SLS cards (they don't fit one card's 16 GB), dense compute is
+//! *data-parallel* on the remaining cards; pooled embeddings travel card→
+//! card over PCIe (P2P after §VI-C). CV/NLP models fit a single card and are
+//! replicated data-parallel. Host-only ops (NMS, ROIAlign) stay on the CPU.
+
+use crate::config::CompilerConfig;
+use crate::graph::ops::OpKind;
+use crate::graph::{Graph, NodeId, TensorKind};
+use crate::platform::NodeSpec;
+use anyhow::{bail, Result};
+
+/// What a partition does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// embedding lookups for a shard of tables (model parallel)
+    Sls,
+    /// dense compute (data-parallel replicas)
+    Dense,
+    /// whole model on one card (CV/NLP)
+    Full,
+    /// ops kept on the host CPU (§VI-A)
+    Host,
+}
+
+/// One partition of the net.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub id: usize,
+    pub kind: PartitionKind,
+    /// card index; None = host CPU.
+    pub card: Option<usize>,
+    pub nodes: Vec<NodeId>,
+    /// bytes of weights resident on this partition's device.
+    pub weight_bytes: usize,
+    /// profiled lookup load (for SLS balance diagnostics).
+    pub lookup_load: f64,
+}
+
+/// A cross-partition tensor transfer per request.
+#[derive(Debug, Clone)]
+pub struct CrossTransfer {
+    pub from: usize,
+    pub to: usize,
+    pub bytes: usize,
+    pub tensor: String,
+}
+
+/// The partitioning plan for one model.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub model: String,
+    pub partitions: Vec<Partition>,
+    /// how many data-parallel replicas the Dense/Full partition has.
+    pub replicas: usize,
+    pub transfers: Vec<CrossTransfer>,
+}
+
+impl Plan {
+    pub fn sls_partitions(&self) -> impl Iterator<Item = &Partition> {
+        self.partitions.iter().filter(|p| p.kind == PartitionKind::Sls)
+    }
+
+    pub fn dense_partition(&self) -> Option<&Partition> {
+        self.partitions
+            .iter()
+            .find(|p| matches!(p.kind, PartitionKind::Dense | PartitionKind::Full))
+    }
+
+    /// Verify plan invariants (also exercised by property tests):
+    /// every non-host node in exactly one partition, host ops on host,
+    /// per-card weights within LPDDR capacity.
+    pub fn check(&self, g: &Graph, node: &NodeSpec) -> Result<()> {
+        let mut owner = vec![0usize; g.nodes.len()];
+        for p in &self.partitions {
+            for &n in &p.nodes {
+                owner[n] += 1;
+                if g.nodes[n].kind.host_only() != (p.card.is_none()) {
+                    bail!("node {} placement violates host rule", g.nodes[n].name);
+                }
+            }
+        }
+        for (nid, &c) in owner.iter().enumerate() {
+            if c != 1 {
+                bail!("node {} assigned {} times", g.nodes[nid].name, c);
+            }
+        }
+        for p in &self.partitions {
+            if p.card.is_some() && p.weight_bytes > node.card.lpddr_bytes {
+                bail!(
+                    "partition {} weights {} exceed card LPDDR {}",
+                    p.id,
+                    p.weight_bytes,
+                    node.card.lpddr_bytes
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Weight bytes attached to a node (its Weight-kind inputs).
+fn node_weight_bytes(g: &Graph, nid: NodeId) -> usize {
+    g.nodes[nid]
+        .inputs
+        .iter()
+        .filter(|&&t| g.tensor(t).kind == TensorKind::Weight)
+        .map(|&t| g.tensor(t).bytes())
+        .sum()
+}
+
+/// Partition a model across the node.
+pub fn partition(g: &Graph, cfg: &CompilerConfig, node: &NodeSpec) -> Result<Plan> {
+    let has_sls = g
+        .nodes
+        .iter()
+        .any(|n| matches!(n.kind, OpKind::SparseLengthsSum { .. } | OpKind::SparseLengthsSumSingle));
+    let total_weights = g.weight_bytes();
+    if has_sls && total_weights > node.card.lpddr_bytes {
+        partition_recsys(g, cfg, node)
+    } else {
+        partition_single_card(g, node)
+    }
+}
+
+/// Fig. 6 scheme: SLS model-parallel + dense data-parallel.
+///
+/// Per the paper, every card carries an SLS shard *and* a dense replica; a
+/// subset of each card's Accel Cores serves SLS, the rest dense (the 1-in-3
+/// split of §VI-B, swept by [`crate::compiler::alloc`]). `cfg.sls_cards`
+/// restricts the shard spread for ablations (default: all cards).
+pub fn partition_recsys(g: &Graph, cfg: &CompilerConfig, node: &NodeSpec) -> Result<Plan> {
+    let sls_cards = cfg.sls_cards.min(node.cards).max(1);
+    let dense_cards = node.cards;
+
+    // collect SLS nodes with their weight + load
+    struct SlsItem {
+        nid: NodeId,
+        bytes: usize,
+        load: f64,
+    }
+    let mut items: Vec<SlsItem> = Vec::new();
+    let mut dense_nodes: Vec<NodeId> = Vec::new();
+    let mut host_nodes: Vec<NodeId> = Vec::new();
+    for n in &g.nodes {
+        match n.kind {
+            OpKind::SparseLengthsSum { avg_lookups } => {
+                let bytes = node_weight_bytes(g, n.id);
+                let batch = g.tensor(n.outputs[0]).shape.dim(0) as f64;
+                let dim = g.tensor(n.outputs[0]).shape.dim(1) as f64;
+                items.push(SlsItem { nid: n.id, bytes, load: avg_lookups * batch * dim });
+            }
+            OpKind::SparseLengthsSumSingle => {
+                let bytes = node_weight_bytes(g, n.id);
+                let batch = g.tensor(n.outputs[0]).shape.dim(0) as f64;
+                let dim = g.tensor(n.outputs[0]).shape.dim(1) as f64;
+                items.push(SlsItem { nid: n.id, bytes, load: batch * dim });
+            }
+            _ if n.kind.host_only() => host_nodes.push(n.id),
+            _ => dense_nodes.push(n.id),
+        }
+    }
+    if items.is_empty() {
+        bail!("partition_recsys called on a graph without SLS ops");
+    }
+
+    // Length-aware (§VI-B "Optimizing Sparse Lookups"): greedy balance on
+    // the profiled lookup load — sort descending and place each table on
+    // the least-loaded card with capacity. Naive baseline: contiguous
+    // table ranges balanced by byte size only, blind to lookup counts —
+    // "naive load balancing without the information".
+    let mut card_bytes = vec![0usize; sls_cards];
+    let mut card_load = vec![0f64; sls_cards];
+    let mut card_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); sls_cards];
+    if cfg.sls_length_aware {
+        items.sort_by(|a, b| b.load.partial_cmp(&a.load).unwrap());
+        for it in &items {
+            let mut best: Option<usize> = None;
+            for c in 0..sls_cards {
+                if card_bytes[c] + it.bytes > node.card.lpddr_bytes {
+                    continue;
+                }
+                if best.is_none() || card_load[c] < card_load[best.unwrap()] {
+                    best = Some(c);
+                }
+            }
+            let Some(c) = best else {
+                bail!(
+                    "embedding tables do not fit: {} cards x {} B",
+                    sls_cards,
+                    node.card.lpddr_bytes
+                )
+            };
+            card_bytes[c] += it.bytes;
+            card_load[c] += it.load;
+            card_nodes[c].push(it.nid);
+        }
+    } else {
+        // contiguous split in model order, target = equal bytes per card
+        let total_bytes: usize = items.iter().map(|i| i.bytes).sum();
+        let target = total_bytes.div_ceil(sls_cards);
+        let mut c = 0usize;
+        for it in &items {
+            if card_bytes[c] + it.bytes > target && c + 1 < sls_cards && !card_nodes[c].is_empty()
+            {
+                c += 1;
+            }
+            if card_bytes[c] + it.bytes > node.card.lpddr_bytes {
+                bail!(
+                    "embedding tables do not fit: {} cards x {} B",
+                    sls_cards,
+                    node.card.lpddr_bytes
+                );
+            }
+            card_bytes[c] += it.bytes;
+            card_load[c] += it.load;
+            card_nodes[c].push(it.nid);
+        }
+    }
+
+    let mut partitions = Vec::new();
+    for c in 0..sls_cards {
+        partitions.push(Partition {
+            id: partitions.len(),
+            kind: PartitionKind::Sls,
+            card: Some(c),
+            nodes: std::mem::take(&mut card_nodes[c]),
+            weight_bytes: card_bytes[c],
+            lookup_load: card_load[c],
+        });
+    }
+
+    // dense partition: replicated on every card (data parallel); weights
+    // must fit alongside the card's SLS shard
+    let dense_weights: usize = dense_nodes.iter().map(|&n| node_weight_bytes(g, n)).sum();
+    let dense_id = partitions.len();
+    partitions.push(Partition {
+        id: dense_id,
+        kind: PartitionKind::Dense,
+        card: Some(0), // canonical card; replicas on all cards
+        nodes: dense_nodes,
+        weight_bytes: dense_weights,
+        lookup_load: 0.0,
+    });
+    if !host_nodes.is_empty() {
+        partitions.push(Partition {
+            id: dense_id + 1,
+            kind: PartitionKind::Host,
+            card: None,
+            nodes: host_nodes,
+            weight_bytes: 0,
+            lookup_load: 0.0,
+        });
+    }
+
+    // per-request transfers: each SLS card ships its pooled outputs to the
+    // dense card (P2P candidates, §VI-C)
+    let mut transfers = Vec::new();
+    for p in &partitions {
+        if p.kind != PartitionKind::Sls {
+            continue;
+        }
+        let bytes: usize = p
+            .nodes
+            .iter()
+            .flat_map(|&n| g.nodes[n].outputs.iter())
+            .map(|&t| g.tensor(t).bytes())
+            .sum();
+        transfers.push(CrossTransfer {
+            from: p.id,
+            to: dense_id,
+            bytes,
+            tensor: format!("pooled_embeddings_card{}", p.card.unwrap()),
+        });
+    }
+
+    let plan = Plan {
+        model: g.name.clone(),
+        partitions,
+        replicas: dense_cards.max(1),
+        transfers,
+    };
+    plan.check(g, node)?;
+    Ok(plan)
+}
+
+/// CV/NLP: whole model on one card, replicated data-parallel (§VI-B).
+pub fn partition_single_card(g: &Graph, node: &NodeSpec) -> Result<Plan> {
+    let mut device_nodes = Vec::new();
+    let mut host_nodes = Vec::new();
+    for n in &g.nodes {
+        if n.kind.host_only() {
+            host_nodes.push(n.id);
+        } else {
+            device_nodes.push(n.id);
+        }
+    }
+    let weight_bytes = g.weight_bytes();
+    if weight_bytes > node.card.lpddr_bytes {
+        bail!("model {} does not fit one card and has no SLS split", g.name);
+    }
+    let mut partitions = vec![Partition {
+        id: 0,
+        kind: PartitionKind::Full,
+        card: Some(0),
+        nodes: device_nodes,
+        weight_bytes,
+        lookup_load: 0.0,
+    }];
+    let mut transfers = Vec::new();
+    if !host_nodes.is_empty() {
+        // host<->card boundary tensors
+        let host_set: std::collections::HashSet<_> = host_nodes.iter().copied().collect();
+        let mut bytes = 0usize;
+        for n in &g.nodes {
+            if !host_set.contains(&n.id) {
+                continue;
+            }
+            for &t in &n.inputs {
+                if g.tensor(t).kind == TensorKind::Activation {
+                    bytes += g.tensor(t).bytes();
+                }
+            }
+        }
+        partitions.push(Partition {
+            id: 1,
+            kind: PartitionKind::Host,
+            card: None,
+            nodes: host_nodes,
+            weight_bytes: 0,
+            lookup_load: 0.0,
+        });
+        transfers.push(CrossTransfer { from: 0, to: 1, bytes, tensor: "host_boundary".into() });
+    }
+    let plan = Plan { model: g.name.clone(), partitions, replicas: node.cards, transfers };
+    plan.check(g, node)?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompilerConfig;
+    use crate::graph::models::{dlrm, DlrmSpec, ModelId};
+    use crate::util::prop::{check, Gen, UsizeIn};
+    use crate::util::rng::Rng;
+
+    fn default_node() -> NodeSpec {
+        NodeSpec::default()
+    }
+
+    #[test]
+    fn recsys_uses_fig6_scheme() {
+        let g = ModelId::RecsysBase.build();
+        let cfg = CompilerConfig::default();
+        let plan = partition(&g, &cfg, &default_node()).unwrap();
+        assert_eq!(plan.sls_partitions().count(), cfg.sls_cards);
+        assert!(plan.dense_partition().is_some());
+        assert_eq!(plan.replicas, 6); // dense replicated on every card
+        assert!(!plan.transfers.is_empty());
+        plan.check(&g, &default_node()).unwrap();
+    }
+
+    #[test]
+    fn cv_model_single_card_replicated() {
+        let g = ModelId::ResNeXt101.build();
+        let plan = partition(&g, &CompilerConfig::default(), &default_node()).unwrap();
+        assert_eq!(plan.partitions.len(), 1);
+        assert_eq!(plan.partitions[0].kind, PartitionKind::Full);
+        assert_eq!(plan.replicas, 6);
+    }
+
+    #[test]
+    fn detection_model_gets_host_partition() {
+        let g = ModelId::FbNetV3.build();
+        let plan = partition(&g, &CompilerConfig::default(), &default_node()).unwrap();
+        assert!(plan.partitions.iter().any(|p| p.kind == PartitionKind::Host));
+    }
+
+    #[test]
+    fn length_aware_balances_load_better() {
+        // tables with wildly uneven lookup loads but equal sizes
+        let mut spec = DlrmSpec::base();
+        spec.rows_per_table = 2_000_000;
+        spec.num_tables = 16;
+        let mut g = dlrm(&spec, 32);
+        // perturb avg_lookups: tables 0..4 hot, rest cold
+        for n in g.nodes.iter_mut() {
+            if let OpKind::SparseLengthsSum { ref mut avg_lookups } = n.kind {
+                let idx: usize = n.name.trim_start_matches("sls").parse().unwrap();
+                *avg_lookups = if idx < 4 { 80.0 } else { 2.0 };
+            }
+        }
+        let node = default_node();
+        let mut aware = CompilerConfig::default();
+        aware.sls_length_aware = true;
+        let mut naive = CompilerConfig::default();
+        naive.sls_length_aware = false;
+
+        let imbalance = |plan: &Plan| {
+            let loads: Vec<f64> = plan.sls_partitions().map(|p| p.lookup_load).collect();
+            let max = loads.iter().cloned().fold(0.0, f64::max);
+            let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+            max / mean
+        };
+        let pa = partition_recsys(&g, &aware, &node).unwrap();
+        let pn = partition_recsys(&g, &naive, &node).unwrap();
+        assert!(
+            imbalance(&pa) <= imbalance(&pn) + 1e-9,
+            "aware {} naive {}",
+            imbalance(&pa),
+            imbalance(&pn)
+        );
+    }
+
+    #[test]
+    fn oversized_model_without_sls_rejected() {
+        let mut g = Graph::new("huge_dense");
+        let x = g.add_tensor(
+            "x",
+            crate::graph::Shape::new(&[1, 1024]),
+            crate::graph::DType::F32,
+            TensorKind::Input,
+        );
+        let w = g.add_tensor(
+            "w",
+            crate::graph::Shape::new(&[20_000_000_000 / 1024, 1024]),
+            crate::graph::DType::F16,
+            TensorKind::Weight,
+        );
+        let b = g.add_tensor(
+            "b",
+            crate::graph::Shape::new(&[20_000_000_000 / 1024]),
+            crate::graph::DType::F32,
+            TensorKind::Weight,
+        );
+        let y = g.add_tensor(
+            "y",
+            crate::graph::Shape::new(&[1, 20_000_000_000 / 1024]),
+            crate::graph::DType::F32,
+            TensorKind::Output,
+        );
+        g.add_node("fc", OpKind::Fc, vec![x, w, b], vec![y]);
+        assert!(partition(&g, &CompilerConfig::default(), &default_node()).is_err());
+    }
+
+    /// Property: for random table counts/sizes that fit, the plan always
+    /// assigns every node exactly once and respects capacity.
+    #[test]
+    fn prop_partition_invariants() {
+        struct SpecGen;
+        impl Gen for SpecGen {
+            type Value = (usize, usize, usize);
+            fn generate(&self, rng: &mut Rng) -> Self::Value {
+                let tables = rng.range(2, 48) as usize;
+                let rows = rng.range(100_000, 30_000_000) as usize;
+                let sls_cards = rng.range(1, 5) as usize;
+                (tables, rows, sls_cards)
+            }
+            fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+                let mut out = Vec::new();
+                if v.0 > 2 {
+                    out.push((v.0 / 2, v.1, v.2));
+                }
+                if v.1 > 100_000 {
+                    out.push((v.0, v.1 / 2, v.2));
+                }
+                out
+            }
+        }
+        check("partition invariants", 25, &SpecGen, |&(tables, rows, sls_cards)| {
+            let mut spec = DlrmSpec::base();
+            spec.num_tables = tables;
+            spec.rows_per_table = rows;
+            let g = dlrm(&spec, 32);
+            let mut cfg = CompilerConfig::default();
+            cfg.sls_cards = sls_cards;
+            let node = NodeSpec::default();
+            match partition_recsys(&g, &cfg, &node) {
+                Ok(plan) => plan.check(&g, &node).map_err(|e| e.to_string()),
+                // capacity rejections are allowed; wrong plans are not
+                Err(e) if e.to_string().contains("do not fit") => Ok(()),
+                Err(e) => Err(format!("unexpected error: {e}")),
+            }
+        });
+    }
+
+    /// Property: total SLS weight bytes are preserved by partitioning.
+    #[test]
+    fn prop_no_weight_lost() {
+        let g = ModelId::RecsysBase.build();
+        let node = default_node();
+        check("weights preserved", 8, &UsizeIn { lo: 1, hi: 5 }, |&cards| {
+            let mut cfg = CompilerConfig::default();
+            cfg.sls_cards = cards;
+            let plan = match partition_recsys(&g, &cfg, &node) {
+                Ok(p) => p,
+                Err(_) => return Ok(()),
+            };
+            let sls_bytes: usize = plan.sls_partitions().map(|p| p.weight_bytes).sum();
+            let table_bytes: usize = g
+                .tensors
+                .iter()
+                .filter(|t| t.kind == TensorKind::Weight && t.name.starts_with("table"))
+                .map(|t| t.bytes())
+                .sum();
+            if sls_bytes == table_bytes {
+                Ok(())
+            } else {
+                Err(format!("{sls_bytes} != {table_bytes}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,309 @@
+//! Placement & scheduling onto Accel Cores (§VI-B, §IV-D).
+//!
+//! Two modes, matching the paper:
+//! * **vendor default** — graph-order scheduling with round-robin core
+//!   assignment (what you get with no hints);
+//! * **explicit placement hints** — critical-path-priority list scheduling
+//!   with earliest-finish-time core selection, informed by the perf model
+//!   ("list scheduling informed by a performance model learned by
+//!   profiling"). Hints can be *rejected*: SRAM tensor-placement hints that
+//!   exceed capacity fall back to LPDDR (§IV-D), which shows up as higher
+//!   memory time for those ops.
+
+use crate::compiler::parallelize::ParallelPlan;
+use crate::compiler::perf_model::{op_cost, OP_OVERHEAD_S};
+use crate::graph::{Graph, NodeId, TensorKind};
+use crate::platform::CardSpec;
+use std::collections::HashMap;
+
+/// Result of scheduling one partition onto one card.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// (node, subtask) → (core, start_s, end_s)
+    pub tasks: Vec<ScheduledTask>,
+    /// end-to-end makespan, seconds.
+    pub makespan_s: f64,
+    /// average core busy fraction over the makespan (§VI-B reports 78%).
+    pub core_utilization: f64,
+    /// tensor-placement hints rejected for capacity (§IV-D).
+    pub hints_rejected: usize,
+    /// bytes of weights resident in SRAM.
+    pub sram_resident_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScheduledTask {
+    pub node: NodeId,
+    pub subtask: usize,
+    pub core: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Decide which weights live in SRAM: greedy by (bytes saved per byte of
+/// SRAM) until capacity; everything else stays in LPDDR. Returns the set of
+/// nodes whose weights are on-chip + rejected hint count.
+fn sram_residency(g: &Graph, nodes: &[NodeId], card: &CardSpec) -> (Vec<bool>, usize, usize) {
+    let mut order: Vec<(usize, NodeId)> = Vec::new(); // (weight bytes, node)
+    for &nid in nodes {
+        let bytes: usize = g.nodes[nid]
+            .inputs
+            .iter()
+            .filter(|&&t| g.tensor(t).kind == TensorKind::Weight)
+            .map(|&t| g.tensor(t).bytes())
+            .sum();
+        if bytes > 0 {
+            order.push((bytes, nid));
+        }
+    }
+    // hot-first: smaller weights first (most reuse per byte for FCs)
+    order.sort_by_key(|&(b, _)| b);
+    let cap = card.onchip_bytes();
+    let mut used = 0usize;
+    let mut onchip = vec![false; g.nodes.len()];
+    let mut rejected = 0usize;
+    for (bytes, nid) in order {
+        if used + bytes <= cap {
+            used += bytes;
+            onchip[nid] = true;
+        } else {
+            rejected += 1; // hint didn't fit — vendor rejects it (§IV-D)
+        }
+    }
+    (onchip, rejected, used)
+}
+
+/// Schedule `nodes` (a partition) on `cores` cores of `card`.
+///
+/// `use_hints` selects list scheduling vs vendor-default order.
+pub fn schedule(
+    g: &Graph,
+    nodes: &[NodeId],
+    plan: &ParallelPlan,
+    card: &CardSpec,
+    cores: usize,
+    use_hints: bool,
+) -> Schedule {
+    let cores = cores.max(1);
+    let in_partition: HashMap<NodeId, ()> = nodes.iter().map(|&n| (n, ())).collect();
+    let (onchip, hints_rejected, sram_resident_bytes) = sram_residency(g, nodes, card);
+
+    // dependency edges within the partition
+    let producers = g.producers();
+    let topo = g.topo_order().expect("valid graph");
+    let topo_pos: HashMap<NodeId, usize> = topo.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+    let mut order: Vec<NodeId> = nodes.to_vec();
+    order.sort_by_key(|n| topo_pos[n]);
+
+    // critical-path priority (hints mode): longest path to a sink using
+    // 1-core op times
+    let time_1core: HashMap<NodeId, f64> = order
+        .iter()
+        .map(|&nid| {
+            let c = op_cost(g, &g.nodes[nid], card, onchip[nid]);
+            (nid, c.time_s(plan.split_of(nid).max(1)))
+        })
+        .collect();
+    let mut cp: HashMap<NodeId, f64> = HashMap::new();
+    for &nid in order.iter().rev() {
+        let succ_max = order
+            .iter()
+            .filter(|&&m| {
+                g.nodes[m]
+                    .inputs
+                    .iter()
+                    .any(|&t| producers[t] == Some(nid))
+            })
+            .map(|&m| cp.get(&m).copied().unwrap_or(0.0))
+            .fold(0.0, f64::max);
+        cp.insert(nid, time_1core[&nid] + succ_max);
+    }
+
+    let mut ready_order = order.clone();
+    if use_hints {
+        // schedule high-critical-path nodes first within each topo level
+        ready_order.sort_by(|a, b| {
+            topo_pos[a]
+                .cmp(&topo_pos[b])
+                .then(cp[b].partial_cmp(&cp[a]).unwrap())
+        });
+    }
+
+    let mut core_free = vec![0.0f64; cores];
+    let mut node_end: HashMap<NodeId, f64> = HashMap::new();
+    let mut tasks = Vec::new();
+    let mut rr = 0usize; // round-robin cursor for the no-hints mode
+
+    for &nid in &ready_order {
+        let node = &g.nodes[nid];
+        // dependency ready time (only deps inside this partition)
+        let dep_ready = node
+            .inputs
+            .iter()
+            .filter_map(|&t| producers[t])
+            .filter(|p| in_partition.contains_key(p))
+            .map(|p| node_end.get(&p).copied().unwrap_or(0.0))
+            .fold(0.0, f64::max);
+
+        let splits = plan.split_of(nid).max(1).min(cores);
+        let cost = op_cost(g, node, card, onchip[nid]);
+        // each subtask: compute/splits (already parallel) but memory shared
+        let sub_time = (cost.compute_1core_s / splits as f64).max(cost.memory_s) + OP_OVERHEAD_S;
+
+        let mut end_max = 0.0f64;
+        for s in 0..splits {
+            let core = if use_hints {
+                // earliest-finish-time core
+                (0..cores)
+                    .min_by(|&a, &b| core_free[a].partial_cmp(&core_free[b]).unwrap())
+                    .unwrap()
+            } else {
+                let c = rr % cores;
+                rr += 1;
+                c
+            };
+            let start = core_free[core].max(dep_ready);
+            let end = start + sub_time;
+            core_free[core] = end;
+            end_max = end_max.max(end);
+            tasks.push(ScheduledTask { node: nid, subtask: s, core, start_s: start, end_s: end });
+        }
+        node_end.insert(nid, end_max);
+    }
+
+    let makespan = core_free.iter().cloned().fold(0.0, f64::max);
+    let busy: f64 = tasks.iter().map(|t| t.end_s - t.start_s).sum();
+    let util = if makespan > 0.0 { busy / (makespan * cores as f64) } else { 0.0 };
+    Schedule {
+        tasks,
+        makespan_s: makespan,
+        core_utilization: util,
+        hints_rejected,
+        sram_resident_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::parallelize::parallelize;
+    use crate::graph::models::{xlmr, ModelId, XlmrSpec};
+
+    fn full_partition(g: &Graph) -> Vec<NodeId> {
+        g.nodes.iter().filter(|n| !n.kind.host_only()).map(|n| n.id).collect()
+    }
+
+    #[test]
+    fn parallelization_speedup_on_nlp() {
+        // §VI-B: "2.6x speedup when parallelizing using this heuristic"
+        let g = xlmr(&XlmrSpec::paper(), 1, 32);
+        let card = CardSpec::default();
+        let nodes = full_partition(&g);
+        let seq = ParallelPlan::sequential(&g, &card);
+        let par = parallelize(&g, &card, true);
+        let s_seq = schedule(&g, &nodes, &seq, &card, card.accel_cores, true);
+        let s_par = schedule(&g, &nodes, &par, &card, card.accel_cores, true);
+        let speedup = s_seq.makespan_s / s_par.makespan_s;
+        assert!(speedup > 1.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn hints_no_worse_than_default() {
+        let g = ModelId::XlmR.build();
+        let card = CardSpec::default();
+        let nodes = full_partition(&g);
+        let par = parallelize(&g, &card, true);
+        let with = schedule(&g, &nodes, &par, &card, card.accel_cores, true);
+        let without = schedule(&g, &nodes, &par, &card, card.accel_cores, false);
+        assert!(with.makespan_s <= without.makespan_s * 1.001,
+                "with {} without {}", with.makespan_s, without.makespan_s);
+    }
+
+    #[test]
+    fn schedule_respects_dependencies() {
+        let g = ModelId::XlmR.build();
+        let card = CardSpec::default();
+        let nodes = full_partition(&g);
+        let par = parallelize(&g, &card, true);
+        let s = schedule(&g, &nodes, &par, &card, 4, true);
+        let producers = g.producers();
+        let mut node_span: HashMap<NodeId, (f64, f64)> = HashMap::new();
+        for t in &s.tasks {
+            let e = node_span.entry(t.node).or_insert((f64::INFINITY, 0.0));
+            e.0 = e.0.min(t.start_s);
+            e.1 = e.1.max(t.end_s);
+        }
+        for t in &s.tasks {
+            for &inp in &g.nodes[t.node].inputs {
+                if let Some(p) = producers[inp] {
+                    if let Some(&(_, p_end)) = node_span.get(&p) {
+                        assert!(
+                            t.start_s >= p_end - 1e-9,
+                            "node {} starts {} before dep {} ends {}",
+                            t.node,
+                            t.start_s,
+                            p,
+                            p_end
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_core_overlap() {
+        let g = ModelId::XlmR.build();
+        let card = CardSpec::default();
+        let nodes = full_partition(&g);
+        let par = parallelize(&g, &card, true);
+        let s = schedule(&g, &nodes, &par, &card, 6, true);
+        let mut per_core: Vec<Vec<(f64, f64)>> = vec![Vec::new(); 6];
+        for t in &s.tasks {
+            per_core[t.core].push((t.start_s, t.end_s));
+        }
+        for spans in per_core.iter_mut() {
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                assert!(w[1].0 >= w[0].1 - 1e-9, "{w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_reasonable_for_parallel_model() {
+        // §VI-B: 78% utilization on the non-SLS recsys partition
+        let g = ModelId::RecsysComplex.build();
+        let card = CardSpec::default();
+        let nodes: Vec<NodeId> = g
+            .nodes
+            .iter()
+            .filter(|n| {
+                !n.kind.host_only()
+                    && !matches!(
+                        n.kind,
+                        crate::graph::ops::OpKind::SparseLengthsSum { .. }
+                    )
+            })
+            .map(|n| n.id)
+            .collect();
+        let par = parallelize(&g, &card, true);
+        let s = schedule(&g, &nodes, &par, &card, card.accel_cores, true);
+        // small-batch recsys dense partitions are launch/memory bound; the
+        // paper's 78% is the vendor counter on a much larger net — here we
+        // just require non-degenerate utilization and a valid range.
+        assert!(s.core_utilization > 0.05, "util {}", s.core_utilization);
+        assert!(s.core_utilization <= 1.0);
+    }
+
+    #[test]
+    fn sram_hints_rejected_when_over_capacity() {
+        let g = ModelId::RegNetY.build(); // ~700 MB of weights >> SRAM
+        let card = CardSpec::default();
+        let nodes = full_partition(&g);
+        let par = parallelize(&g, &card, true);
+        let s = schedule(&g, &nodes, &par, &card, card.accel_cores, true);
+        assert!(s.hints_rejected > 0);
+        assert!(s.sram_resident_bytes <= card.onchip_bytes());
+    }
+}

@@ -1,0 +1,288 @@
+//! Config system: typed configs for the platform, compiler, simulator and
+//! serving layers, loadable from JSON files and overridable from the CLI.
+//!
+//! `fbia --config node.json simulate --model xlmr` style; every example and
+//! bench constructs these programmatically too.
+
+use crate::platform::{CardSpec, HostSpec, NicSpec, NodeSpec, PcieSpec};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Compiler knobs (§IV-C, §VI-B) — each maps to one documented optimization
+/// so the ablation benches can switch them individually.
+#[derive(Debug, Clone)]
+pub struct CompilerConfig {
+    /// int8 quantization with fp16 fallback (§V-B). Off = all fp16.
+    pub quantize_int8: bool,
+    /// op-splitting parallelization across Accel Cores (§VI-B).
+    pub parallelize: bool,
+    /// explicit list-scheduling placement hints (§VI-B). Off = vendor default.
+    pub placement_hints: bool,
+    /// fraction of Accel Cores given to SLS partitions (§VI-B: 1 in 3).
+    pub sls_core_fraction: f64,
+    /// use profiled average lookup counts for SLS load balancing (§VI-B).
+    pub sls_length_aware: bool,
+    /// number of cards carrying SLS shards in the recsys scheme (Fig. 6);
+    /// default = all six (every card hosts a shard + a dense replica).
+    pub sls_cards: usize,
+    /// graph optimizations: CSE, conversion elimination, fusion (§IV-C).
+    pub graph_optimize: bool,
+}
+
+impl Default for CompilerConfig {
+    fn default() -> Self {
+        CompilerConfig {
+            quantize_int8: true,
+            parallelize: true,
+            placement_hints: true,
+            sls_core_fraction: 1.0 / 3.0,
+            sls_length_aware: true,
+            sls_cards: 6,
+            graph_optimize: true,
+        }
+    }
+}
+
+/// System-level transfer optimizations (§VI-C), individually switchable.
+#[derive(Debug, Clone)]
+pub struct TransferConfig {
+    /// transfer only the used prefix of statically-sized index tensors.
+    pub partial_tensors: bool,
+    /// combine many small transfers into one DMA.
+    pub command_batching: bool,
+    /// card↔card peer-to-peer instead of bouncing through the host.
+    pub peer_to_peer: bool,
+    /// dense features shipped fp16 (§VI-A).
+    pub fp16_dense_inputs: bool,
+    /// broadcast on card after a single host-side concat (§VI-A) rather
+    /// than per-table broadcasts.
+    pub fused_broadcast: bool,
+}
+
+impl Default for TransferConfig {
+    fn default() -> Self {
+        TransferConfig {
+            partial_tensors: true,
+            command_batching: true,
+            peer_to_peer: true,
+            fp16_dense_inputs: true,
+            fused_broadcast: true,
+        }
+    }
+}
+
+/// Serving-layer knobs (§IV-C runtime, §VI-B batching).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub max_batch: usize,
+    /// max time to hold a request while forming a batch, seconds.
+    pub batch_timeout_s: f64,
+    /// NLP sequence buckets (§VI-A padding boundaries).
+    pub seq_buckets: Vec<usize>,
+    /// length-aware NLP batching: only batch same-bucket sentences (§VII).
+    pub length_aware_batching: bool,
+    pub worker_threads: usize,
+    /// queue depth before backpressure.
+    pub max_queue: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            max_batch: 32,
+            batch_timeout_s: 2e-3,
+            seq_buckets: vec![32, 64, 128],
+            length_aware_batching: true,
+            worker_threads: 6,
+            max_queue: 1024,
+        }
+    }
+}
+
+/// Everything together.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub node: NodeSpec,
+    pub compiler: CompilerConfig,
+    pub transfers: TransferConfig,
+    pub serving: ServingConfig,
+}
+
+impl Config {
+    /// Load from a JSON file; missing keys keep defaults (partial configs).
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Config::from_json(&json)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Config> {
+        let mut c = Config::default();
+        if let Some(n) = j.get("node") {
+            apply_node(&mut c.node, n)?;
+        }
+        if let Some(x) = j.get("compiler") {
+            apply_compiler(&mut c.compiler, x);
+        }
+        if let Some(x) = j.get("transfers") {
+            apply_transfers(&mut c.transfers, x);
+        }
+        if let Some(x) = j.get("serving") {
+            apply_serving(&mut c.serving, x)?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.node.cards == 0 {
+            bail!("node.cards must be > 0");
+        }
+        if self.compiler.sls_cards > self.node.cards {
+            bail!(
+                "compiler.sls_cards ({}) exceeds node.cards ({})",
+                self.compiler.sls_cards,
+                self.node.cards
+            );
+        }
+        if !(0.0..=1.0).contains(&self.compiler.sls_core_fraction) {
+            bail!("sls_core_fraction must be in [0,1]");
+        }
+        if self.serving.max_batch == 0 || self.serving.worker_threads == 0 {
+            bail!("serving.max_batch and worker_threads must be > 0");
+        }
+        let mut b = self.serving.seq_buckets.clone();
+        b.sort_unstable();
+        if b != self.serving.seq_buckets || b.is_empty() {
+            bail!("serving.seq_buckets must be non-empty and ascending");
+        }
+        Ok(())
+    }
+}
+
+fn f(j: &Json, key: &str, cur: f64) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(cur)
+}
+
+fn u(j: &Json, key: &str, cur: usize) -> usize {
+    j.get(key).and_then(Json::as_usize).unwrap_or(cur)
+}
+
+fn b(j: &Json, key: &str, cur: bool) -> bool {
+    j.get(key).and_then(Json::as_bool).unwrap_or(cur)
+}
+
+fn apply_node(n: &mut NodeSpec, j: &Json) -> Result<()> {
+    n.cards = u(j, "cards", n.cards);
+    if let Some(c) = j.get("card") {
+        let d = CardSpec::default();
+        n.card = CardSpec {
+            accel_cores: u(c, "accel_cores", d.accel_cores),
+            peak_tops_int8: f(c, "peak_tops_int8", d.peak_tops_int8),
+            peak_tflops_fp16: f(c, "peak_tflops_fp16", d.peak_tflops_fp16),
+            lpddr_bytes: u(c, "lpddr_bytes", d.lpddr_bytes),
+            lpddr_bw: f(c, "lpddr_bw", d.lpddr_bw),
+            sram_per_core: u(c, "sram_per_core", d.sram_per_core),
+            shared_cache: u(c, "shared_cache", d.shared_cache),
+            sram_bw: f(c, "sram_bw", d.sram_bw),
+            power_w: f(c, "power_w", d.power_w),
+            pcie_lanes: u(c, "pcie_lanes", d.pcie_lanes),
+        };
+    }
+    if let Some(h) = j.get("host") {
+        let d = HostSpec::default();
+        n.host = HostSpec {
+            cores: u(h, "cores", d.cores),
+            mem_bytes: u(h, "mem_bytes", d.mem_bytes),
+            mem_bw: f(h, "mem_bw", d.mem_bw),
+            gflops: f(h, "gflops", d.gflops),
+        };
+    }
+    if let Some(p) = j.get("pcie") {
+        let d = PcieSpec::default();
+        n.pcie = PcieSpec {
+            lane_bw: f(p, "lane_bw", d.lane_bw),
+            host_lanes: u(p, "host_lanes", d.host_lanes),
+            switch_power_w: f(p, "switch_power_w", d.switch_power_w),
+            transfer_overhead_s: f(p, "transfer_overhead_s", d.transfer_overhead_s),
+        };
+    }
+    if let Some(nic) = j.get("nic") {
+        n.nic = NicSpec { bw_bits: f(nic, "bw_bits", NicSpec::default().bw_bits) };
+    }
+    Ok(())
+}
+
+fn apply_compiler(c: &mut CompilerConfig, j: &Json) {
+    c.quantize_int8 = b(j, "quantize_int8", c.quantize_int8);
+    c.parallelize = b(j, "parallelize", c.parallelize);
+    c.placement_hints = b(j, "placement_hints", c.placement_hints);
+    c.sls_core_fraction = f(j, "sls_core_fraction", c.sls_core_fraction);
+    c.sls_length_aware = b(j, "sls_length_aware", c.sls_length_aware);
+    c.sls_cards = u(j, "sls_cards", c.sls_cards);
+    c.graph_optimize = b(j, "graph_optimize", c.graph_optimize);
+}
+
+fn apply_transfers(t: &mut TransferConfig, j: &Json) {
+    t.partial_tensors = b(j, "partial_tensors", t.partial_tensors);
+    t.command_batching = b(j, "command_batching", t.command_batching);
+    t.peer_to_peer = b(j, "peer_to_peer", t.peer_to_peer);
+    t.fp16_dense_inputs = b(j, "fp16_dense_inputs", t.fp16_dense_inputs);
+    t.fused_broadcast = b(j, "fused_broadcast", t.fused_broadcast);
+}
+
+fn apply_serving(s: &mut ServingConfig, j: &Json) -> Result<()> {
+    s.max_batch = u(j, "max_batch", s.max_batch);
+    s.batch_timeout_s = f(j, "batch_timeout_s", s.batch_timeout_s);
+    s.length_aware_batching = b(j, "length_aware_batching", s.length_aware_batching);
+    s.worker_threads = u(j, "worker_threads", s.worker_threads);
+    s.max_queue = u(j, "max_queue", s.max_queue);
+    if let Some(arr) = j.get("seq_buckets").and_then(Json::as_arr) {
+        s.seq_buckets = arr
+            .iter()
+            .map(|v| v.as_usize().context("seq_buckets entries must be usize"))
+            .collect::<Result<_>>()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn partial_json_overrides() {
+        let j = Json::parse(
+            r#"{"node": {"cards": 4, "card": {"peak_tops_int8": 30}},
+                "compiler": {"sls_cards": 2, "quantize_int8": false},
+                "serving": {"seq_buckets": [16, 32]}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.node.cards, 4);
+        assert_eq!(c.node.card.peak_tops_int8, 30.0);
+        assert!(!c.compiler.quantize_int8);
+        assert_eq!(c.compiler.sls_cards, 2);
+        assert_eq!(c.serving.seq_buckets, vec![16, 32]);
+        // untouched fields keep defaults
+        assert_eq!(c.node.card.accel_cores, 12);
+        assert!(c.transfers.peer_to_peer);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let j = Json::parse(r#"{"node": {"cards": 2}, "compiler": {"sls_cards": 5}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        let j = Json::parse(r#"{"serving": {"seq_buckets": [64, 32]}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        let j = Json::parse(r#"{"node": {"cards": 0}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+}

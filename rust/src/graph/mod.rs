@@ -1,0 +1,394 @@
+//! Glow-like compute-graph IR (§IV-C of the paper).
+//!
+//! The IR is deliberately close to Glow's node set: the op kinds are the
+//! ones the paper's Table II reports (FC, SparseLengthsSum, BatchMatMul,
+//! ChannelwiseQuantizedConv, …) so the simulator's per-op breakdown prints
+//! the same rows. Tensors are *descriptors* (shape + dtype + placement
+//! class); actual numerics run through the PJRT runtime, not this IR.
+
+pub mod models;
+pub mod ops;
+
+use ops::OpKind;
+use std::collections::{BTreeMap, HashSet};
+
+/// Element types, including the packed 4-bit type used for embedding-table
+/// compression ([18] in the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    Bf16,
+    I32,
+    I8,
+    /// 4-bit quantized (packed two per byte) + per-row scale/bias — the
+    /// mixed int8/int4 embedding format of §V-B.
+    I4,
+}
+
+impl DType {
+    /// Bytes per element (I4 counts 0.5, so use `bytes_for(n)`).
+    pub fn bits(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 32,
+            DType::F16 | DType::Bf16 => 16,
+            DType::I8 => 8,
+            DType::I4 => 4,
+        }
+    }
+
+    pub fn bytes_for(self, elements: usize) -> usize {
+        (elements * self.bits()).div_ceil(8)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::Bf16 => "bf16",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+            DType::I4 => "i4",
+        }
+    }
+}
+
+/// Dense tensor shape.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+}
+
+/// What a tensor is, for placement/transfer purposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Model weight: persistent, placed at load time (LPDDR or SRAM).
+    Weight,
+    /// Request input arriving over PCIe from the host.
+    Input,
+    /// Intermediate activation.
+    Activation,
+    /// Net output returning to the host.
+    Output,
+}
+
+pub type TensorId = usize;
+pub type NodeId = usize;
+
+/// Tensor descriptor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub kind: TensorKind,
+}
+
+impl Tensor {
+    pub fn bytes(&self) -> usize {
+        self.dtype.bytes_for(self.shape.elements())
+    }
+}
+
+/// One operation.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+/// The compute graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<Tensor>,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Graph { name: name.to_string(), tensors: Vec::new(), nodes: Vec::new() }
+    }
+
+    pub fn add_tensor(&mut self, name: &str, shape: Shape, dtype: DType, kind: TensorKind) -> TensorId {
+        let id = self.tensors.len();
+        self.tensors.push(Tensor { id, name: name.to_string(), shape, dtype, kind });
+        id
+    }
+
+    pub fn add_node(&mut self, name: &str, kind: OpKind, inputs: Vec<TensorId>, outputs: Vec<TensorId>) -> NodeId {
+        let id = self.nodes.len();
+        debug_assert!(inputs.iter().chain(&outputs).all(|&t| t < self.tensors.len()));
+        self.nodes.push(Node { id, name: name.to_string(), kind, inputs, outputs });
+        id
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id]
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// The node producing each tensor (None for graph inputs/weights).
+    pub fn producers(&self) -> Vec<Option<NodeId>> {
+        let mut p = vec![None; self.tensors.len()];
+        for n in &self.nodes {
+            for &o in &n.outputs {
+                p[o] = Some(n.id);
+            }
+        }
+        p
+    }
+
+    /// Consumers of each tensor.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut c = vec![Vec::new(); self.tensors.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                c[i].push(n.id);
+            }
+        }
+        c
+    }
+
+    /// Topological order of node ids; Err if the graph has a cycle.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, GraphError> {
+        let producers = self.producers();
+        let mut indeg = vec![0usize; self.nodes.len()];
+        let mut succs: Vec<Vec<NodeId>> = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if let Some(p) = producers[i] {
+                    succs[p].push(n.id);
+                    indeg[n.id] += 1;
+                }
+            }
+        }
+        let mut ready: Vec<NodeId> =
+            (0..self.nodes.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(n) = ready.pop() {
+            order.push(n);
+            for &s in &succs[n] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        if order.len() != self.nodes.len() {
+            return Err(GraphError::Cycle);
+        }
+        Ok(order)
+    }
+
+    /// Structural validation: unique producers, no dangling ids, acyclic,
+    /// weights never written.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let mut produced: HashSet<TensorId> = HashSet::new();
+        for n in &self.nodes {
+            for &t in n.inputs.iter().chain(&n.outputs) {
+                if t >= self.tensors.len() {
+                    return Err(GraphError::DanglingTensor { node: n.id, tensor: t });
+                }
+            }
+            for &o in &n.outputs {
+                if !produced.insert(o) {
+                    return Err(GraphError::MultipleProducers { tensor: o });
+                }
+                match self.tensors[o].kind {
+                    TensorKind::Weight | TensorKind::Input => {
+                        return Err(GraphError::WriteToConstant { node: n.id, tensor: o })
+                    }
+                    _ => {}
+                }
+            }
+        }
+        self.topo_order()?;
+        Ok(())
+    }
+
+    /// Total weight bytes (what must fit in card memory — §VI-B motivation
+    /// for model-parallel partitioning).
+    pub fn weight_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.bytes())
+            .sum()
+    }
+
+    /// Total parameters (elements of weight tensors).
+    pub fn param_count(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.shape.elements())
+            .sum()
+    }
+
+    /// FLOPs of one execution of the whole graph.
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| ops::node_flops(self, n)).sum()
+    }
+
+    /// Bytes moved by one execution (weights + activations read + written).
+    pub fn total_bytes(&self) -> f64 {
+        self.nodes.iter().map(|n| ops::node_bytes(self, n)).sum()
+    }
+
+    /// Arithmetic intensity (ops per byte) — Table I column. Defined as the
+    /// paper does: FLOPs over (weights + activations), each tensor counted
+    /// once at its stored precision. Embedding tables count only the rows an
+    /// execution actually touches (SLS gathers, not whole tables) — that is
+    /// the access pattern §II-A describes. Per-node traffic for the roofline
+    /// model is `total_bytes`, a different quantity.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let mut seen: HashSet<TensorId> = HashSet::new();
+        let mut bytes = 0.0f64;
+        // weights touched by gather-style ops: count rows read, once
+        for n in &self.nodes {
+            if let ops::OpKind::SparseLengthsSum { avg_lookups } = n.kind {
+                let table = &self.tensors[n.inputs[0]];
+                if seen.insert(table.id) {
+                    let d = table.shape.0.last().copied().unwrap_or(1);
+                    let rows = self.tensor(n.outputs[0]).shape.dim(0) as f64 * avg_lookups;
+                    bytes += table.dtype.bytes_for((rows * d as f64) as usize) as f64;
+                }
+            }
+        }
+        for t in &self.tensors {
+            if seen.contains(&t.id) || t.kind != TensorKind::Weight {
+                continue;
+            }
+            bytes += t.bytes() as f64;
+        }
+        // activations: peak live footprint (producer out + in), not the sum
+        // over the whole net — intermediates are reused in place.
+        let max_act = self
+            .tensors
+            .iter()
+            .filter(|t| t.kind != TensorKind::Weight)
+            .map(|t| t.bytes() as f64)
+            .fold(0.0, f64::max);
+        bytes += 2.0 * max_act;
+        if bytes == 0.0 {
+            0.0
+        } else {
+            self.total_flops() / bytes
+        }
+    }
+
+    /// Per-op-kind share of total FLOPs-weighted cost; used for Table II
+    /// *static* estimates (the simulator produces the measured ones).
+    pub fn op_histogram(&self) -> BTreeMap<&'static str, f64> {
+        let mut h: BTreeMap<&'static str, f64> = BTreeMap::new();
+        for n in &self.nodes {
+            *h.entry(n.kind.table_name()).or_insert(0.0) += ops::node_flops(self, n);
+        }
+        h
+    }
+}
+
+/// Graph structural errors.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum GraphError {
+    #[error("graph contains a cycle")]
+    Cycle,
+    #[error("node {node} references dangling tensor {tensor}")]
+    DanglingTensor { node: NodeId, tensor: TensorId },
+    #[error("tensor {tensor} has multiple producers")]
+    MultipleProducers { tensor: TensorId },
+    #[error("node {node} writes to weight/input tensor {tensor}")]
+    WriteToConstant { node: NodeId, tensor: TensorId },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ops::OpKind;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.add_tensor("x", Shape::new(&[4, 8]), DType::F32, TensorKind::Input);
+        let w = g.add_tensor("w", Shape::new(&[16, 8]), DType::F32, TensorKind::Weight);
+        let b = g.add_tensor("b", Shape::new(&[16]), DType::F32, TensorKind::Weight);
+        let y = g.add_tensor("y", Shape::new(&[4, 16]), DType::F32, TensorKind::Output);
+        g.add_node("fc", OpKind::Fc, vec![x, w, b], vec![y]);
+        g
+    }
+
+    #[test]
+    fn tiny_graph_validates() {
+        let g = tiny();
+        g.validate().unwrap();
+        assert_eq!(g.param_count(), 16 * 8 + 16);
+        assert!(g.total_flops() > 0.0);
+        assert!(g.arithmetic_intensity() > 0.0);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new("cyc");
+        let a = g.add_tensor("a", Shape::new(&[1]), DType::F32, TensorKind::Activation);
+        let b = g.add_tensor("b", Shape::new(&[1]), DType::F32, TensorKind::Activation);
+        g.add_node("n1", OpKind::Relu, vec![a], vec![b]);
+        g.add_node("n2", OpKind::Relu, vec![b], vec![a]);
+        assert_eq!(g.validate(), Err(GraphError::Cycle));
+    }
+
+    #[test]
+    fn multiple_producers_detected() {
+        let mut g = Graph::new("mp");
+        let a = g.add_tensor("a", Shape::new(&[1]), DType::F32, TensorKind::Input);
+        let b = g.add_tensor("b", Shape::new(&[1]), DType::F32, TensorKind::Activation);
+        g.add_node("n1", OpKind::Relu, vec![a], vec![b]);
+        g.add_node("n2", OpKind::Relu, vec![a], vec![b]);
+        assert!(matches!(g.validate(), Err(GraphError::MultipleProducers { .. })));
+    }
+
+    #[test]
+    fn write_to_weight_detected() {
+        let mut g = Graph::new("ww");
+        let a = g.add_tensor("a", Shape::new(&[1]), DType::F32, TensorKind::Input);
+        let w = g.add_tensor("w", Shape::new(&[1]), DType::F32, TensorKind::Weight);
+        g.add_node("n1", OpKind::Relu, vec![a], vec![w]);
+        assert!(matches!(g.validate(), Err(GraphError::WriteToConstant { .. })));
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let g = tiny();
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 1);
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::I4.bytes_for(10), 5);
+        assert_eq!(DType::I4.bytes_for(11), 6);
+        assert_eq!(DType::F16.bytes_for(3), 6);
+    }
+}

@@ -1,0 +1,468 @@
+//! CNN graph generators: ResNeXt101-32x4, RegNetY, FBNetV3 detection, and
+//! the ResNeXt3D video trunk (§II-B, §II-D; Table I rows 3–6).
+//!
+//! All four share the bottleneck pattern the paper highlights: pointwise
+//! (1×1) convs + grouped/channelwise 3×3 convs, residual adds, pooling. The
+//! detection model adds the host-resident region-proposal ops (ROIAlign,
+//! NMS) that §VI-A keeps on the CPU.
+
+use crate::graph::models::{add_conv, add_fc, add_relu};
+use crate::graph::ops::OpKind;
+use crate::graph::{DType, Graph, Shape, TensorId, TensorKind};
+
+/// Generic staged-CNN description used by all four builders.
+#[derive(Debug, Clone)]
+pub struct CnnSpec {
+    pub name: &'static str,
+    pub image: usize,
+    pub stem_ch: usize,
+    /// (bottleneck_width, out_channels, blocks, groups)
+    pub stages: Vec<(usize, usize, usize, usize)>,
+    pub classes: usize,
+    pub quantized: bool,
+    /// Squeeze-and-Excitation blocks (the Y in RegNetY): a global average
+    /// pool + two tiny FCs + channel-wise Mul per bottleneck. These are why
+    /// Table II shows RegNetY spending 6% in AdaptiveAvgPool and 4.4% in
+    /// Mul — and why the §VI-B avgpool optimization mattered so much.
+    pub se_blocks: bool,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    g: &mut Graph,
+    name: &str,
+    x: TensorId,
+    width: usize,
+    cout: usize,
+    stride: usize,
+    groups: usize,
+    quantized: bool,
+    se: bool,
+) -> TensorId {
+    let a = add_conv(g, &format!("{name}.pw1"), x, width, 1, 1, 1, quantized, false);
+    let a = add_relu(g, &format!("{name}.relu1"), a);
+    let mut b = add_conv(g, &format!("{name}.gw"), a, width, 3, stride, groups, quantized, false);
+    b = add_relu(g, &format!("{name}.relu2"), b);
+    if se {
+        // squeeze: global average pool over the spatial dims
+        let bs = g.tensor(b).shape.clone();
+        let (n, ch) = (bs.dim(0), bs.dim(3));
+        let squeezed = g.add_tensor(
+            &format!("{name}.se.pool"),
+            Shape::new(&[n, ch]),
+            DType::F32,
+            TensorKind::Activation,
+        );
+        g.add_node(
+            &format!("{name}.se.avgpool"),
+            OpKind::AdaptiveAvgPool { optimized: true },
+            vec![b],
+            vec![squeezed],
+        );
+        // excite: bottleneck FC pair
+        let r = (ch / 4).max(8);
+        let f1 = add_fc(g, &format!("{name}.se.fc1"), squeezed, r, false);
+        let f1 = add_relu(g, &format!("{name}.se.relu"), f1);
+        let f2 = add_fc(g, &format!("{name}.se.fc2"), f1, ch, false);
+        let gate = g.add_tensor(
+            &format!("{name}.se.gate"),
+            Shape::new(&[n, ch]),
+            DType::F32,
+            TensorKind::Activation,
+        );
+        g.add_node(&format!("{name}.se.sigmoid"), OpKind::Sigmoid, vec![f2], vec![gate]);
+        // channel-wise scale (the Table II "Mul" rows)
+        let scaled = g.add_tensor(
+            &format!("{name}.se.mul"),
+            bs.clone(),
+            DType::F32,
+            TensorKind::Activation,
+        );
+        g.add_node(&format!("{name}.se.scale"), OpKind::Mul, vec![b, gate], vec![scaled]);
+        b = scaled;
+    }
+    // final pointwise fused with the residual add (vendor "Fused Conv_Add")
+    let c = add_conv(g, &format!("{name}.pw2"), b, cout, 1, 1, 1, quantized, true);
+    add_relu(g, &format!("{name}.relu3"), c)
+}
+
+/// Build a staged CNN classifier trunk.
+pub fn staged_cnn(spec: &CnnSpec, batch: usize) -> Graph {
+    let mut g = Graph::new(spec.name);
+    let img = g.add_tensor(
+        "image",
+        Shape::new(&[batch, spec.image, spec.image, 3]),
+        DType::F32,
+        TensorKind::Input,
+    );
+    // quantize input once (first conv stays higher precision per §V-B; model
+    // it as the stem running non-quantized)
+    let mut x = add_conv(&mut g, "stem", img, spec.stem_ch, 7, 2, 1, false, false);
+    x = add_relu(&mut g, "stem.relu", x);
+    let mp = {
+        let s = g.tensor(x).shape.clone();
+        let y = g.add_tensor(
+            "stem.pool",
+            Shape::new(&[batch, s.dim(1) / 2, s.dim(2) / 2, spec.stem_ch]),
+            DType::F32,
+            TensorKind::Activation,
+        );
+        g.add_node("stem.maxpool", OpKind::MaxPool { kh: 3, kw: 3 }, vec![x], vec![y]);
+        y
+    };
+    x = mp;
+    for (si, &(width, cout, blocks, groups)) in spec.stages.iter().enumerate() {
+        for bi in 0..blocks {
+            let stride = if bi == 0 && si > 0 { 2 } else { 1 };
+            x = bottleneck(
+                &mut g,
+                &format!("s{si}b{bi}"),
+                x,
+                width,
+                cout,
+                stride,
+                groups,
+                spec.quantized,
+                spec.se_blocks,
+            );
+        }
+    }
+    // global average pool: the op the paper had to optimize for all pooling
+    // sizes (§VI-B "Average pool optimization")
+    let s = g.tensor(x).shape.clone();
+    let emb = g.add_tensor(
+        "embedding",
+        Shape::new(&[batch, s.dim(3)]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node(
+        "global_avgpool",
+        OpKind::AdaptiveAvgPool { optimized: true },
+        vec![x],
+        vec![emb],
+    );
+    let logits = add_fc(&mut g, "head", emb, spec.classes, false);
+    let out = g.add_tensor(
+        "logits",
+        Shape::new(&[batch, spec.classes]),
+        DType::F32,
+        TensorKind::Output,
+    );
+    g.add_node("softmax", OpKind::Softmax, vec![logits], vec![out]);
+    g
+}
+
+/// ResNeXt101-32x4d (Table I: 44 MParams, 15.6 GFLOPs @224).
+pub fn resnext101(batch: usize) -> Graph {
+    staged_cnn(
+        &CnnSpec {
+            name: "resnext101",
+            image: 224,
+            stem_ch: 64,
+            // ResNeXt101-32x4d: widths 128..1024, groups 32, out 256..2048
+            stages: vec![
+                (128, 256, 3, 32),
+                (256, 512, 4, 32),
+                (512, 1024, 23, 32),
+                (1024, 2048, 3, 32),
+            ],
+            classes: 1000,
+            quantized: true,
+            se_blocks: false,
+        },
+        batch,
+    )
+}
+
+/// RegNetY-class large model (Table I: ~700 MParams, 256 GFLOPs @224).
+/// Calibrated RegNet-style widths/depths; grouped convs with wide groups.
+pub fn regnety(batch: usize) -> Graph {
+    staged_cnn(
+        &CnnSpec {
+            name: "regnety",
+            image: 224,
+            stem_ch: 32,
+            stages: vec![
+                (528, 528, 2, 4),
+                (1056, 1056, 6, 8),
+                (2904, 2904, 14, 16),
+                (7392, 7392, 3, 28),
+            ],
+            classes: 1000,
+            quantized: true,
+            se_blocks: true,
+        },
+        batch,
+    )
+}
+
+/// FBNetV3-based detection model (Table I: 28.6 MParams, 72 GFLOPs, AI 1946
+/// from the large 640² input). Backbone + region proposals + ROI heads; the
+/// proposal ops run host-side in the paper (§VI-A).
+pub fn fbnetv3(batch: usize) -> Graph {
+    let mut g = staged_cnn(
+        &CnnSpec {
+            name: "fbnetv3_det",
+            image: 640,
+            stem_ch: 24,
+            stages: vec![
+                (96, 96, 4, 96),     // depthwise-style: groups == width
+                (192, 192, 6, 192),
+                (384, 384, 8, 384),
+                (736, 736, 6, 736),
+            ],
+            classes: 80,
+            quantized: true,
+            se_blocks: false,
+        },
+        batch,
+    );
+    // detection head: proposals (host) + ROIAlign (host) + two-FC box head
+    // (the Faster-RCNN-style head that carries most of the model's params)
+    let feat = g
+        .tensors
+        .iter()
+        .find(|t| t.name == "embedding")
+        .map(|t| t.id)
+        .expect("embedding tensor");
+    let rois = g.add_tensor(
+        "rois",
+        Shape::new(&[batch, 100, 4]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node("nms_proposals", OpKind::NonMaxSuppression, vec![feat], vec![rois]);
+    let roi_feats = g.add_tensor(
+        "roi_feats",
+        Shape::new(&[batch * 100, 7 * 7 * 736]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node("roi_align", OpKind::RoiAlign, vec![rois], vec![roi_feats]);
+    let h1 = add_fc(&mut g, "box_fc1", roi_feats, 512, true);
+    let h1 = add_relu(&mut g, "box_relu1", h1);
+    let h2 = add_fc(&mut g, "box_fc2", h1, 512, true);
+    let h2 = add_relu(&mut g, "box_relu2", h2);
+    let cls = add_fc(&mut g, "box_head", h2, 80, true);
+    let boxes = g.add_tensor(
+        "detections",
+        Shape::new(&[batch, 100, 80]),
+        DType::F32,
+        TensorKind::Output,
+    );
+    g.add_node("box_softmax", OpKind::Softmax, vec![cls], vec![boxes]);
+    g
+}
+
+/// ResNeXt3D video trunk (Table I: 58 MParams, 3.4 GFLOPs per 4-frame clip).
+/// Channel-separated 3D convs: 1×1×1 cross-channel + 3×3×3 depthwise (§II-D).
+pub fn resnext3d(batch: usize) -> Graph {
+    let mut g = Graph::new("resnext3d");
+    let frames = 4usize;
+    let res = 112usize;
+    let clip = g.add_tensor(
+        "clip",
+        Shape::new(&[batch, frames, res, res, 3]),
+        DType::F32,
+        TensorKind::Input,
+    );
+    // stem 3D conv
+    let stem_w = g.add_tensor("stem.w", Shape::new(&[3, 7, 7, 3, 64]), DType::F16, TensorKind::Weight);
+    let mut cur = g.add_tensor(
+        "stem.y",
+        Shape::new(&[batch, frames, res / 2, res / 2, 64]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node(
+        "stem",
+        OpKind::Conv3D { groups: 1, kt: 3, kh: 7, kw: 7 },
+        vec![clip, stem_w],
+        vec![cur],
+    );
+
+    // aggressive spatial reduction (§II-D: "reduced spatial resolution"):
+    // params stay high (58 M class) while per-clip FLOPs stay ~3-4 G.
+    let stages: Vec<(usize, usize, usize)> =
+        vec![(512, 3, 14), (1024, 4, 7), (2048, 6, 4), (2048, 3, 2)];
+    for (si, &(ch, blocks, spatial)) in stages.iter().enumerate() {
+        for bi in 0..blocks {
+            let name = format!("v{si}b{bi}");
+            let cin = g.tensor(cur).shape.dim(4);
+            // 1x1x1 cross-channel
+            let w1 = g.add_tensor(
+                &format!("{name}.pw.w"),
+                Shape::new(&[1, 1, 1, cin, ch / 2]),
+                DType::F16,
+                TensorKind::Weight,
+            );
+            let y1 = g.add_tensor(
+                &format!("{name}.pw.y"),
+                Shape::new(&[batch, frames, spatial, spatial, ch / 2]),
+                DType::F32,
+                TensorKind::Activation,
+            );
+            g.add_node(
+                &format!("{name}.pw"),
+                OpKind::Conv3D { groups: 1, kt: 1, kh: 1, kw: 1 },
+                vec![cur, w1],
+                vec![y1],
+            );
+            // 3x3x3 depthwise
+            let w2 = g.add_tensor(
+                &format!("{name}.dw.w"),
+                Shape::new(&[3, 3, 3, 1, ch / 2]),
+                DType::F16,
+                TensorKind::Weight,
+            );
+            let y2 = g.add_tensor(
+                &format!("{name}.dw.y"),
+                Shape::new(&[batch, frames, spatial, spatial, ch / 2]),
+                DType::F32,
+                TensorKind::Activation,
+            );
+            g.add_node(
+                &format!("{name}.dw"),
+                OpKind::Conv3D { groups: ch / 2, kt: 3, kh: 3, kw: 3 },
+                vec![y1, w2],
+                vec![y2],
+            );
+            // 1x1x1 expand
+            let w3 = g.add_tensor(
+                &format!("{name}.pw2.w"),
+                Shape::new(&[1, 1, 1, ch / 2, ch]),
+                DType::F16,
+                TensorKind::Weight,
+            );
+            let y3 = g.add_tensor(
+                &format!("{name}.pw2.y"),
+                Shape::new(&[batch, frames, spatial, spatial, ch]),
+                DType::F32,
+                TensorKind::Activation,
+            );
+            g.add_node(
+                &format!("{name}.pw2"),
+                OpKind::Conv3D { groups: 1, kt: 1, kh: 1, kw: 1 },
+                vec![y2, w3],
+                vec![y3],
+            );
+            // bandwidth-bound tail: batchnorm + residual add + pool every
+            // block (the fusion-pressure ops of §II-D)
+            let bn = g.add_tensor(
+                &format!("{name}.bn.y"),
+                Shape::new(&[batch, frames, spatial, spatial, ch]),
+                DType::F32,
+                TensorKind::Activation,
+            );
+            g.add_node(&format!("{name}.bn"), OpKind::BatchNorm, vec![y3], vec![bn]);
+            if g.tensor(cur).shape == g.tensor(bn).shape {
+                let add = g.add_tensor(
+                    &format!("{name}.add.y"),
+                    Shape::new(&[batch, frames, spatial, spatial, ch]),
+                    DType::F32,
+                    TensorKind::Activation,
+                );
+                g.add_node(&format!("{name}.add"), OpKind::Add, vec![cur, bn], vec![add]);
+                cur = add;
+            } else {
+                cur = bn;
+            }
+        }
+        // spatial maxpool between stages (bandwidth-bound, §II-D)
+        if si + 1 < stages.len() {
+            let next_spatial = stages[si + 1].2;
+            let ch = g.tensor(cur).shape.dim(4);
+            let y = g.add_tensor(
+                &format!("pool{si}.y"),
+                Shape::new(&[batch, frames, next_spatial, next_spatial, ch]),
+                DType::F32,
+                TensorKind::Activation,
+            );
+            g.add_node(&format!("pool{si}"), OpKind::MaxPool { kh: 2, kw: 2 }, vec![cur], vec![y]);
+            cur = y;
+        }
+    }
+
+    let ch = g.tensor(cur).shape.dim(4);
+    let emb = g.add_tensor("embedding", Shape::new(&[batch, ch]), DType::F32, TensorKind::Activation);
+    g.add_node("global_avgpool", OpKind::AdaptiveAvgPool { optimized: true }, vec![cur], vec![emb]);
+    let logits = add_fc(&mut g, "head", emb, 400, false);
+    let out = g.add_tensor("scores", Shape::new(&[batch, 400]), DType::F32, TensorKind::Output);
+    g.add_node("softmax", OpKind::Softmax, vec![logits], vec![out]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnext101_table1_scale() {
+        let g = resnext101(1);
+        g.validate().unwrap();
+        let mp = g.param_count() as f64 / 1e6;
+        assert!(mp > 30.0 && mp < 60.0, "params {mp} M");
+        let gf = g.total_flops() / 1e9;
+        assert!(gf > 8.0 && gf < 25.0, "flops {gf} G");
+    }
+
+    #[test]
+    fn regnety_table1_scale() {
+        let g = regnety(1);
+        g.validate().unwrap();
+        let mp = g.param_count() as f64 / 1e6;
+        assert!(mp > 400.0 && mp < 1000.0, "params {mp} M");
+        let gf = g.total_flops() / 1e9;
+        assert!(gf > 120.0 && gf < 400.0, "flops {gf} G");
+    }
+
+    #[test]
+    fn regnety_much_bigger_than_resnext() {
+        // paper: RegNetY ~15x ResNeXt101 in params and FLOPs
+        let a = resnext101(1);
+        let b = regnety(1);
+        let pr = b.param_count() as f64 / a.param_count() as f64;
+        let fr = b.total_flops() / a.total_flops();
+        assert!(pr > 8.0, "param ratio {pr}");
+        assert!(fr > 8.0, "flop ratio {fr}");
+    }
+
+    #[test]
+    fn fbnetv3_has_host_ops() {
+        let g = fbnetv3(1);
+        g.validate().unwrap();
+        assert!(g.nodes.iter().any(|n| n.kind.host_only()));
+        let mp = g.param_count() as f64 / 1e6;
+        assert!(mp > 10.0 && mp < 80.0, "params {mp} M");
+    }
+
+    #[test]
+    fn resnext3d_table1_scale() {
+        let g = resnext3d(1);
+        g.validate().unwrap();
+        let mp = g.param_count() as f64 / 1e6;
+        assert!(mp > 20.0 && mp < 100.0, "params {mp} M");
+        let gf = g.total_flops() / 1e9;
+        assert!(gf > 1.0 && gf < 15.0, "flops {gf} G");
+    }
+
+    #[test]
+    fn grouped_convs_dominate_cnn_flops() {
+        let g = resnext101(1);
+        let hist = g.op_histogram();
+        let total: f64 = hist.values().sum();
+        let grouped = hist.get("ChannelwiseQuantizedConv").copied().unwrap_or(0.0)
+            + hist.get("QuantizedConv").copied().unwrap_or(0.0)
+            + hist.get("Fused Conv_Add").copied().unwrap_or(0.0);
+        assert!(grouped / total > 0.7, "conv share {}", grouped / total);
+    }
+
+    #[test]
+    fn cnn_arithmetic_intensity_is_high() {
+        // Table I: CV models have AI in the hundreds
+        let g = resnext101(1);
+        let ai = g.arithmetic_intensity();
+        assert!(ai > 100.0, "{ai}");
+    }
+}

@@ -1,0 +1,260 @@
+//! DLRM graph generator at paper scale (§II-A, Table I rows 1–2).
+//!
+//! The "less complex" model carries ~70 B parameters (dominated by int8/int4
+//! embedding tables); the "more complex" one >100 B parameters and ~5× the
+//! dense GFLOPs. Dense compute stays in the tens of MFLOPs per batch with
+//! arithmetic intensity ~80–90 — the numbers Table I reports.
+
+use crate::graph::models::{add_fc, add_relu};
+use crate::graph::ops::OpKind;
+use crate::graph::{DType, Graph, Shape, TensorKind};
+
+/// Parameterization of a recommendation model.
+#[derive(Debug, Clone)]
+pub struct DlrmSpec {
+    pub name: &'static str,
+    pub num_tables: usize,
+    pub rows_per_table: usize,
+    pub embed_dim: usize,
+    /// Embedding storage type (paper: mixed int8/int4; we model the blend
+    /// by letting half the tables be I4 when `mixed_int4` is set).
+    pub mixed_int4: bool,
+    pub dense_in: usize,
+    pub bottom_mlp: Vec<usize>,
+    pub top_mlp: Vec<usize>,
+    /// Profiled average lookups per table per sample (§VI-B SLS balancing).
+    pub avg_lookups: f64,
+    pub max_lookups: usize,
+    pub quantized_fc: bool,
+}
+
+impl DlrmSpec {
+    /// "Less complex" Table I row: ~70 B params, ~0.02 GFLOPs/batch-32.
+    pub fn base() -> Self {
+        DlrmSpec {
+            name: "recsys_base",
+            num_tables: 24,
+            rows_per_table: 45_000_000,
+            embed_dim: 64,
+            mixed_int4: true,
+            dense_in: 256,
+            bottom_mlp: vec![128, 64],
+            top_mlp: vec![256, 64, 1],
+            avg_lookups: 20.0,
+            max_lookups: 100,
+            quantized_fc: true,
+        }
+    }
+
+    /// "More complex" Table I row: >100 B params, ~0.1 GFLOPs/batch-32 (the
+    /// 5× model of §VII).
+    pub fn complex() -> Self {
+        DlrmSpec {
+            name: "recsys_complex",
+            num_tables: 40,
+            rows_per_table: 35_000_000,
+            embed_dim: 80,
+            mixed_int4: true,
+            dense_in: 512,
+            bottom_mlp: vec![512, 256, 80],
+            top_mlp: vec![512, 256, 1],
+            avg_lookups: 25.0,
+            max_lookups: 120,
+            quantized_fc: true,
+        }
+    }
+
+    pub fn interaction_dim(&self) -> usize {
+        let f = self.num_tables + 1;
+        self.embed_dim + f * (f - 1) / 2
+    }
+
+    pub fn embedding_params(&self) -> usize {
+        self.num_tables * self.rows_per_table * self.embed_dim
+    }
+}
+
+/// Build the DLRM graph for one batch.
+pub fn dlrm(spec: &DlrmSpec, batch: usize) -> Graph {
+    let mut g = Graph::new(spec.name);
+
+    // ---- inputs -----------------------------------------------------------
+    let dense_in = g.add_tensor(
+        "dense_features",
+        Shape::new(&[batch, spec.dense_in]),
+        DType::F16, // §VI-A: dense features shipped fp16 to halve transfer
+        TensorKind::Input,
+    );
+    // fp16 -> fp32 on card
+    let dense_f32 = g.add_tensor(
+        "dense_f32",
+        Shape::new(&[batch, spec.dense_in]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node("convert_dense", OpKind::ConvertTo, vec![dense_in], vec![dense_f32]);
+
+    // ---- embedding lookups (SLS) ------------------------------------------
+    let mut pooled = Vec::with_capacity(spec.num_tables);
+    for t in 0..spec.num_tables {
+        let dt = if spec.mixed_int4 && t % 2 == 0 { DType::I4 } else { DType::I8 };
+        let table = g.add_tensor(
+            &format!("table{t}"),
+            Shape::new(&[spec.rows_per_table, spec.embed_dim]),
+            dt,
+            TensorKind::Weight,
+        );
+        let idx = g.add_tensor(
+            &format!("idx{t}"),
+            Shape::new(&[batch, spec.max_lookups]),
+            DType::I32,
+            TensorKind::Input,
+        );
+        let len = g.add_tensor(
+            &format!("len{t}"),
+            Shape::new(&[batch]),
+            DType::I32,
+            TensorKind::Input,
+        );
+        let out = g.add_tensor(
+            &format!("pooled{t}"),
+            Shape::new(&[batch, spec.embed_dim]),
+            DType::F32,
+            TensorKind::Activation,
+        );
+        g.add_node(
+            &format!("sls{t}"),
+            OpKind::SparseLengthsSum { avg_lookups: spec.avg_lookups },
+            vec![table, idx, len],
+            vec![out],
+        );
+        pooled.push(out);
+    }
+    let sparse = g.add_tensor(
+        "sparse_cat",
+        Shape::new(&[batch, spec.num_tables, spec.embed_dim]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node("concat_sls", OpKind::Concat, pooled.clone(), vec![sparse]);
+
+    // ---- bottom MLP --------------------------------------------------------
+    let mut x = dense_f32;
+    for (i, &h) in spec.bottom_mlp.iter().enumerate() {
+        x = add_fc(&mut g, &format!("bot_fc{i}"), x, h, spec.quantized_fc);
+        x = add_relu(&mut g, &format!("bot_relu{i}"), x);
+    }
+
+    // ---- interaction: BatchMatMul of features against themselves ----------
+    let f = spec.num_tables + 1;
+    let d = spec.embed_dim;
+    let feats = g.add_tensor(
+        "interact_in",
+        Shape::new(&[batch, f, d]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node("concat_feats", OpKind::Concat, vec![x, sparse], vec![feats]);
+    let feats_t = g.add_tensor(
+        "interact_in_t",
+        Shape::new(&[batch, d, f]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node("transpose_feats", OpKind::Transpose, vec![feats], vec![feats_t]);
+    let z = g.add_tensor(
+        "interact_z",
+        Shape::new(&[batch, f, f]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node("interact_bmm", OpKind::BatchMatMul, vec![feats, feats_t], vec![z]);
+    let inter = g.add_tensor(
+        "interact_flat",
+        Shape::new(&[batch, spec.interaction_dim()]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    g.add_node("interact_cat", OpKind::Concat, vec![x, z], vec![inter]);
+
+    // ---- top MLP -----------------------------------------------------------
+    let mut y = inter;
+    let n_top = spec.top_mlp.len();
+    for (i, &h) in spec.top_mlp.iter().enumerate() {
+        // §V-B: the last FC stays fp16 (skip-list) even when int8 elsewhere
+        let quant = spec.quantized_fc && i + 1 < n_top;
+        y = add_fc(&mut g, &format!("top_fc{i}"), y, h, quant);
+        if i + 1 < n_top {
+            y = add_relu(&mut g, &format!("top_relu{i}"), y);
+        }
+    }
+    let out = g.add_tensor("score", Shape::new(&[batch, 1]), DType::F32, TensorKind::Output);
+    g.add_node("sigmoid", OpKind::Sigmoid, vec![y], vec![out]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::ModelId;
+
+    #[test]
+    fn base_matches_table1_scale() {
+        let spec = DlrmSpec::base();
+        let g = dlrm(&spec, 32);
+        g.validate().unwrap();
+        let params = g.param_count() as f64;
+        // Table I: ~70,000 MParams
+        assert!(params > 50e9 && params < 90e9, "{params}");
+        let gflops = g.total_flops() / 1e9;
+        // Table I: 0.02 GFLOPs per batch — same order of magnitude
+        assert!(gflops > 0.005 && gflops < 0.15, "{gflops}");
+    }
+
+    #[test]
+    fn complex_exceeds_100b_params_and_5x_flops() {
+        let base = dlrm(&DlrmSpec::base(), 32);
+        let cx = dlrm(&DlrmSpec::complex(), 32);
+        cx.validate().unwrap();
+        assert!(cx.param_count() > 100_000_000_000, "{}", cx.param_count());
+        let ratio = cx.total_flops() / base.total_flops();
+        assert!(ratio > 2.5 && ratio < 12.0, "{ratio}");
+    }
+
+    #[test]
+    fn embedding_tables_dominate_weight_bytes() {
+        let g = dlrm(&DlrmSpec::base(), 32);
+        let emb_elems = DlrmSpec::base().embedding_params();
+        assert!(g.param_count() as f64 / (emb_elems as f64) < 1.01);
+    }
+
+    #[test]
+    fn mixed_int4_halves_some_tables() {
+        let spec = DlrmSpec::base();
+        let g = dlrm(&spec, 32);
+        // weight bytes must be < pure-int8 bound (since half tables are I4)
+        let int8_bound = spec.embedding_params();
+        assert!(g.weight_bytes() < int8_bound, "{} vs {}", g.weight_bytes(), int8_bound);
+    }
+
+    #[test]
+    fn model_id_builders_run() {
+        for id in [ModelId::RecsysBase, ModelId::RecsysComplex] {
+            let g = id.build();
+            g.validate().unwrap();
+            assert!(g.nodes.len() > 10);
+        }
+    }
+
+    #[test]
+    fn sls_op_count_matches_tables() {
+        let spec = DlrmSpec::base();
+        let g = dlrm(&spec, 32);
+        let n_sls = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::SparseLengthsSum { .. }))
+            .count();
+        assert_eq!(n_sls, spec.num_tables);
+    }
+}

@@ -1,0 +1,162 @@
+//! Graph generators for the six Table I models.
+//!
+//! These are *paper-scale shape descriptors* used by the compiler and the
+//! simulator (the runnable PJRT artifacts are the scaled-down JAX models in
+//! `python/compile/models`). Each builder is calibrated against Table I:
+//! parameter count, per-batch GFLOPs, and arithmetic intensity.
+
+mod cnn;
+mod dlrm;
+mod xlmr;
+
+pub use cnn::{fbnetv3, regnety, resnext101, resnext3d, CnnSpec};
+pub use dlrm::{dlrm, DlrmSpec};
+pub use xlmr::{xlmr, XlmrSpec};
+
+use crate::graph::{DType, Graph, Shape, TensorId, TensorKind};
+use crate::graph::ops::OpKind;
+
+/// The model zoo of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelId {
+    /// "Less complex" recommendation model.
+    RecsysBase,
+    /// "More complex" (the 5× GFLOPs model served in §VII).
+    RecsysComplex,
+    ResNeXt101,
+    RegNetY,
+    FbNetV3,
+    ResNeXt3D,
+    XlmR,
+}
+
+impl ModelId {
+    pub const ALL: [ModelId; 7] = [
+        ModelId::RecsysBase,
+        ModelId::RecsysComplex,
+        ModelId::ResNeXt101,
+        ModelId::RegNetY,
+        ModelId::FbNetV3,
+        ModelId::ResNeXt3D,
+        ModelId::XlmR,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelId::RecsysBase => "Recsys (less complex)",
+            ModelId::RecsysComplex => "Recsys (more complex)",
+            ModelId::ResNeXt101 => "ResNeXt101-32x4-48",
+            ModelId::RegNetY => "RegNetY",
+            ModelId::FbNetV3 => "FBNetV3 based",
+            ModelId::ResNeXt3D => "ResNeXt3D based",
+            ModelId::XlmR => "XLM-R",
+        }
+    }
+
+    /// Latency constraint from Table I, seconds.
+    pub fn latency_budget_s(&self) -> f64 {
+        match self {
+            ModelId::RecsysBase | ModelId::RecsysComplex => 0.100,
+            ModelId::ResNeXt101 | ModelId::RegNetY => 1.0,
+            ModelId::FbNetV3 => 0.300,
+            ModelId::ResNeXt3D => 0.350,
+            ModelId::XlmR => 0.200,
+        }
+    }
+
+    /// Typical batch size from Table I.
+    pub fn typical_batch(&self) -> usize {
+        match self {
+            ModelId::RecsysBase | ModelId::RecsysComplex => 32,
+            ModelId::XlmR => 1,
+            _ => 1,
+        }
+    }
+
+    /// Build the graph at the model's typical batch size.
+    pub fn build(&self) -> Graph {
+        self.build_batch(self.typical_batch())
+    }
+
+    /// Build the graph at an explicit batch size.
+    pub fn build_batch(&self, batch: usize) -> Graph {
+        match self {
+            ModelId::RecsysBase => dlrm(&DlrmSpec::base(), batch),
+            ModelId::RecsysComplex => dlrm(&DlrmSpec::complex(), batch),
+            ModelId::ResNeXt101 => resnext101(batch),
+            ModelId::RegNetY => regnety(batch),
+            ModelId::FbNetV3 => fbnetv3(batch),
+            ModelId::ResNeXt3D => resnext3d(batch),
+            ModelId::XlmR => xlmr(&XlmrSpec::paper(), batch, 32),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared builder helpers
+// ---------------------------------------------------------------------------
+
+/// Add an FC layer (optionally int8) and return the output tensor.
+pub(crate) fn add_fc(
+    g: &mut Graph,
+    name: &str,
+    x: TensorId,
+    out_features: usize,
+    quantized: bool,
+) -> TensorId {
+    let xs = g.tensor(x).shape.clone();
+    let (m, k) = (xs.dim(0), xs.dim(1));
+    let wdt = if quantized { DType::I8 } else { DType::F16 };
+    let w = g.add_tensor(&format!("{name}.w"), Shape::new(&[out_features, k]), wdt, TensorKind::Weight);
+    let b = g.add_tensor(&format!("{name}.b"), Shape::new(&[out_features]), DType::F32, TensorKind::Weight);
+    let y = g.add_tensor(&format!("{name}.y"), Shape::new(&[m, out_features]), DType::F32, TensorKind::Activation);
+    let kind = if quantized { OpKind::QuantizedFc } else { OpKind::Fc };
+    g.add_node(name, kind, vec![x, w, b], vec![y]);
+    y
+}
+
+/// Add a ReLU.
+pub(crate) fn add_relu(g: &mut Graph, name: &str, x: TensorId) -> TensorId {
+    let s = g.tensor(x).shape.clone();
+    let y = g.add_tensor(&format!("{name}.y"), s, DType::F32, TensorKind::Activation);
+    g.add_node(name, OpKind::Relu, vec![x], vec![y]);
+    y
+}
+
+/// Add a 2D conv (NHWC); returns output tensor.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn add_conv(
+    g: &mut Graph,
+    name: &str,
+    x: TensorId,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    groups: usize,
+    quantized: bool,
+    fused_add: bool,
+) -> TensorId {
+    let xs = g.tensor(x).shape.clone();
+    let (n, h, w, cin) = (xs.dim(0), xs.dim(1), xs.dim(2), xs.dim(3));
+    let wdt = if quantized { DType::I8 } else { DType::F16 };
+    let wt = g.add_tensor(
+        &format!("{name}.w"),
+        Shape::new(&[k, k, cin / groups, cout]),
+        wdt,
+        TensorKind::Weight,
+    );
+    let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+    let y = g.add_tensor(
+        &format!("{name}.y"),
+        Shape::new(&[n, oh, ow, cout]),
+        DType::F32,
+        TensorKind::Activation,
+    );
+    let kind = if fused_add {
+        OpKind::ConvAddFused { groups, stride, kh: k, kw: k, quantized }
+    } else {
+        OpKind::Conv { groups, stride, kh: k, kw: k, quantized }
+    };
+    g.add_node(name, kind, vec![x, wt], vec![y]);
+    y
+}

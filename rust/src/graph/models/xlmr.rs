@@ -1,0 +1,146 @@
+//! XLM-R graph generator at paper scale (§II-C, Table I last row): 24
+//! transformer layers, 558 M parameters, ~20 GFLOPs at 32 tokens. Runtime is
+//! MatMul-dominated (72.5% in Table II).
+
+use crate::graph::ops::OpKind;
+use crate::graph::{DType, Graph, Shape, TensorId, TensorKind};
+
+#[derive(Debug, Clone)]
+pub struct XlmrSpec {
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    /// fp16 deployment (§V-B: "The NLP results in this paper reflect FP16").
+    pub fp16: bool,
+}
+
+impl XlmrSpec {
+    /// The paper's 24-layer variant: 558 M params.
+    pub fn paper() -> Self {
+        XlmrSpec { layers: 24, d_model: 1024, heads: 16, ffn: 4096, vocab: 250_000, fp16: true }
+    }
+
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 4 * d * d + 4 * d + 2 * d * self.ffn + self.ffn + d + 4 * d;
+        self.vocab * d + self.layers * per_layer + 2 * d
+    }
+}
+
+fn wdt(spec: &XlmrSpec) -> DType {
+    if spec.fp16 {
+        DType::F16
+    } else {
+        DType::F32
+    }
+}
+
+fn add_matmul(g: &mut Graph, name: &str, x: TensorId, w_rows: usize, w_cols: usize, spec: &XlmrSpec) -> TensorId {
+    let xs = g.tensor(x).shape.clone();
+    let m = xs.dim(0);
+    let w = g.add_tensor(&format!("{name}.w"), Shape::new(&[w_rows, w_cols]), wdt(spec), TensorKind::Weight);
+    let y = g.add_tensor(&format!("{name}.y"), Shape::new(&[m, w_rows]), DType::F32, TensorKind::Activation);
+    g.add_node(name, OpKind::MatMul, vec![x, w], vec![y]);
+    y
+}
+
+fn add_elem(g: &mut Graph, name: &str, kind: OpKind, ins: Vec<TensorId>, shape: Shape) -> TensorId {
+    let y = g.add_tensor(&format!("{name}.y"), shape, DType::F32, TensorKind::Activation);
+    g.add_node(name, kind, ins, vec![y]);
+    y
+}
+
+/// Build an XLM-R style encoder for `batch` sentences of `seq` tokens
+/// (already padded to the bucket size, §VI-A).
+pub fn xlmr(spec: &XlmrSpec, batch: usize, seq: usize) -> Graph {
+    let mut g = Graph::new("xlmr");
+    let d = spec.d_model;
+    let h = spec.heads;
+    let hd = d / h;
+    let bs = batch * seq;
+
+    let ids = g.add_tensor("ids", Shape::new(&[batch, seq]), DType::I32, TensorKind::Input);
+    let emb_w = g.add_tensor("tok_emb", Shape::new(&[spec.vocab, d]), wdt(spec), TensorKind::Weight);
+    let mut x = g.add_tensor("emb", Shape::new(&[bs, d]), DType::F32, TensorKind::Activation);
+    g.add_node("embed", OpKind::Gather, vec![emb_w, ids], vec![x]);
+
+    for l in 0..spec.layers {
+        let p = format!("l{l}");
+        // pre-LN
+        let ln_g = g.add_tensor(&format!("{p}.ln1.g"), Shape::new(&[2 * d]), DType::F32, TensorKind::Weight);
+        let ln1 = add_elem(&mut g, &format!("{p}.ln1"), OpKind::LayerNorm, vec![x, ln_g], Shape::new(&[bs, d]));
+        // QKV projections + output projection: MatMul rows in Table II
+        let q = add_matmul(&mut g, &format!("{p}.q"), ln1, d, d, spec);
+        let k = add_matmul(&mut g, &format!("{p}.k"), ln1, d, d, spec);
+        let v = add_matmul(&mut g, &format!("{p}.v"), ln1, d, d, spec);
+        // attention scores + context: BatchMatMul over heads
+        let qt = add_elem(&mut g, &format!("{p}.qt"), OpKind::Transpose, vec![q], Shape::new(&[batch * h, seq, hd]));
+        let kt = add_elem(&mut g, &format!("{p}.kt"), OpKind::Transpose, vec![k], Shape::new(&[batch * h, hd, seq]));
+        let scores = add_elem(&mut g, &format!("{p}.scores"), OpKind::BatchMatMul, vec![qt, kt], Shape::new(&[batch * h, seq, seq]));
+        let probs = add_elem(&mut g, &format!("{p}.softmax"), OpKind::Softmax, vec![scores], Shape::new(&[batch * h, seq, seq]));
+        let vt = add_elem(&mut g, &format!("{p}.vt"), OpKind::Transpose, vec![v], Shape::new(&[batch * h, seq, hd]));
+        let ctx = add_elem(&mut g, &format!("{p}.ctx"), OpKind::BatchMatMul, vec![probs, vt], Shape::new(&[batch * h, seq, hd]));
+        let ctx_t = add_elem(&mut g, &format!("{p}.ctx_t"), OpKind::Transpose, vec![ctx], Shape::new(&[bs, d]));
+        let o = add_matmul(&mut g, &format!("{p}.o"), ctx_t, d, d, spec);
+        let res1 = add_elem(&mut g, &format!("{p}.res1"), OpKind::Add, vec![x, o], Shape::new(&[bs, d]));
+        // FFN
+        let ln2_g = g.add_tensor(&format!("{p}.ln2.g"), Shape::new(&[2 * d]), DType::F32, TensorKind::Weight);
+        let ln2 = add_elem(&mut g, &format!("{p}.ln2"), OpKind::LayerNorm, vec![res1, ln2_g], Shape::new(&[bs, d]));
+        let f1 = add_matmul(&mut g, &format!("{p}.ffn1"), ln2, spec.ffn, d, spec);
+        let gelu = add_elem(&mut g, &format!("{p}.gelu"), OpKind::Gelu, vec![f1], Shape::new(&[bs, spec.ffn]));
+        let f2 = add_matmul(&mut g, &format!("{p}.ffn2"), gelu, d, spec.ffn, spec);
+        x = add_elem(&mut g, &format!("{p}.res2"), OpKind::Add, vec![res1, f2], Shape::new(&[bs, d]));
+    }
+
+    let lnf_g = g.add_tensor("lnf.g", Shape::new(&[2 * d]), DType::F32, TensorKind::Weight);
+    let lnf = add_elem(&mut g, "lnf", OpKind::LayerNorm, vec![x, lnf_g], Shape::new(&[bs, d]));
+    let pooled = g.add_tensor("pooled", Shape::new(&[batch, d]), DType::F32, TensorKind::Output);
+    g.add_node("pool", OpKind::Concat, vec![lnf], vec![pooled]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_params_and_flops() {
+        let spec = XlmrSpec::paper();
+        // Table I: 558 MParams
+        let p = spec.param_count() as f64 / 1e6;
+        assert!(p > 500.0 && p < 620.0, "{p}");
+        let g = xlmr(&spec, 1, 32);
+        g.validate().unwrap();
+        let gf = g.total_flops() / 1e9;
+        // Table I: 20 GFLOPs at 32 tokens
+        assert!(gf > 12.0 && gf < 30.0, "{gf}");
+    }
+
+    #[test]
+    fn matmul_dominates_flops() {
+        let g = xlmr(&XlmrSpec::paper(), 1, 64);
+        let hist = g.op_histogram();
+        let total: f64 = hist.values().sum();
+        let mm = hist.get("MatMul").copied().unwrap_or(0.0);
+        assert!(mm / total > 0.6, "MatMul share {}", mm / total);
+    }
+
+    #[test]
+    fn flops_scale_superlinearly_with_seq() {
+        let g32 = xlmr(&XlmrSpec::paper(), 1, 32);
+        let g128 = xlmr(&XlmrSpec::paper(), 1, 128);
+        let ratio = g128.total_flops() / g32.total_flops();
+        // linear term x4 plus quadratic attention => ratio > 4
+        assert!(ratio > 4.0, "{ratio}");
+    }
+
+    #[test]
+    fn arithmetic_intensity_tracks_tokens() {
+        // Table I: AI equals roughly the token count (20-70)
+        let g = xlmr(&XlmrSpec::paper(), 1, 32);
+        let ai = g.arithmetic_intensity();
+        assert!(ai > 10.0 && ai < 80.0, "{ai}");
+    }
+}

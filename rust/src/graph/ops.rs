@@ -1,0 +1,319 @@
+//! Op kinds + FLOPs/bytes accounting.
+//!
+//! The kinds mirror Glow's node set as reported in the paper's Table II so
+//! the simulator's breakdown prints the exact same row labels. `node_flops`
+//! / `node_bytes` implement the roofline inputs the op cost model uses.
+
+use super::{Graph, Node};
+
+/// Operation kinds. Parameters that affect cost (groups, strides, average
+/// lookups) live on the variant; shapes come from the tensors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// Fully connected: inputs [x(m,k), w(n,k), b(n)] -> [y(m,n)].
+    Fc,
+    /// Int8 FC: inputs [x, wq, scale, zp, b] -> y. Runs on the Matrix Engine.
+    QuantizedFc,
+    /// SparseLengthsSum: inputs [table, indices, lengths] -> pooled.
+    /// `avg_lookups` is the profiled average the load balancer uses (§VI-B
+    /// "Optimizing Sparse Lookups"); cost scales with it at runtime.
+    SparseLengthsSum { avg_lookups: f64 },
+    /// Single-lookup SLS specialization (§VI-B): plain row copy.
+    SparseLengthsSumSingle,
+    /// Batched matmul: [a(b,m,k), b(b,k,n)] -> [c(b,m,n)].
+    BatchMatMul,
+    /// Unbatched matmul (NLP attention projections in Table II are "MatMul").
+    MatMul,
+    /// 2D convolution; `groups > 1` covers the channelwise/groupwise convs
+    /// that dominate ResNeXt/RegNetY/FBNetV3 (Table II). Quantized variants
+    /// use the int8 engine.
+    Conv { groups: usize, stride: usize, kh: usize, kw: usize, quantized: bool },
+    /// Conv fused with the following Add (vendor-level fusion, Table II
+    /// "Fused Conv_Add").
+    ConvAddFused { groups: usize, stride: usize, kh: usize, kw: usize, quantized: bool },
+    /// 3D convolution (video trunk).
+    Conv3D { groups: usize, kt: usize, kh: usize, kw: usize },
+    Add,
+    Mul,
+    Concat,
+    Transpose,
+    /// Broadcast along batch (recsys input replication, §VI-A).
+    Tile,
+    Quantize,
+    Dequantize,
+    /// dtype conversion (fp32<->fp16) — "ConvertTo" in Table II.
+    ConvertTo,
+    AvgPool { kh: usize, kw: usize, optimized: bool },
+    AdaptiveAvgPool { optimized: bool },
+    MaxPool { kh: usize, kw: usize },
+    Relu,
+    Gelu,
+    Swish,
+    Sigmoid,
+    Softmax,
+    LayerNorm,
+    BatchNorm,
+    /// Detection-head ops that stay on the host CPU in the paper (§VI-A).
+    RoiAlign,
+    NonMaxSuppression,
+    /// Embedding lookup for NLP token embeddings.
+    Gather,
+}
+
+impl OpKind {
+    /// Row label used in the paper's Table II.
+    pub fn table_name(&self) -> &'static str {
+        match self {
+            OpKind::Fc | OpKind::QuantizedFc => "FC",
+            OpKind::SparseLengthsSum { .. } | OpKind::SparseLengthsSumSingle => "SLS",
+            OpKind::BatchMatMul => "BatchMatMul",
+            OpKind::MatMul => "MatMul",
+            OpKind::Conv { groups, quantized, .. } => {
+                if *groups > 1 {
+                    "ChannelwiseQuantizedConv"
+                } else if *quantized {
+                    "QuantizedConv"
+                } else {
+                    "Convolution"
+                }
+            }
+            OpKind::ConvAddFused { .. } => "Fused Conv_Add",
+            OpKind::Conv3D { .. } => "Convolution3D",
+            OpKind::Add => "Add",
+            OpKind::Mul => "Mul",
+            OpKind::Concat => "Concat",
+            OpKind::Transpose => "Transpose",
+            OpKind::Tile => "Tile",
+            OpKind::Quantize => "Quantize",
+            OpKind::Dequantize => "Dequantize",
+            OpKind::ConvertTo => "ConvertTo",
+            OpKind::AvgPool { .. } | OpKind::AdaptiveAvgPool { .. } => "AdaptiveAvgPool",
+            OpKind::MaxPool { .. } => "MaxPool",
+            OpKind::Relu => "Relu",
+            OpKind::Gelu => "Gelu",
+            OpKind::Swish => "Swish",
+            OpKind::Sigmoid => "Sigmoid",
+            OpKind::Softmax => "Softmax",
+            OpKind::LayerNorm => "LayerNorm",
+            OpKind::BatchNorm => "BatchNorm",
+            OpKind::RoiAlign => "ROIAlign",
+            OpKind::NonMaxSuppression => "NMS",
+            OpKind::Gather => "Gather",
+        }
+    }
+
+    /// Which compute engine the op maps to (decides peak throughput and
+    /// whether int8 speedup applies). §III-B: Matrix Engine vs Vector Core.
+    pub fn engine(&self) -> Engine {
+        match self {
+            OpKind::Fc
+            | OpKind::QuantizedFc
+            | OpKind::BatchMatMul
+            | OpKind::MatMul
+            | OpKind::Conv { .. }
+            | OpKind::ConvAddFused { .. }
+            | OpKind::Conv3D { .. } => Engine::Matrix,
+            OpKind::RoiAlign | OpKind::NonMaxSuppression => Engine::Host,
+            _ => Engine::Vector,
+        }
+    }
+
+    /// True if the op's math runs in int8 on the Matrix Engine.
+    pub fn is_int8(&self) -> bool {
+        matches!(
+            self,
+            OpKind::QuantizedFc
+                | OpKind::Conv { quantized: true, .. }
+                | OpKind::ConvAddFused { quantized: true, .. }
+        )
+    }
+
+    /// True for ops the paper keeps on the host CPU (§VI-A).
+    pub fn host_only(&self) -> bool {
+        self.engine() == Engine::Host
+    }
+}
+
+/// Compute engine classes on the card (plus the host CPU fallback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Matrix,
+    Vector,
+    Host,
+}
+
+fn t_elems(g: &Graph, n: &Node, i: usize) -> f64 {
+    g.tensor(n.inputs[i]).shape.elements() as f64
+}
+
+fn out_elems(g: &Graph, n: &Node) -> f64 {
+    n.outputs.iter().map(|&o| g.tensor(o).shape.elements() as f64).sum()
+}
+
+/// FLOPs for one execution of `n` (multiply-add = 2 flops).
+pub fn node_flops(g: &Graph, n: &Node) -> f64 {
+    match &n.kind {
+        OpKind::Fc | OpKind::QuantizedFc => {
+            // x: [m,k], w: [n,k]
+            let x = &g.tensor(n.inputs[0]).shape;
+            let w = &g.tensor(n.inputs[1]).shape;
+            2.0 * x.dim(0) as f64 * w.dim(0) as f64 * w.dim(1) as f64
+        }
+        OpKind::SparseLengthsSum { avg_lookups } => {
+            // pooled output [b, d]; each pooled row sums avg_lookups rows
+            out_elems(g, n) * avg_lookups
+        }
+        OpKind::SparseLengthsSumSingle => out_elems(g, n),
+        OpKind::BatchMatMul => {
+            let a = &g.tensor(n.inputs[0]).shape; // [b, m, k]
+            let b = &g.tensor(n.inputs[1]).shape; // [b, k, n]
+            2.0 * a.dim(0) as f64 * a.dim(1) as f64 * a.dim(2) as f64
+                * b.dim(b.rank() - 1) as f64
+        }
+        OpKind::MatMul => {
+            // [m, k] x weight -> [m, n]; contraction dim = a.dim(1)
+            let a = &g.tensor(n.inputs[0]).shape;
+            2.0 * a.dim(1) as f64 * out_elems(g, n)
+        }
+        OpKind::Conv { groups, kh, kw, .. } | OpKind::ConvAddFused { groups, kh, kw, .. } => {
+            // out: [n, h, w, cout]; in channels from input tensor
+            let out = &g.tensor(n.outputs[0]).shape;
+            let cin = g.tensor(n.inputs[0]).shape.last();
+            2.0 * out.elements() as f64 * (cin / groups) as f64 * (*kh * *kw) as f64
+        }
+        OpKind::Conv3D { groups, kt, kh, kw } => {
+            let out = &g.tensor(n.outputs[0]).shape;
+            let cin = g.tensor(n.inputs[0]).shape.last();
+            2.0 * out.elements() as f64 * (cin / groups) as f64 * (*kt * *kh * *kw) as f64
+        }
+        OpKind::Softmax => 5.0 * out_elems(g, n),
+        OpKind::Gelu | OpKind::Swish => 8.0 * out_elems(g, n),
+        OpKind::LayerNorm | OpKind::BatchNorm => 6.0 * out_elems(g, n),
+        OpKind::AvgPool { kh, kw, .. } => out_elems(g, n) * (*kh * *kw) as f64,
+        OpKind::AdaptiveAvgPool { .. } => t_elems(g, n, 0),
+        OpKind::MaxPool { kh, kw } => out_elems(g, n) * (*kh * *kw) as f64,
+        OpKind::RoiAlign => 16.0 * out_elems(g, n),
+        OpKind::NonMaxSuppression => 8.0 * t_elems(g, n, 0),
+        // element-wise / data-movement: 1 flop per output element (or 0 for
+        // pure movement, counted as small constant to keep shares sane)
+        OpKind::Add | OpKind::Mul | OpKind::Relu | OpKind::Sigmoid => out_elems(g, n),
+        OpKind::Quantize | OpKind::Dequantize | OpKind::ConvertTo => out_elems(g, n),
+        OpKind::Concat | OpKind::Transpose | OpKind::Tile | OpKind::Gather => 0.0,
+    }
+}
+
+/// Bytes moved for one execution of `n`: all inputs read + outputs written.
+/// Weight reads count at their stored precision (int8/int4 tables!).
+pub fn node_bytes(g: &Graph, n: &Node) -> f64 {
+    let read: usize = n
+        .inputs
+        .iter()
+        .map(|&t| {
+            let ten = g.tensor(t);
+            match n.kind {
+                // SLS reads only avg_lookups rows per pooled row, not the
+                // whole table — the defining memory behaviour of recsys.
+                OpKind::SparseLengthsSum { avg_lookups } if ten.kind == super::TensorKind::Weight => {
+                    let d = ten.shape.last();
+                    let rows_read = g.tensor(n.outputs[0]).shape.dim(0) as f64 * avg_lookups;
+                    ten.dtype.bytes_for((rows_read * d as f64) as usize)
+                }
+                OpKind::SparseLengthsSumSingle if ten.kind == super::TensorKind::Weight => {
+                    let d = ten.shape.last();
+                    ten.dtype.bytes_for(g.tensor(n.outputs[0]).shape.dim(0) * d)
+                }
+                _ => ten.bytes(),
+            }
+        })
+        .sum();
+    let written: usize = n.outputs.iter().map(|&t| g.tensor(t).bytes()).sum();
+    (read + written) as f64
+}
+
+trait ShapeExt {
+    fn last(&self) -> usize;
+}
+
+impl ShapeExt for super::Shape {
+    fn last(&self) -> usize {
+        *self.0.last().unwrap_or(&1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Shape, TensorKind};
+
+    #[test]
+    fn fc_flops() {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor("x", Shape::new(&[4, 8]), DType::F32, TensorKind::Input);
+        let w = g.add_tensor("w", Shape::new(&[16, 8]), DType::F32, TensorKind::Weight);
+        let b = g.add_tensor("b", Shape::new(&[16]), DType::F32, TensorKind::Weight);
+        let y = g.add_tensor("y", Shape::new(&[4, 16]), DType::F32, TensorKind::Activation);
+        let n = g.add_node("fc", OpKind::Fc, vec![x, w, b], vec![y]);
+        assert_eq!(node_flops(&g, g.node(n)), 2.0 * 4.0 * 16.0 * 8.0);
+    }
+
+    #[test]
+    fn sls_bytes_scale_with_lookups_not_table() {
+        let mut g = Graph::new("t");
+        let table =
+            g.add_tensor("tab", Shape::new(&[1_000_000, 64]), DType::I8, TensorKind::Weight);
+        let idx = g.add_tensor("idx", Shape::new(&[32, 100]), DType::I32, TensorKind::Input);
+        let len = g.add_tensor("len", Shape::new(&[32]), DType::I32, TensorKind::Input);
+        let out = g.add_tensor("o", Shape::new(&[32, 64]), DType::F32, TensorKind::Activation);
+        let n = g.add_node(
+            "sls",
+            OpKind::SparseLengthsSum { avg_lookups: 20.0 },
+            vec![table, idx, len],
+            vec![out],
+        );
+        let bytes = node_bytes(&g, g.node(n));
+        // table rows read: 32*20 rows * 64 B (i8) = 40960, NOT 64 MB
+        assert!(bytes < 100_000.0, "{bytes}");
+        assert!(bytes > 32.0 * 20.0 * 64.0, "{bytes}");
+    }
+
+    #[test]
+    fn grouped_conv_table_name() {
+        let k = OpKind::Conv { groups: 8, stride: 1, kh: 3, kw: 3, quantized: true };
+        assert_eq!(k.table_name(), "ChannelwiseQuantizedConv");
+        let k2 = OpKind::Conv { groups: 1, stride: 1, kh: 3, kw: 3, quantized: true };
+        assert_eq!(k2.table_name(), "QuantizedConv");
+    }
+
+    #[test]
+    fn conv_flops_account_for_groups() {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor("x", Shape::new(&[1, 8, 8, 16]), DType::F32, TensorKind::Input);
+        let w = g.add_tensor("w", Shape::new(&[3, 3, 2, 16]), DType::F32, TensorKind::Weight);
+        let y = g.add_tensor("y", Shape::new(&[1, 8, 8, 16]), DType::F32, TensorKind::Activation);
+        let dense = g.add_node(
+            "c1",
+            OpKind::Conv { groups: 1, stride: 1, kh: 3, kw: 3, quantized: false },
+            vec![x, w],
+            vec![y],
+        );
+        let y2 = g.add_tensor("y2", Shape::new(&[1, 8, 8, 16]), DType::F32, TensorKind::Activation);
+        let grouped = g.add_node(
+            "c2",
+            OpKind::Conv { groups: 8, stride: 1, kh: 3, kw: 3, quantized: false },
+            vec![x, w],
+            vec![y2],
+        );
+        let f1 = node_flops(&g, g.node(dense));
+        let f2 = node_flops(&g, g.node(grouped));
+        assert!((f1 / f2 - 8.0).abs() < 1e-9, "{f1} {f2}");
+    }
+
+    #[test]
+    fn engines() {
+        assert_eq!(OpKind::Fc.engine(), Engine::Matrix);
+        assert_eq!(OpKind::Softmax.engine(), Engine::Vector);
+        assert_eq!(OpKind::RoiAlign.engine(), Engine::Host);
+        assert!(OpKind::QuantizedFc.is_int8());
+        assert!(!OpKind::Fc.is_int8());
+    }
+}

@@ -1,0 +1,36 @@
+//! # fbia — First-generation Inference Accelerator platform (reproduction)
+//!
+//! A production-shaped reproduction of *"First-Generation Inference
+//! Accelerator Deployment at Facebook"* (CS.AR 2021): a three-layer
+//! Rust + JAX + Pallas stack in which
+//!
+//! * **Layer 1/2 (build-time Python)** author the models (DLRM, mini XLM-R,
+//!   CV trunk) and their Pallas compute kernels, AOT-lowered to HLO text
+//!   under `artifacts/`;
+//! * **Layer 3 (this crate)** is everything that serves: a Glow-like graph
+//!   compiler ([`compiler`]), a parameterized six-card accelerator-node
+//!   simulator ([`sim`] + [`platform`]), a PJRT runtime that loads and
+//!   executes the AOT artifacts ([`runtime`]), quantization/reference
+//!   numerics ([`numerics`]), and the serving stack ([`serving`]).
+//!
+//! Python is never on the request path: after `make artifacts` the `fbia`
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the substitution table (what the paper had vs. what
+//! this repo builds) and the experiment index mapping every paper table and
+//! figure to a bench target.
+
+pub mod capacity;
+pub mod compiler;
+pub mod config;
+pub mod graph;
+pub mod numerics;
+pub mod platform;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+/// Crate version string used by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

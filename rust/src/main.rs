@@ -1,0 +1,269 @@
+//! `fbia` — CLI for the inference-accelerator platform reproduction.
+//!
+//! Subcommands:
+//!   info              platform summary (paper §III headline numbers)
+//!   simulate          run the platform simulator for one or all models
+//!   compile-report    show the compiler's decisions for a model
+//!   serve             serve a model for N requests over the PJRT runtime
+//!   validate-numerics run the §V-C reference-vs-runtime validation
+//!   capacity          print the Fig. 1 capacity series
+
+use anyhow::{anyhow, bail, Result};
+use fbia::capacity::{capacity_series, GrowthScenario};
+use fbia::config::Config;
+use fbia::graph::models::ModelId;
+use fbia::numerics::validate;
+use fbia::numerics::weights::WeightGen;
+use fbia::runtime::Engine;
+use fbia::serving::{CvServer, NlpServer, RecsysServer, WEIGHT_SEED};
+use fbia::sim::simulate_model;
+use fbia::util::cli::Args;
+use fbia::util::table::{f2, ms, pct, Table};
+use fbia::workloads::{CvGen, NlpGen, RecsysGen};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env(true);
+    let result = match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("compile-report") => cmd_compile_report(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("validate-numerics") => cmd_validate(&args),
+        Some("capacity") => cmd_capacity(&args),
+        Some("info") | None => cmd_info(&args),
+        Some(other) => Err(anyhow!(
+            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, capacity)"
+        )),
+    };
+    if let Err(e) = result {
+        eprintln!("fbia: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    match args.get("config") {
+        Some(path) => Config::from_file(Path::new(path)),
+        None => Ok(Config::default()),
+    }
+}
+
+fn parse_model(name: &str) -> Result<ModelId> {
+    Ok(match name {
+        "recsys" | "recsys-base" => ModelId::RecsysBase,
+        "recsys-complex" | "dlrm" => ModelId::RecsysComplex,
+        "resnext" | "resnext101" => ModelId::ResNeXt101,
+        "regnety" => ModelId::RegNetY,
+        "fbnetv3" | "detection" => ModelId::FbNetV3,
+        "resnext3d" | "video" => ModelId::ResNeXt3D,
+        "xlmr" | "nlp" => ModelId::XlmR,
+        other => bail!("unknown model '{other}'"),
+    })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n = &cfg.node;
+    println!("fbia {} — inference accelerator platform (paper reproduction)", fbia::VERSION);
+    println!();
+    println!("node: {} cards + host, PCIe switch", n.cards);
+    println!("  peak int8 : {:.0} TOPS ({}x{:.1})", n.total_tops_int8(), n.cards, n.card.peak_tops_int8);
+    println!("  peak fp16 : {:.0} TFLOPS", n.total_tflops_fp16());
+    println!("  LPDDR     : {} GB accel + {} GB host", n.total_lpddr() >> 30, n.host.mem_bytes >> 30);
+    println!("  power     : {:.0} W (cards + switch)", n.accel_power_w());
+    println!("  efficiency: {:.1} TOPS/W", n.tops_per_watt());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.get_usize("requests", 200);
+    let models: Vec<ModelId> = match args.get("model") {
+        Some(m) => vec![parse_model(m)?],
+        None => ModelId::ALL.to_vec(),
+    };
+    let mut t = Table::new(&["model", "batch", "latency", "budget", "ok", "QPS", "items/s", "util", "bottleneck"]);
+    for id in models {
+        let r = simulate_model(id, &cfg, n)?;
+        t.row(&[
+            id.name().to_string(),
+            r.batch.to_string(),
+            ms(r.latency_s),
+            ms(id.latency_budget_s()),
+            if r.meets_budget { "yes".into() } else { "NO".into() },
+            format!("{:.0}", r.qps),
+            format!("{:.0}", r.items_per_s),
+            pct(r.core_utilization),
+            r.pipeline.bottleneck.clone(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_compile_report(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let id = parse_model(args.get_or("model", "dlrm"))?;
+    let g = id.build();
+    let c = fbia::compiler::compile(&g, &cfg)?;
+    println!(
+        "model: {} ({} nodes, {:.1} MParams, {:.2} GFLOPs/batch)",
+        g.name,
+        g.nodes.len(),
+        g.param_count() as f64 / 1e6,
+        g.total_flops() / 1e9
+    );
+    println!("opt: {:?}", c.opt_stats);
+    if let Some(q) = &c.quant_report {
+        println!("quant: {} int8, {} fp16 fallback, {} skipped", q.int8_ops, q.fp16_fallbacks, q.skipped);
+    }
+    if let Some(sc) = c.sls_cores {
+        println!("sls cores per card: {sc} of {}", cfg.node.card.accel_cores);
+    }
+    let mut t = Table::new(&["partition", "kind", "card", "ops", "weights (MB)", "makespan", "util", "hints rejected"]);
+    for (p, s) in c.plan.partitions.iter().zip(&c.schedules) {
+        t.row(&[
+            p.id.to_string(),
+            format!("{:?}", p.kind),
+            p.card.map(|c| c.to_string()).unwrap_or_else(|| "host".into()),
+            p.nodes.len().to_string(),
+            format!("{:.1}", p.weight_bytes as f64 / 1e6),
+            s.as_ref().map(|s| ms(s.makespan_s)).unwrap_or_else(|| "-".into()),
+            s.as_ref().map(|s| pct(s.core_utilization)).unwrap_or_else(|| "-".into()),
+            s.as_ref().map(|s| s.hints_rejected.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    println!("\nop breakdown (Table II analogue):");
+    let mut t2 = Table::new(&["op", "share"]);
+    for (k, v) in fbia::sim::op_breakdown(&c).iter().take(8) {
+        t2.row(&[k.clone(), pct(*v)]);
+    }
+    t2.print();
+    Ok(())
+}
+
+fn engine(args: &Args) -> Result<Arc<Engine>> {
+    let dir = args.get_or("artifacts", "artifacts");
+    Ok(Arc::new(Engine::load(Path::new(dir))?))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let n = args.get_usize("requests", 50);
+    match args.get_or("model", "dlrm") {
+        "dlrm" | "recsys" => {
+            let batch = args.get_usize("batch", 32);
+            let precision = args.get_or("precision", "int8");
+            let server = Arc::new(RecsysServer::new(eng.clone(), batch, precision)?);
+            let m = eng.manifest();
+            let mut gen = RecsysGen::new(
+                1,
+                batch,
+                m.config_usize("dlrm", "num_tables")?,
+                m.config_usize("dlrm", "rows_per_table")?,
+                m.config_usize("dlrm", "dense_in")?,
+                m.config_usize("dlrm", "max_lookups")?,
+            );
+            let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
+            let metrics = server.serve(reqs)?;
+            print_metrics("dlrm", &metrics);
+        }
+        "xlmr" | "nlp" => {
+            let server = NlpServer::new(eng.clone())?;
+            let m = eng.manifest();
+            let mut gen = NlpGen::new(1, m.config_usize("xlmr", "vocab")?, 128, 100.0);
+            let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
+            let (metrics, waste) =
+                server.serve(reqs, args.get_usize("max-batch", 4), !args.flag("naive-batching"))?;
+            print_metrics("xlmr", &metrics);
+            println!("  pad waste : {}", pct(waste));
+        }
+        "cv" => {
+            let server = CvServer::new(eng.clone())?;
+            let mut gen = CvGen::new(1, server.image);
+            let batch = args.get_usize("batch", 1);
+            let metrics = server.serve(n, batch, &mut gen)?;
+            print_metrics("cv", &metrics);
+        }
+        other => bail!("serve: unknown model '{other}' (dlrm | xlmr | cv)"),
+    }
+    Ok(())
+}
+
+fn print_metrics(name: &str, m: &fbia::serving::ServerMetrics) {
+    println!("{name}: {} requests in {:.2}s", m.completed, m.wall_s);
+    println!("  QPS       : {:.1} ({:.1} items/s)", m.qps(), m.items_per_s());
+    println!(
+        "  latency   : p50 {} p95 {} p99 {}",
+        ms(m.latency.p50()),
+        ms(m.latency.p95()),
+        ms(m.latency.p99())
+    );
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let manifest = eng.manifest().clone();
+    let only: Option<&str> = args.get("artifact");
+    let mut failures = 0;
+    let mut t = Table::new(&["artifact", "max abs err", "cosine", "pass"]);
+    for art in &manifest.artifacts {
+        if let Some(o) = only {
+            if art.name != o {
+                continue;
+            }
+        }
+        let inputs = fbia::serving::test_inputs_for(&manifest, art, 7)?;
+        let mut gen = WeightGen::new(WEIGHT_SEED);
+        let reference = validate::reference_outputs(&manifest, art, &mut gen, &inputs)?;
+        let mut gen2 = WeightGen::new(WEIGHT_SEED);
+        let weights = gen2.weights_for(art);
+        let prepared = eng.prepare(&art.name, &weights)?;
+        let measured = prepared.run(&eng, &inputs)?;
+        let v = validate::compare(
+            &art.name,
+            reference[0].as_f32().ok_or_else(|| anyhow!("ref output not f32"))?,
+            measured[0].as_f32().ok_or_else(|| anyhow!("out not f32"))?,
+        );
+        if !v.passed {
+            failures += 1;
+        }
+        t.row(&[
+            v.artifact.clone(),
+            format!("{:.2e}", v.max_abs_err),
+            format!("{:.6}", v.cosine),
+            if v.passed { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t.print();
+    if failures > 0 {
+        bail!("{failures} artifacts failed numerics validation");
+    }
+    println!("all checked artifacts match the reference implementations (§V-C)");
+    Ok(())
+}
+
+fn cmd_capacity(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    for (scenario, model) in [
+        (GrowthScenario::recommendation(), ModelId::RecsysComplex),
+        (GrowthScenario::other_ml(), ModelId::XlmR),
+    ] {
+        println!("\nFig. 1 ({}):", scenario.name);
+        let pts = capacity_series(model, &scenario, &cfg)?;
+        let mut t = Table::new(&["quarter", "demand (QPS)", "CPU servers", "accel servers", "growth (norm)"]);
+        for p in &pts {
+            t.row(&[
+                p.quarter.to_string(),
+                format!("{:.0}", p.demand_qps),
+                format!("{:.0}", p.cpu_servers),
+                format!("{:.0}", p.accel_servers),
+                f2(p.cpu_norm),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,219 @@
+//! Numerics: reference implementations + quantization (§V).
+//!
+//! The paper's deployment keeps *numeric reference implementations* of every
+//! accelerator kernel and validates each vendor release against them
+//! (§V-C, the open-sourced FakeLowP tests). Here the "vendor" is the
+//! AOT-compiled HLO executed by PJRT, and this module is the independent
+//! re-implementation used by `fbia validate-numerics` and the integration
+//! tests.
+
+pub mod ops_ref;
+pub mod quant;
+pub mod validate;
+pub mod weights;
+
+/// A host-side tensor (row-major). The runtime converts these to/from PJRT
+/// literals; the reference ops consume them directly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    I8(Vec<i8>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) | HostTensor::I8(_, s) => s,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_i8(&self) -> Option<&[i8]> {
+        match self {
+            HostTensor::I8(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn i8(data: Vec<i8>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I8(data, shape.to_vec())
+    }
+}
+
+/// Round an f32 to the nearest f16 and back — models the fp16 storage the
+/// card uses for non-quantized weights (§V-B). Round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut frac = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf/nan
+        let f = if frac != 0 { 0x200 } else { 0 };
+        return sign | 0x7c00 | f as u16;
+    }
+    exp -= 127;
+    if exp > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp >= -14 {
+        // normal
+        let mut mant = frac >> 13;
+        let rest = frac & 0x1fff;
+        // round to nearest even
+        if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+            mant += 1;
+            if mant == 0x400 {
+                mant = 0;
+                exp += 1;
+                if exp > 15 {
+                    return sign | 0x7c00;
+                }
+            }
+        }
+        return sign | (((exp + 15) as u16) << 10) | mant as u16;
+    }
+    // subnormal
+    if exp < -25 {
+        return sign; // underflow to zero
+    }
+    frac |= 0x80_0000;
+    let shift = (-14 - exp) as u32 + 13;
+    let mant0 = frac >> shift;
+    let rest = frac & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut mant = mant0;
+    if rest > half || (rest == half && (mant & 1) == 1) {
+        mant += 1;
+    }
+    sign | mant as u16
+}
+
+/// f16 bits back to f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: value = frac * 2^-24; normalize the leading bit
+            let mut k = 0u32;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                k += 1;
+            }
+            f &= 0x3ff;
+            sign | ((113 - k) << 23) | (f << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip through fp16 (the "cast to f16 storage" operation).
+pub fn fp16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Apply fp16 rounding to a slice.
+pub fn fp16_round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = fp16_round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            assert_eq!(fp16_round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_rounding_error_bounded() {
+        let mut x = 0.1f32;
+        for _ in 0..100 {
+            let r = fp16_round(x);
+            assert!((r - x).abs() <= x.abs() * 0.001, "{x} -> {r}");
+            x *= 1.37;
+            if x > 60000.0 {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert!(fp16_round(1e20).is_infinite());
+        assert!(fp16_round(-1e20).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 3.0e-8f32;
+        let r = fp16_round(tiny);
+        assert!(r >= 0.0 && r < 1e-6);
+        assert_eq!(fp16_round(1e-12), 0.0);
+    }
+
+    #[test]
+    fn f16_nan() {
+        assert!(fp16_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn f16_roundtrip_all_half_values() {
+        // every finite f16 must round-trip exactly
+        for h in 0u16..0x7c00 {
+            let f = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(f), h, "bits {h:#x} -> {f}");
+        }
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        assert_eq!(t.elements(), 2);
+        assert!(t.as_f32().is_some());
+        assert!(t.as_i8().is_none());
+    }
+}

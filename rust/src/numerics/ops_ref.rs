@@ -1,0 +1,405 @@
+//! Reference ops — the Rust mirror of `python/compile/kernels/ref.py`.
+//!
+//! Used by the numerics validator (§V-C) to check PJRT artifact outputs, and
+//! by the serving integration tests as ground truth. All row-major f32.
+
+/// y = x @ w^T + b. x: [m,k], w: [n,k], b: [n] → y: [m,n].
+pub fn fc(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), n * k);
+    assert_eq!(b.len(), n);
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            let xi = &x[i * k..(i + 1) * k];
+            let wj = &w[j * k..(j + 1) * k];
+            for t in 0..k {
+                acc += xi[t] * wj[t];
+            }
+            y[i * n + j] = acc + b[j];
+        }
+    }
+    y
+}
+
+/// Quantized FC matching `ref.quant_fc`: dynamic symmetric activation
+/// quantization + int32 GEMM + float epilogue.
+pub fn quant_fc(
+    x: &[f32],
+    wq: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(wq.len(), n * k);
+    let absmax = x.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-8);
+    let xs = absmax / 127.0;
+    let xq: Vec<i32> = x.iter().map(|&v| (v / xs).round().clamp(-127.0, 127.0) as i32).collect();
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        let row = &xq[i * k..(i + 1) * k];
+        let rowsum: i32 = row.iter().sum();
+        for j in 0..n {
+            let wj = &wq[j * k..(j + 1) * k];
+            let mut acc: i32 = 0;
+            for t in 0..k {
+                acc += row[t] * wj[t] as i32;
+            }
+            let acc_f = acc as f32 + rowsum as f32 * zp[j];
+            y[i * n + j] = acc_f * (xs * scale[j]) + bias[j];
+        }
+    }
+    y
+}
+
+/// SparseLengthsSum: table [rows, dim], indices [batch, max_len],
+/// lengths [batch] → pooled [batch, dim]. Tail indices are masked.
+pub fn sls(
+    table: &[f32],
+    dim: usize,
+    indices: &[i32],
+    lengths: &[i32],
+    batch: usize,
+    max_len: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; batch * dim];
+    for b in 0..batch {
+        let l = (lengths[b].max(0) as usize).min(max_len);
+        for j in 0..l {
+            let idx = indices[b * max_len + j] as usize;
+            let row = &table[idx * dim..(idx + 1) * dim];
+            for d in 0..dim {
+                out[b * dim + d] += row[d];
+            }
+        }
+    }
+    out
+}
+
+/// ReLU in place.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Sigmoid in place.
+pub fn sigmoid(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = 1.0 / (1.0 + (-*v).exp());
+    }
+}
+
+/// GeLU (tanh approximation, matching ref.py).
+pub fn gelu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        let x3 = *v * *v * *v;
+        *v = 0.5 * *v * (1.0 + (0.7978845608028654 * (*v + 0.044715 * x3)).tanh());
+    }
+}
+
+/// LayerNorm over the last dim: x [rows, d].
+pub fn layernorm(x: &mut [f32], gamma: &[f32], beta: &[f32], rows: usize, d: usize, eps: f32) {
+    for r in 0..rows {
+        let row = &mut x[r * d..(r + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for i in 0..d {
+            row[i] = (row[i] - mu) * inv * gamma[i] + beta[i];
+        }
+    }
+}
+
+/// Row-wise softmax: x [rows, d].
+pub fn softmax(x: &mut [f32], rows: usize, d: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * d..(r + 1) * d];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut s = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+}
+
+/// Scaled dot-product attention over [heads, seq, hd].
+pub fn attention(q: &[f32], k: &[f32], v: &[f32], heads: usize, seq: usize, hd: usize) -> Vec<f32> {
+    let mut out = vec![0f32; heads * seq * hd];
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0f32; seq * seq];
+    for h in 0..heads {
+        let qh = &q[h * seq * hd..];
+        let kh = &k[h * seq * hd..];
+        let vh = &v[h * seq * hd..];
+        for i in 0..seq {
+            for j in 0..seq {
+                let mut acc = 0f32;
+                for t in 0..hd {
+                    acc += qh[i * hd + t] * kh[j * hd + t];
+                }
+                scores[i * seq + j] = acc * scale;
+            }
+        }
+        softmax(&mut scores, seq, seq);
+        for i in 0..seq {
+            for t in 0..hd {
+                let mut acc = 0f32;
+                for j in 0..seq {
+                    acc += scores[i * seq + j] * vh[j * hd + t];
+                }
+                out[h * seq * hd + i * hd + t] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// DLRM dot interaction (ref.py::dot_interaction): dense [b, d] +
+/// sparse [b, f-1, d] → [b, d + f(f-1)/2].
+pub fn dot_interaction(dense: &[f32], sparse: &[f32], batch: usize, d: usize, num_sparse: usize) -> Vec<f32> {
+    let f = num_sparse + 1;
+    let pairs = f * (f - 1) / 2;
+    let out_dim = d + pairs;
+    let mut out = vec![0f32; batch * out_dim];
+    let mut feats = vec![0f32; f * d];
+    for b in 0..batch {
+        // assemble [f, d]: dense row then sparse rows
+        feats[..d].copy_from_slice(&dense[b * d..(b + 1) * d]);
+        for s in 0..num_sparse {
+            let src = &sparse[(b * num_sparse + s) * d..(b * num_sparse + s + 1) * d];
+            feats[(s + 1) * d..(s + 2) * d].copy_from_slice(src);
+        }
+        let o = &mut out[b * out_dim..(b + 1) * out_dim];
+        o[..d].copy_from_slice(&feats[..d]);
+        // upper-triangular pairwise dots, (i, j) with i < j, row-major like
+        // jnp.triu_indices
+        let mut p = d;
+        for i in 0..f {
+            for j in (i + 1)..f {
+                let mut acc = 0f32;
+                for t in 0..d {
+                    acc += feats[i * d + t] * feats[j * d + t];
+                }
+                o[p] = acc;
+                p += 1;
+            }
+        }
+    }
+    out
+}
+
+/// 2D convolution, NHWC x HWIO → NHWC, SAME padding.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    groups: usize,
+) -> Vec<f32> {
+    let oh = h.div_ceil(stride);
+    let ow = wd.div_ceil(stride);
+    let cing = cin / groups;
+    let coutg = cout / groups;
+    // SAME padding offsets
+    let pad_h = ((oh - 1) * stride + kh).saturating_sub(h) / 2;
+    let pad_w = ((ow - 1) * stride + kw).saturating_sub(wd) / 2;
+    let mut y = vec![0f32; n * oh * ow * cout];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for co in 0..cout {
+                    let g = co / coutg;
+                    let mut acc = b[co];
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - pad_w as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            for ci in 0..cing {
+                                let xi = x[((ni * h + iy as usize) * wd + ix as usize) * cin
+                                    + g * cing
+                                    + ci];
+                                let wi = w[((ky * kw + kx) * cing + ci) * cout + co];
+                                acc += xi * wi;
+                            }
+                        }
+                    }
+                    y[((ni * oh + oy) * ow + ox) * cout + co] = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Global average pool NHWC → [n, c].
+pub fn global_avgpool(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut y = vec![0f32; n * c];
+    let inv = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut acc = 0f32;
+            for yi in 0..h {
+                for xi in 0..w {
+                    acc += x[((ni * h + yi) * w + xi) * c + ci];
+                }
+            }
+            y[ni * c + ci] = acc * inv;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::quant::quantize_rowwise_int8;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn fc_identity() {
+        // w = I, b = 0 -> y = x
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![0.0, 0.0];
+        assert_eq!(fc(&x, &w, &b, 2, 2, 2), x);
+    }
+
+    #[test]
+    fn quant_fc_close_to_fp() {
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (4, 32, 16);
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, n * k);
+        let b = randv(&mut rng, n);
+        let q = quantize_rowwise_int8(&w, n, k);
+        let yq = quant_fc(&x, &q.q, &q.scale, &q.zp, &b, m, k, n);
+        let yf = fc(&x, &w, &b, m, k, n);
+        for (a, e) in yq.iter().zip(&yf) {
+            assert!((a - e).abs() < 0.35, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn sls_masks_tail() {
+        let table = vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]; // 3 rows, dim 2
+        let indices = vec![0, 1, 2, 2]; // batch 2, max_len 2
+        let lengths = vec![2, 1];
+        let out = sls(&table, 2, &indices, &lengths, 2, 2);
+        assert_eq!(out, vec![3.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let mut rng = Rng::new(7);
+        let mut x = randv(&mut rng, 4 * 16);
+        let g = vec![1.0; 16];
+        let b = vec![0.0; 16];
+        layernorm(&mut x, &g, &b, 4, 16, 1e-5);
+        for r in 0..4 {
+            let row = &x[r * 16..(r + 1) * 16];
+            let mu: f32 = row.iter().sum::<f32>() / 16.0;
+            assert!(mu.abs() < 1e-5, "{mu}");
+        }
+    }
+
+    #[test]
+    fn attention_constant_v() {
+        let mut rng = Rng::new(9);
+        let (h, s, d) = (2, 8, 4);
+        let q = randv(&mut rng, h * s * d);
+        let k = randv(&mut rng, h * s * d);
+        let v = vec![2.5f32; h * s * d];
+        let out = attention(&q, &k, &v, h, s, d);
+        for &o in &out {
+            assert!((o - 2.5).abs() < 1e-5, "{o}");
+        }
+    }
+
+    #[test]
+    fn dot_interaction_shape_and_dense_passthrough() {
+        let mut rng = Rng::new(11);
+        let (b, d, ns) = (3, 8, 5);
+        let dense = randv(&mut rng, b * d);
+        let sparse = randv(&mut rng, b * ns * d);
+        let out = dot_interaction(&dense, &sparse, b, d, ns);
+        let f = ns + 1;
+        assert_eq!(out.len(), b * (d + f * (f - 1) / 2));
+        for bi in 0..b {
+            let od = d + f * (f - 1) / 2;
+            assert_eq!(&out[bi * od..bi * od + d], &dense[bi * d..(bi + 1) * d]);
+        }
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 conv with identity weights preserves input
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // n1 h2 w2 c1
+        let w = vec![1.0]; // 1x1x1x1
+        let b = vec![0.0];
+        let y = conv2d(&x, &w, &b, 1, 2, 2, 1, 1, 1, 1, 1, 1);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv2d_stride_downsamples() {
+        let x = vec![1.0; 1 * 4 * 4 * 1];
+        let w = vec![1.0];
+        let b = vec![0.0];
+        let y = conv2d(&x, &w, &b, 1, 4, 4, 1, 1, 1, 1, 2, 1);
+        assert_eq!(y.len(), 4); // 2x2
+    }
+
+    #[test]
+    fn global_avgpool_means() {
+        let x = vec![1.0, 3.0, 5.0, 7.0]; // n1 h2 w2 c1
+        let y = global_avgpool(&x, 1, 2, 2, 1);
+        assert_eq!(y, vec![4.0]);
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        let mut x = vec![0.0f32, 1.0, -1.0];
+        gelu(&mut x);
+        assert!(x[0].abs() < 1e-7);
+        assert!((x[1] - 0.8412).abs() < 1e-3, "{}", x[1]);
+        assert!((x[2] + 0.1588).abs() < 1e-3, "{}", x[2]);
+    }
+}

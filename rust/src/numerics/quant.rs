@@ -1,0 +1,190 @@
+//! Row-wise int8 quantization — the exact scheme of
+//! `python/compile/kernels/ref.py::quantize_rowwise_int8` (§V-B), so the
+//! Rust-generated quantized weights match what the AOT artifacts expect.
+
+/// Row-wise quantized matrix: q[(r, c)] reconstructs as (q + zp[r]) * scale[r].
+#[derive(Debug, Clone)]
+pub struct RowwiseInt8 {
+    pub q: Vec<i8>,
+    pub rows: usize,
+    pub cols: usize,
+    pub scale: Vec<f32>,
+    pub zp: Vec<f32>,
+}
+
+/// Quantize a row-major [rows, cols] f32 matrix per-row (asymmetric, 8-bit).
+pub fn quantize_rowwise_int8(w: &[f32], rows: usize, cols: usize) -> RowwiseInt8 {
+    assert_eq!(w.len(), rows * cols);
+    let mut q = vec![0i8; rows * cols];
+    let mut scale = vec![0f32; rows];
+    let mut zp = vec![0f32; rows];
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let mut wmin = 0f32;
+        let mut wmax = 0f32;
+        for &v in row {
+            wmin = wmin.min(v);
+            wmax = wmax.max(v);
+        }
+        let s = ((wmax - wmin) / 255.0).max(1e-8);
+        let z = (wmin / s).round() + 128.0;
+        scale[r] = s;
+        zp[r] = z;
+        for (c, &v) in row.iter().enumerate() {
+            let qv = (v / s - z).round().clamp(-128.0, 127.0);
+            q[r * cols + c] = qv as i8;
+        }
+    }
+    RowwiseInt8 { q, rows, cols, scale, zp }
+}
+
+/// Dequantize back to f32.
+pub fn dequantize_rowwise_int8(m: &RowwiseInt8) -> Vec<f32> {
+    let mut out = vec![0f32; m.rows * m.cols];
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            out[r * m.cols + c] = (m.q[r * m.cols + c] as f32 + m.zp[r]) * m.scale[r];
+        }
+    }
+    out
+}
+
+/// 4-bit row-wise quantization for embedding tables ([18] in the paper;
+/// §V-B "mixed int8/int4"). Values pack two per byte; per-row scale+bias.
+#[derive(Debug, Clone)]
+pub struct RowwiseInt4 {
+    pub packed: Vec<u8>,
+    pub rows: usize,
+    pub cols: usize,
+    pub scale: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+pub fn quantize_rowwise_int4(w: &[f32], rows: usize, cols: usize) -> RowwiseInt4 {
+    assert_eq!(w.len(), rows * cols);
+    let stride = cols.div_ceil(2);
+    let mut packed = vec![0u8; rows * stride];
+    let mut scale = vec![0f32; rows];
+    let mut bias = vec![0f32; rows];
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let s = ((hi - lo) / 15.0).max(1e-8);
+        scale[r] = s;
+        bias[r] = lo;
+        for c in 0..cols {
+            let qv = ((row[c] - lo) / s).round().clamp(0.0, 15.0) as u8;
+            let idx = r * stride + c / 2;
+            if c % 2 == 0 {
+                packed[idx] |= qv;
+            } else {
+                packed[idx] |= qv << 4;
+            }
+        }
+    }
+    RowwiseInt4 { packed, rows, cols, scale, bias }
+}
+
+pub fn dequantize_rowwise_int4(m: &RowwiseInt4) -> Vec<f32> {
+    let stride = m.cols.div_ceil(2);
+    let mut out = vec![0f32; m.rows * m.cols];
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            let byte = m.packed[r * stride + c / 2];
+            let nib = if c % 2 == 0 { byte & 0xf } else { byte >> 4 };
+            out[r * m.cols + c] = nib as f32 * m.scale[r] + m.bias[r];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn int8_roundtrip_error_within_half_lsb() {
+        let mut rng = Rng::new(1);
+        let (r, c) = (17, 33);
+        let w = rand_mat(&mut rng, r, c);
+        let q = quantize_rowwise_int8(&w, r, c);
+        let deq = dequantize_rowwise_int8(&q);
+        for row in 0..r {
+            for col in 0..c {
+                let err = (deq[row * c + col] - w[row * c + col]).abs();
+                assert!(err <= 0.75 * q.scale[row], "err {err} scale {}", q.scale[row]);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_maps_near_zero() {
+        // rows including 0 reconstruct 0 within half an LSB (asymmetric grid)
+        let w = vec![0.0, 0.5, 1.0, -0.25];
+        let q = quantize_rowwise_int8(&w, 1, 4);
+        let deq = dequantize_rowwise_int8(&q);
+        assert!(deq[0].abs() <= 0.5 * q.scale[0]);
+    }
+
+    #[test]
+    fn int8_constant_row() {
+        let w = vec![3.5; 8];
+        let q = quantize_rowwise_int8(&w, 1, 8);
+        let deq = dequantize_rowwise_int8(&q);
+        for v in deq {
+            assert!((v - 3.5).abs() < 0.05, "{v}");
+        }
+    }
+
+    #[test]
+    fn int4_roundtrip_error_within_lsb() {
+        let mut rng = Rng::new(2);
+        let (r, c) = (9, 15); // odd cols exercise packing
+        let w = rand_mat(&mut rng, r, c);
+        let q = quantize_rowwise_int4(&w, r, c);
+        assert_eq!(q.packed.len(), r * 8);
+        let deq = dequantize_rowwise_int4(&q);
+        for row in 0..r {
+            for col in 0..c {
+                let err = (deq[row * c + col] - w[row * c + col]).abs();
+                assert!(err <= 0.75 * q.scale[row], "err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_is_coarser_than_int8() {
+        let mut rng = Rng::new(3);
+        let (r, c) = (4, 64);
+        let w = rand_mat(&mut rng, r, c);
+        let e8: f32 = dequantize_rowwise_int8(&quantize_rowwise_int8(&w, r, c))
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        let e4: f32 = dequantize_rowwise_int4(&quantize_rowwise_int4(&w, r, c))
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(e4 > 4.0 * e8, "e4 {e4} e8 {e8}");
+    }
+
+    #[test]
+    fn int4_memory_is_half_of_int8() {
+        let w = vec![0.0f32; 10 * 64];
+        let q8 = quantize_rowwise_int8(&w, 10, 64);
+        let q4 = quantize_rowwise_int4(&w, 10, 64);
+        assert_eq!(q4.packed.len() * 2, q8.q.len());
+    }
+}

@@ -1,0 +1,427 @@
+//! Numerics validation (§V-C): recompute every artifact's outputs with the
+//! Rust reference ops and compare against what PJRT produced.
+//!
+//! The reference models mirror `python/compile/models/*.py` exactly; weights
+//! come from the same deterministic generator the runtime uploads, so any
+//! disagreement isolates a numerics bug in the artifact/runtime path — the
+//! same role the paper's FakeLowP reference implementations play against the
+//! vendor kernels.
+
+use crate::numerics::ops_ref as ops;
+use crate::numerics::weights::WeightGen;
+use crate::numerics::HostTensor;
+use crate::runtime::artifact::{Artifact, InputKind, Manifest};
+use crate::util::stats::cosine_similarity;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Comparison outcome for one artifact run.
+#[derive(Debug, Clone)]
+pub struct Validation {
+    pub artifact: String,
+    pub max_abs_err: f64,
+    pub cosine: f64,
+    pub passed: bool,
+}
+
+/// Tolerances: fp32 reference vs XLA CPU execution differ only by fma /
+/// reassociation; int8 paths are bit-deterministic modulo float epilogue.
+pub const ABS_TOL: f64 = 2e-3;
+pub const COS_TOL: f64 = 0.999;
+
+/// Compare reference vs runtime outputs.
+pub fn compare(artifact: &str, reference: &[f32], measured: &[f32]) -> Validation {
+    assert_eq!(reference.len(), measured.len(), "output length mismatch");
+    let mut max_abs = 0f64;
+    for (r, m) in reference.iter().zip(measured) {
+        max_abs = max_abs.max((*r as f64 - *m as f64).abs());
+    }
+    let cos = cosine_similarity(reference, measured);
+    Validation {
+        artifact: artifact.to_string(),
+        max_abs_err: max_abs,
+        cosine: cos,
+        passed: max_abs < ABS_TOL || cos > COS_TOL,
+    }
+}
+
+/// A named-tensor environment for reference evaluation.
+pub struct Env {
+    map: HashMap<String, HostTensor>,
+}
+
+impl Env {
+    /// Build from an artifact: generated weights + provided request inputs
+    /// (in spec order for `kind == Input`).
+    pub fn build(artifact: &Artifact, gen: &mut WeightGen, inputs: &[HostTensor]) -> Result<Env> {
+        let mut map = HashMap::new();
+        let mut it = inputs.iter();
+        for spec in &artifact.inputs {
+            let t = match spec.kind {
+                InputKind::Input => it
+                    .next()
+                    .ok_or_else(|| anyhow!("missing request input {}", spec.name))?
+                    .clone(),
+                _ => gen.generate(spec, artifact),
+            };
+            map.insert(spec.name.clone(), t);
+        }
+        if it.next().is_some() {
+            bail!("too many request inputs for {}", artifact.name);
+        }
+        Ok(Env { map })
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&[f32]> {
+        self.map
+            .get(name)
+            .and_then(HostTensor::as_f32)
+            .ok_or_else(|| anyhow!("tensor {name} missing or not f32"))
+    }
+
+    pub fn i32(&self, name: &str) -> Result<&[i32]> {
+        self.map
+            .get(name)
+            .and_then(HostTensor::as_i32)
+            .ok_or_else(|| anyhow!("tensor {name} missing or not i32"))
+    }
+
+    pub fn i8(&self, name: &str) -> Result<&[i8]> {
+        self.map
+            .get(name)
+            .and_then(HostTensor::as_i8)
+            .ok_or_else(|| anyhow!("tensor {name} missing or not i8"))
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        self.map.get(name).map(HostTensor::shape).ok_or_else(|| anyhow!("tensor {name} missing"))
+    }
+}
+
+/// Evaluate the reference model for any artifact; returns outputs in the
+/// artifact's declared order.
+pub fn reference_outputs(
+    manifest: &Manifest,
+    artifact: &Artifact,
+    gen: &mut WeightGen,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let env = Env::build(artifact, gen, inputs)?;
+    match (artifact.model.as_str(), artifact.role.as_str()) {
+        ("dlrm", "sls") => dlrm_sls_ref(manifest, artifact, &env),
+        ("dlrm", "dense") => dlrm_dense_ref(manifest, artifact, &env),
+        ("xlmr", _) => xlmr_ref(manifest, artifact, &env),
+        ("cv", _) => cv_ref(manifest, artifact, &env),
+        other => bail!("no reference model for {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DLRM
+// ---------------------------------------------------------------------------
+
+fn dlrm_sls_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+    let dim = manifest.config_usize("dlrm", "embed_dim")?;
+    let batch = artifact.batch;
+    let tables: Vec<usize> = artifact
+        .inputs
+        .iter()
+        .filter(|s| s.name.starts_with("table"))
+        .map(|s| s.name[5..].parse().unwrap())
+        .collect();
+    let mut out = vec![0f32; batch * tables.len() * dim];
+    for (ti, t) in tables.iter().enumerate() {
+        let table = env.f32(&format!("table{t}"))?;
+        let idx = env.i32(&format!("idx{t}"))?;
+        let len = env.i32(&format!("len{t}"))?;
+        let max_len = env.shape(&format!("idx{t}"))?[1];
+        let pooled = ops::sls(table, dim, idx, len, batch, max_len);
+        // interleave into [batch, n_tables, dim]
+        for b in 0..batch {
+            let dst = (b * tables.len() + ti) * dim;
+            out[dst..dst + dim].copy_from_slice(&pooled[b * dim..(b + 1) * dim]);
+        }
+    }
+    Ok(vec![HostTensor::f32(out, &[batch, tables.len(), dim])])
+}
+
+fn mlp_ref(
+    env: &Env,
+    prefix: &str,
+    widths: &[usize],
+    mut x: Vec<f32>,
+    mut d_in: usize,
+    m: usize,
+    quantized: bool,
+    final_act: bool,
+) -> Result<(Vec<f32>, usize)> {
+    for (i, &h) in widths.iter().enumerate() {
+        x = if quantized {
+            ops::quant_fc(
+                &x,
+                env.i8(&format!("{prefix}_wq{i}"))?,
+                env.f32(&format!("{prefix}_scale{i}"))?,
+                env.f32(&format!("{prefix}_zp{i}"))?,
+                env.f32(&format!("{prefix}_b{i}"))?,
+                m,
+                d_in,
+                h,
+            )
+        } else {
+            ops::fc(&x, env.f32(&format!("{prefix}_w{i}"))?, env.f32(&format!("{prefix}_b{i}"))?, m, d_in, h)
+        };
+        if i + 1 < widths.len() || final_act {
+            ops::relu(&mut x);
+        }
+        d_in = h;
+    }
+    Ok((x, d_in))
+}
+
+fn dlrm_dense_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+    let batch = artifact.batch;
+    let quantized = artifact
+        .inputs
+        .iter()
+        .any(|s| s.kind == InputKind::WeightQ);
+    let dense_in = manifest.config_usize("dlrm", "dense_in")?;
+    let num_tables = manifest.config_usize("dlrm", "num_tables")?;
+    let embed_dim = manifest.config_usize("dlrm", "embed_dim")?;
+    let bottom: Vec<usize> = read_widths(manifest, "dlrm", "bottom_mlp")?;
+    let top: Vec<usize> = read_widths(manifest, "dlrm", "top_mlp")?;
+
+    let dense = env.f32("dense")?.to_vec();
+    let sparse = env.f32("sparse")?;
+
+    let (bot, _) = mlp_ref(env, "bot", &bottom, dense, dense_in, batch, quantized, true)?;
+    let inter = ops::dot_interaction(&bot, sparse, batch, embed_dim, num_tables);
+    let inter_dim = embed_dim + (num_tables + 1) * num_tables / 2;
+    let (mut logit, _) = mlp_ref(env, "top", &top, inter, inter_dim, batch, quantized, false)?;
+    ops::sigmoid(&mut logit);
+    Ok(vec![HostTensor::f32(logit, &[batch, 1])])
+}
+
+fn read_widths(manifest: &Manifest, model: &str, key: &str) -> Result<Vec<usize>> {
+    manifest
+        .configs
+        .get(model)
+        .and_then(|m| m.get(key))
+        .and_then(crate::util::json::Json::as_arr)
+        .map(|a| a.iter().filter_map(crate::util::json::Json::as_usize).collect())
+        .ok_or_else(|| anyhow!("manifest configs.{model}.{key} missing"))
+}
+
+// ---------------------------------------------------------------------------
+// XLM-R
+// ---------------------------------------------------------------------------
+
+fn xlmr_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+    let batch = artifact.batch;
+    let seq = artifact.seq.ok_or_else(|| anyhow!("xlmr artifact missing seq"))?;
+    let layers = manifest.config_usize("xlmr", "layers")?;
+    let d = manifest.config_usize("xlmr", "d_model")?;
+    let heads = manifest.config_usize("xlmr", "heads")?;
+    let ffn = manifest.config_usize("xlmr", "ffn")?;
+    let hd = d / heads;
+
+    let ids = env.i32("ids")?;
+    let pad_len = env.i32("pad_len")?;
+    let tok = env.f32("tok_emb")?;
+    let pos = env.f32("pos_emb")?;
+
+    let bs = batch * seq;
+    let mut x = vec![0f32; bs * d];
+    for b in 0..batch {
+        for s in 0..seq {
+            let id = ids[b * seq + s] as usize;
+            let dst = (b * seq + s) * d;
+            for t in 0..d {
+                x[dst + t] = tok[id * d + t] + pos[s * d + t];
+            }
+        }
+    }
+
+    for l in 0..layers {
+        let p = format!("l{l}_");
+        // pre-LN attention
+        let mut y = x.clone();
+        ops::layernorm(&mut y, env.f32(&format!("{p}ln1_g"))?, env.f32(&format!("{p}ln1_b"))?, bs, d, 1e-5);
+        let q = ops::fc(&y, env.f32(&format!("{p}wq"))?, env.f32(&format!("{p}bq"))?, bs, d, d);
+        let k = ops::fc(&y, env.f32(&format!("{p}wk"))?, env.f32(&format!("{p}bk"))?, bs, d, d);
+        let v = ops::fc(&y, env.f32(&format!("{p}wv"))?, env.f32(&format!("{p}bv"))?, bs, d, d);
+        // [b, s, h, hd] -> per (b, h) attention
+        let mut ctx = vec![0f32; bs * d];
+        let mut qh = vec![0f32; seq * hd];
+        let mut kh = vec![0f32; seq * hd];
+        let mut vh = vec![0f32; seq * hd];
+        for b in 0..batch {
+            for h in 0..heads {
+                for s in 0..seq {
+                    let src = (b * seq + s) * d + h * hd;
+                    qh[s * hd..(s + 1) * hd].copy_from_slice(&q[src..src + hd]);
+                    kh[s * hd..(s + 1) * hd].copy_from_slice(&k[src..src + hd]);
+                    vh[s * hd..(s + 1) * hd].copy_from_slice(&v[src..src + hd]);
+                }
+                let att = ops::attention(&qh, &kh, &vh, 1, seq, hd);
+                for s in 0..seq {
+                    let dst = (b * seq + s) * d + h * hd;
+                    ctx[dst..dst + hd].copy_from_slice(&att[s * hd..(s + 1) * hd]);
+                }
+            }
+        }
+        let o = ops::fc(&ctx, env.f32(&format!("{p}wo"))?, env.f32(&format!("{p}bo"))?, bs, d, d);
+        for i in 0..bs * d {
+            x[i] += o[i];
+        }
+        // FFN
+        let mut y = x.clone();
+        ops::layernorm(&mut y, env.f32(&format!("{p}ln2_g"))?, env.f32(&format!("{p}ln2_b"))?, bs, d, 1e-5);
+        let mut h1 = ops::fc(&y, env.f32(&format!("{p}w1"))?, env.f32(&format!("{p}b1"))?, bs, d, ffn);
+        ops::gelu(&mut h1);
+        let h2 = ops::fc(&h1, env.f32(&format!("{p}w2"))?, env.f32(&format!("{p}b2"))?, bs, ffn, d);
+        for i in 0..bs * d {
+            x[i] += h2[i];
+        }
+    }
+
+    ops::layernorm(&mut x, env.f32("ln_f_g")?, env.f32("ln_f_b")?, bs, d, 1e-5);
+    // masked mean pool over valid positions
+    let mut pooled = vec![0f32; batch * d];
+    for b in 0..batch {
+        let valid = (pad_len[b].max(0) as usize).min(seq).max(0);
+        let denom = valid.max(1) as f32;
+        for s in 0..valid {
+            for t in 0..d {
+                pooled[b * d + t] += x[(b * seq + s) * d + t];
+            }
+        }
+        for t in 0..d {
+            pooled[b * d + t] /= denom;
+        }
+    }
+    Ok(vec![
+        HostTensor::f32(pooled, &[batch, d]),
+        HostTensor::f32(x, &[batch, seq, d]),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// CV trunk
+// ---------------------------------------------------------------------------
+
+fn cv_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+    let batch = artifact.batch;
+    let image = manifest.config_usize("cv", "image")?;
+    let classes = manifest.config_usize("cv", "classes")?;
+    let stem_ch = manifest.config_usize("cv", "stem_ch")?;
+    let groups = manifest.config_usize("cv", "groups")?;
+    let stages: Vec<(usize, usize)> = manifest
+        .configs
+        .get("cv")
+        .and_then(|m| m.get("stages"))
+        .and_then(crate::util::json::Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|s| {
+                    Some((s.idx(0)?.as_usize()?, s.idx(1)?.as_usize()?))
+                })
+                .collect()
+        })
+        .ok_or_else(|| anyhow!("manifest configs.cv.stages missing"))?;
+
+    let img = env.f32("image")?;
+    let mut x = ops::conv2d(
+        img,
+        env.f32("stem_w")?,
+        env.f32("stem_b")?,
+        batch,
+        image,
+        image,
+        3,
+        3,
+        3,
+        stem_ch,
+        2,
+        1,
+    );
+    ops::relu(&mut x);
+    let mut h = image.div_ceil(2);
+    let mut w = h;
+    let mut cin = stem_ch;
+    for (si, &(ch, blocks)) in stages.iter().enumerate() {
+        for bi in 0..blocks {
+            let p = format!("s{si}b{bi}");
+            let stride = if bi == 0 && si > 0 { 2 } else { 1 };
+            let mut y = ops::conv2d(
+                &x,
+                env.f32(&format!("{p}_pw1_w"))?,
+                env.f32(&format!("{p}_pw1_b"))?,
+                batch, h, w, cin, 1, 1, ch, 1, 1,
+            );
+            ops::relu(&mut y);
+            let mut y2 = ops::conv2d(
+                &y,
+                env.f32(&format!("{p}_gw_w"))?,
+                env.f32(&format!("{p}_gw_b"))?,
+                batch, h, w, ch, 3, 3, ch, stride, groups,
+            );
+            ops::relu(&mut y2);
+            let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+            let y3 = ops::conv2d(
+                &y2,
+                env.f32(&format!("{p}_pw2_w"))?,
+                env.f32(&format!("{p}_pw2_b"))?,
+                batch, oh, ow, ch, 1, 1, ch, 1, 1,
+            );
+            // residual
+            let res = if cin != ch || stride != 1 {
+                ops::conv2d(
+                    &x,
+                    env.f32(&format!("{p}_proj_w"))?,
+                    env.f32(&format!("{p}_proj_b"))?,
+                    batch, h, w, cin, 1, 1, ch, stride, 1,
+                )
+            } else {
+                x.clone()
+            };
+            let mut sum: Vec<f32> = y3.iter().zip(&res).map(|(a, b)| a + b).collect();
+            ops::relu(&mut sum);
+            x = sum;
+            h = oh;
+            w = ow;
+            cin = ch;
+        }
+    }
+    let emb = ops::global_avgpool(&x, batch, h, w, cin);
+    let logits = ops::fc(&emb, env.f32("head_w")?, env.f32("head_b")?, batch, cin, classes);
+    Ok(vec![
+        HostTensor::f32(logits, &[batch, classes]),
+        HostTensor::f32(emb, &[batch, cin]),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_identical_passes() {
+        let v = compare("t", &[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert!(v.passed);
+        assert_eq!(v.max_abs_err, 0.0);
+        assert!((v.cosine - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compare_divergent_fails() {
+        let v = compare("t", &[1.0, 2.0, 3.0], &[3.0, -1.0, 0.5]);
+        assert!(!v.passed, "{v:?}");
+    }
+
+    #[test]
+    fn compare_small_noise_passes() {
+        let a: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = a.iter().map(|x| x + 1e-5).collect();
+        assert!(compare("t", &a, &b).passed);
+    }
+}

@@ -1,0 +1,213 @@
+//! Deterministic weight generation for the AOT artifacts.
+//!
+//! Artifact weights are HLO *parameters*; the coordinator materializes them
+//! from a seed, uploads them once per card as device-resident buffers
+//! (§VI-C), and the numerics validator re-derives the identical tensors to
+//! compute reference outputs. Quantized weight groups (`*_wq/scale/zp`) are
+//! derived from one generated fp tensor so the triple stays coherent.
+
+use crate::numerics::quant::{quantize_rowwise_int8, RowwiseInt8};
+use crate::numerics::HostTensor;
+use crate::runtime::artifact::{Artifact, ArtDType, InputKind, InputSpec};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// FNV-1a hash for per-tensor seeds.
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The logical fp tensor a spec derives from: `bot_wq0`, `bot_scale0`,
+/// `bot_zp0` all map to base `bot_w0`; everything else maps to itself.
+fn base_name(name: &str) -> (String, QuantPart) {
+    for (tag, part) in [("_wq", QuantPart::Q), ("_scale", QuantPart::Scale), ("_zp", QuantPart::Zp)]
+    {
+        if let Some(pos) = name.find(tag) {
+            let (pre, idx) = name.split_at(pos);
+            let idx = &idx[tag.len()..];
+            // require a numeric suffix: distinguishes the quantized-group
+            // tags (bot_wq0/bot_scale0) from look-alikes such as the XLM-R
+            // query projection "l0_wq"
+            if !idx.is_empty() && idx.chars().all(|c| c.is_ascii_digit()) {
+                return (format!("{pre}_w{idx}"), part);
+            }
+        }
+    }
+    (name.to_string(), QuantPart::None)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QuantPart {
+    None,
+    Q,
+    Scale,
+    Zp,
+}
+
+/// Generate the fp tensor for a base weight name.
+fn gen_fp(name: &str, shape: &[usize], seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ fnv(name));
+    let n: usize = shape.iter().product();
+    // He-style init: std = 1/sqrt(fan_in); embeddings and vectors use 0.1
+    let fan_in = if shape.len() >= 2 { shape[shape.len() - 1] } else { 0 };
+    let std = if fan_in > 0 { (1.0 / fan_in as f32).sqrt() } else { 0.1 };
+    let mut v = vec![0f32; n];
+    rng.fill_normal_f32(&mut v, std);
+    v
+}
+
+/// Generator with a cache of quantized groups.
+pub struct WeightGen {
+    pub seed: u64,
+    quant_cache: HashMap<String, RowwiseInt8>,
+}
+
+impl WeightGen {
+    pub fn new(seed: u64) -> Self {
+        WeightGen { seed, quant_cache: HashMap::new() }
+    }
+
+    /// The fp tensor behind a (possibly quantized) weight spec — what the
+    /// reference model computes with for non-quantized layers.
+    pub fn fp_weight(&self, spec: &InputSpec) -> Vec<f32> {
+        let (base, _) = base_name(&spec.name);
+        gen_fp(&base, &spec.shape, self.seed)
+    }
+
+    fn quant_group(&mut self, base: &str, rows: usize, cols: usize) -> &RowwiseInt8 {
+        let seed = self.seed;
+        self.quant_cache.entry(base.to_string()).or_insert_with(|| {
+            let fp = gen_fp(base, &[rows, cols], seed);
+            quantize_rowwise_int8(&fp, rows, cols)
+        })
+    }
+
+    /// Materialize one weight spec.
+    pub fn generate(&mut self, spec: &InputSpec, artifact: &Artifact) -> HostTensor {
+        let (base, part) = base_name(&spec.name);
+        match part {
+            QuantPart::None => {
+                debug_assert!(spec.dtype == ArtDType::F32 || spec.dtype == ArtDType::F16);
+                HostTensor::f32(gen_fp(&base, &spec.shape, self.seed), &spec.shape)
+            }
+            QuantPart::Q => {
+                let (rows, cols) = (spec.shape[0], spec.shape[1]);
+                let q = self.quant_group(&base, rows, cols);
+                HostTensor::i8(q.q.clone(), &spec.shape)
+            }
+            QuantPart::Scale | QuantPart::Zp => {
+                // shape [n]; rows/cols come from the matching wq spec
+                let wq = artifact
+                    .inputs
+                    .iter()
+                    .find(|s| base_name(&s.name) == (base.clone(), QuantPart::Q))
+                    .expect("scale/zp without wq sibling");
+                let (rows, cols) = (wq.shape[0], wq.shape[1]);
+                let q = self.quant_group(&base, rows, cols);
+                let v = if part == QuantPart::Scale { q.scale.clone() } else { q.zp.clone() };
+                HostTensor::f32(v, &spec.shape)
+            }
+        }
+    }
+
+    /// All weights of an artifact, in spec order.
+    pub fn weights_for(&mut self, artifact: &Artifact) -> Vec<(String, HostTensor)> {
+        artifact
+            .inputs
+            .iter()
+            .filter(|s| s.kind != InputKind::Input)
+            .map(|s| (s.name.clone(), self.generate(s, artifact)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{ArtDType, InputKind, InputSpec};
+
+    fn spec(name: &str, shape: &[usize], dt: ArtDType, kind: InputKind) -> InputSpec {
+        InputSpec { name: name.into(), shape: shape.to_vec(), dtype: dt, kind }
+    }
+
+    fn art(inputs: Vec<InputSpec>) -> Artifact {
+        Artifact {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            model: "t".into(),
+            role: "full".into(),
+            batch: 1,
+            seq: None,
+            shard: None,
+            inputs,
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn deterministic_across_generators() {
+        let s = spec("bot_w0", &[8, 4], ArtDType::F32, InputKind::Weight);
+        let a = art(vec![s.clone()]);
+        let mut g1 = WeightGen::new(42);
+        let mut g2 = WeightGen::new(42);
+        assert_eq!(g1.generate(&s, &a), g2.generate(&s, &a));
+        let mut g3 = WeightGen::new(43);
+        assert_ne!(g1.generate(&s, &a), g3.generate(&s, &a));
+    }
+
+    #[test]
+    fn quant_group_coherent() {
+        // wq/scale/zp must reconstruct the same fp tensor the fp path sees
+        let wq = spec("bot_wq0", &[8, 4], ArtDType::I8, InputKind::WeightQ);
+        let sc = spec("bot_scale0", &[8], ArtDType::F32, InputKind::Weight);
+        let zp = spec("bot_zp0", &[8], ArtDType::F32, InputKind::Weight);
+        let fp = spec("bot_w0", &[8, 4], ArtDType::F32, InputKind::Weight);
+        let a = art(vec![wq.clone(), sc.clone(), zp.clone()]);
+        let mut g = WeightGen::new(7);
+        let q = g.generate(&wq, &a);
+        let s = g.generate(&sc, &a);
+        let z = g.generate(&zp, &a);
+        let w = g.fp_weight(&fp);
+        // dequantize and compare to the fp tensor
+        let qd = q.as_i8().unwrap();
+        let sd = s.as_f32().unwrap();
+        let zd = z.as_f32().unwrap();
+        for r in 0..8 {
+            for c in 0..4 {
+                let deq = (qd[r * 4 + c] as f32 + zd[r]) * sd[r];
+                assert!((deq - w[r * 4 + c]).abs() <= 0.75 * sd[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn fan_in_scaling() {
+        let wide = spec("w_a", &[4, 4096], ArtDType::F32, InputKind::Weight);
+        let narrow = spec("w_b", &[4, 4], ArtDType::F32, InputKind::Weight);
+        let a = art(vec![wide.clone(), narrow.clone()]);
+        let mut g = WeightGen::new(1);
+        let vw = g.generate(&wide, &a);
+        let vn = g.generate(&narrow, &a);
+        let std = |v: &[f32]| {
+            let m: f32 = v.iter().sum::<f32>() / v.len() as f32;
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / v.len() as f32).sqrt()
+        };
+        assert!(std(vw.as_f32().unwrap()) < 0.1 * std(vn.as_f32().unwrap()));
+    }
+
+    #[test]
+    fn weights_for_skips_request_inputs() {
+        let w = spec("w", &[2, 2], ArtDType::F32, InputKind::Weight);
+        let x = spec("x", &[1, 2], ArtDType::F32, InputKind::Input);
+        let a = art(vec![w, x]);
+        let mut g = WeightGen::new(1);
+        let ws = g.weights_for(&a);
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].0, "w");
+    }
+}

@@ -1,0 +1,225 @@
+//! Hardware description of the accelerator node (§III).
+//!
+//! One node = host CPU (Xeon-D, 64 GB) + PCIe switch + six M.2 accelerator
+//! cards. Per card: Accel Cores with local SRAM, a shared cache, 16 GB
+//! LPDDR; 30–45 TOPS int8 / 4–6 TFLOPS fp16 at 13 W. The switch gives
+//! card↔card peer-to-peer without touching the host (§III-A).
+
+pub mod topology;
+
+/// One accelerator card (§III-B, Figure 4).
+#[derive(Debug, Clone)]
+pub struct CardSpec {
+    /// Number of Accel Cores.
+    pub accel_cores: usize,
+    /// Peak int8 tera-ops/sec across all cores (30–45 depending on freq).
+    pub peak_tops_int8: f64,
+    /// Peak fp16 tera-flops/sec (4–6).
+    pub peak_tflops_fp16: f64,
+    /// LPDDR capacity, bytes (16 GB).
+    pub lpddr_bytes: usize,
+    /// LPDDR bandwidth, bytes/sec.
+    pub lpddr_bw: f64,
+    /// Per-core local SRAM, bytes.
+    pub sram_per_core: usize,
+    /// Shared on-chip cache, bytes.
+    pub shared_cache: usize,
+    /// On-chip (SRAM) bandwidth, bytes/sec.
+    pub sram_bw: f64,
+    /// Card power, watts.
+    pub power_w: f64,
+    /// PCIe lanes to the switch (x4).
+    pub pcie_lanes: usize,
+}
+
+impl Default for CardSpec {
+    fn default() -> Self {
+        CardSpec {
+            accel_cores: 12,
+            peak_tops_int8: 37.5,        // midpoint of 30-45
+            peak_tflops_fp16: 5.0,       // midpoint of 4-6
+            lpddr_bytes: 16 << 30,
+            lpddr_bw: 60e9,              // LPDDR4x-class aggregate
+            sram_per_core: 2 << 20,
+            shared_cache: 24 << 20,
+            sram_bw: 400e9,
+            power_w: 13.0,
+            pcie_lanes: 4,
+        }
+    }
+}
+
+impl CardSpec {
+    /// Peak compute for a precision class, ops/sec.
+    pub fn peak_ops(&self, int8: bool) -> f64 {
+        if int8 {
+            self.peak_tops_int8 * 1e12
+        } else {
+            self.peak_tflops_fp16 * 1e12
+        }
+    }
+
+    /// Total on-chip memory usable for weights (§III-B).
+    pub fn onchip_bytes(&self) -> usize {
+        self.accel_cores * self.sram_per_core + self.shared_cache
+    }
+}
+
+/// Host CPU (§III-A: Intel Xeon D, 64 GB).
+#[derive(Debug, Clone)]
+pub struct HostSpec {
+    pub cores: usize,
+    pub mem_bytes: usize,
+    pub mem_bw: f64,
+    /// Sustained host GFLOPs for the net portions kept on CPU (§VI-A).
+    pub gflops: f64,
+}
+
+impl Default for HostSpec {
+    fn default() -> Self {
+        HostSpec {
+            cores: 16,
+            mem_bytes: 64 << 30,
+            mem_bw: 80e9,
+            gflops: 600.0,
+        }
+    }
+}
+
+/// PCIe fabric (§III-A): x4 per card to the switch, x16 switch to host.
+#[derive(Debug, Clone)]
+pub struct PcieSpec {
+    /// Effective bytes/sec per lane (PCIe gen3 ~0.985 GB/s).
+    pub lane_bw: f64,
+    pub host_lanes: usize,
+    pub switch_power_w: f64,
+    /// Per-transfer fixed latency (doorbell + DMA setup), seconds.
+    pub transfer_overhead_s: f64,
+}
+
+impl Default for PcieSpec {
+    fn default() -> Self {
+        PcieSpec {
+            lane_bw: 0.985e9,
+            host_lanes: 16,
+            switch_power_w: 13.0,
+            transfer_overhead_s: 6e-6,
+        }
+    }
+}
+
+/// NIC (§III-A: upgraded 50 Gbps multi-host NIC).
+#[derive(Debug, Clone)]
+pub struct NicSpec {
+    pub bw_bits: f64,
+}
+
+impl Default for NicSpec {
+    fn default() -> Self {
+        NicSpec { bw_bits: 50e9 }
+    }
+}
+
+/// The whole node.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub cards: usize,
+    pub card: CardSpec,
+    pub host: HostSpec,
+    pub pcie: PcieSpec,
+    pub nic: NicSpec,
+}
+
+impl Default for NodeSpec {
+    fn default() -> Self {
+        NodeSpec {
+            cards: 6,
+            card: CardSpec::default(),
+            host: HostSpec::default(),
+            pcie: PcieSpec::default(),
+            nic: NicSpec::default(),
+        }
+    }
+}
+
+impl NodeSpec {
+    /// Aggregate peak int8 TOPS (paper: 180–270).
+    pub fn total_tops_int8(&self) -> f64 {
+        self.cards as f64 * self.card.peak_tops_int8
+    }
+
+    /// Aggregate peak fp16 TFLOPS (paper: 24–36).
+    pub fn total_tflops_fp16(&self) -> f64 {
+        self.cards as f64 * self.card.peak_tflops_fp16
+    }
+
+    /// Total accelerator LPDDR (paper: 96 GB).
+    pub fn total_lpddr(&self) -> usize {
+        self.cards * self.card.lpddr_bytes
+    }
+
+    /// Memory visible to a model: cards + host (paper: "about 160 GB").
+    pub fn total_memory(&self) -> usize {
+        self.total_lpddr() + self.host.mem_bytes
+    }
+
+    /// Accelerator subsystem power: cards + switch (paper: 91 W).
+    pub fn accel_power_w(&self) -> f64 {
+        self.cards as f64 * self.card.power_w + self.pcie.switch_power_w
+    }
+
+    /// Peak efficiency, TOPS/W (paper: 2.0–3.0).
+    pub fn tops_per_watt(&self) -> f64 {
+        self.total_tops_int8() / self.accel_power_w()
+    }
+
+    /// PCIe bandwidth card<->switch, bytes/sec.
+    pub fn card_link_bw(&self) -> f64 {
+        self.card.pcie_lanes as f64 * self.pcie.lane_bw
+    }
+
+    /// PCIe bandwidth switch<->host, bytes/sec.
+    pub fn host_link_bw(&self) -> f64 {
+        self.pcie.host_lanes as f64 * self.pcie.lane_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_numbers() {
+        let n = NodeSpec::default();
+        // §I: 180-270 TOPS int8, 24-36 TFLOPS fp16, 96 GB, 91 W, 2.0-3.0 TOPS/W
+        assert!(n.total_tops_int8() >= 180.0 && n.total_tops_int8() <= 270.0);
+        assert!(n.total_tflops_fp16() >= 24.0 && n.total_tflops_fp16() <= 36.0);
+        assert_eq!(n.total_lpddr(), 96 << 30);
+        assert!((n.accel_power_w() - 91.0).abs() < 1e-9);
+        let eff = n.tops_per_watt();
+        assert!(eff >= 2.0 && eff <= 3.0, "{eff}");
+    }
+
+    #[test]
+    fn total_memory_about_160gb() {
+        let n = NodeSpec::default();
+        let gb = n.total_memory() as f64 / (1u64 << 30) as f64;
+        assert!((gb - 160.0).abs() < 1.0, "{gb}");
+    }
+
+    #[test]
+    fn link_bandwidths() {
+        let n = NodeSpec::default();
+        assert!(n.card_link_bw() < n.host_link_bw());
+        // x4 gen3 ~ 3.9 GB/s
+        assert!((n.card_link_bw() - 3.94e9).abs() / 3.94e9 < 0.01);
+    }
+
+    #[test]
+    fn onchip_memory_tens_of_mb() {
+        // §III-B: weights of tens of MB should fit on-chip
+        let c = CardSpec::default();
+        let mb = c.onchip_bytes() as f64 / (1 << 20) as f64;
+        assert!(mb >= 30.0 && mb <= 100.0, "{mb}");
+    }
+}

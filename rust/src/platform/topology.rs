@@ -1,0 +1,119 @@
+//! Node topology: who talks to whom over which link (§III-A).
+//!
+//! Transfers are routed host↔card (via switch + host x16 link) or card↔card
+//! peer-to-peer (switch only — the §VI-C optimization that halves PCIe
+//! traffic for the recsys partitioning scheme).
+
+use super::NodeSpec;
+
+/// Endpoints in the node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    Host,
+    Card(usize),
+}
+
+/// A route between endpoints: the set of links a transfer occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// host x16 link + one card x4 link.
+    HostCard { card: usize },
+    /// two card x4 links through the switch, host uninvolved.
+    PeerToPeer { from: usize, to: usize },
+    /// same device; free.
+    Local,
+}
+
+impl Route {
+    pub fn between(a: Endpoint, b: Endpoint) -> Route {
+        match (a, b) {
+            (Endpoint::Host, Endpoint::Card(c)) | (Endpoint::Card(c), Endpoint::Host) => {
+                Route::HostCard { card: c }
+            }
+            (Endpoint::Card(x), Endpoint::Card(y)) if x != y => {
+                Route::PeerToPeer { from: x, to: y }
+            }
+            _ => Route::Local,
+        }
+    }
+
+    /// Bottleneck bandwidth of the route, bytes/sec.
+    pub fn bandwidth(&self, node: &NodeSpec) -> f64 {
+        match self {
+            Route::HostCard { .. } => node.card_link_bw().min(node.host_link_bw()),
+            Route::PeerToPeer { .. } => node.card_link_bw(),
+            Route::Local => f64::INFINITY,
+        }
+    }
+
+    /// Ideal (uncontended) transfer time for `bytes`.
+    pub fn transfer_time(&self, node: &NodeSpec, bytes: usize) -> f64 {
+        match self {
+            Route::Local => 0.0,
+            _ => node.pcie.transfer_overhead_s + bytes as f64 / self.bandwidth(node),
+        }
+    }
+
+    /// Links occupied, as (card link ids, uses host link). The switch is
+    /// non-blocking; only the x4 card links and x16 host link contend.
+    pub fn links(&self) -> (Vec<usize>, bool) {
+        match self {
+            Route::HostCard { card } => (vec![*card], true),
+            Route::PeerToPeer { from, to } => (vec![*from, *to], false),
+            Route::Local => (vec![], false),
+        }
+    }
+}
+
+/// Host-mediated equivalent of a card↔card transfer — what the system did
+/// *before* the P2P optimization of §VI-C: card→host then host→card, two
+/// traversals of the host link.
+pub fn host_mediated_time(node: &NodeSpec, bytes: usize) -> f64 {
+    let up = Route::HostCard { card: 0 }.transfer_time(node, bytes);
+    let down = Route::HostCard { card: 1 }.transfer_time(node, bytes);
+    up + down
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_rules() {
+        assert_eq!(
+            Route::between(Endpoint::Host, Endpoint::Card(2)),
+            Route::HostCard { card: 2 }
+        );
+        assert_eq!(
+            Route::between(Endpoint::Card(1), Endpoint::Card(3)),
+            Route::PeerToPeer { from: 1, to: 3 }
+        );
+        assert_eq!(Route::between(Endpoint::Card(1), Endpoint::Card(1)), Route::Local);
+        assert_eq!(Route::between(Endpoint::Host, Endpoint::Host), Route::Local);
+    }
+
+    #[test]
+    fn p2p_beats_host_mediated() {
+        let node = NodeSpec::default();
+        let bytes = 1 << 20;
+        let p2p = Route::PeerToPeer { from: 0, to: 1 }.transfer_time(&node, bytes);
+        let via_host = host_mediated_time(&node, bytes);
+        assert!(via_host > 1.9 * p2p, "p2p {p2p} via_host {via_host}");
+    }
+
+    #[test]
+    fn local_is_free() {
+        let node = NodeSpec::default();
+        assert_eq!(Route::Local.transfer_time(&node, 123456), 0.0);
+    }
+
+    #[test]
+    fn links_accounting() {
+        let (cards, host) = Route::HostCard { card: 4 }.links();
+        assert_eq!(cards, vec![4]);
+        assert!(host);
+        let (cards, host) = Route::PeerToPeer { from: 0, to: 5 }.links();
+        assert_eq!(cards, vec![0, 5]);
+        assert!(!host);
+    }
+}

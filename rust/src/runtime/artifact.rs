@@ -1,0 +1,235 @@
+//! AOT artifact manifest (`artifacts/manifest.json`) — the contract between
+//! `python/compile/aot.py` (build time) and this runtime (serve time).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Tensor dtypes used in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtDType {
+    F32,
+    F16,
+    I32,
+    I8,
+}
+
+impl ArtDType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => ArtDType::F32,
+            "f16" => ArtDType::F16,
+            "i32" => ArtDType::I32,
+            "i8" => ArtDType::I8,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            ArtDType::F32 | ArtDType::I32 => 4,
+            ArtDType::F16 => 2,
+            ArtDType::I8 => 1,
+        }
+    }
+}
+
+/// Whether an input is a weight (uploaded once) or a request tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputKind {
+    /// fp weight generated deterministically from the seed.
+    Weight,
+    /// int8 row-wise quantized weight derived from a generated fp weight.
+    WeightQ,
+    /// per-request input.
+    Input,
+}
+
+/// One input spec of an artifact.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: ArtDType,
+    pub kind: InputKind,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One output spec.
+#[derive(Debug, Clone)]
+pub struct OutputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: ArtDType,
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub model: String,
+    pub role: String,
+    pub batch: usize,
+    pub seq: Option<usize>,
+    pub shard: Option<usize>,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<OutputSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+    /// raw "configs" section (model hyperparameters for weight generation).
+    pub configs: Json,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("version").and_then(Json::as_i64) != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            artifacts.push(parse_artifact(a, dir)?);
+        }
+        let configs = j.get("configs").cloned().unwrap_or(Json::Obj(Default::default()));
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, configs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// All artifacts for a model/role.
+    pub fn select(&self, model: &str, role: &str) -> Vec<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.model == model && a.role == role)
+            .collect()
+    }
+
+    /// Config value lookup, e.g. `config_usize("dlrm", "embed_dim")`.
+    pub fn config_usize(&self, model: &str, key: &str) -> Result<usize> {
+        self.configs
+            .get(model)
+            .and_then(|m| m.get(key))
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest configs.{model}.{key} missing"))
+    }
+}
+
+fn parse_artifact(a: &Json, dir: &Path) -> Result<Artifact> {
+    let name = a
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("artifact missing name"))?
+        .to_string();
+    let file = dir.join(
+        a.get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+    );
+    let mut inputs = Vec::new();
+    for i in a.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+        let kind = match i.get("kind").and_then(Json::as_str).unwrap_or("input") {
+            "weight" => InputKind::Weight,
+            "weight_q" => InputKind::WeightQ,
+            _ => InputKind::Input,
+        };
+        inputs.push(InputSpec {
+            name: i
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("input missing name"))?
+                .to_string(),
+            shape: i
+                .get("shape")
+                .and_then(Json::as_arr)
+                .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            dtype: ArtDType::parse(i.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?,
+            kind,
+        });
+    }
+    let mut outputs = Vec::new();
+    for o in a.get("outputs").and_then(Json::as_arr).unwrap_or(&[]) {
+        outputs.push(OutputSpec {
+            shape: o
+                .get("shape")
+                .and_then(Json::as_arr)
+                .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            dtype: ArtDType::parse(o.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?,
+        });
+    }
+    Ok(Artifact {
+        name,
+        file,
+        model: a.get("model").and_then(Json::as_str).unwrap_or("").to_string(),
+        role: a.get("role").and_then(Json::as_str).unwrap_or("").to_string(),
+        batch: a.get("batch").and_then(Json::as_usize).unwrap_or(1),
+        seq: a.get("seq").and_then(Json::as_usize),
+        shard: a.get("shard").and_then(Json::as_usize),
+        inputs,
+        outputs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "m_b2", "file": "m_b2.hlo.txt", "model": "m", "role": "full",
+         "batch": 2,
+         "inputs": [
+           {"name": "w", "shape": [4, 3], "dtype": "f32", "kind": "weight"},
+           {"name": "x", "shape": [2, 3], "dtype": "f32", "kind": "input"}
+         ],
+         "outputs": [{"shape": [2, 4], "dtype": "f32"}]}
+      ],
+      "configs": {"m": {"dim": 3}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("fbia_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("m_b2").unwrap();
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.inputs[0].kind, InputKind::Weight);
+        assert_eq!(a.inputs[1].kind, InputKind::Input);
+        assert_eq!(a.outputs[0].shape, vec![2, 4]);
+        assert_eq!(m.config_usize("m", "dim").unwrap(), 3);
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.select("m", "full").len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("fbia_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 9}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

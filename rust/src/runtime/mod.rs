@@ -1,0 +1,246 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
+//! Rust hot path (§IV-A: "a custom binary which implements a service to
+//! respond to requests and execute inferences using the previously compiled
+//! network"). Python is never involved here.
+//!
+//! Weights are uploaded once as device-resident buffers and reused across
+//! requests (`execute_b`), mirroring the paper's device-resident tensors
+//! (§VI-C); per-request inputs are small fresh buffers.
+
+pub mod artifact;
+
+use crate::numerics::HostTensor;
+use anyhow::{anyhow, bail, Context, Result};
+use artifact::{ArtDType, Artifact, InputKind, Manifest};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Shared PJRT engine: one CPU client + a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The underlying PJRT client is thread-safe; the xla crate just doesn't mark
+// its wrappers Send/Sync. Executions are additionally serialized per
+// prepared model by a mutex in `PreparedModel::run`.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create from an artifacts directory (must contain manifest.json).
+    pub fn load(dir: &std::path::Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Engine { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn compile(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let art = self.manifest.get(name)?;
+        let path = art
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.compiled.lock().unwrap().insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Upload a host tensor as a device buffer.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        match t {
+            HostTensor::F32(d, s) => self
+                .client
+                .buffer_from_host_buffer(d, s, None)
+                .context("uploading f32 buffer"),
+            HostTensor::I32(d, s) => self
+                .client
+                .buffer_from_host_buffer(d, s, None)
+                .context("uploading i32 buffer"),
+            HostTensor::I8(d, s) => {
+                let bytes: &[u8] =
+                    unsafe { std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len()) };
+                self.client
+                    .buffer_from_host_raw_bytes(xla::ElementType::S8, bytes, s, None)
+                    .context("uploading i8 buffer")
+            }
+        }
+    }
+
+    /// Prepare an artifact for serving: compile + upload its weights as
+    /// device-resident buffers (in spec order).
+    pub fn prepare(&self, name: &str, weights: &[(String, HostTensor)]) -> Result<PreparedModel> {
+        let exe = self.compile(name)?;
+        let art = self.manifest.get(name)?.clone();
+        // weights must cover every non-Input spec, in order
+        let expected: Vec<&str> = art
+            .inputs
+            .iter()
+            .filter(|s| s.kind != InputKind::Input)
+            .map(|s| s.name.as_str())
+            .collect();
+        let got: Vec<&str> = weights.iter().map(|(n, _)| n.as_str()).collect();
+        if expected != got {
+            bail!("weight mismatch for {name}: expected {expected:?}, got {got:?}");
+        }
+        let mut bufs = Vec::with_capacity(weights.len());
+        for (wname, t) in weights {
+            let spec = art.inputs.iter().find(|s| &s.name == wname).unwrap();
+            if t.shape() != spec.shape.as_slice() {
+                bail!("weight {wname} shape {:?} != spec {:?}", t.shape(), spec.shape);
+            }
+            bufs.push(self.upload(t)?);
+        }
+        Ok(PreparedModel { art, exe, weight_bufs: bufs, exec_lock: Mutex::new(()) })
+    }
+
+    /// One-shot execute with all inputs as literals (no resident weights) —
+    /// the "before" configuration of the §Perf device-resident ablation.
+    pub fn execute_all_literals(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.compile(name)?;
+        let art = self.manifest.get(name)?;
+        if inputs.len() != art.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", art.inputs.len(), inputs.len());
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let out = exe.execute::<xla::Literal>(&lits)?;
+        tuple_outputs(out, art)
+    }
+}
+
+/// A compiled artifact with device-resident weights, ready to serve.
+pub struct PreparedModel {
+    pub art: Artifact,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    exec_lock: Mutex<()>,
+}
+
+unsafe impl Send for PreparedModel {}
+unsafe impl Sync for PreparedModel {}
+
+impl PreparedModel {
+    /// Execute with per-request inputs (in spec order for `kind == Input`).
+    /// Weights ride along from their resident buffers.
+    pub fn run(&self, engine: &Engine, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(engine, &refs)
+    }
+
+    /// Zero-copy variant of [`Self::run`]: the serving hot path passes
+    /// borrowed request tensors, avoiding a host-side memcpy per tensor per
+    /// request (§Perf item L3-1 in EXPERIMENTS.md).
+    pub fn run_refs(&self, engine: &Engine, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let n_inputs = self
+            .art
+            .inputs
+            .iter()
+            .filter(|s| s.kind == InputKind::Input)
+            .count();
+        if inputs.len() != n_inputs {
+            bail!("{}: expected {} request inputs, got {}", self.art.name, n_inputs, inputs.len());
+        }
+        // upload fresh per-request buffers, then stitch weight + input
+        // buffer references together in spec order
+        let mut fresh: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut xi = 0usize;
+        for spec in &self.art.inputs {
+            if spec.kind == InputKind::Input {
+                let t = &inputs[xi];
+                if t.shape() != spec.shape.as_slice() {
+                    bail!("input {} shape {:?} != spec {:?}", spec.name, t.shape(), spec.shape);
+                }
+                fresh.push(engine.upload(t)?);
+                xi += 1;
+            }
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.art.inputs.len());
+        let mut wi = 0usize;
+        let mut fi = 0usize;
+        for spec in &self.art.inputs {
+            match spec.kind {
+                InputKind::Input => {
+                    refs.push(&fresh[fi]);
+                    fi += 1;
+                }
+                _ => {
+                    refs.push(&self.weight_bufs[wi]);
+                    wi += 1;
+                }
+            }
+        }
+        let _guard = self.exec_lock.lock().unwrap();
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        drop(_guard);
+        tuple_outputs(out, &self.art)
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    Ok(match t {
+        HostTensor::F32(d, s) => {
+            let dims: Vec<i64> = s.iter().map(|&x| x as i64).collect();
+            xla::Literal::vec1(d).reshape(&dims)?
+        }
+        HostTensor::I32(d, s) => {
+            let dims: Vec<i64> = s.iter().map(|&x| x as i64).collect();
+            xla::Literal::vec1(d).reshape(&dims)?
+        }
+        HostTensor::I8(d, s) => {
+            // no NativeType impl for i8 in the xla crate: go via raw bytes
+            let bytes: &[u8] =
+                unsafe { std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len()) };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, s, bytes)?
+        }
+    })
+}
+
+/// Unpack the 1-tuple / n-tuple result into host tensors per output spec.
+fn tuple_outputs(out: Vec<Vec<xla::PjRtBuffer>>, art: &Artifact) -> Result<Vec<HostTensor>> {
+    let first = out
+        .into_iter()
+        .next()
+        .and_then(|v| v.into_iter().next())
+        .ok_or_else(|| anyhow!("no output buffer"))?;
+    let lit = first.to_literal_sync()?;
+    // jax lowered with return_tuple=True: decompose
+    let parts = lit.to_tuple()?;
+    if parts.len() != art.outputs.len() {
+        bail!("{}: {} outputs vs {} specs", art.name, parts.len(), art.outputs.len());
+    }
+    let mut res = Vec::with_capacity(parts.len());
+    for (p, spec) in parts.into_iter().zip(&art.outputs) {
+        let t = match spec.dtype {
+            ArtDType::F32 => HostTensor::f32(p.to_vec::<f32>()?, &spec.shape),
+            ArtDType::I32 => HostTensor::i32(p.to_vec::<i32>()?, &spec.shape),
+            ArtDType::F16 => {
+                // upconvert for host-side use
+                let c = p.convert(xla::PrimitiveType::F32)?;
+                HostTensor::f32(c.to_vec::<f32>()?, &spec.shape)
+            }
+            ArtDType::I8 => {
+                let c = p.convert(xla::PrimitiveType::S32)?;
+                HostTensor::i32(c.to_vec::<i32>()?, &spec.shape)
+            }
+        };
+        res.push(t);
+    }
+    Ok(res)
+}

@@ -1,0 +1,280 @@
+//! Dynamic batcher with sequence-length buckets (§VI-A padding boundaries,
+//! §VII "a smarter batching approach ... combine sentences of similar
+//! lengths").
+//!
+//! Length-aware mode groups sentences by the smallest compiled bucket that
+//! fits them, so short sentences never pad to a long sentence's bucket.
+//! Naive mode batches FIFO and pads the whole batch to the largest member's
+//! bucket — the wasted-compute baseline the paper calls out.
+
+use crate::workloads::NlpRequest;
+
+/// A formed batch: member requests + the bucket they pad to.
+#[derive(Debug, Clone)]
+pub struct NlpBatch {
+    pub requests: Vec<NlpRequest>,
+    pub bucket: usize,
+}
+
+impl NlpBatch {
+    /// Padded token-slots in the batch.
+    pub fn padded_tokens(&self) -> usize {
+        self.requests.len() * self.bucket
+    }
+
+    /// Real token count.
+    pub fn real_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.tokens.len()).sum()
+    }
+
+    /// Fraction of compute wasted on pad tokens (quadratic attention terms
+    /// ignored — this is the paper's "wasted compute on zeros" proxy).
+    pub fn waste(&self) -> f64 {
+        1.0 - self.real_tokens() as f64 / self.padded_tokens().max(1) as f64
+    }
+}
+
+/// Pick the smallest bucket that fits `len`; None if it exceeds all buckets
+/// (the request must be truncated or rejected upstream).
+pub fn bucket_for(len: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= len)
+}
+
+/// The batcher.
+pub struct Batcher {
+    pub buckets: Vec<usize>,
+    pub max_batch: usize,
+    pub length_aware: bool,
+    /// per-bucket queues (length-aware) or one FIFO (naive).
+    queues: Vec<Vec<NlpRequest>>,
+    fifo: Vec<NlpRequest>,
+    /// requests whose length exceeded the largest bucket.
+    pub rejected: usize,
+}
+
+impl Batcher {
+    pub fn new(buckets: Vec<usize>, max_batch: usize, length_aware: bool) -> Self {
+        assert!(!buckets.is_empty());
+        assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
+        let nq = buckets.len();
+        Batcher {
+            buckets,
+            max_batch,
+            length_aware,
+            queues: vec![Vec::new(); nq],
+            fifo: Vec::new(),
+            rejected: 0,
+        }
+    }
+
+    /// Enqueue one request.
+    pub fn push(&mut self, r: NlpRequest) {
+        match bucket_for(r.tokens.len(), &self.buckets) {
+            None => self.rejected += 1,
+            Some(b) => {
+                if self.length_aware {
+                    let qi = self.buckets.iter().position(|&x| x == b).unwrap();
+                    self.queues[qi].push(r);
+                } else {
+                    self.fifo.push(r);
+                }
+            }
+        }
+    }
+
+    /// Number of queued requests.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(Vec::len).sum::<usize>() + self.fifo.len()
+    }
+
+    /// Form the next batch, if any. `force` drains even sub-max batches
+    /// (timeout fired); otherwise only full batches are released.
+    pub fn pop(&mut self, force: bool) -> Option<NlpBatch> {
+        if self.length_aware {
+            // fullest queue first
+            let (qi, _) = self
+                .queues
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, q)| q.len())?;
+            let q = &mut self.queues[qi];
+            if q.is_empty() || (!force && q.len() < self.max_batch) {
+                return None;
+            }
+            let take = q.len().min(self.max_batch);
+            let requests: Vec<NlpRequest> = q.drain(..take).collect();
+            Some(NlpBatch { requests, bucket: self.buckets[qi] })
+        } else {
+            if self.fifo.is_empty() || (!force && self.fifo.len() < self.max_batch) {
+                return None;
+            }
+            let take = self.fifo.len().min(self.max_batch);
+            let requests: Vec<NlpRequest> = self.fifo.drain(..take).collect();
+            let max_len = requests.iter().map(|r| r.tokens.len()).max().unwrap_or(1);
+            let bucket = bucket_for(max_len, &self.buckets).unwrap_or(*self.buckets.last().unwrap());
+            Some(NlpBatch { requests, bucket })
+        }
+    }
+
+    /// Drain everything into batches (end of run).
+    pub fn drain(&mut self) -> Vec<NlpBatch> {
+        let mut out = Vec::new();
+        while let Some(b) = self.pop(true) {
+            out.push(b);
+        }
+        out
+    }
+}
+
+/// Pad a batch's token lists into the [batch, bucket] i32 tensor + lengths
+/// the XLM-R artifacts expect.
+pub fn pad_batch(batch: &NlpBatch, to_rows: usize) -> (Vec<i32>, Vec<i32>) {
+    let rows = to_rows.max(batch.requests.len());
+    let mut ids = vec![0i32; rows * batch.bucket];
+    let mut lens = vec![0i32; rows];
+    for (i, r) in batch.requests.iter().enumerate() {
+        let n = r.tokens.len().min(batch.bucket);
+        ids[i * batch.bucket..i * batch.bucket + n].copy_from_slice(&r.tokens[..n]);
+        lens[i] = n as i32;
+    }
+    (ids, lens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn req(len: usize) -> NlpRequest {
+        NlpRequest { tokens: vec![1; len], arrival_s: 0.0 }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let b = vec![32, 64, 128];
+        assert_eq!(bucket_for(1, &b), Some(32));
+        assert_eq!(bucket_for(32, &b), Some(32));
+        assert_eq!(bucket_for(33, &b), Some(64));
+        assert_eq!(bucket_for(128, &b), Some(128));
+        assert_eq!(bucket_for(129, &b), None);
+    }
+
+    #[test]
+    fn length_aware_separates_buckets() {
+        let mut b = Batcher::new(vec![32, 64], 4, true);
+        for _ in 0..4 {
+            b.push(req(10));
+        }
+        for _ in 0..2 {
+            b.push(req(50));
+        }
+        let batch = b.pop(false).unwrap();
+        assert_eq!(batch.bucket, 32);
+        assert_eq!(batch.requests.len(), 4);
+        assert!(b.pop(false).is_none()); // 2 long ones wait for more
+        let forced = b.pop(true).unwrap();
+        assert_eq!(forced.bucket, 64);
+    }
+
+    #[test]
+    fn naive_pads_to_largest_member() {
+        let mut b = Batcher::new(vec![32, 64], 2, false);
+        b.push(req(10));
+        b.push(req(50));
+        let batch = b.pop(false).unwrap();
+        assert_eq!(batch.bucket, 64); // the short sentence pays 64 slots
+        assert!(batch.waste() > 0.5, "{}", batch.waste());
+    }
+
+    #[test]
+    fn length_aware_wastes_less_than_naive() {
+        // §VII: smarter batching combines similar lengths
+        let mk = |aware| {
+            let mut b = Batcher::new(vec![32, 64, 128], 8, aware);
+            let mut rng = Rng::new(1);
+            for _ in 0..64 {
+                let l = (3.6 + 0.5 * rng.normal()).exp().round() as usize;
+                b.push(req(l.clamp(1, 128)));
+            }
+            let batches = b.drain();
+            let padded: usize = batches.iter().map(|x| x.padded_tokens()).sum();
+            let real: usize = batches.iter().map(|x| x.real_tokens()).sum();
+            (real, padded)
+        };
+        let (real_a, padded_a) = mk(true);
+        let (real_n, padded_n) = mk(false);
+        assert_eq!(real_a, real_n);
+        assert!(padded_a < padded_n, "aware {padded_a} naive {padded_n}");
+    }
+
+    #[test]
+    fn over_long_requests_rejected() {
+        let mut b = Batcher::new(vec![32], 4, true);
+        b.push(req(100));
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn pad_batch_shapes() {
+        let batch = NlpBatch { requests: vec![req(3), req(5)], bucket: 8 };
+        let (ids, lens) = pad_batch(&batch, 4);
+        assert_eq!(ids.len(), 4 * 8);
+        assert_eq!(lens, vec![3, 5, 0, 0]);
+        assert_eq!(&ids[0..3], &[1, 1, 1]);
+        assert_eq!(ids[3], 0);
+    }
+
+    /// Property: no request is ever lost or duplicated through the batcher.
+    #[test]
+    fn prop_conservation() {
+        struct LenVec;
+        impl Gen for LenVec {
+            type Value = Vec<usize>;
+            fn generate(&self, rng: &mut Rng) -> Vec<usize> {
+                let n = rng.range(0, 60) as usize;
+                (0..n).map(|_| rng.range(1, 140) as usize).collect()
+            }
+            fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+                if v.is_empty() {
+                    vec![]
+                } else {
+                    vec![v[..v.len() / 2].to_vec()]
+                }
+            }
+        }
+        check("batcher conservation", 40, &LenVec, |lens| {
+            for &aware in &[true, false] {
+                let mut b = Batcher::new(vec![32, 64, 128], 7, aware);
+                for &l in lens {
+                    b.push(req(l));
+                }
+                let expect_kept = lens.iter().filter(|&&l| l <= 128).count();
+                let batches = b.drain();
+                let total: usize = batches.iter().map(|x| x.requests.len()).sum();
+                if total != expect_kept {
+                    return Err(format!("aware={aware}: {total} != {expect_kept}"));
+                }
+                if b.rejected != lens.len() - expect_kept {
+                    return Err(format!("rejected {} wrong", b.rejected));
+                }
+                for batch in &batches {
+                    if batch.requests.len() > 7 {
+                        return Err("batch too big".into());
+                    }
+                    for r in &batch.requests {
+                        if r.tokens.len() > batch.bucket {
+                            return Err(format!(
+                                "request len {} exceeds bucket {}",
+                                r.tokens.len(),
+                                batch.bucket
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

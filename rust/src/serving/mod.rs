@@ -1,0 +1,398 @@
+//! Serving stack (§IV-A, §IV-C runtime): the request-path binary logic.
+//!
+//! Real numerics flow through PJRT ([`crate::runtime`]); the servers here
+//! implement the paper's serving structure — partitioned + pipelined DLRM
+//! (Fig. 6), bucket-switched XLM-R (§VI-A), batched CV — over the AOT
+//! artifacts, with multi-threaded request handling and latency/QPS metrics.
+
+pub mod batcher;
+
+use crate::numerics::weights::WeightGen;
+use crate::numerics::HostTensor;
+use crate::runtime::{Engine, PreparedModel};
+use crate::util::stats::Histogram;
+use crate::workloads::RecsysRequest;
+use anyhow::{anyhow, Context, Result};
+use batcher::{Batcher, NlpBatch};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Seed used for artifact weights everywhere (runtime uploads and reference
+/// validation must agree).
+pub const WEIGHT_SEED: u64 = 0xFB1A_2021;
+
+/// Serving metrics: latency histogram + throughput.
+#[derive(Debug, Clone)]
+pub struct ServerMetrics {
+    pub latency: Histogram,
+    pub completed: usize,
+    pub items: usize,
+    pub wall_s: f64,
+}
+
+impl ServerMetrics {
+    pub fn qps(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn items_per_s(&self) -> f64 {
+        self.items as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DLRM: partitioned + pipelined (Fig. 6)
+// ---------------------------------------------------------------------------
+
+/// Sharded, pipelined recommendation server.
+pub struct RecsysServer {
+    engine: Arc<Engine>,
+    /// (global table ids, prepared shard) per SLS card.
+    shards: Vec<(Vec<usize>, Arc<PreparedModel>)>,
+    dense: Arc<PreparedModel>,
+    pub batch: usize,
+    pub num_tables: usize,
+    pub embed_dim: usize,
+}
+
+impl RecsysServer {
+    /// Load shards + dense for a batch size and precision ("fp32"/"int8").
+    pub fn new(engine: Arc<Engine>, batch: usize, precision: &str) -> Result<RecsysServer> {
+        let mut gen = WeightGen::new(WEIGHT_SEED);
+        let num_tables = engine.manifest().config_usize("dlrm", "num_tables")?;
+        let embed_dim = engine.manifest().config_usize("dlrm", "embed_dim")?;
+
+        let mut shards = Vec::new();
+        for art in engine.manifest().select("dlrm", "sls") {
+            if art.batch != batch {
+                continue;
+            }
+            // global table ids from the input spec names (idx{t})
+            let tables: Vec<usize> = art
+                .inputs
+                .iter()
+                .filter(|s| s.name.starts_with("idx"))
+                .map(|s| s.name[3..].parse().unwrap())
+                .collect();
+            let weights = gen.weights_for(art);
+            let prepared = engine.prepare(&art.name, &weights)?;
+            shards.push((tables, Arc::new(prepared)));
+        }
+        if shards.is_empty() {
+            return Err(anyhow!("no dlrm sls shards for batch {batch} (run make artifacts)"));
+        }
+        shards.sort_by_key(|(t, _)| t[0]);
+
+        let dense_name = format!("dlrm_dense_b{batch}_{precision}");
+        let art = engine.manifest().get(&dense_name)?.clone();
+        let weights = gen.weights_for(&art);
+        let dense = Arc::new(engine.prepare(&dense_name, &weights)?);
+
+        Ok(RecsysServer { engine, shards, dense, batch, num_tables, embed_dim })
+    }
+
+    /// Run the SLS partition for one request: returns [batch, T, D] pooled.
+    pub fn run_sls(&self, req: &RecsysRequest) -> Result<HostTensor> {
+        let b = self.batch;
+        let d = self.embed_dim;
+        let mut sparse = vec![0f32; b * self.num_tables * d];
+        // shards run sequentially here; `serve` overlaps across requests
+        // (the paper's pipelining is across, not within, requests)
+        for (tables, shard) in &self.shards {
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(tables.len() * 2);
+            for &t in tables {
+                inputs.push(&req.indices[t]);
+                inputs.push(&req.lengths[t]);
+            }
+            let out = shard.run_refs(&self.engine, &inputs)?;
+            let pooled = out[0]
+                .as_f32()
+                .ok_or_else(|| anyhow!("sls output not f32"))?;
+            // out: [b, n_shard, d] -> scatter into [b, T, d]
+            for bi in 0..b {
+                for (si, &t) in tables.iter().enumerate() {
+                    let src = (bi * tables.len() + si) * d;
+                    let dst = (bi * self.num_tables + t) * d;
+                    sparse[dst..dst + d].copy_from_slice(&pooled[src..src + d]);
+                }
+            }
+        }
+        Ok(HostTensor::f32(sparse, &[b, self.num_tables, d]))
+    }
+
+    /// Run the dense partition: scores [batch, 1].
+    pub fn run_dense(&self, dense: &HostTensor, sparse: &HostTensor) -> Result<HostTensor> {
+        let mut out = self
+            .dense
+            .run_refs(&self.engine, &[dense, sparse])
+            .context("dense partition")?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// Full inference for one request.
+    pub fn infer(&self, req: &RecsysRequest) -> Result<HostTensor> {
+        let sparse = self.run_sls(req)?;
+        self.run_dense(&req.dense, &sparse)
+    }
+
+    /// Closed-loop serving of `reqs` with cross-request pipelining: request
+    /// k's SLS overlaps request k-1's dense (Fig. 6 right). Returns metrics.
+    pub fn serve(self: &Arc<Self>, reqs: Vec<RecsysRequest>) -> Result<ServerMetrics> {
+        let _n = reqs.len();
+        let (tx, rx) = mpsc::sync_channel::<(usize, Instant, HostTensor, HostTensor)>(2);
+        let me = Arc::clone(self);
+        let producer = std::thread::spawn(move || -> Result<()> {
+            for (i, req) in reqs.into_iter().enumerate() {
+                let t0 = Instant::now();
+                let sparse = me.run_sls(&req)?;
+                tx.send((i, t0, req.dense, sparse)).map_err(|_| anyhow!("dense stage gone"))?;
+            }
+            Ok(())
+        });
+
+        let mut latency = Histogram::latency();
+        let wall0 = Instant::now();
+        let mut completed = 0usize;
+        for (_i, t0, dense, sparse) in rx.iter() {
+            let _scores = self.run_dense(&dense, &sparse)?;
+            latency.add(t0.elapsed().as_secs_f64());
+            completed += 1;
+        }
+        producer.join().map_err(|_| anyhow!("producer panicked"))??;
+        let wall_s = wall0.elapsed().as_secs_f64();
+        Ok(ServerMetrics { latency, completed, items: completed * self.batch, wall_s })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLM-R: bucket-switched serving (§VI-A)
+// ---------------------------------------------------------------------------
+
+/// NLP server holding one prepared network per (seq bucket, batch) pair and
+/// a dynamic batcher.
+pub struct NlpServer {
+    engine: Arc<Engine>,
+    /// (seq, batch) -> prepared model
+    nets: Vec<(usize, usize, Arc<PreparedModel>)>,
+    pub buckets: Vec<usize>,
+    pub d_model: usize,
+}
+
+impl NlpServer {
+    pub fn new(engine: Arc<Engine>) -> Result<NlpServer> {
+        let mut gen = WeightGen::new(WEIGHT_SEED);
+        let mut nets = Vec::new();
+        let mut buckets = Vec::new();
+        for art in engine.manifest().select("xlmr", "full") {
+            let seq = art.seq.ok_or_else(|| anyhow!("xlmr artifact missing seq"))?;
+            let weights = gen.weights_for(art);
+            let prepared = engine.prepare(&art.name, &weights)?;
+            nets.push((seq, art.batch, Arc::new(prepared)));
+            if !buckets.contains(&seq) {
+                buckets.push(seq);
+            }
+        }
+        if nets.is_empty() {
+            return Err(anyhow!("no xlmr artifacts (run make artifacts)"));
+        }
+        buckets.sort_unstable();
+        let d_model = engine.manifest().config_usize("xlmr", "d_model")?;
+        Ok(NlpServer { engine, nets, buckets, d_model })
+    }
+
+    /// Find the prepared net for a bucket with the smallest batch >= n.
+    fn net_for(&self, bucket: usize, n: usize) -> Result<(usize, &Arc<PreparedModel>)> {
+        self.nets
+            .iter()
+            .filter(|(s, b, _)| *s == bucket && *b >= n)
+            .min_by_key(|(_, b, _)| *b)
+            .map(|(_, b, m)| (*b, m))
+            .ok_or_else(|| anyhow!("no xlmr net for bucket {bucket} x batch {n}"))
+    }
+
+    /// Run one formed batch; returns pooled embeddings [n, d_model].
+    pub fn run_batch(&self, batch: &NlpBatch) -> Result<Vec<Vec<f32>>> {
+        let n = batch.requests.len();
+        let (rows, net) = self.net_for(batch.bucket, n)?;
+        let (ids, lens) = batcher::pad_batch(batch, rows);
+        let out = net.run(
+            &self.engine,
+            &[
+                HostTensor::i32(ids, &[rows, batch.bucket]),
+                HostTensor::i32(lens, &[rows]),
+            ],
+        )?;
+        let pooled = out[0].as_f32().ok_or_else(|| anyhow!("pooled not f32"))?;
+        Ok((0..n).map(|i| pooled[i * self.d_model..(i + 1) * self.d_model].to_vec()).collect())
+    }
+
+    /// Serve a request stream through the batcher. Returns metrics plus the
+    /// padded-vs-real token accounting (the batching-efficiency signal).
+    pub fn serve(
+        &self,
+        reqs: Vec<crate::workloads::NlpRequest>,
+        max_batch: usize,
+        length_aware: bool,
+    ) -> Result<(ServerMetrics, f64)> {
+        let mut b = Batcher::new(self.buckets.clone(), max_batch, length_aware);
+        let mut latency = Histogram::latency();
+        let wall0 = Instant::now();
+        let (mut completed, mut items, mut padded, mut real) = (0usize, 0usize, 0usize, 0usize);
+        for r in reqs {
+            b.push(r);
+            while let Some(batch) = b.pop(false) {
+                let t0 = Instant::now();
+                self.run_batch(&batch)?;
+                let dt = t0.elapsed().as_secs_f64();
+                for _ in 0..batch.requests.len() {
+                    latency.add(dt);
+                }
+                completed += 1;
+                items += batch.requests.len();
+                padded += batch.padded_tokens();
+                real += batch.real_tokens();
+            }
+        }
+        for batch in b.drain() {
+            let t0 = Instant::now();
+            self.run_batch(&batch)?;
+            let dt = t0.elapsed().as_secs_f64();
+            for _ in 0..batch.requests.len() {
+                latency.add(dt);
+            }
+            completed += 1;
+            items += batch.requests.len();
+            padded += batch.padded_tokens();
+            real += batch.real_tokens();
+        }
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let waste = 1.0 - real as f64 / padded.max(1) as f64;
+        Ok((ServerMetrics { latency, completed, items, wall_s }, waste))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CV: batched single-card serving
+// ---------------------------------------------------------------------------
+
+/// CV trunk server with batch-variant selection.
+pub struct CvServer {
+    engine: Arc<Engine>,
+    nets: Vec<(usize, Arc<PreparedModel>)>,
+    pub image: usize,
+    pub classes: usize,
+}
+
+impl CvServer {
+    pub fn new(engine: Arc<Engine>) -> Result<CvServer> {
+        let mut gen = WeightGen::new(WEIGHT_SEED);
+        let mut nets = Vec::new();
+        for art in engine.manifest().select("cv", "full") {
+            let weights = gen.weights_for(art);
+            let prepared = engine.prepare(&art.name, &weights)?;
+            nets.push((art.batch, Arc::new(prepared)));
+        }
+        if nets.is_empty() {
+            return Err(anyhow!("no cv artifacts (run make artifacts)"));
+        }
+        nets.sort_by_key(|(b, _)| *b);
+        Ok(CvServer {
+            engine: Arc::clone(&engine),
+            nets,
+            image: engine.manifest().config_usize("cv", "image")?,
+            classes: engine.manifest().config_usize("cv", "classes")?,
+        })
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.nets.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Classify a batch (image tensor shaped [b, h, w, 3] where b matches a
+    /// compiled variant). Returns (logits, embedding).
+    pub fn infer(&self, image: &HostTensor) -> Result<(HostTensor, HostTensor)> {
+        let b = image.shape()[0];
+        let net = self
+            .nets
+            .iter()
+            .find(|(nb, _)| *nb == b)
+            .map(|(_, m)| m)
+            .ok_or_else(|| anyhow!("no cv net compiled for batch {b}"))?;
+        let out = net.run(&self.engine, &[image.clone()])?;
+        Ok((out[0].clone(), out[1].clone()))
+    }
+
+    /// Closed-loop throughput at a batch size.
+    pub fn serve(&self, n: usize, batch: usize, gen: &mut crate::workloads::CvGen) -> Result<ServerMetrics> {
+        let mut latency = Histogram::latency();
+        let wall0 = Instant::now();
+        for _ in 0..n {
+            let req = gen.next(batch);
+            let t0 = Instant::now();
+            self.infer(&req.image)?;
+            latency.add(t0.elapsed().as_secs_f64());
+        }
+        let wall_s = wall0.elapsed().as_secs_f64();
+        Ok(ServerMetrics { latency, completed: n, items: n * batch, wall_s })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic request inputs for validation / examples
+// ---------------------------------------------------------------------------
+
+/// Generate plausible request inputs for any artifact (used by
+/// `fbia validate-numerics` and the integration tests): shapes follow the
+/// specs, values follow the workload distributions, seeded.
+pub fn test_inputs_for(
+    manifest: &crate::runtime::artifact::Manifest,
+    art: &crate::runtime::artifact::Artifact,
+    seed: u64,
+) -> Result<Vec<HostTensor>> {
+    use crate::runtime::artifact::InputKind;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for spec in &art.inputs {
+        if spec.kind != InputKind::Input {
+            continue;
+        }
+        let n = spec.elements();
+        let t = if spec.name.starts_with("idx") {
+            let rows = manifest.config_usize("dlrm", "rows_per_table")?;
+            HostTensor::i32(
+                (0..n).map(|_| rng.below(rows as u64) as i32).collect(),
+                &spec.shape,
+            )
+        } else if spec.name.starts_with("len") {
+            let max_len = spec.shape.last().copied().unwrap_or(1);
+            let cap = manifest.config_usize("dlrm", "max_lookups").unwrap_or(max_len);
+            HostTensor::i32(
+                (0..n).map(|_| rng.below(cap as u64 + 1) as i32).collect(),
+                &spec.shape,
+            )
+        } else if spec.name == "ids" {
+            let vocab = manifest.config_usize("xlmr", "vocab")?;
+            HostTensor::i32(
+                (0..n).map(|_| rng.below(vocab as u64) as i32).collect(),
+                &spec.shape,
+            )
+        } else if spec.name == "pad_len" {
+            let seq = art.seq.unwrap_or(32);
+            HostTensor::i32(
+                (0..n).map(|_| 1 + rng.below(seq as u64) as i32).collect(),
+                &spec.shape,
+            )
+        } else if spec.name == "image" {
+            HostTensor::f32((0..n).map(|_| rng.f32()).collect(), &spec.shape)
+        } else {
+            // dense features, sparse pooled embeddings, ...
+            let mut v = vec![0f32; n];
+            rng.fill_normal_f32(&mut v, 1.0);
+            HostTensor::f32(v, &spec.shape)
+        };
+        out.push(t);
+    }
+    Ok(out)
+}

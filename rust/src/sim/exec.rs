@@ -1,0 +1,168 @@
+//! Pipelined multi-request execution simulation (Fig. 6 right).
+//!
+//! A request flows through a fixed stage path (upload → SLS → gather →
+//! dense → download for recsys; upload → card → [host tail] → download for
+//! CV/NLP). Each stage holds one FIFO resource (a card's core group, a PCIe
+//! link); consecutive requests overlap across stages, which is exactly the
+//! paper's steady-state pipelining of sparse and dense partitions.
+//!
+//! With deterministic service times and FIFO resources the tandem-queue
+//! recursion start = max(prev_stage_done, resource_free) is exact — no event
+//! heap needed; the serving layer (real PJRT path) handles the stochastic
+//! case.
+
+use crate::util::stats::Histogram;
+
+/// One stage of the request path.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub name: String,
+    /// index into the resource table (stages sharing a resource contend).
+    pub resource: usize,
+    /// number of interchangeable resources starting at `resource` (data-
+    /// parallel replicas): the request takes the earliest-free one.
+    pub pool: usize,
+    /// service time per request, seconds.
+    pub service_s: f64,
+}
+
+impl Stage {
+    pub fn new(name: &str, resource: usize, service_s: f64) -> Stage {
+        Stage { name: name.to_string(), resource, pool: 1, service_s }
+    }
+
+    pub fn pooled(name: &str, resource: usize, pool: usize, service_s: f64) -> Stage {
+        Stage { name: name.to_string(), resource, pool: pool.max(1), service_s }
+    }
+}
+
+/// Result of simulating a request stream through the pipeline.
+#[derive(Debug, Clone)]
+pub struct PipelineResult {
+    pub latency: Histogram,
+    /// per-batch steady-state throughput (batches/sec).
+    pub throughput: f64,
+    /// per-stage busy fraction.
+    pub stage_utilization: Vec<(String, f64)>,
+    /// the bottleneck stage name.
+    pub bottleneck: String,
+    pub requests: usize,
+}
+
+/// Simulate `n` requests arriving back-to-back (closed loop, `interval=0`)
+/// or at a fixed interval (open loop).
+pub fn run_pipeline(stages: &[Stage], n_resources: usize, n: usize, interval_s: f64) -> PipelineResult {
+    assert!(!stages.is_empty());
+    let mut free = vec![0.0f64; n_resources];
+    let mut busy = vec![0.0f64; n_resources];
+    let mut latency = Histogram::latency();
+    let mut first_start = f64::INFINITY;
+    let mut last_end = 0.0f64;
+
+    for i in 0..n {
+        let arrival = i as f64 * interval_s;
+        let mut t = arrival;
+        for s in stages {
+            // earliest-free resource in the stage's pool
+            let r = (s.resource..s.resource + s.pool)
+                .min_by(|&a, &b| free[a].partial_cmp(&free[b]).unwrap())
+                .unwrap();
+            let start = t.max(free[r]);
+            let end = start + s.service_s;
+            free[r] = end;
+            busy[r] += s.service_s;
+            t = end;
+        }
+        latency.add(t - arrival);
+        first_start = first_start.min(arrival);
+        last_end = last_end.max(t);
+    }
+
+    let span = (last_end - first_start).max(1e-12);
+    let throughput = n as f64 / span;
+    // per-stage utilization: attribute resource busy time to the stage(s);
+    // pooled stages divide across their replicas
+    let mut stage_util = Vec::new();
+    for s in stages {
+        stage_util.push((
+            s.name.clone(),
+            (s.service_s * n as f64) / (span * s.pool as f64),
+        ));
+    }
+    let bottleneck = stages
+        .iter()
+        .max_by(|a, b| {
+            (a.service_s / a.pool as f64)
+                .partial_cmp(&(b.service_s / b.pool as f64))
+                .unwrap()
+        })
+        .map(|s| s.name.clone())
+        .unwrap_or_default();
+    PipelineResult {
+        latency,
+        throughput,
+        stage_utilization: stage_util,
+        bottleneck,
+        requests: n,
+    }
+}
+
+/// Serial (non-pipelined) reference: the latency of one isolated request.
+pub fn serial_latency(stages: &[Stage]) -> f64 {
+    stages.iter().map(|s| s.service_s).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(times: &[f64]) -> Vec<Stage> {
+        times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| Stage::new(&format!("s{i}"), i, t))
+            .collect()
+    }
+
+    #[test]
+    fn pipelined_throughput_set_by_bottleneck() {
+        let stages = mk(&[0.001, 0.004, 0.002]);
+        let r = run_pipeline(&stages, 3, 200, 0.0);
+        // steady state: 1/0.004 = 250/s
+        assert!((r.throughput - 250.0).abs() / 250.0 < 0.05, "{}", r.throughput);
+        assert_eq!(r.bottleneck, "s1");
+    }
+
+    #[test]
+    fn single_request_latency_is_sum() {
+        let stages = mk(&[0.001, 0.004, 0.002]);
+        let r = run_pipeline(&stages, 3, 1, 0.0);
+        assert!((r.latency.mean() - 0.007).abs() < 1e-6);
+        assert_eq!(serial_latency(&stages), 0.007);
+    }
+
+    #[test]
+    fn open_loop_below_capacity_keeps_latency_flat() {
+        let stages = mk(&[0.001, 0.002]);
+        let r = run_pipeline(&stages, 2, 500, 0.004); // arrival slower than svc
+        assert!((r.latency.p99() - 0.003).abs() < 3e-4, "{}", r.latency.p99());
+    }
+
+    #[test]
+    fn open_loop_above_capacity_queues() {
+        let stages = mk(&[0.002]);
+        let r = run_pipeline(&stages, 1, 300, 0.001); // 2x oversubscribed
+        assert!(r.latency.p99() > 0.1, "{}", r.latency.p99()); // queue grows
+    }
+
+    #[test]
+    fn shared_resource_serializes() {
+        // two stages on the same resource cannot overlap
+        let stages = vec![
+            Stage::new("a", 0, 0.001),
+            Stage::new("b", 0, 0.001),
+        ];
+        let r = run_pipeline(&stages, 1, 100, 0.0);
+        assert!((r.throughput - 500.0).abs() / 500.0 < 0.05, "{}", r.throughput);
+    }
+}

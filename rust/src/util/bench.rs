@@ -1,0 +1,117 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! Two responsibilities:
+//! 1. timing: warmup + repeated measurement with mean/std/min reporting;
+//! 2. paper-style reporting: every bench target regenerates the rows/series
+//!    of one paper table or figure (DESIGN.md §5) via [`crate::util::table`].
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Time `f`, auto-scaling iteration count to hit ~`target_s` of total
+/// measurement after `warmup` calls.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, 3, 0.5, &mut f)
+}
+
+/// Fully parameterized variant.
+pub fn bench_with<F: FnMut()>(name: &str, warmup: usize, target_s: f64, f: &mut F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / once).ceil() as usize).clamp(3, 10_000);
+
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        s.add(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: s.mean(),
+        std_s: s.std(),
+        min_s: s.min(),
+    }
+}
+
+/// Pretty-print a timing result in bench output style.
+pub fn report(r: &BenchResult) {
+    println!(
+        "  {:<44} {:>12} {:>12} {:>10}  ({} iters)",
+        r.name,
+        fmt_time(r.mean_s),
+        fmt_time(r.min_s),
+        format!("±{:.1}%", 100.0 * r.std_s / r.mean_s.max(1e-12)),
+        r.iters
+    );
+}
+
+/// Human-friendly seconds formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Section header used by all bench binaries for a consistent look.
+pub fn section(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench_with("noop-ish", 1, 0.02, &mut || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s + 1e-9);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. The `fbia` binary and all bench harnesses share it.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand + options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — first element is NOT argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I, with_subcommand: bool) -> Args {
+        let mut args = Args::default();
+        let mut items = it.into_iter().peekable();
+        if with_subcommand {
+            if let Some(first) = items.peek() {
+                if !first.starts_with('-') {
+                    args.subcommand = items.next();
+                }
+            }
+        }
+        while let Some(a) = items.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if matches!(items.peek(), Some(n) if !n.starts_with("--")) {
+                    args.opts.insert(rest.to_string(), items.next().unwrap());
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse process arguments (skips argv[0]).
+    pub fn from_env(with_subcommand: bool) -> Args {
+        Args::parse_from(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse_from(sv(&["serve", "--model", "dlrm", "--qps=100", "-x"]), true);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("model"), Some("dlrm"));
+        assert_eq!(a.get_usize("qps", 0), 100);
+        assert_eq!(a.positional, vec!["-x".to_string()]);
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = Args::parse_from(sv(&["--verbose", "--n", "3", "--quiet"]), false);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("n"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(sv(&[]), true);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("r", 1.5), 1.5);
+    }
+
+    #[test]
+    fn double_dash_value_not_consumed() {
+        let a = Args::parse_from(sv(&["--a", "--b", "v"]), false);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,240 @@
+//! Deterministic PRNG + the distributions the workload generators need.
+//!
+//! xoshiro256** — fast, high-quality, and reproducible across platforms;
+//! the weight generator and the workload generators must agree with nothing
+//! but a seed (the artifact weights are re-derived in tests and in the
+//! numerics validator).
+
+/// xoshiro256** PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so any u64 seed gives a well-mixed state.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (for per-table / per-card generators).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's method without bias correction is fine for workload gen,
+        // but keep the rejection loop for exactness (weights must be stable).
+        if n == 0 {
+            return 0;
+        }
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller (cached second value discarded for
+    /// reproducibility simplicity).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Poisson via Knuth (fine for the small arrival rates we simulate).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            // normal approximation for large lambda
+            let v = lambda + lambda.sqrt() * self.normal();
+            return v.max(0.0).round() as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Exponential inter-arrival time with the given rate (events/sec).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.f64().max(1e-300).ln() / rate
+    }
+
+    /// Sample from a Zipf distribution over {0, .., n-1} with exponent `s`.
+    /// Used for embedding-lookup popularity (recsys traffic is heavily
+    /// skewed — the basis of the paper's partial-tensor win).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        // inverse-CDF on the harmonic partial sums would need a table; use
+        // rejection sampling (Devroye) which is table-free and exact.
+        debug_assert!(n >= 1);
+        let b = 2f64.powf(1.0 - s);
+        loop {
+            let u = self.f64();
+            let v = self.f64();
+            let x = (u.powf(-1.0 / (s - 1.0))).floor();
+            let t = (1.0 + 1.0 / x).powf(s - 1.0);
+            if x <= n as f64 && v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                return (x as u64).saturating_sub(1);
+            }
+        }
+    }
+
+    /// Fill a slice with N(0, std) f32 values.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(0.0, std);
+        }
+    }
+
+    /// Shuffle (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+        assert_eq!(r.below(1), 0);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let mut r = Rng::new(13);
+        let n = 1000u64;
+        let mut counts = vec![0u64; n as usize];
+        for _ in 0..20_000 {
+            let v = r.zipf(n, 1.2);
+            assert!(v < n);
+            counts[v as usize] += 1;
+        }
+        // head must dominate the tail
+        let head: u64 = counts[..10].iter().sum();
+        let tail: u64 = counts[500..].iter().sum();
+        assert!(head > tail, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn poisson_mean_tracks_lambda() {
+        let mut r = Rng::new(17);
+        for &lam in &[0.5, 4.0, 50.0] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| r.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!((mean - lam).abs() < lam.max(1.0) * 0.1, "lam={lam} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(19);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

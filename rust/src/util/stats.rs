@@ -1,0 +1,309 @@
+//! Statistics: streaming summaries, latency histograms, percentiles.
+//!
+//! The serving stack records per-request latencies into an HDR-style
+//! log-bucketed histogram so p50/p95/p99 are O(1) memory regardless of run
+//! length (the paper reports per-model latency/QPS points — Fig. 7).
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + d * d * self.n as f64 * other.n as f64 / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Log-bucketed histogram for positive values (latencies in seconds or
+/// microseconds). ~1.5% relative resolution, fixed 1024 buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    lo: f64,
+    ratio: f64, // log-spacing factor
+    count: u64,
+    sum: f64,
+    overflow: u64,
+    underflow: u64,
+}
+
+impl Histogram {
+    /// `lo`/`hi` bound the tracked range; values outside are clamped into
+    /// under/overflow buckets (still counted for percentile purposes).
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(lo > 0.0 && hi > lo);
+        let n = 1024usize;
+        let ratio = (hi / lo).powf(1.0 / n as f64);
+        Histogram {
+            buckets: vec![0; n],
+            lo,
+            ratio,
+            count: 0,
+            sum: 0.0,
+            overflow: 0,
+            underflow: 0,
+        }
+    }
+
+    /// Default latency histogram: 1 µs .. 100 s.
+    pub fn latency() -> Self {
+        Histogram::new(1e-6, 100.0)
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / self.lo).ln() / self.ratio.ln()) as usize;
+        if idx >= self.buckets.len() {
+            self.overflow += 1;
+        } else {
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile in [0, 100]; returns the bucket lower edge.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.lo;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.lo * self.ratio.powi(i as i32);
+            }
+        }
+        self.lo * self.ratio.powi(self.buckets.len() as i32)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.overflow += other.overflow;
+        self.underflow += other.underflow;
+    }
+}
+
+/// Cosine similarity — the paper's embedding-quality metric (§V-A).
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return if na == nb { 1.0 } else { 0.0 };
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Normalized cross-entropy delta — the paper's recsys offline metric
+/// (§V-A): NE of predictions `p` vs labels, normalized by the entropy of the
+/// base rate. Returns (ne_a - ne_b) / ne_b as a percentage when comparing
+/// two prediction sets.
+pub fn normalized_entropy(preds: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    assert!(!preds.is_empty());
+    let n = preds.len() as f64;
+    let base = labels.iter().map(|&y| y as f64).sum::<f64>() / n;
+    let base = base.clamp(1e-6, 1.0 - 1e-6);
+    let mut ce = 0.0;
+    for (&p, &y) in preds.iter().zip(labels) {
+        let p = (p as f64).clamp(1e-6, 1.0 - 1e-6);
+        let y = y as f64;
+        ce -= y * p.ln() + (1.0 - y) * (1.0 - p).ln();
+    }
+    let base_ce = -(base * base.ln() + (1.0 - base) * (1.0 - base).ln()) * n;
+    ce / base_ce
+}
+
+/// Relative NE degradation in percent: 100 * (ne_test - ne_ref) / ne_ref.
+pub fn ne_degradation_pct(ref_preds: &[f32], test_preds: &[f32], labels: &[f32]) -> f64 {
+    let a = normalized_entropy(ref_preds, labels);
+    let b = normalized_entropy(test_preds, labels);
+    100.0 * (b - a) / a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+        let mut all = Summary::new();
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.add(x);
+            if i % 2 == 0 {
+                a.add(x);
+            } else {
+                b.add(x);
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        assert!((a.var() - all.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone_and_accurate() {
+        let mut h = Histogram::latency();
+        for i in 1..=10_000 {
+            h.add(i as f64 * 1e-5); // 10µs .. 100ms uniform
+        }
+        let p50 = h.p50();
+        let p95 = h.p95();
+        let p99 = h.p99();
+        assert!(p50 < p95 && p95 < p99);
+        assert!((p50 - 0.05).abs() / 0.05 < 0.05, "{p50}");
+        assert!((p99 - 0.099).abs() / 0.099 < 0.05, "{p99}");
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(1e-3, 1.0);
+        h.add(1e-9);
+        h.add(50.0);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(10.0) >= 1e-3);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine_similarity(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine_similarity(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert!((cosine_similarity(&[1.0, 1.0], &[-1.0, -1.0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ne_perfect_predictions_beat_base_rate() {
+        let labels = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let good = vec![0.9, 0.1, 0.9, 0.1, 0.9, 0.1];
+        let base = vec![0.5; 6];
+        assert!(normalized_entropy(&good, &labels) < normalized_entropy(&base, &labels));
+    }
+
+    #[test]
+    fn ne_degradation_zero_for_identical() {
+        let labels = vec![1.0, 0.0, 1.0];
+        let p = vec![0.8, 0.3, 0.6];
+        assert!(ne_degradation_pct(&p, &p, &labels).abs() < 1e-12);
+    }
+}

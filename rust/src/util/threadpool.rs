@@ -1,0 +1,160 @@
+//! Fixed-size worker thread pool (tokio is unavailable offline; the serving
+//! runtime's needs — a request loop with bounded concurrency and join-able
+//! task batches — are covered by this + std::sync primitives).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing FIFO jobs.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
+    executed: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let executed = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let inf = Arc::clone(&in_flight);
+            let exec = Arc::clone(&executed);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("fbia-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                exec.fetch_add(1, Ordering::Relaxed);
+                                let (lock, cv) = &*inf;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                cv.notify_all();
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, in_flight, executed }
+    }
+
+    /// Submit a job. Panics if the pool has been shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.in_flight;
+        *lock.lock().unwrap() += 1;
+        self.tx.as_ref().expect("pool shut down").send(Box::new(f)).expect("send job");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.in_flight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Total jobs executed since creation.
+    pub fn executed(&self) -> usize {
+        self.executed.load(Ordering::Relaxed)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run a batch of closures, blocking until all complete (scoped-join
+    /// convenience used by the data-parallel serving path).
+    pub fn scope_run<F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        for j in jobs {
+            self.execute(j);
+        }
+        self.wait_idle();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel; workers exit on recv error
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.executed(), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn scope_run_joins() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<_> = (0..10)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.scope_run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not deadlock
+    }
+}

@@ -1,0 +1,195 @@
+//! Workload generators (§II): seeded, distribution-faithful request streams
+//! for all four model classes. The recsys generator uses Zipf-distributed
+//! table popularity and variable lookup counts — the properties behind the
+//! paper's partial-tensor and SLS-load-balancing optimizations.
+
+use crate::numerics::HostTensor;
+use crate::util::rng::Rng;
+
+/// One recommendation request: dense features + per-table sparse lookups,
+/// already padded to `max_lookups` (the static-shape contract, §VI-C).
+#[derive(Debug, Clone)]
+pub struct RecsysRequest {
+    pub dense: HostTensor,
+    /// per table: indices [batch, max_lookups] i32
+    pub indices: Vec<HostTensor>,
+    /// per table: lengths [batch] i32
+    pub lengths: Vec<HostTensor>,
+}
+
+/// Recsys request generator.
+pub struct RecsysGen {
+    pub batch: usize,
+    pub num_tables: usize,
+    pub rows_per_table: usize,
+    pub dense_in: usize,
+    pub max_lookups: usize,
+    /// mean lookup count per bag.
+    pub mean_lookups: f64,
+    pub zipf_s: f64,
+    rng: Rng,
+}
+
+impl RecsysGen {
+    pub fn new(seed: u64, batch: usize, num_tables: usize, rows_per_table: usize,
+               dense_in: usize, max_lookups: usize) -> Self {
+        RecsysGen {
+            batch,
+            num_tables,
+            rows_per_table,
+            dense_in,
+            max_lookups,
+            mean_lookups: max_lookups as f64 * 0.4,
+            zipf_s: 1.2,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn next(&mut self) -> RecsysRequest {
+        let mut dense = vec![0f32; self.batch * self.dense_in];
+        self.rng.fill_normal_f32(&mut dense, 1.0);
+        let mut indices = Vec::with_capacity(self.num_tables);
+        let mut lengths = Vec::with_capacity(self.num_tables);
+        for _ in 0..self.num_tables {
+            let mut idx = vec![0i32; self.batch * self.max_lookups];
+            let mut len = vec![0i32; self.batch];
+            for b in 0..self.batch {
+                let l = (self.rng.poisson(self.mean_lookups) as usize).min(self.max_lookups);
+                len[b] = l as i32;
+                for j in 0..l {
+                    // Zipf-skewed row popularity (§II-A: hot entries dominate)
+                    idx[b * self.max_lookups + j] =
+                        self.rng.zipf(self.rows_per_table as u64, self.zipf_s) as i32;
+                }
+            }
+            indices.push(HostTensor::i32(idx, &[self.batch, self.max_lookups]));
+            lengths.push(HostTensor::i32(len, &[self.batch]));
+        }
+        RecsysRequest {
+            dense: HostTensor::f32(dense, &[self.batch, self.dense_in]),
+            indices,
+            lengths,
+        }
+    }
+}
+
+/// One NLP sentence (token ids, true length before padding).
+#[derive(Debug, Clone)]
+pub struct NlpRequest {
+    pub tokens: Vec<i32>,
+    pub arrival_s: f64,
+}
+
+/// NLP sentence generator with the paper's skew: lengths mostly 20–70
+/// tokens (§II-C), long tail to `max_len`.
+pub struct NlpGen {
+    pub vocab: usize,
+    pub max_len: usize,
+    rng: Rng,
+    clock: f64,
+    pub rate: f64,
+}
+
+impl NlpGen {
+    pub fn new(seed: u64, vocab: usize, max_len: usize, rate: f64) -> Self {
+        NlpGen { vocab, max_len, rng: Rng::new(seed), clock: 0.0, rate }
+    }
+
+    pub fn sample_len(&mut self) -> usize {
+        // log-normal-ish: exp(N(3.6, 0.5)) ~ median 36, bulk 20-70
+        let l = (3.6 + 0.5 * self.rng.normal()).exp();
+        (l.round() as usize).clamp(1, self.max_len)
+    }
+
+    pub fn next(&mut self) -> NlpRequest {
+        let n = self.sample_len();
+        let tokens = (0..n).map(|_| self.rng.below(self.vocab as u64) as i32).collect();
+        self.clock += self.rng.exponential(self.rate);
+        NlpRequest { tokens, arrival_s: self.clock }
+    }
+}
+
+/// One CV image request.
+#[derive(Debug, Clone)]
+pub struct CvRequest {
+    pub image: HostTensor,
+}
+
+pub struct CvGen {
+    pub image: usize,
+    rng: Rng,
+}
+
+impl CvGen {
+    pub fn new(seed: u64, image: usize) -> Self {
+        CvGen { image, rng: Rng::new(seed) }
+    }
+
+    pub fn next(&mut self, batch: usize) -> CvRequest {
+        let n = batch * self.image * self.image * 3;
+        let mut v = vec![0f32; n];
+        // pixel-ish values in [0, 1)
+        for x in v.iter_mut() {
+            *x = self.rng.f32();
+        }
+        CvRequest { image: HostTensor::f32(v, &[batch, self.image, self.image, 3]) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recsys_lengths_within_bounds() {
+        let mut g = RecsysGen::new(1, 8, 4, 1000, 16, 32);
+        for _ in 0..5 {
+            let r = g.next();
+            assert_eq!(r.indices.len(), 4);
+            for (idx, len) in r.indices.iter().zip(&r.lengths) {
+                for (b, &l) in len.as_i32().unwrap().iter().enumerate() {
+                    assert!(l >= 0 && l as usize <= 32);
+                    for j in 0..l as usize {
+                        let v = idx.as_i32().unwrap()[b * 32 + j];
+                        assert!(v >= 0 && (v as usize) < 1000);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recsys_deterministic() {
+        let mut a = RecsysGen::new(7, 4, 2, 100, 8, 8);
+        let mut b = RecsysGen::new(7, 4, 2, 100, 8, 8);
+        assert_eq!(a.next().dense, b.next().dense);
+    }
+
+    #[test]
+    fn nlp_lengths_mostly_20_70() {
+        let mut g = NlpGen::new(3, 1000, 512, 100.0);
+        let lens: Vec<usize> = (0..2000).map(|_| g.sample_len()).collect();
+        let in_range = lens.iter().filter(|&&l| (15..=90).contains(&l)).count();
+        assert!(in_range as f64 / 2000.0 > 0.6, "{in_range}");
+        assert!(lens.iter().all(|&l| l >= 1 && l <= 512));
+    }
+
+    #[test]
+    fn nlp_arrivals_monotone() {
+        let mut g = NlpGen::new(5, 100, 128, 50.0);
+        let mut last = 0.0;
+        for _ in 0..100 {
+            let r = g.next();
+            assert!(r.arrival_s > last);
+            last = r.arrival_s;
+        }
+    }
+
+    #[test]
+    fn cv_pixels_in_unit_range() {
+        let mut g = CvGen::new(9, 16);
+        let r = g.next(2);
+        assert_eq!(r.image.shape(), &[2, 16, 16, 3]);
+        assert!(r.image.as_f32().unwrap().iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+}

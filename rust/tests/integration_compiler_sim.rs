@@ -1,0 +1,127 @@
+//! Integration: compiler → simulator pipeline over all six Table I models,
+//! plus cross-cutting invariants the paper's evaluation depends on.
+//! No artifacts needed — pure L3.
+
+use fbia::config::Config;
+use fbia::graph::models::ModelId;
+use fbia::graph::TensorKind;
+use fbia::sim::{simulate_model, simulate_model_batch};
+
+#[test]
+fn compile_then_simulate_every_model() {
+    let cfg = Config::default();
+    for id in ModelId::ALL {
+        let r = simulate_model(id, &cfg, 50).unwrap_or_else(|e| panic!("{id:?}: {e}"));
+        assert!(r.latency_s > 0.0 && r.latency_s < 10.0, "{id:?}: {}", r.latency_s);
+        assert!(r.qps.is_finite() && r.qps > 0.0);
+        assert!(!r.op_breakdown.is_empty());
+        let share_sum: f64 = r.op_breakdown.iter().map(|(_, v)| v).sum();
+        assert!((share_sum - 1.0).abs() < 1e-6, "{id:?}: shares sum {share_sum}");
+    }
+}
+
+#[test]
+fn fewer_cards_hurt_recsys_capacity() {
+    // shrinking the node must eventually fail (tables stop fitting) or slow
+    // down — it can never get faster
+    let mut small = Config::default();
+    small.node.cards = 3;
+    small.compiler.sls_cards = 3;
+    let big = Config::default();
+    let r_big = simulate_model(ModelId::RecsysBase, &big, 50).unwrap();
+    match simulate_model(ModelId::RecsysBase, &small, 50) {
+        Ok(r_small) => assert!(r_small.qps <= r_big.qps * 1.05),
+        Err(e) => assert!(e.to_string().contains("fit"), "{e}"),
+    }
+}
+
+#[test]
+fn complex_recsys_doesnt_fit_three_cards() {
+    // >100B params at mixed int4/int8 needs more than 3x16 GB
+    let mut cfg = Config::default();
+    cfg.node.cards = 3;
+    cfg.compiler.sls_cards = 3;
+    assert!(simulate_model(ModelId::RecsysComplex, &cfg, 10).is_err());
+}
+
+#[test]
+fn faster_cards_scale_throughput() {
+    let slow = Config::default();
+    let mut fast = Config::default();
+    fast.node.card.peak_tops_int8 = 75.0;
+    fast.node.card.peak_tflops_fp16 = 10.0;
+    fast.node.card.lpddr_bw = 120e9;
+    let a = simulate_model(ModelId::RegNetY, &slow, 50).unwrap();
+    let b = simulate_model(ModelId::RegNetY, &fast, 50).unwrap();
+    assert!(b.qps > a.qps * 1.3, "fast {} slow {}", b.qps, a.qps);
+}
+
+#[test]
+fn batch_scaling_monotone_for_dlrm() {
+    let cfg = Config::default();
+    let mut last_items = 0.0;
+    for b in [16usize, 32, 64] {
+        let r = simulate_model_batch(ModelId::RecsysComplex, b, &cfg, 50).unwrap();
+        assert!(r.items_per_s >= last_items * 0.9, "batch {b}: {} < {last_items}", r.items_per_s);
+        last_items = r.items_per_s;
+    }
+}
+
+#[test]
+fn optimizations_never_hurt_latency() {
+    // each §VI-C flag on must be <= off (within noise) for recsys latency
+    let base = Config::default();
+    let r_on = simulate_model(ModelId::RecsysComplex, &base, 50).unwrap();
+    for flag in ["p2p", "partial", "cmd", "fp16", "bcast"] {
+        let mut off = base.clone();
+        match flag {
+            "p2p" => off.transfers.peer_to_peer = false,
+            "partial" => off.transfers.partial_tensors = false,
+            "cmd" => off.transfers.command_batching = false,
+            "fp16" => off.transfers.fp16_dense_inputs = false,
+            _ => off.transfers.fused_broadcast = false,
+        }
+        let r_off = simulate_model(ModelId::RecsysComplex, &off, 50).unwrap();
+        assert!(
+            r_on.latency_s <= r_off.latency_s * 1.001,
+            "{flag}: on {} off {}",
+            r_on.latency_s,
+            r_off.latency_s
+        );
+    }
+}
+
+#[test]
+fn quantization_shrinks_weights_below_fp16() {
+    let cfg = Config::default();
+    for id in [ModelId::ResNeXt101, ModelId::RegNetY] {
+        let g = id.build();
+        let q_bytes = g.weight_bytes() as f64;
+        // fp16 everywhere would be ~2 bytes/param
+        let fp16_bytes = 2.0 * g.param_count() as f64;
+        assert!(q_bytes < fp16_bytes * 0.75, "{id:?}: {q_bytes} vs {fp16_bytes}");
+    }
+    let _ = cfg;
+}
+
+#[test]
+fn graph_io_tensors_consistent_after_compile() {
+    let cfg = Config::default();
+    for id in ModelId::ALL {
+        let g = id.build();
+        let before: usize = g
+            .tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Output)
+            .count();
+        let c = fbia::compiler::compile(&g, &cfg).unwrap();
+        let after: usize = c
+            .graph
+            .tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Output)
+            .count();
+        assert_eq!(before, after, "{id:?} lost outputs in compilation");
+        c.graph.validate().unwrap();
+    }
+}

@@ -1,0 +1,102 @@
+//! Integration: AOT artifacts → PJRT runtime → outputs vs the independent
+//! Rust reference implementations (§V-C numerics validation, end to end).
+//!
+//! Skips gracefully when `artifacts/` hasn't been built.
+
+use fbia::numerics::validate;
+use fbia::numerics::weights::WeightGen;
+use fbia::runtime::Engine;
+use fbia::serving::{test_inputs_for, WEIGHT_SEED};
+use std::path::Path;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Engine::load(dir).expect("engine")))
+}
+
+fn validate_artifact(engine: &Arc<Engine>, name: &str) -> validate::Validation {
+    let manifest = engine.manifest().clone();
+    let art = manifest.get(name).expect("artifact").clone();
+    let inputs = test_inputs_for(&manifest, &art, 1234).expect("inputs");
+
+    let mut gen = WeightGen::new(WEIGHT_SEED);
+    let reference = validate::reference_outputs(&manifest, &art, &mut gen, &inputs).expect("ref");
+
+    let mut gen2 = WeightGen::new(WEIGHT_SEED);
+    let weights = gen2.weights_for(&art);
+    let prepared = engine.prepare(name, &weights).expect("prepare");
+    let measured = prepared.run(engine, &inputs).expect("run");
+
+    assert_eq!(reference.len(), measured.len(), "{name}: output arity");
+    validate::compare(
+        name,
+        reference[0].as_f32().expect("ref f32"),
+        measured[0].as_f32().expect("out f32"),
+    )
+}
+
+#[test]
+fn dlrm_sls_shard_matches_reference() {
+    let Some(e) = engine() else { return };
+    let v = validate_artifact(&e, "dlrm_sls_shard0_b16");
+    assert!(v.passed, "{v:?}");
+}
+
+#[test]
+fn dlrm_dense_fp32_matches_reference() {
+    let Some(e) = engine() else { return };
+    let v = validate_artifact(&e, "dlrm_dense_b16_fp32");
+    assert!(v.passed, "{v:?}");
+}
+
+#[test]
+fn dlrm_dense_int8_matches_reference() {
+    // the quantized path: pallas quant_fc kernel inside the artifact vs the
+    // integer reference — the core §V-C scenario
+    let Some(e) = engine() else { return };
+    let v = validate_artifact(&e, "dlrm_dense_b16_int8");
+    assert!(v.passed, "{v:?}");
+}
+
+#[test]
+fn xlmr_bucket_matches_reference() {
+    let Some(e) = engine() else { return };
+    let v = validate_artifact(&e, "xlmr_s32_b1");
+    assert!(v.passed, "{v:?}");
+}
+
+#[test]
+fn cv_trunk_matches_reference() {
+    let Some(e) = engine() else { return };
+    let v = validate_artifact(&e, "cv_trunk_b1");
+    assert!(v.passed, "{v:?}");
+}
+
+#[test]
+fn weights_are_deterministic_across_engines() {
+    let Some(e) = engine() else { return };
+    let art = e.manifest().get("dlrm_dense_b16_fp32").unwrap().clone();
+    let a = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+    let b = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+    assert_eq!(a.len(), b.len());
+    for ((na, ta), (nb, tb)) in a.iter().zip(&b) {
+        assert_eq!(na, nb);
+        assert_eq!(ta, tb);
+    }
+}
+
+#[test]
+fn prepared_model_rejects_bad_shapes() {
+    let Some(e) = engine() else { return };
+    let art = e.manifest().get("cv_trunk_b1").unwrap().clone();
+    let weights = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+    let prepared = e.prepare("cv_trunk_b1", &weights).unwrap();
+    // wrong image shape must be rejected before reaching PJRT
+    let bad = fbia::numerics::HostTensor::f32(vec![0.0; 12], &[2, 1, 2, 3]);
+    assert!(prepared.run(&e, &[bad]).is_err());
+}
