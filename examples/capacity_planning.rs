@@ -4,10 +4,10 @@
 //!
 //!     cargo run --release --example capacity_planning
 
-use anyhow::Result;
 use fbia::capacity::{capacity_series, power_savings, GrowthScenario};
 use fbia::config::Config;
 use fbia::graph::models::ModelId;
+use fbia::util::error::Result;
 use fbia::util::table::{f2, Table};
 
 fn main() -> Result<()> {

@@ -1,22 +1,32 @@
-//! Quickstart: load an AOT artifact, run one real inference through PJRT,
-//! and sanity-check it against the Rust reference implementation.
+//! Quickstart: load an artifact, run one inference through the engine's
+//! execution backend, and sanity-check it against the Rust reference
+//! implementation.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! This is the smallest end-to-end path through the three-layer stack:
-//! Pallas kernel (L1) → JAX model (L2) → HLO text → PJRT runtime (L3).
+//! Runs out of the box on the builtin manifest + reference backend (no
+//! artifacts, no Python). With `make artifacts` (+ `--features pjrt`) the
+//! same path exercises the full three-layer stack instead: Pallas kernel
+//! (L1) → JAX model (L2) → HLO text → PJRT runtime (L3).
 
-use anyhow::Result;
 use fbia::numerics::validate;
 use fbia::numerics::weights::WeightGen;
 use fbia::runtime::Engine;
 use fbia::serving::{test_inputs_for, WEIGHT_SEED};
+use fbia::util::error::Result;
 use std::sync::Arc;
 
 fn main() -> Result<()> {
-    let engine = Arc::new(Engine::load(std::path::Path::new("artifacts"))?);
+    // resolve artifacts/ against the repo root (one level above the rust/
+    // package) so this works from any cwd
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let engine = Arc::new(Engine::auto(&dir)?);
     let manifest = engine.manifest().clone();
-    println!("loaded manifest: {} artifacts", manifest.artifacts.len());
+    println!(
+        "backend {}: manifest with {} artifacts",
+        engine.backend_name(),
+        manifest.artifacts.len()
+    );
 
     // Pick the int8 DLRM dense partition at batch 32 — the paper's flagship
     // quantized workload.
@@ -28,12 +38,12 @@ fn main() -> Result<()> {
     // (device-resident tensors, §VI-C).
     let mut gen = WeightGen::new(WEIGHT_SEED);
     let weights = gen.weights_for(&art);
-    let prepared = engine.prepare(name, &weights)?;
+    let prepared = engine.prepare(name, weights)?;
 
     // One request through the compiled network.
     let inputs = test_inputs_for(&manifest, &art, 42)?;
     let t0 = std::time::Instant::now();
-    let outputs = prepared.run(&engine, &inputs)?;
+    let outputs = prepared.run(&inputs)?;
     let dt = t0.elapsed();
     let scores = outputs[0].as_f32().expect("scores f32");
     println!("ran 1 inference in {:.2} ms; first scores: {:?}",

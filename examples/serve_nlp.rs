@@ -2,12 +2,15 @@
 //! buckets (§VI-A) and length-aware dynamic batching (§VII), over real PJRT
 //! numerics. Compares length-aware vs naive batching padding waste.
 //!
-//!     make artifacts && cargo run --release --example serve_nlp [-- --requests 64]
+//!     cargo run --release --example serve_nlp [-- --requests 64]
+//!
+//! Uses the builtin manifest + reference backend when `artifacts/` has not
+//! been built.
 
-use anyhow::Result;
 use fbia::runtime::Engine;
 use fbia::serving::NlpServer;
 use fbia::util::cli::Args;
+use fbia::util::error::Result;
 use fbia::util::table::{ms, pct, Table};
 use fbia::workloads::NlpGen;
 use std::sync::Arc;
@@ -17,7 +20,11 @@ fn main() -> Result<()> {
     let n = args.get_usize("requests", 64);
     let max_batch = args.get_usize("max-batch", 4);
 
-    let engine = Arc::new(Engine::load(std::path::Path::new("artifacts"))?);
+    // resolve artifacts/ against the repo root (one level above the rust/
+    // package) so this works from any cwd
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let engine = Arc::new(Engine::auto(&dir)?);
+    println!("backend: {}", engine.backend_name());
     let server = NlpServer::new(engine.clone())?;
     println!(
         "XLM-R mini: {} layers, d_model {}, buckets {:?}",

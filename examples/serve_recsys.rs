@@ -3,14 +3,15 @@
 //! parallel) feeding a dense partition (int8), pipelined across requests —
 //! and report latency/throughput.
 //!
-//!     make artifacts && cargo run --release --example serve_recsys [-- --requests 200]
+//!     cargo run --release --example serve_recsys [-- --requests 200]
 //!
-//! The run is recorded in EXPERIMENTS.md §E2E.
+//! The run is recorded in EXPERIMENTS.md §E2E. Uses the builtin manifest +
+//! reference backend when `artifacts/` has not been built.
 
-use anyhow::Result;
 use fbia::runtime::Engine;
 use fbia::serving::RecsysServer;
 use fbia::util::cli::Args;
+use fbia::util::error::Result;
 use fbia::util::table::{ms, Table};
 use fbia::workloads::RecsysGen;
 use std::sync::Arc;
@@ -20,7 +21,11 @@ fn main() -> Result<()> {
     let n = args.get_usize("requests", 100);
     let batch = args.get_usize("batch", 32);
 
-    let engine = Arc::new(Engine::load(std::path::Path::new("artifacts"))?);
+    // resolve artifacts/ against the repo root (one level above the rust/
+    // package) so this works from any cwd
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let engine = Arc::new(Engine::auto(&dir)?);
+    println!("backend: {}", engine.backend_name());
     let m = engine.manifest().clone();
     let num_tables = m.config_usize("dlrm", "num_tables")?;
     println!(

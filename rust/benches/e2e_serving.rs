@@ -1,12 +1,12 @@
-//! Bench: end-to-end serving over the real PJRT runtime (L3 hot path).
+//! Bench: end-to-end serving over the engine's execution backend (L3 hot
+//! path) — the reference interpreter by default, PJRT with `--features
+//! pjrt` + built artifacts.
 //!
 //! Times the actual request path — artifact execution, partition pipeline,
 //! batcher — and prints throughput/latency per model family. This is the
 //! harness the §Perf optimization loop measures against.
 //!
 //!     cargo bench --bench e2e_serving
-//!
-//! Requires `make artifacts`.
 
 use fbia::runtime::Engine;
 use fbia::serving::{CvServer, NlpServer, RecsysServer};
@@ -16,13 +16,11 @@ use fbia::workloads::{CvGen, NlpGen, RecsysGen};
 use std::sync::Arc;
 
 fn main() {
-    let engine = match Engine::load(std::path::Path::new("artifacts")) {
-        Ok(e) => Arc::new(e),
-        Err(e) => {
-            eprintln!("e2e_serving: skipping (artifacts not built: {e})");
-            return;
-        }
-    };
+    // cargo runs bench binaries with cwd = rust/; artifacts/ lives at the
+    // repository root, one level up
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let engine = Arc::new(Engine::auto(&dir).expect("engine"));
+    println!("backend: {}", engine.backend_name());
     let m = engine.manifest().clone();
 
     section("E2E: DLRM partitioned serving (real numerics)");

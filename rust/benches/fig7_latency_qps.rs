@@ -2,14 +2,21 @@
 //! models on the accelerator node, against their latency bands.
 //!
 //!     cargo bench --bench fig7_latency_qps
+//!     cargo bench --bench fig7_latency_qps -- --json BENCH_smoke.json
+//!
+//! `--json <path>` additionally writes a machine-readable summary (the CI
+//! smoke artifact).
 
 use fbia::config::Config;
 use fbia::graph::models::ModelId;
 use fbia::sim::simulate_model;
 use fbia::util::bench::section;
+use fbia::util::cli::Args;
+use fbia::util::json::Json;
 use fbia::util::table::{ms, pct, Table};
 
 fn main() {
+    let args = Args::from_env(false);
     let cfg = Config::default();
     section("Figure 7: latency and relative QPS per model (simulated node)");
 
@@ -56,4 +63,32 @@ fn main() {
         "paper: 'the accelerator is able to serve all of these complex models within the latency budget' -> {}",
         if all_meet { "holds" } else { "VIOLATED" }
     );
+
+    if let Some(path) = args.get("json") {
+        let json = Json::obj(vec![
+            ("bench", Json::str("fig7_latency_qps")),
+            ("all_within_budget", Json::Bool(all_meet)),
+            (
+                "rows",
+                Json::arr(
+                    rows.iter()
+                        .map(|(id, r)| {
+                            Json::obj(vec![
+                                ("model", Json::str(id.name())),
+                                ("batch", Json::num(r.batch as f64)),
+                                ("latency_ms", Json::num(r.latency_s * 1e3)),
+                                ("budget_ms", Json::num(id.latency_budget_s() * 1e3)),
+                                ("meets_budget", Json::Bool(r.meets_budget)),
+                                ("qps", Json::num(r.qps)),
+                                ("relative_qps", Json::num(r.qps / min_qps)),
+                                ("core_utilization", Json::num(r.core_utilization)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path, json.to_string()).expect("writing bench json");
+        println!("wrote {path}");
+    }
 }

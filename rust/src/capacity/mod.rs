@@ -9,7 +9,7 @@
 use crate::config::Config;
 use crate::graph::models::ModelId;
 use crate::sim::simulate_model;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// One growth scenario.
 #[derive(Debug, Clone)]

@@ -14,7 +14,7 @@ pub mod quantize;
 
 use crate::config::Config;
 use crate::graph::Graph;
-use anyhow::Result;
+use crate::util::error::Result;
 use parallelize::ParallelPlan;
 use partition::{PartitionKind, Plan};
 use placement::Schedule;

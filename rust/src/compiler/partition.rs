@@ -10,7 +10,7 @@ use crate::config::CompilerConfig;
 use crate::graph::ops::OpKind;
 use crate::graph::{Graph, NodeId, TensorKind};
 use crate::platform::NodeSpec;
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 /// What a partition does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -6,7 +6,7 @@
 
 use crate::platform::{CardSpec, HostSpec, NicSpec, NodeSpec, PcieSpec};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::path::Path;
 
 /// Compiler knobs (§IV-C, §VI-B) — each maps to one documented optimization

@@ -313,17 +313,32 @@ impl Graph {
 }
 
 /// Graph structural errors.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum GraphError {
-    #[error("graph contains a cycle")]
     Cycle,
-    #[error("node {node} references dangling tensor {tensor}")]
     DanglingTensor { node: NodeId, tensor: TensorId },
-    #[error("tensor {tensor} has multiple producers")]
     MultipleProducers { tensor: TensorId },
-    #[error("node {node} writes to weight/input tensor {tensor}")]
     WriteToConstant { node: NodeId, tensor: TensorId },
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Cycle => write!(f, "graph contains a cycle"),
+            GraphError::DanglingTensor { node, tensor } => {
+                write!(f, "node {node} references dangling tensor {tensor}")
+            }
+            GraphError::MultipleProducers { tensor } => {
+                write!(f, "tensor {tensor} has multiple producers")
+            }
+            GraphError::WriteToConstant { node, tensor } => {
+                write!(f, "node {node} writes to weight/input tensor {tensor}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 #[cfg(test)]
 mod tests {

@@ -9,12 +9,16 @@
 //!   under `artifacts/`;
 //! * **Layer 3 (this crate)** is everything that serves: a Glow-like graph
 //!   compiler ([`compiler`]), a parameterized six-card accelerator-node
-//!   simulator ([`sim`] + [`platform`]), a PJRT runtime that loads and
-//!   executes the AOT artifacts ([`runtime`]), quantization/reference
-//!   numerics ([`numerics`]), and the serving stack ([`serving`]).
+//!   simulator ([`sim`] + [`platform`]), a runtime with pluggable execution
+//!   backends ([`runtime`] — a hermetic pure-Rust reference interpreter by
+//!   default, PJRT execution of the AOT artifacts behind `--features
+//!   pjrt`), quantization/reference numerics ([`numerics`]), and the
+//!   serving stack ([`serving`]).
 //!
-//! Python is never on the request path: after `make artifacts` the `fbia`
-//! binary is self-contained.
+//! Python is never on the request path — and with the builtin manifest
+//! ([`runtime::builtin`]) it is not needed at build time either: the
+//! default `cargo build` serves DLRM/XLM-R/CV out of the box, fully
+//! offline. See rust/README.md for the backend matrix.
 //!
 //! See `DESIGN.md` for the substitution table (what the paper had vs. what
 //! this repo builds) and the experiment index mapping every paper table and

@@ -4,11 +4,10 @@
 //!   info              platform summary (paper §III headline numbers)
 //!   simulate          run the platform simulator for one or all models
 //!   compile-report    show the compiler's decisions for a model
-//!   serve             serve a model for N requests over the PJRT runtime
-//!   validate-numerics run the §V-C reference-vs-runtime validation
+//!   serve             serve a model for N requests over the active backend
+//!   validate-numerics run the §V-C reference-vs-backend validation
 //!   capacity          print the Fig. 1 capacity series
 
-use anyhow::{anyhow, bail, Result};
 use fbia::capacity::{capacity_series, GrowthScenario};
 use fbia::config::Config;
 use fbia::graph::models::ModelId;
@@ -18,6 +17,7 @@ use fbia::runtime::Engine;
 use fbia::serving::{CvServer, NlpServer, RecsysServer, WEIGHT_SEED};
 use fbia::sim::simulate_model;
 use fbia::util::cli::Args;
+use fbia::util::error::{bail, err, Result};
 use fbia::util::table::{f2, ms, pct, Table};
 use fbia::workloads::{CvGen, NlpGen, RecsysGen};
 use std::path::Path;
@@ -32,7 +32,7 @@ fn main() {
         Some("validate-numerics") => cmd_validate(&args),
         Some("capacity") => cmd_capacity(&args),
         Some("info") | None => cmd_info(&args),
-        Some(other) => Err(anyhow!(
+        Some(other) => Err(err!(
             "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, capacity)"
         )),
     };
@@ -144,9 +144,14 @@ fn cmd_compile_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Engine for the serving/validation subcommands: AOT artifacts when the
+/// directory exists, the builtin manifest + reference backend otherwise.
 fn engine(args: &Args) -> Result<Arc<Engine>> {
     let dir = args.get_or("artifacts", "artifacts");
-    Ok(Arc::new(Engine::load(Path::new(dir))?))
+    let eng = Engine::auto(Path::new(dir))?;
+    let manifest_dir = eng.manifest().dir.display().to_string();
+    eprintln!("[fbia] backend: {} (manifest: {manifest_dir})", eng.backend_name());
+    Ok(Arc::new(eng))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -220,12 +225,12 @@ fn cmd_validate(args: &Args) -> Result<()> {
         let reference = validate::reference_outputs(&manifest, art, &mut gen, &inputs)?;
         let mut gen2 = WeightGen::new(WEIGHT_SEED);
         let weights = gen2.weights_for(art);
-        let prepared = eng.prepare(&art.name, &weights)?;
-        let measured = prepared.run(&eng, &inputs)?;
+        let prepared = eng.prepare(&art.name, weights)?;
+        let measured = prepared.run(&inputs)?;
         let v = validate::compare(
             &art.name,
-            reference[0].as_f32().ok_or_else(|| anyhow!("ref output not f32"))?,
-            measured[0].as_f32().ok_or_else(|| anyhow!("out not f32"))?,
+            reference[0].as_f32().ok_or_else(|| err!("ref output not f32"))?,
+            measured[0].as_f32().ok_or_else(|| err!("out not f32"))?,
         );
         if !v.passed {
             failures += 1;

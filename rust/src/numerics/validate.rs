@@ -11,8 +11,8 @@ use crate::numerics::ops_ref as ops;
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::{Artifact, InputKind, Manifest};
+use crate::util::error::{bail, err, Result};
 use crate::util::stats::cosine_similarity;
-use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
 /// Comparison outcome for one artifact run.
@@ -60,7 +60,7 @@ impl Env {
             let t = match spec.kind {
                 InputKind::Input => it
                     .next()
-                    .ok_or_else(|| anyhow!("missing request input {}", spec.name))?
+                    .ok_or_else(|| err!("missing request input {}", spec.name))?
                     .clone(),
                 _ => gen.generate(spec, artifact),
             };
@@ -72,34 +72,91 @@ impl Env {
         Ok(Env { map })
     }
 
+    /// Build from explicit weight tensors (as uploaded to a backend) +
+    /// request inputs in spec order. Used by the reference backend so it
+    /// computes with what was actually uploaded, not a regeneration.
+    pub fn from_weights(
+        artifact: &Artifact,
+        weights: &[(String, HostTensor)],
+        inputs: &[&HostTensor],
+    ) -> Result<Env> {
+        let mut map = HashMap::new();
+        let mut wit = weights.iter();
+        let mut iit = inputs.iter();
+        for spec in &artifact.inputs {
+            let t = match spec.kind {
+                InputKind::Input => (*iit
+                    .next()
+                    .ok_or_else(|| err!("missing request input {}", spec.name))?)
+                .clone(),
+                _ => {
+                    let (name, t) = wit
+                        .next()
+                        .ok_or_else(|| err!("missing weight {}", spec.name))?;
+                    if name != &spec.name {
+                        bail!("weight order mismatch: expected {}, got {name}", spec.name);
+                    }
+                    t.clone()
+                }
+            };
+            map.insert(spec.name.clone(), t);
+        }
+        if iit.next().is_some() {
+            bail!("too many request inputs for {}", artifact.name);
+        }
+        Ok(Env { map })
+    }
+
     pub fn f32(&self, name: &str) -> Result<&[f32]> {
         self.map
             .get(name)
             .and_then(HostTensor::as_f32)
-            .ok_or_else(|| anyhow!("tensor {name} missing or not f32"))
+            .ok_or_else(|| err!("tensor {name} missing or not f32"))
     }
 
     pub fn i32(&self, name: &str) -> Result<&[i32]> {
         self.map
             .get(name)
             .and_then(HostTensor::as_i32)
-            .ok_or_else(|| anyhow!("tensor {name} missing or not i32"))
+            .ok_or_else(|| err!("tensor {name} missing or not i32"))
     }
 
     pub fn i8(&self, name: &str) -> Result<&[i8]> {
         self.map
             .get(name)
             .and_then(HostTensor::as_i8)
-            .ok_or_else(|| anyhow!("tensor {name} missing or not i8"))
+            .ok_or_else(|| err!("tensor {name} missing or not i8"))
     }
 
     pub fn shape(&self, name: &str) -> Result<&[usize]> {
-        self.map.get(name).map(HostTensor::shape).ok_or_else(|| anyhow!("tensor {name} missing"))
+        self.map.get(name).map(HostTensor::shape).ok_or_else(|| err!("tensor {name} missing"))
     }
 }
 
-/// Evaluate the reference model for any artifact; returns outputs in the
-/// artifact's declared order.
+/// Whether a reference model exists for this (model, role) pair — the
+/// single source of truth for what [`eval`] below can dispatch, used by
+/// `RefBackend::compile` as its "compilation" check.
+pub fn supports(model: &str, role: &str) -> bool {
+    matches!((model, role), ("dlrm", "sls") | ("dlrm", "dense") | ("xlmr", _) | ("cv", _))
+}
+
+/// Evaluate the reference model for an artifact over an already-built
+/// environment; returns outputs in the artifact's declared order. This is
+/// the single numerics path shared by `fbia validate-numerics` and the
+/// [`crate::runtime::RefBackend`] interpreter. Dispatch arms must stay in
+/// sync with [`supports`] directly above.
+pub fn eval(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+    match (artifact.model.as_str(), artifact.role.as_str()) {
+        ("dlrm", "sls") => dlrm_sls_ref(manifest, artifact, env),
+        ("dlrm", "dense") => dlrm_dense_ref(manifest, artifact, env),
+        ("xlmr", _) => xlmr_ref(manifest, artifact, env),
+        ("cv", _) => cv_ref(manifest, artifact, env),
+        other => bail!("no reference model for {other:?}"),
+    }
+}
+
+/// Evaluate the reference model with generated weights; returns outputs in
+/// the artifact's declared order.
 pub fn reference_outputs(
     manifest: &Manifest,
     artifact: &Artifact,
@@ -107,13 +164,7 @@ pub fn reference_outputs(
     inputs: &[HostTensor],
 ) -> Result<Vec<HostTensor>> {
     let env = Env::build(artifact, gen, inputs)?;
-    match (artifact.model.as_str(), artifact.role.as_str()) {
-        ("dlrm", "sls") => dlrm_sls_ref(manifest, artifact, &env),
-        ("dlrm", "dense") => dlrm_dense_ref(manifest, artifact, &env),
-        ("xlmr", _) => xlmr_ref(manifest, artifact, &env),
-        ("cv", _) => cv_ref(manifest, artifact, &env),
-        other => bail!("no reference model for {other:?}"),
-    }
+    eval(manifest, artifact, &env)
 }
 
 // ---------------------------------------------------------------------------
@@ -127,8 +178,8 @@ fn dlrm_sls_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<V
         .inputs
         .iter()
         .filter(|s| s.name.starts_with("table"))
-        .map(|s| s.name[5..].parse().unwrap())
-        .collect();
+        .map(|s| crate::runtime::artifact::table_index(&s.name, "table"))
+        .collect::<Result<_>>()?;
     let mut out = vec![0f32; batch * tables.len() * dim];
     for (ti, t) in tables.iter().enumerate() {
         let table = env.f32(&format!("table{t}"))?;
@@ -208,7 +259,7 @@ fn read_widths(manifest: &Manifest, model: &str, key: &str) -> Result<Vec<usize>
         .and_then(|m| m.get(key))
         .and_then(crate::util::json::Json::as_arr)
         .map(|a| a.iter().filter_map(crate::util::json::Json::as_usize).collect())
-        .ok_or_else(|| anyhow!("manifest configs.{model}.{key} missing"))
+        .ok_or_else(|| err!("manifest configs.{model}.{key} missing"))
 }
 
 // ---------------------------------------------------------------------------
@@ -217,7 +268,7 @@ fn read_widths(manifest: &Manifest, model: &str, key: &str) -> Result<Vec<usize>
 
 fn xlmr_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
     let batch = artifact.batch;
-    let seq = artifact.seq.ok_or_else(|| anyhow!("xlmr artifact missing seq"))?;
+    let seq = artifact.seq.ok_or_else(|| err!("xlmr artifact missing seq"))?;
     let layers = manifest.config_usize("xlmr", "layers")?;
     let d = manifest.config_usize("xlmr", "d_model")?;
     let heads = manifest.config_usize("xlmr", "heads")?;
@@ -327,7 +378,7 @@ fn cv_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<Hos
                 })
                 .collect()
         })
-        .ok_or_else(|| anyhow!("manifest configs.cv.stages missing"))?;
+        .ok_or_else(|| err!("manifest configs.cv.stages missing"))?;
 
     let img = env.f32("image")?;
     let mut x = ops::conv2d(

@@ -1,8 +1,10 @@
-//! AOT artifact manifest (`artifacts/manifest.json`) — the contract between
-//! `python/compile/aot.py` (build time) and this runtime (serve time).
+//! AOT artifact manifest — the contract between artifact producers and the
+//! runtime backends. Producers are `python/compile/aot.py` (build time,
+//! `artifacts/manifest.json`) and [`crate::runtime::builtin`] (the in-crate
+//! generator the hermetic default build uses).
 
+use crate::util::error::{bail, err, Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Tensor dtypes used in the manifest.
@@ -112,7 +114,7 @@ impl Manifest {
         self.artifacts
             .iter()
             .find(|a| a.name == name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+            .ok_or_else(|| err!("artifact '{name}' not in manifest"))
     }
 
     /// All artifacts for a model/role.
@@ -129,20 +131,46 @@ impl Manifest {
             .get(model)
             .and_then(|m| m.get(key))
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest configs.{model}.{key} missing"))
+            .ok_or_else(|| err!("manifest configs.{model}.{key} missing"))
     }
+}
+
+/// Parse the numeric suffix of an indexed input name (`idx3` → 3 for prefix
+/// `"idx"`). Returns a proper error for malformed artifact input names
+/// instead of panicking on arbitrary manifest content.
+pub fn table_index(name: &str, prefix: &str) -> Result<usize> {
+    name.strip_prefix(prefix)
+        .and_then(|digits| digits.parse::<usize>().ok())
+        .ok_or_else(|| {
+            err!("malformed artifact input name '{name}' (expected {prefix}<table-id>)")
+        })
+}
+
+/// Strict shape parsing: every entry must be a non-negative integer. A
+/// malformed manifest must fail loudly here, not surface later as a cryptic
+/// length mismatch inside a backend.
+fn parse_shape(j: Option<&Json>, what: &str) -> Result<Vec<usize>> {
+    let arr = j
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err!("{what}: shape missing or not an array"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| err!("{what}: shape entry {v} is not a non-negative integer"))
+        })
+        .collect()
 }
 
 fn parse_artifact(a: &Json, dir: &Path) -> Result<Artifact> {
     let name = a
         .get("name")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("artifact missing name"))?
+        .ok_or_else(|| err!("artifact missing name"))?
         .to_string();
     let file = dir.join(
         a.get("file")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+            .ok_or_else(|| err!("artifact {name} missing file"))?,
     );
     let mut inputs = Vec::new();
     for i in a.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
@@ -151,30 +179,27 @@ fn parse_artifact(a: &Json, dir: &Path) -> Result<Artifact> {
             "weight_q" => InputKind::WeightQ,
             _ => InputKind::Input,
         };
+        let iname = i
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("artifact {name}: input missing name"))?
+            .to_string();
+        let what = format!("artifact {name} input {iname}");
         inputs.push(InputSpec {
-            name: i
-                .get("name")
-                .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("input missing name"))?
-                .to_string(),
-            shape: i
-                .get("shape")
-                .and_then(Json::as_arr)
-                .map(|s| s.iter().filter_map(Json::as_usize).collect())
-                .unwrap_or_default(),
-            dtype: ArtDType::parse(i.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?,
+            shape: parse_shape(i.get("shape"), &what)?,
+            dtype: ArtDType::parse(i.get("dtype").and_then(Json::as_str).unwrap_or("f32"))
+                .context(what)?,
+            name: iname,
             kind,
         });
     }
     let mut outputs = Vec::new();
-    for o in a.get("outputs").and_then(Json::as_arr).unwrap_or(&[]) {
+    for (oi, o) in a.get("outputs").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+        let what = format!("artifact {name} output {oi}");
         outputs.push(OutputSpec {
-            shape: o
-                .get("shape")
-                .and_then(Json::as_arr)
-                .map(|s| s.iter().filter_map(Json::as_usize).collect())
-                .unwrap_or_default(),
-            dtype: ArtDType::parse(o.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?,
+            shape: parse_shape(o.get("shape"), &what)?,
+            dtype: ArtDType::parse(o.get("dtype").and_then(Json::as_str).unwrap_or("f32"))
+                .context(what)?,
         });
     }
     Ok(Artifact {
@@ -231,5 +256,61 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("manifest.json"), r#"{"version": 9}"#).unwrap();
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn table_index_parses_and_rejects() {
+        assert_eq!(table_index("idx3", "idx").unwrap(), 3);
+        assert_eq!(table_index("table12", "table").unwrap(), 12);
+        assert!(table_index("idx", "idx").is_err());
+        assert!(table_index("idxT", "idx").is_err());
+        assert!(table_index("len3", "idx").is_err());
+    }
+
+    fn load_manifest(tag: &str, body: &str) -> crate::util::error::Result<Manifest> {
+        let dir = std::env::temp_dir().join(format!("fbia_manifest_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        Manifest::load(&dir)
+    }
+
+    #[test]
+    fn rejects_bad_dtype_with_context() {
+        let e = load_manifest(
+            "bad_dtype",
+            r#"{"version": 1, "artifacts": [
+                {"name": "m", "file": "m.hlo.txt",
+                 "inputs": [{"name": "x", "shape": [2], "dtype": "f64", "kind": "input"}],
+                 "outputs": []}]}"#,
+        )
+        .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("unknown dtype f64"), "{msg}");
+        assert!(msg.contains("artifact m input x"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_bad_shape_with_context() {
+        // a fractional dim must be an error, not silently dropped
+        let e = load_manifest(
+            "bad_shape",
+            r#"{"version": 1, "artifacts": [
+                {"name": "m", "file": "m.hlo.txt",
+                 "inputs": [{"name": "x", "shape": [2, 3.5], "dtype": "f32", "kind": "input"}],
+                 "outputs": []}]}"#,
+        )
+        .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("shape entry"), "{msg}");
+        assert!(msg.contains("artifact m input x"), "{msg}");
+        // negative output dims likewise
+        let e = load_manifest(
+            "neg_shape",
+            r#"{"version": 1, "artifacts": [
+                {"name": "m", "file": "m.hlo.txt", "inputs": [],
+                 "outputs": [{"shape": [-1, 4], "dtype": "f32"}]}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("artifact m output 0"), "{e}");
     }
 }

@@ -1,0 +1,151 @@
+//! Pluggable execution backends (the paper's platform was "open to enable a
+//! variety of AI accelerators from different vendors"; the runtime abstracts
+//! the device behind a common artifact/execution contract).
+//!
+//! A [`Backend`] compiles manifest artifacts, accepts device-resident
+//! weights, and executes requests. Two implementations exist today:
+//!
+//! * [`RefBackend`] — a deterministic pure-Rust interpreter over
+//!   [`crate::numerics::ops_ref`], via the [`crate::numerics::validate`]
+//!   reference models. Zero external dependencies; the hermetic default.
+//! * `PjrtBackend` (`--features pjrt`) — executes the AOT HLO-text
+//!   artifacts through a PJRT client ([`crate::runtime::pjrt`]).
+//!
+//! The [`crate::runtime::Engine`] front end performs all spec validation
+//! (weight names/shapes, request arity/shapes, output arity) so backends
+//! only implement raw execution.
+
+use crate::numerics::validate;
+use crate::numerics::HostTensor;
+use crate::runtime::artifact::{Artifact, InputKind, Manifest};
+use crate::util::error::Result;
+use std::sync::Arc;
+
+/// One execution device family behind the common artifact contract.
+pub trait Backend: Send + Sync {
+    /// Short identifier ("ref", "pjrt") for logs and the CLI.
+    fn name(&self) -> &'static str;
+
+    /// Compile an artifact (backends cache internally); cheap if already
+    /// compiled. For the interpreter this checks the artifact is evaluable.
+    fn compile(&self, manifest: &Arc<Manifest>, art: &Artifact) -> Result<()>;
+
+    /// Make weights device-resident for an artifact and return an
+    /// executable handle. `weights` is already validated against the spec
+    /// (names, order, shapes) by the engine.
+    fn prepare(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        weights: Vec<(String, HostTensor)>,
+    ) -> Result<Box<dyn PreparedExec>>;
+
+    /// One-shot execution with *every* input host-side (weights + request
+    /// tensors in spec order) — the "before" configuration of the §Perf
+    /// device-resident ablation. Optional: backends that only serve the
+    /// resident-weight hot path can keep the default.
+    fn execute_all(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let _ = (manifest, art, inputs);
+        Err(crate::err!(
+            "backend {} does not support one-shot host-side execution",
+            self.name()
+        ))
+    }
+}
+
+/// A compiled artifact with device-resident weights, ready to execute.
+/// Inputs arrive pre-validated, in spec order for `kind == Input`.
+pub trait PreparedExec: Send + Sync {
+    fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+// ---------------------------------------------------------------------------
+// RefBackend: the deterministic pure-Rust interpreter
+// ---------------------------------------------------------------------------
+
+/// Reference interpreter backend. Executes every artifact family (DLRM SLS
+/// shards + dense, XLM-R buckets, CV trunk) with the independent Rust
+/// reference kernels — the same numerics `fbia validate-numerics` trusts, so
+/// it doubles as the ground truth other backends are validated against
+/// (§V-C, the FakeLowP role).
+#[derive(Debug, Default)]
+pub struct RefBackend;
+
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        RefBackend
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn compile(&self, _manifest: &Arc<Manifest>, art: &Artifact) -> Result<()> {
+        // No codegen: "compilation" is checking a reference model exists.
+        if validate::supports(&art.model, &art.role) {
+            Ok(())
+        } else {
+            Err(crate::err!(
+                "ref backend: no reference model for ({}, {})",
+                art.model,
+                art.role
+            ))
+        }
+    }
+
+    fn prepare(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        weights: Vec<(String, HostTensor)>,
+    ) -> Result<Box<dyn PreparedExec>> {
+        self.compile(manifest, art)?;
+        Ok(Box::new(RefPrepared {
+            manifest: Arc::clone(manifest),
+            art: art.clone(),
+            weights,
+        }))
+    }
+
+    fn execute_all(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        self.compile(manifest, art)?;
+        // split the flat spec-order input list into weights + request inputs
+        let mut weights = Vec::new();
+        let mut request: Vec<&HostTensor> = Vec::new();
+        for (spec, t) in art.inputs.iter().zip(inputs) {
+            match spec.kind {
+                InputKind::Input => request.push(t),
+                _ => weights.push((spec.name.clone(), t.clone())),
+            }
+        }
+        let env = validate::Env::from_weights(art, &weights, &request)?;
+        validate::eval(manifest, art, &env)
+    }
+}
+
+/// Weights held host-side ("device-resident" for the interpreter) + the
+/// artifact spec and manifest configs needed at execution time.
+struct RefPrepared {
+    manifest: Arc<Manifest>,
+    art: Artifact,
+    weights: Vec<(String, HostTensor)>,
+}
+
+impl PreparedExec for RefPrepared {
+    fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let env = validate::Env::from_weights(&self.art, &self.weights, inputs)?;
+        validate::eval(&self.manifest, &self.art, &env)
+    }
+}

@@ -1,0 +1,428 @@
+//! Builtin manifest generator: the same artifact family `python/compile/aot.py`
+//! emits, derived in Rust from the model hyperparameters — so `Engine` no
+//! longer requires `make artifacts` (or Python at all) to serve through the
+//! reference backend.
+//!
+//! The spec builders mirror `dense_specs`/`sls_shard_specs`/`model_specs`
+//! in `python/compile/models/{dlrm,xlmr,cv}.py` name-for-name and
+//! shape-for-shape: an `artifacts/manifest.json` produced by the AOT driver
+//! and this builtin manifest describe the identical contract, which is what
+//! keeps the reference numerics comparable across backends.
+
+use crate::runtime::artifact::{ArtDType, Artifact, InputKind, InputSpec, Manifest, OutputSpec};
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+// Model hyperparameters (mirrors DlrmConfig / XlmrConfig / CvConfig).
+const DLRM_NUM_TABLES: usize = 8;
+const DLRM_ROWS_PER_TABLE: usize = 25_000;
+const DLRM_EMBED_DIM: usize = 64;
+const DLRM_DENSE_IN: usize = 256;
+const DLRM_BOTTOM_MLP: [usize; 3] = [256, 128, 64];
+const DLRM_TOP_MLP: [usize; 3] = [512, 256, 1];
+const DLRM_MAX_LOOKUPS: usize = 32;
+
+const XLMR_LAYERS: usize = 4;
+const XLMR_D_MODEL: usize = 256;
+const XLMR_HEADS: usize = 8;
+const XLMR_FFN: usize = 1024;
+const XLMR_VOCAB: usize = 8_000;
+const XLMR_MAX_POS: usize = 512;
+
+const CV_IMAGE: usize = 64;
+const CV_STEM_CH: usize = 32;
+const CV_STAGES: [(usize, usize); 3] = [(32, 2), (64, 2), (128, 2)];
+const CV_GROUPS: usize = 8;
+const CV_CLASSES: usize = 100;
+
+// Artifact variant grid (the paper's static-shape bucket strategy, §VI-A).
+const DLRM_BATCHES: [usize; 3] = [16, 32, 64];
+const SLS_CARDS: usize = 4;
+const XLMR_SEQS: [usize; 3] = [32, 64, 128];
+const XLMR_BATCHES: [usize; 2] = [1, 4];
+const CV_BATCHES: [usize; 2] = [1, 4];
+
+fn dlrm_interaction_dim() -> usize {
+    let f = DLRM_NUM_TABLES + 1;
+    DLRM_EMBED_DIM + f * (f - 1) / 2
+}
+
+// ---------------------------------------------------------------------------
+// Spec builders (mirror python/compile/models/*.py)
+// ---------------------------------------------------------------------------
+
+fn w(name: String, shape: &[usize]) -> InputSpec {
+    InputSpec { name, shape: shape.to_vec(), dtype: ArtDType::F32, kind: InputKind::Weight }
+}
+
+fn inp(name: &str, shape: &[usize], dtype: ArtDType) -> InputSpec {
+    InputSpec { name: name.to_string(), shape: shape.to_vec(), dtype, kind: InputKind::Input }
+}
+
+fn out_f32(shape: &[usize]) -> OutputSpec {
+    OutputSpec { shape: shape.to_vec(), dtype: ArtDType::F32 }
+}
+
+fn mlp_param_specs(prefix: &str, d_in: usize, widths: &[usize], quantized: bool) -> Vec<InputSpec> {
+    let mut specs = Vec::new();
+    let mut d = d_in;
+    for (i, &h) in widths.iter().enumerate() {
+        if quantized {
+            specs.push(InputSpec {
+                name: format!("{prefix}_wq{i}"),
+                shape: vec![h, d],
+                dtype: ArtDType::I8,
+                kind: InputKind::WeightQ,
+            });
+            specs.push(w(format!("{prefix}_scale{i}"), &[h]));
+            specs.push(w(format!("{prefix}_zp{i}"), &[h]));
+        } else {
+            specs.push(w(format!("{prefix}_w{i}"), &[h, d]));
+        }
+        specs.push(w(format!("{prefix}_b{i}"), &[h]));
+        d = h;
+    }
+    specs
+}
+
+fn dlrm_dense(batch: usize, quantized: bool) -> Artifact {
+    let mut inputs = mlp_param_specs("bot", DLRM_DENSE_IN, &DLRM_BOTTOM_MLP, quantized);
+    inputs.extend(mlp_param_specs("top", dlrm_interaction_dim(), &DLRM_TOP_MLP, quantized));
+    inputs.push(inp("dense", &[batch, DLRM_DENSE_IN], ArtDType::F32));
+    inputs.push(inp("sparse", &[batch, DLRM_NUM_TABLES, DLRM_EMBED_DIM], ArtDType::F32));
+    let precision = if quantized { "int8" } else { "fp32" };
+    artifact(
+        format!("dlrm_dense_b{batch}_{precision}"),
+        "dlrm",
+        "dense",
+        batch,
+        None,
+        None,
+        inputs,
+        vec![out_f32(&[batch, 1])],
+    )
+}
+
+fn dlrm_sls_shard(shard: usize, tables: &[usize], batch: usize) -> Artifact {
+    let mut inputs = Vec::new();
+    for &t in tables {
+        inputs.push(w(format!("table{t}"), &[DLRM_ROWS_PER_TABLE, DLRM_EMBED_DIM]));
+    }
+    for &t in tables {
+        inputs.push(inp(&format!("idx{t}"), &[batch, DLRM_MAX_LOOKUPS], ArtDType::I32));
+        inputs.push(inp(&format!("len{t}"), &[batch], ArtDType::I32));
+    }
+    artifact(
+        format!("dlrm_sls_shard{shard}_b{batch}"),
+        "dlrm",
+        "sls",
+        batch,
+        None,
+        Some(shard),
+        inputs,
+        vec![out_f32(&[batch, tables.len(), DLRM_EMBED_DIM])],
+    )
+}
+
+fn xlmr_full(batch: usize, seq: usize) -> Artifact {
+    let (d, f) = (XLMR_D_MODEL, XLMR_FFN);
+    let mut inputs = vec![
+        w("tok_emb".into(), &[XLMR_VOCAB, d]),
+        w("pos_emb".into(), &[XLMR_MAX_POS, d]),
+        w("ln_f_g".into(), &[d]),
+        w("ln_f_b".into(), &[d]),
+    ];
+    for l in 0..XLMR_LAYERS {
+        let p = format!("l{l}_");
+        for (suffix, shape) in [
+            ("wq", vec![d, d]),
+            ("bq", vec![d]),
+            ("wk", vec![d, d]),
+            ("bk", vec![d]),
+            ("wv", vec![d, d]),
+            ("bv", vec![d]),
+            ("wo", vec![d, d]),
+            ("bo", vec![d]),
+            ("ln1_g", vec![d]),
+            ("ln1_b", vec![d]),
+            ("w1", vec![f, d]),
+            ("b1", vec![f]),
+            ("w2", vec![d, f]),
+            ("b2", vec![d]),
+            ("ln2_g", vec![d]),
+            ("ln2_b", vec![d]),
+        ] {
+            inputs.push(w(format!("{p}{suffix}"), &shape));
+        }
+    }
+    inputs.push(inp("ids", &[batch, seq], ArtDType::I32));
+    inputs.push(inp("pad_len", &[batch], ArtDType::I32));
+    artifact(
+        format!("xlmr_s{seq}_b{batch}"),
+        "xlmr",
+        "full",
+        batch,
+        Some(seq),
+        None,
+        inputs,
+        vec![out_f32(&[batch, d]), out_f32(&[batch, seq, d])],
+    )
+}
+
+fn cv_trunk(batch: usize) -> Artifact {
+    let mut inputs = vec![
+        w("stem_w".into(), &[3, 3, 3, CV_STEM_CH]),
+        w("stem_b".into(), &[CV_STEM_CH]),
+    ];
+    let mut cin = CV_STEM_CH;
+    for (si, &(ch, blocks)) in CV_STAGES.iter().enumerate() {
+        for bi in 0..blocks {
+            let p = format!("s{si}b{bi}");
+            inputs.push(w(format!("{p}_pw1_w"), &[1, 1, cin, ch]));
+            inputs.push(w(format!("{p}_pw1_b"), &[ch]));
+            inputs.push(w(format!("{p}_gw_w"), &[3, 3, ch / CV_GROUPS, ch]));
+            inputs.push(w(format!("{p}_gw_b"), &[ch]));
+            inputs.push(w(format!("{p}_pw2_w"), &[1, 1, ch, ch]));
+            inputs.push(w(format!("{p}_pw2_b"), &[ch]));
+            if cin != ch {
+                inputs.push(w(format!("{p}_proj_w"), &[1, 1, cin, ch]));
+                inputs.push(w(format!("{p}_proj_b"), &[ch]));
+            }
+            cin = ch;
+        }
+    }
+    inputs.push(w("head_w".into(), &[CV_CLASSES, cin]));
+    inputs.push(w("head_b".into(), &[CV_CLASSES]));
+    inputs.push(inp("image", &[batch, CV_IMAGE, CV_IMAGE, 3], ArtDType::F32));
+    artifact(
+        format!("cv_trunk_b{batch}"),
+        "cv",
+        "full",
+        batch,
+        None,
+        None,
+        inputs,
+        vec![out_f32(&[batch, CV_CLASSES]), out_f32(&[batch, cin])],
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn artifact(
+    name: String,
+    model: &str,
+    role: &str,
+    batch: usize,
+    seq: Option<usize>,
+    shard: Option<usize>,
+    inputs: Vec<InputSpec>,
+    outputs: Vec<OutputSpec>,
+) -> Artifact {
+    Artifact {
+        file: PathBuf::from(format!("<builtin>/{name}.hlo.txt")),
+        name,
+        model: model.to_string(),
+        role: role.to_string(),
+        batch,
+        seq,
+        shard,
+        inputs,
+        outputs,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Param counts (mirror the python configs' param_count(), kept in the
+// configs section because examples report them)
+// ---------------------------------------------------------------------------
+
+fn mlp_params(mut d: usize, widths: &[usize]) -> usize {
+    let mut n = 0;
+    for &h in widths {
+        n += d * h + h;
+        d = h;
+    }
+    n
+}
+
+fn dlrm_params() -> usize {
+    DLRM_NUM_TABLES * DLRM_ROWS_PER_TABLE * DLRM_EMBED_DIM
+        + mlp_params(DLRM_DENSE_IN, &DLRM_BOTTOM_MLP)
+        + mlp_params(dlrm_interaction_dim(), &DLRM_TOP_MLP)
+}
+
+fn xlmr_params() -> usize {
+    let d = XLMR_D_MODEL;
+    let per_layer = 4 * d * d + 4 * d + 2 * d * XLMR_FFN + XLMR_FFN + d + 4 * d;
+    XLMR_VOCAB * d + XLMR_MAX_POS * d + XLMR_LAYERS * per_layer + 2 * d
+}
+
+fn cv_params() -> usize {
+    let mut n = 3 * 3 * 3 * CV_STEM_CH + CV_STEM_CH;
+    let mut cin = CV_STEM_CH;
+    for &(ch, blocks) in CV_STAGES.iter() {
+        for _ in 0..blocks {
+            n += cin * ch + ch;
+            n += 3 * 3 * (ch / CV_GROUPS) * ch + ch;
+            n += ch * ch + ch;
+            if cin != ch {
+                n += cin * ch + ch;
+            }
+            cin = ch;
+        }
+    }
+    n + cin * CV_CLASSES + CV_CLASSES
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn configs() -> Json {
+    Json::obj(vec![
+        (
+            "dlrm",
+            Json::obj(vec![
+                ("num_tables", Json::num(DLRM_NUM_TABLES as f64)),
+                ("rows_per_table", Json::num(DLRM_ROWS_PER_TABLE as f64)),
+                ("embed_dim", Json::num(DLRM_EMBED_DIM as f64)),
+                ("dense_in", Json::num(DLRM_DENSE_IN as f64)),
+                ("bottom_mlp", usize_arr(&DLRM_BOTTOM_MLP)),
+                ("top_mlp", usize_arr(&DLRM_TOP_MLP)),
+                ("max_lookups", Json::num(DLRM_MAX_LOOKUPS as f64)),
+                ("params", Json::num(dlrm_params() as f64)),
+            ]),
+        ),
+        (
+            "xlmr",
+            Json::obj(vec![
+                ("layers", Json::num(XLMR_LAYERS as f64)),
+                ("d_model", Json::num(XLMR_D_MODEL as f64)),
+                ("heads", Json::num(XLMR_HEADS as f64)),
+                ("ffn", Json::num(XLMR_FFN as f64)),
+                ("vocab", Json::num(XLMR_VOCAB as f64)),
+                ("max_pos", Json::num(XLMR_MAX_POS as f64)),
+                ("params", Json::num(xlmr_params() as f64)),
+            ]),
+        ),
+        (
+            "cv",
+            Json::obj(vec![
+                ("image", Json::num(CV_IMAGE as f64)),
+                ("classes", Json::num(CV_CLASSES as f64)),
+                ("stem_ch", Json::num(CV_STEM_CH as f64)),
+                ("groups", Json::num(CV_GROUPS as f64)),
+                (
+                    "stages",
+                    Json::arr(
+                        CV_STAGES.iter().map(|&(ch, b)| usize_arr(&[ch, b])).collect(),
+                    ),
+                ),
+                ("params", Json::num(cv_params() as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Build the full builtin manifest: the same artifact grid as
+/// `python -m compile.aot` (DLRM dense b{16,32,64} × {fp32,int8}, 4 SLS
+/// shards × b{16,32,64}, XLM-R s{32,64,128} × b{1,4}, CV trunk b{1,4}).
+pub fn builtin_manifest() -> Manifest {
+    let mut artifacts = Vec::new();
+    for &b in DLRM_BATCHES.iter() {
+        for quantized in [false, true] {
+            artifacts.push(dlrm_dense(b, quantized));
+        }
+    }
+    let per_card = DLRM_NUM_TABLES / SLS_CARDS;
+    for &b in DLRM_BATCHES.iter() {
+        for c in 0..SLS_CARDS {
+            let tables: Vec<usize> = (c * per_card..(c + 1) * per_card).collect();
+            artifacts.push(dlrm_sls_shard(c, &tables, b));
+        }
+    }
+    for &s in XLMR_SEQS.iter() {
+        for &b in XLMR_BATCHES.iter() {
+            artifacts.push(xlmr_full(b, s));
+        }
+    }
+    for &b in CV_BATCHES.iter() {
+        artifacts.push(cv_trunk(b));
+    }
+    Manifest { dir: PathBuf::from("<builtin>"), artifacts, configs: configs() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::InputKind;
+
+    #[test]
+    fn grid_is_complete() {
+        let m = builtin_manifest();
+        // 6 dense + 12 sls + 6 xlmr + 2 cv
+        assert_eq!(m.artifacts.len(), 26);
+        for name in [
+            "dlrm_dense_b32_int8",
+            "dlrm_dense_b16_fp32",
+            "dlrm_sls_shard0_b16",
+            "dlrm_sls_shard3_b64",
+            "xlmr_s32_b1",
+            "xlmr_s128_b4",
+            "cv_trunk_b1",
+            "cv_trunk_b4",
+        ] {
+            assert!(m.get(name).is_ok(), "missing builtin artifact {name}");
+        }
+        assert_eq!(m.select("dlrm", "sls").len(), 12);
+        assert_eq!(m.select("xlmr", "full").len(), 6);
+    }
+
+    #[test]
+    fn configs_match_models() {
+        let m = builtin_manifest();
+        assert_eq!(m.config_usize("dlrm", "num_tables").unwrap(), 8);
+        assert_eq!(m.config_usize("dlrm", "embed_dim").unwrap(), 64);
+        assert_eq!(m.config_usize("xlmr", "d_model").unwrap(), 256);
+        assert_eq!(m.config_usize("cv", "image").unwrap(), 64);
+        // param counts mirror the python configs' formulas
+        assert_eq!(m.config_usize("dlrm", "params").unwrap(), 13_090_241);
+        assert_eq!(m.config_usize("xlmr", "params").unwrap(), 5_338_624);
+        assert!(m.config_usize("cv", "params").unwrap() > 100_000);
+    }
+
+    #[test]
+    fn dense_specs_mirror_aot() {
+        let m = builtin_manifest();
+        let a = m.get("dlrm_dense_b16_int8").unwrap();
+        // int8 MLPs: 4 specs per layer x 6 layers + dense + sparse
+        assert_eq!(a.inputs.len(), 4 * 6 + 2);
+        assert_eq!(a.inputs[0].name, "bot_wq0");
+        assert_eq!(a.inputs[0].kind, InputKind::WeightQ);
+        assert_eq!(a.inputs[0].shape, vec![256, 256]);
+        let sparse = a.inputs.last().unwrap();
+        assert_eq!(sparse.name, "sparse");
+        assert_eq!(sparse.shape, vec![16, 8, 64]);
+        assert_eq!(a.outputs[0].shape, vec![16, 1]);
+        // top mlp first layer takes the interaction dim (64 + 9*8/2)
+        let top = a.inputs.iter().find(|s| s.name == "top_wq0").unwrap();
+        assert_eq!(top.shape, vec![512, 100]);
+    }
+
+    #[test]
+    fn xlmr_and_cv_specs_mirror_aot() {
+        let m = builtin_manifest();
+        let x = m.get("xlmr_s64_b4").unwrap();
+        // 4 globals + 16 per layer x 4 layers + ids + pad_len
+        assert_eq!(x.inputs.len(), 4 + 16 * 4 + 2);
+        assert_eq!(x.outputs.len(), 2);
+        assert_eq!(x.outputs[1].shape, vec![4, 64, 256]);
+        let c = m.get("cv_trunk_b4").unwrap();
+        // stem(2) + blocks: s0(6+6) + s1(8+6) + s2(8+6) + head(2) + image
+        assert_eq!(c.inputs.last().unwrap().shape, vec![4, 64, 64, 3]);
+        assert_eq!(c.outputs[0].shape, vec![4, 100]);
+        assert_eq!(c.outputs[1].shape, vec![4, 128]);
+        // grouped conv weight shape matches the python contract
+        let gw = c.inputs.iter().find(|s| s.name == "s2b0_gw_w").unwrap();
+        assert_eq!(gw.shape, vec![3, 3, 128 / 8, 128]);
+    }
+}

@@ -1,92 +1,135 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
-//! Rust hot path (§IV-A: "a custom binary which implements a service to
-//! respond to requests and execute inferences using the previously compiled
-//! network"). Python is never involved here.
+//! Runtime: load artifact manifests, bind them to a pluggable execution
+//! [`Backend`], and serve inferences from the Rust hot path (§IV-A). Python
+//! is never involved here.
 //!
-//! Weights are uploaded once as device-resident buffers and reused across
-//! requests (`execute_b`), mirroring the paper's device-resident tensors
-//! (§VI-C); per-request inputs are small fresh buffers.
+//! The paper's platform was explicitly "open to enable a variety of AI
+//! accelerators from different vendors"; this module is that seam. The
+//! [`Engine`] owns a manifest + backend pair and performs every
+//! spec-validation step (weight names/shapes, request arity/shapes, output
+//! arity/shapes) so backends implement only raw execution:
+//!
+//! | backend      | feature   | source of truth                      |
+//! |--------------|-----------|--------------------------------------|
+//! | `RefBackend` | (default) | pure-Rust reference interpreter      |
+//! | `PjrtBackend`| `pjrt`    | AOT HLO text executed through PJRT   |
+//!
+//! Without an `artifacts/` directory, [`Engine::auto`] falls back to the
+//! [`builtin`] manifest generated from the model shapes in Rust, so the
+//! default build serves DLRM/XLM-R/CV out of the box, fully offline.
 
 pub mod artifact;
+pub mod backend;
+pub mod builtin;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use backend::{Backend, PreparedExec, RefBackend};
 
 use crate::numerics::HostTensor;
-use anyhow::{anyhow, bail, Context, Result};
-use artifact::{ArtDType, Artifact, InputKind, Manifest};
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::util::error::{bail, Result};
+use artifact::{Artifact, InputKind, Manifest};
+use std::path::Path;
+use std::sync::Arc;
 
-/// Shared PJRT engine: one CPU client + a cache of compiled executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+/// The backend the build selects by default: PJRT when the `pjrt` feature is
+/// enabled (opt out at runtime with `FBIA_BACKEND=ref`), the reference
+/// interpreter otherwise. Unknown `FBIA_BACKEND` values are an error, not a
+/// silent fallback.
+fn default_backend() -> Result<Arc<dyn Backend>> {
+    let choice = std::env::var("FBIA_BACKEND").ok();
+    #[cfg(feature = "pjrt")]
+    {
+        match choice.as_deref() {
+            None | Some("pjrt") => return Ok(Arc::new(pjrt::PjrtBackend::new()?)),
+            Some("ref") => {}
+            Some(other) => bail!("unknown FBIA_BACKEND '{other}' (expected 'ref' or 'pjrt')"),
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    if let Some(other) = choice.as_deref() {
+        if other != "ref" {
+            bail!(
+                "FBIA_BACKEND='{other}' requested but this build only has the 'ref' \
+                 backend (rebuild with --features pjrt)"
+            );
+        }
+    }
+    Ok(Arc::new(RefBackend::new()))
 }
 
-// The underlying PJRT client is thread-safe; the xla crate just doesn't mark
-// its wrappers Send/Sync. Executions are additionally serialized per
-// prepared model by a mutex in `PreparedModel::run`.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
+/// Shared engine: one manifest + one execution backend.
+pub struct Engine {
+    manifest: Arc<Manifest>,
+    backend: Arc<dyn Backend>,
+}
 
 impl Engine {
-    /// Create from an artifacts directory (must contain manifest.json).
-    pub fn load(dir: &std::path::Path) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let manifest = Manifest::load(dir)?;
-        Ok(Engine { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    /// Create from an artifacts directory (must contain manifest.json),
+    /// using the build's default backend.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        Ok(Engine { manifest, backend: default_backend()? })
+    }
+
+    /// Hermetic engine: builtin manifest + reference interpreter. Needs no
+    /// files, no Python, no external dependencies.
+    pub fn builtin() -> Engine {
+        Engine {
+            manifest: Arc::new(builtin::builtin_manifest()),
+            backend: Arc::new(RefBackend::new()),
+        }
+    }
+
+    /// `load(dir)` when `dir/manifest.json` exists, [`Engine::builtin`]
+    /// otherwise — the entry point the CLI, examples, benches and
+    /// integration tests share. An explicit `FBIA_BACKEND` request other
+    /// than `ref` is an error when no artifacts exist, not a silent
+    /// fallback to the interpreter.
+    pub fn auto(dir: &Path) -> Result<Engine> {
+        if dir.join("manifest.json").exists() {
+            Engine::load(dir)
+        } else {
+            if let Ok(req) = std::env::var("FBIA_BACKEND") {
+                if req != "ref" {
+                    bail!(
+                        "FBIA_BACKEND='{req}' requires AOT artifacts, but {} does not \
+                         exist (run `make artifacts`)",
+                        dir.join("manifest.json").display()
+                    );
+                }
+            }
+            Ok(Engine::builtin())
+        }
+    }
+
+    /// Explicit manifest/backend pairing (tests, future backends).
+    pub fn with_backend(manifest: Manifest, backend: Arc<dyn Backend>) -> Engine {
+        Engine { manifest: Arc::new(manifest), backend }
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Compile (or fetch cached) an artifact's executable.
-    pub fn compile(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
-            return Ok(Arc::clone(exe));
-        }
+    /// Short backend identifier ("ref", "pjrt") for logs and the CLI.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Compile an artifact on the backend (cached backend-side).
+    pub fn compile(&self, name: &str) -> Result<()> {
         let art = self.manifest.get(name)?;
-        let path = art
-            .file
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {name}"))?,
-        );
-        self.compiled.lock().unwrap().insert(name.to_string(), Arc::clone(&exe));
-        Ok(exe)
+        self.backend.compile(&self.manifest, art)
     }
 
-    /// Upload a host tensor as a device buffer.
-    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        match t {
-            HostTensor::F32(d, s) => self
-                .client
-                .buffer_from_host_buffer(d, s, None)
-                .context("uploading f32 buffer"),
-            HostTensor::I32(d, s) => self
-                .client
-                .buffer_from_host_buffer(d, s, None)
-                .context("uploading i32 buffer"),
-            HostTensor::I8(d, s) => {
-                let bytes: &[u8] =
-                    unsafe { std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len()) };
-                self.client
-                    .buffer_from_host_raw_bytes(xla::ElementType::S8, bytes, s, None)
-                    .context("uploading i8 buffer")
-            }
-        }
-    }
-
-    /// Prepare an artifact for serving: compile + upload its weights as
-    /// device-resident buffers (in spec order).
-    pub fn prepare(&self, name: &str, weights: &[(String, HostTensor)]) -> Result<PreparedModel> {
-        let exe = self.compile(name)?;
+    /// Prepare an artifact for serving: validate + compile + make its
+    /// weights device-resident (in spec order). Takes the weights by value —
+    /// they become backend-resident state, so no caller needs them after.
+    pub fn prepare(
+        &self,
+        name: &str,
+        weights: Vec<(String, HostTensor)>,
+    ) -> Result<PreparedModel> {
         let art = self.manifest.get(name)?.clone();
         // weights must cover every non-Input spec, in order
         let expected: Vec<&str> = art
@@ -99,55 +142,74 @@ impl Engine {
         if expected != got {
             bail!("weight mismatch for {name}: expected {expected:?}, got {got:?}");
         }
-        let mut bufs = Vec::with_capacity(weights.len());
-        for (wname, t) in weights {
+        for (wname, t) in &weights {
             let spec = art.inputs.iter().find(|s| &s.name == wname).unwrap();
             if t.shape() != spec.shape.as_slice() {
                 bail!("weight {wname} shape {:?} != spec {:?}", t.shape(), spec.shape);
             }
-            bufs.push(self.upload(t)?);
         }
-        Ok(PreparedModel { art, exe, weight_bufs: bufs, exec_lock: Mutex::new(()) })
+        let exec = self.backend.prepare(&self.manifest, &art, weights)?;
+        Ok(PreparedModel { art, exec })
     }
 
-    /// One-shot execute with all inputs as literals (no resident weights) —
+    /// One-shot execute with all inputs host-side (no resident weights) —
     /// the "before" configuration of the §Perf device-resident ablation.
-    pub fn execute_all_literals(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let exe = self.compile(name)?;
+    pub fn execute_all_literals(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
         let art = self.manifest.get(name)?;
         if inputs.len() != art.inputs.len() {
             bail!("{name}: expected {} inputs, got {}", art.inputs.len(), inputs.len());
         }
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(to_literal).collect::<Result<_>>()?;
-        let out = exe.execute::<xla::Literal>(&lits)?;
-        tuple_outputs(out, art)
+        for (spec, t) in art.inputs.iter().zip(inputs) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!("input {} shape {:?} != spec {:?}", spec.name, t.shape(), spec.shape);
+            }
+        }
+        let out = self.backend.execute_all(&self.manifest, art, inputs)?;
+        check_outputs(art, &out)?;
+        Ok(out)
     }
+}
+
+/// Enforce the output contract (arity + shapes) on what a backend returned.
+fn check_outputs(art: &Artifact, out: &[HostTensor]) -> Result<()> {
+    if out.len() != art.outputs.len() {
+        bail!(
+            "{}: backend returned {} outputs vs {} specs",
+            art.name,
+            out.len(),
+            art.outputs.len()
+        );
+    }
+    for (i, (t, spec)) in out.iter().zip(&art.outputs).enumerate() {
+        if t.shape() != spec.shape.as_slice() {
+            bail!("{}: output {i} shape {:?} != spec {:?}", art.name, t.shape(), spec.shape);
+        }
+    }
+    Ok(())
 }
 
 /// A compiled artifact with device-resident weights, ready to serve.
 pub struct PreparedModel {
     pub art: Artifact,
-    exe: Arc<xla::PjRtLoadedExecutable>,
-    weight_bufs: Vec<xla::PjRtBuffer>,
-    exec_lock: Mutex<()>,
+    exec: Box<dyn PreparedExec>,
 }
-
-unsafe impl Send for PreparedModel {}
-unsafe impl Sync for PreparedModel {}
 
 impl PreparedModel {
     /// Execute with per-request inputs (in spec order for `kind == Input`).
     /// Weights ride along from their resident buffers.
-    pub fn run(&self, engine: &Engine, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let refs: Vec<&HostTensor> = inputs.iter().collect();
-        self.run_refs(engine, &refs)
+        self.run_refs(&refs)
     }
 
     /// Zero-copy variant of [`Self::run`]: the serving hot path passes
     /// borrowed request tensors, avoiding a host-side memcpy per tensor per
     /// request (§Perf item L3-1 in EXPERIMENTS.md).
-    pub fn run_refs(&self, engine: &Engine, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let n_inputs = self
             .art
             .inputs
@@ -157,9 +219,6 @@ impl PreparedModel {
         if inputs.len() != n_inputs {
             bail!("{}: expected {} request inputs, got {}", self.art.name, n_inputs, inputs.len());
         }
-        // upload fresh per-request buffers, then stitch weight + input
-        // buffer references together in spec order
-        let mut fresh: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
         let mut xi = 0usize;
         for spec in &self.art.inputs {
             if spec.kind == InputKind::Input {
@@ -167,80 +226,55 @@ impl PreparedModel {
                 if t.shape() != spec.shape.as_slice() {
                     bail!("input {} shape {:?} != spec {:?}", spec.name, t.shape(), spec.shape);
                 }
-                fresh.push(engine.upload(t)?);
                 xi += 1;
             }
         }
-        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.art.inputs.len());
-        let mut wi = 0usize;
-        let mut fi = 0usize;
-        for spec in &self.art.inputs {
-            match spec.kind {
-                InputKind::Input => {
-                    refs.push(&fresh[fi]);
-                    fi += 1;
-                }
-                _ => {
-                    refs.push(&self.weight_bufs[wi]);
-                    wi += 1;
-                }
-            }
-        }
-        let _guard = self.exec_lock.lock().unwrap();
-        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
-        drop(_guard);
-        tuple_outputs(out, &self.art)
+        let out = self.exec.run(inputs)?;
+        check_outputs(&self.art, &out)?;
+        Ok(out)
     }
 }
 
-fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
-    Ok(match t {
-        HostTensor::F32(d, s) => {
-            let dims: Vec<i64> = s.iter().map(|&x| x as i64).collect();
-            xla::Literal::vec1(d).reshape(&dims)?
-        }
-        HostTensor::I32(d, s) => {
-            let dims: Vec<i64> = s.iter().map(|&x| x as i64).collect();
-            xla::Literal::vec1(d).reshape(&dims)?
-        }
-        HostTensor::I8(d, s) => {
-            // no NativeType impl for i8 in the xla crate: go via raw bytes
-            let bytes: &[u8] =
-                unsafe { std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len()) };
-            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, s, bytes)?
-        }
-    })
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::weights::WeightGen;
 
-/// Unpack the 1-tuple / n-tuple result into host tensors per output spec.
-fn tuple_outputs(out: Vec<Vec<xla::PjRtBuffer>>, art: &Artifact) -> Result<Vec<HostTensor>> {
-    let first = out
-        .into_iter()
-        .next()
-        .and_then(|v| v.into_iter().next())
-        .ok_or_else(|| anyhow!("no output buffer"))?;
-    let lit = first.to_literal_sync()?;
-    // jax lowered with return_tuple=True: decompose
-    let parts = lit.to_tuple()?;
-    if parts.len() != art.outputs.len() {
-        bail!("{}: {} outputs vs {} specs", art.name, parts.len(), art.outputs.len());
+    #[test]
+    fn builtin_engine_prepares_and_validates() {
+        let e = Engine::builtin();
+        assert_eq!(e.backend_name(), "ref");
+        let art = e.manifest().get("dlrm_dense_b16_fp32").unwrap().clone();
+        let weights = WeightGen::new(1).weights_for(&art);
+        let prepared = e.prepare(&art.name, weights).unwrap();
+        // wrong request arity
+        assert!(prepared.run(&[]).is_err());
+        // wrong shape
+        let bad = HostTensor::f32(vec![0.0; 4], &[2, 2]);
+        let sparse = HostTensor::f32(vec![0.0; 16 * 8 * 64], &[16, 8, 64]);
+        assert!(prepared.run_refs(&[&bad, &sparse]).is_err());
     }
-    let mut res = Vec::with_capacity(parts.len());
-    for (p, spec) in parts.into_iter().zip(&art.outputs) {
-        let t = match spec.dtype {
-            ArtDType::F32 => HostTensor::f32(p.to_vec::<f32>()?, &spec.shape),
-            ArtDType::I32 => HostTensor::i32(p.to_vec::<i32>()?, &spec.shape),
-            ArtDType::F16 => {
-                // upconvert for host-side use
-                let c = p.convert(xla::PrimitiveType::F32)?;
-                HostTensor::f32(c.to_vec::<f32>()?, &spec.shape)
-            }
-            ArtDType::I8 => {
-                let c = p.convert(xla::PrimitiveType::S32)?;
-                HostTensor::i32(c.to_vec::<i32>()?, &spec.shape)
-            }
-        };
-        res.push(t);
+
+    #[test]
+    fn prepare_rejects_wrong_weights() {
+        let e = Engine::builtin();
+        let art = e.manifest().get("dlrm_dense_b16_fp32").unwrap().clone();
+        // missing weights
+        assert!(e.prepare(&art.name, vec![]).is_err());
+        // right names, wrong shape on the first
+        let mut weights = WeightGen::new(1).weights_for(&art);
+        weights[0].1 = HostTensor::f32(vec![0.0; 2], &[2]);
+        assert!(e.prepare(&art.name, weights).is_err());
     }
-    Ok(res)
+
+    #[test]
+    fn unknown_artifact_and_missing_dir() {
+        let e = Engine::builtin();
+        assert!(e.compile("no_such_artifact").is_err());
+        assert!(Engine::load(Path::new("/nonexistent/artifacts")).is_err());
+        // auto falls back to builtin for a missing dir
+        let auto = Engine::auto(Path::new("/nonexistent/artifacts")).unwrap();
+        assert_eq!(auto.backend_name(), "ref");
+        assert!(auto.manifest().get("cv_trunk_b1").is_ok());
+    }
 }

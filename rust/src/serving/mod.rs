@@ -1,18 +1,21 @@
 //! Serving stack (§IV-A, §IV-C runtime): the request-path binary logic.
 //!
-//! Real numerics flow through PJRT ([`crate::runtime`]); the servers here
-//! implement the paper's serving structure — partitioned + pipelined DLRM
-//! (Fig. 6), bucket-switched XLM-R (§VI-A), batched CV — over the AOT
-//! artifacts, with multi-threaded request handling and latency/QPS metrics.
+//! Real numerics flow through the engine's execution backend
+//! ([`crate::runtime`] — the reference interpreter by default, PJRT with
+//! `--features pjrt`); the servers here implement the paper's serving
+//! structure — partitioned + pipelined DLRM (Fig. 6), bucket-switched XLM-R
+//! (§VI-A), batched CV — over the artifact manifest, with multi-threaded
+//! request handling and latency/QPS metrics.
 
 pub mod batcher;
 
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
+use crate::runtime::artifact::table_index;
 use crate::runtime::{Engine, PreparedModel};
+use crate::util::error::{err, Context, Result};
 use crate::util::stats::Histogram;
 use crate::workloads::RecsysRequest;
-use anyhow::{anyhow, Context, Result};
 use batcher::{Batcher, NlpBatch};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -47,7 +50,6 @@ impl ServerMetrics {
 
 /// Sharded, pipelined recommendation server.
 pub struct RecsysServer {
-    engine: Arc<Engine>,
     /// (global table ids, prepared shard) per SLS card.
     shards: Vec<(Vec<usize>, Arc<PreparedModel>)>,
     dense: Arc<PreparedModel>,
@@ -73,23 +75,34 @@ impl RecsysServer {
                 .inputs
                 .iter()
                 .filter(|s| s.name.starts_with("idx"))
-                .map(|s| s.name[3..].parse().unwrap())
-                .collect();
+                .map(|s| table_index(&s.name, "idx"))
+                .collect::<Result<_>>()
+                .with_context(|| format!("artifact {}", art.name))?;
+            if tables.is_empty() {
+                return Err(err!("sls artifact {} declares no idx inputs", art.name));
+            }
+            if let Some(&t) = tables.iter().find(|&&t| t >= num_tables) {
+                return Err(err!(
+                    "sls artifact {} references table {t} but configs.dlrm.num_tables is \
+                     {num_tables}",
+                    art.name
+                ));
+            }
             let weights = gen.weights_for(art);
-            let prepared = engine.prepare(&art.name, &weights)?;
+            let prepared = engine.prepare(&art.name, weights)?;
             shards.push((tables, Arc::new(prepared)));
         }
         if shards.is_empty() {
-            return Err(anyhow!("no dlrm sls shards for batch {batch} (run make artifacts)"));
+            return Err(err!("no dlrm sls shards for batch {batch} in the manifest"));
         }
         shards.sort_by_key(|(t, _)| t[0]);
 
         let dense_name = format!("dlrm_dense_b{batch}_{precision}");
         let art = engine.manifest().get(&dense_name)?.clone();
         let weights = gen.weights_for(&art);
-        let dense = Arc::new(engine.prepare(&dense_name, &weights)?);
+        let dense = Arc::new(engine.prepare(&dense_name, weights)?);
 
-        Ok(RecsysServer { engine, shards, dense, batch, num_tables, embed_dim })
+        Ok(RecsysServer { shards, dense, batch, num_tables, embed_dim })
     }
 
     /// Run the SLS partition for one request: returns [batch, T, D] pooled.
@@ -105,10 +118,10 @@ impl RecsysServer {
                 inputs.push(&req.indices[t]);
                 inputs.push(&req.lengths[t]);
             }
-            let out = shard.run_refs(&self.engine, &inputs)?;
+            let out = shard.run_refs(&inputs)?;
             let pooled = out[0]
                 .as_f32()
-                .ok_or_else(|| anyhow!("sls output not f32"))?;
+                .ok_or_else(|| err!("sls output not f32"))?;
             // out: [b, n_shard, d] -> scatter into [b, T, d]
             for bi in 0..b {
                 for (si, &t) in tables.iter().enumerate() {
@@ -125,7 +138,7 @@ impl RecsysServer {
     pub fn run_dense(&self, dense: &HostTensor, sparse: &HostTensor) -> Result<HostTensor> {
         let mut out = self
             .dense
-            .run_refs(&self.engine, &[dense, sparse])
+            .run_refs(&[dense, sparse])
             .context("dense partition")?;
         Ok(out.swap_remove(0))
     }
@@ -146,7 +159,7 @@ impl RecsysServer {
             for (i, req) in reqs.into_iter().enumerate() {
                 let t0 = Instant::now();
                 let sparse = me.run_sls(&req)?;
-                tx.send((i, t0, req.dense, sparse)).map_err(|_| anyhow!("dense stage gone"))?;
+                tx.send((i, t0, req.dense, sparse)).map_err(|_| err!("dense stage gone"))?;
             }
             Ok(())
         });
@@ -159,7 +172,7 @@ impl RecsysServer {
             latency.add(t0.elapsed().as_secs_f64());
             completed += 1;
         }
-        producer.join().map_err(|_| anyhow!("producer panicked"))??;
+        producer.join().map_err(|_| err!("producer panicked"))??;
         let wall_s = wall0.elapsed().as_secs_f64();
         Ok(ServerMetrics { latency, completed, items: completed * self.batch, wall_s })
     }
@@ -172,7 +185,6 @@ impl RecsysServer {
 /// NLP server holding one prepared network per (seq bucket, batch) pair and
 /// a dynamic batcher.
 pub struct NlpServer {
-    engine: Arc<Engine>,
     /// (seq, batch) -> prepared model
     nets: Vec<(usize, usize, Arc<PreparedModel>)>,
     pub buckets: Vec<usize>,
@@ -185,20 +197,20 @@ impl NlpServer {
         let mut nets = Vec::new();
         let mut buckets = Vec::new();
         for art in engine.manifest().select("xlmr", "full") {
-            let seq = art.seq.ok_or_else(|| anyhow!("xlmr artifact missing seq"))?;
+            let seq = art.seq.ok_or_else(|| err!("xlmr artifact missing seq"))?;
             let weights = gen.weights_for(art);
-            let prepared = engine.prepare(&art.name, &weights)?;
+            let prepared = engine.prepare(&art.name, weights)?;
             nets.push((seq, art.batch, Arc::new(prepared)));
             if !buckets.contains(&seq) {
                 buckets.push(seq);
             }
         }
         if nets.is_empty() {
-            return Err(anyhow!("no xlmr artifacts (run make artifacts)"));
+            return Err(err!("no xlmr artifacts in the manifest"));
         }
         buckets.sort_unstable();
         let d_model = engine.manifest().config_usize("xlmr", "d_model")?;
-        Ok(NlpServer { engine, nets, buckets, d_model })
+        Ok(NlpServer { nets, buckets, d_model })
     }
 
     /// Find the prepared net for a bucket with the smallest batch >= n.
@@ -208,7 +220,7 @@ impl NlpServer {
             .filter(|(s, b, _)| *s == bucket && *b >= n)
             .min_by_key(|(_, b, _)| *b)
             .map(|(_, b, m)| (*b, m))
-            .ok_or_else(|| anyhow!("no xlmr net for bucket {bucket} x batch {n}"))
+            .ok_or_else(|| err!("no xlmr net for bucket {bucket} x batch {n}"))
     }
 
     /// Run one formed batch; returns pooled embeddings [n, d_model].
@@ -216,14 +228,11 @@ impl NlpServer {
         let n = batch.requests.len();
         let (rows, net) = self.net_for(batch.bucket, n)?;
         let (ids, lens) = batcher::pad_batch(batch, rows);
-        let out = net.run(
-            &self.engine,
-            &[
-                HostTensor::i32(ids, &[rows, batch.bucket]),
-                HostTensor::i32(lens, &[rows]),
-            ],
-        )?;
-        let pooled = out[0].as_f32().ok_or_else(|| anyhow!("pooled not f32"))?;
+        let out = net.run(&[
+            HostTensor::i32(ids, &[rows, batch.bucket]),
+            HostTensor::i32(lens, &[rows]),
+        ])?;
+        let pooled = out[0].as_f32().ok_or_else(|| err!("pooled not f32"))?;
         Ok((0..n).map(|i| pooled[i * self.d_model..(i + 1) * self.d_model].to_vec()).collect())
     }
 
@@ -278,7 +287,6 @@ impl NlpServer {
 
 /// CV trunk server with batch-variant selection.
 pub struct CvServer {
-    engine: Arc<Engine>,
     nets: Vec<(usize, Arc<PreparedModel>)>,
     pub image: usize,
     pub classes: usize,
@@ -290,15 +298,14 @@ impl CvServer {
         let mut nets = Vec::new();
         for art in engine.manifest().select("cv", "full") {
             let weights = gen.weights_for(art);
-            let prepared = engine.prepare(&art.name, &weights)?;
+            let prepared = engine.prepare(&art.name, weights)?;
             nets.push((art.batch, Arc::new(prepared)));
         }
         if nets.is_empty() {
-            return Err(anyhow!("no cv artifacts (run make artifacts)"));
+            return Err(err!("no cv artifacts in the manifest"));
         }
         nets.sort_by_key(|(b, _)| *b);
         Ok(CvServer {
-            engine: Arc::clone(&engine),
             nets,
             image: engine.manifest().config_usize("cv", "image")?,
             classes: engine.manifest().config_usize("cv", "classes")?,
@@ -318,8 +325,8 @@ impl CvServer {
             .iter()
             .find(|(nb, _)| *nb == b)
             .map(|(_, m)| m)
-            .ok_or_else(|| anyhow!("no cv net compiled for batch {b}"))?;
-        let out = net.run(&self.engine, &[image.clone()])?;
+            .ok_or_else(|| err!("no cv net compiled for batch {b}"))?;
+        let out = net.run(&[image.clone()])?;
         Ok((out[0].clone(), out[1].clone()))
     }
 

@@ -11,7 +11,7 @@ use crate::compiler::{compile, perf_model, CompiledModel};
 use crate::config::Config;
 use crate::graph::models::{DlrmSpec, ModelId};
 use crate::graph::TensorKind;
-use anyhow::Result;
+use crate::util::error::Result;
 use exec::{run_pipeline, serial_latency, PipelineResult, Stage};
 use std::collections::BTreeMap;
 use transfer::{TransferModel, TransferStats};

@@ -1,10 +1,11 @@
 //! Substrate utilities built in-repo because the build environment is fully
-//! offline (DESIGN.md §2): JSON, RNG + distributions, statistics, a CLI
-//! argument parser, a thread pool, a property-testing mini-framework, a
+//! offline (DESIGN.md §2): errors, JSON, RNG + distributions, statistics, a
+//! CLI argument parser, a thread pool, a property-testing mini-framework, a
 //! bench harness, and a paper-style table printer.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,7 +1,18 @@
-//! Integration: AOT artifacts → PJRT runtime → outputs vs the independent
-//! Rust reference implementations (§V-C numerics validation, end to end).
+//! Integration: artifact manifest → execution backend → outputs vs the
+//! independent Rust reference implementations (§V-C numerics validation,
+//! end to end).
 //!
-//! Skips gracefully when `artifacts/` hasn't been built.
+//! Always runs: `Engine::auto` serves the builtin manifest through the
+//! reference backend when `artifacts/` hasn't been built, and the AOT
+//! artifacts (through the build's default backend) when it has.
+//!
+//! On `RefBackend` the backend and the reference share the numeric kernels,
+//! so the comparison checks the *contract plumbing* (spec order,
+//! uploaded-weights-vs-regenerated-weights agreement, output shapes) rather
+//! than being a cross-implementation check; the value-level sanity
+//! assertions below are the non-tautological part. With `--features pjrt`
+//! and built artifacts the same tests become the full §V-C
+//! compiled-kernels-vs-reference validation.
 
 use fbia::numerics::validate;
 use fbia::numerics::weights::WeightGen;
@@ -10,13 +21,11 @@ use fbia::serving::{test_inputs_for, WEIGHT_SEED};
 use std::path::Path;
 use std::sync::Arc;
 
-fn engine() -> Option<Arc<Engine>> {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Engine::load(dir).expect("engine")))
+fn engine() -> Arc<Engine> {
+    // cargo runs test binaries with cwd = rust/; the AOT driver writes
+    // artifacts/ at the repository root, one level up
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    Arc::new(Engine::auto(&dir).expect("engine"))
 }
 
 fn validate_artifact(engine: &Arc<Engine>, name: &str) -> validate::Validation {
@@ -29,27 +38,28 @@ fn validate_artifact(engine: &Arc<Engine>, name: &str) -> validate::Validation {
 
     let mut gen2 = WeightGen::new(WEIGHT_SEED);
     let weights = gen2.weights_for(&art);
-    let prepared = engine.prepare(name, &weights).expect("prepare");
-    let measured = prepared.run(engine, &inputs).expect("run");
+    let prepared = engine.prepare(name, weights).expect("prepare");
+    let measured = prepared.run(&inputs).expect("run");
 
     assert_eq!(reference.len(), measured.len(), "{name}: output arity");
-    validate::compare(
-        name,
-        reference[0].as_f32().expect("ref f32"),
-        measured[0].as_f32().expect("out f32"),
-    )
+    let out = measured[0].as_f32().expect("out f32");
+    // value-level sanity independent of the reference comparison: finite
+    // everywhere, and not the all-zeros tensor a broken gather/FC yields
+    assert!(out.iter().all(|v| v.is_finite()), "{name}: non-finite output");
+    assert!(out.iter().any(|v| *v != 0.0), "{name}: all-zero output");
+    validate::compare(name, reference[0].as_f32().expect("ref f32"), out)
 }
 
 #[test]
 fn dlrm_sls_shard_matches_reference() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let v = validate_artifact(&e, "dlrm_sls_shard0_b16");
     assert!(v.passed, "{v:?}");
 }
 
 #[test]
 fn dlrm_dense_fp32_matches_reference() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let v = validate_artifact(&e, "dlrm_dense_b16_fp32");
     assert!(v.passed, "{v:?}");
 }
@@ -58,28 +68,28 @@ fn dlrm_dense_fp32_matches_reference() {
 fn dlrm_dense_int8_matches_reference() {
     // the quantized path: pallas quant_fc kernel inside the artifact vs the
     // integer reference — the core §V-C scenario
-    let Some(e) = engine() else { return };
+    let e = engine();
     let v = validate_artifact(&e, "dlrm_dense_b16_int8");
     assert!(v.passed, "{v:?}");
 }
 
 #[test]
 fn xlmr_bucket_matches_reference() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let v = validate_artifact(&e, "xlmr_s32_b1");
     assert!(v.passed, "{v:?}");
 }
 
 #[test]
 fn cv_trunk_matches_reference() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let v = validate_artifact(&e, "cv_trunk_b1");
     assert!(v.passed, "{v:?}");
 }
 
 #[test]
 fn weights_are_deterministic_across_engines() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let art = e.manifest().get("dlrm_dense_b16_fp32").unwrap().clone();
     let a = WeightGen::new(WEIGHT_SEED).weights_for(&art);
     let b = WeightGen::new(WEIGHT_SEED).weights_for(&art);
@@ -92,11 +102,11 @@ fn weights_are_deterministic_across_engines() {
 
 #[test]
 fn prepared_model_rejects_bad_shapes() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let art = e.manifest().get("cv_trunk_b1").unwrap().clone();
     let weights = WeightGen::new(WEIGHT_SEED).weights_for(&art);
-    let prepared = e.prepare("cv_trunk_b1", &weights).unwrap();
+    let prepared = e.prepare("cv_trunk_b1", weights).unwrap();
     // wrong image shape must be rejected before reaching PJRT
     let bad = fbia::numerics::HostTensor::f32(vec![0.0; 12], &[2, 1, 2, 3]);
-    assert!(prepared.run(&e, &[bad]).is_err());
+    assert!(prepared.run(&[bad]).is_err());
 }

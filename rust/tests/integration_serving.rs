@@ -1,6 +1,8 @@
-//! Integration: the serving stack over real artifacts — partitioned DLRM
-//! equals the monolithic reference, NLP bucket switching works, CV batch
-//! variants agree with each other.
+//! Integration: the serving stack over real artifact manifests — partitioned
+//! DLRM equals the monolithic reference, NLP bucket switching works, CV
+//! batch variants agree with each other. Always runs: `Engine::auto` falls
+//! back to the builtin manifest + reference backend when `artifacts/` has
+//! not been built.
 
 use fbia::numerics::ops_ref;
 use fbia::numerics::weights::WeightGen;
@@ -11,18 +13,16 @@ use fbia::workloads::{CvGen, NlpGen, RecsysGen};
 use std::path::Path;
 use std::sync::Arc;
 
-fn engine() -> Option<Arc<Engine>> {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Engine::load(dir).expect("engine")))
+fn engine() -> Arc<Engine> {
+    // cargo runs test binaries with cwd = rust/; the AOT driver writes
+    // artifacts/ at the repository root, one level up
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    Arc::new(Engine::auto(&dir).expect("engine"))
 }
 
 #[test]
 fn recsys_partitioned_matches_reference_pipeline() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let m = e.manifest().clone();
     let batch = 16;
     let server = Arc::new(RecsysServer::new(e.clone(), batch, "fp32").unwrap());
@@ -71,7 +71,7 @@ fn recsys_partitioned_matches_reference_pipeline() {
 #[test]
 fn recsys_int8_close_to_fp32() {
     // the paper's accuracy gate: quantized scores track fp32 scores
-    let Some(e) = engine() else { return };
+    let e = engine();
     let m = e.manifest().clone();
     let batch = 16;
     let fp = Arc::new(RecsysServer::new(e.clone(), batch, "fp32").unwrap());
@@ -93,7 +93,7 @@ fn recsys_int8_close_to_fp32() {
 
 #[test]
 fn nlp_bucket_switching_end_to_end() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let server = NlpServer::new(e.clone()).unwrap();
     assert_eq!(server.buckets, vec![32, 64, 128]);
     let vocab = e.manifest().config_usize("xlmr", "vocab").unwrap();
@@ -109,7 +109,7 @@ fn nlp_bucket_switching_end_to_end() {
 fn nlp_same_sentence_same_embedding_across_buckets() {
     // bucket choice must not change the pooled embedding materially
     // (cosine >= 0.98, the paper's embedding-quality bar)
-    let Some(e) = engine() else { return };
+    let e = engine();
     let server = NlpServer::new(e.clone()).unwrap();
     let tokens: Vec<i32> = (0..20).map(|i| (i * 37 % 800) as i32).collect();
     let mk = |bucket: usize| fbia::serving::batcher::NlpBatch {
@@ -124,7 +124,7 @@ fn nlp_same_sentence_same_embedding_across_buckets() {
 
 #[test]
 fn cv_batch1_and_batch4_agree() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let server = CvServer::new(e.clone()).unwrap();
     let mut gen = CvGen::new(5, server.image);
     let req4 = gen.next(4);
@@ -164,7 +164,7 @@ fn quantization_ne_degradation_within_budget() {
     // the paper's §V-A offline gate: int8 vs fp32 NE degradation should be
     // small (their production bar is 0.02-0.05%; on synthetic labels we
     // require < 1%, far tighter than the op-level error would suggest)
-    let Some(e) = engine() else { return };
+    let e = engine();
     let m = e.manifest().clone();
     let batch = 32;
     let fp = Arc::new(RecsysServer::new(e.clone(), batch, "fp32").unwrap());
@@ -199,7 +199,7 @@ fn quantization_ne_degradation_within_budget() {
 
 #[test]
 fn failure_injection_bad_requests_rejected_cleanly() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let server = Arc::new(RecsysServer::new(e.clone(), 16, "fp32").unwrap());
     // wrong batch: dense has batch 8, server compiled for 16
     let bad = fbia::workloads::RecsysRequest {
@@ -227,7 +227,7 @@ fn failure_injection_missing_artifacts_dir() {
 
 #[test]
 fn failure_injection_unknown_artifact_name() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     assert!(e.compile("no_such_artifact").is_err());
     assert!(e.manifest().get("no_such_artifact").is_err());
 }

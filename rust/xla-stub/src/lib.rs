@@ -1,0 +1,161 @@
+//! API-compatible stub of the `xla` crate (xla-rs 0.1.6) for offline builds.
+//!
+//! The fbia PJRT backend compiles against this surface; every operation
+//! fails at runtime with [`Error::Unimplemented`]. Swap the path dependency
+//! in `rust/Cargo.toml` for the registry crate to execute real HLO.
+
+use std::fmt;
+
+const STUB_MSG: &str =
+    "xla stub: built offline without the real XLA/PJRT runtime (see rust/README.md)";
+
+/// Error type matching the shape the PJRT backend expects.
+#[derive(Debug)]
+pub enum Error {
+    Unimplemented,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{STUB_MSG}")
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types used when uploading raw byte buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    S8,
+    S32,
+    F16,
+    F32,
+}
+
+/// Primitive types used for literal conversion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    S8,
+    S32,
+    F16,
+    F32,
+}
+
+/// PJRT client handle (stub: creation always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unimplemented)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unimplemented)
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unimplemented)
+    }
+
+    pub fn buffer_from_host_raw_bytes(
+        &self,
+        _ty: ElementType,
+        _bytes: &[u8],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unimplemented)
+    }
+}
+
+/// Parsed HLO module proto (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unimplemented)
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable (stub: execution always fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented)
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented)
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unimplemented)
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _bytes: &[u8],
+    ) -> Result<Literal> {
+        Err(Error::Unimplemented)
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unimplemented)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unimplemented)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unimplemented)
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        Err(Error::Unimplemented)
+    }
+}
