@@ -2,7 +2,9 @@
 //! buckets (§VI-A) and length-aware dynamic batching (§VII), over real PJRT
 //! numerics. Compares length-aware vs naive batching padding waste.
 //!
-//!     cargo run --release --example serve_nlp [-- --requests 64]
+//!     cargo run --release --example serve_nlp [-- --requests 64 --threads 4]
+//!
+//! `--threads N` (default 1) runs N formed batches in flight.
 //!
 //! Uses the builtin manifest + reference backend when `artifacts/` has not
 //! been built.
@@ -19,13 +21,14 @@ fn main() -> Result<()> {
     let args = Args::from_env(false);
     let n = args.get_usize("requests", 64);
     let max_batch = args.get_usize("max-batch", 4);
+    let threads = args.get_usize("threads", 1).max(1);
 
     // resolve artifacts/ against the repo root (one level above the rust/
     // package) so this works from any cwd
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     let engine = Arc::new(Engine::auto(&dir)?);
     println!("backend: {}", engine.backend_name());
-    let server = NlpServer::new(engine.clone())?;
+    let server = Arc::new(NlpServer::new(engine.clone())?);
     println!(
         "XLM-R mini: {} layers, d_model {}, buckets {:?}",
         engine.manifest().config_usize("xlmr", "layers")?,
@@ -41,7 +44,7 @@ fn main() -> Result<()> {
 
     let mut t = Table::new(&["batching", "sentences", "p50", "p95", "QPS", "pad waste"]);
     for (label, aware) in [("length-aware", true), ("naive", false)] {
-        let (metrics, waste) = server.serve(mk_reqs(), max_batch, aware)?;
+        let (metrics, waste) = server.serve(mk_reqs(), max_batch, aware, threads)?;
         t.row(&[
             label.to_string(),
             metrics.items.to_string(),

@@ -3,7 +3,10 @@
 //! parallel) feeding a dense partition (int8), pipelined across requests —
 //! and report latency/throughput.
 //!
-//!     cargo run --release --example serve_recsys [-- --requests 200]
+//!     cargo run --release --example serve_recsys [-- --requests 200 --threads 4]
+//!
+//! `--threads N` (default 1) serves with N requests in flight instead of
+//! the two-stage pipeline.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E. Uses the builtin manifest +
 //! reference backend when `artifacts/` has not been built.
@@ -20,6 +23,7 @@ fn main() -> Result<()> {
     let args = Args::from_env(false);
     let n = args.get_usize("requests", 100);
     let batch = args.get_usize("batch", 32);
+    let threads = args.get_usize("threads", 1).max(1);
 
     // resolve artifacts/ against the repo root (one level above the rust/
     // package) so this works from any cwd
@@ -36,24 +40,22 @@ fn main() -> Result<()> {
         m.config_usize("dlrm", "params")? / 1_000_000,
     );
 
-    let mut gen = RecsysGen::new(
-        1,
-        batch,
-        num_tables,
-        m.config_usize("dlrm", "rows_per_table")?,
-        m.config_usize("dlrm", "dense_in")?,
-        m.config_usize("dlrm", "max_lookups")?,
-    );
+    let mut gen = RecsysGen::from_manifest(1, batch, &m)?;
     let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
 
-    let mut t = Table::new(&["precision", "requests", "p50", "p95", "p99", "QPS", "items/s"]);
+    let mut t = Table::new(&["precision", "mode", "requests", "p50", "p95", "p99", "QPS", "items/s"]);
     for precision in ["fp32", "int8"] {
         let server = Arc::new(RecsysServer::new(engine.clone(), batch, precision)?);
         // warmup
         server.infer(&reqs[0])?;
-        let metrics = server.serve(reqs.clone())?;
+        let (mode, metrics) = if threads > 1 {
+            (format!("{threads} workers"), server.serve_workers(reqs.clone(), threads)?)
+        } else {
+            ("pipelined".to_string(), server.serve(reqs.clone())?)
+        };
         t.row(&[
             precision.to_string(),
+            mode,
             metrics.completed.to_string(),
             ms(metrics.latency.p50()),
             ms(metrics.latency.p95()),

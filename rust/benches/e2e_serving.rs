@@ -6,16 +6,25 @@
 //! batcher — and prints throughput/latency per model family. This is the
 //! harness the §Perf optimization loop measures against.
 //!
-//!     cargo bench --bench e2e_serving
+//!     cargo bench --bench e2e_serving [-- --threads 4]
+//!
+//! `--threads` sets the multi-thread point (request workers, and the DLRM
+//! intra-request SLS shard fan-out) reported next to the sequential rows.
 
 use fbia::runtime::Engine;
 use fbia::serving::{CvServer, NlpServer, RecsysServer};
 use fbia::util::bench::{bench_with, report, section};
+use fbia::util::cli::Args;
 use fbia::util::table::{ms, pct, Table};
 use fbia::workloads::{CvGen, NlpGen, RecsysGen};
 use std::sync::Arc;
 
 fn main() {
+    let args = Args::from_env(false);
+    let threads = args.get_usize("threads", 4).max(1);
+    // the multi-thread point next to each sequential row (no duplicate
+    // rows when --threads 1)
+    let thread_points: Vec<usize> = if threads > 1 { vec![1, threads] } else { vec![1] };
     // cargo runs bench binaries with cwd = rust/; artifacts/ lives at the
     // repository root, one level up
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
@@ -26,37 +35,47 @@ fn main() {
     section("E2E: DLRM partitioned serving (real numerics)");
     {
         let batch = 32;
-        let mut gen = RecsysGen::new(
-            1,
-            batch,
-            m.config_usize("dlrm", "num_tables").unwrap(),
-            m.config_usize("dlrm", "rows_per_table").unwrap(),
-            m.config_usize("dlrm", "dense_in").unwrap(),
-            m.config_usize("dlrm", "max_lookups").unwrap(),
-        );
+        let mut gen = RecsysGen::from_manifest(1, batch, &m).unwrap();
         let reqs: Vec<_> = (0..24).map(|_| gen.next()).collect();
-        let mut t = Table::new(&["precision", "p50", "p99", "QPS", "items/s"]);
+        let mut t = Table::new(&["precision", "mode", "p50", "p99", "QPS", "items/s"]);
         for precision in ["fp32", "int8"] {
             let server = Arc::new(RecsysServer::new(engine.clone(), batch, precision).unwrap());
             server.infer(&reqs[0]).unwrap(); // warmup
-            let metrics = server.serve(reqs.clone()).unwrap();
-            t.row(&[
-                precision.to_string(),
-                ms(metrics.latency.p50()),
-                ms(metrics.latency.p99()),
-                format!("{:.1}", metrics.qps()),
-                format!("{:.0}", metrics.items_per_s()),
-            ]);
+            let mut runs = vec![("pipelined".to_string(), server.serve(reqs.clone()).unwrap())];
+            if threads > 1 {
+                runs.push((
+                    format!("workers={threads}"),
+                    server.serve_workers(reqs.clone(), threads).unwrap(),
+                ));
+            }
+            for (mode, metrics) in runs {
+                t.row(&[
+                    precision.to_string(),
+                    mode,
+                    ms(metrics.latency.p50()),
+                    ms(metrics.latency.p99()),
+                    format!("{:.1}", metrics.qps()),
+                    format!("{:.0}", metrics.items_per_s()),
+                ]);
+            }
         }
         t.print();
 
-        // micro: single stages
+        // micro: single stages, sequential vs sharded-parallel SLS
         let server = Arc::new(RecsysServer::new(engine.clone(), batch, "fp32").unwrap());
         let req = reqs[0].clone();
         let sparse = server.run_sls(&req).unwrap();
-        report(&bench_with("sls partition (4 shards)", 2, 0.4, &mut || {
+        report(&bench_with("sls partition (4 shards, sequential)", 2, 0.4, &mut || {
             server.run_sls(&req).unwrap();
         }));
+        if threads > 1 {
+            let sharded = Arc::new(
+                RecsysServer::with_threads(engine.clone(), batch, "fp32", threads).unwrap(),
+            );
+            report(&bench_with("sls partition (4 shards, parallel)", 2, 0.4, &mut || {
+                sharded.run_sls(&req).unwrap();
+            }));
+        }
         report(&bench_with("dense partition (fp32)", 2, 0.4, &mut || {
             server.run_dense(&req.dense, &sparse).unwrap();
         }));
@@ -64,45 +83,51 @@ fn main() {
 
     section("E2E: XLM-R bucket-switched serving (real numerics)");
     {
-        let server = NlpServer::new(engine.clone()).unwrap();
+        let server = Arc::new(NlpServer::new(engine.clone()).unwrap());
         let vocab = m.config_usize("xlmr", "vocab").unwrap();
         let mk = || {
             let mut gen = NlpGen::new(1, vocab, 128, 100.0);
             (0..32).map(|_| gen.next()).collect::<Vec<_>>()
         };
         // warmup every bucket
-        let _ = server.serve(mk(), 4, true).unwrap();
-        let mut t = Table::new(&["batching", "sentences/s", "p50", "pad waste"]);
+        let _ = server.serve(mk(), 4, true, 1).unwrap();
+        let mut t = Table::new(&["batching", "workers", "sentences/s", "p50", "pad waste"]);
         for (label, aware) in [("length-aware", true), ("naive", false)] {
-            let (metrics, waste) = server.serve(mk(), 4, aware).unwrap();
-            t.row(&[
-                label.to_string(),
-                format!("{:.1}", metrics.items_per_s()),
-                ms(metrics.latency.p50()),
-                pct(waste),
-            ]);
+            for &w in &thread_points {
+                let (metrics, waste) = server.serve(mk(), 4, aware, w).unwrap();
+                t.row(&[
+                    label.to_string(),
+                    w.to_string(),
+                    format!("{:.1}", metrics.items_per_s()),
+                    ms(metrics.latency.p50()),
+                    pct(waste),
+                ]);
+            }
         }
         t.print();
     }
 
     section("E2E: CV trunk batched serving (real numerics)");
     {
-        let server = CvServer::new(engine.clone()).unwrap();
+        let server = Arc::new(CvServer::new(engine.clone()).unwrap());
         let mut gen = CvGen::new(1, server.image);
-        let mut t = Table::new(&["batch", "p50", "images/s", "speedup vs b1"]);
+        let mut t = Table::new(&["batch", "workers", "p50", "images/s", "speedup vs b1"]);
         let mut base = 0.0f64;
         for b in server.batch_sizes() {
-            let _ = server.serve(2, b, &mut gen).unwrap(); // warmup
-            let metrics = server.serve(10, b, &mut gen).unwrap();
-            if base == 0.0 {
-                base = metrics.items_per_s();
+            let _ = server.serve(2, b, &mut gen, 1).unwrap(); // warmup
+            for &w in &thread_points {
+                let metrics = server.serve(10, b, &mut gen, w).unwrap();
+                if base == 0.0 {
+                    base = metrics.items_per_s();
+                }
+                t.row(&[
+                    b.to_string(),
+                    w.to_string(),
+                    ms(metrics.latency.p50()),
+                    format!("{:.1}", metrics.items_per_s()),
+                    format!("{:.2}x", metrics.items_per_s() / base),
+                ]);
             }
-            t.row(&[
-                b.to_string(),
-                ms(metrics.latency.p50()),
-                format!("{:.1}", metrics.items_per_s()),
-                format!("{:.2}x", metrics.items_per_s() / base),
-            ]);
         }
         t.print();
         println!("(paper §VI-B: batch 1->4 gives 1.6-1.8x on the CV concept trunk)");

@@ -1,19 +1,47 @@
 //! Bench: regenerate **Figure 7** — latency and relative QPS of the complex
-//! models on the accelerator node, against their latency bands.
+//! models on the accelerator node, against their latency bands — plus the
+//! real (RefBackend) DLRM serving path at 1 vs N threads, so the perf
+//! trajectory records the intra-host threading speedup.
 //!
 //!     cargo bench --bench fig7_latency_qps
-//!     cargo bench --bench fig7_latency_qps -- --json BENCH_smoke.json
+//!     cargo bench --bench fig7_latency_qps -- --json BENCH_smoke.json \
+//!         [--threads 4] [--serve-requests 24]
 //!
 //! `--json <path>` additionally writes a machine-readable summary (the CI
-//! smoke artifact).
+//! smoke artifact), including the `dlrm_serving` thread-scaling points.
 
 use fbia::config::Config;
 use fbia::graph::models::ModelId;
+use fbia::runtime::Engine;
+use fbia::serving::RecsysServer;
 use fbia::sim::simulate_model;
 use fbia::util::bench::section;
 use fbia::util::cli::Args;
 use fbia::util::json::Json;
 use fbia::util::table::{ms, pct, Table};
+use fbia::workloads::RecsysGen;
+use std::sync::Arc;
+
+/// Serve the same request set at each thread count on the real execution
+/// backend; returns (threads, qps, p50_s) points, 1-thread first.
+fn dlrm_thread_scaling(threads: usize, requests: usize) -> Vec<(usize, f64, f64)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let engine = Arc::new(Engine::auto(&dir).expect("engine"));
+    let batch = 32;
+    let mut gen = RecsysGen::from_manifest(1, batch, engine.manifest()).expect("gen");
+    let server = Arc::new(RecsysServer::new(engine, batch, "int8").expect("server"));
+    let reqs: Vec<_> = (0..requests).map(|_| gen.next()).collect();
+    server.infer(&reqs[0]).expect("warmup");
+    let mut points = Vec::new();
+    for t in [1, threads] {
+        let metrics = server.serve_workers(reqs.clone(), t).expect("serve");
+        points.push((t, metrics.qps(), metrics.latency.p50()));
+        if threads <= 1 {
+            break;
+        }
+    }
+    points
+}
 
 fn main() {
     let args = Args::from_env(false);
@@ -64,10 +92,53 @@ fn main() {
         if all_meet { "holds" } else { "VIOLATED" }
     );
 
+    // real serving path: same requests at 1 thread vs N threads (RefBackend)
+    let threads = args.get_usize("threads", 4).max(1);
+    let serve_requests = args.get_usize("serve-requests", 24).max(1);
+    section("DLRM serving thread-scaling (real backend, batch 32 int8)");
+    let points = dlrm_thread_scaling(threads, serve_requests);
+    let base_qps = points[0].1;
+    let mut ts = Table::new(&["threads", "QPS", "p50", "speedup"]);
+    for &(t, qps, p50) in &points {
+        ts.row(&[
+            t.to_string(),
+            format!("{qps:.1}"),
+            ms(p50),
+            format!("{:.2}x", qps / base_qps),
+        ]);
+    }
+    ts.print();
+
     if let Some(path) = args.get("json") {
         let json = Json::obj(vec![
             ("bench", Json::str("fig7_latency_qps")),
             ("all_within_budget", Json::Bool(all_meet)),
+            (
+                "dlrm_serving",
+                Json::obj(vec![
+                    ("batch", Json::num(32.0)),
+                    ("requests", Json::num(serve_requests as f64)),
+                    (
+                        "points",
+                        Json::arr(
+                            points
+                                .iter()
+                                .map(|&(t, qps, p50)| {
+                                    Json::obj(vec![
+                                        ("threads", Json::num(t as f64)),
+                                        ("qps", Json::num(qps)),
+                                        ("p50_ms", Json::num(p50 * 1e3)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "speedup",
+                        Json::num(points.last().map(|p| p.1 / base_qps).unwrap_or(1.0)),
+                    ),
+                ]),
+            ),
             (
                 "rows",
                 Json::arr(

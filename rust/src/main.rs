@@ -5,6 +5,7 @@
 //!   simulate          run the platform simulator for one or all models
 //!   compile-report    show the compiler's decisions for a model
 //!   serve             serve a model for N requests over the active backend
+//!                     (`--threads N` keeps N requests in flight)
 //!   validate-numerics run the §V-C reference-vs-backend validation
 //!   capacity          print the Fig. 1 capacity series
 
@@ -157,39 +158,45 @@ fn engine(args: &Args) -> Result<Arc<Engine>> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let eng = engine(args)?;
     let n = args.get_usize("requests", 50);
+    // `--threads N` (default 1): N whole requests in flight; for DLRM the
+    // per-card SLS shards of each request also fan out across N threads
+    let threads = args.get_usize("threads", 1).max(1);
     match args.get_or("model", "dlrm") {
         "dlrm" | "recsys" => {
             let batch = args.get_usize("batch", 32);
             let precision = args.get_or("precision", "int8");
-            let server = Arc::new(RecsysServer::new(eng.clone(), batch, precision)?);
-            let m = eng.manifest();
-            let mut gen = RecsysGen::new(
-                1,
-                batch,
-                m.config_usize("dlrm", "num_tables")?,
-                m.config_usize("dlrm", "rows_per_table")?,
-                m.config_usize("dlrm", "dense_in")?,
-                m.config_usize("dlrm", "max_lookups")?,
-            );
+            let server =
+                Arc::new(RecsysServer::with_threads(eng.clone(), batch, precision, threads)?);
+            let mut gen = RecsysGen::from_manifest(1, batch, eng.manifest())?;
             let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
-            let metrics = server.serve(reqs)?;
+            // threads == 1 keeps the Fig. 6 pipelined path; > 1 serves with
+            // N requests in flight
+            let metrics = if threads > 1 {
+                server.serve_workers(reqs, threads)?
+            } else {
+                server.serve(reqs)?
+            };
             print_metrics("dlrm", &metrics);
         }
         "xlmr" | "nlp" => {
-            let server = NlpServer::new(eng.clone())?;
+            let server = Arc::new(NlpServer::new(eng.clone())?);
             let m = eng.manifest();
             let mut gen = NlpGen::new(1, m.config_usize("xlmr", "vocab")?, 128, 100.0);
             let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
-            let (metrics, waste) =
-                server.serve(reqs, args.get_usize("max-batch", 4), !args.flag("naive-batching"))?;
+            let (metrics, waste) = server.serve(
+                reqs,
+                args.get_usize("max-batch", 4),
+                !args.flag("naive-batching"),
+                threads,
+            )?;
             print_metrics("xlmr", &metrics);
             println!("  pad waste : {}", pct(waste));
         }
         "cv" => {
-            let server = CvServer::new(eng.clone())?;
+            let server = Arc::new(CvServer::new(eng.clone())?);
             let mut gen = CvGen::new(1, server.image);
             let batch = args.get_usize("batch", 1);
-            let metrics = server.serve(n, batch, &mut gen)?;
+            let metrics = server.serve(n, batch, &mut gen, threads)?;
             print_metrics("cv", &metrics);
         }
         other => bail!("serve: unknown model '{other}' (dlrm | xlmr | cv)"),

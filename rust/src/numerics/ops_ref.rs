@@ -2,6 +2,12 @@
 //!
 //! Used by the numerics validator (§V-C) to check PJRT artifact outputs, and
 //! by the serving integration tests as ground truth. All row-major f32.
+//!
+//! Ops whose access pattern is driven by *request data* (embedding indices)
+//! return `Result`: a malformed request must surface as a rejected inference,
+//! never as a panic in the serving hot path.
+
+use crate::util::error::{bail, Result};
 
 /// y = x @ w^T + b. x: [m,k], w: [n,k], b: [n] → y: [m,n].
 pub fn fc(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -59,6 +65,11 @@ pub fn quant_fc(
 
 /// SparseLengthsSum: table [rows, dim], indices [batch, max_len],
 /// lengths [batch] → pooled [batch, dim]. Tail indices are masked.
+///
+/// Indices and lengths come straight from the request, so they are data,
+/// not contract: an out-of-range (or negative) index is an `Err`, not a
+/// panic. Shapes are contract (pre-validated by the engine) and stay
+/// asserts.
 pub fn sls(
     table: &[f32],
     dim: usize,
@@ -66,19 +77,29 @@ pub fn sls(
     lengths: &[i32],
     batch: usize,
     max_len: usize,
-) -> Vec<f32> {
+) -> Result<Vec<f32>> {
+    assert_eq!(indices.len(), batch * max_len);
+    assert_eq!(lengths.len(), batch);
+    let rows = table.len() / dim;
     let mut out = vec![0f32; batch * dim];
     for b in 0..batch {
         let l = (lengths[b].max(0) as usize).min(max_len);
         for j in 0..l {
-            let idx = indices[b * max_len + j] as usize;
+            let idx = indices[b * max_len + j];
+            if idx < 0 || idx as usize >= rows {
+                bail!(
+                    "sls: embedding index {idx} out of range for table with {rows} rows \
+                     (batch row {b}, lookup {j})"
+                );
+            }
+            let idx = idx as usize;
             let row = &table[idx * dim..(idx + 1) * dim];
             for d in 0..dim {
                 out[b * dim + d] += row[d];
             }
         }
     }
-    out
+    Ok(out)
 }
 
 /// ReLU in place.
@@ -312,8 +333,35 @@ mod tests {
         let table = vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]; // 3 rows, dim 2
         let indices = vec![0, 1, 2, 2]; // batch 2, max_len 2
         let lengths = vec![2, 1];
-        let out = sls(&table, 2, &indices, &lengths, 2, 2);
+        let out = sls(&table, 2, &indices, &lengths, 2, 2).unwrap();
         assert_eq!(out, vec![3.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn sls_rejects_out_of_range_index() {
+        let table = vec![0.0; 3 * 2]; // 3 rows, dim 2
+        let indices = vec![0, 3]; // 3 is one past the last row
+        let lengths = vec![2];
+        let err = sls(&table, 2, &indices, &lengths, 1, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn sls_rejects_negative_index() {
+        let table = vec![0.0; 3 * 2];
+        let indices = vec![-1, 0];
+        let lengths = vec![2];
+        assert!(sls(&table, 2, &indices, &lengths, 1, 2).is_err());
+    }
+
+    #[test]
+    fn sls_masked_tail_index_not_checked() {
+        // garbage beyond `lengths[b]` is masked, so it must not error
+        let table = vec![1.0, 1.0, 2.0, 2.0];
+        let indices = vec![0, 9999];
+        let lengths = vec![1];
+        let out = sls(&table, 2, &indices, &lengths, 1, 2).unwrap();
+        assert_eq!(out, vec![1.0, 1.0]);
     }
 
     #[test]

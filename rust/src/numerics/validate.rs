@@ -11,9 +11,10 @@ use crate::numerics::ops_ref as ops;
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::{Artifact, InputKind, Manifest};
-use crate::util::error::{bail, err, Result};
+use crate::util::error::{bail, err, Context, Result};
 use crate::util::stats::cosine_similarity;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Comparison outcome for one artifact run.
 #[derive(Debug, Clone)]
@@ -45,91 +46,144 @@ pub fn compare(artifact: &str, reference: &[f32], measured: &[f32]) -> Validatio
     }
 }
 
-/// A named-tensor environment for reference evaluation.
-pub struct Env {
-    map: HashMap<String, HostTensor>,
+/// The weight half of an evaluation environment, validated against the
+/// artifact spec and indexed by name **once** (at `prepare()` time). Shared
+/// by `Arc`, so binding it to a request is a refcount bump — no weight
+/// tensor is ever copied on the per-request hot path (the device-resident
+/// weights story of §VI-C, host-side).
+pub type WeightEnv = Arc<HashMap<String, HostTensor>>;
+
+/// A named-tensor environment for reference evaluation: the shared weight
+/// map plus per-request inputs, borrowed from the caller.
+pub struct Env<'a> {
+    weights: WeightEnv,
+    inputs: HashMap<&'a str, &'a HostTensor>,
 }
 
-impl Env {
+impl<'a> Env<'a> {
     /// Build from an artifact: generated weights + provided request inputs
     /// (in spec order for `kind == Input`).
-    pub fn build(artifact: &Artifact, gen: &mut WeightGen, inputs: &[HostTensor]) -> Result<Env> {
-        let mut map = HashMap::new();
+    pub fn build(
+        artifact: &'a Artifact,
+        gen: &mut WeightGen,
+        inputs: &'a [HostTensor],
+    ) -> Result<Env<'a>> {
+        let mut weights = HashMap::new();
+        let mut req = HashMap::new();
         let mut it = inputs.iter();
         for spec in &artifact.inputs {
-            let t = match spec.kind {
-                InputKind::Input => it
-                    .next()
-                    .ok_or_else(|| err!("missing request input {}", spec.name))?
-                    .clone(),
-                _ => gen.generate(spec, artifact),
-            };
-            map.insert(spec.name.clone(), t);
+            match spec.kind {
+                InputKind::Input => {
+                    let t = it
+                        .next()
+                        .ok_or_else(|| err!("missing request input {}", spec.name))?;
+                    req.insert(spec.name.as_str(), t);
+                }
+                _ => {
+                    weights.insert(spec.name.clone(), gen.generate(spec, artifact));
+                }
+            }
         }
         if it.next().is_some() {
             bail!("too many request inputs for {}", artifact.name);
         }
-        Ok(Env { map })
+        Ok(Env { weights: Arc::new(weights), inputs: req })
     }
 
-    /// Build from explicit weight tensors (as uploaded to a backend) +
-    /// request inputs in spec order. Used by the reference backend so it
-    /// computes with what was actually uploaded, not a regeneration.
-    pub fn from_weights(
+    /// Validate explicit weight tensors (as uploaded to a backend) against
+    /// the spec — presence, order — and index them by name. Done once per
+    /// prepared model; the result feeds [`Env::from_weights`] on every run.
+    pub fn weight_env(
         artifact: &Artifact,
-        weights: &[(String, HostTensor)],
-        inputs: &[&HostTensor],
-    ) -> Result<Env> {
-        let mut map = HashMap::new();
-        let mut wit = weights.iter();
-        let mut iit = inputs.iter();
+        weights: Vec<(String, HostTensor)>,
+    ) -> Result<WeightEnv> {
+        let mut map = HashMap::with_capacity(weights.len());
+        let mut it = weights.into_iter();
         for spec in &artifact.inputs {
-            let t = match spec.kind {
-                InputKind::Input => (*iit
-                    .next()
-                    .ok_or_else(|| err!("missing request input {}", spec.name))?)
-                .clone(),
-                _ => {
-                    let (name, t) = wit
-                        .next()
-                        .ok_or_else(|| err!("missing weight {}", spec.name))?;
-                    if name != &spec.name {
-                        bail!("weight order mismatch: expected {}, got {name}", spec.name);
-                    }
-                    t.clone()
-                }
-            };
-            map.insert(spec.name.clone(), t);
+            if spec.kind == InputKind::Input {
+                continue;
+            }
+            let (name, t) = it
+                .next()
+                .ok_or_else(|| err!("missing weight {}", spec.name))?;
+            if name != spec.name {
+                bail!("weight order mismatch: expected {}, got {name}", spec.name);
+            }
+            map.insert(name, t);
         }
-        if iit.next().is_some() {
+        if let Some((name, _)) = it.next() {
+            bail!("unexpected extra weight {name} for {}", artifact.name);
+        }
+        Ok(Arc::new(map))
+    }
+
+    /// Bind a prebuilt weight env to one request's inputs (spec order for
+    /// `kind == Input`). Per-request cost: one `Arc` bump + O(#request
+    /// tensors) borrowed inserts. No tensor data moves.
+    pub fn from_weights(
+        artifact: &'a Artifact,
+        weights: &WeightEnv,
+        inputs: &[&'a HostTensor],
+    ) -> Result<Env<'a>> {
+        let mut req = HashMap::new();
+        let mut it = inputs.iter();
+        for spec in &artifact.inputs {
+            if spec.kind == InputKind::Input {
+                let t = it
+                    .next()
+                    .ok_or_else(|| err!("missing request input {}", spec.name))?;
+                req.insert(spec.name.as_str(), *t);
+            }
+        }
+        if it.next().is_some() {
             bail!("too many request inputs for {}", artifact.name);
         }
-        Ok(Env { map })
+        Ok(Env { weights: Arc::clone(weights), inputs: req })
+    }
+
+    /// Borrow a full spec-order input list (weights *and* request tensors,
+    /// all host-side) — the one-shot `execute_all` "before" configuration of
+    /// the device-resident ablation. Nothing is copied.
+    pub fn from_spec_order(artifact: &'a Artifact, all: &'a [HostTensor]) -> Result<Env<'a>> {
+        if all.len() != artifact.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                artifact.name,
+                artifact.inputs.len(),
+                all.len()
+            );
+        }
+        let mut req = HashMap::with_capacity(all.len());
+        for (spec, t) in artifact.inputs.iter().zip(all) {
+            req.insert(spec.name.as_str(), t);
+        }
+        Ok(Env { weights: Arc::new(HashMap::new()), inputs: req })
+    }
+
+    fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.inputs.get(name).copied().or_else(|| self.weights.get(name))
     }
 
     pub fn f32(&self, name: &str) -> Result<&[f32]> {
-        self.map
-            .get(name)
+        self.get(name)
             .and_then(HostTensor::as_f32)
             .ok_or_else(|| err!("tensor {name} missing or not f32"))
     }
 
     pub fn i32(&self, name: &str) -> Result<&[i32]> {
-        self.map
-            .get(name)
+        self.get(name)
             .and_then(HostTensor::as_i32)
             .ok_or_else(|| err!("tensor {name} missing or not i32"))
     }
 
     pub fn i8(&self, name: &str) -> Result<&[i8]> {
-        self.map
-            .get(name)
+        self.get(name)
             .and_then(HostTensor::as_i8)
             .ok_or_else(|| err!("tensor {name} missing or not i8"))
     }
 
     pub fn shape(&self, name: &str) -> Result<&[usize]> {
-        self.map.get(name).map(HostTensor::shape).ok_or_else(|| err!("tensor {name} missing"))
+        self.get(name).map(HostTensor::shape).ok_or_else(|| err!("tensor {name} missing"))
     }
 }
 
@@ -186,7 +240,8 @@ fn dlrm_sls_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<V
         let idx = env.i32(&format!("idx{t}"))?;
         let len = env.i32(&format!("len{t}"))?;
         let max_len = env.shape(&format!("idx{t}"))?[1];
-        let pooled = ops::sls(table, dim, idx, len, batch, max_len);
+        let pooled = ops::sls(table, dim, idx, len, batch, max_len)
+            .with_context(|| format!("artifact {}, table{t}", artifact.name))?;
         // interleave into [batch, n_tables, dim]
         for b in 0..batch {
             let dst = (b * tables.len() + ti) * dim;
@@ -281,10 +336,21 @@ fn xlmr_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<H
     let pos = env.f32("pos_emb")?;
 
     let bs = batch * seq;
+    let vocab = tok.len() / d;
     let mut x = vec![0f32; bs * d];
     for b in 0..batch {
         for s in 0..seq {
-            let id = ids[b * seq + s] as usize;
+            // token ids are request data: reject out-of-vocab instead of
+            // panicking on the embedding gather (same audit as ops::sls)
+            let id = ids[b * seq + s];
+            if id < 0 || id as usize >= vocab {
+                bail!(
+                    "artifact {}: token id {id} out of range for vocab {vocab} \
+                     (batch row {b}, position {s})",
+                    artifact.name
+                );
+            }
+            let id = id as usize;
             let dst = (b * seq + s) * d;
             for t in 0..d {
                 x[dst + t] = tok[id * d + t] + pos[s * d + t];

@@ -17,7 +17,7 @@
 
 use crate::numerics::validate;
 use crate::numerics::HostTensor;
-use crate::runtime::artifact::{Artifact, InputKind, Manifest};
+use crate::runtime::artifact::{Artifact, Manifest};
 use crate::util::error::Result;
 use std::sync::Arc;
 
@@ -107,6 +107,10 @@ impl Backend for RefBackend {
         weights: Vec<(String, HostTensor)>,
     ) -> Result<Box<dyn PreparedExec>> {
         self.compile(manifest, art)?;
+        // Validate + index the weight half of the evaluation environment
+        // once, here; every subsequent run() shares it by Arc and never
+        // copies a weight buffer again (host-side "device-resident", §VI-C).
+        let weights = validate::Env::weight_env(art, weights)?;
         Ok(Box::new(RefPrepared {
             manifest: Arc::clone(manifest),
             art: art.clone(),
@@ -121,26 +125,20 @@ impl Backend for RefBackend {
         inputs: &[HostTensor],
     ) -> Result<Vec<HostTensor>> {
         self.compile(manifest, art)?;
-        // split the flat spec-order input list into weights + request inputs
-        let mut weights = Vec::new();
-        let mut request: Vec<&HostTensor> = Vec::new();
-        for (spec, t) in art.inputs.iter().zip(inputs) {
-            match spec.kind {
-                InputKind::Input => request.push(t),
-                _ => weights.push((spec.name.clone(), t.clone())),
-            }
-        }
-        let env = validate::Env::from_weights(art, &weights, &request)?;
+        // everything arrives host-side in spec order; borrow it all
+        let env = validate::Env::from_spec_order(art, inputs)?;
         validate::eval(manifest, art, &env)
     }
 }
 
 /// Weights held host-side ("device-resident" for the interpreter) + the
-/// artifact spec and manifest configs needed at execution time.
+/// artifact spec and manifest configs needed at execution time. The weight
+/// env is prebuilt at `prepare()`; `run` only binds borrowed request
+/// tensors to it — no per-request weight memcpy.
 struct RefPrepared {
     manifest: Arc<Manifest>,
     art: Artifact,
-    weights: Vec<(String, HostTensor)>,
+    weights: validate::WeightEnv,
 }
 
 impl PreparedExec for RefPrepared {

@@ -15,8 +15,10 @@ use crate::runtime::artifact::table_index;
 use crate::runtime::{Engine, PreparedModel};
 use crate::util::error::{err, Context, Result};
 use crate::util::stats::Histogram;
+use crate::util::threadpool::ThreadPool;
 use crate::workloads::RecsysRequest;
 use batcher::{Batcher, NlpBatch};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -44,6 +46,92 @@ impl ServerMetrics {
     }
 }
 
+/// Fan `n` closed-loop work units out to `workers` pool threads. Each
+/// worker pulls the next unit index, times `f(i)`, and accumulates a
+/// per-worker latency histogram (merged at the end, so no lock sits on the
+/// hot path). `f` returns the number of items the unit served;
+/// `sample_per_item` controls whether the unit's latency is recorded once
+/// per unit (whole-request models) or once per item (sentence batches).
+/// The first error stops the remaining workers (best-effort) and is
+/// returned. Result: (latency, units completed, items served).
+fn fan_out_workers<F>(
+    workers: usize,
+    n: usize,
+    sample_per_item: bool,
+    f: F,
+) -> Result<(Histogram, usize, usize)>
+where
+    F: Fn(usize) -> Result<usize> + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let next = Arc::new(AtomicUsize::new(0));
+    let failed = Arc::new(AtomicBool::new(false));
+    let pool = ThreadPool::new(workers);
+    let (tx, rx) = mpsc::channel::<Result<(Histogram, usize, usize)>>();
+    for _ in 0..workers {
+        let f = Arc::clone(&f);
+        let next = Arc::clone(&next);
+        let failed = Arc::clone(&failed);
+        let tx = tx.clone();
+        pool.execute(move || {
+            let mut latency = Histogram::latency();
+            let (mut completed, mut items) = (0usize, 0usize);
+            let res = loop {
+                if failed.load(Ordering::Relaxed) {
+                    break Ok(());
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break Ok(());
+                }
+                let t0 = Instant::now();
+                match f(i) {
+                    Ok(k) => {
+                        let dt = t0.elapsed().as_secs_f64();
+                        for _ in 0..if sample_per_item { k } else { 1 } {
+                            latency.add(dt);
+                        }
+                        completed += 1;
+                        items += k;
+                    }
+                    Err(e) => {
+                        failed.store(true, Ordering::Relaxed);
+                        break Err(e);
+                    }
+                }
+            };
+            let _ = tx.send(res.map(|()| (latency, completed, items)));
+        });
+    }
+    drop(tx);
+    let mut latency = Histogram::latency();
+    let (mut completed, mut items) = (0usize, 0usize);
+    let mut first_err = None;
+    for res in rx.iter() {
+        match res {
+            Ok((h, c, k)) => {
+                latency.merge(&h);
+                completed += c;
+                items += k;
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        // a worker that claimed an index but never reported (panicked job)
+        // must not surface as silently under-counted metrics
+        None if completed != n => {
+            Err(err!("worker exited without reporting ({completed} of {n} units completed)"))
+        }
+        None => Ok((latency, completed, items)),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // DLRM: partitioned + pipelined (Fig. 6)
 // ---------------------------------------------------------------------------
@@ -53,14 +141,31 @@ pub struct RecsysServer {
     /// (global table ids, prepared shard) per SLS card.
     shards: Vec<(Vec<usize>, Arc<PreparedModel>)>,
     dense: Arc<PreparedModel>,
+    /// Pool for intra-request shard fan-out; `None` → shards run
+    /// sequentially on the caller's thread.
+    sls_pool: Option<ThreadPool>,
     pub batch: usize,
     pub num_tables: usize,
     pub embed_dim: usize,
 }
 
 impl RecsysServer {
-    /// Load shards + dense for a batch size and precision ("fp32"/"int8").
+    /// Load shards + dense for a batch size and precision ("fp32"/"int8"),
+    /// with sequential per-card SLS execution.
     pub fn new(engine: Arc<Engine>, batch: usize, precision: &str) -> Result<RecsysServer> {
+        RecsysServer::with_threads(engine, batch, precision, 1)
+    }
+
+    /// Like [`RecsysServer::new`], but with `threads > 1` the per-card SLS
+    /// shards of one request execute in parallel on a dedicated pool — the
+    /// paper's six-cards-per-request partitioning (Fig. 6 left) mapped onto
+    /// host threads.
+    pub fn with_threads(
+        engine: Arc<Engine>,
+        batch: usize,
+        precision: &str,
+        threads: usize,
+    ) -> Result<RecsysServer> {
         let mut gen = WeightGen::new(WEIGHT_SEED);
         let num_tables = engine.manifest().config_usize("dlrm", "num_tables")?;
         let embed_dim = engine.manifest().config_usize("dlrm", "embed_dim")?;
@@ -102,16 +207,34 @@ impl RecsysServer {
         let weights = gen.weights_for(&art);
         let dense = Arc::new(engine.prepare(&dense_name, weights)?);
 
-        Ok(RecsysServer { shards, dense, batch, num_tables, embed_dim })
+        let sls_pool = (threads > 1 && shards.len() > 1)
+            .then(|| ThreadPool::new(threads.min(shards.len())));
+        Ok(RecsysServer { shards, dense, sls_pool, batch, num_tables, embed_dim })
     }
 
     /// Run the SLS partition for one request: returns [batch, T, D] pooled.
+    /// With a shard pool (see [`RecsysServer::with_threads`]) the per-card
+    /// shards execute concurrently; otherwise sequentially.
     pub fn run_sls(&self, req: &RecsysRequest) -> Result<HostTensor> {
+        // table count is request data: validate before indexing into it
+        if req.indices.len() != self.num_tables || req.lengths.len() != self.num_tables {
+            return Err(err!(
+                "request carries {} index / {} length tensors but the model has {} tables",
+                req.indices.len(),
+                req.lengths.len(),
+                self.num_tables
+            ));
+        }
+        match &self.sls_pool {
+            Some(pool) => self.run_sls_parallel(pool, req),
+            None => self.run_sls_sequential(req),
+        }
+    }
+
+    fn run_sls_sequential(&self, req: &RecsysRequest) -> Result<HostTensor> {
         let b = self.batch;
         let d = self.embed_dim;
         let mut sparse = vec![0f32; b * self.num_tables * d];
-        // shards run sequentially here; `serve` overlaps across requests
-        // (the paper's pipelining is across, not within, requests)
         for (tables, shard) in &self.shards {
             let mut inputs: Vec<&HostTensor> = Vec::with_capacity(tables.len() * 2);
             for &t in tables {
@@ -122,16 +245,57 @@ impl RecsysServer {
             let pooled = out[0]
                 .as_f32()
                 .ok_or_else(|| err!("sls output not f32"))?;
-            // out: [b, n_shard, d] -> scatter into [b, T, d]
-            for bi in 0..b {
-                for (si, &t) in tables.iter().enumerate() {
-                    let src = (bi * tables.len() + si) * d;
-                    let dst = (bi * self.num_tables + t) * d;
-                    sparse[dst..dst + d].copy_from_slice(&pooled[src..src + d]);
-                }
-            }
+            self.scatter_shard(&mut sparse, tables, pooled);
         }
         Ok(HostTensor::f32(sparse, &[b, self.num_tables, d]))
+    }
+
+    /// Per-card shards of ONE request in flight together. Shard jobs must be
+    /// `'static` for the pool, so they share the prepared model by `Arc` and
+    /// clone the small per-table index/length tensors (activations move per
+    /// request — §VI-C; the weights stay resident behind the Arc).
+    fn run_sls_parallel(&self, pool: &ThreadPool, req: &RecsysRequest) -> Result<HostTensor> {
+        let b = self.batch;
+        let d = self.embed_dim;
+        let (tx, rx) = mpsc::channel::<(usize, Result<Vec<HostTensor>>)>();
+        for (si, (tables, shard)) in self.shards.iter().enumerate() {
+            let shard = Arc::clone(shard);
+            let inputs: Vec<HostTensor> = tables
+                .iter()
+                .flat_map(|&t| [req.indices[t].clone(), req.lengths[t].clone()])
+                .collect();
+            let tx = tx.clone();
+            pool.execute(move || {
+                let _ = tx.send((si, shard.run(&inputs)));
+            });
+        }
+        drop(tx);
+        let mut sparse = vec![0f32; b * self.num_tables * d];
+        let mut seen = 0usize;
+        for (si, res) in rx.iter() {
+            let out = res.with_context(|| format!("sls shard {si}"))?;
+            let pooled = out[0]
+                .as_f32()
+                .ok_or_else(|| err!("sls output not f32"))?;
+            self.scatter_shard(&mut sparse, &self.shards[si].0, pooled);
+            seen += 1;
+        }
+        if seen != self.shards.len() {
+            return Err(err!("sls shard worker exited without reporting"));
+        }
+        Ok(HostTensor::f32(sparse, &[b, self.num_tables, d]))
+    }
+
+    /// Scatter one shard's pooled output [b, n_shard, d] into [b, T, d].
+    fn scatter_shard(&self, sparse: &mut [f32], tables: &[usize], pooled: &[f32]) {
+        let d = self.embed_dim;
+        for bi in 0..self.batch {
+            for (si, &t) in tables.iter().enumerate() {
+                let src = (bi * tables.len() + si) * d;
+                let dst = (bi * self.num_tables + t) * d;
+                sparse[dst..dst + d].copy_from_slice(&pooled[src..src + d]);
+            }
+        }
     }
 
     /// Run the dense partition: scores [batch, 1].
@@ -152,7 +316,6 @@ impl RecsysServer {
     /// Closed-loop serving of `reqs` with cross-request pipelining: request
     /// k's SLS overlaps request k-1's dense (Fig. 6 right). Returns metrics.
     pub fn serve(self: &Arc<Self>, reqs: Vec<RecsysRequest>) -> Result<ServerMetrics> {
-        let _n = reqs.len();
         let (tx, rx) = mpsc::sync_channel::<(usize, Instant, HostTensor, HostTensor)>(2);
         let me = Arc::clone(self);
         let producer = std::thread::spawn(move || -> Result<()> {
@@ -175,6 +338,38 @@ impl RecsysServer {
         producer.join().map_err(|_| err!("producer panicked"))??;
         let wall_s = wall0.elapsed().as_secs_f64();
         Ok(ServerMetrics { latency, completed, items: completed * self.batch, wall_s })
+    }
+
+    /// Closed-loop serving with `workers` whole requests in flight — the
+    /// intra-host parallelism knob (`--threads`). Each worker pulls the next
+    /// request and runs its full SLS→dense path; per-worker latency
+    /// histograms are merged at the end. `workers == 1` is the strictly
+    /// sequential single-thread baseline the fig7 thread-scaling points
+    /// compare against.
+    pub fn serve_workers(
+        self: &Arc<Self>,
+        reqs: Vec<RecsysRequest>,
+        workers: usize,
+    ) -> Result<ServerMetrics> {
+        let n = reqs.len();
+        let wall0 = Instant::now();
+        if workers <= 1 {
+            let mut latency = Histogram::latency();
+            for req in &reqs {
+                let t0 = Instant::now();
+                self.infer(req)?;
+                latency.add(t0.elapsed().as_secs_f64());
+            }
+            let wall_s = wall0.elapsed().as_secs_f64();
+            return Ok(ServerMetrics { latency, completed: n, items: n * self.batch, wall_s });
+        }
+        let me = Arc::clone(self);
+        let reqs = Arc::new(reqs);
+        let (latency, completed, items) = fan_out_workers(workers, n, false, move |i| {
+            me.infer(&reqs[i]).map(|_| me.batch)
+        })?;
+        let wall_s = wall0.elapsed().as_secs_f64();
+        Ok(ServerMetrics { latency, completed, items, wall_s })
     }
 }
 
@@ -223,6 +418,25 @@ impl NlpServer {
             .ok_or_else(|| err!("no xlmr net for bucket {bucket} x batch {n}"))
     }
 
+    /// Largest batch every bucket has a compiled variant for — the cap on
+    /// `max_batch` in [`NlpServer::serve`]. A batch formed above this would
+    /// only fail mid-stream inside `net_for`, so `serve` validates against
+    /// it up front.
+    pub fn max_supported_batch(&self) -> usize {
+        self.buckets
+            .iter()
+            .map(|&s| {
+                self.nets
+                    .iter()
+                    .filter(|(ns, _, _)| *ns == s)
+                    .map(|(_, b, _)| *b)
+                    .max()
+                    .unwrap_or(0)
+            })
+            .min()
+            .unwrap_or(0)
+    }
+
     /// Run one formed batch; returns pooled embeddings [n, d_model].
     pub fn run_batch(&self, batch: &NlpBatch) -> Result<Vec<Vec<f32>>> {
         let n = batch.requests.len();
@@ -236,23 +450,38 @@ impl NlpServer {
         Ok((0..n).map(|i| pooled[i * self.d_model..(i + 1) * self.d_model].to_vec()).collect())
     }
 
-    /// Serve a request stream through the batcher. Returns metrics plus the
-    /// padded-vs-real token accounting (the batching-efficiency signal).
+    /// Serve a request stream through the batcher with `workers` batches in
+    /// flight. Returns metrics plus the padded-vs-real token accounting
+    /// (the batching-efficiency signal). `max_batch` is validated against
+    /// the compiled batch variants before any batch forms.
     pub fn serve(
-        &self,
+        self: &Arc<Self>,
         reqs: Vec<crate::workloads::NlpRequest>,
         max_batch: usize,
         length_aware: bool,
+        workers: usize,
     ) -> Result<(ServerMetrics, f64)> {
-        let mut b = Batcher::new(self.buckets.clone(), max_batch, length_aware);
-        let mut latency = Histogram::latency();
+        if max_batch == 0 {
+            return Err(err!("max_batch must be >= 1"));
+        }
+        let cap = self.max_supported_batch();
+        if max_batch > cap {
+            return Err(err!(
+                "max_batch {max_batch} exceeds the largest batch compiled for every \
+                 bucket ({cap}); compiled (seq, batch) variants: {:?}",
+                self.nets.iter().map(|(s, b, _)| (*s, *b)).collect::<Vec<_>>()
+            ));
+        }
         let wall0 = Instant::now();
-        let (mut completed, mut items, mut padded, mut real) = (0usize, 0usize, 0usize, 0usize);
-        for r in reqs {
-            b.push(r);
-            while let Some(batch) = b.pop(false) {
+        let mut b = Batcher::new(self.buckets.clone(), max_batch, length_aware);
+
+        if workers <= 1 {
+            // stream: run each batch as it forms (O(max_batch) memory)
+            let mut latency = Histogram::latency();
+            let (mut completed, mut items, mut padded, mut real) = (0usize, 0usize, 0usize, 0usize);
+            let mut run = |batch: &NlpBatch| -> Result<()> {
                 let t0 = Instant::now();
-                self.run_batch(&batch)?;
+                self.run_batch(batch)?;
                 let dt = t0.elapsed().as_secs_f64();
                 for _ in 0..batch.requests.len() {
                     latency.add(dt);
@@ -261,20 +490,42 @@ impl NlpServer {
                 items += batch.requests.len();
                 padded += batch.padded_tokens();
                 real += batch.real_tokens();
+                Ok(())
+            };
+            for r in reqs {
+                b.push(r);
+                while let Some(batch) = b.pop(false) {
+                    run(&batch)?;
+                }
+            }
+            for batch in b.drain() {
+                run(&batch)?;
+            }
+            let wall_s = wall0.elapsed().as_secs_f64();
+            let waste = 1.0 - real as f64 / padded.max(1) as f64;
+            return Ok((ServerMetrics { latency, completed, items, wall_s }, waste));
+        }
+
+        // workers share the formed batches, so materialize them first
+        let mut batches = Vec::new();
+        for r in reqs {
+            b.push(r);
+            while let Some(batch) = b.pop(false) {
+                batches.push(batch);
             }
         }
-        for batch in b.drain() {
-            let t0 = Instant::now();
-            self.run_batch(&batch)?;
-            let dt = t0.elapsed().as_secs_f64();
-            for _ in 0..batch.requests.len() {
-                latency.add(dt);
-            }
-            completed += 1;
-            items += batch.requests.len();
+        batches.extend(b.drain());
+        let (mut padded, mut real) = (0usize, 0usize);
+        for batch in &batches {
             padded += batch.padded_tokens();
             real += batch.real_tokens();
         }
+        let n = batches.len();
+        let me = Arc::clone(self);
+        let batches = Arc::new(batches);
+        let (latency, completed, items) = fan_out_workers(workers, n, true, move |i| {
+            me.run_batch(&batches[i]).map(|_| batches[i].requests.len())
+        })?;
         let wall_s = wall0.elapsed().as_secs_f64();
         let waste = 1.0 - real as f64 / padded.max(1) as f64;
         Ok((ServerMetrics { latency, completed, items, wall_s }, waste))
@@ -326,22 +577,57 @@ impl CvServer {
             .find(|(nb, _)| *nb == b)
             .map(|(_, m)| m)
             .ok_or_else(|| err!("no cv net compiled for batch {b}"))?;
-        let out = net.run(&[image.clone()])?;
-        Ok((out[0].clone(), out[1].clone()))
+        let mut out = net.run_refs(&[image])?;
+        let emb = out.pop().ok_or_else(|| err!("cv output missing embedding"))?;
+        let logits = out.pop().ok_or_else(|| err!("cv output missing logits"))?;
+        Ok((logits, emb))
     }
 
-    /// Closed-loop throughput at a batch size.
-    pub fn serve(&self, n: usize, batch: usize, gen: &mut crate::workloads::CvGen) -> Result<ServerMetrics> {
-        let mut latency = Histogram::latency();
-        let wall0 = Instant::now();
-        for _ in 0..n {
-            let req = gen.next(batch);
-            let t0 = Instant::now();
-            self.infer(&req.image)?;
-            latency.add(t0.elapsed().as_secs_f64());
+    /// Closed-loop throughput at a batch size with `workers` requests in
+    /// flight (`workers == 1` → sequential baseline).
+    pub fn serve(
+        self: &Arc<Self>,
+        n: usize,
+        batch: usize,
+        gen: &mut crate::workloads::CvGen,
+        workers: usize,
+    ) -> Result<ServerMetrics> {
+        // batch is part of the request contract: validate against the
+        // compiled variants before generating anything
+        if !self.nets.iter().any(|(nb, _)| *nb == batch) {
+            return Err(err!(
+                "no cv net compiled for batch {batch} (variants: {:?})",
+                self.batch_sizes()
+            ));
         }
+        if workers <= 1 {
+            // stream requests (O(1) memory regardless of n), excluding
+            // generation from the wall clock so this measures the same
+            // thing as the threaded branch, which pre-materializes
+            let wall0 = Instant::now();
+            let mut gen_s = 0.0f64;
+            let mut latency = Histogram::latency();
+            for _ in 0..n {
+                let g0 = Instant::now();
+                let req = gen.next(batch);
+                gen_s += g0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                self.infer(&req.image)?;
+                latency.add(t0.elapsed().as_secs_f64());
+            }
+            let wall_s = (wall0.elapsed().as_secs_f64() - gen_s).max(0.0);
+            return Ok(ServerMetrics { latency, completed: n, items: n * batch, wall_s });
+        }
+        // workers share the request set, so it must be materialized
+        let reqs: Vec<crate::workloads::CvRequest> = (0..n).map(|_| gen.next(batch)).collect();
+        let wall0 = Instant::now();
+        let me = Arc::clone(self);
+        let reqs = Arc::new(reqs);
+        let (latency, completed, items) = fan_out_workers(workers, n, false, move |i| {
+            me.infer(&reqs[i].image).map(|_| batch)
+        })?;
         let wall_s = wall0.elapsed().as_secs_f64();
-        Ok(ServerMetrics { latency, completed: n, items: n * batch, wall_s })
+        Ok(ServerMetrics { latency, completed, items, wall_s })
     }
 }
 

@@ -172,8 +172,21 @@ impl Histogram {
         self.percentile(99.0)
     }
 
+    /// Merge another histogram's counts into this one. Both must cover the
+    /// same range: bucket `i` means a different latency in a differently
+    /// parameterized histogram, so merging would silently corrupt
+    /// percentiles (the threaded servers merge per-worker histograms
+    /// through here).
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.buckets.len(), other.buckets.len());
+        assert!(
+            self.lo == other.lo && self.ratio == other.ratio,
+            "histogram range mismatch: lo {} vs {}, ratio {} vs {}",
+            self.lo,
+            other.lo,
+            self.ratio,
+            other.ratio
+        );
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
         }
@@ -274,6 +287,30 @@ mod tests {
         assert!(p50 < p95 && p95 < p99);
         assert!((p50 - 0.05).abs() / 0.05 < 0.05, "{p50}");
         assert!((p99 - 0.099).abs() / 0.099 < 0.05, "{p99}");
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined() {
+        let mut all = Histogram::latency();
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        for i in 1..=1000 {
+            let x = i as f64 * 1e-4;
+            all.add(x);
+            if i % 2 == 0 { a.add(x) } else { b.add(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.p50(), all.p50());
+        assert_eq!(a.p99(), all.p99());
+    }
+
+    #[test]
+    #[should_panic(expected = "histogram range mismatch")]
+    fn histogram_merge_rejects_range_mismatch() {
+        let mut a = Histogram::latency();
+        let b = Histogram::new(1e-3, 10.0); // same 1024 buckets, different range
+        a.merge(&b);
     }
 
     #[test]

@@ -31,6 +31,24 @@ pub struct RecsysGen {
 }
 
 impl RecsysGen {
+    /// Build a generator matching a manifest's DLRM config (the shape every
+    /// server/bench/test needs — one place instead of four config lookups
+    /// at each call site).
+    pub fn from_manifest(
+        seed: u64,
+        batch: usize,
+        m: &crate::runtime::artifact::Manifest,
+    ) -> crate::util::error::Result<RecsysGen> {
+        Ok(RecsysGen::new(
+            seed,
+            batch,
+            m.config_usize("dlrm", "num_tables")?,
+            m.config_usize("dlrm", "rows_per_table")?,
+            m.config_usize("dlrm", "dense_in")?,
+            m.config_usize("dlrm", "max_lookups")?,
+        ))
+    }
+
     pub fn new(seed: u64, batch: usize, num_tables: usize, rows_per_table: usize,
                dense_in: usize, max_lookups: usize) -> Self {
         RecsysGen {

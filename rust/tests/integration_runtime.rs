@@ -101,6 +101,50 @@ fn weights_are_deterministic_across_engines() {
 }
 
 #[test]
+fn prepared_model_concurrent_runs_match_sequential_bit_for_bit() {
+    // the zero-copy weight env is shared (Arc) across threads: N concurrent
+    // run()s over the same prepared model must reproduce the sequential
+    // outputs exactly
+    let e = engine();
+    let manifest = e.manifest().clone();
+    let art = manifest.get("dlrm_dense_b16_fp32").unwrap().clone();
+    let weights = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+    let prepared = Arc::new(e.prepare(&art.name, weights).unwrap());
+    let inputs = Arc::new(test_inputs_for(&manifest, &art, 77).unwrap());
+    let expect = prepared.run(&inputs).unwrap();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let prepared = Arc::clone(&prepared);
+            let inputs = Arc::clone(&inputs);
+            let expect = expect.clone();
+            s.spawn(move || {
+                for _ in 0..3 {
+                    assert_eq!(prepared.run(&inputs).unwrap(), expect);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn xlmr_out_of_vocab_token_id_is_error_not_panic() {
+    let e = engine();
+    let manifest = e.manifest().clone();
+    let art = manifest.get("xlmr_s32_b1").unwrap().clone();
+    let weights = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+    let prepared = e.prepare(&art.name, weights).unwrap();
+    let vocab = manifest.config_usize("xlmr", "vocab").unwrap();
+    let mut inputs = test_inputs_for(&manifest, &art, 5).unwrap();
+    // poison one token id past the vocab; shape stays valid
+    let shape = inputs[0].shape().to_vec();
+    let mut ids = inputs[0].as_i32().unwrap().to_vec();
+    ids[0] = vocab as i32;
+    inputs[0] = fbia::numerics::HostTensor::i32(ids, &shape);
+    let err = prepared.run(&inputs).unwrap_err();
+    assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+}
+
+#[test]
 fn prepared_model_rejects_bad_shapes() {
     let e = engine();
     let art = e.manifest().get("cv_trunk_b1").unwrap().clone();

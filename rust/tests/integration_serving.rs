@@ -26,14 +26,7 @@ fn recsys_partitioned_matches_reference_pipeline() {
     let m = e.manifest().clone();
     let batch = 16;
     let server = Arc::new(RecsysServer::new(e.clone(), batch, "fp32").unwrap());
-    let mut gen = RecsysGen::new(
-        9,
-        batch,
-        m.config_usize("dlrm", "num_tables").unwrap(),
-        m.config_usize("dlrm", "rows_per_table").unwrap(),
-        m.config_usize("dlrm", "dense_in").unwrap(),
-        m.config_usize("dlrm", "max_lookups").unwrap(),
-    );
+    let mut gen = RecsysGen::from_manifest(9, batch, &m).unwrap();
     let req = gen.next();
     let scores = server.infer(&req).unwrap();
     let s = scores.as_f32().unwrap();
@@ -56,7 +49,8 @@ fn recsys_partitioned_matches_reference_pipeline() {
         req.lengths[0].as_i32().unwrap(),
         batch,
         max_lookups,
-    );
+    )
+    .unwrap();
     let got = sparse.as_f32().unwrap();
     let num_tables = m.config_usize("dlrm", "num_tables").unwrap();
     for b in 0..batch {
@@ -76,14 +70,7 @@ fn recsys_int8_close_to_fp32() {
     let batch = 16;
     let fp = Arc::new(RecsysServer::new(e.clone(), batch, "fp32").unwrap());
     let q = Arc::new(RecsysServer::new(e.clone(), batch, "int8").unwrap());
-    let mut gen = RecsysGen::new(
-        11,
-        batch,
-        m.config_usize("dlrm", "num_tables").unwrap(),
-        m.config_usize("dlrm", "rows_per_table").unwrap(),
-        m.config_usize("dlrm", "dense_in").unwrap(),
-        m.config_usize("dlrm", "max_lookups").unwrap(),
-    );
+    let mut gen = RecsysGen::from_manifest(11, batch, &m).unwrap();
     let req = gen.next();
     let a = fp.infer(&req).unwrap();
     let b = q.infer(&req).unwrap();
@@ -94,15 +81,30 @@ fn recsys_int8_close_to_fp32() {
 #[test]
 fn nlp_bucket_switching_end_to_end() {
     let e = engine();
-    let server = NlpServer::new(e.clone()).unwrap();
+    let server = Arc::new(NlpServer::new(e.clone()).unwrap());
     assert_eq!(server.buckets, vec![32, 64, 128]);
     let vocab = e.manifest().config_usize("xlmr", "vocab").unwrap();
     let mut gen = NlpGen::new(3, vocab, 120, 100.0);
     let reqs: Vec<_> = (0..8).map(|_| gen.next()).collect();
-    let (metrics, waste) = server.serve(reqs, 4, true).unwrap();
+    let (metrics, waste) = server.serve(reqs, 4, true, 1).unwrap();
     assert_eq!(metrics.items, 8);
     assert!(metrics.completed >= 2); // at least two batches (length spread)
     assert!((0.0..1.0).contains(&waste));
+}
+
+#[test]
+fn nlp_max_batch_validated_up_front() {
+    let e = engine();
+    let server = Arc::new(NlpServer::new(e.clone()).unwrap());
+    let cap = server.max_supported_batch();
+    assert!(cap >= 1);
+    let mut gen = NlpGen::new(3, 100, 120, 100.0);
+    let reqs: Vec<_> = (0..4).map(|_| gen.next()).collect();
+    // one past the largest compiled variant: must fail before any batch runs
+    let err = server.serve(reqs.clone(), cap + 1, true, 1).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("compiled"), "{msg}");
+    assert!(server.serve(reqs, 0, true, 1).is_err());
 }
 
 #[test]
@@ -169,14 +171,7 @@ fn quantization_ne_degradation_within_budget() {
     let batch = 32;
     let fp = Arc::new(RecsysServer::new(e.clone(), batch, "fp32").unwrap());
     let q = Arc::new(RecsysServer::new(e.clone(), batch, "int8").unwrap());
-    let mut gen = RecsysGen::new(
-        23,
-        batch,
-        m.config_usize("dlrm", "num_tables").unwrap(),
-        m.config_usize("dlrm", "rows_per_table").unwrap(),
-        m.config_usize("dlrm", "dense_in").unwrap(),
-        m.config_usize("dlrm", "max_lookups").unwrap(),
-    );
+    let mut gen = RecsysGen::from_manifest(23, batch, &m).unwrap();
     let mut fp_scores = Vec::new();
     let mut q_scores = Vec::new();
     let mut labels = Vec::new();
@@ -215,6 +210,121 @@ fn failure_injection_bad_requests_rejected_cleanly() {
     };
     // must be an Err, not a panic or a wrong-shaped success
     assert!(server.infer(&bad).is_err());
+}
+
+/// Build a valid request, then poison one embedding index.
+fn poisoned_request(e: &Arc<Engine>, batch: usize, idx_value: i32) -> fbia::workloads::RecsysRequest {
+    let mut req = requests(e, 31, batch, 1).pop().unwrap();
+    let max_lookups = e.manifest().config_usize("dlrm", "max_lookups").unwrap();
+    let mut idx = req.indices[0].as_i32().unwrap().to_vec();
+    idx[0] = idx_value;
+    let mut len = req.lengths[0].as_i32().unwrap().to_vec();
+    len[0] = len[0].max(1); // make sure the poisoned slot is unmasked
+    req.indices[0] = fbia::numerics::HostTensor::i32(idx, &[batch, max_lookups]);
+    req.lengths[0] = fbia::numerics::HostTensor::i32(len, &[batch]);
+    req
+}
+
+#[test]
+fn sls_out_of_range_index_is_error_not_panic() {
+    // the headline regression: a request-supplied embedding index past the
+    // table (or negative) must surface as Err with artifact/table context
+    let e = engine();
+    let server = Arc::new(RecsysServer::new(e.clone(), 16, "fp32").unwrap());
+    let rows = e.manifest().config_usize("dlrm", "rows_per_table").unwrap();
+    for bad in [rows as i32, i32::MAX, -1, i32::MIN] {
+        let req = poisoned_request(&e, 16, bad);
+        let err = server.infer(&req).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("out of range"), "idx {bad}: {msg}");
+        assert!(msg.contains("table0"), "idx {bad} missing table context: {msg}");
+    }
+    // the same value inside the table still serves
+    let req = poisoned_request(&e, 16, rows as i32 - 1);
+    server.infer(&req).unwrap();
+}
+
+#[test]
+fn sls_out_of_range_index_rejected_by_threaded_paths_too() {
+    let e = engine();
+    let rows = e.manifest().config_usize("dlrm", "rows_per_table").unwrap();
+    let req = poisoned_request(&e, 16, rows as i32);
+    let sharded = Arc::new(RecsysServer::with_threads(e.clone(), 16, "fp32", 4).unwrap());
+    assert!(sharded.infer(&req).is_err());
+    let server = Arc::new(RecsysServer::new(e.clone(), 16, "fp32").unwrap());
+    assert!(server.serve_workers(vec![req], 4).is_err());
+}
+
+#[test]
+fn failure_injection_wrong_table_count_rejected() {
+    let e = engine();
+    let server = Arc::new(RecsysServer::new(e.clone(), 16, "fp32").unwrap());
+    let mut req = poisoned_request(&e, 16, 0);
+    req.indices.pop();
+    req.lengths.pop();
+    assert!(server.infer(&req).is_err());
+}
+
+fn requests(e: &Arc<Engine>, seed: u64, batch: usize, n: usize) -> Vec<fbia::workloads::RecsysRequest> {
+    let mut gen = RecsysGen::from_manifest(seed, batch, e.manifest()).unwrap();
+    (0..n).map(|_| gen.next()).collect()
+}
+
+#[test]
+fn parallel_sls_matches_sequential_bit_for_bit() {
+    let e = engine();
+    let seq = Arc::new(RecsysServer::new(e.clone(), 16, "fp32").unwrap());
+    let par = Arc::new(RecsysServer::with_threads(e.clone(), 16, "fp32", 4).unwrap());
+    for req in requests(&e, 41, 16, 4) {
+        let a = seq.run_sls(&req).unwrap();
+        let b = par.run_sls(&req).unwrap();
+        assert_eq!(a, b); // bitwise: same per-shard compute, same scatter
+    }
+}
+
+#[test]
+fn serve_workers_matches_sequential_and_conserves_items() {
+    let e = engine();
+    let batch = 16;
+    let server = Arc::new(RecsysServer::new(e.clone(), batch, "int8").unwrap());
+    let reqs = requests(&e, 43, batch, 12);
+    // scores must be identical regardless of how requests were scheduled
+    let expect: Vec<_> = reqs.iter().map(|r| server.infer(r).unwrap()).collect();
+    let metrics = server.serve_workers(reqs.clone(), 4).unwrap();
+    assert_eq!(metrics.completed, 12);
+    assert_eq!(metrics.items, 12 * batch, "threaded metrics must conserve items");
+    assert_eq!(metrics.latency.count(), 12);
+    for (req, want) in reqs.iter().zip(&expect) {
+        assert_eq!(&server.infer(req).unwrap(), want);
+    }
+}
+
+#[test]
+fn nlp_threaded_serve_conserves_items() {
+    let e = engine();
+    let server = Arc::new(NlpServer::new(e.clone()).unwrap());
+    let vocab = e.manifest().config_usize("xlmr", "vocab").unwrap();
+    let mut gen = NlpGen::new(7, vocab, 120, 100.0);
+    let reqs: Vec<_> = (0..16).map(|_| gen.next()).collect();
+    let (seq_m, seq_waste) = server.serve(reqs.clone(), 4, true, 1).unwrap();
+    let (par_m, par_waste) = server.serve(reqs, 4, true, 3).unwrap();
+    assert_eq!(par_m.items, 16, "threaded metrics must conserve requests");
+    assert_eq!(par_m.items, seq_m.items);
+    assert_eq!(par_m.completed, seq_m.completed); // same batches formed
+    assert_eq!(par_m.latency.count(), seq_m.latency.count());
+    assert_eq!(par_waste, seq_waste);
+}
+
+#[test]
+fn cv_threaded_serve_conserves_items() {
+    let e = engine();
+    let server = Arc::new(CvServer::new(e.clone()).unwrap());
+    let mut gen = CvGen::new(1, server.image);
+    let metrics = server.serve(6, 4, &mut gen, 3).unwrap();
+    assert_eq!(metrics.completed, 6);
+    assert_eq!(metrics.items, 24);
+    // unknown batch variant is rejected up front
+    assert!(server.serve(2, 3, &mut gen, 1).is_err());
 }
 
 #[test]
