@@ -13,18 +13,21 @@ use fbia::numerics::validate;
 use fbia::numerics::weights::WeightGen;
 use fbia::runtime::Engine;
 use fbia::serving::{test_inputs_for, WEIGHT_SEED};
+use fbia::util::cli::Args;
 use fbia::util::error::Result;
 use std::sync::Arc;
 
 fn main() -> Result<()> {
+    let args = Args::from_env(false);
     // resolve artifacts/ against the repo root (one level above the rust/
     // package) so this works from any cwd
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
-    let engine = Arc::new(Engine::auto(&dir)?);
+    let engine = Arc::new(Engine::auto_with(&dir, args.get("backend"))?);
     let manifest = engine.manifest().clone();
     println!(
-        "backend {}: manifest with {} artifacts",
+        "backend {} ({} devices): manifest with {} artifacts",
         engine.backend_name(),
+        engine.device_count(),
         manifest.artifacts.len()
     );
 
@@ -48,6 +51,9 @@ fn main() -> Result<()> {
     let scores = outputs[0].as_f32().expect("scores f32");
     println!("ran 1 inference in {:.2} ms; first scores: {:?}",
              dt.as_secs_f64() * 1e3, &scores[..4.min(scores.len())]);
+    if let Some(t) = prepared.modeled_run_s() {
+        println!("modeled card latency: {:.3} ms (card {})", t * 1e3, prepared.device);
+    }
 
     // Check against the independent Rust reference (§V-C numerics story).
     let mut gen2 = WeightGen::new(WEIGHT_SEED);

@@ -2,9 +2,11 @@
 //! buckets (§VI-A) and length-aware dynamic batching (§VII), over real PJRT
 //! numerics. Compares length-aware vs naive batching padding waste.
 //!
-//!     cargo run --release --example serve_nlp [-- --requests 64 --threads 4]
+//!     cargo run --release --example serve_nlp [-- --requests 64 --threads 4 --backend sim]
 //!
 //! `--threads N` (default 1) runs N formed batches in flight.
+//! `--backend {ref,sim,pjrt}` selects execution; `sim` reports modeled
+//! card latencies.
 //!
 //! Uses the builtin manifest + reference backend when `artifacts/` has not
 //! been built.
@@ -26,8 +28,13 @@ fn main() -> Result<()> {
     // resolve artifacts/ against the repo root (one level above the rust/
     // package) so this works from any cwd
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
-    let engine = Arc::new(Engine::auto(&dir)?);
-    println!("backend: {}", engine.backend_name());
+    let engine = Arc::new(Engine::auto_with(&dir, args.get("backend"))?);
+    println!(
+        "backend: {} ({} devices, {} clock)",
+        engine.backend_name(),
+        engine.device_count(),
+        engine.clock().name()
+    );
     let server = Arc::new(NlpServer::new(engine.clone())?);
     println!(
         "XLM-R mini: {} layers, d_model {}, buckets {:?}",

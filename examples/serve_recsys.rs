@@ -3,10 +3,11 @@
 //! parallel) feeding a dense partition (int8), pipelined across requests —
 //! and report latency/throughput.
 //!
-//!     cargo run --release --example serve_recsys [-- --requests 200 --threads 4]
+//!     cargo run --release --example serve_recsys [-- --requests 200 --threads 4 --backend sim]
 //!
 //! `--threads N` (default 1) serves with N requests in flight instead of
-//! the two-stage pipeline.
+//! the two-stage pipeline. `--backend {ref,sim,pjrt}` selects execution;
+//! `sim` runs the same numerics on the modeled card clock.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E. Uses the builtin manifest +
 //! reference backend when `artifacts/` has not been built.
@@ -28,8 +29,13 @@ fn main() -> Result<()> {
     // resolve artifacts/ against the repo root (one level above the rust/
     // package) so this works from any cwd
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
-    let engine = Arc::new(Engine::auto(&dir)?);
-    println!("backend: {}", engine.backend_name());
+    let engine = Arc::new(Engine::auto_with(&dir, args.get("backend"))?);
+    println!(
+        "backend: {} ({} devices, {} clock)",
+        engine.backend_name(),
+        engine.device_count(),
+        engine.clock().name()
+    );
     let m = engine.manifest().clone();
     let num_tables = m.config_usize("dlrm", "num_tables")?;
     println!(

@@ -6,10 +6,12 @@
 //! batcher — and prints throughput/latency per model family. This is the
 //! harness the §Perf optimization loop measures against.
 //!
-//!     cargo bench --bench e2e_serving [-- --threads 4]
+//!     cargo bench --bench e2e_serving [-- --threads 4 --backend sim]
 //!
 //! `--threads` sets the multi-thread point (request workers, and the DLRM
 //! intra-request SLS shard fan-out) reported next to the sequential rows.
+//! `--backend {ref,sim,pjrt}` selects execution; `sim` reports modeled
+//! card latencies instead of host wall time.
 
 use fbia::runtime::Engine;
 use fbia::serving::{CvServer, NlpServer, RecsysServer};
@@ -28,8 +30,13 @@ fn main() {
     // cargo runs bench binaries with cwd = rust/; artifacts/ lives at the
     // repository root, one level up
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
-    let engine = Arc::new(Engine::auto(&dir).expect("engine"));
-    println!("backend: {}", engine.backend_name());
+    let engine = Arc::new(Engine::auto_with(&dir, args.get("backend")).expect("engine"));
+    println!(
+        "backend: {} ({} devices, {} clock)",
+        engine.backend_name(),
+        engine.device_count(),
+        engine.clock().name()
+    );
     let m = engine.manifest().clone();
 
     section("E2E: DLRM partitioned serving (real numerics)");

@@ -1,18 +1,21 @@
 //! Bench: regenerate **Figure 7** — latency and relative QPS of the complex
 //! models on the accelerator node, against their latency bands — plus the
-//! real (RefBackend) DLRM serving path at 1 vs N threads, so the perf
-//! trajectory records the intra-host threading speedup.
+//! real DLRM serving path at 1 vs N threads, so the perf trajectory records
+//! the intra-host threading speedup.
 //!
 //!     cargo bench --bench fig7_latency_qps
 //!     cargo bench --bench fig7_latency_qps -- --json BENCH_smoke.json \
-//!         [--threads 4] [--serve-requests 24]
+//!         [--threads 4] [--serve-requests 24] [--backend sim]
 //!
 //! `--json <path>` additionally writes a machine-readable summary (the CI
 //! smoke artifact), including the `dlrm_serving` thread-scaling points.
+//! With `--backend sim` the serving section runs the same numerics on the
+//! modeled card clock and the JSON records card-accurate latency checked
+//! against the DLRM latency budget (the `BENCH_sim_smoke.json` artifact).
 
 use fbia::config::Config;
 use fbia::graph::models::ModelId;
-use fbia::runtime::Engine;
+use fbia::runtime::{Clock, Engine};
 use fbia::serving::RecsysServer;
 use fbia::sim::simulate_model;
 use fbia::util::bench::section;
@@ -22,11 +25,18 @@ use fbia::util::table::{ms, pct, Table};
 use fbia::workloads::RecsysGen;
 use std::sync::Arc;
 
-/// Serve the same request set at each thread count on the real execution
-/// backend; returns (threads, qps, p50_s) points, 1-thread first.
-fn dlrm_thread_scaling(threads: usize, requests: usize) -> Vec<(usize, f64, f64)> {
+/// Serve the same request set at each thread count on the selected
+/// execution backend; returns the backend that actually ran, its clock,
+/// and (threads, qps, p50_s) points, 1-thread first.
+fn dlrm_thread_scaling(
+    threads: usize,
+    requests: usize,
+    backend: Option<&str>,
+) -> (&'static str, Clock, Vec<(usize, f64, f64)>) {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
-    let engine = Arc::new(Engine::auto(&dir).expect("engine"));
+    let engine = Arc::new(Engine::auto_with(&dir, backend).expect("engine"));
+    let backend_name = engine.backend_name();
+    let clock = engine.clock();
     let batch = 32;
     let mut gen = RecsysGen::from_manifest(1, batch, engine.manifest()).expect("gen");
     let server = Arc::new(RecsysServer::new(engine, batch, "int8").expect("server"));
@@ -40,7 +50,7 @@ fn dlrm_thread_scaling(threads: usize, requests: usize) -> Vec<(usize, f64, f64)
             break;
         }
     }
-    points
+    (backend_name, clock, points)
 }
 
 fn main() {
@@ -92,11 +102,13 @@ fn main() {
         if all_meet { "holds" } else { "VIOLATED" }
     );
 
-    // real serving path: same requests at 1 thread vs N threads (RefBackend)
+    // real serving path: same requests at 1 thread vs N threads, on the
+    // selected backend (`--backend sim` -> modeled card clock)
     let threads = args.get_usize("threads", 4).max(1);
     let serve_requests = args.get_usize("serve-requests", 24).max(1);
-    section("DLRM serving thread-scaling (real backend, batch 32 int8)");
-    let points = dlrm_thread_scaling(threads, serve_requests);
+    let backend = args.get("backend");
+    section("DLRM serving thread-scaling (real numerics, batch 32 int8)");
+    let (backend_name, clock, points) = dlrm_thread_scaling(threads, serve_requests, backend);
     let base_qps = points[0].1;
     let mut ts = Table::new(&["threads", "QPS", "p50", "speedup"]);
     for &(t, qps, p50) in &points {
@@ -108,14 +120,33 @@ fn main() {
         ]);
     }
     ts.print();
+    let dlrm_budget_s = ModelId::RecsysComplex.latency_budget_s();
+    if clock == Clock::Modeled {
+        let p50 = points[0].2;
+        println!(
+            "modeled card latency: p50 {} vs budget {} -> {}",
+            ms(p50),
+            ms(dlrm_budget_s),
+            if p50 <= dlrm_budget_s { "within budget" } else { "EXCEEDS BUDGET" }
+        );
+    }
 
     if let Some(path) = args.get("json") {
+        let p50_1thread = points[0].2;
         let json = Json::obj(vec![
             ("bench", Json::str("fig7_latency_qps")),
             ("all_within_budget", Json::Bool(all_meet)),
             (
                 "dlrm_serving",
                 Json::obj(vec![
+                    ("backend", Json::str(backend_name)),
+                    ("clock", Json::str(clock.name())),
+                    ("modeled", Json::Bool(clock == Clock::Modeled)),
+                    ("latency_budget_ms", Json::num(dlrm_budget_s * 1e3)),
+                    (
+                        "p50_within_budget",
+                        Json::Bool(clock != Clock::Modeled || p50_1thread <= dlrm_budget_s),
+                    ),
                     ("batch", Json::num(32.0)),
                     ("requests", Json::num(serve_requests as f64)),
                     (

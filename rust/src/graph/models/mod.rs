@@ -9,7 +9,7 @@ mod cnn;
 mod dlrm;
 mod xlmr;
 
-pub use cnn::{fbnetv3, regnety, resnext101, resnext3d, CnnSpec};
+pub use cnn::{fbnetv3, regnety, resnext101, resnext3d, staged_cnn, CnnSpec};
 pub use dlrm::{dlrm, DlrmSpec};
 pub use xlmr::{xlmr, XlmrSpec};
 

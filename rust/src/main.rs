@@ -5,7 +5,9 @@
 //!   simulate          run the platform simulator for one or all models
 //!   compile-report    show the compiler's decisions for a model
 //!   serve             serve a model for N requests over the active backend
-//!                     (`--threads N` keeps N requests in flight)
+//!                     (`--backend {ref,sim,pjrt}` selects execution,
+//!                     `--threads N` keeps N requests in flight; `sim` runs
+//!                     reference numerics on the modeled card clock)
 //!   validate-numerics run the §V-C reference-vs-backend validation
 //!   capacity          print the Fig. 1 capacity series
 
@@ -146,12 +148,19 @@ fn cmd_compile_report(args: &Args) -> Result<()> {
 }
 
 /// Engine for the serving/validation subcommands: AOT artifacts when the
-/// directory exists, the builtin manifest + reference backend otherwise.
+/// directory exists, the builtin manifest otherwise. `--backend
+/// {ref,sim,pjrt}` (or `FBIA_BACKEND`) selects execution; unknown names
+/// error with the valid list.
 fn engine(args: &Args) -> Result<Arc<Engine>> {
     let dir = args.get_or("artifacts", "artifacts");
-    let eng = Engine::auto(Path::new(dir))?;
+    let eng = Engine::auto_with(Path::new(dir), args.get("backend"))?;
     let manifest_dir = eng.manifest().dir.display().to_string();
-    eprintln!("[fbia] backend: {} (manifest: {manifest_dir})", eng.backend_name());
+    eprintln!(
+        "[fbia] backend: {} ({} devices, {} clock, manifest: {manifest_dir})",
+        eng.backend_name(),
+        eng.device_count(),
+        eng.clock().name(),
+    );
     Ok(Arc::new(eng))
 }
 
@@ -177,6 +186,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 server.serve(reqs)?
             };
             print_metrics("dlrm", &metrics);
+            print_budget_check(&metrics, ModelId::RecsysComplex);
         }
         "xlmr" | "nlp" => {
             let server = Arc::new(NlpServer::new(eng.clone())?);
@@ -190,6 +200,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 threads,
             )?;
             print_metrics("xlmr", &metrics);
+            print_budget_check(&metrics, ModelId::XlmR);
             println!("  pad waste : {}", pct(waste));
         }
         "cv" => {
@@ -198,6 +209,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let batch = args.get_usize("batch", 1);
             let metrics = server.serve(n, batch, &mut gen, threads)?;
             print_metrics("cv", &metrics);
+            print_budget_check(&metrics, ModelId::ResNeXt101);
         }
         other => bail!("serve: unknown model '{other}' (dlrm | xlmr | cv)"),
     }
@@ -205,13 +217,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn print_metrics(name: &str, m: &fbia::serving::ServerMetrics) {
-    println!("{name}: {} requests in {:.2}s", m.completed, m.wall_s);
+    let clock = match m.clock {
+        fbia::runtime::Clock::Wall => String::new(),
+        fbia::runtime::Clock::Modeled => " (modeled card time)".to_string(),
+    };
+    println!("{name}: {} requests in {:.2}s{clock}", m.completed, m.wall_s);
     println!("  QPS       : {:.1} ({:.1} items/s)", m.qps(), m.items_per_s());
     println!(
         "  latency   : p50 {} p95 {} p99 {}",
         ms(m.latency.p50()),
         ms(m.latency.p95()),
         ms(m.latency.p99())
+    );
+}
+
+/// On the modeled clock, check the p50 against the model family's Table I
+/// latency budget — the fig7 acceptance the sim backend exists to report.
+fn print_budget_check(m: &fbia::serving::ServerMetrics, id: ModelId) {
+    if m.clock != fbia::runtime::Clock::Modeled {
+        return;
+    }
+    let budget = id.latency_budget_s();
+    let p50 = m.latency.p50();
+    println!(
+        "  budget    : p50 {} vs {} ({}) -> {}",
+        ms(p50),
+        ms(budget),
+        id.name(),
+        if p50 <= budget { "within budget" } else { "EXCEEDS BUDGET" }
     );
 }
 

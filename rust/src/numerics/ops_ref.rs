@@ -8,9 +8,76 @@
 //! never as a panic in the serving hot path.
 
 use crate::util::error::{bail, Result};
+use crate::util::threadpool::ThreadPool;
+use std::sync::mpsc;
+use std::sync::{Arc, OnceLock};
+
+/// Multiply-add count above which `fc` tiles its output rows across the
+/// shared kernel pool. Small GEMMs (DLRM dense layers at serving batch
+/// sizes) stay on the caller's thread — the fan-out overhead would dominate;
+/// big ones (XLM-R projections/FFN at batch×seq rows) parallelize.
+const FC_PARALLEL_MIN_MADDS: usize = 1 << 22;
+
+/// Shared pool for intra-kernel tiling (sized to the host, created lazily).
+/// Jobs are leaf work — they never submit further jobs — so kernels called
+/// from serving worker threads cannot deadlock on it.
+fn kernel_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ThreadPool::new(threads.clamp(2, 8))
+    })
+}
 
 /// y = x @ w^T + b. x: [m,k], w: [n,k], b: [n] → y: [m,n].
+///
+/// Large calls are tiled across output rows on [`kernel_pool`] (the
+/// ROADMAP's "parallelism inside single kernels" item). Each output element
+/// is computed by exactly the same accumulation loop as [`fc_serial`], so
+/// the result is bit-identical regardless of tile count — the determinism
+/// the §V-C validation story depends on.
 pub fn fc(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), n * k);
+    assert_eq!(b.len(), n);
+    let tiles = kernel_pool().threads().min(m);
+    if m * k * n < FC_PARALLEL_MIN_MADDS || tiles < 2 {
+        return fc_serial(x, w, b, m, k, n);
+    }
+    // Jobs must be 'static: share one copy of w/b by Arc and give each tile
+    // its own rows of x. One O(m·k + n·k) copy per call, amortized by the
+    // O(m·k·n) GEMM this branch only runs for.
+    let w = Arc::new(w.to_vec());
+    let b = Arc::new(b.to_vec());
+    let chunk = m.div_ceil(tiles);
+    let (tx, rx) = mpsc::channel::<(usize, Vec<f32>)>();
+    let mut submitted = 0usize;
+    for t in 0..tiles {
+        let (r0, r1) = (t * chunk, ((t + 1) * chunk).min(m));
+        if r0 >= r1 {
+            continue;
+        }
+        let xt = x[r0 * k..r1 * k].to_vec();
+        let (w, b, tx) = (Arc::clone(&w), Arc::clone(&b), tx.clone());
+        kernel_pool().execute(move || {
+            let _ = tx.send((r0, fc_serial(&xt, &w, &b, r1 - r0, k, n)));
+        });
+        submitted += 1;
+    }
+    drop(tx);
+    let mut y = vec![0f32; m * n];
+    let mut received = 0usize;
+    for (r0, rows) in rx.iter() {
+        y[r0 * n..r0 * n + rows.len()].copy_from_slice(&rows);
+        received += 1;
+    }
+    assert_eq!(received, submitted, "fc tile worker exited without reporting");
+    y
+}
+
+/// Single-thread reference `fc` — the fallback for small GEMMs and the
+/// per-tile kernel of the parallel path (so both compute identical bits).
+pub fn fc_serial(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), n * k);
     assert_eq!(b.len(), n);
@@ -311,6 +378,54 @@ mod tests {
         let w = vec![1.0, 0.0, 0.0, 1.0];
         let b = vec![0.0, 0.0];
         assert_eq!(fc(&x, &w, &b, 2, 2, 2), x);
+    }
+
+    #[test]
+    fn fc_parallel_bit_identical_to_serial() {
+        // large enough to cross FC_PARALLEL_MIN_MADDS -> tiled path
+        let (m, k, n) = (64, 256, 512);
+        assert!(m * k * n >= FC_PARALLEL_MIN_MADDS);
+        let mut rng = Rng::new(11);
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, n * k);
+        let b = randv(&mut rng, n);
+        let serial = fc_serial(&x, &w, &b, m, k, n);
+        // bitwise equal, and stable across repeated parallel runs
+        for _ in 0..3 {
+            assert_eq!(fc(&x, &w, &b, m, k, n), serial);
+        }
+    }
+
+    #[test]
+    fn fc_small_falls_back_to_serial() {
+        let (m, k, n) = (3, 8, 5);
+        let mut rng = Rng::new(13);
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, n * k);
+        let b = randv(&mut rng, n);
+        assert_eq!(fc(&x, &w, &b, m, k, n), fc_serial(&x, &w, &b, m, k, n));
+    }
+
+    #[test]
+    fn fc_parallel_safe_under_concurrent_callers() {
+        // serving workers call fc concurrently; tiles from different calls
+        // interleave on the shared pool and must not cross-talk
+        let (m, k, n) = (64, 256, 512);
+        let mut rng = Rng::new(17);
+        let x = std::sync::Arc::new(randv(&mut rng, m * k));
+        let w = std::sync::Arc::new(randv(&mut rng, n * k));
+        let b = std::sync::Arc::new(randv(&mut rng, n));
+        let expect = fc_serial(&x, &w, &b, m, k, n);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (x, w, b, e) =
+                    (Arc::clone(&x), Arc::clone(&w), Arc::clone(&b), expect.clone());
+                std::thread::spawn(move || assert_eq!(fc(&x, &w, &b, m, k, n), e))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

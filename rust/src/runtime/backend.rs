@@ -3,11 +3,15 @@
 //! the device behind a common artifact/execution contract).
 //!
 //! A [`Backend`] compiles manifest artifacts, accepts device-resident
-//! weights, and executes requests. Two implementations exist today:
+//! weights pinned to a [`Device`], and executes requests. Three
+//! implementations exist today:
 //!
 //! * [`RefBackend`] — a deterministic pure-Rust interpreter over
 //!   [`crate::numerics::ops_ref`], via the [`crate::numerics::validate`]
 //!   reference models. Zero external dependencies; the hermetic default.
+//! * [`crate::runtime::SimBackend`] — runs the same reference numerics but
+//!   *clocks* with the simulator: every prepared model carries a modeled
+//!   per-run latency for its pinned card ([`Clock::Modeled`]).
 //! * `PjrtBackend` (`--features pjrt`) — executes the AOT HLO-text
 //!   artifacts through a PJRT client ([`crate::runtime::pjrt`]).
 //!
@@ -18,26 +22,67 @@
 use crate::numerics::validate;
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::{Artifact, Manifest};
+use crate::runtime::device::Device;
 use crate::util::error::Result;
 use std::sync::Arc;
 
+/// What a backend's latencies mean — the clock the serving layer feeds its
+/// histograms from. Wall-clock backends (ref, pjrt) measure host elapsed
+/// time; a [`Clock::Modeled`] backend (sim) reports card-accurate modeled
+/// seconds per run, so serving metrics describe the accelerator node rather
+/// than the dev CPU the numerics happen to execute on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Clock {
+    /// Histograms record host wall time around each run.
+    #[default]
+    Wall,
+    /// Histograms record the backend's modeled per-run latency.
+    Modeled,
+}
+
+impl Clock {
+    /// Short label for logs and metric printouts.
+    pub fn name(self) -> &'static str {
+        match self {
+            Clock::Wall => "wall",
+            Clock::Modeled => "modeled",
+        }
+    }
+}
+
 /// One execution device family behind the common artifact contract.
 pub trait Backend: Send + Sync {
-    /// Short identifier ("ref", "pjrt") for logs and the CLI.
+    /// Short identifier ("ref", "sim", "pjrt") for logs and the CLI.
     fn name(&self) -> &'static str;
+
+    /// Which clock this backend's latencies are on. Wall by default;
+    /// sim-clocked backends override to [`Clock::Modeled`].
+    fn clock(&self) -> Clock {
+        Clock::Wall
+    }
+
+    /// The node this backend models, when it has an opinion — the engine
+    /// builds its device table from it so placement and cost model agree on
+    /// the card count/specs. `None` (default) → the paper's default node.
+    fn node_spec(&self) -> Option<crate::platform::NodeSpec> {
+        None
+    }
 
     /// Compile an artifact (backends cache internally); cheap if already
     /// compiled. For the interpreter this checks the artifact is evaluable.
     fn compile(&self, manifest: &Arc<Manifest>, art: &Artifact) -> Result<()>;
 
-    /// Make weights device-resident for an artifact and return an
-    /// executable handle. `weights` is already validated against the spec
-    /// (names, order, shapes) by the engine.
+    /// Make weights device-resident for an artifact on the pinned card and
+    /// return an executable handle. `weights` is already validated against
+    /// the spec (names, order, shapes) by the engine; `device` is the card
+    /// the engine's [`crate::runtime::device::Node`] placed this artifact
+    /// on (backends without a device model may ignore it).
     fn prepare(
         &self,
         manifest: &Arc<Manifest>,
         art: &Artifact,
         weights: Vec<(String, HostTensor)>,
+        device: &Device,
     ) -> Result<Box<dyn PreparedExec>>;
 
     /// One-shot execution with *every* input host-side (weights + request
@@ -62,6 +107,13 @@ pub trait Backend: Send + Sync {
 /// Inputs arrive pre-validated, in spec order for `kind == Input`.
 pub trait PreparedExec: Send + Sync {
     fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Modeled seconds one `run` takes on the pinned card (PCIe upload +
+    /// on-card compute + download). `Some` only for [`Clock::Modeled`]
+    /// backends; shapes are static, so the value is a per-model constant.
+    fn modeled_run_s(&self) -> Option<f64> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -105,6 +157,7 @@ impl Backend for RefBackend {
         manifest: &Arc<Manifest>,
         art: &Artifact,
         weights: Vec<(String, HostTensor)>,
+        _device: &Device,
     ) -> Result<Box<dyn PreparedExec>> {
         self.compile(manifest, art)?;
         // Validate + index the weight half of the evaluation environment

@@ -1,0 +1,131 @@
+//! Device layer: the runtime's view of the accelerator node (§III).
+//!
+//! The paper's platform is six M.2 cards behind a PCIe switch, and its whole
+//! evaluation is stated *per card* — so the runtime models the node as a
+//! [`Node`] of N [`Device`]s (built from [`crate::platform::NodeSpec`] /
+//! [`crate::platform::CardSpec`]) instead of one anonymous executor.
+//! [`crate::runtime::Engine::prepare`] asks the node to [`Node::place`] each
+//! artifact, so prepared models come back *card-pinned*: SLS shards land on
+//! the card the compiler's partitioning scheme assigns them (shard `k` →
+//! card `k mod N`, Fig. 6 left), everything else round-robins across cards
+//! like the data-parallel dense/full replicas of §VI-B.
+//!
+//! Backends receive the pinned [`Device`] at prepare time; the simulated
+//! backend ([`crate::runtime::SimBackend`]) costs compute on that card's
+//! [`CardSpec`] and PCIe transfers on that card's link.
+
+use crate::platform::{CardSpec, NodeSpec};
+use crate::runtime::artifact::Artifact;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One accelerator card the runtime can pin work to.
+#[derive(Debug, Clone)]
+pub struct Device {
+    /// Card index in the node (0..cards), also the PCIe endpoint id used by
+    /// [`crate::platform::topology::Route`].
+    pub id: usize,
+    /// The card's hardware description (compute peaks, memories, link).
+    pub card: CardSpec,
+}
+
+/// The accelerator node: N devices behind the PCIe switch.
+#[derive(Debug)]
+pub struct Node {
+    spec: NodeSpec,
+    devices: Vec<Device>,
+    /// Round-robin cursor for unpinned (non-sharded) artifacts.
+    rr: AtomicUsize,
+}
+
+impl Node {
+    /// Build the device table from a node description.
+    pub fn new(spec: NodeSpec) -> Node {
+        let devices = (0..spec.cards.max(1))
+            .map(|id| Device { id, card: spec.card.clone() })
+            .collect();
+        Node { spec, devices, rr: AtomicUsize::new(0) }
+    }
+
+    /// Number of devices (paper: six).
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn device(&self, id: usize) -> &Device {
+        &self.devices[id]
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    /// The node description the devices came from.
+    pub fn spec(&self) -> &NodeSpec {
+        &self.spec
+    }
+
+    /// Pick the card for an artifact. Sharded artifacts (DLRM SLS shards)
+    /// are pinned by the compiler's placement scheme — shard `k` lives on
+    /// card `k mod N`, matching `compiler::partition`'s model-parallel table
+    /// spread. Everything else (dense replicas, whole-model CV/NLP nets)
+    /// round-robins, mirroring the data-parallel replication of §VI-B.
+    pub fn place(&self, art: &Artifact) -> usize {
+        match art.shard {
+            Some(s) => s % self.devices.len(),
+            None => self.rr.fetch_add(1, Ordering::Relaxed) % self.devices.len(),
+        }
+    }
+}
+
+impl Default for Node {
+    fn default() -> Node {
+        Node::new(NodeSpec::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::builtin::builtin_manifest;
+
+    #[test]
+    fn node_has_six_default_devices() {
+        let n = Node::default();
+        assert_eq!(n.len(), 6);
+        assert_eq!(n.device(3).id, 3);
+        assert!(!n.is_empty());
+    }
+
+    #[test]
+    fn shards_pin_to_their_card() {
+        let n = Node::default();
+        let m = builtin_manifest();
+        for s in 0..4 {
+            let art = m.get(&format!("dlrm_sls_shard{s}_b16")).unwrap();
+            assert_eq!(n.place(art), s, "shard {s} must pin to card {s}");
+            // placement of a pinned artifact is stable, not round-robin
+            assert_eq!(n.place(art), s);
+        }
+    }
+
+    #[test]
+    fn unsharded_artifacts_round_robin() {
+        let n = Node::new(NodeSpec { cards: 3, ..NodeSpec::default() });
+        let m = builtin_manifest();
+        let art = m.get("cv_trunk_b1").unwrap();
+        let seq: Vec<usize> = (0..4).map(|_| n.place(art)).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn shard_wraps_when_more_shards_than_cards() {
+        let n = Node::new(NodeSpec { cards: 2, ..NodeSpec::default() });
+        let m = builtin_manifest();
+        let art = m.get("dlrm_sls_shard3_b16").unwrap();
+        assert_eq!(n.place(art), 1);
+    }
+}

@@ -1,17 +1,24 @@
 //! Runtime: load artifact manifests, bind them to a pluggable execution
-//! [`Backend`], and serve inferences from the Rust hot path (§IV-A). Python
-//! is never involved here.
+//! [`Backend`] over a card-aware [`device::Node`], and serve inferences from
+//! the Rust hot path (§IV-A). Python is never involved here.
 //!
 //! The paper's platform was explicitly "open to enable a variety of AI
 //! accelerators from different vendors"; this module is that seam. The
-//! [`Engine`] owns a manifest + backend pair and performs every
+//! [`Engine`] owns a manifest + backend + device table and performs every
 //! spec-validation step (weight names/shapes, request arity/shapes, output
-//! arity/shapes) so backends implement only raw execution:
+//! arity/shapes) so backends implement only raw execution. Every prepared
+//! model is *pinned to a card* by the node's placement rule (SLS shard `k`
+//! → card `k`, everything else data-parallel round-robin — §VI-B):
 //!
-//! | backend      | feature   | source of truth                      |
-//! |--------------|-----------|--------------------------------------|
-//! | `RefBackend` | (default) | pure-Rust reference interpreter      |
-//! | `PjrtBackend`| `pjrt`    | AOT HLO text executed through PJRT   |
+//! | backend      | feature   | numerics                   | clock           |
+//! |--------------|-----------|----------------------------|-----------------|
+//! | `RefBackend` | (default) | pure-Rust interpreter      | host wall time  |
+//! | `SimBackend` | (default) | same interpreter kernels   | modeled card    |
+//! | `PjrtBackend`| `pjrt`    | AOT HLO text through PJRT  | host wall time  |
+//!
+//! Selection is unified behind one name — the `--backend {ref,sim,pjrt}`
+//! CLI flag or the `FBIA_BACKEND` env var ([`Engine::auto_with`]); unknown
+//! names are an error listing the valid ones, never a silent fallback.
 //!
 //! Without an `artifacts/` directory, [`Engine::auto`] falls back to the
 //! [`builtin`] manifest generated from the model shapes in Rust, so the
@@ -20,10 +27,13 @@
 pub mod artifact;
 pub mod backend;
 pub mod builtin;
+pub mod device;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod sim_backend;
 
-pub use backend::{Backend, PreparedExec, RefBackend};
+pub use backend::{Backend, Clock, PreparedExec, RefBackend};
+pub use sim_backend::SimBackend;
 
 use crate::numerics::HostTensor;
 use crate::util::error::{bail, Result};
@@ -31,89 +41,158 @@ use artifact::{Artifact, InputKind, Manifest};
 use std::path::Path;
 use std::sync::Arc;
 
-/// The backend the build selects by default: PJRT when the `pjrt` feature is
-/// enabled (opt out at runtime with `FBIA_BACKEND=ref`), the reference
-/// interpreter otherwise. Unknown `FBIA_BACKEND` values are an error, not a
-/// silent fallback.
-fn default_backend() -> Result<Arc<dyn Backend>> {
-    let choice = std::env::var("FBIA_BACKEND").ok();
-    #[cfg(feature = "pjrt")]
-    {
-        match choice.as_deref() {
-            None | Some("pjrt") => return Ok(Arc::new(pjrt::PjrtBackend::new()?)),
-            Some("ref") => {}
-            Some(other) => bail!("unknown FBIA_BACKEND '{other}' (expected 'ref' or 'pjrt')"),
-        }
+/// Backend names this build can construct (what `--backend` accepts).
+#[cfg(feature = "pjrt")]
+pub const BACKEND_NAMES: &[&str] = &["ref", "sim", "pjrt"];
+/// Backend names this build can construct (what `--backend` accepts).
+#[cfg(not(feature = "pjrt"))]
+pub const BACKEND_NAMES: &[&str] = &["ref", "sim"];
+
+/// Construct a backend by name — the single selection point behind the
+/// `--backend` flag and `FBIA_BACKEND`. Unknown names (including `pjrt` on
+/// a build without the feature) are an error listing the valid names.
+pub fn backend_by_name(name: &str) -> Result<Arc<dyn Backend>> {
+    match name {
+        "ref" => Ok(Arc::new(RefBackend::new())),
+        "sim" => Ok(Arc::new(SimBackend::with_default_config())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Arc::new(pjrt::PjrtBackend::new()?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "backend 'pjrt' is not built in (rebuild with --features pjrt); \
+             valid backends: {}",
+            BACKEND_NAMES.join(", ")
+        ),
+        other => bail!(
+            "unknown backend '{other}' (valid backends: {})",
+            BACKEND_NAMES.join(", ")
+        ),
     }
-    #[cfg(not(feature = "pjrt"))]
-    if let Some(other) = choice.as_deref() {
-        if other != "ref" {
-            bail!(
-                "FBIA_BACKEND='{other}' requested but this build only has the 'ref' \
-                 backend (rebuild with --features pjrt)"
-            );
-        }
-    }
-    Ok(Arc::new(RefBackend::new()))
 }
 
-/// Shared engine: one manifest + one execution backend.
+/// The explicitly requested backend name: the CLI flag wins, then
+/// `FBIA_BACKEND`; `None` when neither asked. An env value naming an
+/// unknown backend is an error here, never a silent fallback.
+fn requested_backend_name(explicit: Option<&str>) -> Result<Option<String>> {
+    if let Some(name) = explicit {
+        // same eager validation as the env path, so `--backend pjrt` on a
+        // build without the feature reports "rebuild with --features pjrt"
+        // rather than a misleading missing-artifacts error
+        if !BACKEND_NAMES.contains(&name) {
+            backend_by_name(name)?;
+        }
+        return Ok(Some(name.to_string()));
+    }
+    if let Ok(env) = std::env::var("FBIA_BACKEND") {
+        // reject a typo'd env var eagerly — by name, without constructing a
+        // backend (backend_by_name never builds one for an invalid name, so
+        // borrowing its error message here is free)
+        if !BACKEND_NAMES.contains(&env.as_str()) {
+            backend_by_name(&env)?;
+        }
+        return Ok(Some(env));
+    }
+    Ok(None)
+}
+
+/// Build default when nothing was requested: pjrt when the feature is on
+/// (and artifacts exist to feed it), the reference interpreter otherwise.
+fn default_backend_name() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt"
+    } else {
+        "ref"
+    }
+}
+
+/// Shared engine: one manifest + one execution backend + the device table.
 pub struct Engine {
     manifest: Arc<Manifest>,
     backend: Arc<dyn Backend>,
+    node: device::Node,
 }
 
 impl Engine {
     /// Create from an artifacts directory (must contain manifest.json),
-    /// using the build's default backend.
+    /// using the build's default backend (or `FBIA_BACKEND`).
     pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Arc::new(Manifest::load(dir)?);
-        Ok(Engine { manifest, backend: default_backend()? })
+        let manifest = Manifest::load(dir)?;
+        let name = requested_backend_name(None)?
+            .unwrap_or_else(|| default_backend_name().to_string());
+        Ok(Engine::with_backend(manifest, backend_by_name(&name)?))
     }
 
     /// Hermetic engine: builtin manifest + reference interpreter. Needs no
     /// files, no Python, no external dependencies.
     pub fn builtin() -> Engine {
-        Engine {
-            manifest: Arc::new(builtin::builtin_manifest()),
-            backend: Arc::new(RefBackend::new()),
-        }
+        Engine::with_backend(builtin::builtin_manifest(), Arc::new(RefBackend::new()))
     }
 
-    /// `load(dir)` when `dir/manifest.json` exists, [`Engine::builtin`]
-    /// otherwise — the entry point the CLI, examples, benches and
-    /// integration tests share. An explicit `FBIA_BACKEND` request other
-    /// than `ref` is an error when no artifacts exist, not a silent
-    /// fallback to the interpreter.
+    /// [`Engine::auto_with`] with no explicit backend request (the env var
+    /// and build default still apply).
     pub fn auto(dir: &Path) -> Result<Engine> {
-        if dir.join("manifest.json").exists() {
-            Engine::load(dir)
-        } else {
-            if let Ok(req) = std::env::var("FBIA_BACKEND") {
-                if req != "ref" {
-                    bail!(
-                        "FBIA_BACKEND='{req}' requires AOT artifacts, but {} does not \
-                         exist (run `make artifacts`)",
-                        dir.join("manifest.json").display()
-                    );
-                }
-            }
-            Ok(Engine::builtin())
-        }
+        Engine::auto_with(dir, None)
     }
 
-    /// Explicit manifest/backend pairing (tests, future backends).
+    /// The entry point the CLI, examples, benches and integration tests
+    /// share: `load(dir)` when `dir/manifest.json` exists, the builtin
+    /// manifest otherwise. `backend` is the `--backend` request (`ref`,
+    /// `sim`, `pjrt`); `None` falls back to `FBIA_BACKEND`, then the build
+    /// default. An explicit request the build or the artifact situation
+    /// cannot honor is an error, never a silent fallback: unknown names are
+    /// rejected with the valid list, and `pjrt` without AOT artifacts is
+    /// rejected with a pointer at `make artifacts`.
+    pub fn auto_with(dir: &Path, backend: Option<&str>) -> Result<Engine> {
+        let requested = requested_backend_name(backend)?;
+        if dir.join("manifest.json").exists() {
+            let name = requested.unwrap_or_else(|| default_backend_name().to_string());
+            let manifest = Manifest::load(dir)?;
+            return Ok(Engine::with_backend(manifest, backend_by_name(&name)?));
+        }
+        // no artifacts: the hermetic backends still serve the builtin
+        // manifest; an explicit pjrt request cannot be honored
+        let name = requested.unwrap_or_else(|| "ref".to_string());
+        if name == "pjrt" {
+            bail!(
+                "backend 'pjrt' requires AOT artifacts, but {} does not exist \
+                 (run `make artifacts`)",
+                dir.join("manifest.json").display()
+            );
+        }
+        Ok(Engine::with_backend(builtin::builtin_manifest(), backend_by_name(&name)?))
+    }
+
+    /// Explicit manifest/backend pairing (tests, future backends). The
+    /// device table comes from the backend's node model when it has one
+    /// (sim), so placement and cost model agree on the card count; the
+    /// paper's default six-card node otherwise.
     pub fn with_backend(manifest: Manifest, backend: Arc<dyn Backend>) -> Engine {
-        Engine { manifest: Arc::new(manifest), backend }
+        let node = device::Node::new(backend.node_spec().unwrap_or_default());
+        Engine { manifest: Arc::new(manifest), backend, node }
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Short backend identifier ("ref", "pjrt") for logs and the CLI.
+    /// Short backend identifier ("ref", "sim", "pjrt") for logs and the CLI.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The clock this engine's backend reports latencies on.
+    pub fn clock(&self) -> Clock {
+        self.backend.clock()
+    }
+
+    /// The accelerator node's device table.
+    pub fn node(&self) -> &device::Node {
+        &self.node
+    }
+
+    /// Number of cards prepared models are pinned across.
+    pub fn device_count(&self) -> usize {
+        self.node.len()
     }
 
     /// Compile an artifact on the backend (cached backend-side).
@@ -123,14 +202,33 @@ impl Engine {
     }
 
     /// Prepare an artifact for serving: validate + compile + make its
-    /// weights device-resident (in spec order). Takes the weights by value —
-    /// they become backend-resident state, so no caller needs them after.
+    /// weights device-resident (in spec order) on the card the node's
+    /// placement rule pins it to. Takes the weights by value — they become
+    /// backend-resident state, so no caller needs them after.
     pub fn prepare(
         &self,
         name: &str,
         weights: Vec<(String, HostTensor)>,
     ) -> Result<PreparedModel> {
         let art = self.manifest.get(name)?.clone();
+        let device = self.node.place(&art);
+        self.prepare_on(art, weights, device)
+    }
+
+    /// [`Engine::prepare`] with an explicit card (multi-card load-balancing
+    /// experiments; `device` must index the node's device table).
+    pub fn prepare_on(
+        &self,
+        art: Artifact,
+        weights: Vec<(String, HostTensor)>,
+        device: usize,
+    ) -> Result<PreparedModel> {
+        if device >= self.node.len() {
+            bail!(
+                "device {device} out of range for a {}-card node",
+                self.node.len()
+            );
+        }
         // weights must cover every non-Input spec, in order
         let expected: Vec<&str> = art
             .inputs
@@ -140,7 +238,7 @@ impl Engine {
             .collect();
         let got: Vec<&str> = weights.iter().map(|(n, _)| n.as_str()).collect();
         if expected != got {
-            bail!("weight mismatch for {name}: expected {expected:?}, got {got:?}");
+            bail!("weight mismatch for {}: expected {expected:?}, got {got:?}", art.name);
         }
         for (wname, t) in &weights {
             let spec = art.inputs.iter().find(|s| &s.name == wname).unwrap();
@@ -148,8 +246,10 @@ impl Engine {
                 bail!("weight {wname} shape {:?} != spec {:?}", t.shape(), spec.shape);
             }
         }
-        let exec = self.backend.prepare(&self.manifest, &art, weights)?;
-        Ok(PreparedModel { art, exec })
+        let exec = self
+            .backend
+            .prepare(&self.manifest, &art, weights, self.node.device(device))?;
+        Ok(PreparedModel { art, exec, device })
     }
 
     /// One-shot execute with all inputs host-side (no resident weights) —
@@ -192,10 +292,13 @@ fn check_outputs(art: &Artifact, out: &[HostTensor]) -> Result<()> {
     Ok(())
 }
 
-/// A compiled artifact with device-resident weights, ready to serve.
+/// A compiled artifact with device-resident weights, pinned to one card,
+/// ready to serve.
 pub struct PreparedModel {
     pub art: Artifact,
     exec: Box<dyn PreparedExec>,
+    /// Card index this model's weights live on (node placement rule).
+    pub device: usize,
 }
 
 impl PreparedModel {
@@ -204,6 +307,12 @@ impl PreparedModel {
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let refs: Vec<&HostTensor> = inputs.iter().collect();
         self.run_refs(&refs)
+    }
+
+    /// Modeled per-run seconds on the pinned card ([`Clock::Modeled`]
+    /// backends); `None` on wall-clock backends.
+    pub fn modeled_run_s(&self) -> Option<f64> {
+        self.exec.modeled_run_s()
     }
 
     /// Zero-copy variant of [`Self::run`]: the serving hot path passes
@@ -244,9 +353,13 @@ mod tests {
     fn builtin_engine_prepares_and_validates() {
         let e = Engine::builtin();
         assert_eq!(e.backend_name(), "ref");
+        assert_eq!(e.clock(), Clock::Wall);
+        assert_eq!(e.device_count(), 6);
         let art = e.manifest().get("dlrm_dense_b16_fp32").unwrap().clone();
         let weights = WeightGen::new(1).weights_for(&art);
         let prepared = e.prepare(&art.name, weights).unwrap();
+        assert!(prepared.device < e.device_count());
+        assert!(prepared.modeled_run_s().is_none());
         // wrong request arity
         assert!(prepared.run(&[]).is_err());
         // wrong shape
@@ -265,6 +378,21 @@ mod tests {
         let mut weights = WeightGen::new(1).weights_for(&art);
         weights[0].1 = HostTensor::f32(vec![0.0; 2], &[2]);
         assert!(e.prepare(&art.name, weights).is_err());
+        // device out of range
+        let weights = WeightGen::new(1).weights_for(&art);
+        assert!(e.prepare_on(art, weights, 99).is_err());
+    }
+
+    #[test]
+    fn sls_shards_pin_to_their_compiler_card() {
+        let e = Engine::builtin();
+        let mut gen = WeightGen::new(1);
+        for s in 0..4 {
+            let art = e.manifest().get(&format!("dlrm_sls_shard{s}_b16")).unwrap().clone();
+            let weights = gen.weights_for(&art);
+            let prepared = e.prepare(&art.name, weights).unwrap();
+            assert_eq!(prepared.device, s, "shard {s} must pin to card {s}");
+        }
     }
 
     #[test]
@@ -276,5 +404,37 @@ mod tests {
         let auto = Engine::auto(Path::new("/nonexistent/artifacts")).unwrap();
         assert_eq!(auto.backend_name(), "ref");
         assert!(auto.manifest().get("cv_trunk_b1").is_ok());
+    }
+
+    #[test]
+    fn backend_selection_is_strict() {
+        let e = backend_by_name("ref").unwrap();
+        assert_eq!(e.name(), "ref");
+        assert_eq!(backend_by_name("sim").unwrap().name(), "sim");
+        let err = backend_by_name("tpu").unwrap_err().to_string();
+        assert!(err.contains("unknown backend 'tpu'"), "{err}");
+        assert!(err.contains("ref") && err.contains("sim"), "{err}");
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let err = backend_by_name("pjrt").unwrap_err().to_string();
+            assert!(err.contains("--features pjrt"), "{err}");
+        }
+        // explicit --backend request through auto_with
+        let err = Engine::auto_with(Path::new("/nonexistent"), Some("gpu"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("valid backends"), "{err}");
+    }
+
+    #[test]
+    fn sim_backend_via_auto_with() {
+        let e = Engine::auto_with(Path::new("/nonexistent"), Some("sim")).unwrap();
+        assert_eq!(e.backend_name(), "sim");
+        assert_eq!(e.clock(), Clock::Modeled);
+        let art = e.manifest().get("dlrm_dense_b16_fp32").unwrap().clone();
+        let weights = WeightGen::new(1).weights_for(&art);
+        let prepared = e.prepare(&art.name, weights).unwrap();
+        let t = prepared.modeled_run_s().expect("sim models run time");
+        assert!(t > 0.0 && t.is_finite());
     }
 }

@@ -14,6 +14,7 @@
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::{ArtDType, Artifact, InputKind, Manifest};
 use crate::runtime::backend::{Backend, PreparedExec};
+use crate::runtime::device::Device;
 use crate::util::error::{bail, err, Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -102,6 +103,7 @@ impl Backend for PjrtBackend {
         _manifest: &Arc<Manifest>,
         art: &Artifact,
         weights: Vec<(String, HostTensor)>,
+        _device: &Device,
     ) -> Result<Box<dyn PreparedExec>> {
         let exe = self.inner.executable(art)?;
         let mut weight_bufs = Vec::with_capacity(weights.len());

@@ -6,13 +6,19 @@
 //! structure — partitioned + pipelined DLRM (Fig. 6), bucket-switched XLM-R
 //! (§VI-A), batched CV — over the artifact manifest, with multi-threaded
 //! request handling and latency/QPS metrics.
+//!
+//! Metrics are clocked by the engine's backend ([`Clock`]): wall-clock
+//! backends time each request on the host; a [`Clock::Modeled`] backend
+//! (`--backend sim`) feeds the same histograms the modeled per-run card
+//! latency instead, so serving benches report card-accurate numbers while
+//! still executing every request's real numerics.
 
 pub mod batcher;
 
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::table_index;
-use crate::runtime::{Engine, PreparedModel};
+use crate::runtime::{Clock, Engine, PreparedModel};
 use crate::util::error::{err, Context, Result};
 use crate::util::stats::Histogram;
 use crate::util::threadpool::ThreadPool;
@@ -27,13 +33,17 @@ use std::time::Instant;
 /// validation must agree).
 pub const WEIGHT_SEED: u64 = 0xFB1A_2021;
 
-/// Serving metrics: latency histogram + throughput.
+/// Serving metrics: latency histogram + throughput, stamped with the clock
+/// that produced them (host wall time vs modeled card time).
 #[derive(Debug, Clone)]
 pub struct ServerMetrics {
     pub latency: Histogram,
     pub completed: usize,
     pub items: usize,
     pub wall_s: f64,
+    /// Which clock `latency`/`wall_s` are on ([`Clock::Modeled`] for the
+    /// sim backend — deterministic, card-accurate; wall otherwise).
+    pub clock: Clock,
 }
 
 impl ServerMetrics {
@@ -49,19 +59,22 @@ impl ServerMetrics {
 /// Fan `n` closed-loop work units out to `workers` pool threads. Each
 /// worker pulls the next unit index, times `f(i)`, and accumulates a
 /// per-worker latency histogram (merged at the end, so no lock sits on the
-/// hot path). `f` returns the number of items the unit served;
-/// `sample_per_item` controls whether the unit's latency is recorded once
-/// per unit (whole-request models) or once per item (sentence batches).
-/// The first error stops the remaining workers (best-effort) and is
-/// returned. Result: (latency, units completed, items served).
+/// hot path). `f` returns the number of items the unit served plus the
+/// unit's modeled seconds (used as the latency sample when `clock` is
+/// [`Clock::Modeled`]; ignored on the wall clock). `sample_per_item`
+/// controls whether the unit's latency is recorded once per unit
+/// (whole-request models) or once per item (sentence batches). The first
+/// error stops the remaining workers (best-effort) and is returned.
+/// Result: (latency, units completed, items served).
 fn fan_out_workers<F>(
     workers: usize,
     n: usize,
     sample_per_item: bool,
+    clock: Clock,
     f: F,
 ) -> Result<(Histogram, usize, usize)>
 where
-    F: Fn(usize) -> Result<usize> + Send + Sync + 'static,
+    F: Fn(usize) -> Result<(usize, f64)> + Send + Sync + 'static,
 {
     let f = Arc::new(f);
     let next = Arc::new(AtomicUsize::new(0));
@@ -86,8 +99,11 @@ where
                 }
                 let t0 = Instant::now();
                 match f(i) {
-                    Ok(k) => {
-                        let dt = t0.elapsed().as_secs_f64();
+                    Ok((k, modeled_s)) => {
+                        let dt = match clock {
+                            Clock::Wall => t0.elapsed().as_secs_f64(),
+                            Clock::Modeled => modeled_s,
+                        };
                         for _ in 0..if sample_per_item { k } else { 1 } {
                             latency.add(dt);
                         }
@@ -136,6 +152,27 @@ where
 // DLRM: partitioned + pipelined (Fig. 6)
 // ---------------------------------------------------------------------------
 
+/// Modeled per-request costs of the partitioned DLRM path (sim clock): the
+/// SLS cards run in parallel, so the SLS stage costs the slowest shard; the
+/// dense stage follows (Fig. 6 left). Pipelined serving overlaps the two
+/// across requests, so steady-state throughput is set by the bottleneck.
+#[derive(Debug, Clone, Copy)]
+struct RecsysModeled {
+    /// max over shards' modeled run time (cards execute concurrently).
+    sls_s: f64,
+    dense_s: f64,
+}
+
+impl RecsysModeled {
+    fn request_s(&self) -> f64 {
+        self.sls_s + self.dense_s
+    }
+
+    fn bottleneck_s(&self) -> f64 {
+        self.sls_s.max(self.dense_s)
+    }
+}
+
 /// Sharded, pipelined recommendation server.
 pub struct RecsysServer {
     /// (global table ids, prepared shard) per SLS card.
@@ -144,6 +181,9 @@ pub struct RecsysServer {
     /// Pool for intra-request shard fan-out; `None` → shards run
     /// sequentially on the caller's thread.
     sls_pool: Option<ThreadPool>,
+    /// Which clock metrics are on; `modeled` is `Some` iff [`Clock::Modeled`].
+    clock: Clock,
+    modeled: Option<RecsysModeled>,
     pub batch: usize,
     pub num_tables: usize,
     pub embed_dim: usize,
@@ -209,7 +249,46 @@ impl RecsysServer {
 
         let sls_pool = (threads > 1 && shards.len() > 1)
             .then(|| ThreadPool::new(threads.min(shards.len())));
-        Ok(RecsysServer { shards, dense, sls_pool, batch, num_tables, embed_dim })
+        let clock = engine.clock();
+        let modeled = match clock {
+            Clock::Wall => None,
+            Clock::Modeled => {
+                // SLS shards are card-pinned and run concurrently: the SLS
+                // stage costs the slowest shard, regardless of how the host
+                // happens to schedule the numerics
+                let sls_s = shards
+                    .iter()
+                    .map(|(_, s)| {
+                        s.modeled_run_s().ok_or_else(|| {
+                            err!("backend reports a modeled clock but shard {} has no modeled time", s.art.name)
+                        })
+                    })
+                    .collect::<Result<Vec<f64>>>()?
+                    .into_iter()
+                    .fold(0.0, f64::max);
+                let dense_s = dense
+                    .modeled_run_s()
+                    .ok_or_else(|| err!("backend reports a modeled clock but the dense partition has no modeled time"))?;
+                Some(RecsysModeled { sls_s, dense_s })
+            }
+        };
+        Ok(RecsysServer { shards, dense, sls_pool, clock, modeled, batch, num_tables, embed_dim })
+    }
+
+    /// The clock this server's metrics are on.
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    /// Modeled per-request latency on the simulated node (SLS stage = max
+    /// over concurrent cards, then dense). `None` on wall-clock backends.
+    pub fn modeled_request_s(&self) -> Option<f64> {
+        self.modeled.map(|m| m.request_s())
+    }
+
+    /// The cards this server's SLS shards are pinned to, in shard order.
+    pub fn shard_devices(&self) -> Vec<usize> {
+        self.shards.iter().map(|(_, s)| s.device).collect()
     }
 
     /// Run the SLS partition for one request: returns [batch, T, D] pooled.
@@ -315,6 +394,9 @@ impl RecsysServer {
 
     /// Closed-loop serving of `reqs` with cross-request pipelining: request
     /// k's SLS overlaps request k-1's dense (Fig. 6 right). Returns metrics.
+    /// On the modeled clock, the histogram records the modeled per-request
+    /// latency and the wall time is the steady-state pipeline span (fill +
+    /// bottleneck stage per subsequent request).
     pub fn serve(self: &Arc<Self>, reqs: Vec<RecsysRequest>) -> Result<ServerMetrics> {
         let (tx, rx) = mpsc::sync_channel::<(usize, Instant, HostTensor, HostTensor)>(2);
         let me = Arc::clone(self);
@@ -332,12 +414,30 @@ impl RecsysServer {
         let mut completed = 0usize;
         for (_i, t0, dense, sparse) in rx.iter() {
             let _scores = self.run_dense(&dense, &sparse)?;
-            latency.add(t0.elapsed().as_secs_f64());
+            let dt = match self.modeled {
+                None => t0.elapsed().as_secs_f64(),
+                Some(m) => m.request_s(),
+            };
+            latency.add(dt);
             completed += 1;
         }
         producer.join().map_err(|_| err!("producer panicked"))??;
-        let wall_s = wall0.elapsed().as_secs_f64();
-        Ok(ServerMetrics { latency, completed, items: completed * self.batch, wall_s })
+        let wall_s = match self.modeled {
+            None => wall0.elapsed().as_secs_f64(),
+            // tandem-queue steady state (sim::exec): first request pays the
+            // full path, each further one the bottleneck stage
+            Some(m) if completed > 0 => {
+                m.request_s() + (completed - 1) as f64 * m.bottleneck_s()
+            }
+            Some(_) => 0.0,
+        };
+        Ok(ServerMetrics {
+            latency,
+            completed,
+            items: completed * self.batch,
+            wall_s,
+            clock: self.clock,
+        })
     }
 
     /// Closed-loop serving with `workers` whole requests in flight — the
@@ -352,24 +452,36 @@ impl RecsysServer {
         workers: usize,
     ) -> Result<ServerMetrics> {
         let n = reqs.len();
+        let clock = self.clock;
+        let modeled = self.modeled;
+        // modeled wall: n identical requests over `workers` host threads run
+        // in ceil(n/w) waves (at most n are ever in flight) — computed up
+        // front so it is exact and deterministic
+        let modeled_wall = modeled
+            .map(|m| n.div_ceil(workers.clamp(1, n.max(1))) as f64 * m.request_s());
         let wall0 = Instant::now();
         if workers <= 1 {
             let mut latency = Histogram::latency();
             for req in &reqs {
                 let t0 = Instant::now();
                 self.infer(req)?;
-                latency.add(t0.elapsed().as_secs_f64());
+                let dt = match modeled {
+                    None => t0.elapsed().as_secs_f64(),
+                    Some(m) => m.request_s(),
+                };
+                latency.add(dt);
             }
-            let wall_s = wall0.elapsed().as_secs_f64();
-            return Ok(ServerMetrics { latency, completed: n, items: n * self.batch, wall_s });
+            let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
+            return Ok(ServerMetrics { latency, completed: n, items: n * self.batch, wall_s, clock });
         }
         let me = Arc::clone(self);
         let reqs = Arc::new(reqs);
-        let (latency, completed, items) = fan_out_workers(workers, n, false, move |i| {
-            me.infer(&reqs[i]).map(|_| me.batch)
+        let (latency, completed, items) = fan_out_workers(workers, n, false, clock, move |i| {
+            let modeled_s = me.modeled.map(|m| m.request_s()).unwrap_or(0.0);
+            me.infer(&reqs[i]).map(|_| (me.batch, modeled_s))
         })?;
-        let wall_s = wall0.elapsed().as_secs_f64();
-        Ok(ServerMetrics { latency, completed, items, wall_s })
+        let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
+        Ok(ServerMetrics { latency, completed, items, wall_s, clock })
     }
 }
 
@@ -382,6 +494,7 @@ impl RecsysServer {
 pub struct NlpServer {
     /// (seq, batch) -> prepared model
     nets: Vec<(usize, usize, Arc<PreparedModel>)>,
+    clock: Clock,
     pub buckets: Vec<usize>,
     pub d_model: usize,
 }
@@ -405,7 +518,34 @@ impl NlpServer {
         }
         buckets.sort_unstable();
         let d_model = engine.manifest().config_usize("xlmr", "d_model")?;
-        Ok(NlpServer { nets, buckets, d_model })
+        let clock = engine.clock();
+        if clock == Clock::Modeled {
+            // same invalid-state guard as RecsysServer: a modeled clock
+            // without modeled run times must fail here, not report 0-latency
+            // metrics later
+            for (seq, b, net) in &nets {
+                if net.modeled_run_s().is_none() {
+                    return Err(err!(
+                        "backend reports a modeled clock but xlmr net s{seq} b{b} has no modeled time"
+                    ));
+                }
+            }
+        }
+        Ok(NlpServer { nets, clock, buckets, d_model })
+    }
+
+    /// The clock this server's metrics are on.
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    /// Modeled seconds for one formed batch (the selected bucket×batch
+    /// net's per-run card time); 0.0 on wall-clock backends.
+    fn modeled_batch_s(&self, batch: &NlpBatch) -> f64 {
+        self.net_for(batch.bucket, batch.requests.len())
+            .ok()
+            .and_then(|(_, net)| net.modeled_run_s())
+            .unwrap_or(0.0)
     }
 
     /// Find the prepared net for a bucket with the smallest batch >= n.
@@ -472,6 +612,7 @@ impl NlpServer {
                 self.nets.iter().map(|(s, b, _)| (*s, *b)).collect::<Vec<_>>()
             ));
         }
+        let clock = self.clock;
         let wall0 = Instant::now();
         let mut b = Batcher::new(self.buckets.clone(), max_batch, length_aware);
 
@@ -479,13 +620,18 @@ impl NlpServer {
             // stream: run each batch as it forms (O(max_batch) memory)
             let mut latency = Histogram::latency();
             let (mut completed, mut items, mut padded, mut real) = (0usize, 0usize, 0usize, 0usize);
+            let mut modeled_total = 0.0f64;
             let mut run = |batch: &NlpBatch| -> Result<()> {
                 let t0 = Instant::now();
                 self.run_batch(batch)?;
-                let dt = t0.elapsed().as_secs_f64();
+                let dt = match clock {
+                    Clock::Wall => t0.elapsed().as_secs_f64(),
+                    Clock::Modeled => self.modeled_batch_s(batch),
+                };
                 for _ in 0..batch.requests.len() {
                     latency.add(dt);
                 }
+                modeled_total += dt;
                 completed += 1;
                 items += batch.requests.len();
                 padded += batch.padded_tokens();
@@ -501,9 +647,12 @@ impl NlpServer {
             for batch in b.drain() {
                 run(&batch)?;
             }
-            let wall_s = wall0.elapsed().as_secs_f64();
+            let wall_s = match clock {
+                Clock::Wall => wall0.elapsed().as_secs_f64(),
+                Clock::Modeled => modeled_total,
+            };
             let waste = 1.0 - real as f64 / padded.max(1) as f64;
-            return Ok((ServerMetrics { latency, completed, items, wall_s }, waste));
+            return Ok((ServerMetrics { latency, completed, items, wall_s, clock }, waste));
         }
 
         // workers share the formed batches, so materialize them first
@@ -516,19 +665,37 @@ impl NlpServer {
         }
         batches.extend(b.drain());
         let (mut padded, mut real) = (0usize, 0usize);
+        // modeled wall computed up front, in batch order, so it is
+        // deterministic and independent of which worker ran which batch;
+        // batches are heterogeneous, so use the classic makespan bound
+        // max(total/w, longest batch) rather than the bare mean
+        let (mut modeled_total, mut modeled_longest) = (0.0f64, 0.0f64);
         for batch in &batches {
             padded += batch.padded_tokens();
             real += batch.real_tokens();
+            if clock == Clock::Modeled {
+                let s = self.modeled_batch_s(batch);
+                modeled_total += s;
+                modeled_longest = modeled_longest.max(s);
+            }
         }
         let n = batches.len();
         let me = Arc::clone(self);
         let batches = Arc::new(batches);
-        let (latency, completed, items) = fan_out_workers(workers, n, true, move |i| {
-            me.run_batch(&batches[i]).map(|_| batches[i].requests.len())
+        let (latency, completed, items) = fan_out_workers(workers, n, true, clock, move |i| {
+            let modeled_s = me.modeled_batch_s(&batches[i]);
+            me.run_batch(&batches[i]).map(|_| (batches[i].requests.len(), modeled_s))
         })?;
-        let wall_s = wall0.elapsed().as_secs_f64();
+        let wall_s = match clock {
+            Clock::Wall => wall0.elapsed().as_secs_f64(),
+            // at most n batches are ever in flight; no schedule finishes
+            // before the longest batch does
+            Clock::Modeled => {
+                (modeled_total / workers.clamp(1, n.max(1)) as f64).max(modeled_longest)
+            }
+        };
         let waste = 1.0 - real as f64 / padded.max(1) as f64;
-        Ok((ServerMetrics { latency, completed, items, wall_s }, waste))
+        Ok((ServerMetrics { latency, completed, items, wall_s, clock }, waste))
     }
 }
 
@@ -539,6 +706,7 @@ impl NlpServer {
 /// CV trunk server with batch-variant selection.
 pub struct CvServer {
     nets: Vec<(usize, Arc<PreparedModel>)>,
+    clock: Clock,
     pub image: usize,
     pub classes: usize,
 }
@@ -556,11 +724,37 @@ impl CvServer {
             return Err(err!("no cv artifacts in the manifest"));
         }
         nets.sort_by_key(|(b, _)| *b);
+        let clock = engine.clock();
+        if clock == Clock::Modeled {
+            // same invalid-state guard as RecsysServer
+            for (b, net) in &nets {
+                if net.modeled_run_s().is_none() {
+                    return Err(err!(
+                        "backend reports a modeled clock but cv net b{b} has no modeled time"
+                    ));
+                }
+            }
+        }
         Ok(CvServer {
             nets,
+            clock,
             image: engine.manifest().config_usize("cv", "image")?,
             classes: engine.manifest().config_usize("cv", "classes")?,
         })
+    }
+
+    /// The clock this server's metrics are on.
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    /// Modeled seconds per request at a batch size; 0.0 on wall clocks.
+    fn modeled_s(&self, batch: usize) -> f64 {
+        self.nets
+            .iter()
+            .find(|(nb, _)| *nb == batch)
+            .and_then(|(_, m)| m.modeled_run_s())
+            .unwrap_or(0.0)
     }
 
     pub fn batch_sizes(&self) -> Vec<usize> {
@@ -600,6 +794,11 @@ impl CvServer {
                 self.batch_sizes()
             ));
         }
+        let clock = self.clock;
+        let modeled_req_s = self.modeled_s(batch);
+        // ceil(n/w) waves of identical requests (at most n in flight)
+        let modeled_wall = (clock == Clock::Modeled)
+            .then(|| n.div_ceil(workers.clamp(1, n.max(1))) as f64 * modeled_req_s);
         if workers <= 1 {
             // stream requests (O(1) memory regardless of n), excluding
             // generation from the wall clock so this measures the same
@@ -613,21 +812,26 @@ impl CvServer {
                 gen_s += g0.elapsed().as_secs_f64();
                 let t0 = Instant::now();
                 self.infer(&req.image)?;
-                latency.add(t0.elapsed().as_secs_f64());
+                let dt = match clock {
+                    Clock::Wall => t0.elapsed().as_secs_f64(),
+                    Clock::Modeled => modeled_req_s,
+                };
+                latency.add(dt);
             }
-            let wall_s = (wall0.elapsed().as_secs_f64() - gen_s).max(0.0);
-            return Ok(ServerMetrics { latency, completed: n, items: n * batch, wall_s });
+            let wall_s = modeled_wall
+                .unwrap_or_else(|| (wall0.elapsed().as_secs_f64() - gen_s).max(0.0));
+            return Ok(ServerMetrics { latency, completed: n, items: n * batch, wall_s, clock });
         }
         // workers share the request set, so it must be materialized
         let reqs: Vec<crate::workloads::CvRequest> = (0..n).map(|_| gen.next(batch)).collect();
         let wall0 = Instant::now();
         let me = Arc::clone(self);
         let reqs = Arc::new(reqs);
-        let (latency, completed, items) = fan_out_workers(workers, n, false, move |i| {
-            me.infer(&reqs[i].image).map(|_| batch)
+        let (latency, completed, items) = fan_out_workers(workers, n, false, clock, move |i| {
+            me.infer(&reqs[i].image).map(|_| (batch, modeled_req_s))
         })?;
-        let wall_s = wall0.elapsed().as_secs_f64();
-        Ok(ServerMetrics { latency, completed, items, wall_s })
+        let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
+        Ok(ServerMetrics { latency, completed, items, wall_s, clock })
     }
 }
 

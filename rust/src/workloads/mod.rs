@@ -6,6 +6,12 @@
 use crate::numerics::HostTensor;
 use crate::util::rng::Rng;
 
+/// Fraction of `max_lookups` a request actually uses on average — the
+/// Poisson mean of [`RecsysGen`] and the partial-tensor traffic assumption
+/// of the sim backend's PCIe model; keeping it in one place keeps the
+/// modeled upload bytes in sync with the generated request distribution.
+pub const AVG_LOOKUP_FRACTION: f64 = 0.4;
+
 /// One recommendation request: dense features + per-table sparse lookups,
 /// already padded to `max_lookups` (the static-shape contract, §VI-C).
 #[derive(Debug, Clone)]
@@ -57,7 +63,7 @@ impl RecsysGen {
             rows_per_table,
             dense_in,
             max_lookups,
-            mean_lookups: max_lookups as f64 * 0.4,
+            mean_lookups: max_lookups as f64 * AVG_LOOKUP_FRACTION,
             zipf_s: 1.2,
             rng: Rng::new(seed),
         }

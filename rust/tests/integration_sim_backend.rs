@@ -1,0 +1,179 @@
+//! Integration: the sim-clocked backend. Parity — `--backend sim` executes
+//! the same reference kernels, so its outputs must be **bit-for-bit** equal
+//! to `RefBackend` on all three model families — and determinism: modeled
+//! latencies are a function of the artifact and the card, so the serving
+//! histograms must be identical across runs and across worker counts.
+
+use fbia::graph::models::ModelId;
+use fbia::numerics::weights::WeightGen;
+use fbia::runtime::{Clock, Engine};
+use fbia::serving::{test_inputs_for, CvServer, NlpServer, RecsysServer, WEIGHT_SEED};
+use fbia::workloads::{CvGen, NlpGen, RecsysGen};
+use std::path::Path;
+use std::sync::Arc;
+
+fn engine(backend: &str) -> Arc<Engine> {
+    // no artifacts dir in CI: both backends serve the builtin manifest
+    Arc::new(Engine::auto_with(Path::new("/nonexistent/artifacts"), Some(backend)).expect("engine"))
+}
+
+/// One representative artifact per family + precision corner.
+const PARITY_ARTIFACTS: &[&str] = &[
+    "dlrm_sls_shard0_b16",
+    "dlrm_dense_b16_fp32",
+    "dlrm_dense_b32_int8",
+    "xlmr_s32_b1",
+    "xlmr_s32_b4",
+    "cv_trunk_b1",
+];
+
+#[test]
+fn sim_outputs_bit_identical_to_ref_on_all_families() {
+    let r = engine("ref");
+    let s = engine("sim");
+    assert_eq!(r.clock(), Clock::Wall);
+    assert_eq!(s.clock(), Clock::Modeled);
+    for name in PARITY_ARTIFACTS {
+        let art = r.manifest().get(name).unwrap().clone();
+        let inputs = test_inputs_for(r.manifest(), &art, 77).unwrap();
+        let pr = r.prepare(name, WeightGen::new(WEIGHT_SEED).weights_for(&art)).unwrap();
+        let ps = s.prepare(name, WeightGen::new(WEIGHT_SEED).weights_for(&art)).unwrap();
+        let a = pr.run(&inputs).unwrap();
+        let b = ps.run(&inputs).unwrap();
+        assert_eq!(a, b, "{name}: sim output differs from ref");
+        // and the sim side additionally carries a modeled card latency
+        assert!(pr.modeled_run_s().is_none(), "{name}: ref must not model time");
+        let t = ps.modeled_run_s().unwrap_or_else(|| panic!("{name}: sim must model time"));
+        assert!(t > 0.0 && t.is_finite(), "{name}: modeled {t}");
+    }
+}
+
+#[test]
+fn sim_recsys_serving_identical_scores_and_modeled_metrics() {
+    let batch = 16;
+    let sim = engine("sim");
+    let refe = engine("ref");
+    let sim_server = Arc::new(RecsysServer::new(sim.clone(), batch, "int8").unwrap());
+    let ref_server = Arc::new(RecsysServer::new(refe.clone(), batch, "int8").unwrap());
+    let mut gen = RecsysGen::from_manifest(5, batch, sim.manifest()).unwrap();
+    let req = gen.next();
+    assert_eq!(
+        sim_server.infer(&req).unwrap(),
+        ref_server.infer(&req).unwrap(),
+        "end-to-end DLRM scores must match bit-for-bit"
+    );
+    // SLS shards are pinned one per card, in compiler shard order
+    assert_eq!(sim_server.shard_devices(), vec![0, 1, 2, 3]);
+    let m = sim_server.serve_workers(vec![req], 1).unwrap();
+    assert_eq!(m.clock, Clock::Modeled);
+    assert!(m.wall_s > 0.0);
+}
+
+#[test]
+fn sim_latencies_deterministic_across_runs_and_workers() {
+    let batch = 32;
+    let e = engine("sim");
+    let server = Arc::new(RecsysServer::new(e.clone(), batch, "int8").unwrap());
+    let mut gen = RecsysGen::from_manifest(9, batch, e.manifest()).unwrap();
+    let reqs: Vec<_> = (0..8).map(|_| gen.next()).collect();
+
+    let runs: Vec<_> = [1usize, 1, 4, 4]
+        .iter()
+        .map(|&w| server.serve_workers(reqs.clone(), w).unwrap())
+        .collect();
+    // identical histograms across repeated runs AND across worker counts:
+    // the modeled per-request latency does not depend on host scheduling
+    for m in &runs {
+        assert_eq!(m.clock, Clock::Modeled);
+        assert_eq!(m.latency.count(), 8);
+        assert_eq!(m.latency.p50(), runs[0].latency.p50());
+        assert_eq!(m.latency.p99(), runs[0].latency.p99());
+    }
+    // wall time is deterministic per worker count and scales exactly
+    assert_eq!(runs[0].wall_s, runs[1].wall_s);
+    assert_eq!(runs[2].wall_s, runs[3].wall_s);
+    assert!((runs[0].wall_s / runs[2].wall_s - 4.0).abs() < 1e-9);
+
+    // the pipelined path is deterministic too, and never slower per unit
+    // than the serial path's full latency
+    let p1 = server.serve(reqs.clone()).unwrap();
+    let p2 = server.serve(reqs).unwrap();
+    assert_eq!(p1.wall_s, p2.wall_s);
+    assert_eq!(p1.latency.p50(), runs[0].latency.p50());
+    assert!(p1.wall_s <= runs[0].wall_s + 1e-12);
+}
+
+#[test]
+fn sim_modeled_latency_within_dlrm_budget() {
+    // the fig7 acceptance: modeled per-request latency vs the Table I band
+    let e = engine("sim");
+    let server = Arc::new(RecsysServer::new(e.clone(), 32, "int8").unwrap());
+    let modeled = server.modeled_request_s().expect("sim models the request path");
+    let budget = ModelId::RecsysComplex.latency_budget_s();
+    assert!(
+        modeled > 0.0 && modeled <= budget,
+        "modeled request {modeled}s vs budget {budget}s"
+    );
+}
+
+#[test]
+fn sim_nlp_serving_deterministic_and_parity() {
+    let sim = engine("sim");
+    let refe = engine("ref");
+    let sim_server = Arc::new(NlpServer::new(sim.clone()).unwrap());
+    let ref_server = Arc::new(NlpServer::new(refe.clone()).unwrap());
+    let vocab = sim.manifest().config_usize("xlmr", "vocab").unwrap();
+    let mk = || {
+        let mut gen = NlpGen::new(3, vocab, 120, 100.0);
+        (0..10).map(|_| gen.next()).collect::<Vec<_>>()
+    };
+    // embeddings identical across backends
+    let reqs = mk();
+    let batch = fbia::serving::batcher::NlpBatch { requests: vec![reqs[0].clone()], bucket: 64 };
+    assert_eq!(
+        sim_server.run_batch(&batch).unwrap(),
+        ref_server.run_batch(&batch).unwrap()
+    );
+    // metrics deterministic across runs and worker counts
+    let (a, wa) = sim_server.serve(mk(), 4, true, 1).unwrap();
+    let (b, wb) = sim_server.serve(mk(), 4, true, 3).unwrap();
+    let (c, _) = sim_server.serve(mk(), 4, true, 3).unwrap();
+    assert_eq!(a.clock, Clock::Modeled);
+    assert_eq!(a.latency.count(), b.latency.count());
+    assert_eq!(a.latency.p50(), b.latency.p50());
+    assert_eq!(a.latency.p99(), b.latency.p99());
+    assert_eq!(b.latency.p50(), c.latency.p50());
+    assert_eq!(b.wall_s, c.wall_s);
+    assert_eq!(wa, wb);
+}
+
+#[test]
+fn sim_cv_serving_deterministic_and_parity() {
+    let sim = engine("sim");
+    let refe = engine("ref");
+    let sim_server = Arc::new(CvServer::new(sim.clone()).unwrap());
+    let ref_server = Arc::new(CvServer::new(refe.clone()).unwrap());
+    let mut gen = CvGen::new(5, sim_server.image);
+    let req = gen.next(4);
+    let (ls, es) = sim_server.infer(&req.image).unwrap();
+    let (lr, er) = ref_server.infer(&req.image).unwrap();
+    assert_eq!(ls, lr);
+    assert_eq!(es, er);
+    let mut g1 = CvGen::new(7, sim_server.image);
+    let mut g2 = CvGen::new(7, sim_server.image);
+    let a = sim_server.serve(6, 4, &mut g1, 1).unwrap();
+    let b = sim_server.serve(6, 4, &mut g2, 3).unwrap();
+    assert_eq!(a.clock, Clock::Modeled);
+    assert_eq!(a.latency.p50(), b.latency.p50());
+    assert_eq!(a.latency.p99(), b.latency.p99());
+    assert_eq!(a.items, b.items);
+}
+
+#[test]
+fn unknown_backend_rejected_with_valid_names() {
+    let err = Engine::auto_with(Path::new("/nonexistent/artifacts"), Some("npu"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown backend 'npu'"), "{err}");
+    assert!(err.contains("ref") && err.contains("sim"), "{err}");
+}
