@@ -1,0 +1,91 @@
+//! Fleet routing demo: serve a mixed recsys/nlp/cv stream across the
+//! six-card node and compare dispatch policies (§IV packing, §VI-B
+//! replication, Fig. 1 capacity inputs).
+//!
+//!     cargo run --release --example fleet_mix [-- --requests 120 \
+//!         --mix 70/20/10 --replicas 4 --backend sim --threads 4]
+//!
+//! On `--backend sim` (recommended) the policy comparison runs on the
+//! deterministic modeled clock and then executes the winning policy's plan
+//! with real numerics; on wall-clock backends every policy is executed and
+//! timed on the host.
+
+use fbia::runtime::{Clock, Engine};
+use fbia::serving::fleet::{
+    Arrival, FamilyMix, Fleet, FleetConfig, RoutePolicy, TrafficGen,
+};
+use fbia::util::cli::Args;
+use fbia::util::error::Result;
+use fbia::util::table::{ms, pct, Table};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let n = args.get_usize("requests", 120);
+    let threads = args.get_usize("threads", 4).max(1);
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
+    let cfg = FleetConfig {
+        replicas: args.get_usize("replicas", FleetConfig::default().replicas),
+        ..FleetConfig::default()
+    };
+
+    // resolve artifacts/ against the repo root (one level above the rust/
+    // package) so this works from any cwd
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let engine = Arc::new(Engine::auto_with(&dir, args.get("backend"))?);
+    println!(
+        "backend: {} ({} devices, {} clock)",
+        engine.backend_name(),
+        engine.device_count(),
+        engine.clock().name()
+    );
+    let modeled = engine.clock() == Clock::Modeled;
+
+    let fleet = Arc::new(Fleet::new(engine.clone(), cfg.clone())?);
+    let mut traffic = TrafficGen::new(1, mix, Arrival::Burst, engine.manifest(), cfg.recsys_batch)?;
+    let reqs = traffic.take(n);
+    println!(
+        "fleet: {} replicas/family ({}), mix {} over {n} requests",
+        cfg.replicas,
+        cfg.placement.name(),
+        mix.label()
+    );
+
+    let mut t = Table::new(&["policy", "admitted", "shed%", "node QPS", "p50", "p99"]);
+    for policy in RoutePolicy::ALL {
+        let m = if modeled {
+            fleet.route(&reqs, policy)?
+        } else {
+            fleet.serve(reqs.clone(), policy, threads)?
+        };
+        t.row(&[
+            policy.name().to_string(),
+            m.node.completed.to_string(),
+            pct(m.shed_rate()),
+            format!("{:.1}", m.node_qps()),
+            ms(m.node.latency.p50()),
+            ms(m.node.latency.p99()),
+        ]);
+    }
+    t.print();
+
+    if modeled {
+        let m = fleet.serve(reqs, RoutePolicy::LatencyAware, threads)?;
+        println!(
+            "\nexecuted {} admitted requests' numerics (latency-aware, {threads} workers)",
+            m.node.completed
+        );
+        println!("per-card utilization (modeled):");
+        let mut tc = Table::new(&["card", "completed", "busy", "util"]);
+        for c in &m.per_card {
+            tc.row(&[
+                c.card.to_string(),
+                c.metrics.completed.to_string(),
+                ms(c.busy_s),
+                pct(c.utilization(m.node.wall_s)),
+            ]);
+        }
+        tc.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Bench: fleet routing policies × replica placements on the modeled
+//! clock — the §IV/§VI-B multi-card scheduling study.
+//!
+//!     cargo bench --bench fleet_policies
+//!     cargo bench --bench fleet_policies -- --requests 200 --mix 60/30/10 \
+//!         [--json BENCH_fleet_policies.json]
+//!
+//! Routes (never executes) a deterministic mixed trace through every
+//! (placement, policy) pair and reports modeled node QPS, shed rate and
+//! tail latency. Everything here is bit-reproducible: same flags, same
+//! numbers.
+
+use fbia::runtime::Engine;
+use fbia::serving::fleet::{
+    Arrival, FamilyMix, Fleet, FleetConfig, Placement, RoutePolicy, TrafficGen,
+};
+use fbia::util::bench::section;
+use fbia::util::cli::Args;
+use fbia::util::json::Json;
+use fbia::util::table::{ms, pct, Table};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env(false);
+    let requests = args.get_usize("requests", 150).max(1);
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10")).expect("mix");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+
+    section("Fleet routing: policy x placement on the modeled clock");
+    let mut rows = Vec::new();
+    let mut t = Table::new(&[
+        "placement", "policy", "admitted", "shed%", "node QPS", "p50", "p99",
+    ]);
+    for placement in Placement::ALL {
+        let engine =
+            Arc::new(Engine::auto_with(&dir, Some("sim")).expect("sim engine"));
+        let cfg = FleetConfig { placement, ..FleetConfig::default() };
+        let fleet = Fleet::new(engine.clone(), cfg.clone()).expect("fleet");
+        let mut traffic =
+            TrafficGen::new(1, mix, Arrival::Burst, engine.manifest(), cfg.recsys_batch)
+                .expect("traffic");
+        let reqs = traffic.take(requests);
+        for policy in RoutePolicy::ALL {
+            let m = fleet.route(&reqs, policy).expect("route");
+            t.row(&[
+                placement.name().to_string(),
+                policy.name().to_string(),
+                m.node.completed.to_string(),
+                pct(m.shed_rate()),
+                format!("{:.1}", m.node_qps()),
+                ms(m.node.latency.p50()),
+                ms(m.node.latency.p99()),
+            ]);
+            rows.push((placement, policy, m));
+        }
+    }
+    t.print();
+
+    // headline checks the router exists for
+    let find = |pl: Placement, po: RoutePolicy| {
+        rows.iter().find(|(a, b, _)| *a == pl && *b == po).map(|(_, _, m)| m).unwrap()
+    };
+    let rr = find(Placement::SlsAffine, RoutePolicy::RoundRobin);
+    let la = find(Placement::SlsAffine, RoutePolicy::LatencyAware);
+    println!();
+    println!(
+        "latency-aware vs round-robin (sls-affine): {:.1} vs {:.1} node QPS -> {}",
+        la.node_qps(),
+        rr.node_qps(),
+        if la.node_qps() > rr.node_qps() && la.shed_rate() <= rr.shed_rate() {
+            "holds"
+        } else {
+            "VIOLATED"
+        }
+    );
+    let pack = find(Placement::Pack, RoutePolicy::LatencyAware);
+    println!(
+        "spreading beats packing: sls-affine {:.1} vs pack {:.1} node QPS -> {}",
+        la.node_qps(),
+        pack.node_qps(),
+        if la.node_qps() > pack.node_qps() { "holds" } else { "VIOLATED" }
+    );
+
+    if let Some(path) = args.get("json") {
+        let json = Json::obj(vec![
+            ("bench", Json::str("fleet_policies")),
+            ("mix", Json::str(&mix.label())),
+            ("requests", Json::num(requests as f64)),
+            (
+                "rows",
+                Json::arr(
+                    rows.iter()
+                        .map(|(pl, po, m)| {
+                            Json::obj(vec![
+                                ("placement", Json::str(pl.name())),
+                                ("policy", Json::str(po.name())),
+                                ("node_qps", Json::num(m.node_qps())),
+                                ("shed_rate", Json::num(m.shed_rate())),
+                                ("p50_ms", Json::num(m.node.latency.p50() * 1e3)),
+                                ("p99_ms", Json::num(m.node.latency.p99() * 1e3)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path, json.to_string()).expect("writing bench json");
+        println!("wrote {path}");
+    }
+}

@@ -60,20 +60,16 @@ pub struct CapacityPoint {
     pub accel_norm: f64,
 }
 
-/// Per-server throughput assumptions. CPU throughput is derived from the
-/// host model in the config; accelerator throughput from the simulator.
-pub fn capacity_series(model: ModelId, scenario: &GrowthScenario, cfg: &Config) -> Result<Vec<CapacityPoint>> {
-    let accel = simulate_model(model, cfg, 200)?;
-    let accel_qps_per_server = accel.items_per_s;
-
-    // CPU server: same host but no cards — serve the model's FLOPs on the
-    // host's sustained GFLOPs (optimistic for the CPU; the paper's point is
-    // that complex models "cannot be easily or efficiently run on CPUs").
-    let g = model.build();
-    let flops = g.total_flops();
-    let cpu_qps_per_server =
-        (cfg.node.host.gflops * 1e9 * 0.5) / flops * model.typical_batch() as f64;
-
+/// Convert a demand curve into server counts given each platform's
+/// per-server throughput — the Fig. 1 arithmetic, factored out so the
+/// accelerator throughput can come from *either* a single-model simulation
+/// ([`capacity_series`]) or the fleet router's measured per-node QPS on a
+/// mixed trace ([`crate::serving::fleet::plan::plan_capacity`]).
+pub fn series_from_qps(
+    scenario: &GrowthScenario,
+    accel_qps_per_server: f64,
+    cpu_qps_per_server: f64,
+) -> Vec<CapacityPoint> {
     let mut out = Vec::new();
     let d0 = scenario.demand_at(0);
     // normalization uses the raw (un-floored) series so the Fig. 1 y-axis
@@ -93,7 +89,24 @@ pub fn capacity_series(model: ModelId, scenario: &GrowthScenario, cfg: &Config) 
             accel_norm: acc / acc0,
         });
     }
-    Ok(out)
+    out
+}
+
+/// CPU-only per-server throughput for one model: serve its FLOPs on the
+/// host's sustained GFLOPs (optimistic for the CPU; the paper's point is
+/// that complex models "cannot be easily or efficiently run on CPUs").
+pub fn cpu_qps_per_server(model: ModelId, cfg: &Config) -> f64 {
+    let g = model.build();
+    (cfg.node.host.gflops * 1e9 * 0.5) / g.total_flops() * model.typical_batch() as f64
+}
+
+/// Per-server throughput assumptions. CPU throughput is derived from the
+/// host model in the config; accelerator throughput from the single-model
+/// simulator. (The `fbia fleet`/`fbia capacity` path instead measures the
+/// accelerator side with the fleet router on a mixed trace.)
+pub fn capacity_series(model: ModelId, scenario: &GrowthScenario, cfg: &Config) -> Result<Vec<CapacityPoint>> {
+    let accel = simulate_model(model, cfg, 200)?;
+    Ok(series_from_qps(scenario, accel.items_per_s, cpu_qps_per_server(model, cfg)))
 }
 
 /// Power saved by serving the demand on accelerators instead of CPUs, watts.

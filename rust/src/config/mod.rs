@@ -140,6 +140,21 @@ impl Config {
         if self.node.cards == 0 {
             bail!("node.cards must be > 0");
         }
+        if let Some((id, _)) =
+            self.node.card_overrides.iter().find(|(id, _)| *id >= self.node.cards)
+        {
+            bail!(
+                "node.card_overrides names card {id} but the node has {} cards",
+                self.node.cards
+            );
+        }
+        // first match wins in NodeSpec::card_spec, so a duplicate slot
+        // would silently drop the later entry — reject it instead
+        for (i, (id, _)) in self.node.card_overrides.iter().enumerate() {
+            if self.node.card_overrides[..i].iter().any(|(j, _)| j == id) {
+                bail!("node.card_overrides lists card {id} more than once");
+            }
+        }
         if self.compiler.sls_cards > self.node.cards {
             bail!(
                 "compiler.sls_cards ({}) exceeds node.cards ({})",
@@ -174,22 +189,39 @@ fn b(j: &Json, key: &str, cur: bool) -> bool {
     j.get(key).and_then(Json::as_bool).unwrap_or(cur)
 }
 
+/// One card description on top of a base spec; fields not present keep the
+/// base values (shared by `node.card` and each `node.card_overrides` entry).
+fn card_from_json(c: &Json, base: &CardSpec) -> CardSpec {
+    CardSpec {
+        accel_cores: u(c, "accel_cores", base.accel_cores),
+        peak_tops_int8: f(c, "peak_tops_int8", base.peak_tops_int8),
+        peak_tflops_fp16: f(c, "peak_tflops_fp16", base.peak_tflops_fp16),
+        lpddr_bytes: u(c, "lpddr_bytes", base.lpddr_bytes),
+        lpddr_bw: f(c, "lpddr_bw", base.lpddr_bw),
+        sram_per_core: u(c, "sram_per_core", base.sram_per_core),
+        shared_cache: u(c, "shared_cache", base.shared_cache),
+        sram_bw: f(c, "sram_bw", base.sram_bw),
+        power_w: f(c, "power_w", base.power_w),
+        pcie_lanes: u(c, "pcie_lanes", base.pcie_lanes),
+    }
+}
+
 fn apply_node(n: &mut NodeSpec, j: &Json) -> Result<()> {
     n.cards = u(j, "cards", n.cards);
     if let Some(c) = j.get("card") {
-        let d = CardSpec::default();
-        n.card = CardSpec {
-            accel_cores: u(c, "accel_cores", d.accel_cores),
-            peak_tops_int8: f(c, "peak_tops_int8", d.peak_tops_int8),
-            peak_tflops_fp16: f(c, "peak_tflops_fp16", d.peak_tflops_fp16),
-            lpddr_bytes: u(c, "lpddr_bytes", d.lpddr_bytes),
-            lpddr_bw: f(c, "lpddr_bw", d.lpddr_bw),
-            sram_per_core: u(c, "sram_per_core", d.sram_per_core),
-            shared_cache: u(c, "shared_cache", d.shared_cache),
-            sram_bw: f(c, "sram_bw", d.sram_bw),
-            power_w: f(c, "power_w", d.power_w),
-            pcie_lanes: u(c, "pcie_lanes", d.pcie_lanes),
-        };
+        n.card = card_from_json(c, &CardSpec::default());
+    }
+    // vendor-mix node: per-slot overrides on top of the (possibly custom)
+    // base card; each entry names its slot with "card"
+    if let Some(arr) = j.get("card_overrides").and_then(Json::as_arr) {
+        for o in arr {
+            let id = o
+                .get("card")
+                .and_then(Json::as_usize)
+                .context("node.card_overrides entries need a \"card\" slot index")?;
+            let spec = card_from_json(o, &n.card);
+            n.card_overrides.push((id, spec));
+        }
     }
     if let Some(h) = j.get("host") {
         let d = HostSpec::default();
@@ -274,6 +306,38 @@ mod tests {
         // untouched fields keep defaults
         assert_eq!(c.node.card.accel_cores, 12);
         assert!(c.transfers.peer_to_peer);
+    }
+
+    #[test]
+    fn card_overrides_parse_on_top_of_base_card() {
+        let j = Json::parse(
+            r#"{"node": {"cards": 4, "card": {"peak_tops_int8": 30},
+                "card_overrides": [{"card": 3, "peak_tops_int8": 12, "power_w": 7}]}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.node.card_spec(0).peak_tops_int8, 30.0);
+        assert_eq!(c.node.card_spec(3).peak_tops_int8, 12.0);
+        assert_eq!(c.node.card_spec(3).power_w, 7.0);
+        // unnamed fields of the override inherit the custom base card
+        assert_eq!(c.node.card_spec(3).accel_cores, c.node.card.accel_cores);
+        // an override outside the node is rejected
+        let j = Json::parse(
+            r#"{"node": {"cards": 2, "card_overrides": [{"card": 5, "power_w": 7}]}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err());
+        // and so is an entry without a slot index
+        let j =
+            Json::parse(r#"{"node": {"card_overrides": [{"power_w": 7}]}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        // duplicate slots would silently drop the later entry: rejected
+        let j = Json::parse(
+            r#"{"node": {"card_overrides": [{"card": 1, "power_w": 7},
+                                            {"card": 1, "peak_tops_int8": 12}]}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err());
     }
 
     #[test]

@@ -9,18 +9,28 @@
 //!                     `--threads N` keeps N requests in flight; `sim` runs
 //!                     reference numerics on the modeled card clock)
 //!   validate-numerics run the §V-C reference-vs-backend validation
-//!   capacity          print the Fig. 1 capacity series
+//!   fleet             route a mixed recsys/nlp/cv stream across the cards
+//!                     (`--mix 70/20/10 --policy la --replicas 4`); on
+//!                     `--backend sim` compares routing policies on the
+//!                     modeled clock and checks latency-aware vs round-robin
+//!   capacity          print the Fig. 1 capacity series (accelerator side
+//!                     measured by the fleet router on a mixed trace)
 
-use fbia::capacity::{capacity_series, GrowthScenario};
+use fbia::capacity::GrowthScenario;
 use fbia::config::Config;
 use fbia::graph::models::ModelId;
 use fbia::numerics::validate;
 use fbia::numerics::weights::WeightGen;
-use fbia::runtime::Engine;
+use fbia::runtime::{Clock, Engine, SimBackend};
+use fbia::serving::fleet::{
+    plan::plan_capacity, Arrival, FamilyMix, Fleet, FleetConfig, FleetMetrics, Placement,
+    RoutePolicy, TrafficGen,
+};
 use fbia::serving::{CvServer, NlpServer, RecsysServer, WEIGHT_SEED};
 use fbia::sim::simulate_model;
 use fbia::util::cli::Args;
 use fbia::util::error::{bail, err, Result};
+use fbia::util::json::Json;
 use fbia::util::table::{f2, ms, pct, Table};
 use fbia::workloads::{CvGen, NlpGen, RecsysGen};
 use std::path::Path;
@@ -33,10 +43,11 @@ fn main() {
         Some("compile-report") => cmd_compile_report(&args),
         Some("serve") => cmd_serve(&args),
         Some("validate-numerics") => cmd_validate(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("capacity") => cmd_capacity(&args),
         Some("info") | None => cmd_info(&args),
         Some(other) => Err(err!(
-            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, capacity)"
+            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity)"
         )),
     };
     if let Err(e) = result {
@@ -290,16 +301,319 @@ fn cmd_validate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Modeled-clock engine for fleet planning: the (possibly `--config`
+/// overridden) node behind a [`SimBackend`], with the runtime's usual
+/// manifest resolution (AOT artifacts when present, builtin otherwise).
+fn sim_engine(args: &Args, cfg: &Config) -> Result<Arc<Engine>> {
+    let dir = Path::new(args.get_or("artifacts", "artifacts"));
+    Ok(Arc::new(Engine::auto_with_backend(dir, Arc::new(SimBackend::new(cfg.clone())))?))
+}
+
+/// FleetConfig from the shared CLI knobs.
+fn fleet_config(args: &Args) -> Result<FleetConfig> {
+    let d = FleetConfig::default();
+    Ok(FleetConfig {
+        replicas: args.get_usize("replicas", d.replicas).max(1),
+        placement: Placement::parse(args.get_or("placement", d.placement.name()))?,
+        recsys_batch: args.get_usize("batch", d.recsys_batch),
+        recsys_precision: args.get_or("precision", &d.recsys_precision).to_string(),
+        max_queue: args.get_usize("max-queue", d.max_queue).max(1),
+        sla_budget_s: args
+            .get("sla-ms")
+            .map(|v| -> Result<f64> {
+                let x: f64 = v.parse().map_err(|_| err!("--sla-ms must be a number"))?;
+                if !(x > 0.0) {
+                    bail!("--sla-ms must be positive (got {x})");
+                }
+                Ok(x / 1e3)
+            })
+            .transpose()?,
+    })
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    // `--config` describes the node (card count, vendor-mix overrides,
+    // transfer knobs) — that only changes behavior on the modeled clock, so
+    // a sim-backend request goes through the config-aware engine builder;
+    // wall-clock backends keep the shared `engine()` path
+    let cfg = load_config(args)?;
+    let requested = args
+        .get("backend")
+        .map(str::to_string)
+        .or_else(|| std::env::var("FBIA_BACKEND").ok());
+    let eng = if requested.as_deref() == Some("sim") {
+        let e = sim_engine(args, &cfg)?;
+        eprintln!(
+            "[fbia] backend: sim ({} devices, modeled clock, manifest: {})",
+            e.device_count(),
+            e.manifest().dir.display()
+        );
+        e
+    } else {
+        if args.get("config").is_some() {
+            eprintln!("[fbia] note: --config only affects the sim backend's modeled node");
+        }
+        engine(args)?
+    };
+    let fcfg = fleet_config(args)?;
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
+    let arrival = match args.get_or("arrival", "burst") {
+        "burst" => Arrival::Burst,
+        "poisson" => Arrival::Poisson { rate_qps: args.get_f64("rate", 200.0) },
+        other => bail!("unknown arrival pattern '{other}' (burst | poisson)"),
+    };
+    let requests = args.get_usize("requests", 120).max(1);
+    let threads = args.get_usize("threads", 4).max(1);
+    let seed = args.get_u64("seed", 1);
+    let policies: Vec<RoutePolicy> = match args.get_or("policy", "all") {
+        "all" => RoutePolicy::ALL.to_vec(),
+        p => vec![RoutePolicy::parse(p)?],
+    };
+    let modeled = eng.clock() == Clock::Modeled;
+
+    let fleet = Arc::new(Fleet::new(eng.clone(), fcfg.clone())?);
+    let mut traffic =
+        TrafficGen::new(seed, mix, arrival, eng.manifest(), fcfg.recsys_batch)?;
+    let reqs = traffic.take(requests);
+    println!(
+        "fleet: {} cards, {} replicas/family ({}), mix {} over {requests} requests",
+        fleet.replicas().cards,
+        fcfg.replicas,
+        fcfg.placement.name(),
+        mix.label(),
+    );
+
+    // policy sweep: route-only on the modeled clock (deterministic, cheap),
+    // full execution on wall clocks (there is nothing to report otherwise)
+    let mut results: Vec<FleetMetrics> = Vec::new();
+    for &p in &policies {
+        let m = if modeled {
+            fleet.route(&reqs, p)?
+        } else {
+            fleet.serve(reqs.clone(), p, threads)?
+        };
+        results.push(m);
+    }
+    let mut t = Table::new(&[
+        "policy", "admitted", "shed", "shed%", "node QPS", "items/s", "p50", "p99",
+    ]);
+    for m in &results {
+        t.row(&[
+            m.policy.name().to_string(),
+            m.node.completed.to_string(),
+            m.shed.to_string(),
+            pct(m.shed_rate()),
+            format!("{:.1}", m.node_qps()),
+            format!("{:.1}", m.node.items_per_s()),
+            ms(m.node.latency.p50()),
+            ms(m.node.latency.p99()),
+        ]);
+    }
+    t.print();
+
+    // detail breakdown for the requested (or default latency-aware) policy
+    let detail_policy = match args.get("policy") {
+        Some(p) if p != "all" => RoutePolicy::parse(p)?,
+        _ => RoutePolicy::LatencyAware,
+    };
+    if let Some(m) = results.iter().find(|m| m.policy == detail_policy) {
+        let span = m.node.wall_s;
+        println!("\nper-card ({}):", detail_policy.name());
+        let mut tc = Table::new(&["card", "completed", "items", "busy", "util", "p50"]);
+        for c in &m.per_card {
+            tc.row(&[
+                c.card.to_string(),
+                c.metrics.completed.to_string(),
+                c.metrics.items.to_string(),
+                ms(c.busy_s),
+                pct(c.utilization(span)),
+                ms(c.metrics.latency.p50()),
+            ]);
+        }
+        tc.print();
+        println!("\nper-family ({}):", detail_policy.name());
+        let mut tf = Table::new(&["family", "offered", "completed", "shed", "p50", "budget"]);
+        for f in &m.per_family {
+            tf.row(&[
+                f.family.name().to_string(),
+                f.offered.to_string(),
+                f.metrics.completed.to_string(),
+                f.shed.to_string(),
+                ms(f.metrics.latency.p50()),
+                ms(f.family.latency_budget_s()),
+            ]);
+        }
+        tf.print();
+    }
+
+    // the acceptance check this subsystem exists for: cost-aware routing
+    // must buy modeled node throughput, not just shuffle requests
+    let rr = results.iter().find(|m| m.policy == RoutePolicy::RoundRobin);
+    let la = results.iter().find(|m| m.policy == RoutePolicy::LatencyAware);
+    let mut la_beats_rr = None;
+    if let (Some(rr), Some(la)) = (rr, la) {
+        if modeled {
+            let holds = la.node_qps() > rr.node_qps() && la.shed_rate() <= rr.shed_rate();
+            println!(
+                "\nlatency-aware vs round-robin: {:.1} vs {:.1} node QPS at shed {} vs {} -> {}",
+                la.node_qps(),
+                rr.node_qps(),
+                pct(la.shed_rate()),
+                pct(rr.shed_rate()),
+                if holds { "holds" } else { "VIOLATED" }
+            );
+            la_beats_rr = Some(holds);
+        }
+    }
+
+    // execute the detail policy's plan with real numerics (route-only
+    // sweeps above never touch the kernels); skip with --no-execute
+    if modeled && !args.flag("no-execute") {
+        let m = fleet.serve(reqs.clone(), detail_policy, threads)?;
+        println!(
+            "\nexecuted {} admitted requests' numerics on {} ({} workers, modeled clock)",
+            m.node.completed,
+            eng.backend_name(),
+            threads
+        );
+    }
+
+    if let Some(path) = args.get("json") {
+        let json = Json::obj(vec![
+            ("bench", Json::str("fleet_smoke")),
+            ("backend", Json::str(eng.backend_name())),
+            ("clock", Json::str(eng.clock().name())),
+            ("cards", Json::num(fleet.replicas().cards as f64)),
+            ("replicas", Json::num(fcfg.replicas as f64)),
+            ("placement", Json::str(fcfg.placement.name())),
+            ("mix", Json::str(&mix.label())),
+            ("requests", Json::num(requests as f64)),
+            (
+                "latency_aware_beats_round_robin",
+                la_beats_rr.map(Json::Bool).unwrap_or(Json::Null),
+            ),
+            (
+                "policies",
+                Json::arr(
+                    results
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("policy", Json::str(m.policy.name())),
+                                ("node_qps", Json::num(m.node_qps())),
+                                ("items_per_s", Json::num(m.node.items_per_s())),
+                                ("offered", Json::num(m.offered as f64)),
+                                ("completed", Json::num(m.node.completed as f64)),
+                                ("shed", Json::num(m.shed as f64)),
+                                ("shed_rate", Json::num(m.shed_rate())),
+                                ("p50_ms", Json::num(m.node.latency.p50() * 1e3)),
+                                ("p99_ms", Json::num(m.node.latency.p99() * 1e3)),
+                                ("span_s", Json::num(m.node.wall_s)),
+                                (
+                                    "per_card",
+                                    Json::arr(
+                                        m.per_card
+                                            .iter()
+                                            .map(|c| {
+                                                Json::obj(vec![
+                                                    ("card", Json::num(c.card as f64)),
+                                                    (
+                                                        "completed",
+                                                        Json::num(c.metrics.completed as f64),
+                                                    ),
+                                                    ("busy_s", Json::num(c.busy_s)),
+                                                    (
+                                                        "util",
+                                                        Json::num(c.utilization(m.node.wall_s)),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "per_family",
+                                    Json::arr(
+                                        m.per_family
+                                            .iter()
+                                            .map(|f| {
+                                                Json::obj(vec![
+                                                    ("family", Json::str(f.family.name())),
+                                                    ("offered", Json::num(f.offered as f64)),
+                                                    (
+                                                        "completed",
+                                                        Json::num(f.metrics.completed as f64),
+                                                    ),
+                                                    ("shed", Json::num(f.shed as f64)),
+                                                    (
+                                                        "p50_ms",
+                                                        Json::num(
+                                                            f.metrics.latency.p50() * 1e3,
+                                                        ),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path, json.to_string())
+            .map_err(|e| err!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_capacity(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    for (scenario, model) in [
-        (GrowthScenario::recommendation(), ModelId::RecsysComplex),
-        (GrowthScenario::other_ml(), ModelId::XlmR),
+    // Fig. 1's accelerator side now comes from the fleet: a modeled-clock
+    // engine routes a mixed trace and the measured node QPS sizes the
+    // fleet. Capacity planning only makes sense on the sim backend, so a
+    // request for anything else is an error (unknown names keep the strict
+    // valid-names message), never a silent substitution.
+    let requested = args
+        .get("backend")
+        .map(str::to_string)
+        .or_else(|| std::env::var("FBIA_BACKEND").ok());
+    if let Some(b) = requested {
+        if b != "sim" {
+            fbia::runtime::backend_by_name(&b)?;
+            bail!(
+                "fbia capacity sizes fleets on the modeled clock; \
+                 only --backend sim is supported (got '{b}')"
+            );
+        }
+    }
+    let eng = sim_engine(args, &cfg)?;
+    let fcfg = fleet_config(args)?;
+    let requests = args.get_usize("requests", 96).max(1);
+    let policy = match args.get("policy") {
+        Some(p) => RoutePolicy::parse(p)?,
+        None => RoutePolicy::LatencyAware,
+    };
+    // replica placement is mix-independent: build the fleet once and route
+    // both scenarios' traces through it
+    let fleet = Fleet::new(eng, fcfg)?;
+    for (scenario, mix) in [
+        (GrowthScenario::recommendation(), FamilyMix::new(1.0, 0.0, 0.0)?),
+        (GrowthScenario::other_ml(), FamilyMix::new(0.0, 1.0, 1.0)?),
     ] {
-        println!("\nFig. 1 ({}):", scenario.name);
-        let pts = capacity_series(model, &scenario, &cfg)?;
+        let report = plan_capacity(&fleet, mix, policy, &scenario, &cfg, requests)?;
+        println!(
+            "\nFig. 1 ({}): fleet-measured node throughput {:.1} items/s (mix {}, {} policy, shed {})",
+            scenario.name,
+            report.node_items_per_s,
+            report.mix.label(),
+            report.policy.name(),
+            pct(report.shed_rate),
+        );
         let mut t = Table::new(&["quarter", "demand (QPS)", "CPU servers", "accel servers", "growth (norm)"]);
-        for p in &pts {
+        for p in &report.points {
             t.row(&[
                 p.quarter.to_string(),
                 format!("{:.0}", p.demand_qps),

@@ -287,6 +287,12 @@ pub fn dot_interaction(dense: &[f32], sparse: &[f32], batch: usize, d: usize, nu
 }
 
 /// 2D convolution, NHWC x HWIO → NHWC, SAME padding.
+///
+/// Large calls tile their **output channels** across [`kernel_pool`] (same
+/// FLOP threshold as [`fc`]); every output element is computed by exactly
+/// the accumulation loop of [`conv2d_serial`], so results are bit-identical
+/// at any tile count — the CV counterpart of the fc tiling determinism
+/// contract.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d(
     x: &[f32],
@@ -305,15 +311,103 @@ pub fn conv2d(
     let oh = h.div_ceil(stride);
     let ow = wd.div_ceil(stride);
     let cing = cin / groups;
+    let madds = n * oh * ow * cout * kh * kw * cing;
+    let tiles = kernel_pool().threads().min(cout);
+    if madds < FC_PARALLEL_MIN_MADDS || tiles < 2 {
+        return conv2d_serial(x, w, b, n, h, wd, cin, kh, kw, cout, stride, groups);
+    }
+    // Jobs must be 'static: share x/w/b by Arc (one copy per call,
+    // amortized by the O(madds) work this branch only runs for); each tile
+    // computes a contiguous co range and is scattered back channel-wise.
+    let x = Arc::new(x.to_vec());
+    let w = Arc::new(w.to_vec());
+    let b = Arc::new(b.to_vec());
+    let chunk = cout.div_ceil(tiles);
+    let (tx, rx) = mpsc::channel::<(usize, usize, Vec<f32>)>();
+    let mut submitted = 0usize;
+    for t in 0..tiles {
+        let (c0, c1) = (t * chunk, ((t + 1) * chunk).min(cout));
+        if c0 >= c1 {
+            continue;
+        }
+        let (x, w, b, tx) = (Arc::clone(&x), Arc::clone(&w), Arc::clone(&b), tx.clone());
+        kernel_pool().execute(move || {
+            let tile =
+                conv2d_ch_range(&x, &w, &b, n, h, wd, cin, kh, kw, cout, stride, groups, c0, c1);
+            let _ = tx.send((c0, c1, tile));
+        });
+        submitted += 1;
+    }
+    drop(tx);
+    let mut y = vec![0f32; n * oh * ow * cout];
+    let mut received = 0usize;
+    for (c0, c1, tile) in rx.iter() {
+        let span = c1 - c0;
+        for pix in 0..n * oh * ow {
+            y[pix * cout + c0..pix * cout + c1].copy_from_slice(&tile[pix * span..(pix + 1) * span]);
+        }
+        received += 1;
+    }
+    assert_eq!(received, submitted, "conv2d tile worker exited without reporting");
+    y
+}
+
+/// Single-thread reference `conv2d` — the fallback for small convolutions
+/// and the shape the §V-C validation story pins (the tiled path computes
+/// identical bits through [`conv2d_ch_range`]).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_serial(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    groups: usize,
+) -> Vec<f32> {
+    // the full-range tile's layout is exactly the full output
+    conv2d_ch_range(x, w, b, n, h, wd, cin, kh, kw, cout, stride, groups, 0, cout)
+}
+
+/// One output-channel tile `[co0, co1)` of the convolution, laid out
+/// `[n, oh, ow, co1-co0]`. Both the serial and the tiled `conv2d` paths
+/// compute every element through this one loop, which is what makes tiling
+/// bit-exact: per element the accumulation order never changes.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_ch_range(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    groups: usize,
+    co0: usize,
+    co1: usize,
+) -> Vec<f32> {
+    let oh = h.div_ceil(stride);
+    let ow = wd.div_ceil(stride);
+    let cing = cin / groups;
     let coutg = cout / groups;
+    let span = co1 - co0;
     // SAME padding offsets
     let pad_h = ((oh - 1) * stride + kh).saturating_sub(h) / 2;
     let pad_w = ((ow - 1) * stride + kw).saturating_sub(wd) / 2;
-    let mut y = vec![0f32; n * oh * ow * cout];
+    let mut y = vec![0f32; n * oh * ow * span];
     for ni in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
-                for co in 0..cout {
+                for co in co0..co1 {
                     let g = co / coutg;
                     let mut acc = b[co];
                     for ky in 0..kh {
@@ -335,7 +429,7 @@ pub fn conv2d(
                             }
                         }
                     }
-                    y[((ni * oh + oy) * ow + ox) * cout + co] = acc;
+                    y[((ni * oh + oy) * ow + ox) * span + (co - co0)] = acc;
                 }
             }
         }
@@ -548,6 +642,55 @@ mod tests {
         let b = vec![0.0];
         let y = conv2d(&x, &w, &b, 1, 4, 4, 1, 1, 1, 1, 2, 1);
         assert_eq!(y.len(), 4); // 2x2
+    }
+
+    #[test]
+    fn conv2d_parallel_bit_identical_to_serial() {
+        // large enough to cross FC_PARALLEL_MIN_MADDS -> tiled path
+        let (n, h, wd, cin, cout, k, groups) = (1, 16, 16, 64, 64, 3, 1);
+        assert!(n * h * wd * cout * k * k * (cin / groups) >= FC_PARALLEL_MIN_MADDS);
+        let mut rng = Rng::new(21);
+        let x = randv(&mut rng, n * h * wd * cin);
+        let w = randv(&mut rng, k * k * (cin / groups) * cout);
+        let b = randv(&mut rng, cout);
+        let serial = conv2d_serial(&x, &w, &b, n, h, wd, cin, k, k, cout, 1, groups);
+        // bitwise equal, and stable across repeated parallel runs
+        for _ in 0..3 {
+            assert_eq!(conv2d(&x, &w, &b, n, h, wd, cin, k, k, cout, 1, groups), serial);
+        }
+    }
+
+    #[test]
+    fn conv2d_grouped_strided_parallel_matches_serial() {
+        // grouped conv with stride, above the threshold: tile boundaries
+        // cut across groups and the strided output grid
+        let (n, h, wd, cin, cout, k, groups, stride) = (1, 32, 32, 128, 128, 3, 8, 2);
+        let (oh, ow) = (h.div_ceil(stride), wd.div_ceil(stride));
+        assert!(n * oh * ow * cout * k * k * (cin / groups) >= FC_PARALLEL_MIN_MADDS);
+        let mut rng = Rng::new(23);
+        let x = randv(&mut rng, n * h * wd * cin);
+        let w = randv(&mut rng, k * k * (cin / groups) * cout);
+        let b = randv(&mut rng, cout);
+        let serial = conv2d_serial(&x, &w, &b, n, h, wd, cin, k, k, cout, stride, groups);
+        assert_eq!(conv2d(&x, &w, &b, n, h, wd, cin, k, k, cout, stride, groups), serial);
+        // an unaligned channel tile agrees element-wise with the full run
+        let tile = conv2d_ch_range(&x, &w, &b, n, h, wd, cin, k, k, cout, stride, groups, 3, 11);
+        for pix in 0..n * oh * ow {
+            assert_eq!(&tile[pix * 8..(pix + 1) * 8], &serial[pix * cout + 3..pix * cout + 11]);
+        }
+    }
+
+    #[test]
+    fn conv2d_small_falls_back_to_serial() {
+        let (n, h, wd, cin, cout) = (1, 4, 4, 3, 5);
+        let mut rng = Rng::new(25);
+        let x = randv(&mut rng, n * h * wd * cin);
+        let w = randv(&mut rng, 3 * 3 * cin * cout);
+        let b = randv(&mut rng, cout);
+        assert_eq!(
+            conv2d(&x, &w, &b, n, h, wd, cin, 3, 3, cout, 1, 1),
+            conv2d_serial(&x, &w, &b, n, h, wd, cin, 3, 3, cout, 1, 1)
+        );
     }
 
     #[test]

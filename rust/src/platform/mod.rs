@@ -124,7 +124,12 @@ impl Default for NicSpec {
 #[derive(Debug, Clone)]
 pub struct NodeSpec {
     pub cards: usize,
+    /// The base card every slot carries unless overridden below.
     pub card: CardSpec,
+    /// Per-slot card overrides — a *vendor-mix* node (the paper's platform
+    /// was "open to enable a variety of AI accelerators from different
+    /// vendors", §I). `(card index, spec)`; slots not listed use `card`.
+    pub card_overrides: Vec<(usize, CardSpec)>,
     pub host: HostSpec,
     pub pcie: PcieSpec,
     pub nic: NicSpec,
@@ -135,6 +140,7 @@ impl Default for NodeSpec {
         NodeSpec {
             cards: 6,
             card: CardSpec::default(),
+            card_overrides: Vec::new(),
             host: HostSpec::default(),
             pcie: PcieSpec::default(),
             nic: NicSpec::default(),
@@ -143,19 +149,29 @@ impl Default for NodeSpec {
 }
 
 impl NodeSpec {
-    /// Aggregate peak int8 TOPS (paper: 180–270).
+    /// The spec of one card slot: the override when the vendor-mix table
+    /// names it, the node's base card otherwise.
+    pub fn card_spec(&self, id: usize) -> &CardSpec {
+        self.card_overrides
+            .iter()
+            .find(|(i, _)| *i == id)
+            .map(|(_, c)| c)
+            .unwrap_or(&self.card)
+    }
+
+    /// Aggregate peak int8 TOPS (paper: 180–270 on the homogeneous node).
     pub fn total_tops_int8(&self) -> f64 {
-        self.cards as f64 * self.card.peak_tops_int8
+        (0..self.cards).map(|i| self.card_spec(i).peak_tops_int8).sum()
     }
 
     /// Aggregate peak fp16 TFLOPS (paper: 24–36).
     pub fn total_tflops_fp16(&self) -> f64 {
-        self.cards as f64 * self.card.peak_tflops_fp16
+        (0..self.cards).map(|i| self.card_spec(i).peak_tflops_fp16).sum()
     }
 
     /// Total accelerator LPDDR (paper: 96 GB).
     pub fn total_lpddr(&self) -> usize {
-        self.cards * self.card.lpddr_bytes
+        (0..self.cards).map(|i| self.card_spec(i).lpddr_bytes).sum()
     }
 
     /// Memory visible to a model: cards + host (paper: "about 160 GB").
@@ -165,7 +181,8 @@ impl NodeSpec {
 
     /// Accelerator subsystem power: cards + switch (paper: 91 W).
     pub fn accel_power_w(&self) -> f64 {
-        self.cards as f64 * self.card.power_w + self.pcie.switch_power_w
+        (0..self.cards).map(|i| self.card_spec(i).power_w).sum::<f64>()
+            + self.pcie.switch_power_w
     }
 
     /// Peak efficiency, TOPS/W (paper: 2.0–3.0).
@@ -213,6 +230,18 @@ mod tests {
         assert!(n.card_link_bw() < n.host_link_bw());
         // x4 gen3 ~ 3.9 GB/s
         assert!((n.card_link_bw() - 3.94e9).abs() / 3.94e9 < 0.01);
+    }
+
+    #[test]
+    fn card_overrides_build_a_vendor_mix_node() {
+        let mut n = NodeSpec::default();
+        let slow = CardSpec { peak_tops_int8: 15.0, power_w: 7.0, ..CardSpec::default() };
+        n.card_overrides.push((2, slow));
+        assert_eq!(n.card_spec(0).peak_tops_int8, 37.5);
+        assert_eq!(n.card_spec(2).peak_tops_int8, 15.0);
+        // aggregates account for the mixed slot
+        assert!((n.total_tops_int8() - (5.0 * 37.5 + 15.0)).abs() < 1e-9);
+        assert!((n.accel_power_w() - (5.0 * 13.0 + 7.0 + 13.0)).abs() < 1e-9);
     }
 
     #[test]

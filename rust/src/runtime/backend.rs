@@ -50,6 +50,28 @@ impl Clock {
     }
 }
 
+/// Modeled per-run cost of a prepared model on its pinned card, split into
+/// the two resources a run occupies: the card's compute engines and its
+/// PCIe link. [`Clock::Modeled`] backends report both so multi-request
+/// schedulers (the fleet router) can serialize transfer segments on a
+/// shared link occupancy accumulator while compute segments serialize on
+/// the card — folding them into one number would hide exactly the
+/// contention the router models.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModeledCost {
+    /// On-card compute makespan, seconds.
+    pub compute_s: f64,
+    /// PCIe segments (request upload + result download + P2P), seconds.
+    pub transfer_s: f64,
+}
+
+impl ModeledCost {
+    /// The uncontended per-run latency (what a lone request pays).
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.transfer_s
+    }
+}
+
 /// One execution device family behind the common artifact contract.
 pub trait Backend: Send + Sync {
     /// Short identifier ("ref", "sim", "pjrt") for logs and the CLI.
@@ -112,6 +134,12 @@ pub trait PreparedExec: Send + Sync {
     /// on-card compute + download). `Some` only for [`Clock::Modeled`]
     /// backends; shapes are static, so the value is a per-model constant.
     fn modeled_run_s(&self) -> Option<f64> {
+        self.modeled_cost().map(|c| c.total_s())
+    }
+
+    /// The compute/transfer split behind [`PreparedExec::modeled_run_s`].
+    /// `Some` only for [`Clock::Modeled`] backends.
+    fn modeled_cost(&self) -> Option<ModeledCost> {
         None
     }
 }

@@ -38,10 +38,14 @@ pub struct Node {
 }
 
 impl Node {
-    /// Build the device table from a node description.
+    /// Build the device table from a node description. Each slot takes its
+    /// own [`CardSpec`] — [`NodeSpec::card_spec`] resolves the vendor-mix
+    /// overrides, so a heterogeneous node yields devices with different
+    /// compute peaks (and the sim backend clocks each prepared model on
+    /// the spec of the card it is pinned to).
     pub fn new(spec: NodeSpec) -> Node {
         let devices = (0..spec.cards.max(1))
-            .map(|id| Device { id, card: spec.card.clone() })
+            .map(|id| Device { id, card: spec.card_spec(id).clone() })
             .collect();
         Node { spec, devices, rr: AtomicUsize::new(0) }
     }
@@ -119,6 +123,19 @@ mod tests {
         let art = m.get("cv_trunk_b1").unwrap();
         let seq: Vec<usize> = (0..4).map(|_| n.place(art)).collect();
         assert_eq!(seq, vec![0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn vendor_mix_overrides_reach_the_device_table() {
+        use crate::platform::CardSpec;
+        let mut spec = NodeSpec::default();
+        spec.card_overrides
+            .push((1, CardSpec { peak_tops_int8: 10.0, accel_cores: 4, ..CardSpec::default() }));
+        let n = Node::new(spec);
+        assert_eq!(n.device(0).card.peak_tops_int8, 37.5);
+        assert_eq!(n.device(1).card.peak_tops_int8, 10.0);
+        assert_eq!(n.device(1).card.accel_cores, 4);
+        assert_eq!(n.device(2).card.peak_tops_int8, 37.5);
     }
 
     #[test]

@@ -32,7 +32,7 @@ pub mod device;
 pub mod pjrt;
 pub mod sim_backend;
 
-pub use backend::{Backend, Clock, PreparedExec, RefBackend};
+pub use backend::{Backend, Clock, ModeledCost, PreparedExec, RefBackend};
 pub use sim_backend::SimBackend;
 
 use crate::numerics::HostTensor;
@@ -160,6 +160,21 @@ impl Engine {
             );
         }
         Ok(Engine::with_backend(builtin::builtin_manifest(), backend_by_name(&name)?))
+    }
+
+    /// [`Engine::auto_with`]'s manifest resolution (AOT artifacts when
+    /// `dir/manifest.json` exists, the builtin manifest otherwise) paired
+    /// with an explicitly constructed backend — the entry point for
+    /// config-carrying backends (`fbia fleet`/`fbia capacity`
+    /// `--backend sim --config node.json`), so the resolution rule lives
+    /// in one place.
+    pub fn auto_with_backend(dir: &Path, backend: Arc<dyn Backend>) -> Result<Engine> {
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(dir)?
+        } else {
+            builtin::builtin_manifest()
+        };
+        Ok(Engine::with_backend(manifest, backend))
     }
 
     /// Explicit manifest/backend pairing (tests, future backends). The
@@ -313,6 +328,13 @@ impl PreparedModel {
     /// backends); `None` on wall-clock backends.
     pub fn modeled_run_s(&self) -> Option<f64> {
         self.exec.modeled_run_s()
+    }
+
+    /// The compute/transfer split behind [`Self::modeled_run_s`] — what the
+    /// fleet router feeds its card/link occupancy accounting with. `None`
+    /// on wall-clock backends.
+    pub fn modeled_cost(&self) -> Option<ModeledCost> {
+        self.exec.modeled_cost()
     }
 
     /// Zero-copy variant of [`Self::run`]: the serving hot path passes

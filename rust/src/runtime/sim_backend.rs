@@ -27,7 +27,7 @@ use crate::graph::{Graph, NodeId};
 use crate::numerics::HostTensor;
 use crate::platform::{CardSpec, NodeSpec};
 use crate::runtime::artifact::{Artifact, InputKind, Manifest};
-use crate::runtime::backend::{Backend, Clock, PreparedExec, RefBackend};
+use crate::runtime::backend::{Backend, Clock, ModeledCost, PreparedExec, RefBackend};
 use crate::runtime::device::Device;
 use crate::sim::transfer::TransferModel;
 use crate::util::error::{bail, err, Context, Result};
@@ -57,6 +57,20 @@ impl SimBackend {
     /// Modeled seconds for one run of `art` pinned to `device`: request
     /// upload + on-card makespan + result download.
     pub fn model_run_s(&self, manifest: &Arc<Manifest>, art: &Artifact, device: &Device) -> Result<f64> {
+        self.model_cost(manifest, art, device).map(|c| c.total_s())
+    }
+
+    /// [`SimBackend::model_run_s`] with the compute/transfer split kept
+    /// apart — the on-card makespan is costed on the *pinned device's own*
+    /// [`CardSpec`] (vendor-mix nodes give cards different specs), the PCIe
+    /// segments on its link. Multi-request schedulers consume the split so
+    /// link contention can serialize transfers independently of compute.
+    pub fn model_cost(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        device: &Device,
+    ) -> Result<ModeledCost> {
         let (graph, nodes, cores) = self.cost_graph(manifest, art, &device.card)?;
         let plan = parallelize::parallelize(&graph, &device.card, self.cfg.compiler.parallelize);
         let sched = placement::schedule(
@@ -67,8 +81,8 @@ impl SimBackend {
             cores,
             self.cfg.compiler.placement_hints,
         );
-        let transfers = self.transfer_s(manifest, art, device)?;
-        Ok(sched.makespan_s + transfers)
+        let transfer_s = self.transfer_s(manifest, art, device)?;
+        Ok(ModeledCost { compute_s: sched.makespan_s, transfer_s })
     }
 
     /// Build the artifact's cost graph: the op set whose roofline costs make
@@ -266,11 +280,11 @@ impl Backend for SimBackend {
         weights: Vec<(String, HostTensor)>,
         device: &Device,
     ) -> Result<Box<dyn PreparedExec>> {
-        let modeled_s = self
-            .model_run_s(manifest, art, device)
+        let cost = self
+            .model_cost(manifest, art, device)
             .with_context(|| format!("modeling artifact {} on card {}", art.name, device.id))?;
         let exec = self.inner.prepare(manifest, art, weights, device)?;
-        Ok(Box::new(SimPrepared { exec, modeled_s }))
+        Ok(Box::new(SimPrepared { exec, cost }))
     }
 
     fn execute_all(
@@ -314,11 +328,11 @@ fn config_widths(manifest: &Arc<Manifest>, model: &str, key: &str) -> Result<Vec
         .ok_or_else(|| err!("manifest configs.{model}.{key} missing"))
 }
 
-/// Reference execution + a constant modeled latency (shapes are static, so
+/// Reference execution + a constant modeled cost (shapes are static, so
 /// the modeled time is per-model, not per-request).
 struct SimPrepared {
     exec: Box<dyn PreparedExec>,
-    modeled_s: f64,
+    cost: ModeledCost,
 }
 
 impl PreparedExec for SimPrepared {
@@ -326,8 +340,8 @@ impl PreparedExec for SimPrepared {
         self.exec.run(inputs)
     }
 
-    fn modeled_run_s(&self) -> Option<f64> {
-        Some(self.modeled_s)
+    fn modeled_cost(&self) -> Option<ModeledCost> {
+        Some(self.cost)
     }
 }
 
@@ -390,6 +404,37 @@ mod tests {
         let a = b.model_run_s(&m, art, dev).unwrap();
         let c = b.model_run_s(&m, art, dev).unwrap();
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn vendor_mix_card_clocks_with_its_own_spec() {
+        // a card whose override halves the compute peaks must model slower
+        // than its neighbors for the same artifact
+        let mut cfg = Config::default();
+        cfg.node.card_overrides.push((
+            1,
+            crate::platform::CardSpec {
+                peak_tops_int8: cfg.node.card.peak_tops_int8 / 4.0,
+                peak_tflops_fp16: cfg.node.card.peak_tflops_fp16 / 4.0,
+                lpddr_bw: cfg.node.card.lpddr_bw / 4.0,
+                sram_bw: cfg.node.card.sram_bw / 4.0,
+                ..cfg.node.card.clone()
+            },
+        ));
+        let b = SimBackend::new(cfg);
+        let m = Arc::new(builtin_manifest());
+        let node = Node::new(b.config().node.clone());
+        let art = m.get("cv_trunk_b4").unwrap();
+        let fast = b.model_cost(&m, art, node.device(0)).unwrap();
+        let slow = b.model_cost(&m, art, node.device(1)).unwrap();
+        assert!(
+            slow.compute_s > fast.compute_s,
+            "slow card {} vs fast {}",
+            slow.compute_s,
+            fast.compute_s
+        );
+        // total stays the sum of its parts
+        assert_eq!(fast.total_s(), fast.compute_s + fast.transfer_s);
     }
 
     #[test]

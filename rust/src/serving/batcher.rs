@@ -217,6 +217,77 @@ mod tests {
     }
 
     #[test]
+    fn force_pop_with_empty_buckets_returns_none() {
+        // a timeout fire on an empty batcher must be a no-op, not a panic
+        // or an empty batch, in both modes
+        for aware in [true, false] {
+            let mut b = Batcher::new(vec![32, 64], 4, aware);
+            assert!(b.pop(true).is_none());
+            assert!(b.pop(false).is_none());
+            assert!(b.drain().is_empty());
+            // and again after the batcher has cycled through requests
+            b.push(req(10));
+            assert_eq!(b.drain().len(), 1);
+            assert!(b.pop(true).is_none());
+            assert_eq!(b.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn boundary_length_accepted_one_past_rejected() {
+        let mut b = Batcher::new(vec![32, 64], 2, true);
+        b.push(req(64)); // exactly the largest bucket: kept
+        b.push(req(65)); // one past: rejected
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.pending(), 1);
+        let batch = b.pop(true).unwrap();
+        assert_eq!(batch.bucket, 64);
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn unforced_pop_never_releases_sub_max_batches() {
+        for aware in [true, false] {
+            let mut b = Batcher::new(vec![32], 4, aware);
+            for _ in 0..3 {
+                b.push(req(8));
+                assert!(b.pop(false).is_none(), "aware={aware}: released a sub-max batch");
+            }
+            b.push(req(8));
+            let batch = b.pop(false).unwrap();
+            assert_eq!(batch.requests.len(), 4);
+            // forced drain releases leftovers at any size
+            b.push(req(8));
+            assert_eq!(b.pop(true).unwrap().requests.len(), 1);
+        }
+    }
+
+    #[test]
+    fn waste_ordering_length_aware_leq_fifo_per_batch_mix() {
+        // the §VII ordering holds not just in aggregate but for a bimodal
+        // mix engineered to punish FIFO: alternating short/long sentences
+        let mk = |aware: bool| {
+            let mut b = Batcher::new(vec![32, 128], 4, aware);
+            for i in 0..32 {
+                b.push(req(if i % 2 == 0 { 8 } else { 120 }));
+            }
+            let batches = b.drain();
+            let padded: usize = batches.iter().map(|x| x.padded_tokens()).sum();
+            let real: usize = batches.iter().map(|x| x.real_tokens()).sum();
+            (real, padded, batches.len())
+        };
+        let (real_a, padded_a, _) = mk(true);
+        let (real_n, padded_n, _) = mk(false);
+        assert_eq!(real_a, real_n);
+        // FIFO pads every batch to 128 (each holds a long member); aware
+        // keeps the shorts at 32
+        assert!(padded_a < padded_n, "aware {padded_a} !< fifo {padded_n}");
+        let waste_a = 1.0 - real_a as f64 / padded_a as f64;
+        let waste_n = 1.0 - real_n as f64 / padded_n as f64;
+        assert!(waste_a < waste_n, "aware {waste_a} !< fifo {waste_n}");
+    }
+
+    #[test]
     fn pad_batch_shapes() {
         let batch = NlpBatch { requests: vec![req(3), req(5)], bucket: 8 };
         let (ids, lens) = pad_batch(&batch, 4);

@@ -1,0 +1,472 @@
+//! Fleet layer: multi-card request scheduling and replica placement (§IV,
+//! §VI-B) plus sim-driven capacity planning (Fig. 1).
+//!
+//! The paper's node packs six low-power cards behind one host and serves a
+//! *mix* of model families from it — recommendation, NLP and CV traffic
+//! have wildly different per-request costs, so how requests are balanced
+//! across the cards decides how much of the node's capacity a server
+//! actually delivers. This module reproduces that layer on top of the
+//! card-aware runtime:
+//!
+//! * [`replica`] — a replica manager that places N replicas of each model
+//!   family onto cards through [`crate::runtime::Engine::prepare_on`],
+//!   under a [`replica::Placement`] policy (`pack`, `spread`, and
+//!   `sls-affine`, which keeps the DLRM SLS shards card-pinned exactly as
+//!   [`crate::runtime::device::Node::place`] does today — Fig. 6 left);
+//! * [`router`] — dispatches the mixed request stream to replicas under a
+//!   [`router::RoutePolicy`] (round-robin, least-outstanding, or
+//!   latency-aware over the sim backend's modeled per-run costs), with a
+//!   bounded per-card queue and SLA admission control (shed when queue
+//!   depth × modeled cost exceeds the budget). Transfer segments contend on
+//!   a per-card [`crate::sim::transfer::LinkOccupancy`] accumulator, so two
+//!   requests landing on one card serialize their PCIe traffic;
+//! * [`traffic`] — a deterministic mixed-traffic generator
+//!   ([`FleetRequest`] streams with a configurable family mix and arrival
+//!   pattern), replacing the single-family loops the three servers use;
+//! * [`plan`] — Fig. 1 capacity planning driven by the fleet's *measured*
+//!   per-node QPS on the mixed trace instead of a single-model simulation.
+//!
+//! Metrics follow the engine's clock like everywhere else in [`crate::serving`]:
+//! on [`Clock::Modeled`] (`--backend sim`) every latency, span and
+//! utilization figure is computed from the deterministic routing plan — the
+//! numbers are bit-identical across runs and across worker counts — while
+//! the worker pool still executes every admitted request's real numerics.
+
+pub mod plan;
+pub mod replica;
+pub mod router;
+pub mod traffic;
+
+pub use replica::{Placement, ReplicaManager};
+pub use router::{Decision, RoutePlan, RoutePolicy};
+pub use traffic::{Arrival, FamilyMix, TrafficGen};
+
+use crate::graph::models::ModelId;
+use crate::runtime::{Clock, Engine};
+use crate::serving::ServerMetrics;
+use crate::util::error::{bail, err, Result};
+use crate::util::stats::Histogram;
+use crate::util::threadpool::ThreadPool;
+use crate::workloads::{CvRequest, NlpRequest, RecsysRequest};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// The three model families the node serves concurrently (§II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Recsys,
+    Nlp,
+    Cv,
+}
+
+impl Family {
+    pub const ALL: [Family; 3] = [Family::Recsys, Family::Nlp, Family::Cv];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Recsys => "recsys",
+            Family::Nlp => "nlp",
+            Family::Cv => "cv",
+        }
+    }
+
+    /// Stable index into per-family arrays (mix shares, round-robin
+    /// cursors, metric accumulators).
+    pub fn index(self) -> usize {
+        match self {
+            Family::Recsys => 0,
+            Family::Nlp => 1,
+            Family::Cv => 2,
+        }
+    }
+
+    /// The Table I model this family's SLA derives from.
+    pub fn model_id(self) -> ModelId {
+        match self {
+            Family::Recsys => ModelId::RecsysComplex,
+            Family::Nlp => ModelId::XlmR,
+            Family::Cv => ModelId::ResNeXt101,
+        }
+    }
+
+    /// Table I latency budget for the family, seconds.
+    pub fn latency_budget_s(self) -> f64 {
+        self.model_id().latency_budget_s()
+    }
+}
+
+/// One request of the mixed stream, stamped with its arrival time (the
+/// router consumes streams in nondecreasing arrival order).
+#[derive(Debug, Clone)]
+pub enum FleetRequest {
+    Recsys { arrival_s: f64, req: RecsysRequest },
+    Nlp { arrival_s: f64, req: NlpRequest },
+    Cv { arrival_s: f64, req: CvRequest },
+}
+
+impl FleetRequest {
+    pub fn family(&self) -> Family {
+        match self {
+            FleetRequest::Recsys { .. } => Family::Recsys,
+            FleetRequest::Nlp { .. } => Family::Nlp,
+            FleetRequest::Cv { .. } => Family::Cv,
+        }
+    }
+
+    pub fn arrival_s(&self) -> f64 {
+        match self {
+            FleetRequest::Recsys { arrival_s, .. }
+            | FleetRequest::Nlp { arrival_s, .. }
+            | FleetRequest::Cv { arrival_s, .. } => *arrival_s,
+        }
+    }
+
+    /// Items this request carries (recsys: its batch rows; nlp: one
+    /// sentence; cv: its image batch).
+    pub fn items(&self) -> usize {
+        match self {
+            FleetRequest::Recsys { req, .. } => {
+                req.dense.shape().first().copied().unwrap_or(1)
+            }
+            FleetRequest::Nlp { .. } => 1,
+            FleetRequest::Cv { req, .. } => req.image.shape().first().copied().unwrap_or(1),
+        }
+    }
+}
+
+/// Fleet-wide knobs: how many replicas to place, where, and when to shed.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Replicas per family (recsys dense partitions, NLP nets, CV nets).
+    /// The DLRM SLS shards are shared by every recsys replica.
+    pub replicas: usize,
+    pub placement: Placement,
+    /// DLRM serving batch (must match a compiled sls/dense variant).
+    pub recsys_batch: usize,
+    /// DLRM dense precision ("int8" | "fp32").
+    pub recsys_precision: String,
+    /// Bounded per-card queue: a request whose primary card already holds
+    /// this many outstanding segments is shed.
+    pub max_queue: usize,
+    /// SLA admission control: shed when (queue depth + 1) × modeled request
+    /// cost exceeds this budget. `None` disables the SLA check (the
+    /// bounded queue still applies).
+    pub sla_budget_s: Option<f64>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            // four replicas per family on the six-card node straddle the
+            // SLS-heavy and light cards, which is exactly where routing
+            // policy starts to matter
+            replicas: 4,
+            placement: Placement::SlsAffine,
+            recsys_batch: 16,
+            recsys_precision: "int8".to_string(),
+            max_queue: 1024,
+            sla_budget_s: None,
+        }
+    }
+}
+
+/// Per-family slice of a fleet run.
+#[derive(Debug, Clone)]
+pub struct FamilyMetrics {
+    pub family: Family,
+    pub metrics: ServerMetrics,
+    pub offered: usize,
+    pub shed: usize,
+}
+
+/// Per-card slice of a fleet run. `busy_s` is the compute time the card
+/// spent on this run's segments (modeled on the sim clock); requests are
+/// attributed to their *primary* card (the dense card for recsys).
+#[derive(Debug, Clone)]
+pub struct CardMetrics {
+    pub card: usize,
+    pub metrics: ServerMetrics,
+    pub busy_s: f64,
+}
+
+impl CardMetrics {
+    /// Fraction of the run span the card's compute was occupied.
+    pub fn utilization(&self, span_s: f64) -> f64 {
+        if span_s <= 0.0 {
+            0.0
+        } else {
+            (self.busy_s / span_s).min(1.0)
+        }
+    }
+}
+
+/// Everything a fleet run reports: node totals plus the per-family and
+/// per-card breakdowns, and the shed accounting
+/// (`node.completed + shed == offered` always holds).
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    pub policy: RoutePolicy,
+    pub node: ServerMetrics,
+    pub per_family: Vec<FamilyMetrics>,
+    pub per_card: Vec<CardMetrics>,
+    pub offered: usize,
+    pub shed: usize,
+}
+
+impl FleetMetrics {
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.offered.max(1) as f64
+    }
+
+    pub fn node_qps(&self) -> f64 {
+        self.node.qps()
+    }
+}
+
+/// The fleet: a replica set over the engine's cards plus routing knobs.
+pub struct Fleet {
+    engine: Arc<Engine>,
+    replicas: ReplicaManager,
+    cfg: FleetConfig,
+}
+
+impl Fleet {
+    /// Place the replica set onto the engine's node per `cfg.placement`.
+    pub fn new(engine: Arc<Engine>, cfg: FleetConfig) -> Result<Fleet> {
+        let replicas = ReplicaManager::new(&engine, &cfg)?;
+        Ok(Fleet { engine, replicas, cfg })
+    }
+
+    pub fn clock(&self) -> Clock {
+        self.engine.clock()
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn replicas(&self) -> &ReplicaManager {
+        &self.replicas
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Route the stream without executing any numerics — the sim-driven
+    /// planning path (capacity sizing, policy sweeps). Requires the
+    /// modeled clock: on a wall-clock backend there is nothing truthful to
+    /// report without running the requests.
+    pub fn route(&self, reqs: &[FleetRequest], policy: RoutePolicy) -> Result<FleetMetrics> {
+        if self.engine.clock() != Clock::Modeled {
+            bail!(
+                "fleet route-only planning needs a modeled clock (--backend sim); \
+                 use serve() on wall-clock backends"
+            );
+        }
+        let plan = router::plan(&self.replicas, reqs, policy, &self.cfg)?;
+        let latencies: Vec<f64> = plan
+            .planned
+            .iter()
+            .filter_map(|p| p.route.as_ref().map(|r| r.latency_s))
+            .collect();
+        Ok(self.assemble(&plan, &latencies, plan.span_s, &plan.busy_s, policy))
+    }
+
+    /// Serve the stream: plan the routing, then execute every admitted
+    /// request's real numerics with `workers` in flight. On the modeled
+    /// clock all metrics come from the plan (deterministic across runs and
+    /// worker counts); on wall clocks they are measured around each
+    /// request's execution.
+    pub fn serve(
+        self: &Arc<Self>,
+        reqs: Vec<FleetRequest>,
+        policy: RoutePolicy,
+        workers: usize,
+    ) -> Result<FleetMetrics> {
+        let plan = router::plan(&self.replicas, &reqs, policy, &self.cfg)?;
+        let (measured, measured_span) = self.execute(Arc::new(reqs), &plan, workers.max(1))?;
+        match self.engine.clock() {
+            Clock::Modeled => {
+                let latencies: Vec<f64> = plan
+                    .planned
+                    .iter()
+                    .filter_map(|p| p.route.as_ref().map(|r| r.latency_s))
+                    .collect();
+                Ok(self.assemble(&plan, &latencies, plan.span_s, &plan.busy_s, policy))
+            }
+            Clock::Wall => {
+                // attribute measured time to each request's primary card
+                let mut busy = vec![0.0f64; self.replicas.cards];
+                let mut k = 0usize;
+                for p in &plan.planned {
+                    if let Some(r) = &p.route {
+                        busy[r.card] += measured[k];
+                        k += 1;
+                    }
+                }
+                Ok(self.assemble(&plan, &measured, measured_span, &busy, policy))
+            }
+        }
+    }
+
+    /// Build the metric structure from per-admitted-request latencies (in
+    /// plan order), the run span, and per-card busy time.
+    fn assemble(
+        &self,
+        plan: &RoutePlan,
+        latencies: &[f64],
+        span_s: f64,
+        busy_s: &[f64],
+        policy: RoutePolicy,
+    ) -> FleetMetrics {
+        let clock = self.engine.clock();
+        let cards = self.replicas.cards;
+        let mk = || ServerMetrics {
+            latency: Histogram::latency(),
+            completed: 0,
+            items: 0,
+            wall_s: span_s,
+            clock,
+        };
+        let mut node = mk();
+        let mut families: Vec<FamilyMetrics> = Family::ALL
+            .iter()
+            .map(|&f| FamilyMetrics { family: f, metrics: mk(), offered: 0, shed: 0 })
+            .collect();
+        let mut per_card: Vec<CardMetrics> = (0..cards)
+            .map(|c| CardMetrics { card: c, metrics: mk(), busy_s: busy_s[c] })
+            .collect();
+        let mut k = 0usize;
+        for p in &plan.planned {
+            let fam = &mut families[p.family.index()];
+            fam.offered += 1;
+            match &p.route {
+                None => fam.shed += 1,
+                Some(r) => {
+                    let dt = latencies[k];
+                    k += 1;
+                    node.latency.add(dt);
+                    node.completed += 1;
+                    node.items += p.items;
+                    fam.metrics.latency.add(dt);
+                    fam.metrics.completed += 1;
+                    fam.metrics.items += p.items;
+                    let card = &mut per_card[r.card];
+                    card.metrics.latency.add(dt);
+                    card.metrics.completed += 1;
+                    card.metrics.items += p.items;
+                }
+            }
+        }
+        let offered = plan.planned.len();
+        let shed = offered - node.completed;
+        FleetMetrics { policy, node, per_family: families, per_card, offered, shed }
+    }
+
+    /// Execute the admitted requests' numerics over a worker pool; returns
+    /// the measured per-request seconds (in plan/admission order) and the
+    /// wall span of the whole fan-out.
+    fn execute(
+        self: &Arc<Self>,
+        reqs: Arc<Vec<FleetRequest>>,
+        plan: &RoutePlan,
+        workers: usize,
+    ) -> Result<(Vec<f64>, f64)> {
+        // (request index, decision) for every admitted request, plan order
+        let admitted: Arc<Vec<(usize, Decision)>> = Arc::new(
+            plan.planned
+                .iter()
+                .enumerate()
+                .filter_map(|(i, p)| p.route.as_ref().map(|r| (i, r.decision)))
+                .collect(),
+        );
+        let n = admitted.len();
+        if n == 0 {
+            return Ok((Vec::new(), 0.0));
+        }
+        let wall0 = Instant::now();
+        let pool = ThreadPool::new(workers.min(n));
+        let next = Arc::new(AtomicUsize::new(0));
+        let failed = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Result<Vec<(usize, f64)>>>();
+        for _ in 0..workers.min(n) {
+            let me = Arc::clone(self);
+            let reqs = Arc::clone(&reqs);
+            let admitted = Arc::clone(&admitted);
+            let next = Arc::clone(&next);
+            let failed = Arc::clone(&failed);
+            let tx = tx.clone();
+            pool.execute(move || {
+                let mut out = Vec::new();
+                let res = loop {
+                    if failed.load(Ordering::Relaxed) {
+                        break Ok(());
+                    }
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= n {
+                        break Ok(());
+                    }
+                    let (i, decision) = admitted[k];
+                    let t0 = Instant::now();
+                    match me.execute_one(&reqs[i], decision) {
+                        Ok(()) => out.push((k, t0.elapsed().as_secs_f64())),
+                        Err(e) => {
+                            failed.store(true, Ordering::Relaxed);
+                            break Err(e);
+                        }
+                    }
+                };
+                let _ = tx.send(res.map(|()| out));
+            });
+        }
+        drop(tx);
+        let mut measured = vec![0.0f64; n];
+        let mut seen = 0usize;
+        let mut first_err = None;
+        for res in rx.iter() {
+            match res {
+                Ok(chunk) => {
+                    seen += chunk.len();
+                    for (k, dt) in chunk {
+                        measured[k] = dt;
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if seen != n {
+            return Err(err!(
+                "fleet worker exited without reporting ({seen} of {n} requests executed)"
+            ));
+        }
+        Ok((measured, wall0.elapsed().as_secs_f64()))
+    }
+
+    /// Run one admitted request's numerics on its assigned replica.
+    fn execute_one(&self, req: &FleetRequest, decision: Decision) -> Result<()> {
+        match (req, decision) {
+            (FleetRequest::Recsys { req, .. }, Decision::Recsys { replica }) => {
+                self.replicas.run_recsys(replica, req).map(|_| ())
+            }
+            (FleetRequest::Nlp { req, .. }, Decision::Nlp { replica, bucket }) => {
+                self.replicas.run_nlp(replica, bucket, req).map(|_| ())
+            }
+            (FleetRequest::Cv { req, .. }, Decision::Cv { replica }) => {
+                self.replicas.run_cv(replica, req).map(|_| ())
+            }
+            (r, d) => Err(err!(
+                "fleet plan routed a {} request with a mismatched decision {d:?}",
+                r.family().name()
+            )),
+        }
+    }
+}

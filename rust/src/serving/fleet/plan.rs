@@ -1,0 +1,128 @@
+//! Sim-driven capacity planning (Fig. 1) over the fleet router.
+//!
+//! The paper's capacity story is "how many of these servers does a demand
+//! curve require"; answering it honestly needs the throughput one node
+//! actually delivers under the *mixed* production trace — replica
+//! placement, routing policy and cross-request contention included — not a
+//! single model's isolated simulation. This module measures exactly that:
+//! route a deterministic mixed trace through the fleet on the modeled
+//! clock, take the node's measured QPS, and feed it into the shared Fig. 1
+//! series arithmetic ([`crate::capacity::series_from_qps`]).
+
+use crate::capacity::{cpu_qps_per_server, series_from_qps, CapacityPoint, GrowthScenario};
+use crate::config::Config;
+use crate::serving::fleet::{Arrival, Family, FamilyMix, Fleet, RoutePolicy, TrafficGen};
+use crate::util::error::{bail, Result};
+
+/// Seed for the planning trace — fixed so capacity numbers are
+/// reproducible run to run.
+pub const PLAN_TRAFFIC_SEED: u64 = 0xF1EE_7001;
+
+/// One fleet-measured capacity projection.
+#[derive(Debug, Clone)]
+pub struct FleetCapacityReport {
+    pub mix: FamilyMix,
+    pub policy: RoutePolicy,
+    /// Measured node throughput on the mixed trace, **items**/sec — same
+    /// unit as the CPU side and the original Fig. 1 arithmetic (a recsys
+    /// request carries a whole batch of items).
+    pub node_items_per_s: f64,
+    /// Shed fraction of the measuring run (0 under the default admission
+    /// knobs — a shedding node is not delivering its nominal capacity).
+    pub shed_rate: f64,
+    pub points: Vec<CapacityPoint>,
+}
+
+/// Measure one node's mixed-trace throughput through the fleet router and
+/// project the Fig. 1 series from it. Takes a prebuilt [`Fleet`] so mix /
+/// scenario sweeps pay replica placement once; requires a modeled-clock
+/// engine (`--backend sim`). The trace is routed, not executed, so sweeps
+/// stay cheap.
+pub fn plan_capacity(
+    fleet: &Fleet,
+    mix: FamilyMix,
+    policy: RoutePolicy,
+    scenario: &GrowthScenario,
+    cfg: &Config,
+    requests: usize,
+) -> Result<FleetCapacityReport> {
+    let mut traffic = TrafficGen::new(
+        PLAN_TRAFFIC_SEED,
+        mix,
+        Arrival::Burst,
+        fleet.engine().manifest(),
+        fleet.config().recsys_batch,
+    )?;
+    let reqs = traffic.take(requests.max(1));
+    let metrics = fleet.route(&reqs, policy)?;
+    // both sides of the series in items/s (the original Fig. 1 unit):
+    // a fleet recsys request carries recsys_batch items, nlp/cv carry one
+    let node_items_per_s = metrics.node.items_per_s();
+    if !(node_items_per_s > 0.0) {
+        bail!("fleet measured no node throughput ({} requests admitted)", metrics.node.completed);
+    }
+    let cpu = cpu_mixed_items_per_s(mix, cfg, fleet.config().recsys_batch);
+    Ok(FleetCapacityReport {
+        mix,
+        policy,
+        node_items_per_s,
+        shed_rate: metrics.shed_rate(),
+        points: series_from_qps(scenario, node_items_per_s, cpu),
+    })
+}
+
+/// CPU-only per-server throughput on the same mix, **items**/sec: the
+/// item-weighted harmonic mean of the per-family CPU rates. A mixed
+/// request stream delivers `share_f × items_f` items per request drawn, at
+/// `items_f / rate_f` seconds each family — so mixed items/s is total
+/// items over total time. `recsys_items` is the recsys batch the fleet
+/// trace carries per request (nlp/cv requests carry one item).
+pub fn cpu_mixed_items_per_s(mix: FamilyMix, cfg: &Config, recsys_items: usize) -> f64 {
+    let mut items_per_req = 0.0;
+    let mut s_per_req = 0.0;
+    for f in Family::ALL {
+        let share = mix.share(f);
+        if share <= 0.0 {
+            continue;
+        }
+        let items = match f {
+            Family::Recsys => recsys_items.max(1) as f64,
+            Family::Nlp | Family::Cv => 1.0,
+        };
+        let rate = cpu_qps_per_server(f.model_id(), cfg);
+        if rate > 0.0 {
+            items_per_req += share * items;
+            s_per_req += share * items / rate;
+        }
+    }
+    if s_per_req > 0.0 {
+        items_per_req / s_per_req
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_mixed_items_per_s_is_between_the_family_extremes() {
+        let cfg = Config::default();
+        let mix = FamilyMix::default();
+        let mixed = cpu_mixed_items_per_s(mix, &cfg, 16);
+        let each: Vec<f64> =
+            Family::ALL.iter().map(|f| cpu_qps_per_server(f.model_id(), &cfg)).collect();
+        let lo = each.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = each.iter().cloned().fold(0.0, f64::max);
+        assert!(mixed >= lo && mixed <= hi, "mixed {mixed} outside [{lo}, {hi}]");
+        // a pure-recsys mix degenerates to the recsys items/s, independent
+        // of the per-request item count
+        for items in [1, 16, 64] {
+            let pure =
+                cpu_mixed_items_per_s(FamilyMix::new(1.0, 0.0, 0.0).unwrap(), &cfg, items);
+            let recsys = cpu_qps_per_server(Family::Recsys.model_id(), &cfg);
+            assert!((pure - recsys).abs() / recsys < 1e-12, "items {items}");
+        }
+    }
+}

@@ -1,0 +1,395 @@
+//! Replica manager: place N replicas of each model family onto cards.
+//!
+//! The paper's node serves every family at once: the DLRM SLS shards are
+//! model-parallel (one shard per card, Fig. 6 left) while dense partitions
+//! and whole-model NLP/CV nets replicate data-parallel across cards
+//! (§VI-B). [`ReplicaManager`] reproduces both axes through
+//! [`crate::runtime::Engine::prepare_on`]: one shared SLS shard set, plus
+//! `replicas` independently placed copies of the DLRM dense partition, the
+//! XLM-R bucket nets and the CV trunk. Every prepared model carries its
+//! modeled per-run cost split ([`ModeledCost`]) so the router can price
+//! candidate placements; on wall-clock backends a uniform placeholder cost
+//! keeps the planner functional (metrics are then measured, not modeled).
+
+use crate::runtime::artifact::table_index;
+use crate::runtime::{Clock, Engine, ModeledCost, PreparedModel};
+use crate::numerics::weights::WeightGen;
+use crate::numerics::HostTensor;
+use crate::serving::batcher::{bucket_for, pad_batch, NlpBatch};
+use crate::serving::fleet::FleetConfig;
+use crate::serving::WEIGHT_SEED;
+use crate::util::error::{bail, err, Context, Result};
+use crate::workloads::{CvRequest, NlpRequest, RecsysRequest};
+use std::sync::Arc;
+
+/// Placeholder planning cost on wall-clock backends: uniform per run, so
+/// the policies degrade to queue balancing (the honest thing to do without
+/// a cost model).
+const WALL_FALLBACK: ModeledCost = ModeledCost { compute_s: 1e-3, transfer_s: 0.0 };
+
+/// Where replicas land on the node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Everything on card 0 — the degenerate baseline that shows why
+    /// placement matters at all.
+    Pack,
+    /// One global round-robin over all cards, SLS shards included (shards
+    /// lose their card affinity).
+    Spread,
+    /// SLS shard `k` stays pinned to card `k mod N` exactly like
+    /// [`crate::runtime::device::Node::place`] (Fig. 6 left); everything
+    /// else round-robins. The production default.
+    SlsAffine,
+}
+
+impl Placement {
+    pub const ALL: [Placement; 3] = [Placement::Pack, Placement::Spread, Placement::SlsAffine];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Pack => "pack",
+            Placement::Spread => "spread",
+            Placement::SlsAffine => "sls-affine",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Placement> {
+        Ok(match s {
+            "pack" => Placement::Pack,
+            "spread" => Placement::Spread,
+            "sls-affine" | "affine" => Placement::SlsAffine,
+            other => bail!(
+                "unknown placement '{other}' (valid: pack, spread, sls-affine)"
+            ),
+        })
+    }
+}
+
+/// One DLRM SLS shard, shared by all recsys replicas.
+pub struct SlsShard {
+    /// Global table ids this shard owns.
+    pub tables: Vec<usize>,
+    pub card: usize,
+    pub cost: ModeledCost,
+    model: Arc<PreparedModel>,
+}
+
+/// One DLRM dense-partition replica.
+pub struct RecsysReplica {
+    pub card: usize,
+    pub cost: ModeledCost,
+    model: Arc<PreparedModel>,
+}
+
+/// One XLM-R replica: every compiled batch-1 bucket net on one card.
+pub struct NlpReplica {
+    pub card: usize,
+    /// (bucket, per-run cost, net), ascending by bucket.
+    nets: Vec<(usize, ModeledCost, Arc<PreparedModel>)>,
+}
+
+impl NlpReplica {
+    /// Cost of serving one sentence in `bucket` on this replica (the
+    /// stored value is the modeled cost on modeled clocks, the uniform
+    /// placeholder on wall clocks). `None` when the replica has no net for
+    /// the bucket — the router treats that as unserviceable rather than
+    /// silently pricing it with a placeholder.
+    pub fn cost(&self, bucket: usize) -> Option<ModeledCost> {
+        self.nets.iter().find(|(b, _, _)| *b == bucket).map(|(_, c, _)| *c)
+    }
+}
+
+/// One CV trunk replica (batch 1).
+pub struct CvReplica {
+    pub card: usize,
+    pub cost: ModeledCost,
+    model: Arc<PreparedModel>,
+}
+
+/// The placed replica set.
+pub struct ReplicaManager {
+    pub placement: Placement,
+    /// Cards on the node (replica `card` fields index this range).
+    pub cards: usize,
+    pub sls: Vec<SlsShard>,
+    pub recsys: Vec<RecsysReplica>,
+    pub nlp: Vec<NlpReplica>,
+    pub cv: Vec<CvReplica>,
+    /// Compiled NLP sequence buckets, ascending.
+    pub buckets: Vec<usize>,
+    pub recsys_batch: usize,
+    num_tables: usize,
+    embed_dim: usize,
+    d_model: usize,
+}
+
+/// Deterministic placement cursor shared by every non-pinned replica.
+struct Placer {
+    placement: Placement,
+    cards: usize,
+    cursor: usize,
+}
+
+impl Placer {
+    fn next(&mut self, shard: Option<usize>) -> usize {
+        match (self.placement, shard) {
+            (Placement::Pack, _) => 0,
+            (Placement::SlsAffine, Some(k)) => k % self.cards,
+            _ => {
+                let c = self.cursor % self.cards;
+                self.cursor += 1;
+                c
+            }
+        }
+    }
+}
+
+impl ReplicaManager {
+    /// Load + place the full replica set for `cfg` on the engine's node.
+    pub fn new(engine: &Arc<Engine>, cfg: &FleetConfig) -> Result<ReplicaManager> {
+        if cfg.replicas == 0 {
+            bail!("fleet needs at least one replica per family");
+        }
+        let cards = engine.device_count();
+        let modeled = engine.clock() == Clock::Modeled;
+        let mut placer = Placer { placement: cfg.placement, cards, cursor: 0 };
+        let manifest = engine.manifest();
+        let num_tables = manifest.config_usize("dlrm", "num_tables")?;
+        let embed_dim = manifest.config_usize("dlrm", "embed_dim")?;
+        let d_model = manifest.config_usize("xlmr", "d_model")?;
+
+        // cost of a prepared model, with the wall-clock fallback; a modeled
+        // clock without a cost is an invalid state, same guard as the servers
+        let cost_of = |m: &PreparedModel| -> Result<ModeledCost> {
+            match m.modeled_cost() {
+                Some(c) => Ok(c),
+                None if modeled => Err(err!(
+                    "backend reports a modeled clock but {} has no modeled cost",
+                    m.art.name
+                )),
+                None => Ok(WALL_FALLBACK),
+            }
+        };
+
+        // --- DLRM SLS shards (shared, one per compiled shard) ------------
+        let mut shard_arts: Vec<_> = manifest
+            .select("dlrm", "sls")
+            .into_iter()
+            .filter(|a| a.batch == cfg.recsys_batch)
+            .cloned()
+            .collect();
+        if shard_arts.is_empty() {
+            bail!("no dlrm sls shards for batch {} in the manifest", cfg.recsys_batch);
+        }
+        shard_arts.sort_by_key(|a| a.shard.unwrap_or(usize::MAX));
+        let mut sls = Vec::new();
+        for art in shard_arts {
+            let shard_idx = art
+                .shard
+                .ok_or_else(|| err!("sls artifact {} carries no shard index", art.name))?;
+            let tables: Vec<usize> = art
+                .inputs
+                .iter()
+                .filter(|s| s.name.starts_with("idx"))
+                .map(|s| table_index(&s.name, "idx"))
+                .collect::<Result<_>>()
+                .with_context(|| format!("artifact {}", art.name))?;
+            if tables.is_empty() {
+                bail!("sls artifact {} declares no idx inputs", art.name);
+            }
+            // same load-time guard as RecsysServer::new: a shard naming a
+            // table past the model's count must fail here, not panic in
+            // run_recsys's per-table indexing
+            if let Some(&t) = tables.iter().find(|&&t| t >= num_tables) {
+                bail!(
+                    "sls artifact {} references table {t} but configs.dlrm.num_tables is \
+                     {num_tables}",
+                    art.name
+                );
+            }
+            let card = placer.next(Some(shard_idx));
+            let weights = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+            let model = Arc::new(engine.prepare_on(art, weights, card)?);
+            let cost = cost_of(&model)?;
+            sls.push(SlsShard { tables, card, cost, model });
+        }
+
+        // --- DLRM dense replicas -----------------------------------------
+        let dense_name =
+            format!("dlrm_dense_b{}_{}", cfg.recsys_batch, cfg.recsys_precision);
+        let dense_art = manifest.get(&dense_name)?.clone();
+        let mut recsys = Vec::new();
+        for _ in 0..cfg.replicas {
+            let card = placer.next(None);
+            let weights = WeightGen::new(WEIGHT_SEED).weights_for(&dense_art);
+            let model = Arc::new(engine.prepare_on(dense_art.clone(), weights, card)?);
+            let cost = cost_of(&model)?;
+            recsys.push(RecsysReplica { card, cost, model });
+        }
+
+        // --- XLM-R replicas (batch-1 bucket nets) ------------------------
+        let mut nlp_arts: Vec<_> = manifest
+            .select("xlmr", "full")
+            .into_iter()
+            .filter(|a| a.batch == 1)
+            .cloned()
+            .collect();
+        if nlp_arts.is_empty() {
+            bail!("no batch-1 xlmr artifacts in the manifest");
+        }
+        nlp_arts.sort_by_key(|a| a.seq.unwrap_or(usize::MAX));
+        let mut buckets = Vec::new();
+        for art in &nlp_arts {
+            let seq = art.seq.ok_or_else(|| err!("xlmr artifact {} missing seq", art.name))?;
+            if !buckets.contains(&seq) {
+                buckets.push(seq);
+            }
+        }
+        let mut nlp = Vec::new();
+        for _ in 0..cfg.replicas {
+            let card = placer.next(None);
+            let mut nets = Vec::new();
+            for art in &nlp_arts {
+                let weights = WeightGen::new(WEIGHT_SEED).weights_for(art);
+                let model = Arc::new(engine.prepare_on(art.clone(), weights, card)?);
+                let cost = cost_of(&model)?;
+                nets.push((art.seq.unwrap_or(0), cost, model));
+            }
+            nlp.push(NlpReplica { card, nets });
+        }
+
+        // --- CV replicas (batch 1) ---------------------------------------
+        let cv_art = manifest
+            .select("cv", "full")
+            .into_iter()
+            .find(|a| a.batch == 1)
+            .cloned()
+            .ok_or_else(|| err!("no batch-1 cv artifact in the manifest"))?;
+        let mut cv = Vec::new();
+        for _ in 0..cfg.replicas {
+            let card = placer.next(None);
+            let weights = WeightGen::new(WEIGHT_SEED).weights_for(&cv_art);
+            let model = Arc::new(engine.prepare_on(cv_art.clone(), weights, card)?);
+            let cost = cost_of(&model)?;
+            cv.push(CvReplica { card, cost, model });
+        }
+
+        Ok(ReplicaManager {
+            placement: cfg.placement,
+            cards,
+            sls,
+            recsys,
+            nlp,
+            cv,
+            buckets,
+            recsys_batch: cfg.recsys_batch,
+            num_tables,
+            embed_dim,
+            d_model,
+        })
+    }
+
+    /// Modeled cost of one whole recsys request on dense replica `ri`: the
+    /// SLS stage is the slowest shard (cards run concurrently, Fig. 6
+    /// left), then the dense partition.
+    pub fn recsys_request_cost_s(&self, ri: usize) -> f64 {
+        let sls = self.sls.iter().map(|s| s.cost.total_s()).fold(0.0, f64::max);
+        sls + self.recsys[ri].cost.total_s()
+    }
+
+    /// Smallest compiled bucket that fits a sentence of `len` tokens.
+    pub fn nlp_bucket_for(&self, len: usize) -> Option<usize> {
+        bucket_for(len, &self.buckets)
+    }
+
+    /// Full DLRM inference on dense replica `ri` (sequential shard walk —
+    /// the fleet's parallelism is across requests, not within one). Shares
+    /// the server path's marshalling/scatter helpers so the two request
+    /// paths cannot diverge.
+    pub fn run_recsys(&self, ri: usize, req: &RecsysRequest) -> Result<HostTensor> {
+        crate::serving::check_recsys_table_arity(req, self.num_tables)?;
+        let b = self.recsys_batch;
+        let d = self.embed_dim;
+        let mut sparse = vec![0f32; b * self.num_tables * d];
+        for shard in &self.sls {
+            let out = shard.model.run_refs(&crate::serving::sls_shard_inputs(req, &shard.tables))?;
+            let pooled = out[0].as_f32().ok_or_else(|| err!("sls output not f32"))?;
+            crate::serving::scatter_sls_shard(
+                &mut sparse,
+                pooled,
+                &shard.tables,
+                b,
+                self.num_tables,
+                d,
+            );
+        }
+        let sparse = HostTensor::f32(sparse, &[b, self.num_tables, d]);
+        let mut out = self.recsys[ri]
+            .model
+            .run_refs(&[&req.dense, &sparse])
+            .context("dense partition")?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// One sentence through replica `ri`'s net for `bucket`; returns the
+    /// pooled embedding.
+    pub fn run_nlp(&self, ri: usize, bucket: usize, req: &NlpRequest) -> Result<Vec<f32>> {
+        let replica = &self.nlp[ri];
+        let net = replica
+            .nets
+            .iter()
+            .find(|(b, _, _)| *b == bucket)
+            .map(|(_, _, m)| m)
+            .ok_or_else(|| err!("nlp replica {ri} has no net for bucket {bucket}"))?;
+        let batch = NlpBatch { requests: vec![req.clone()], bucket };
+        let (ids, lens) = pad_batch(&batch, 1);
+        let out = net.run(&[
+            HostTensor::i32(ids, &[1, bucket]),
+            HostTensor::i32(lens, &[1]),
+        ])?;
+        let pooled = out[0].as_f32().ok_or_else(|| err!("pooled not f32"))?;
+        Ok(pooled[..self.d_model].to_vec())
+    }
+
+    /// One image batch through CV replica `ri`; returns (logits, embedding).
+    pub fn run_cv(&self, ri: usize, req: &CvRequest) -> Result<(HostTensor, HostTensor)> {
+        let mut out = self.cv[ri].model.run_refs(&[&req.image])?;
+        let emb = out.pop().ok_or_else(|| err!("cv output missing embedding"))?;
+        let logits = out.pop().ok_or_else(|| err!("cv output missing logits"))?;
+        Ok((logits, emb))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_parse_roundtrip() {
+        for p in Placement::ALL {
+            assert_eq!(Placement::parse(p.name()).unwrap(), p);
+        }
+        assert!(Placement::parse("best-fit").is_err());
+    }
+
+    #[test]
+    fn placer_policies() {
+        let mut pack = Placer { placement: Placement::Pack, cards: 6, cursor: 0 };
+        assert_eq!(pack.next(Some(3)), 0);
+        assert_eq!(pack.next(None), 0);
+
+        let mut spread = Placer { placement: Placement::Spread, cards: 3, cursor: 0 };
+        // one global cursor, shards included
+        assert_eq!(spread.next(Some(5)), 0);
+        assert_eq!(spread.next(None), 1);
+        assert_eq!(spread.next(None), 2);
+        assert_eq!(spread.next(None), 0);
+
+        let mut affine = Placer { placement: Placement::SlsAffine, cards: 4, cursor: 0 };
+        assert_eq!(affine.next(Some(2)), 2);
+        assert_eq!(affine.next(Some(6)), 2); // wraps
+        // the shard pins do not advance the round-robin cursor
+        assert_eq!(affine.next(None), 0);
+        assert_eq!(affine.next(None), 1);
+    }
+}

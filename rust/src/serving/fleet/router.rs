@@ -1,0 +1,391 @@
+//! The fleet router: dispatch a mixed request stream to replicas.
+//!
+//! Routing is a deterministic planning pass over the stream in arrival
+//! order. Each card serializes its compute segments; each card's PCIe link
+//! serializes its transfer segments ([`LinkOccupancy`] — two requests
+//! landing on one card contend for the same x4 link). A DLRM request first
+//! fans its SLS segments out to the shard cards (the stage costs the
+//! slowest one, Fig. 6 left) and then runs the dense partition on its
+//! replica's card; NLP and CV requests are single segments.
+//!
+//! Admission control sheds a request when its primary card's bounded queue
+//! is full, or — with an SLA budget configured — when queue depth × modeled
+//! cost would blow the budget (the request could not finish in time anyway,
+//! so shedding it early is strictly better than serving it late).
+//!
+//! Because the planner's only state is modeled costs and arrival times, the
+//! resulting metrics are bit-deterministic across runs and across worker
+//! counts on the modeled clock; the worker pool only executes numerics.
+
+use crate::serving::fleet::{Family, FleetConfig, FleetRequest};
+use crate::serving::fleet::replica::ReplicaManager;
+use crate::sim::transfer::LinkOccupancy;
+use crate::util::error::{bail, Result};
+use std::collections::VecDeque;
+
+/// Dispatch policy for choosing among a family's replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Per-family rotation, blind to load — the naive baseline.
+    RoundRobin,
+    /// Fewest outstanding segments on the candidate's primary card.
+    LeastOutstanding,
+    /// Smallest projected completion time, priced with the sim backend's
+    /// modeled per-run costs and the link occupancy accumulator. Degrades
+    /// to queue balancing on wall-clock backends (uniform placeholder
+    /// costs).
+    LatencyAware,
+}
+
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 3] =
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::LatencyAware];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastOutstanding => "least-outstanding",
+            RoutePolicy::LatencyAware => "latency-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        Ok(match s {
+            "round-robin" | "rr" => RoutePolicy::RoundRobin,
+            "least-outstanding" | "lo" => RoutePolicy::LeastOutstanding,
+            "latency-aware" | "la" => RoutePolicy::LatencyAware,
+            other => bail!(
+                "unknown routing policy '{other}' \
+                 (valid: round-robin, least-outstanding, latency-aware)"
+            ),
+        })
+    }
+}
+
+/// Where an admitted request went.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Recsys { replica: usize },
+    Nlp { replica: usize, bucket: usize },
+    Cv { replica: usize },
+}
+
+/// An admitted request's routing outcome on the planner's clock.
+#[derive(Debug, Clone, Copy)]
+pub struct Routed {
+    pub decision: Decision,
+    /// Primary card (dense card for recsys) — metrics attribution.
+    pub card: usize,
+    pub latency_s: f64,
+    pub finish_s: f64,
+}
+
+/// One planned request: family/arrival always, route only when admitted.
+#[derive(Debug, Clone)]
+pub struct PlannedRequest {
+    pub family: Family,
+    pub arrival_s: f64,
+    pub items: usize,
+    pub route: Option<Routed>,
+}
+
+/// The full plan: per-request outcomes plus node-level accounting.
+#[derive(Debug, Clone)]
+pub struct RoutePlan {
+    pub planned: Vec<PlannedRequest>,
+    /// Modeled run span: last admitted finish minus first arrival.
+    pub span_s: f64,
+    /// Modeled compute seconds per card (SLS segments included).
+    pub busy_s: Vec<f64>,
+}
+
+/// Mutable planner state over the node.
+struct NodeState {
+    compute_busy: Vec<f64>,
+    link: LinkOccupancy,
+    /// Outstanding segment finish times per card, nondecreasing (compute
+    /// on a card is serialized, so each new finish is the card's largest).
+    outstanding: Vec<VecDeque<f64>>,
+    busy_s: Vec<f64>,
+}
+
+impl NodeState {
+    fn new(cards: usize) -> NodeState {
+        NodeState {
+            compute_busy: vec![0.0; cards],
+            link: LinkOccupancy::new(cards),
+            outstanding: vec![VecDeque::new(); cards],
+            busy_s: vec![0.0; cards],
+        }
+    }
+
+    /// Drop segments finished by `t` (arrivals are nondecreasing, so a
+    /// front-prune is exact).
+    fn prune(&mut self, t: f64) {
+        for q in &mut self.outstanding {
+            while q.front().is_some_and(|&f| f <= t) {
+                q.pop_front();
+            }
+        }
+    }
+
+    fn depth(&self, card: usize) -> usize {
+        self.outstanding[card].len()
+    }
+
+    /// Earliest a fresh segment on `card` could start.
+    fn ready(&self, card: usize, t: f64) -> f64 {
+        self.compute_busy[card].max(self.link.busy_until(card)).max(t)
+    }
+
+    /// Commit one segment: transfer serializes on the card's link, compute
+    /// on the card. Returns the segment's finish time.
+    fn commit(&mut self, card: usize, ready_s: f64, cost: crate::runtime::ModeledCost) -> f64 {
+        let delivered = self.link.occupy(card, ready_s, cost.transfer_s);
+        let start = delivered.max(self.compute_busy[card]);
+        let finish = start + cost.compute_s;
+        self.compute_busy[card] = finish;
+        self.outstanding[card].push_back(finish);
+        self.busy_s[card] += cost.compute_s;
+        finish
+    }
+}
+
+/// Plan the routing of `reqs` (nondecreasing arrival order) over the
+/// replica set.
+pub fn plan(
+    replicas: &ReplicaManager,
+    reqs: &[FleetRequest],
+    policy: RoutePolicy,
+    cfg: &FleetConfig,
+) -> Result<RoutePlan> {
+    if replicas.recsys.is_empty() || replicas.nlp.is_empty() || replicas.cv.is_empty() {
+        bail!("fleet replica set must cover every family");
+    }
+    if cfg.max_queue == 0 {
+        bail!("fleet max_queue must be >= 1");
+    }
+    let mut state = NodeState::new(replicas.cards);
+    let mut rr = [0usize; 3];
+    let mut planned = Vec::with_capacity(reqs.len());
+    let mut last_arrival = f64::NEG_INFINITY;
+    let mut max_finish: Option<f64> = None;
+    for req in reqs {
+        let t = req.arrival_s();
+        if t < last_arrival {
+            bail!(
+                "fleet requests must arrive in nondecreasing order \
+                 ({t} after {last_arrival})"
+            );
+        }
+        last_arrival = t;
+        state.prune(t);
+        let family = req.family();
+        let route = match req {
+            FleetRequest::Recsys { .. } => {
+                // candidate-independent SLS-stage estimate (slowest shard
+                // card, each priced with its current compute/link backlog)
+                // — hoisted so the per-candidate score is one lookup, not
+                // a shard scan per replica
+                let sls_done_est = replicas
+                    .sls
+                    .iter()
+                    .map(|s| state.ready(s.card, t) + s.cost.total_s())
+                    .fold(t, f64::max);
+                let ri = choose(policy, &mut rr[family.index()], replicas.recsys.len(), |i| {
+                    let r = &replicas.recsys[i];
+                    (r.card, state.ready(r.card, sls_done_est) + r.cost.total_s())
+                }, &state);
+                let r = &replicas.recsys[ri];
+                admit(&state, r.card, replicas.recsys_request_cost_s(ri), cfg).then(|| {
+                    let mut sls_done = t;
+                    for shard in &replicas.sls {
+                        let fin = state.commit(shard.card, t, shard.cost);
+                        sls_done = sls_done.max(fin);
+                    }
+                    let finish = state.commit(r.card, sls_done, r.cost);
+                    Routed {
+                        decision: Decision::Recsys { replica: ri },
+                        card: r.card,
+                        latency_s: finish - t,
+                        finish_s: finish,
+                    }
+                })
+            }
+            FleetRequest::Nlp { req, .. } => {
+                match replicas.nlp_bucket_for(req.tokens.len()) {
+                    // longer than every compiled bucket: shed at admission
+                    None => None,
+                    Some(bucket) => {
+                        // a replica without a net for this bucket projects
+                        // at infinity (never chosen while an alternative
+                        // exists) and sheds rather than being priced with
+                        // a placeholder
+                        let ri =
+                            choose(policy, &mut rr[family.index()], replicas.nlp.len(), |i| {
+                                let r = &replicas.nlp[i];
+                                let c = r
+                                    .cost(bucket)
+                                    .map(|c| c.total_s())
+                                    .unwrap_or(f64::INFINITY);
+                                (r.card, state.ready(r.card, t) + c)
+                            }, &state);
+                        let r = &replicas.nlp[ri];
+                        r.cost(bucket).and_then(|cost| {
+                            admit(&state, r.card, cost.total_s(), cfg).then(|| {
+                                let finish = state.commit(r.card, t, cost);
+                                Routed {
+                                    decision: Decision::Nlp { replica: ri, bucket },
+                                    card: r.card,
+                                    latency_s: finish - t,
+                                    finish_s: finish,
+                                }
+                            })
+                        })
+                    }
+                }
+            }
+            FleetRequest::Cv { .. } => {
+                let ri = choose(policy, &mut rr[family.index()], replicas.cv.len(), |i| {
+                    let r = &replicas.cv[i];
+                    (r.card, state.ready(r.card, t) + r.cost.total_s())
+                }, &state);
+                let r = &replicas.cv[ri];
+                admit(&state, r.card, r.cost.total_s(), cfg).then(|| {
+                    let finish = state.commit(r.card, t, r.cost);
+                    Routed {
+                        decision: Decision::Cv { replica: ri },
+                        card: r.card,
+                        latency_s: finish - t,
+                        finish_s: finish,
+                    }
+                })
+            }
+        };
+        if let Some(r) = &route {
+            max_finish = Some(max_finish.map_or(r.finish_s, |m: f64| m.max(r.finish_s)));
+        }
+        planned.push(PlannedRequest { family, arrival_s: t, items: req.items(), route });
+    }
+    let span_s = match (reqs.first(), max_finish) {
+        (Some(first), Some(finish)) => (finish - first.arrival_s()).max(0.0),
+        _ => 0.0,
+    };
+    Ok(RoutePlan { planned, span_s, busy_s: state.busy_s.clone() })
+}
+
+/// Pick a replica index among `n` candidates. `score(i)` returns the
+/// candidate's (primary card, projected completion time). Every policy
+/// breaks ties toward the lowest index, so the choice is deterministic.
+fn choose<F: Fn(usize) -> (usize, f64)>(
+    policy: RoutePolicy,
+    rr: &mut usize,
+    n: usize,
+    score: F,
+    state: &NodeState,
+) -> usize {
+    match policy {
+        RoutePolicy::RoundRobin => {
+            let i = *rr % n;
+            *rr += 1;
+            i
+        }
+        RoutePolicy::LeastOutstanding => {
+            let mut best = 0usize;
+            let mut best_depth = usize::MAX;
+            for i in 0..n {
+                let (card, _) = score(i);
+                let d = state.depth(card);
+                if d < best_depth {
+                    best = i;
+                    best_depth = d;
+                }
+            }
+            best
+        }
+        RoutePolicy::LatencyAware => {
+            // projection first; exact projection ties (common for recsys,
+            // whose finish is gated by the shared SLS stage) break toward
+            // the card with the smallest compute backlog, so tied replicas
+            // still spread instead of piling onto the first card
+            let mut best = 0usize;
+            let mut best_key = (f64::INFINITY, f64::INFINITY);
+            for i in 0..n {
+                let (card, proj) = score(i);
+                let key = (proj, state.compute_busy[card]);
+                if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1) {
+                    best = i;
+                    best_key = key;
+                }
+            }
+            best
+        }
+    }
+}
+
+/// Admission: bounded queue on the primary card, then the SLA rule — shed
+/// when (queue depth + 1) × modeled request cost exceeds the budget.
+fn admit(state: &NodeState, card: usize, request_cost_s: f64, cfg: &FleetConfig) -> bool {
+    let depth = state.depth(card);
+    if depth >= cfg.max_queue {
+        return false;
+    }
+    match cfg.sla_budget_s {
+        Some(budget) => (depth + 1) as f64 * request_cost_s <= budget,
+        None => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModeledCost;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("lo").unwrap(), RoutePolicy::LeastOutstanding);
+        assert_eq!(RoutePolicy::parse("la").unwrap(), RoutePolicy::LatencyAware);
+        assert!(RoutePolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn node_state_serializes_compute_and_prunes() {
+        let mut s = NodeState::new(2);
+        let c = ModeledCost { compute_s: 1.0, transfer_s: 0.5 };
+        let f1 = s.commit(0, 0.0, c);
+        assert!((f1 - 1.5).abs() < 1e-12);
+        // second segment on the same card: transfer waits for the first
+        // transfer (0.5..1.0), compute for the first compute (ends 1.5)
+        let f2 = s.commit(0, 0.0, c);
+        assert!((f2 - 2.5).abs() < 1e-12, "{f2}");
+        assert_eq!(s.depth(0), 2);
+        // the other card is untouched
+        assert_eq!(s.depth(1), 0);
+        assert!((s.busy_s[0] - 2.0).abs() < 1e-12);
+        s.prune(1.6);
+        assert_eq!(s.depth(0), 1);
+        s.prune(3.0);
+        assert_eq!(s.depth(0), 0);
+    }
+
+    #[test]
+    fn admission_rules() {
+        let mut s = NodeState::new(1);
+        let cfg = FleetConfig { max_queue: 2, sla_budget_s: Some(1.0), ..FleetConfig::default() };
+        // empty card, cheap request: admitted
+        assert!(admit(&s, 0, 0.4, &cfg));
+        // cost alone exceeding the budget: shed even on an empty card
+        assert!(!admit(&s, 0, 1.5, &cfg));
+        s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0 });
+        // depth 1: (1+1) * 0.6 > 1.0 -> shed
+        assert!(!admit(&s, 0, 0.6, &cfg));
+        assert!(admit(&s, 0, 0.4, &cfg));
+        s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0 });
+        // bounded queue full
+        assert!(!admit(&s, 0, 1e-6, &cfg));
+    }
+}

@@ -1,0 +1,250 @@
+//! Deterministic mixed-traffic generator.
+//!
+//! The node serves all three families at once (§II); this generator
+//! replaces the single-family loops the individual servers use with one
+//! seeded stream: each request draws its family from a configurable mix
+//! (e.g. 70/20/10 recsys/nlp/cv) and its payload from the family's
+//! workload generator, stamped with a burst or Poisson arrival time.
+//! Everything derives from [`crate::util::rng::Rng`], so two generators
+//! with the same seed and knobs emit bit-identical streams — the property
+//! the fleet's policy comparisons and determinism tests stand on.
+
+use crate::runtime::artifact::Manifest;
+use crate::serving::fleet::{Family, FleetRequest};
+use crate::util::error::{bail, Result};
+use crate::util::rng::Rng;
+use crate::workloads::{CvGen, NlpGen, RecsysGen};
+
+/// Relative family weights (any nonnegative scale; normalized on use).
+#[derive(Debug, Clone, Copy)]
+pub struct FamilyMix {
+    pub recsys: f64,
+    pub nlp: f64,
+    pub cv: f64,
+}
+
+impl FamilyMix {
+    pub fn new(recsys: f64, nlp: f64, cv: f64) -> Result<FamilyMix> {
+        let m = FamilyMix { recsys, nlp, cv };
+        if !(recsys >= 0.0 && nlp >= 0.0 && cv >= 0.0) {
+            bail!("family mix weights must be nonnegative");
+        }
+        if m.total() <= 0.0 {
+            bail!("family mix must have at least one positive weight");
+        }
+        Ok(m)
+    }
+
+    /// Parse "70/20/10" (recsys/nlp/cv).
+    pub fn parse(s: &str) -> Result<FamilyMix> {
+        let parts: Vec<&str> = s.split('/').collect();
+        if parts.len() != 3 {
+            bail!("mix must be recsys/nlp/cv, e.g. 70/20/10 (got '{s}')");
+        }
+        let mut w = [0.0f64; 3];
+        for (i, p) in parts.iter().enumerate() {
+            w[i] = p
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| crate::err!("mix component '{p}' is not a number"))?;
+        }
+        FamilyMix::new(w[0], w[1], w[2])
+    }
+
+    fn total(&self) -> f64 {
+        self.recsys + self.nlp + self.cv
+    }
+
+    /// Normalized share of one family.
+    pub fn share(&self, f: Family) -> f64 {
+        let w = match f {
+            Family::Recsys => self.recsys,
+            Family::Nlp => self.nlp,
+            Family::Cv => self.cv,
+        };
+        w / self.total()
+    }
+
+    /// The canonical "70/20/10" label.
+    pub fn label(&self) -> String {
+        format!("{:.0}/{:.0}/{:.0}", self.recsys, self.nlp, self.cv)
+    }
+}
+
+impl Default for FamilyMix {
+    /// The smoke mix: recsys-dominated like the paper's fleet (Fig. 1a).
+    fn default() -> FamilyMix {
+        FamilyMix { recsys: 70.0, nlp: 20.0, cv: 10.0 }
+    }
+}
+
+/// When requests arrive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Everything available at t=0 — the closed-loop saturation shape the
+    /// policy comparisons use (throughput is service-limited, not
+    /// arrival-limited).
+    Burst,
+    /// Open-loop Poisson arrivals at `rate_qps`.
+    Poisson { rate_qps: f64 },
+}
+
+/// The mixed-stream generator.
+pub struct TrafficGen {
+    mix: FamilyMix,
+    arrival: Arrival,
+    rng: Rng,
+    recsys: RecsysGen,
+    nlp: NlpGen,
+    cv: CvGen,
+    clock: f64,
+    next_id: usize,
+}
+
+impl TrafficGen {
+    /// Build from a manifest's model shapes. `recsys_batch` must match a
+    /// compiled DLRM variant (the fleet validates this again at replica
+    /// load).
+    pub fn new(
+        seed: u64,
+        mix: FamilyMix,
+        arrival: Arrival,
+        manifest: &Manifest,
+        recsys_batch: usize,
+    ) -> Result<TrafficGen> {
+        if let Arrival::Poisson { rate_qps } = arrival {
+            if rate_qps <= 0.0 {
+                bail!("poisson arrival rate must be positive (got {rate_qps})");
+            }
+        }
+        // independent per-family streams forked off the master seed, so the
+        // family-choice sequence does not disturb the payloads
+        let mut master = Rng::new(seed);
+        let recsys_seed = master.next_u64();
+        let nlp_seed = master.next_u64();
+        let cv_seed = master.next_u64();
+        let vocab = manifest.config_usize("xlmr", "vocab")?;
+        let max_seq = manifest
+            .select("xlmr", "full")
+            .into_iter()
+            .filter_map(|a| a.seq)
+            .max()
+            .unwrap_or(128);
+        let image = manifest.config_usize("cv", "image")?;
+        Ok(TrafficGen {
+            mix,
+            arrival,
+            rng: master,
+            recsys: RecsysGen::from_manifest(recsys_seed, recsys_batch, manifest)?,
+            // the NlpGen arrival clock is unused here (TrafficGen stamps
+            // arrivals itself); rate 1.0 is a placeholder
+            nlp: NlpGen::new(nlp_seed, vocab, max_seq, 1.0),
+            cv: CvGen::new(cv_seed, image),
+            clock: 0.0,
+            next_id: 0,
+        })
+    }
+
+    /// Requests emitted so far.
+    pub fn emitted(&self) -> usize {
+        self.next_id
+    }
+
+    pub fn next(&mut self) -> FleetRequest {
+        let arrival_s = match self.arrival {
+            Arrival::Burst => 0.0,
+            Arrival::Poisson { rate_qps } => {
+                self.clock += self.rng.exponential(rate_qps);
+                self.clock
+            }
+        };
+        let u = self.rng.f64() * self.mix.total();
+        self.next_id += 1;
+        if u < self.mix.recsys {
+            FleetRequest::Recsys { arrival_s, req: self.recsys.next() }
+        } else if u < self.mix.recsys + self.mix.nlp {
+            FleetRequest::Nlp { arrival_s, req: self.nlp.next() }
+        } else {
+            FleetRequest::Cv { arrival_s, req: self.cv.next(1) }
+        }
+    }
+
+    /// The next `n` requests (arrival order).
+    pub fn take(&mut self, n: usize) -> Vec<FleetRequest> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::builtin::builtin_manifest;
+
+    #[test]
+    fn mix_parse_and_shares() {
+        let m = FamilyMix::parse("70/20/10").unwrap();
+        assert!((m.share(Family::Recsys) - 0.7).abs() < 1e-12);
+        assert!((m.share(Family::Nlp) - 0.2).abs() < 1e-12);
+        assert!((m.share(Family::Cv) - 0.1).abs() < 1e-12);
+        assert_eq!(m.label(), "70/20/10");
+        // weights need not sum to 100
+        let m = FamilyMix::parse("1/1/2").unwrap();
+        assert!((m.share(Family::Cv) - 0.5).abs() < 1e-12);
+        assert!(FamilyMix::parse("70/20").is_err());
+        assert!(FamilyMix::parse("a/b/c").is_err());
+        assert!(FamilyMix::parse("0/0/0").is_err());
+        assert!(FamilyMix::parse("-1/2/3").is_err());
+    }
+
+    #[test]
+    fn stream_is_deterministic() {
+        let m = builtin_manifest();
+        let mix = FamilyMix::default();
+        let mut a = TrafficGen::new(7, mix, Arrival::Poisson { rate_qps: 500.0 }, &m, 16).unwrap();
+        let mut b = TrafficGen::new(7, mix, Arrival::Poisson { rate_qps: 500.0 }, &m, 16).unwrap();
+        for _ in 0..40 {
+            let (x, y) = (a.next(), b.next());
+            assert_eq!(x.family(), y.family());
+            assert_eq!(x.arrival_s(), y.arrival_s());
+            assert_eq!(x.items(), y.items());
+        }
+    }
+
+    #[test]
+    fn mix_shares_and_arrivals_behave() {
+        let m = builtin_manifest();
+        let mix = FamilyMix::parse("70/20/10").unwrap();
+        let mut g = TrafficGen::new(3, mix, Arrival::Burst, &m, 16).unwrap();
+        let reqs = g.take(400);
+        assert_eq!(g.emitted(), 400);
+        let recsys = reqs.iter().filter(|r| r.family() == Family::Recsys).count();
+        let nlp = reqs.iter().filter(|r| r.family() == Family::Nlp).count();
+        let cv = reqs.iter().filter(|r| r.family() == Family::Cv).count();
+        assert_eq!(recsys + nlp + cv, 400);
+        // the empirical mix tracks the configured one
+        assert!((recsys as f64 / 400.0 - 0.7).abs() < 0.08, "recsys {recsys}");
+        assert!((nlp as f64 / 400.0 - 0.2).abs() < 0.08, "nlp {nlp}");
+        // burst: everything at t=0
+        assert!(reqs.iter().all(|r| r.arrival_s() == 0.0));
+        // poisson: strictly increasing arrivals
+        let mut g = TrafficGen::new(3, mix, Arrival::Poisson { rate_qps: 100.0 }, &m, 16).unwrap();
+        let reqs = g.take(50);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s() > w[0].arrival_s());
+        }
+        // a recsys payload matches the requested batch
+        let item_counts: Vec<usize> = reqs
+            .iter()
+            .filter(|r| r.family() == Family::Recsys)
+            .map(|r| r.items())
+            .collect();
+        assert!(item_counts.iter().all(|&b| b == 16));
+    }
+
+    #[test]
+    fn invalid_poisson_rate_rejected() {
+        let m = builtin_manifest();
+        assert!(TrafficGen::new(1, FamilyMix::default(), Arrival::Poisson { rate_qps: 0.0 }, &m, 16)
+            .is_err());
+    }
+}

@@ -14,6 +14,7 @@
 //! still executing every request's real numerics.
 
 pub mod batcher;
+pub mod fleet;
 
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
@@ -151,6 +152,58 @@ where
 // ---------------------------------------------------------------------------
 // DLRM: partitioned + pipelined (Fig. 6)
 // ---------------------------------------------------------------------------
+
+/// Table arity is request data, not contract: validate it before indexing
+/// per-table tensors. Shared by [`RecsysServer`] and the fleet replicas.
+pub(crate) fn check_recsys_table_arity(
+    req: &RecsysRequest,
+    num_tables: usize,
+) -> Result<()> {
+    if req.indices.len() != num_tables || req.lengths.len() != num_tables {
+        return Err(err!(
+            "request carries {} index / {} length tensors but the model has {} tables",
+            req.indices.len(),
+            req.lengths.len(),
+            num_tables
+        ));
+    }
+    Ok(())
+}
+
+/// Marshal one request's idx/len tensors for an SLS shard, in the shard's
+/// table order — one definition so the server and fleet input layouts
+/// cannot diverge. Callers must have validated table arity first.
+pub(crate) fn sls_shard_inputs<'a>(
+    req: &'a RecsysRequest,
+    tables: &[usize],
+) -> Vec<&'a HostTensor> {
+    let mut inputs = Vec::with_capacity(tables.len() * 2);
+    for &t in tables {
+        inputs.push(&req.indices[t]);
+        inputs.push(&req.lengths[t]);
+    }
+    inputs
+}
+
+/// Scatter one shard's pooled output `[batch, tables.len(), d]` into the
+/// request-wide `[batch, num_tables, d]` buffer.
+pub(crate) fn scatter_sls_shard(
+    sparse: &mut [f32],
+    pooled: &[f32],
+    tables: &[usize],
+    batch: usize,
+    num_tables: usize,
+    embed_dim: usize,
+) {
+    let d = embed_dim;
+    for bi in 0..batch {
+        for (si, &t) in tables.iter().enumerate() {
+            let src = (bi * tables.len() + si) * d;
+            let dst = (bi * num_tables + t) * d;
+            sparse[dst..dst + d].copy_from_slice(&pooled[src..src + d]);
+        }
+    }
+}
 
 /// Modeled per-request costs of the partitioned DLRM path (sim clock): the
 /// SLS cards run in parallel, so the SLS stage costs the slowest shard; the
@@ -295,15 +348,7 @@ impl RecsysServer {
     /// With a shard pool (see [`RecsysServer::with_threads`]) the per-card
     /// shards execute concurrently; otherwise sequentially.
     pub fn run_sls(&self, req: &RecsysRequest) -> Result<HostTensor> {
-        // table count is request data: validate before indexing into it
-        if req.indices.len() != self.num_tables || req.lengths.len() != self.num_tables {
-            return Err(err!(
-                "request carries {} index / {} length tensors but the model has {} tables",
-                req.indices.len(),
-                req.lengths.len(),
-                self.num_tables
-            ));
-        }
+        check_recsys_table_arity(req, self.num_tables)?;
         match &self.sls_pool {
             Some(pool) => self.run_sls_parallel(pool, req),
             None => self.run_sls_sequential(req),
@@ -315,12 +360,7 @@ impl RecsysServer {
         let d = self.embed_dim;
         let mut sparse = vec![0f32; b * self.num_tables * d];
         for (tables, shard) in &self.shards {
-            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(tables.len() * 2);
-            for &t in tables {
-                inputs.push(&req.indices[t]);
-                inputs.push(&req.lengths[t]);
-            }
-            let out = shard.run_refs(&inputs)?;
+            let out = shard.run_refs(&sls_shard_inputs(req, tables))?;
             let pooled = out[0]
                 .as_f32()
                 .ok_or_else(|| err!("sls output not f32"))?;
@@ -367,14 +407,7 @@ impl RecsysServer {
 
     /// Scatter one shard's pooled output [b, n_shard, d] into [b, T, d].
     fn scatter_shard(&self, sparse: &mut [f32], tables: &[usize], pooled: &[f32]) {
-        let d = self.embed_dim;
-        for bi in 0..self.batch {
-            for (si, &t) in tables.iter().enumerate() {
-                let src = (bi * tables.len() + si) * d;
-                let dst = (bi * self.num_tables + t) * d;
-                sparse[dst..dst + d].copy_from_slice(&pooled[src..src + d]);
-            }
-        }
+        scatter_sls_shard(sparse, pooled, tables, self.batch, self.num_tables, self.embed_dim);
     }
 
     /// Run the dense partition: scores [batch, 1].

@@ -36,6 +36,43 @@ impl TransferStats {
     }
 }
 
+/// Cross-request PCIe contention: a per-card link occupancy accumulator.
+///
+/// [`TransferModel`] prices each transfer as if the link were idle; that is
+/// right for one request, but when a scheduler lands several requests on
+/// one card their upload/download segments contend for the same x4 link.
+/// The accumulator serializes them: a segment that wants to start at
+/// `ready_s` while the link is still draining an earlier one is pushed
+/// back to the link's free time. State is one `f64` per card, so the
+/// resulting schedules are exactly reproducible — the fleet router's
+/// latency-aware policy consults this to cost candidate placements.
+#[derive(Debug, Clone)]
+pub struct LinkOccupancy {
+    busy_until: Vec<f64>,
+}
+
+impl LinkOccupancy {
+    pub fn new(cards: usize) -> LinkOccupancy {
+        LinkOccupancy { busy_until: vec![0.0; cards.max(1)] }
+    }
+
+    /// Reserve `dur_s` of link time on `card`, no earlier than `ready_s`;
+    /// returns when the segment finishes. Zero-duration segments do not
+    /// move the link clock but still wait for it (a request cannot start
+    /// compute before the link has delivered its inputs).
+    pub fn occupy(&mut self, card: usize, ready_s: f64, dur_s: f64) -> f64 {
+        let i = card % self.busy_until.len();
+        let start = self.busy_until[i].max(ready_s);
+        self.busy_until[i] = start + dur_s;
+        self.busy_until[i]
+    }
+
+    /// When `card`'s link frees up (0.0 while untouched).
+    pub fn busy_until(&self, card: usize) -> f64 {
+        self.busy_until[card % self.busy_until.len()]
+    }
+}
+
 /// The transfer model: node spec + optimization flags.
 #[derive(Debug, Clone)]
 pub struct TransferModel {
@@ -198,6 +235,34 @@ mod tests {
         let s = m.card_to_card(2, 2, 1 << 20);
         assert_eq!(s.total_bytes(), 0.0);
         assert_eq!(s.time_s, 0.0);
+    }
+
+    #[test]
+    fn link_occupancy_serializes_same_card_segments() {
+        let mut l = LinkOccupancy::new(6);
+        // two requests land on card 2 at the same instant: the second's
+        // transfer waits for the first
+        let a = l.occupy(2, 0.0, 1e-3);
+        let b = l.occupy(2, 0.0, 1e-3);
+        assert!((a - 1e-3).abs() < 1e-12);
+        assert!((b - 2e-3).abs() < 1e-12, "second segment must queue: {b}");
+        // a different card's link is independent
+        let c = l.occupy(3, 0.0, 1e-3);
+        assert!((c - 1e-3).abs() < 1e-12);
+        // an idle gap is not billed
+        let d = l.occupy(3, 10.0, 1e-3);
+        assert!((d - 10.001).abs() < 1e-9);
+        assert_eq!(l.busy_until(0), 0.0);
+    }
+
+    #[test]
+    fn link_occupancy_zero_duration_waits_but_does_not_occupy() {
+        let mut l = LinkOccupancy::new(2);
+        l.occupy(0, 0.0, 5e-3);
+        // a zero-byte segment still cannot finish before the link frees
+        let t = l.occupy(0, 1e-3, 0.0);
+        assert!((t - 5e-3).abs() < 1e-12);
+        assert!((l.busy_until(0) - 5e-3).abs() < 1e-12);
     }
 
     #[test]

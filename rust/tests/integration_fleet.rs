@@ -1,0 +1,293 @@
+//! Integration: the fleet router. Invariants — items/request conservation
+//! across cards and families, bit-deterministic modeled metrics across runs
+//! and worker counts, shed accounting under admission control — plus the
+//! subsystem's headline property: latency-aware routing buys modeled node
+//! throughput over round-robin at equal shed rate.
+
+use fbia::config::Config;
+use fbia::platform::CardSpec;
+use fbia::runtime::builtin::builtin_manifest;
+use fbia::runtime::{Clock, Engine, SimBackend};
+use fbia::serving::fleet::{
+    Arrival, Family, FamilyMix, Fleet, FleetConfig, FleetMetrics, FleetRequest, Placement,
+    RoutePolicy, TrafficGen,
+};
+use fbia::workloads::NlpRequest;
+use std::path::Path;
+use std::sync::Arc;
+
+fn engine(backend: &str) -> Arc<Engine> {
+    // no artifacts dir in CI: all backends serve the builtin manifest
+    Arc::new(Engine::auto_with(Path::new("/nonexistent/artifacts"), Some(backend)).expect("engine"))
+}
+
+fn traffic(eng: &Engine, cfg: &FleetConfig, n: usize) -> Vec<FleetRequest> {
+    let mix = FamilyMix::parse("70/20/10").unwrap();
+    TrafficGen::new(11, mix, Arrival::Burst, eng.manifest(), cfg.recsys_batch)
+        .expect("traffic")
+        .take(n)
+}
+
+fn assert_conserved(m: &FleetMetrics) {
+    assert_eq!(m.node.completed + m.shed, m.offered, "requests lost or invented");
+    let by_card: usize = m.per_card.iter().map(|c| c.metrics.completed).sum();
+    assert_eq!(by_card, m.node.completed, "per-card completion mismatch");
+    let card_items: usize = m.per_card.iter().map(|c| c.metrics.items).sum();
+    assert_eq!(card_items, m.node.items, "per-card items mismatch");
+    let fam_offered: usize = m.per_family.iter().map(|f| f.offered).sum();
+    let fam_completed: usize = m.per_family.iter().map(|f| f.metrics.completed).sum();
+    let fam_shed: usize = m.per_family.iter().map(|f| f.shed).sum();
+    let fam_items: usize = m.per_family.iter().map(|f| f.metrics.items).sum();
+    assert_eq!(fam_offered, m.offered);
+    assert_eq!(fam_completed, m.node.completed);
+    assert_eq!(fam_shed, m.shed);
+    assert_eq!(fam_items, m.node.items);
+    assert_eq!(m.node.latency.count() as usize, m.node.completed);
+}
+
+#[test]
+fn fleet_conserves_items_across_cards_under_every_policy() {
+    let eng = engine("sim");
+    let cfg = FleetConfig::default();
+    let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let reqs = traffic(&eng, &cfg, 60);
+    for policy in RoutePolicy::ALL {
+        let m = fleet.route(&reqs, policy).unwrap();
+        assert_eq!(m.offered, 60);
+        assert_conserved(&m);
+        assert_eq!(m.node.clock, Clock::Modeled);
+        assert!(m.node_qps() > 0.0);
+    }
+}
+
+#[test]
+fn modeled_metrics_bit_deterministic_across_runs_and_workers() {
+    let eng = engine("sim");
+    let cfg = FleetConfig::default();
+    let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let reqs = traffic(&eng, &cfg, 24);
+    // serve() executes real numerics with 1 then 4 workers; route() never
+    // executes — all three must report bit-identical modeled metrics
+    let a = fleet.serve(reqs.clone(), RoutePolicy::LatencyAware, 1).unwrap();
+    let b = fleet.serve(reqs.clone(), RoutePolicy::LatencyAware, 4).unwrap();
+    let c = fleet.route(&reqs, RoutePolicy::LatencyAware).unwrap();
+    for m in [&a, &b, &c] {
+        assert_eq!(m.node.clock, Clock::Modeled);
+        assert_conserved(m);
+    }
+    assert_eq!(a.node.wall_s, b.node.wall_s);
+    assert_eq!(a.node.wall_s, c.node.wall_s);
+    assert_eq!(a.node.latency.p50(), b.node.latency.p50());
+    assert_eq!(a.node.latency.p99(), b.node.latency.p99());
+    assert_eq!(a.node.latency.p50(), c.node.latency.p50());
+    for ((ca, cb), cc) in a.per_card.iter().zip(&b.per_card).zip(&c.per_card) {
+        assert_eq!(ca.busy_s, cb.busy_s);
+        assert_eq!(ca.busy_s, cc.busy_s);
+        assert_eq!(ca.metrics.completed, cb.metrics.completed);
+        assert_eq!(ca.metrics.latency.p99(), cc.metrics.latency.p99());
+    }
+}
+
+#[test]
+fn latency_aware_beats_round_robin_at_equal_shed_rate() {
+    // the acceptance property: on the default 6-card node with a 70/20/10
+    // mix, cost-aware routing strictly raises modeled node QPS without
+    // shedding more
+    let eng = engine("sim");
+    let cfg = FleetConfig::default();
+    let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let reqs = traffic(&eng, &cfg, 150);
+    let rr = fleet.route(&reqs, RoutePolicy::RoundRobin).unwrap();
+    let la = fleet.route(&reqs, RoutePolicy::LatencyAware).unwrap();
+    // equal shed rate (none sheds under the default admission knobs)
+    assert_eq!(rr.shed, 0, "round-robin shed {} of {}", rr.shed, rr.offered);
+    assert_eq!(la.shed, 0);
+    assert!(
+        la.node_qps() > rr.node_qps(),
+        "latency-aware {} QPS must strictly beat round-robin {}",
+        la.node_qps(),
+        rr.node_qps()
+    );
+    // and never at the cost of tail latency explosions
+    assert!(la.node.latency.p99() <= rr.node.latency.p99() * 1.5);
+}
+
+#[test]
+fn sla_admission_sheds_deterministically() {
+    let eng = engine("sim");
+    // budget = 3x the most expensive family's modeled request cost, probed
+    // from a default fleet: every family admits at queue depth 0, and a
+    // 120-request burst drives depths far past the budget
+    let probe = Fleet::new(eng.clone(), FleetConfig::default()).unwrap();
+    let r = probe.replicas();
+    let max_bucket = *r.buckets.last().unwrap();
+    let worst = r
+        .recsys_request_cost_s(0)
+        .max(r.nlp[0].cost(max_bucket).expect("bucket cost").total_s())
+        .max(r.cv[0].cost.total_s());
+    assert!(worst > 0.0);
+    let fleet_cfg = |sla| FleetConfig { sla_budget_s: sla, ..FleetConfig::default() };
+    let cfg = fleet_cfg(Some(3.0 * worst));
+    let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let reqs = traffic(&eng, &cfg, 120);
+    let a = fleet.route(&reqs, RoutePolicy::LatencyAware).unwrap();
+    let b = fleet.route(&reqs, RoutePolicy::LatencyAware).unwrap();
+    assert!(a.shed > 0, "a 3x-request-cost SLA must shed under a 120-request burst");
+    assert!(a.node.completed > 0, "the SLA must not shed everything");
+    assert_conserved(&a);
+    assert_eq!(a.shed, b.shed, "shed accounting must be deterministic");
+    assert_eq!(a.node.wall_s, b.node.wall_s);
+    // a generous budget admits strictly more
+    let open = Arc::new(Fleet::new(eng.clone(), fleet_cfg(None)).unwrap());
+    let m = open.route(&reqs, RoutePolicy::LatencyAware).unwrap();
+    assert!(m.node.completed > a.node.completed);
+}
+
+#[test]
+fn bounded_queue_sheds_and_accounts() {
+    let eng = engine("sim");
+    let cfg = FleetConfig { max_queue: 2, ..FleetConfig::default() };
+    let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let reqs = traffic(&eng, &cfg, 80);
+    let m = fleet.route(&reqs, RoutePolicy::RoundRobin).unwrap();
+    assert!(m.shed > 0, "a depth-2 queue must shed an 80-request burst");
+    assert_conserved(&m);
+    let recsys = &m.per_family[Family::Recsys.index()];
+    assert!(recsys.shed > 0);
+}
+
+#[test]
+fn overlong_nlp_requests_are_shed_not_fatal() {
+    let eng = engine("sim");
+    let cfg = FleetConfig::default();
+    let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let max_bucket = *fleet.replicas().buckets.last().unwrap();
+    let reqs = vec![FleetRequest::Nlp {
+        arrival_s: 0.0,
+        req: NlpRequest { tokens: vec![1; max_bucket + 1], arrival_s: 0.0 },
+    }];
+    let m = fleet.route(&reqs, RoutePolicy::LatencyAware).unwrap();
+    assert_eq!(m.shed, 1);
+    assert_eq!(m.node.completed, 0);
+    assert_eq!(m.per_family[Family::Nlp.index()].shed, 1);
+}
+
+#[test]
+fn wall_clock_fleet_serves_real_numerics() {
+    let eng = engine("ref");
+    let cfg = FleetConfig { replicas: 2, ..FleetConfig::default() };
+    let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let reqs = traffic(&eng, &cfg, 12);
+    // route-only planning is refused on wall clocks
+    let err = fleet.route(&reqs, RoutePolicy::LatencyAware).unwrap_err().to_string();
+    assert!(err.contains("modeled clock"), "{err}");
+    let m = fleet.serve(reqs, RoutePolicy::LeastOutstanding, 3).unwrap();
+    assert_eq!(m.node.clock, Clock::Wall);
+    assert_eq!(m.shed, 0);
+    assert_eq!(m.node.completed, 12);
+    assert_conserved(&m);
+    assert!(m.node.wall_s > 0.0);
+}
+
+#[test]
+fn placement_policies_land_replicas_where_expected() {
+    let eng = engine("sim");
+    let mk = |placement| {
+        let cfg = FleetConfig { placement, ..FleetConfig::default() };
+        Fleet::new(eng.clone(), cfg).unwrap()
+    };
+    // sls-affine: shard k pinned to card k, exactly like Engine::prepare
+    let affine = mk(Placement::SlsAffine);
+    let shard_cards: Vec<usize> = affine.replicas().sls.iter().map(|s| s.card).collect();
+    assert_eq!(shard_cards, vec![0, 1, 2, 3]);
+    // the non-shard replicas round-robin from card 0
+    let dense_cards: Vec<usize> = affine.replicas().recsys.iter().map(|r| r.card).collect();
+    assert_eq!(dense_cards, vec![0, 1, 2, 3]);
+    let nlp_cards: Vec<usize> = affine.replicas().nlp.iter().map(|r| r.card).collect();
+    assert_eq!(nlp_cards, vec![4, 5, 0, 1]);
+
+    // pack: every replica, shards included, on card 0
+    let pack = mk(Placement::Pack);
+    assert!(pack.replicas().sls.iter().all(|s| s.card == 0));
+    assert!(pack.replicas().cv.iter().all(|r| r.card == 0));
+
+    // spread: one global cursor over everything
+    let spread = mk(Placement::Spread);
+    let shard_cards: Vec<usize> = spread.replicas().sls.iter().map(|s| s.card).collect();
+    assert_eq!(shard_cards, vec![0, 1, 2, 3]);
+    let dense_cards: Vec<usize> = spread.replicas().recsys.iter().map(|r| r.card).collect();
+    assert_eq!(dense_cards, vec![4, 5, 0, 1]);
+}
+
+#[test]
+fn pack_placement_costs_modeled_throughput() {
+    let eng = engine("sim");
+    let cfg = FleetConfig::default();
+    let reqs = traffic(&eng, &cfg, 60);
+    let affine = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let packed = Arc::new(
+        Fleet::new(eng.clone(), FleetConfig { placement: Placement::Pack, ..cfg }).unwrap(),
+    );
+    let a = affine.route(&reqs, RoutePolicy::LatencyAware).unwrap();
+    let p = packed.route(&reqs, RoutePolicy::LatencyAware).unwrap();
+    assert!(
+        a.node_qps() > p.node_qps(),
+        "spreading the fleet ({}) must beat packing card 0 ({})",
+        a.node_qps(),
+        p.node_qps()
+    );
+}
+
+#[test]
+fn vendor_mix_card_slows_its_replicas() {
+    // heterogeneous node: card 5's override quarters the compute peaks;
+    // the replica that lands there must model slower than its twin on a
+    // stock card
+    let mut cfg = Config::default();
+    let base = cfg.node.card.clone();
+    cfg.node.card_overrides.push((
+        5,
+        CardSpec {
+            peak_tops_int8: base.peak_tops_int8 / 4.0,
+            peak_tflops_fp16: base.peak_tflops_fp16 / 4.0,
+            lpddr_bw: base.lpddr_bw / 4.0,
+            sram_bw: base.sram_bw / 4.0,
+            ..base
+        },
+    ));
+    let eng = Arc::new(Engine::with_backend(
+        builtin_manifest(),
+        Arc::new(SimBackend::new(cfg)),
+    ));
+    assert_eq!(eng.clock(), Clock::Modeled);
+    let fleet = Fleet::new(eng.clone(), FleetConfig::default()).unwrap();
+    // cv replicas land on cards 2,3,4,5 under sls-affine with 4 replicas
+    let cv_cards: Vec<usize> = fleet.replicas().cv.iter().map(|r| r.card).collect();
+    assert_eq!(cv_cards, vec![2, 3, 4, 5]);
+    let slow = fleet.replicas().cv.iter().find(|r| r.card == 5).unwrap();
+    let fast = fleet.replicas().cv.iter().find(|r| r.card == 4).unwrap();
+    assert!(
+        slow.cost.compute_s > fast.cost.compute_s,
+        "slow card {} !> stock card {}",
+        slow.cost.compute_s,
+        fast.cost.compute_s
+    );
+}
+
+#[test]
+fn fleet_numerics_match_across_backends_and_policies() {
+    // the same request stream served on ref and sim fleets must agree on
+    // the planning-independent facts: everything admitted, same counts
+    let cfg = FleetConfig { replicas: 2, ..FleetConfig::default() };
+    let sim = engine("sim");
+    let refe = engine("ref");
+    let sim_fleet = Arc::new(Fleet::new(sim.clone(), cfg.clone()).unwrap());
+    let ref_fleet = Arc::new(Fleet::new(refe.clone(), cfg.clone()).unwrap());
+    let reqs = traffic(&sim, &cfg, 10);
+    let a = sim_fleet.serve(reqs.clone(), RoutePolicy::RoundRobin, 2).unwrap();
+    let b = ref_fleet.serve(reqs, RoutePolicy::RoundRobin, 2).unwrap();
+    assert_eq!(a.node.completed, b.node.completed);
+    assert_eq!(a.node.items, b.node.items);
+    assert_eq!(a.node.clock, Clock::Modeled);
+    assert_eq!(b.node.clock, Clock::Wall);
+}
