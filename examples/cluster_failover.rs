@@ -1,0 +1,112 @@
+//! Cluster failover demo: a heterogeneous three-node tier loses a node
+//! mid-trace and the router re-routes around it (Fig. 1 scale, §VII
+//! operational lessons).
+//!
+//!     cargo run --release --example cluster_failover [-- --requests 200 \
+//!         --mix 70/20/10 --threads 4]
+//!
+//! Builds a tier of two stock nodes plus one slow vendor-mix node, routes
+//! an open-loop Poisson stream under every node policy, then kills node 0
+//! at 40% of the trace and shows the availability hit: in-flight work
+//! shed at the failure instant, traffic re-routed to the survivors, SLA
+//! admission intact. Everything is on the deterministic modeled clock;
+//! the final run also executes the admitted requests' real numerics.
+
+use fbia::config::Config;
+use fbia::platform::CardSpec;
+use fbia::serving::cluster::{Cluster, EventKind, NodeEvent, NodePolicy, Scenario};
+use fbia::serving::fleet::{Arrival, FamilyMix, FleetConfig, RoutePolicy, TrafficGen};
+use fbia::util::cli::Args;
+use fbia::util::error::Result;
+use fbia::util::table::{ms, pct, Table};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let n = args.get_usize("requests", 200).max(1);
+    let threads = args.get_usize("threads", 4).max(1);
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
+    let cfg = Config::default();
+    let fcfg = FleetConfig { replicas: 2, ..FleetConfig::default() };
+    let card_policy = RoutePolicy::LatencyAware;
+
+    // two stock nodes + one whose cards run at a quarter of the peaks — a
+    // vendor-mix *tier*, not just vendor-mix cards
+    let mut slow_node = cfg.node.clone();
+    slow_node.card = CardSpec {
+        peak_tops_int8: cfg.node.card.peak_tops_int8 / 4.0,
+        peak_tflops_fp16: cfg.node.card.peak_tflops_fp16 / 4.0,
+        lpddr_bw: cfg.node.card.lpddr_bw / 4.0,
+        sram_bw: cfg.node.card.sram_bw / 4.0,
+        ..cfg.node.card.clone()
+    };
+    let specs = vec![cfg.node.clone(), cfg.node.clone(), slow_node];
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let cluster = Arc::new(Cluster::new(&dir, &cfg, &specs, fcfg.clone())?);
+    println!("cluster: 3 nodes (node 2 is 4x slower), mix {} over {n} requests", mix.label());
+
+    // open-loop stream at roughly half the healthy tier's capacity
+    let mut probe_traffic =
+        TrafficGen::new(7, mix, Arrival::Burst, cluster.manifest(), fcfg.recsys_batch)?;
+    let probe_reqs = probe_traffic.take(n);
+    let probe = cluster.route(
+        &probe_reqs,
+        NodePolicy::WeightedCapacity,
+        card_policy,
+        &Scenario::none(),
+    )?;
+    let rate = (probe.cluster_qps() * 0.5).max(50.0);
+    let mut traffic = TrafficGen::new(
+        7,
+        mix,
+        Arrival::Poisson { rate_qps: rate },
+        cluster.manifest(),
+        fcfg.recsys_batch,
+    )?;
+    let reqs = traffic.take(n);
+    let horizon = reqs.last().map(|r| r.arrival_s()).unwrap_or(0.0);
+    let drill = Scenario::new(vec![NodeEvent {
+        at_s: 0.4 * horizon,
+        node: 0,
+        kind: EventKind::Fail,
+    }]);
+
+    println!("\nnode policies under a node-0 failure at t={:.3}s:", 0.4 * horizon);
+    let mut t = Table::new(&[
+        "node policy", "completed", "shed(fail)", "shed(SLA)", "cluster QPS", "p99",
+    ]);
+    for policy in NodePolicy::ALL {
+        let m = cluster.route(&reqs, policy, card_policy, &drill)?;
+        t.row(&[
+            policy.name().to_string(),
+            m.cluster.completed.to_string(),
+            m.shed_failed.to_string(),
+            m.shed_admission.to_string(),
+            format!("{:.1}", m.cluster_qps()),
+            ms(m.cluster.latency.p99()),
+        ]);
+    }
+    t.print();
+
+    // execute the weighted plan's real numerics and show the per-node view
+    let m = cluster.serve(reqs, NodePolicy::WeightedCapacity, card_policy, &drill, threads)?;
+    println!(
+        "\nexecuted {} admitted requests' numerics (weighted, {threads} workers)",
+        m.cluster.completed
+    );
+    let span = m.cluster.wall_s;
+    let mut tn = Table::new(&["node", "completed", "shed", "busy", "availability", "state"]);
+    for nm in &m.per_node {
+        tn.row(&[
+            nm.node.to_string(),
+            nm.metrics.completed.to_string(),
+            (nm.shed_admission + nm.shed_failed).to_string(),
+            ms(nm.busy_s),
+            pct(nm.availability(span)),
+            if nm.failed_at_s.is_some() { "FAILED".into() } else { "up".to_string() },
+        ]);
+    }
+    tn.print();
+    Ok(())
+}

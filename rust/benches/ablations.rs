@@ -303,7 +303,7 @@ fn main() {
             for _ in 0..512 {
                 b.push(gen.next());
             }
-            let batches = b.drain();
+            let batches = b.drain().expect("batcher drain");
             let padded: usize = batches.iter().map(|x| x.padded_tokens()).sum();
             let real: usize = batches.iter().map(|x| x.real_tokens()).sum();
             t.row(&[

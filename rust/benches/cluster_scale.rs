@@ -1,0 +1,150 @@
+//! Bench: cluster-tier scaling — node counts x node policies, and the
+//! NIC-bound regime (Fig. 1 at datacenter scale, §VII).
+//!
+//!     cargo bench --bench cluster_scale
+//!     cargo bench --bench cluster_scale -- --requests 200 --mix 70/20/10 \
+//!         [--json BENCH_cluster_scale.json]
+//!
+//! Routes (never executes) a deterministic mixed burst through tiers of
+//! 1/2/4 nodes under every node policy, then sweeps the NIC line rate on a
+//! fixed tier to show cluster throughput pinned by `NicSpec.bw_bits` while
+//! the cards' modeled costs stay untouched. Bit-reproducible: same flags,
+//! same numbers.
+
+use fbia::config::Config;
+use fbia::serving::cluster::{Cluster, NodePolicy, Scenario};
+use fbia::serving::fleet::{Arrival, FamilyMix, FleetConfig, RoutePolicy, TrafficGen};
+use fbia::util::bench::section;
+use fbia::util::cli::Args;
+use fbia::util::json::Json;
+use fbia::util::table::{ms, Table};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env(false);
+    let requests = args.get_usize("requests", 150).max(1);
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10")).expect("mix");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let cfg = Config::default();
+    let fcfg = FleetConfig { replicas: 2, ..FleetConfig::default() };
+    let card_policy = RoutePolicy::LatencyAware;
+
+    section("Cluster tier: node count x node policy (modeled clock, burst)");
+    let mut rows = Vec::new();
+    let mut t = Table::new(&["nodes", "node policy", "completed", "cluster QPS", "p50", "p99"]);
+    for nodes in [1usize, 2, 4] {
+        let specs = vec![cfg.node.clone(); nodes];
+        let cluster =
+            Arc::new(Cluster::new(&dir, &cfg, &specs, fcfg.clone()).expect("cluster"));
+        let mut traffic =
+            TrafficGen::new(1, mix, Arrival::Burst, cluster.manifest(), fcfg.recsys_batch)
+                .expect("traffic");
+        let reqs = traffic.take(requests);
+        for policy in NodePolicy::ALL {
+            let m = cluster
+                .route(&reqs, policy, card_policy, &Scenario::none())
+                .expect("route");
+            t.row(&[
+                nodes.to_string(),
+                policy.name().to_string(),
+                m.cluster.completed.to_string(),
+                format!("{:.1}", m.cluster_qps()),
+                ms(m.cluster.latency.p50()),
+                ms(m.cluster.latency.p99()),
+            ]);
+            rows.push((nodes, policy, m.cluster_qps(), m.shed_rate()));
+        }
+    }
+    t.print();
+
+    // more nodes must buy throughput under the capacity-aware policy
+    let qps_of = |n: usize| {
+        rows.iter()
+            .find(|(k, p, _, _)| *k == n && *p == NodePolicy::WeightedCapacity)
+            .map(|(_, _, q, _)| *q)
+            .unwrap()
+    };
+    println!();
+    println!(
+        "scaling (weighted): 1 node {:.1} -> 2 nodes {:.1} -> 4 nodes {:.1} QPS -> {}",
+        qps_of(1),
+        qps_of(2),
+        qps_of(4),
+        if qps_of(2) > qps_of(1) && qps_of(4) > qps_of(2) { "holds" } else { "VIOLATED" }
+    );
+
+    section("NIC-bound regime: cluster QPS vs NIC line rate (2 nodes)");
+    let mut nic_rows = Vec::new();
+    let mut tn = Table::new(&["NIC bw (Mbit/s)", "cluster QPS", "p99"]);
+    for bw_mbit in [400.0f64, 200.0, 100.0] {
+        let mut node = cfg.node.clone();
+        node.nic.bw_bits = bw_mbit * 1e6;
+        let specs = vec![node; 2];
+        let cluster =
+            Arc::new(Cluster::new(&dir, &cfg, &specs, fcfg.clone()).expect("cluster"));
+        let mut traffic =
+            TrafficGen::new(1, mix, Arrival::Burst, cluster.manifest(), fcfg.recsys_batch)
+                .expect("traffic");
+        let reqs = traffic.take(requests);
+        let m = cluster
+            .route(&reqs, NodePolicy::WeightedCapacity, card_policy, &Scenario::none())
+            .expect("route");
+        tn.row(&[
+            format!("{bw_mbit:.0}"),
+            format!("{:.1}", m.cluster_qps()),
+            ms(m.cluster.latency.p99()),
+        ]);
+        nic_rows.push((bw_mbit, m.cluster_qps()));
+    }
+    tn.print();
+    println!(
+        "NIC gates throughput: {:.1} -> {:.1} -> {:.1} QPS as the line rate halves -> {}",
+        nic_rows[0].1,
+        nic_rows[1].1,
+        nic_rows[2].1,
+        if nic_rows[0].1 > nic_rows[1].1 && nic_rows[1].1 > nic_rows[2].1 {
+            "holds"
+        } else {
+            "VIOLATED"
+        }
+    );
+
+    if let Some(path) = args.get("json") {
+        let json = Json::obj(vec![
+            ("bench", Json::str("cluster_scale")),
+            ("mix", Json::str(&mix.label())),
+            ("requests", Json::num(requests as f64)),
+            (
+                "scaling",
+                Json::arr(
+                    rows.iter()
+                        .map(|(n, p, q, s)| {
+                            Json::obj(vec![
+                                ("nodes", Json::num(*n as f64)),
+                                ("policy", Json::str(p.name())),
+                                ("cluster_qps", Json::num(*q)),
+                                ("shed_rate", Json::num(*s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "nic_sweep",
+                Json::arr(
+                    nic_rows
+                        .iter()
+                        .map(|(bw, q)| {
+                            Json::obj(vec![
+                                ("bw_mbit", Json::num(*bw)),
+                                ("cluster_qps", Json::num(*q)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path, json.to_string()).expect("writing bench json");
+        println!("wrote {path}");
+    }
+}

@@ -27,6 +27,15 @@ pub struct OpCost {
 /// dominated — the reason §VI-A keeps tiny ops on the host CPU.
 pub const OP_OVERHEAD_S: f64 = 2.5e-6;
 
+/// Shared-DRAM occupancy factor for co-resident SLS + dense partitions
+/// (§VI-B: the recsys scheme keeps both on every card). The two partitions
+/// stream the same LPDDR controller — embedding lookups issue random row
+/// hits while the dense side streams activations — so each side sees the
+/// memory system stretched by the other's demand. 1.5 models an even
+/// interleave where the co-resident claims half the effective bandwidth;
+/// an isolated partition (a card hosting only one of the two) runs at 1.0.
+pub const SLS_DENSE_DRAM_OCCUPANCY: f64 = 1.5;
+
 /// Engine efficiency: fraction of peak the kernels achieve. Matrix ops reach
 /// a large fraction on well-shaped GEMMs; vector ops are bandwidth-limited
 /// anyway. The avgpool before its optimization (§VI-B) ran at a tiny
@@ -55,6 +64,22 @@ fn efficiency(kind: &OpKind) -> f64 {
 /// resident on-chip when they fit (`sram_resident_bytes` tracks what the
 /// compiler placed there).
 pub fn op_cost(g: &Graph, node: &Node, card: &CardSpec, weights_onchip: bool) -> OpCost {
+    op_cost_shared_dram(g, node, card, weights_onchip, 1.0)
+}
+
+/// [`op_cost`] with a shared-DRAM occupancy factor (>= 1): the DRAM-bound
+/// terms — SLS random row hits and streaming traffic whose weights did not
+/// fit on-chip — stretch by `dram_occupancy` when another partition is
+/// co-resident on the card's memory system. SRAM-resident traffic and pure
+/// compute are unaffected; pass 1.0 for an isolated partition.
+pub fn op_cost_shared_dram(
+    g: &Graph,
+    node: &Node,
+    card: &CardSpec,
+    weights_onchip: bool,
+    dram_occupancy: f64,
+) -> OpCost {
+    let dram_occupancy = dram_occupancy.max(1.0);
     let flops = ops::node_flops(g, node);
     let bytes = ops::node_bytes(g, node);
     let engine = node.kind.engine();
@@ -81,11 +106,14 @@ pub fn op_cost(g: &Graph, node: &Node, card: &CardSpec, weights_onchip: bool) ->
     // (Table II) and motivates the near-memory-processing discussion (§VIII).
     if let OpKind::SparseLengthsSum { avg_lookups } = node.kind {
         let pooled_rows = g.tensor(node.outputs[0]).shape.dim(0) as f64;
-        compute_1core_s += pooled_rows * avg_lookups * 70e-9;
+        compute_1core_s += pooled_rows * avg_lookups * 70e-9 * dram_occupancy;
     }
 
-    let bw = if weights_onchip { card.sram_bw } else { card.lpddr_bw };
-    let memory_s = bytes / bw;
+    let memory_s = if weights_onchip {
+        bytes / card.sram_bw
+    } else {
+        bytes * dram_occupancy / card.lpddr_bw
+    };
 
     OpCost { flops, bytes, compute_1core_s, memory_s, weights_onchip }
 }
@@ -182,6 +210,42 @@ mod tests {
         let ts = op_cost(&g, g.node(slow), &card, false).compute_1core_s;
         let tf = op_cost(&g, g.node(fast), &card, false).compute_1core_s;
         assert!(ts / tf > 10.0, "{ts} {tf}");
+    }
+
+    #[test]
+    fn shared_dram_occupancy_scales_only_dram_bound_terms() {
+        let card = CardSpec::default();
+        // an SLS op's random row hits stretch with the occupancy factor
+        let mut g = Graph::new("t");
+        let idx = g.add_tensor("idx", Shape::new(&[64, 20]), DType::I32, TensorKind::Input);
+        let tab =
+            g.add_tensor("tab", Shape::new(&[10_000, 64]), DType::F32, TensorKind::Weight);
+        let y = g.add_tensor("y", Shape::new(&[64, 64]), DType::F32, TensorKind::Activation);
+        let n = g.add_node(
+            "sls",
+            OpKind::SparseLengthsSum { avg_lookups: 20.0 },
+            vec![idx, tab],
+            vec![y],
+        );
+        let iso = op_cost_shared_dram(&g, g.node(n), &card, false, 1.0);
+        let co = op_cost_shared_dram(&g, g.node(n), &card, false, SLS_DENSE_DRAM_OCCUPANCY);
+        assert!(
+            co.compute_1core_s > iso.compute_1core_s,
+            "co-resident SLS {} must exceed isolated {}",
+            co.compute_1core_s,
+            iso.compute_1core_s
+        );
+        assert!(co.memory_s > iso.memory_s);
+        // SRAM-resident traffic is not contended: same memory time either way
+        let (g2, n2) = fc_graph(32, 1024, 1024, true);
+        let a = op_cost_shared_dram(&g2, g2.node(n2), &card, true, 1.0);
+        let b = op_cost_shared_dram(&g2, g2.node(n2), &card, true, SLS_DENSE_DRAM_OCCUPANCY);
+        assert_eq!(a.memory_s, b.memory_s);
+        assert_eq!(a.compute_1core_s, b.compute_1core_s);
+        // factor 1.0 is the plain op_cost
+        let plain = op_cost(&g, g.node(n), &card, false);
+        assert_eq!(plain.compute_1core_s, iso.compute_1core_s);
+        assert_eq!(plain.memory_s, iso.memory_s);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //!   memory time for those ops.
 
 use crate::compiler::parallelize::ParallelPlan;
-use crate::compiler::perf_model::{op_cost, OP_OVERHEAD_S};
+use crate::compiler::perf_model::{op_cost_shared_dram, OP_OVERHEAD_S};
 use crate::graph::{Graph, NodeId, TensorKind};
 use crate::platform::CardSpec;
 use std::collections::HashMap;
@@ -84,6 +84,22 @@ pub fn schedule(
     cores: usize,
     use_hints: bool,
 ) -> Schedule {
+    schedule_shared_dram(g, nodes, plan, card, cores, use_hints, 1.0)
+}
+
+/// [`schedule`] for a partition that shares the card's DRAM with a
+/// co-resident partition: every op is costed with
+/// [`op_cost_shared_dram`]'s occupancy factor, so memory-bound ops stretch
+/// while compute-bound ones are untouched (§VI-B SLS/dense co-residency).
+pub fn schedule_shared_dram(
+    g: &Graph,
+    nodes: &[NodeId],
+    plan: &ParallelPlan,
+    card: &CardSpec,
+    cores: usize,
+    use_hints: bool,
+    dram_occupancy: f64,
+) -> Schedule {
     let cores = cores.max(1);
     let in_partition: HashMap<NodeId, ()> = nodes.iter().map(|&n| (n, ())).collect();
     let (onchip, hints_rejected, sram_resident_bytes) = sram_residency(g, nodes, card);
@@ -100,7 +116,7 @@ pub fn schedule(
     let time_1core: HashMap<NodeId, f64> = order
         .iter()
         .map(|&nid| {
-            let c = op_cost(g, &g.nodes[nid], card, onchip[nid]);
+            let c = op_cost_shared_dram(g, &g.nodes[nid], card, onchip[nid], dram_occupancy);
             (nid, c.time_s(plan.split_of(nid).max(1)))
         })
         .collect();
@@ -146,7 +162,7 @@ pub fn schedule(
             .fold(0.0, f64::max);
 
         let splits = plan.split_of(nid).max(1).min(cores);
-        let cost = op_cost(g, node, card, onchip[nid]);
+        let cost = op_cost_shared_dram(g, node, card, onchip[nid], dram_occupancy);
         // each subtask: compute/splits (already parallel) but memory shared
         let sub_time = (cost.compute_1core_s / splits as f64).max(cost.memory_s) + OP_OVERHEAD_S;
 

@@ -4,7 +4,7 @@
 //! `fbia --config node.json simulate --model xlmr` style; every example and
 //! bench constructs these programmatically too.
 
-use crate::platform::{CardSpec, HostSpec, NicSpec, NodeSpec, PcieSpec};
+use crate::platform::{CardSpec, ClusterSpec, HostSpec, NicSpec, NodeSpec, PcieSpec};
 use crate::util::json::Json;
 use crate::util::error::{bail, Context, Result};
 use std::path::Path;
@@ -107,6 +107,10 @@ pub struct Config {
     pub compiler: CompilerConfig,
     pub transfers: TransferConfig,
     pub serving: ServingConfig,
+    /// Optional datacenter tier: N nodes behind a node-level router.
+    /// `None` keeps single-node semantics (`fbia cluster` then builds a
+    /// uniform tier from `node` and its own `--nodes` flag).
+    pub cluster: Option<ClusterSpec>,
 }
 
 impl Config {
@@ -132,27 +136,30 @@ impl Config {
         if let Some(x) = j.get("serving") {
             apply_serving(&mut c.serving, x)?;
         }
+        if let Some(x) = j.get("cluster") {
+            c.cluster = Some(parse_cluster(x, &c.node)?);
+        }
         c.validate()?;
         Ok(c)
     }
 
     pub fn validate(&self) -> Result<()> {
-        if self.node.cards == 0 {
-            bail!("node.cards must be > 0");
-        }
-        if let Some((id, _)) =
-            self.node.card_overrides.iter().find(|(id, _)| *id >= self.node.cards)
-        {
-            bail!(
-                "node.card_overrides names card {id} but the node has {} cards",
-                self.node.cards
-            );
-        }
-        // first match wins in NodeSpec::card_spec, so a duplicate slot
-        // would silently drop the later entry — reject it instead
-        for (i, (id, _)) in self.node.card_overrides.iter().enumerate() {
-            if self.node.card_overrides[..i].iter().any(|(j, _)| j == id) {
-                bail!("node.card_overrides lists card {id} more than once");
+        validate_node("node", &self.node)?;
+        if let Some(cl) = &self.cluster {
+            if cl.nodes.is_empty() {
+                bail!("cluster.nodes must not be empty (give cluster.count or cluster.nodes)");
+            }
+            for (i, n) in cl.nodes.iter().enumerate() {
+                validate_node(&format!("cluster.nodes[{i}]"), n)?;
+            }
+            // at least one node must carry load: a tier that is all
+            // headroom has no capacity to plan around
+            if cl.headroom >= cl.nodes.len() {
+                bail!(
+                    "cluster.headroom ({}) must be smaller than the cluster node count ({})",
+                    cl.headroom,
+                    cl.nodes.len()
+                );
             }
         }
         if self.compiler.sls_cards > self.node.cards {
@@ -175,6 +182,30 @@ impl Config {
         }
         Ok(())
     }
+}
+
+/// Validate one node description; `path` names it in error messages
+/// ("node", or "cluster.nodes[i]" for tier members).
+fn validate_node(path: &str, n: &NodeSpec) -> Result<()> {
+    if n.cards == 0 {
+        bail!("{path}.cards must be > 0");
+    }
+    if let Some((id, _)) = n.card_overrides.iter().find(|(id, _)| *id >= n.cards) {
+        bail!("{path}.card_overrides names card {id} but the node has {} cards", n.cards);
+    }
+    // first match wins in NodeSpec::card_spec, so a duplicate slot
+    // would silently drop the later entry — reject it instead
+    for (i, (id, _)) in n.card_overrides.iter().enumerate() {
+        if n.card_overrides[..i].iter().any(|(j, _)| j == id) {
+            bail!("{path}.card_overrides lists card {id} more than once");
+        }
+    }
+    // a zero-bandwidth NIC makes every modeled ingress take forever — the
+    // cluster tier serializes request bytes on this link
+    if !(n.nic.bw_bits > 0.0) {
+        bail!("{path}.nic.bw_bits must be positive (got {})", n.nic.bw_bits);
+    }
+    Ok(())
 }
 
 fn f(j: &Json, key: &str, cur: f64) -> f64 {
@@ -245,6 +276,33 @@ fn apply_node(n: &mut NodeSpec, j: &Json) -> Result<()> {
         n.nic = NicSpec { bw_bits: f(nic, "bw_bits", NicSpec::default().bw_bits) };
     }
     Ok(())
+}
+
+/// Cluster tier: either `count` copies of the base node or an explicit
+/// `nodes` list. Each list entry is a full node description parsed on top
+/// of the (possibly customized) base `node`, so a heterogeneous tier only
+/// states its differences — e.g. `{"cards": 4, "nic": {"bw_bits": 25e9}}`.
+fn parse_cluster(j: &Json, base: &NodeSpec) -> Result<ClusterSpec> {
+    let nodes = if let Some(arr) = j.get("nodes").and_then(Json::as_arr) {
+        let mut nodes = Vec::with_capacity(arr.len());
+        for (i, entry) in arr.iter().enumerate() {
+            let mut spec = base.clone();
+            apply_node(&mut spec, entry).with_context(|| format!("cluster.nodes[{i}]"))?;
+            nodes.push(spec);
+        }
+        nodes
+    } else {
+        let count = u(j, "count", 0);
+        if count == 0 {
+            bail!("cluster.count must be > 0 (or give an explicit cluster.nodes list)");
+        }
+        vec![base.clone(); count]
+    };
+    // default: one node of failure headroom — but a single-node tier has
+    // none to give, and the user should not be rejected over a key they
+    // never wrote (explicit "headroom": 1 on one node still errors)
+    let headroom = u(j, "headroom", usize::from(nodes.len() > 1));
+    Ok(ClusterSpec { nodes, headroom })
 }
 
 fn apply_compiler(c: &mut CompilerConfig, j: &Json) {
@@ -338,6 +396,69 @@ mod tests {
         )
         .unwrap();
         assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cluster_spec_parses_uniform_and_heterogeneous_tiers() {
+        // count replicates the (customized) base node
+        let j = Json::parse(
+            r#"{"node": {"cards": 4}, "cluster": {"count": 3, "headroom": 1}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        let cl = c.cluster.as_ref().unwrap();
+        assert_eq!(cl.nodes.len(), 3);
+        assert_eq!(cl.headroom, 1);
+        assert!(cl.nodes.iter().all(|n| n.cards == 4));
+        // explicit nodes state only their differences from the base node
+        let j = Json::parse(
+            r#"{"node": {"cards": 6},
+                "cluster": {"headroom": 1, "nodes": [
+                    {},
+                    {"cards": 2, "nic": {"bw_bits": 25e9}}]}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        let cl = c.cluster.as_ref().unwrap();
+        assert_eq!(cl.nodes.len(), 2);
+        assert_eq!(cl.nodes[0].cards, 6);
+        assert_eq!(cl.nodes[1].cards, 2);
+        assert_eq!(cl.nodes[1].nic.bw_bits, 25e9);
+        assert_eq!(cl.nodes[0].nic.bw_bits, 50e9);
+        // no cluster key: cluster stays None
+        assert!(Config::from_json(&Json::parse("{}").unwrap()).unwrap().cluster.is_none());
+    }
+
+    #[test]
+    fn cluster_spec_errors_name_the_offending_field() {
+        let err_of = |s: &str| Config::from_json(&Json::parse(s).unwrap()).unwrap_err().to_string();
+        // bad node counts
+        let e = err_of(r#"{"cluster": {"count": 0}}"#);
+        assert!(e.contains("cluster.count"), "{e}");
+        let e = err_of(r#"{"cluster": {"nodes": []}}"#);
+        assert!(e.contains("cluster.nodes"), "{e}");
+        let e = err_of(r#"{"cluster": {"nodes": [{"cards": 0}]}}"#);
+        assert!(e.contains("cluster.nodes[0].cards"), "{e}");
+        // zero NIC bandwidth, on a tier member and on the base node
+        let e = err_of(r#"{"cluster": {"nodes": [{}, {"nic": {"bw_bits": 0}}]}}"#);
+        assert!(e.contains("cluster.nodes[1].nic.bw_bits"), "{e}");
+        let e = err_of(r#"{"node": {"nic": {"bw_bits": -1}}}"#);
+        assert!(e.contains("node.nic.bw_bits"), "{e}");
+        // headroom >= node count
+        let e = err_of(r#"{"cluster": {"count": 2, "headroom": 2}}"#);
+        assert!(e.contains("cluster.headroom"), "{e}");
+        assert!(e.contains('2'), "{e}");
+        let e = err_of(r#"{"cluster": {"count": 1, "headroom": 1}}"#);
+        assert!(e.contains("cluster.headroom"), "{e}");
+        // ...but a single-node tier without an explicit headroom is fine
+        // (the default headroom only applies when there is a node to spare)
+        let c = Config::from_json(&Json::parse(r#"{"cluster": {"count": 1}}"#).unwrap()).unwrap();
+        assert_eq!(c.cluster.as_ref().unwrap().headroom, 0);
+        // per-member card overrides are validated with the member's path
+        let e = err_of(
+            r#"{"cluster": {"nodes": [{"cards": 2, "card_overrides": [{"card": 5}]}]}}"#,
+        );
+        assert!(e.contains("cluster.nodes[0].card_overrides"), "{e}");
     }
 
     #[test]

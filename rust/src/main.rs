@@ -15,6 +15,10 @@
 //!                     modeled clock and checks latency-aware vs round-robin
 //!   capacity          print the Fig. 1 capacity series (accelerator side
 //!                     measured by the fleet router on a mixed trace)
+//!   cluster           multi-node tier: route a mixed stream across N
+//!                     NIC-limited nodes (`--nodes 3 --policy weighted`),
+//!                     inject node failures/drains (`--fail 0@0.5`), and
+//!                     size the tier with failure headroom (`--qps/--headroom`)
 
 use fbia::capacity::GrowthScenario;
 use fbia::config::Config;
@@ -22,6 +26,7 @@ use fbia::graph::models::ModelId;
 use fbia::numerics::validate;
 use fbia::numerics::weights::WeightGen;
 use fbia::runtime::{Clock, Engine, SimBackend};
+use fbia::serving::cluster::{self, Cluster, ClusterMetrics, EventKind, NodePolicy, Scenario};
 use fbia::serving::fleet::{
     plan::plan_capacity, Arrival, FamilyMix, Fleet, FleetConfig, FleetMetrics, Placement,
     RoutePolicy, TrafficGen,
@@ -45,9 +50,10 @@ fn main() {
         Some("validate-numerics") => cmd_validate(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("capacity") => cmd_capacity(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("info") | None => cmd_info(&args),
         Some(other) => Err(err!(
-            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity)"
+            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster)"
         )),
     };
     if let Err(e) = result {
@@ -564,6 +570,260 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         ]);
         std::fs::write(path, json.to_string())
             .map_err(|e| err!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `fbia cluster`: the multi-node tier. Sweeps node policies on a burst
+/// trace, sizes the tier with failure headroom (`--qps`, `--headroom`),
+/// and runs a node-fail/drain scenario (`--fail 0@0.5`, `--drain 1@0.2`;
+/// a default drill kills node 0 mid-trace when neither is given).
+/// Modeled clock only, like `fbia capacity`.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let requested = args
+        .get("backend")
+        .map(str::to_string)
+        .or_else(|| std::env::var("FBIA_BACKEND").ok());
+    if let Some(b) = requested {
+        if b != "sim" {
+            fbia::runtime::backend_by_name(&b)?;
+            bail!(
+                "fbia cluster plans multi-node tiers on the modeled clock; \
+                 only --backend sim is supported (got '{b}')"
+            );
+        }
+    }
+    let fcfg = fleet_config(args)?;
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
+    let requests = args.get_usize("requests", 150).max(1);
+    let seed = args.get_u64("seed", 1);
+    let threads = args.get_usize("threads", 4).max(1);
+    let dir = Path::new(args.get_or("artifacts", "artifacts"));
+    // node list: the config's cluster spec, or --nodes copies of its node
+    let (specs, default_headroom) = match &cfg.cluster {
+        Some(cl) => (cl.nodes.clone(), cl.headroom),
+        None => (vec![cfg.node.clone(); args.get_usize("nodes", 3).max(1)], 1),
+    };
+    let headroom = args.get_usize("headroom", default_headroom);
+    let card_policy = RoutePolicy::parse(args.get_or("card-policy", "latency-aware"))?;
+    let policies: Vec<NodePolicy> = match args.get_or("policy", "all") {
+        "all" => NodePolicy::ALL.to_vec(),
+        p => vec![NodePolicy::parse(p)?],
+    };
+    let detail_policy = *policies.last().unwrap();
+
+    let cluster = Arc::new(Cluster::new(dir, &cfg, &specs, fcfg.clone())?);
+    eprintln!(
+        "[fbia] cluster: {} nodes ({} cards each at default), sim backend, modeled clock",
+        cluster.node_count(),
+        specs[0].cards,
+    );
+
+    // --- policy sweep on a burst trace (saturation throughput) -----------
+    let mut traffic =
+        TrafficGen::new(seed, mix, Arrival::Burst, cluster.manifest(), fcfg.recsys_batch)?;
+    let burst = traffic.take(requests);
+    let mut sweep: Vec<ClusterMetrics> = Vec::new();
+    for &p in &policies {
+        sweep.push(cluster.route(&burst, p, card_policy, &Scenario::none())?);
+    }
+    println!(
+        "cluster: {} nodes, mix {} over {requests} requests (burst, card policy {})",
+        cluster.node_count(),
+        mix.label(),
+        card_policy.name()
+    );
+    let mut t = Table::new(&["node policy", "completed", "shed", "cluster QPS", "p50", "p99"]);
+    for m in &sweep {
+        t.row(&[
+            m.node_policy.name().to_string(),
+            m.cluster.completed.to_string(),
+            m.shed().to_string(),
+            format!("{:.1}", m.cluster_qps()),
+            ms(m.cluster.latency.p50()),
+            ms(m.cluster.latency.p99()),
+        ]);
+    }
+    t.print();
+
+    // --- capacity planning with failure headroom -------------------------
+    let report = cluster::plan::plan_capacity(
+        dir,
+        &cfg,
+        &fcfg,
+        mix,
+        detail_policy,
+        card_policy,
+        args.get_f64("qps", 0.0),
+        headroom,
+        requests,
+    )?;
+    println!(
+        "\ncapacity: one node sustains {:.1} QPS; {:.1} QPS target -> {} nodes + {} headroom = {}",
+        report.node_qps,
+        report.target_qps,
+        report.nodes_needed,
+        report.headroom,
+        report.nodes_total
+    );
+    println!(
+        "failure drill (kill 1 of {} at target load): SLA shed {}, in-flight lost {} -> {}",
+        report.nodes_total,
+        report.sla_shed_after_failure,
+        report.failure_shed,
+        if report.survives_single_node_failure { "headroom holds" } else { "HEADROOM INSUFFICIENT" }
+    );
+    let mut tg = Table::new(&["quarter", "demand (QPS)", "nodes (incl. headroom)"]);
+    for (q, demand, nodes) in &report.growth {
+        tg.row(&[q.to_string(), format!("{demand:.0}"), nodes.to_string()]);
+    }
+    tg.print();
+
+    // --- drain/fail scenario at mid-tier load ----------------------------
+    let mut events = Vec::new();
+    let mut horizon_rate = report.node_qps * cluster.node_count() as f64 * 0.5;
+    if !(horizon_rate > 0.0) {
+        horizon_rate = 100.0;
+    }
+    let mut traffic = TrafficGen::new(
+        seed ^ 0xD1CE,
+        mix,
+        Arrival::Poisson { rate_qps: horizon_rate },
+        cluster.manifest(),
+        fcfg.recsys_batch,
+    )?;
+    let open = traffic.take(requests);
+    let horizon = open.last().map(|r| r.arrival_s()).unwrap_or(0.0);
+    if let Some(s) = args.get("drain") {
+        events.extend(cluster::parse_events(EventKind::Drain, s)?);
+    }
+    if let Some(s) = args.get("fail") {
+        events.extend(cluster::parse_events(EventKind::Fail, s)?);
+    }
+    if events.is_empty() {
+        // default drill: node 0 dies 40% into the trace
+        events.push(fbia::serving::cluster::NodeEvent {
+            at_s: 0.4 * horizon,
+            node: 0,
+            kind: EventKind::Fail,
+        });
+    }
+    let scenario = Scenario::new(events);
+    let fail_run = if args.flag("no-execute") {
+        cluster.route(&open, detail_policy, card_policy, &scenario)?
+    } else {
+        // execute the admitted requests' real numerics too
+        cluster.serve(open.clone(), detail_policy, card_policy, &scenario, threads)?
+    };
+    println!(
+        "\nscenario ({} @ {:.0} QPS open-loop): completed {}, shed {} (admission {}, failed {}, unroutable {})",
+        detail_policy.name(),
+        horizon_rate,
+        fail_run.cluster.completed,
+        fail_run.shed(),
+        fail_run.shed_admission,
+        fail_run.shed_failed,
+        fail_run.shed_unroutable
+    );
+    let span = fail_run.cluster.wall_s;
+    let mut tn = Table::new(&[
+        "node", "offered", "completed", "shed", "busy", "NIC rx", "availability", "state",
+    ]);
+    for nm in &fail_run.per_node {
+        let state = if nm.failed_at_s.is_some() {
+            "FAILED"
+        } else if nm.drained_at_s.is_some() {
+            "drained"
+        } else {
+            "up"
+        };
+        tn.row(&[
+            nm.node.to_string(),
+            nm.offered.to_string(),
+            nm.metrics.completed.to_string(),
+            (nm.shed_admission + nm.shed_failed).to_string(),
+            ms(nm.busy_s),
+            ms(nm.nic_rx_busy_s),
+            pct(nm.availability(span)),
+            state.to_string(),
+        ]);
+    }
+    tn.print();
+
+    if let Some(path) = args.get("json") {
+        let json = Json::obj(vec![
+            ("bench", Json::str("cluster_smoke")),
+            ("backend", Json::str("sim")),
+            ("nodes", Json::num(cluster.node_count() as f64)),
+            ("mix", Json::str(&mix.label())),
+            ("requests", Json::num(requests as f64)),
+            ("card_policy", Json::str(card_policy.name())),
+            (
+                "policies",
+                Json::arr(
+                    sweep
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("policy", Json::str(m.node_policy.name())),
+                                ("cluster_qps", Json::num(m.cluster_qps())),
+                                ("completed", Json::num(m.cluster.completed as f64)),
+                                ("shed", Json::num(m.shed() as f64)),
+                                ("shed_rate", Json::num(m.shed_rate())),
+                                ("p50_ms", Json::num(m.cluster.latency.p50() * 1e3)),
+                                ("p99_ms", Json::num(m.cluster.latency.p99() * 1e3)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "capacity",
+                Json::obj(vec![
+                    ("node_qps", Json::num(report.node_qps)),
+                    ("target_qps", Json::num(report.target_qps)),
+                    ("nodes_needed", Json::num(report.nodes_needed as f64)),
+                    ("headroom", Json::num(report.headroom as f64)),
+                    ("nodes_total", Json::num(report.nodes_total as f64)),
+                    (
+                        "sla_shed_after_failure",
+                        Json::num(report.sla_shed_after_failure as f64),
+                    ),
+                    ("failure_shed", Json::num(report.failure_shed as f64)),
+                    (
+                        "headroom_satisfies_sla_under_single_node_failure",
+                        Json::Bool(report.survives_single_node_failure),
+                    ),
+                ]),
+            ),
+            (
+                "fail_scenario",
+                Json::obj(vec![
+                    ("policy", Json::str(fail_run.node_policy.name())),
+                    ("rate_qps", Json::num(horizon_rate)),
+                    ("offered", Json::num(fail_run.offered as f64)),
+                    ("completed", Json::num(fail_run.cluster.completed as f64)),
+                    ("cluster_qps", Json::num(fail_run.cluster_qps())),
+                    ("shed_admission", Json::num(fail_run.shed_admission as f64)),
+                    ("shed_failed", Json::num(fail_run.shed_failed as f64)),
+                    ("shed_unroutable", Json::num(fail_run.shed_unroutable as f64)),
+                    ("shed_rate", Json::num(fail_run.shed_rate())),
+                    (
+                        "availability",
+                        Json::arr(
+                            fail_run
+                                .per_node
+                                .iter()
+                                .map(|nm| Json::num(nm.availability(span)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ]);
+        std::fs::write(path, json.to_string()).map_err(|e| err!("writing {path}: {e}"))?;
         println!("wrote {path}");
     }
     Ok(())

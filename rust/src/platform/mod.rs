@@ -8,7 +8,7 @@
 pub mod topology;
 
 /// One accelerator card (§III-B, Figure 4).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CardSpec {
     /// Number of Accel Cores.
     pub accel_cores: usize,
@@ -66,7 +66,7 @@ impl CardSpec {
 }
 
 /// Host CPU (§III-A: Intel Xeon D, 64 GB).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HostSpec {
     pub cores: usize,
     pub mem_bytes: usize,
@@ -87,7 +87,7 @@ impl Default for HostSpec {
 }
 
 /// PCIe fabric (§III-A): x4 per card to the switch, x16 switch to host.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PcieSpec {
     /// Effective bytes/sec per lane (PCIe gen3 ~0.985 GB/s).
     pub lane_bw: f64,
@@ -109,7 +109,7 @@ impl Default for PcieSpec {
 }
 
 /// NIC (§III-A: upgraded 50 Gbps multi-host NIC).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NicSpec {
     pub bw_bits: f64,
 }
@@ -121,7 +121,7 @@ impl Default for NicSpec {
 }
 
 /// The whole node.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NodeSpec {
     pub cards: usize,
     /// The base card every slot carries unless overridden below.
@@ -201,9 +201,65 @@ impl NodeSpec {
     }
 }
 
+/// A datacenter serving tier: N whole nodes behind a node-level router
+/// (Fig. 1 sizes exactly this — how many servers a demand curve needs).
+///
+/// Nodes may be heterogeneous (a vendor-mix *fleet*, not just vendor-mix
+/// cards within one node): each entry carries its own card count, card
+/// overrides and NIC. `headroom` is the failure margin the capacity
+/// planner adds on top of the load-driven node count, so the tier still
+/// meets its SLA with that many nodes down (§VII's operational lesson).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+    /// Extra nodes beyond the load-driven count — must be smaller than the
+    /// node count (a tier that is all headroom serves nothing).
+    pub headroom: usize,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec::uniform(3, NodeSpec::default(), 1)
+    }
+}
+
+impl ClusterSpec {
+    /// `n` identical nodes plus `headroom` failure margin.
+    pub fn uniform(n: usize, node: NodeSpec, headroom: usize) -> ClusterSpec {
+        ClusterSpec { nodes: vec![node; n.max(1)], headroom }
+    }
+
+    /// Aggregate NIC line rate, bits/sec — the tier's ingress ceiling.
+    pub fn total_nic_bw_bits(&self) -> f64 {
+        self.nodes.iter().map(|n| n.nic.bw_bits).sum()
+    }
+
+    /// Aggregate peak int8 TOPS across all nodes.
+    pub fn total_tops_int8(&self) -> f64 {
+        self.nodes.iter().map(NodeSpec::total_tops_int8).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cluster_spec_aggregates() {
+        let c = ClusterSpec::default();
+        assert_eq!(c.nodes.len(), 3);
+        assert_eq!(c.headroom, 1);
+        assert!((c.total_nic_bw_bits() - 3.0 * 50e9).abs() < 1e-3);
+        assert!((c.total_tops_int8() - 3.0 * NodeSpec::default().total_tops_int8()).abs() < 1e-9);
+        // heterogeneous tiers aggregate per node
+        let mut small = NodeSpec::default();
+        small.cards = 2;
+        small.nic.bw_bits = 25e9;
+        let mixed = ClusterSpec { nodes: vec![NodeSpec::default(), small], headroom: 0 };
+        assert!((mixed.total_nic_bw_bits() - 75e9).abs() < 1e-3);
+        // uniform clamps a zero count to one node
+        assert_eq!(ClusterSpec::uniform(0, NodeSpec::default(), 0).nodes.len(), 1);
+    }
 
     #[test]
     fn paper_headline_numbers() {

@@ -63,6 +63,11 @@ pub struct ModeledCost {
     pub compute_s: f64,
     /// PCIe segments (request upload + result download + P2P), seconds.
     pub transfer_s: f64,
+    /// Shared-DRAM occupancy factor already folded into `compute_s`
+    /// (see [`crate::compiler::perf_model::op_cost_shared_dram`]): 1.0 for
+    /// an isolated partition; > 1.0 when the model's card co-hosts another
+    /// partition contending for the same LPDDR (§VI-B SLS + dense).
+    pub dram_occupancy: f64,
 }
 
 impl ModeledCost {

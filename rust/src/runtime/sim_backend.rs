@@ -71,28 +71,45 @@ impl SimBackend {
         art: &Artifact,
         device: &Device,
     ) -> Result<ModeledCost> {
-        let (graph, nodes, cores) = self.cost_graph(manifest, art, &device.card)?;
+        // §VI-B co-residency: in the deployed recsys scheme every card up
+        // to `sls_cards` hosts an SLS shard *and* a dense replica, so a
+        // DLRM partition pinned there shares the card's cores and — the
+        // part the core split does not capture — its LPDDR. Both DLRM
+        // partitions on such a card pay the shared-DRAM occupancy factor;
+        // a DLRM partition on a card past the shard range runs isolated
+        // (all cores, uncontended DRAM).
+        let co_resident = art.model == "dlrm" && device.id < self.cfg.compiler.sls_cards;
+        let dram_occupancy = if co_resident {
+            crate::compiler::perf_model::SLS_DENSE_DRAM_OCCUPANCY
+        } else {
+            1.0
+        };
+        let (graph, nodes, cores) = self.cost_graph(manifest, art, &device.card, co_resident)?;
         let plan = parallelize::parallelize(&graph, &device.card, self.cfg.compiler.parallelize);
-        let sched = placement::schedule(
+        let sched = placement::schedule_shared_dram(
             &graph,
             &nodes,
             &plan,
             &device.card,
             cores,
             self.cfg.compiler.placement_hints,
+            dram_occupancy,
         );
         let transfer_s = self.transfer_s(manifest, art, device)?;
-        Ok(ModeledCost { compute_s: sched.makespan_s, transfer_s })
+        Ok(ModeledCost { compute_s: sched.makespan_s, transfer_s, dram_occupancy })
     }
 
     /// Build the artifact's cost graph: the op set whose roofline costs make
-    /// up its on-card time, plus the core count its partition kind gets
-    /// (§VI-B: SLS and dense partitions share a card's cores 1-in-3).
+    /// up its on-card time, plus the core count its partition kind gets.
+    /// `co_resident` says whether the §VI-B SLS/dense pair shares this
+    /// card: then the two partitions split the cores 1-in-3; an isolated
+    /// partition owns the whole card.
     fn cost_graph(
         &self,
         manifest: &Arc<Manifest>,
         art: &Artifact,
         card: &CardSpec,
+        co_resident: bool,
     ) -> Result<(Graph, Vec<NodeId>, usize)> {
         let cores = card.accel_cores.max(1);
         // §VI-B core split between the co-resident SLS and dense partitions;
@@ -117,7 +134,7 @@ impl SimBackend {
                     .map(|n| n.id)
                     .take(n_tables)
                     .collect();
-                Ok((g, nodes, sls_cores))
+                Ok((g, nodes, if co_resident { sls_cores } else { cores }))
             }
             ("dlrm", "dense") => {
                 let spec = dlrm_spec(manifest, art)?;
@@ -133,7 +150,7 @@ impl SimBackend {
                     })
                     .map(|n| n.id)
                     .collect();
-                Ok((g, nodes, cores - sls_cores))
+                Ok((g, nodes, if co_resident { cores - sls_cores } else { cores }))
             }
             ("xlmr", _) => {
                 let seq = art.seq.ok_or_else(|| err!("xlmr artifact {} missing seq", art.name))?;
@@ -270,7 +287,8 @@ impl Backend for SimBackend {
     fn compile(&self, manifest: &Arc<Manifest>, art: &Artifact) -> Result<()> {
         self.inner.compile(manifest, art)?;
         // "compilation" additionally checks the cost model can be built
-        self.cost_graph(manifest, art, &self.cfg.node.card).map(|_| ())
+        // (co-residency only changes core counts, not constructibility)
+        self.cost_graph(manifest, art, &self.cfg.node.card, true).map(|_| ())
     }
 
     fn prepare(
@@ -435,6 +453,47 @@ mod tests {
         );
         // total stays the sum of its parts
         assert_eq!(fast.total_s(), fast.compute_s + fast.transfer_s);
+    }
+
+    #[test]
+    fn co_located_sls_dense_slower_than_isolated() {
+        // sls_cards = 2: cards 0..2 host the §VI-B SLS/dense pair, cards
+        // 2.. host nothing else — the same artifact modeled on card 0
+        // (co-resident) must be slower than on card 5 (isolated), both via
+        // the shared-DRAM occupancy and the core split
+        let mut cfg = Config::default();
+        cfg.compiler.sls_cards = 2;
+        let b = SimBackend::new(cfg);
+        let m = Arc::new(builtin_manifest());
+        let node = Node::new(b.config().node.clone());
+
+        // the SLS shard is DRAM-random-access bound: strictly slower
+        let sls = m.get("dlrm_sls_shard0_b16").unwrap();
+        let co = b.model_cost(&m, sls, node.device(0)).unwrap();
+        let iso = b.model_cost(&m, sls, node.device(5)).unwrap();
+        assert_eq!(co.dram_occupancy, crate::compiler::perf_model::SLS_DENSE_DRAM_OCCUPANCY);
+        assert_eq!(iso.dram_occupancy, 1.0);
+        assert!(
+            co.compute_s > iso.compute_s,
+            "co-resident SLS {} must exceed isolated {}",
+            co.compute_s,
+            iso.compute_s
+        );
+
+        // the dense partition loses cores to the co-resident shard and
+        // pays the occupancy on any off-chip traffic: never faster
+        let dense = m.get("dlrm_dense_b16_fp32").unwrap();
+        let dco = b.model_cost(&m, dense, node.device(0)).unwrap();
+        let diso = b.model_cost(&m, dense, node.device(5)).unwrap();
+        assert!(
+            dco.compute_s >= diso.compute_s,
+            "co-resident dense {} must not beat isolated {}",
+            dco.compute_s,
+            diso.compute_s
+        );
+        // non-DLRM families never contend (they run whole-model per card)
+        let cv = m.get("cv_trunk_b1").unwrap();
+        assert_eq!(b.model_cost(&m, cv, node.device(0)).unwrap().dram_occupancy, 1.0);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! Naive mode batches FIFO and pads the whole batch to the largest member's
 //! bucket — the wasted-compute baseline the paper calls out.
 
+use crate::util::error::{err, Result};
 use crate::workloads::NlpRequest;
 
 /// A formed batch: member requests + the bucket they pad to.
@@ -89,40 +90,56 @@ impl Batcher {
 
     /// Form the next batch, if any. `force` drains even sub-max batches
     /// (timeout fired); otherwise only full batches are released.
-    pub fn pop(&mut self, force: bool) -> Option<NlpBatch> {
+    ///
+    /// Errs when a queued request no longer fits any bucket — that means
+    /// the bucket table changed (or was corrupted) after enqueue, and
+    /// silently padding to the largest bucket would run the batch on a net
+    /// compiled for a shorter sequence, truncating tokens. The queue is
+    /// left intact so no request is lost on the error path.
+    pub fn pop(&mut self, force: bool) -> Result<Option<NlpBatch>> {
         if self.length_aware {
             // fullest queue first
-            let (qi, _) = self
-                .queues
-                .iter()
-                .enumerate()
-                .max_by_key(|(_, q)| q.len())?;
+            let (qi, _) = match self.queues.iter().enumerate().max_by_key(|(_, q)| q.len()) {
+                Some(x) => x,
+                None => return Ok(None),
+            };
             let q = &mut self.queues[qi];
             if q.is_empty() || (!force && q.len() < self.max_batch) {
-                return None;
+                return Ok(None);
             }
             let take = q.len().min(self.max_batch);
             let requests: Vec<NlpRequest> = q.drain(..take).collect();
-            Some(NlpBatch { requests, bucket: self.buckets[qi] })
+            Ok(Some(NlpBatch { requests, bucket: self.buckets[qi] }))
         } else {
             if self.fifo.is_empty() || (!force && self.fifo.len() < self.max_batch) {
-                return None;
+                return Ok(None);
             }
             let take = self.fifo.len().min(self.max_batch);
+            // resolve the bucket before draining, so an error leaves the
+            // queued requests where they were
+            let max_len = self.fifo[..take].iter().map(|r| r.tokens.len()).max().unwrap_or(1);
+            let bucket = bucket_for(max_len, &self.buckets).ok_or_else(|| {
+                err!(
+                    "batcher popped a {take}-request batch whose longest member has \
+                     {max_len} tokens, exceeding the largest compiled bucket {} \
+                     (buckets {:?}); over-long requests must be rejected at enqueue, \
+                     not silently clamped",
+                    self.buckets.last().copied().unwrap_or(0),
+                    self.buckets
+                )
+            })?;
             let requests: Vec<NlpRequest> = self.fifo.drain(..take).collect();
-            let max_len = requests.iter().map(|r| r.tokens.len()).max().unwrap_or(1);
-            let bucket = bucket_for(max_len, &self.buckets).unwrap_or(*self.buckets.last().unwrap());
-            Some(NlpBatch { requests, bucket })
+            Ok(Some(NlpBatch { requests, bucket }))
         }
     }
 
     /// Drain everything into batches (end of run).
-    pub fn drain(&mut self) -> Vec<NlpBatch> {
+    pub fn drain(&mut self) -> Result<Vec<NlpBatch>> {
         let mut out = Vec::new();
-        while let Some(b) = self.pop(true) {
+        while let Some(b) = self.pop(true)? {
             out.push(b);
         }
-        out
+        Ok(out)
     }
 }
 
@@ -169,11 +186,11 @@ mod tests {
         for _ in 0..2 {
             b.push(req(50));
         }
-        let batch = b.pop(false).unwrap();
+        let batch = b.pop(false).unwrap().unwrap();
         assert_eq!(batch.bucket, 32);
         assert_eq!(batch.requests.len(), 4);
-        assert!(b.pop(false).is_none()); // 2 long ones wait for more
-        let forced = b.pop(true).unwrap();
+        assert!(b.pop(false).unwrap().is_none()); // 2 long ones wait for more
+        let forced = b.pop(true).unwrap().unwrap();
         assert_eq!(forced.bucket, 64);
     }
 
@@ -182,7 +199,7 @@ mod tests {
         let mut b = Batcher::new(vec![32, 64], 2, false);
         b.push(req(10));
         b.push(req(50));
-        let batch = b.pop(false).unwrap();
+        let batch = b.pop(false).unwrap().unwrap();
         assert_eq!(batch.bucket, 64); // the short sentence pays 64 slots
         assert!(batch.waste() > 0.5, "{}", batch.waste());
     }
@@ -197,7 +214,7 @@ mod tests {
                 let l = (3.6 + 0.5 * rng.normal()).exp().round() as usize;
                 b.push(req(l.clamp(1, 128)));
             }
-            let batches = b.drain();
+            let batches = b.drain().unwrap();
             let padded: usize = batches.iter().map(|x| x.padded_tokens()).sum();
             let real: usize = batches.iter().map(|x| x.real_tokens()).sum();
             (real, padded)
@@ -222,13 +239,13 @@ mod tests {
         // or an empty batch, in both modes
         for aware in [true, false] {
             let mut b = Batcher::new(vec![32, 64], 4, aware);
-            assert!(b.pop(true).is_none());
-            assert!(b.pop(false).is_none());
-            assert!(b.drain().is_empty());
+            assert!(b.pop(true).unwrap().is_none());
+            assert!(b.pop(false).unwrap().is_none());
+            assert!(b.drain().unwrap().is_empty());
             // and again after the batcher has cycled through requests
             b.push(req(10));
-            assert_eq!(b.drain().len(), 1);
-            assert!(b.pop(true).is_none());
+            assert_eq!(b.drain().unwrap().len(), 1);
+            assert!(b.pop(true).unwrap().is_none());
             assert_eq!(b.pending(), 0);
         }
     }
@@ -240,7 +257,7 @@ mod tests {
         b.push(req(65)); // one past: rejected
         assert_eq!(b.rejected, 1);
         assert_eq!(b.pending(), 1);
-        let batch = b.pop(true).unwrap();
+        let batch = b.pop(true).unwrap().unwrap();
         assert_eq!(batch.bucket, 64);
         assert_eq!(batch.requests.len(), 1);
     }
@@ -251,14 +268,14 @@ mod tests {
             let mut b = Batcher::new(vec![32], 4, aware);
             for _ in 0..3 {
                 b.push(req(8));
-                assert!(b.pop(false).is_none(), "aware={aware}: released a sub-max batch");
+                assert!(b.pop(false).unwrap().is_none(), "aware={aware}: released a sub-max batch");
             }
             b.push(req(8));
-            let batch = b.pop(false).unwrap();
+            let batch = b.pop(false).unwrap().unwrap();
             assert_eq!(batch.requests.len(), 4);
             // forced drain releases leftovers at any size
             b.push(req(8));
-            assert_eq!(b.pop(true).unwrap().requests.len(), 1);
+            assert_eq!(b.pop(true).unwrap().unwrap().requests.len(), 1);
         }
     }
 
@@ -271,7 +288,7 @@ mod tests {
             for i in 0..32 {
                 b.push(req(if i % 2 == 0 { 8 } else { 120 }));
             }
-            let batches = b.drain();
+            let batches = b.drain().unwrap();
             let padded: usize = batches.iter().map(|x| x.padded_tokens()).sum();
             let real: usize = batches.iter().map(|x| x.real_tokens()).sum();
             (real, padded, batches.len())
@@ -285,6 +302,27 @@ mod tests {
         let waste_a = 1.0 - real_a as f64 / padded_a as f64;
         let waste_n = 1.0 - real_n as f64 / padded_n as f64;
         assert!(waste_a < waste_n, "aware {waste_a} !< fifo {waste_n}");
+    }
+
+    #[test]
+    fn inconsistent_bucket_table_errors_instead_of_clamping() {
+        // regression: the naive-mode pop used to fall back to the largest
+        // bucket when the formed batch fit none — running the batch on a
+        // net compiled for a shorter sequence and silently truncating
+        // tokens. A corrupted bucket table must surface an error with the
+        // request context, and the queue must survive the failed pop.
+        let mut b = Batcher::new(vec![32, 64], 2, false);
+        b.push(req(50));
+        b.buckets = vec![32]; // shrunk behind the batcher's back
+        let e = b.pop(true).unwrap_err().to_string();
+        assert!(e.contains("50 tokens"), "{e}");
+        assert!(e.contains("32"), "{e}");
+        assert_eq!(b.pending(), 1, "failed pop must not lose the request");
+        // restoring the table lets the same request through, un-truncated
+        b.buckets = vec![32, 64];
+        let batch = b.pop(true).unwrap().unwrap();
+        assert_eq!(batch.bucket, 64);
+        assert_eq!(batch.requests.len(), 1);
     }
 
     #[test]
@@ -322,7 +360,7 @@ mod tests {
                     b.push(req(l));
                 }
                 let expect_kept = lens.iter().filter(|&&l| l <= 128).count();
-                let batches = b.drain();
+                let batches = b.drain().unwrap();
                 let total: usize = batches.iter().map(|x| x.requests.len()).sum();
                 if total != expect_kept {
                     return Err(format!("aware={aware}: {total} != {expect_kept}"));

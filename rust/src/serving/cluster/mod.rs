@@ -1,0 +1,543 @@
+//! Cluster tier: multi-node serving behind a datacenter router (Fig. 1,
+//! §VII).
+//!
+//! The paper deploys accelerator nodes as a *fleet behind a routing tier*:
+//! Fig. 1 sizes how many whole servers production traffic needs, and
+//! §VII's operating lessons — imbalance, stragglers, capacity headroom —
+//! are about many nodes, not one. This module is that tier on top of the
+//! per-node fleet layer:
+//!
+//! * a [`Cluster`] holds N nodes, each a full [`Fleet`] (its own engine,
+//!   replica set and card router) built from its own — possibly
+//!   heterogeneous — [`NodeSpec`], so vendor-mix *tiers* compose with
+//!   vendor-mix *cards*;
+//! * requests ingress over each node's NIC: [`WireModel`] prices the
+//!   request/response bytes (embedding index tensors in, fp16 outputs
+//!   out) and a per-node [`crate::sim::transfer::NicOccupancy`] serializes
+//!   them, so cluster throughput can become network-bound even while every
+//!   card sits idle;
+//! * the node router ([`router`]) picks a node per request
+//!   (round-robin / join-shortest-queue / weighted-by-modeled-capacity)
+//!   and composes with the existing per-node card router — two-tier
+//!   dispatch through [`crate::serving::fleet::NodePlanner`];
+//! * [`scenario`] injects node **drain** and **fail** events at trace
+//!   timestamps: a failed node's in-flight work is shed, traffic
+//!   re-routes, and the availability hit is recorded per node;
+//! * [`plan`] extends the fleet's Fig. 1 arithmetic to datacenter scale:
+//!   how many N-card nodes (plus failure headroom) carry Q QPS of a
+//!   70/20/10 mix within the SLA — verified by simulating the
+//!   single-node-failure scenario against the recommendation.
+//!
+//! Everything runs on the deterministic modeled clock: routing, NIC
+//! serialization and scenario handling are a pure planning pass, so
+//! metrics are bit-identical across runs and worker counts while the
+//! worker pool still executes every admitted request's real numerics.
+
+pub mod plan;
+pub mod router;
+pub mod scenario;
+
+pub use router::{ClusterPlan, ClusterPlanned, NodePolicy, NodeReport, Outcome};
+pub use scenario::{parse_events, EventKind, NodeEvent, Scenario};
+
+use crate::config::{Config, TransferConfig};
+use crate::platform::NodeSpec;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::{Clock, Engine, SimBackend};
+use crate::serving::fleet::replica::ReplicaManager;
+use crate::serving::fleet::{Family, FamilyMetrics, Fleet, FleetConfig, FleetRequest, RoutePolicy};
+use crate::serving::ServerMetrics;
+use crate::util::error::{bail, err, Result};
+use crate::util::stats::Histogram;
+use crate::util::threadpool::ThreadPool;
+use crate::workloads::AVG_LOOKUP_FRACTION;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Request/response wire sizes per family, priced once from the manifest
+/// shapes and the §VI-C transfer flags (partial index tensors and fp16
+/// dense features shrink the ingress exactly like they shrink the PCIe
+/// upload — the bytes that cross the NIC are the same bytes that later
+/// cross the switch).
+#[derive(Debug, Clone)]
+pub struct WireModel {
+    /// One recsys request (the fleet's serving batch): per-table index
+    /// prefixes + lengths + dense features.
+    recsys_in: usize,
+    /// fp16 score per item.
+    recsys_out: usize,
+    /// Pooled fp16 embedding.
+    nlp_out: usize,
+    /// fp16 pixels per image.
+    cv_in_per_image: usize,
+    /// fp16 logits per image.
+    cv_out_per_image: usize,
+}
+
+impl WireModel {
+    pub fn new(m: &Manifest, t: &TransferConfig, recsys_batch: usize) -> Result<WireModel> {
+        let num_tables = m.config_usize("dlrm", "num_tables")?;
+        let max_lookups = m.config_usize("dlrm", "max_lookups")?;
+        let used = if t.partial_tensors {
+            (((max_lookups as f64) * AVG_LOOKUP_FRACTION).ceil() as usize).clamp(1, max_lookups)
+        } else {
+            max_lookups
+        };
+        let dense_in = m.config_usize("dlrm", "dense_in")?;
+        let dense_elem = if t.fp16_dense_inputs { 2 } else { 4 };
+        let recsys_in = num_tables * (recsys_batch * used * 4 + recsys_batch * 4)
+            + recsys_batch * dense_in * dense_elem;
+        let d_model = m.config_usize("xlmr", "d_model")?;
+        let image = m.config_usize("cv", "image")?;
+        let classes = m.config_usize("cv", "classes")?;
+        Ok(WireModel {
+            recsys_in,
+            recsys_out: recsys_batch * 2,
+            nlp_out: d_model * 2,
+            cv_in_per_image: image * image * 3 * 2,
+            cv_out_per_image: classes * 2,
+        })
+    }
+
+    /// (ingress, egress) bytes for one request.
+    pub fn bytes(&self, req: &FleetRequest) -> (usize, usize) {
+        match req {
+            FleetRequest::Recsys { .. } => (self.recsys_in, self.recsys_out),
+            // token ids + a length word
+            FleetRequest::Nlp { req, .. } => (req.tokens.len() * 4 + 4, self.nlp_out),
+            FleetRequest::Cv { req, .. } => {
+                let b = req.image.shape().first().copied().unwrap_or(1);
+                (b * self.cv_in_per_image, b * self.cv_out_per_image)
+            }
+        }
+    }
+}
+
+/// One member of the tier: its hardware spec, its fleet (engine + replica
+/// set + card router), and the routing signal the weighted policy prices
+/// nodes with.
+pub struct ClusterNode {
+    pub spec: NodeSpec,
+    pub fleet: Arc<Fleet>,
+    /// Mean modeled request cost per family *on this node's cards* —
+    /// slower (vendor-mix) nodes carry larger costs, which is exactly what
+    /// weighted-by-modeled-capacity balances on.
+    pub fam_cost_s: [f64; 3],
+}
+
+impl ClusterNode {
+    pub fn replicas(&self) -> &ReplicaManager {
+        self.fleet.replicas()
+    }
+}
+
+/// Mean modeled request cost per family over a node's replica set.
+fn family_cost_estimates(r: &ReplicaManager) -> [f64; 3] {
+    fn mean(xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+    let recsys: Vec<f64> = (0..r.recsys.len()).map(|i| r.recsys_request_cost_s(i)).collect();
+    let mut nlp = Vec::new();
+    for rep in &r.nlp {
+        for &b in &r.buckets {
+            if let Some(c) = rep.cost(b) {
+                nlp.push(c.total_s());
+            }
+        }
+    }
+    let cv: Vec<f64> = r.cv.iter().map(|c| c.cost.total_s()).collect();
+    [mean(&recsys), mean(&nlp), mean(&cv)]
+}
+
+/// Per-node slice of a cluster run.
+#[derive(Debug, Clone)]
+pub struct NodeMetrics {
+    pub node: usize,
+    pub metrics: ServerMetrics,
+    /// Requests the node router sent here (admitted or shed at admission).
+    pub offered: usize,
+    pub shed_admission: usize,
+    pub shed_failed: usize,
+    /// Modeled card-compute seconds (failure-shed work included — the
+    /// cards burned that time before the node died).
+    pub busy_s: f64,
+    pub nic_rx_busy_s: f64,
+    pub nic_tx_busy_s: f64,
+    pub drained_at_s: Option<f64>,
+    pub failed_at_s: Option<f64>,
+}
+
+impl NodeMetrics {
+    /// Fraction of the run span this node accepted traffic — the
+    /// availability hit of a drain/fail event.
+    pub fn availability(&self, span_s: f64) -> f64 {
+        match self.failed_at_s.or(self.drained_at_s) {
+            None => 1.0,
+            Some(t) if span_s > 0.0 => (t / span_s).clamp(0.0, 1.0),
+            Some(_) => 0.0,
+        }
+    }
+}
+
+/// Everything a cluster run reports. The conservation invariant holds by
+/// construction: `cluster.completed + shed() == offered`.
+#[derive(Debug, Clone)]
+pub struct ClusterMetrics {
+    pub node_policy: NodePolicy,
+    pub card_policy: RoutePolicy,
+    pub cluster: ServerMetrics,
+    pub per_node: Vec<NodeMetrics>,
+    pub per_family: Vec<FamilyMetrics>,
+    pub offered: usize,
+    /// Shed by a node's own admission control (bounded queue / SLA / no
+    /// serving bucket) — the "SLA shed" the capacity planner drives to 0.
+    pub shed_admission: usize,
+    /// In flight on a node when it failed.
+    pub shed_failed: usize,
+    /// No node available to route to.
+    pub shed_unroutable: usize,
+}
+
+impl ClusterMetrics {
+    pub fn shed(&self) -> usize {
+        self.shed_admission + self.shed_failed + self.shed_unroutable
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        self.shed() as f64 / self.offered.max(1) as f64
+    }
+
+    pub fn cluster_qps(&self) -> f64 {
+        self.cluster.qps()
+    }
+}
+
+/// The tier: N nodes plus the shared wire model and per-node fleet knobs.
+pub struct Cluster {
+    nodes: Vec<ClusterNode>,
+    fleet_cfg: FleetConfig,
+    wire: WireModel,
+}
+
+impl Cluster {
+    /// Build one engine + fleet per node spec. Every node runs the sim
+    /// backend (the tier is a modeled-clock subsystem; per-request
+    /// numerics still execute for real through [`Cluster::serve`]).
+    /// `base` supplies everything except the per-node hardware; `dir` is
+    /// the artifacts directory (the builtin manifest serves when absent,
+    /// as everywhere else).
+    pub fn new(
+        dir: &Path,
+        base: &Config,
+        specs: &[NodeSpec],
+        fleet_cfg: FleetConfig,
+    ) -> Result<Cluster> {
+        if specs.is_empty() {
+            bail!("cluster needs at least one node");
+        }
+        let mut nodes: Vec<ClusterNode> = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            if spec.cards == 0 {
+                bail!("cluster node {i}: cards must be > 0");
+            }
+            if !(spec.nic.bw_bits > 0.0) {
+                bail!(
+                    "cluster node {i}: nic.bw_bits must be positive (got {})",
+                    spec.nic.bw_bits
+                );
+            }
+            // identical specs share one engine + prepared replica set: all
+            // per-node scheduling state (planner, NIC occupancy) lives in
+            // the router, and execution through the fleet is stateless, so
+            // a uniform tier pays for one build instead of N
+            if let Some(twin) = nodes.iter().find(|n| n.spec == *spec) {
+                let node = ClusterNode {
+                    spec: spec.clone(),
+                    fleet: Arc::clone(&twin.fleet),
+                    fam_cost_s: twin.fam_cost_s,
+                };
+                nodes.push(node);
+                continue;
+            }
+            let mut cfg = base.clone();
+            cfg.node = spec.clone();
+            // the §VI-B shard range cannot exceed this node's card count
+            cfg.compiler.sls_cards = cfg.compiler.sls_cards.min(spec.cards);
+            cfg.cluster = None; // nodes do not nest tiers
+            let engine = Arc::new(Engine::auto_with_backend(
+                dir,
+                Arc::new(SimBackend::new(cfg)),
+            )?);
+            debug_assert_eq!(engine.clock(), Clock::Modeled);
+            let fleet = Arc::new(Fleet::new(engine, fleet_cfg.clone())?);
+            let fam_cost_s = family_cost_estimates(fleet.replicas());
+            nodes.push(ClusterNode { spec: spec.clone(), fleet, fam_cost_s });
+        }
+        let wire =
+            WireModel::new(nodes[0].fleet.engine().manifest(), &base.transfers, fleet_cfg.recsys_batch)?;
+        Ok(Cluster { nodes, fleet_cfg, wire })
+    }
+
+    pub fn nodes(&self) -> &[ClusterNode] {
+        &self.nodes
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.fleet_cfg
+    }
+
+    pub fn wire(&self) -> &WireModel {
+        &self.wire
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.nodes[0].fleet.engine().manifest()
+    }
+
+    /// Plan the stream without executing numerics (policy sweeps, capacity
+    /// probes, scenario studies).
+    pub fn route(
+        &self,
+        reqs: &[FleetRequest],
+        node_policy: NodePolicy,
+        card_policy: RoutePolicy,
+        scenario: &Scenario,
+    ) -> Result<ClusterMetrics> {
+        let plan =
+            router::plan(&self.nodes, reqs, node_policy, card_policy, &self.fleet_cfg, scenario, &self.wire)?;
+        Ok(self.assemble(&plan, node_policy, card_policy))
+    }
+
+    /// Plan, then execute every completed request's real numerics on its
+    /// assigned node/replica with `workers` in flight. Metrics come from
+    /// the plan, so they are bit-identical across runs and worker counts.
+    pub fn serve(
+        self: &Arc<Self>,
+        reqs: Vec<FleetRequest>,
+        node_policy: NodePolicy,
+        card_policy: RoutePolicy,
+        scenario: &Scenario,
+        workers: usize,
+    ) -> Result<ClusterMetrics> {
+        let plan = router::plan(
+            &self.nodes,
+            &reqs,
+            node_policy,
+            card_policy,
+            &self.fleet_cfg,
+            scenario,
+            &self.wire,
+        )?;
+        self.execute(Arc::new(reqs), &plan, workers.max(1))?;
+        Ok(self.assemble(&plan, node_policy, card_policy))
+    }
+
+    fn assemble(
+        &self,
+        plan: &ClusterPlan,
+        node_policy: NodePolicy,
+        card_policy: RoutePolicy,
+    ) -> ClusterMetrics {
+        let span = plan.span_s;
+        let mk = || ServerMetrics {
+            latency: Histogram::latency(),
+            completed: 0,
+            items: 0,
+            wall_s: span,
+            clock: Clock::Modeled,
+        };
+        let mut cluster = mk();
+        let mut per_node: Vec<NodeMetrics> = plan
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(k, r)| NodeMetrics {
+                node: k,
+                metrics: mk(),
+                offered: 0,
+                shed_admission: 0,
+                shed_failed: 0,
+                busy_s: r.busy_s,
+                nic_rx_busy_s: r.nic_rx_busy_s,
+                nic_tx_busy_s: r.nic_tx_busy_s,
+                drained_at_s: r.drained_at_s,
+                failed_at_s: r.failed_at_s,
+            })
+            .collect();
+        let mut per_family: Vec<FamilyMetrics> = Family::ALL
+            .iter()
+            .map(|&f| FamilyMetrics { family: f, metrics: mk(), offered: 0, shed: 0 })
+            .collect();
+        let (mut shed_admission, mut shed_failed, mut shed_unroutable) = (0usize, 0usize, 0usize);
+        for p in &plan.planned {
+            let fam = &mut per_family[p.family.index()];
+            fam.offered += 1;
+            match p.outcome {
+                Outcome::Completed { node, latency_s, .. } => {
+                    cluster.latency.add(latency_s);
+                    cluster.completed += 1;
+                    cluster.items += p.items;
+                    fam.metrics.latency.add(latency_s);
+                    fam.metrics.completed += 1;
+                    fam.metrics.items += p.items;
+                    let nm = &mut per_node[node];
+                    nm.offered += 1;
+                    nm.metrics.latency.add(latency_s);
+                    nm.metrics.completed += 1;
+                    nm.metrics.items += p.items;
+                }
+                Outcome::ShedAdmission { node } => {
+                    shed_admission += 1;
+                    fam.shed += 1;
+                    per_node[node].offered += 1;
+                    per_node[node].shed_admission += 1;
+                }
+                Outcome::ShedFailed { node } => {
+                    shed_failed += 1;
+                    fam.shed += 1;
+                    per_node[node].offered += 1;
+                    per_node[node].shed_failed += 1;
+                }
+                Outcome::ShedUnroutable => {
+                    shed_unroutable += 1;
+                    fam.shed += 1;
+                }
+            }
+        }
+        ClusterMetrics {
+            node_policy,
+            card_policy,
+            cluster,
+            per_node,
+            per_family,
+            offered: plan.planned.len(),
+            shed_admission,
+            shed_failed,
+            shed_unroutable,
+        }
+    }
+
+    /// Execute the completed requests' numerics over a worker pool (the
+    /// per-node step is [`Fleet::execute_one`]).
+    fn execute(
+        self: &Arc<Self>,
+        reqs: Arc<Vec<FleetRequest>>,
+        plan: &ClusterPlan,
+        workers: usize,
+    ) -> Result<()> {
+        let admitted: Arc<Vec<(usize, usize, crate::serving::fleet::Decision)>> = Arc::new(
+            plan.planned
+                .iter()
+                .enumerate()
+                .filter_map(|(i, p)| match p.outcome {
+                    Outcome::Completed { node, decision, .. } => Some((i, node, decision)),
+                    _ => None,
+                })
+                .collect(),
+        );
+        let n = admitted.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let workers = workers.min(n);
+        let pool = ThreadPool::new(workers);
+        let next = Arc::new(AtomicUsize::new(0));
+        let failed = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Result<usize>>();
+        for _ in 0..workers {
+            let me = Arc::clone(self);
+            let reqs = Arc::clone(&reqs);
+            let admitted = Arc::clone(&admitted);
+            let next = Arc::clone(&next);
+            let failed = Arc::clone(&failed);
+            let tx = tx.clone();
+            pool.execute(move || {
+                let mut done = 0usize;
+                let res = loop {
+                    if failed.load(Ordering::Relaxed) {
+                        break Ok(());
+                    }
+                    let j = next.fetch_add(1, Ordering::Relaxed);
+                    if j >= n {
+                        break Ok(());
+                    }
+                    let (i, node, decision) = admitted[j];
+                    match me.nodes[node].fleet.execute_one(&reqs[i], decision) {
+                        Ok(()) => done += 1,
+                        Err(e) => {
+                            failed.store(true, Ordering::Relaxed);
+                            break Err(e);
+                        }
+                    }
+                };
+                let _ = tx.send(res.map(|()| done));
+            });
+        }
+        drop(tx);
+        let mut total = 0usize;
+        let mut first_err = None;
+        for r in rx.iter() {
+            match r {
+                Ok(d) => total += d,
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if total != n {
+            return Err(err!(
+                "cluster worker exited without reporting ({total} of {n} requests executed)"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::builtin::builtin_manifest;
+    use crate::workloads::{NlpRequest, RecsysGen};
+
+    #[test]
+    fn wire_model_prices_families_from_the_manifest() {
+        let m = builtin_manifest();
+        let t = TransferConfig::default();
+        let w = WireModel::new(&m, &t, 16).unwrap();
+        // recsys: 8 tables x (16 x 13 used lookups x 4B + 16 lengths x 4B)
+        // + 16 x 256 fp16 dense features
+        assert_eq!(w.recsys_in, 8 * (16 * 13 * 4 + 16 * 4) + 16 * 256 * 2);
+        assert_eq!(w.recsys_out, 32);
+        let mut gen = RecsysGen::from_manifest(1, 16, &m).unwrap();
+        let req = FleetRequest::Recsys { arrival_s: 0.0, req: gen.next() };
+        assert_eq!(w.bytes(&req), (w.recsys_in, w.recsys_out));
+        // nlp scales with the sentence, cv with the image batch
+        let nlp = FleetRequest::Nlp {
+            arrival_s: 0.0,
+            req: NlpRequest { tokens: vec![1; 30], arrival_s: 0.0 },
+        };
+        assert_eq!(w.bytes(&nlp), (30 * 4 + 4, 256 * 2));
+        // turning the §VI-C input optimizations off grows the ingress
+        let off = TransferConfig {
+            partial_tensors: false,
+            fp16_dense_inputs: false,
+            ..TransferConfig::default()
+        };
+        let wo = WireModel::new(&m, &off, 16).unwrap();
+        assert!(wo.recsys_in > w.recsys_in);
+    }
+}

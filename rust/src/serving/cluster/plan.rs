@@ -1,0 +1,213 @@
+//! Datacenter-scale capacity planning: Fig. 1 in whole nodes, with
+//! failure headroom (§VII).
+//!
+//! The fleet layer answers "what does one node deliver on the mixed
+//! trace"; this module turns that into the operator's question — **how
+//! many N-card nodes (plus failure headroom h) carry Q QPS of a 70/20/10
+//! mix within the SLA** — and then *verifies* its own recommendation by
+//! simulating the scenario the headroom exists for: kill one node mid-run
+//! at the target load and check that admission ("SLA") shed stays at
+//! zero. A planner that only divides two numbers would happily recommend
+//! a tier that melts the moment a node dies; this one has to survive its
+//! own failure drill.
+
+use crate::capacity::GrowthScenario;
+use crate::config::Config;
+use crate::serving::cluster::router::NodePolicy;
+use crate::serving::cluster::scenario::{EventKind, NodeEvent, Scenario};
+use crate::serving::cluster::Cluster;
+use crate::serving::fleet::{Arrival, Family, FamilyMix, FleetConfig, RoutePolicy, TrafficGen};
+use crate::util::error::{bail, Result};
+use std::path::Path;
+
+/// Seed for the planning traces — fixed so capacity answers are
+/// reproducible run to run.
+pub const PLAN_TRAFFIC_SEED: u64 = 0xC1_7001;
+
+/// Nodes are sized to run at this fraction of their measured saturation
+/// throughput, so the tier absorbs arrival bursts and a failed peer's
+/// diverted traffic without queues growing past the SLA.
+pub const UTILIZATION_TARGET: f64 = 0.7;
+
+/// Fraction of the verification trace's horizon at which the drill kills
+/// node 0 (early enough that most of the trace lands on the survivors).
+const FAILURE_DRILL_AT: f64 = 0.4;
+
+/// One cluster-level capacity answer.
+#[derive(Debug, Clone)]
+pub struct ClusterCapacityReport {
+    pub mix: FamilyMix,
+    pub node_policy: NodePolicy,
+    pub card_policy: RoutePolicy,
+    /// Measured single-node saturation throughput, requests/sec.
+    pub node_qps: f64,
+    /// The demand the tier is sized for, requests/sec.
+    pub target_qps: f64,
+    /// Load-driven node count (target / (node_qps x utilization target)).
+    pub nodes_needed: usize,
+    pub headroom: usize,
+    pub nodes_total: usize,
+    /// The failure drill's admission ("SLA") shed — 0 when the headroom
+    /// recommendation holds.
+    pub sla_shed_after_failure: usize,
+    /// In-flight requests lost at the failure instant (availability hit,
+    /// not an SLA violation — they were already admitted).
+    pub failure_shed: usize,
+    /// Requests the drill completed within admission control.
+    pub drill_completed: usize,
+    /// The acceptance flag: with the recommended tier, killing one node at
+    /// target load sheds nothing at admission and leaves nothing
+    /// unroutable.
+    pub survives_single_node_failure: bool,
+    /// Fig. 1 at node granularity: (quarter, demand QPS, nodes incl.
+    /// headroom) as demand grows from `target_qps`.
+    pub growth: Vec<(usize, f64, usize)>,
+}
+
+/// Whole nodes (incl. headroom) needed for each point of a demand curve.
+pub fn node_series(
+    scenario: &GrowthScenario,
+    node_qps: f64,
+    headroom: usize,
+) -> Vec<(usize, f64, usize)> {
+    (0..=scenario.quarters)
+        .map(|q| {
+            let demand = scenario.demand_at(q);
+            let nodes = nodes_for(demand, node_qps) + headroom;
+            (q, demand, nodes)
+        })
+        .collect()
+}
+
+fn nodes_for(target_qps: f64, node_qps: f64) -> usize {
+    ((target_qps / (node_qps * UTILIZATION_TARGET)).ceil() as usize).max(1)
+}
+
+/// Size a tier of `cfg.node` clones for `target_qps` of `mix` traffic and
+/// verify the recommendation under a single-node failure drill.
+///
+/// `target_qps <= 0` sizes for 1.5x one node's measured throughput (a
+/// tier that genuinely needs more than one node, the smallest interesting
+/// answer). When `fleet_cfg` carries no SLA budget, the tightest Table I
+/// family budget is used so "SLA shed" is a real admission criterion, not
+/// a vacuous one.
+pub fn plan_capacity(
+    dir: &Path,
+    cfg: &Config,
+    fleet_cfg: &FleetConfig,
+    mix: FamilyMix,
+    node_policy: NodePolicy,
+    card_policy: RoutePolicy,
+    target_qps: f64,
+    headroom: usize,
+    requests: usize,
+) -> Result<ClusterCapacityReport> {
+    let mut fcfg = fleet_cfg.clone();
+    if fcfg.sla_budget_s.is_none() {
+        fcfg.sla_budget_s = Some(
+            Family::ALL
+                .iter()
+                .map(|f| f.latency_budget_s())
+                .fold(f64::INFINITY, f64::min),
+        );
+    }
+    let requests = requests.max(1);
+
+    // 1. measure one node's saturation throughput on a burst of the mix
+    let single = Cluster::new(dir, cfg, &[cfg.node.clone()], fcfg.clone())?;
+    let mut traffic = TrafficGen::new(
+        PLAN_TRAFFIC_SEED,
+        mix,
+        Arrival::Burst,
+        single.manifest(),
+        fcfg.recsys_batch,
+    )?;
+    let reqs = traffic.take(requests);
+    let probe = single.route(&reqs, node_policy, card_policy, &Scenario::none())?;
+    let node_qps = probe.cluster_qps();
+    if !(node_qps > 0.0) {
+        bail!(
+            "cluster capacity probe measured no single-node throughput \
+             ({} of {} requests completed)",
+            probe.cluster.completed,
+            probe.offered
+        );
+    }
+
+    // 2. size the tier
+    let target_qps = if target_qps > 0.0 { target_qps } else { 1.5 * node_qps };
+    let nodes_needed = nodes_for(target_qps, node_qps);
+    let nodes_total = nodes_needed + headroom;
+
+    // 3. failure drill: Poisson at the target over the full tier, node 0
+    // dies partway through
+    let specs = vec![cfg.node.clone(); nodes_total];
+    let cluster = Cluster::new(dir, cfg, &specs, fcfg.clone())?;
+    let mut traffic = TrafficGen::new(
+        PLAN_TRAFFIC_SEED ^ 0x5EED,
+        mix,
+        Arrival::Poisson { rate_qps: target_qps },
+        cluster.manifest(),
+        fcfg.recsys_batch,
+    )?;
+    let reqs = traffic.take(requests);
+    let horizon = reqs.last().map(|r| r.arrival_s()).unwrap_or(0.0);
+    let drill = Scenario::new(vec![NodeEvent {
+        at_s: FAILURE_DRILL_AT * horizon,
+        node: 0,
+        kind: EventKind::Fail,
+    }]);
+    let v = cluster.route(&reqs, node_policy, card_policy, &drill)?;
+    let survives = v.shed_admission == 0 && v.shed_unroutable == 0;
+
+    // 4. Fig. 1 at node granularity, growing from the target
+    let growth_curve = GrowthScenario {
+        name: "cluster",
+        quarterly_growth: 1.25,
+        quarters: 8,
+        initial_qps: target_qps,
+    };
+    Ok(ClusterCapacityReport {
+        mix,
+        node_policy,
+        card_policy,
+        node_qps,
+        target_qps,
+        nodes_needed,
+        headroom,
+        nodes_total,
+        sla_shed_after_failure: v.shed_admission,
+        failure_shed: v.shed_failed,
+        drill_completed: v.cluster.completed,
+        survives_single_node_failure: survives,
+        growth: node_series(&growth_curve, node_qps, headroom),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_series_is_monotone_and_carries_headroom() {
+        let s = GrowthScenario {
+            name: "t",
+            quarterly_growth: 1.25,
+            quarters: 8,
+            initial_qps: 1000.0,
+        };
+        let series = node_series(&s, 400.0, 2);
+        assert_eq!(series.len(), 9);
+        for w in series.windows(2) {
+            assert!(w[1].1 > w[0].1, "demand must grow");
+            assert!(w[1].2 >= w[0].2, "nodes must not shrink");
+        }
+        // headroom rides on every point
+        let bare = node_series(&s, 400.0, 0);
+        for (a, b) in series.iter().zip(&bare) {
+            assert_eq!(a.2, b.2 + 2);
+        }
+        // first point: 1000 / (400 * 0.7) = 3.57 -> 4 nodes + 2
+        assert_eq!(series[0].2, 6);
+    }
+}

@@ -1,0 +1,335 @@
+//! The node-level router: dispatch the mixed stream across whole nodes.
+//!
+//! Two-tier dispatch: this router picks a *node* for every request, then
+//! the node's own card router ([`crate::serving::fleet::router`], reused a
+//! request at a time through [`NodePlanner`]) picks the replica and card.
+//! Between the tiers sits the NIC: a request's bytes must clear the chosen
+//! node's ingress link before its card router even sees it, and its fp16
+//! response must clear the egress link before the caller counts it done —
+//! so with enough offered load a cluster's throughput is capped by
+//! `NicSpec.bw_bits`, not by its cards (the paper's network-bandwidth
+//! requirement).
+//!
+//! Like the fleet router, planning is a deterministic pass over the stream
+//! in arrival order: identical inputs give bit-identical plans regardless
+//! of worker counts, because workers only execute numerics afterwards.
+
+use crate::serving::cluster::scenario::{EventKind, NodeEvent, Scenario};
+use crate::serving::cluster::{ClusterNode, WireModel};
+use crate::serving::fleet::router::{self as fleet_router, NodePlanner};
+use crate::serving::fleet::{Decision, Family, FleetConfig, FleetRequest, RoutePolicy};
+use crate::sim::transfer::NicOccupancy;
+use crate::util::error::{bail, Result};
+
+/// Node-selection policy for the top tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodePolicy {
+    /// Rotate over the available nodes, blind to load and node speed.
+    RoundRobin,
+    /// Fewest outstanding segments across the node's cards.
+    JoinShortestQueue,
+    /// Least *modeled work*: send the request where cumulative assigned
+    /// seconds (priced with each node's own per-family modeled cost) stays
+    /// smallest. On a heterogeneous tier a slow node accumulates seconds
+    /// faster, so it naturally receives fewer requests — capacity-weighted
+    /// balancing without hand-set weights.
+    WeightedCapacity,
+}
+
+impl NodePolicy {
+    pub const ALL: [NodePolicy; 3] =
+        [NodePolicy::RoundRobin, NodePolicy::JoinShortestQueue, NodePolicy::WeightedCapacity];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NodePolicy::RoundRobin => "round-robin",
+            NodePolicy::JoinShortestQueue => "join-shortest-queue",
+            NodePolicy::WeightedCapacity => "weighted-by-modeled-capacity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<NodePolicy> {
+        Ok(match s {
+            "round-robin" | "rr" => NodePolicy::RoundRobin,
+            "join-shortest-queue" | "jsq" => NodePolicy::JoinShortestQueue,
+            "weighted-by-modeled-capacity" | "weighted" | "wc" => NodePolicy::WeightedCapacity,
+            other => bail!(
+                "unknown node policy '{other}' \
+                 (valid: round-robin, join-shortest-queue, weighted-by-modeled-capacity)"
+            ),
+        })
+    }
+}
+
+/// What happened to one request of the stream.
+#[derive(Debug, Clone, Copy)]
+pub enum Outcome {
+    /// Routed, served, response delivered back over the node's NIC.
+    Completed { node: usize, decision: Decision, latency_s: f64, finish_s: f64 },
+    /// The chosen node's card router shed it (bounded queue / SLA / no
+    /// serving bucket).
+    ShedAdmission { node: usize },
+    /// Admitted, but its node failed before the response was delivered.
+    ShedFailed { node: usize },
+    /// No node was available to route to (everything drained or failed).
+    ShedUnroutable,
+}
+
+/// One planned request of the cluster pass.
+#[derive(Debug, Clone)]
+pub struct ClusterPlanned {
+    pub family: Family,
+    pub arrival_s: f64,
+    pub items: usize,
+    pub outcome: Outcome,
+}
+
+/// Per-node accounting of a cluster plan.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    /// Modeled compute seconds the node's cards spent (includes work that
+    /// was later shed by a failure — the cards did burn that time).
+    pub busy_s: f64,
+    pub nic_rx_busy_s: f64,
+    pub nic_tx_busy_s: f64,
+    pub drained_at_s: Option<f64>,
+    pub failed_at_s: Option<f64>,
+}
+
+/// The full cluster plan.
+#[derive(Debug, Clone)]
+pub struct ClusterPlan {
+    pub planned: Vec<ClusterPlanned>,
+    /// Last delivered response minus first arrival (0 when nothing
+    /// completed).
+    pub span_s: f64,
+    pub nodes: Vec<NodeReport>,
+}
+
+/// Mutable per-node planning state.
+struct NodeState {
+    planner: NodePlanner,
+    nic: NicOccupancy,
+    up: bool,
+    drained_at: Option<f64>,
+    failed_at: Option<f64>,
+    /// Cumulative modeled seconds routed here (weighted-capacity signal).
+    assigned_s: f64,
+    /// (planned index, delivery time) of admitted requests — consulted
+    /// when the node fails to shed what was still in flight.
+    inflight: Vec<(usize, f64)>,
+    /// Busy/NIC seconds accumulated before a failure reset the live state.
+    busy_snapshot_s: f64,
+    nic_rx_snapshot_s: f64,
+    nic_tx_snapshot_s: f64,
+}
+
+/// Apply one scenario event. Failing a node demotes its undelivered
+/// requests to [`Outcome::ShedFailed`] and cold-resets its planner and NIC
+/// (what replaces the node starts empty); draining only stops new traffic.
+fn apply_event(e: &NodeEvent, state: &mut NodeState, planned: &mut [ClusterPlanned]) {
+    match e.kind {
+        EventKind::Drain => {
+            if state.up {
+                state.up = false;
+                state.drained_at = Some(e.at_s);
+            }
+        }
+        EventKind::Fail => {
+            if state.failed_at.is_some() {
+                return;
+            }
+            state.up = false;
+            state.failed_at = Some(e.at_s);
+            for &(idx, delivered) in &state.inflight {
+                if delivered > e.at_s {
+                    if let Outcome::Completed { node, .. } = planned[idx].outcome {
+                        planned[idx].outcome = Outcome::ShedFailed { node };
+                    }
+                }
+            }
+            state.inflight.clear();
+            let busy: f64 = state.planner.busy_s().iter().sum();
+            let (rx, tx) = (state.nic.rx_busy_s(), state.nic.tx_busy_s());
+            state.busy_snapshot_s += busy;
+            state.nic_rx_snapshot_s += rx;
+            state.nic_tx_snapshot_s += tx;
+            state.planner.reset();
+            state.nic.reset();
+        }
+    }
+}
+
+/// Plan the two-tier routing of `reqs` (nondecreasing arrival order) over
+/// the cluster, applying `scenario` events as the stream reaches them.
+pub fn plan(
+    nodes: &[ClusterNode],
+    reqs: &[FleetRequest],
+    node_policy: NodePolicy,
+    card_policy: RoutePolicy,
+    cfg: &FleetConfig,
+    scenario: &Scenario,
+    wire: &WireModel,
+) -> Result<ClusterPlan> {
+    if nodes.is_empty() {
+        bail!("cluster needs at least one node");
+    }
+    for node in nodes {
+        fleet_router::validate(node.replicas(), cfg)?;
+    }
+    scenario.validate(nodes.len())?;
+
+    let n = nodes.len();
+    let mut states: Vec<NodeState> = nodes
+        .iter()
+        .map(|c| NodeState {
+            planner: NodePlanner::new(c.replicas().cards),
+            nic: NicOccupancy::new(c.spec.nic.bw_bits),
+            up: true,
+            drained_at: None,
+            failed_at: None,
+            assigned_s: 0.0,
+            inflight: Vec::new(),
+            busy_snapshot_s: 0.0,
+            nic_rx_snapshot_s: 0.0,
+            nic_tx_snapshot_s: 0.0,
+        })
+        .collect();
+    let events = scenario.events();
+    let mut ev = 0usize;
+    let mut rr = 0usize;
+    let mut planned: Vec<ClusterPlanned> = Vec::with_capacity(reqs.len());
+    let mut last_arrival = f64::NEG_INFINITY;
+
+    for (i, req) in reqs.iter().enumerate() {
+        let t = req.arrival_s();
+        if t < last_arrival {
+            bail!(
+                "cluster requests must arrive in nondecreasing order \
+                 ({t} after {last_arrival})"
+            );
+        }
+        last_arrival = t;
+        while ev < events.len() && events[ev].at_s <= t {
+            apply_event(&events[ev], &mut states[events[ev].node], &mut planned);
+            ev += 1;
+        }
+        let family = req.family();
+
+        // tier 1: pick a node (every policy breaks ties toward the lowest
+        // node id, so the choice is deterministic)
+        let pick = match node_policy {
+            NodePolicy::RoundRobin => {
+                let mut pick = None;
+                for step in 0..n {
+                    let k = (rr + step) % n;
+                    if states[k].up {
+                        pick = Some(k);
+                        rr = (k + 1) % n;
+                        break;
+                    }
+                }
+                pick
+            }
+            NodePolicy::JoinShortestQueue => {
+                let mut best: Option<(usize, usize)> = None;
+                for k in 0..n {
+                    if !states[k].up {
+                        continue;
+                    }
+                    states[k].planner.prune(t);
+                    let d = states[k].planner.outstanding();
+                    if best.map_or(true, |(bd, _)| d < bd) {
+                        best = Some((d, k));
+                    }
+                }
+                best.map(|(_, k)| k)
+            }
+            NodePolicy::WeightedCapacity => {
+                let mut best: Option<(f64, usize)> = None;
+                for k in 0..n {
+                    if !states[k].up {
+                        continue;
+                    }
+                    let proj = states[k].assigned_s + nodes[k].fam_cost_s[family.index()];
+                    if best.map_or(true, |(bp, _)| proj < bp) {
+                        best = Some((proj, k));
+                    }
+                }
+                best.map(|(_, k)| k)
+            }
+        };
+
+        let outcome = match pick {
+            None => Outcome::ShedUnroutable,
+            Some(k) => {
+                // tier 1.5: the request's bytes serialize on the node NIC
+                let (in_bytes, out_bytes) = wire.bytes(req);
+                let state = &mut states[k];
+                let t_node = state.nic.rx(t, in_bytes);
+                // tier 2: the node's own card router
+                match state.planner.route_one(nodes[k].replicas(), req, t_node, card_policy, cfg)
+                {
+                    None => Outcome::ShedAdmission { node: k },
+                    Some(r) => {
+                        let delivered = state.nic.tx(r.finish_s, out_bytes);
+                        state.assigned_s += nodes[k].fam_cost_s[family.index()];
+                        state.inflight.push((i, delivered));
+                        Outcome::Completed {
+                            node: k,
+                            decision: r.decision,
+                            latency_s: delivered - t,
+                            finish_s: delivered,
+                        }
+                    }
+                }
+            }
+        };
+        planned.push(ClusterPlanned { family, arrival_s: t, items: req.items(), outcome });
+    }
+
+    // events after the last arrival can still kill in-flight work
+    while ev < events.len() {
+        apply_event(&events[ev], &mut states[events[ev].node], &mut planned);
+        ev += 1;
+    }
+
+    let mut max_finish: Option<f64> = None;
+    for p in &planned {
+        if let Outcome::Completed { finish_s, .. } = p.outcome {
+            max_finish = Some(max_finish.map_or(finish_s, |m: f64| m.max(finish_s)));
+        }
+    }
+    let span_s = match (reqs.first(), max_finish) {
+        (Some(first), Some(finish)) => (finish - first.arrival_s()).max(0.0),
+        _ => 0.0,
+    };
+    let node_reports = states
+        .iter()
+        .map(|s| NodeReport {
+            busy_s: s.busy_snapshot_s + s.planner.busy_s().iter().sum::<f64>(),
+            nic_rx_busy_s: s.nic_rx_snapshot_s + s.nic.rx_busy_s(),
+            nic_tx_busy_s: s.nic_tx_snapshot_s + s.nic.tx_busy_s(),
+            drained_at_s: s.drained_at,
+            failed_at_s: s.failed_at,
+        })
+        .collect();
+    Ok(ClusterPlan { planned, span_s, nodes: node_reports })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_policy_parse_roundtrip() {
+        for p in NodePolicy::ALL {
+            assert_eq!(NodePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(NodePolicy::parse("rr").unwrap(), NodePolicy::RoundRobin);
+        assert_eq!(NodePolicy::parse("jsq").unwrap(), NodePolicy::JoinShortestQueue);
+        assert_eq!(NodePolicy::parse("weighted").unwrap(), NodePolicy::WeightedCapacity);
+        assert_eq!(NodePolicy::parse("wc").unwrap(), NodePolicy::WeightedCapacity);
+        assert!(NodePolicy::parse("random").is_err());
+    }
+}

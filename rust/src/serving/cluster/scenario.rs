@@ -1,0 +1,154 @@
+//! Node failure / drain scenarios (§VII operational lessons).
+//!
+//! Operating a fleet means operating through node loss: maintenance
+//! *drains* a node (it stops taking new traffic but finishes what it has),
+//! hardware failure *kills* one (in-flight work is shed on the spot and the
+//! availability hit lands in the metrics). A [`Scenario`] is a list of such
+//! events at trace timestamps; the cluster router applies each event the
+//! moment the request stream reaches its time, so scenario runs stay as
+//! bit-reproducible as everything else on the modeled clock.
+
+use crate::util::error::{bail, Result};
+
+/// What happens to the node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Stop routing new requests to the node; in-flight work completes
+    /// (planned maintenance).
+    Drain,
+    /// Node dies: no new requests, and everything in flight — admitted but
+    /// not yet delivered by `at_s` — is shed and counted against
+    /// availability (hardware failure).
+    Fail,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Drain => "drain",
+            EventKind::Fail => "fail",
+        }
+    }
+}
+
+/// One event: `node` changes state at trace time `at_s`.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeEvent {
+    pub at_s: f64,
+    pub node: usize,
+    pub kind: EventKind,
+}
+
+/// An ordered event list. Construction sorts by time (stable, so two
+/// events at the same instant apply in insertion order).
+#[derive(Debug, Clone, Default)]
+pub struct Scenario {
+    events: Vec<NodeEvent>,
+}
+
+impl Scenario {
+    /// The empty scenario: every node stays up.
+    pub fn none() -> Scenario {
+        Scenario::default()
+    }
+
+    pub fn new(mut events: Vec<NodeEvent>) -> Scenario {
+        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap_or(std::cmp::Ordering::Equal));
+        Scenario { events }
+    }
+
+    pub fn events(&self) -> &[NodeEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Reject events naming nodes outside the cluster or non-finite /
+    /// negative timestamps before a planning pass consumes them.
+    pub fn validate(&self, nodes: usize) -> Result<()> {
+        for e in &self.events {
+            if e.node >= nodes {
+                bail!(
+                    "scenario {} event names node {} but the cluster has {nodes} nodes",
+                    e.kind.name(),
+                    e.node
+                );
+            }
+            if !e.at_s.is_finite() || e.at_s < 0.0 {
+                bail!(
+                    "scenario {} event for node {} has invalid time {}",
+                    e.kind.name(),
+                    e.node,
+                    e.at_s
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a CLI event list: `"node@seconds"` entries, comma-separated —
+/// e.g. `--fail 0@0.5` or `--drain "1@0.2,3@0.9"`.
+pub fn parse_events(kind: EventKind, spec: &str) -> Result<Vec<NodeEvent>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (node, at) = match part.split_once('@') {
+            Some(x) => x,
+            None => bail!(
+                "--{} entries are node@seconds (e.g. 0@0.5); got '{part}'",
+                kind.name()
+            ),
+        };
+        let node: usize = node
+            .trim()
+            .parse()
+            .map_err(|_| crate::err!("--{} node index '{node}' is not an integer", kind.name()))?;
+        let at_s: f64 = at
+            .trim()
+            .parse()
+            .map_err(|_| crate::err!("--{} time '{at}' is not a number", kind.name()))?;
+        out.push(NodeEvent { at_s, node, kind });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_sorts_and_validates() {
+        let s = Scenario::new(vec![
+            NodeEvent { at_s: 2.0, node: 1, kind: EventKind::Fail },
+            NodeEvent { at_s: 0.5, node: 0, kind: EventKind::Drain },
+        ]);
+        assert_eq!(s.events()[0].node, 0);
+        assert_eq!(s.events()[1].node, 1);
+        s.validate(2).unwrap();
+        let e = s.validate(1).unwrap_err().to_string();
+        assert!(e.contains("node 1") && e.contains("1 nodes"), "{e}");
+        let bad = Scenario::new(vec![NodeEvent { at_s: -1.0, node: 0, kind: EventKind::Fail }]);
+        assert!(bad.validate(2).is_err());
+        assert!(Scenario::none().is_empty());
+    }
+
+    #[test]
+    fn event_parsing() {
+        let evs = parse_events(EventKind::Fail, "0@0.5, 2@1.25").unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].node, 0);
+        assert!((evs[0].at_s - 0.5).abs() < 1e-12);
+        assert_eq!(evs[1].node, 2);
+        assert_eq!(evs[1].kind, EventKind::Fail);
+        assert!(parse_events(EventKind::Drain, "0:0.5").is_err());
+        assert!(parse_events(EventKind::Drain, "x@1").is_err());
+        assert!(parse_events(EventKind::Drain, "1@y").is_err());
+        assert!(parse_events(EventKind::Drain, "").unwrap().is_empty());
+    }
+}

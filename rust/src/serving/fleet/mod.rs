@@ -38,7 +38,7 @@ pub mod router;
 pub mod traffic;
 
 pub use replica::{Placement, ReplicaManager};
-pub use router::{Decision, RoutePlan, RoutePolicy};
+pub use router::{Decision, NodePlanner, RoutePlan, RoutePolicy};
 pub use traffic::{Arrival, FamilyMix, TrafficGen};
 
 use crate::graph::models::ModelId;
@@ -451,8 +451,10 @@ impl Fleet {
         Ok((measured, wall0.elapsed().as_secs_f64()))
     }
 
-    /// Run one admitted request's numerics on its assigned replica.
-    fn execute_one(&self, req: &FleetRequest, decision: Decision) -> Result<()> {
+    /// Run one admitted request's numerics on its assigned replica — the
+    /// per-node execution step the cluster tier reuses after its own
+    /// two-tier planning pass.
+    pub fn execute_one(&self, req: &FleetRequest, decision: Decision) -> Result<()> {
         match (req, decision) {
             (FleetRequest::Recsys { req, .. }, Decision::Recsys { replica }) => {
                 self.replicas.run_recsys(replica, req).map(|_| ())

@@ -25,7 +25,8 @@ use std::sync::Arc;
 /// Placeholder planning cost on wall-clock backends: uniform per run, so
 /// the policies degrade to queue balancing (the honest thing to do without
 /// a cost model).
-const WALL_FALLBACK: ModeledCost = ModeledCost { compute_s: 1e-3, transfer_s: 0.0 };
+const WALL_FALLBACK: ModeledCost =
+    ModeledCost { compute_s: 1e-3, transfer_s: 0.0, dram_occupancy: 1.0 };
 
 /// Where replicas land on the node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -151,37 +151,63 @@ impl NodeState {
     }
 }
 
-/// Plan the routing of `reqs` (nondecreasing arrival order) over the
-/// replica set.
-pub fn plan(
-    replicas: &ReplicaManager,
-    reqs: &[FleetRequest],
-    policy: RoutePolicy,
-    cfg: &FleetConfig,
-) -> Result<RoutePlan> {
-    if replicas.recsys.is_empty() || replicas.nlp.is_empty() || replicas.cv.is_empty() {
-        bail!("fleet replica set must cover every family");
+/// One node's routing state, reusable a request at a time.
+///
+/// [`plan`] drives it over a whole stream; the cluster tier
+/// ([`crate::serving::cluster`]) instead holds one planner per node and
+/// feeds each request to whichever node its node-level policy picked, so
+/// the per-node serve logic exists exactly once.
+pub struct NodePlanner {
+    state: NodeState,
+    rr: [usize; 3],
+}
+
+impl NodePlanner {
+    pub fn new(cards: usize) -> NodePlanner {
+        NodePlanner { state: NodeState::new(cards), rr: [0; 3] }
     }
-    if cfg.max_queue == 0 {
-        bail!("fleet max_queue must be >= 1");
+
+    /// Drop segments finished by `t` (callers must feed nondecreasing
+    /// times — arrivals, or NIC delivery times, which inherit the order).
+    pub fn prune(&mut self, t: f64) {
+        self.state.prune(t);
     }
-    let mut state = NodeState::new(replicas.cards);
-    let mut rr = [0usize; 3];
-    let mut planned = Vec::with_capacity(reqs.len());
-    let mut last_arrival = f64::NEG_INFINITY;
-    let mut max_finish: Option<f64> = None;
-    for req in reqs {
-        let t = req.arrival_s();
-        if t < last_arrival {
-            bail!(
-                "fleet requests must arrive in nondecreasing order \
-                 ({t} after {last_arrival})"
-            );
-        }
-        last_arrival = t;
+
+    /// Outstanding segments across all cards — the node-level
+    /// join-shortest-queue signal.
+    pub fn outstanding(&self) -> usize {
+        self.state.outstanding.iter().map(VecDeque::len).sum()
+    }
+
+    /// Modeled compute seconds accumulated per card.
+    pub fn busy_s(&self) -> &[f64] {
+        &self.state.busy_s
+    }
+
+    /// Forget all state (a failed node sheds its in-flight work; what
+    /// replaces it starts cold). Accumulated busy time is cleared too —
+    /// snapshot it first if the caller wants to attribute the lost work.
+    pub fn reset(&mut self) {
+        let cards = self.state.busy_s.len();
+        *self = NodePlanner::new(cards);
+    }
+
+    /// Route one request that becomes available to this node at `t`
+    /// (its arrival, or the time its bytes cleared the node's NIC).
+    /// Returns `None` when admission control sheds it. Identical to one
+    /// step of [`plan`].
+    pub fn route_one(
+        &mut self,
+        replicas: &ReplicaManager,
+        req: &FleetRequest,
+        t: f64,
+        policy: RoutePolicy,
+        cfg: &FleetConfig,
+    ) -> Option<Routed> {
+        let NodePlanner { state, rr } = self;
         state.prune(t);
         let family = req.family();
-        let route = match req {
+        match req {
             FleetRequest::Recsys { .. } => {
                 // candidate-independent SLS-stage estimate (slowest shard
                 // card, each priced with its current compute/link backlog)
@@ -195,9 +221,9 @@ pub fn plan(
                 let ri = choose(policy, &mut rr[family.index()], replicas.recsys.len(), |i| {
                     let r = &replicas.recsys[i];
                     (r.card, state.ready(r.card, sls_done_est) + r.cost.total_s())
-                }, &state);
+                }, state);
                 let r = &replicas.recsys[ri];
-                admit(&state, r.card, replicas.recsys_request_cost_s(ri), cfg).then(|| {
+                admit(state, r.card, replicas.recsys_request_cost_s(ri), cfg).then(|| {
                     let mut sls_done = t;
                     for shard in &replicas.sls {
                         let fin = state.commit(shard.card, t, shard.cost);
@@ -229,10 +255,10 @@ pub fn plan(
                                     .map(|c| c.total_s())
                                     .unwrap_or(f64::INFINITY);
                                 (r.card, state.ready(r.card, t) + c)
-                            }, &state);
+                            }, state);
                         let r = &replicas.nlp[ri];
                         r.cost(bucket).and_then(|cost| {
-                            admit(&state, r.card, cost.total_s(), cfg).then(|| {
+                            admit(state, r.card, cost.total_s(), cfg).then(|| {
                                 let finish = state.commit(r.card, t, cost);
                                 Routed {
                                     decision: Decision::Nlp { replica: ri, bucket },
@@ -249,9 +275,9 @@ pub fn plan(
                 let ri = choose(policy, &mut rr[family.index()], replicas.cv.len(), |i| {
                     let r = &replicas.cv[i];
                     (r.card, state.ready(r.card, t) + r.cost.total_s())
-                }, &state);
+                }, state);
                 let r = &replicas.cv[ri];
-                admit(&state, r.card, r.cost.total_s(), cfg).then(|| {
+                admit(state, r.card, r.cost.total_s(), cfg).then(|| {
                     let finish = state.commit(r.card, t, r.cost);
                     Routed {
                         decision: Decision::Cv { replica: ri },
@@ -261,17 +287,54 @@ pub fn plan(
                     }
                 })
             }
-        };
+        }
+    }
+}
+
+/// Shared precondition checks for planning over a replica set.
+pub fn validate(replicas: &ReplicaManager, cfg: &FleetConfig) -> Result<()> {
+    if replicas.recsys.is_empty() || replicas.nlp.is_empty() || replicas.cv.is_empty() {
+        bail!("fleet replica set must cover every family");
+    }
+    if cfg.max_queue == 0 {
+        bail!("fleet max_queue must be >= 1");
+    }
+    Ok(())
+}
+
+/// Plan the routing of `reqs` (nondecreasing arrival order) over the
+/// replica set.
+pub fn plan(
+    replicas: &ReplicaManager,
+    reqs: &[FleetRequest],
+    policy: RoutePolicy,
+    cfg: &FleetConfig,
+) -> Result<RoutePlan> {
+    validate(replicas, cfg)?;
+    let mut planner = NodePlanner::new(replicas.cards);
+    let mut planned = Vec::with_capacity(reqs.len());
+    let mut last_arrival = f64::NEG_INFINITY;
+    let mut max_finish: Option<f64> = None;
+    for req in reqs {
+        let t = req.arrival_s();
+        if t < last_arrival {
+            bail!(
+                "fleet requests must arrive in nondecreasing order \
+                 ({t} after {last_arrival})"
+            );
+        }
+        last_arrival = t;
+        let route = planner.route_one(replicas, req, t, policy, cfg);
         if let Some(r) = &route {
             max_finish = Some(max_finish.map_or(r.finish_s, |m: f64| m.max(r.finish_s)));
         }
-        planned.push(PlannedRequest { family, arrival_s: t, items: req.items(), route });
+        planned.push(PlannedRequest { family: req.family(), arrival_s: t, items: req.items(), route });
     }
     let span_s = match (reqs.first(), max_finish) {
         (Some(first), Some(finish)) => (finish - first.arrival_s()).max(0.0),
         _ => 0.0,
     };
-    Ok(RoutePlan { planned, span_s, busy_s: state.busy_s.clone() })
+    Ok(RoutePlan { planned, span_s, busy_s: planner.state.busy_s.clone() })
 }
 
 /// Pick a replica index among `n` candidates. `score(i)` returns the
@@ -355,7 +418,7 @@ mod tests {
     #[test]
     fn node_state_serializes_compute_and_prunes() {
         let mut s = NodeState::new(2);
-        let c = ModeledCost { compute_s: 1.0, transfer_s: 0.5 };
+        let c = ModeledCost { compute_s: 1.0, transfer_s: 0.5, dram_occupancy: 1.0 };
         let f1 = s.commit(0, 0.0, c);
         assert!((f1 - 1.5).abs() < 1e-12);
         // second segment on the same card: transfer waits for the first
@@ -380,11 +443,11 @@ mod tests {
         assert!(admit(&s, 0, 0.4, &cfg));
         // cost alone exceeding the budget: shed even on an empty card
         assert!(!admit(&s, 0, 1.5, &cfg));
-        s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0 });
+        s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0, dram_occupancy: 1.0 });
         // depth 1: (1+1) * 0.6 > 1.0 -> shed
         assert!(!admit(&s, 0, 0.6, &cfg));
         assert!(admit(&s, 0, 0.4, &cfg));
-        s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0 });
+        s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0, dram_occupancy: 1.0 });
         // bounded queue full
         assert!(!admit(&s, 0, 1e-6, &cfg));
     }

@@ -14,6 +14,7 @@
 //! still executing every request's real numerics.
 
 pub mod batcher;
+pub mod cluster;
 pub mod fleet;
 
 use crate::numerics::weights::WeightGen;
@@ -673,11 +674,11 @@ impl NlpServer {
             };
             for r in reqs {
                 b.push(r);
-                while let Some(batch) = b.pop(false) {
+                while let Some(batch) = b.pop(false)? {
                     run(&batch)?;
                 }
             }
-            for batch in b.drain() {
+            for batch in b.drain()? {
                 run(&batch)?;
             }
             let wall_s = match clock {
@@ -692,11 +693,11 @@ impl NlpServer {
         let mut batches = Vec::new();
         for r in reqs {
             b.push(r);
-            while let Some(batch) = b.pop(false) {
+            while let Some(batch) = b.pop(false)? {
                 batches.push(batch);
             }
         }
-        batches.extend(b.drain());
+        batches.extend(b.drain()?);
         let (mut padded, mut real) = (0usize, 0usize);
         // modeled wall computed up front, in batch order, so it is
         // deterministic and independent of which worker ran which batch;

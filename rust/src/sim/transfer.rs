@@ -73,6 +73,84 @@ impl LinkOccupancy {
     }
 }
 
+/// Per-node NIC occupancy: request/response bytes serialize on the node's
+/// network link ([`crate::platform::NicSpec`]).
+///
+/// The cluster tier's requests do not materialize on a node for free — the
+/// embedding index tensors, token ids and images of every request cross
+/// the NIC on the way in, and the fp16 outputs cross it on the way out
+/// (the paper's bandwidth-requirements discussion: enough nodes means
+/// enough *network*, not just enough cards). The NIC is modeled full
+/// duplex: ingress (rx) and egress (tx) serialize independently, each as a
+/// single `busy_until` accumulator exactly like [`LinkOccupancy`] does for
+/// a card's PCIe link, so cluster schedules stay bit-reproducible. A
+/// saturated rx link delays when a request *reaches* the node's card
+/// router; a saturated tx link delays when its response is delivered.
+#[derive(Debug, Clone)]
+pub struct NicOccupancy {
+    bw_bits: f64,
+    rx_until: f64,
+    tx_until: f64,
+    rx_busy_s: f64,
+    tx_busy_s: f64,
+}
+
+impl NicOccupancy {
+    /// `bw_bits` is the NIC's line rate in bits/sec (validated positive by
+    /// the config layer; a non-positive rate here would produce infinite
+    /// transfer times, so it is clamped to a degenerate 1 bit/s instead of
+    /// panicking in the middle of a planning pass).
+    pub fn new(bw_bits: f64) -> NicOccupancy {
+        NicOccupancy {
+            bw_bits: if bw_bits > 0.0 { bw_bits } else { 1.0 },
+            rx_until: 0.0,
+            tx_until: 0.0,
+            rx_busy_s: 0.0,
+            tx_busy_s: 0.0,
+        }
+    }
+
+    /// Wire time of a payload on this NIC.
+    pub fn time_s(&self, bytes: usize) -> f64 {
+        bytes as f64 * 8.0 / self.bw_bits
+    }
+
+    /// Receive `bytes` no earlier than `ready_s`; returns when the last
+    /// byte has arrived (the request is now visible to the node router).
+    pub fn rx(&mut self, ready_s: f64, bytes: usize) -> f64 {
+        let d = self.time_s(bytes);
+        let start = self.rx_until.max(ready_s);
+        self.rx_until = start + d;
+        self.rx_busy_s += d;
+        self.rx_until
+    }
+
+    /// Transmit `bytes` no earlier than `ready_s`; returns when the
+    /// response is fully delivered.
+    pub fn tx(&mut self, ready_s: f64, bytes: usize) -> f64 {
+        let d = self.time_s(bytes);
+        let start = self.tx_until.max(ready_s);
+        self.tx_until = start + d;
+        self.tx_busy_s += d;
+        self.tx_until
+    }
+
+    /// Seconds of ingress line time consumed so far.
+    pub fn rx_busy_s(&self) -> f64 {
+        self.rx_busy_s
+    }
+
+    /// Seconds of egress line time consumed so far.
+    pub fn tx_busy_s(&self) -> f64 {
+        self.tx_busy_s
+    }
+
+    /// Forget all occupancy (node failure: the replacement starts cold).
+    pub fn reset(&mut self) {
+        *self = NicOccupancy::new(self.bw_bits);
+    }
+}
+
 /// The transfer model: node spec + optimization flags.
 #[derive(Debug, Clone)]
 pub struct TransferModel {
@@ -263,6 +341,36 @@ mod tests {
         let t = l.occupy(0, 1e-3, 0.0);
         assert!((t - 5e-3).abs() < 1e-12);
         assert!((l.busy_until(0) - 5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nic_occupancy_serializes_and_is_full_duplex() {
+        // 1 MB at 8 Mbit/s = 1 second on the wire
+        let mut n = NicOccupancy::new(8e6);
+        let a = n.rx(0.0, 1_000_000);
+        assert!((a - 1.0).abs() < 1e-12);
+        // a second request arriving at the same instant queues behind it
+        let b = n.rx(0.0, 1_000_000);
+        assert!((b - 2.0).abs() < 1e-12, "rx must serialize: {b}");
+        // egress is independent of ingress (full duplex)
+        let c = n.tx(0.0, 1_000_000);
+        assert!((c - 1.0).abs() < 1e-12, "tx must not wait for rx: {c}");
+        // an idle gap is not billed
+        let d = n.rx(10.0, 500_000);
+        assert!((d - 10.5).abs() < 1e-12);
+        assert!((n.rx_busy_s() - 2.5).abs() < 1e-12);
+        assert!((n.tx_busy_s() - 1.0).abs() < 1e-12);
+        n.reset();
+        assert_eq!(n.rx_busy_s(), 0.0);
+        assert!((n.rx(0.0, 1_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn halved_nic_bandwidth_doubles_wire_time() {
+        let full = NicOccupancy::new(50e9);
+        let half = NicOccupancy::new(25e9);
+        let bytes = 1 << 20;
+        assert!((half.time_s(bytes) / full.time_s(bytes) - 2.0).abs() < 1e-9);
     }
 
     #[test]

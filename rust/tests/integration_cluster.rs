@@ -1,0 +1,295 @@
+//! Integration: the cluster tier. Invariants — request conservation across
+//! nodes (completed + shed == offered), bit-deterministic modeled metrics
+//! across runs and worker counts — plus the subsystem's headline
+//! properties: a NIC-bound regime where cluster QPS is pinned by
+//! `NicSpec.bw_bits` while the cards' modeled costs are untouched,
+//! weighted-by-modeled-capacity routing beating round-robin on a
+//! heterogeneous tier at equal shed, node fail/drain semantics, and the
+//! capacity planner's failure-headroom recommendation holding under a
+//! single-node failure drill.
+
+use fbia::config::Config;
+use fbia::platform::{CardSpec, NodeSpec};
+use fbia::serving::cluster::plan::plan_capacity;
+use fbia::serving::cluster::{
+    Cluster, ClusterMetrics, EventKind, NodeEvent, NodePolicy, Scenario,
+};
+use fbia::serving::fleet::{Arrival, FamilyMix, FleetConfig, FleetRequest, RoutePolicy, TrafficGen};
+use std::path::Path;
+use std::sync::Arc;
+
+const DIR: &str = "/nonexistent/artifacts"; // builtin manifest everywhere
+const CARD: RoutePolicy = RoutePolicy::LatencyAware;
+
+fn fleet_cfg() -> FleetConfig {
+    // two replicas per family keep per-node prep cheap
+    FleetConfig { replicas: 2, ..FleetConfig::default() }
+}
+
+fn cluster_of(specs: &[NodeSpec], fcfg: &FleetConfig) -> Arc<Cluster> {
+    let cfg = Config::default();
+    Arc::new(Cluster::new(Path::new(DIR), &cfg, specs, fcfg.clone()).expect("cluster"))
+}
+
+fn traffic(c: &Cluster, fcfg: &FleetConfig, n: usize, arrival: Arrival) -> Vec<FleetRequest> {
+    let mix = FamilyMix::parse("70/20/10").unwrap();
+    TrafficGen::new(11, mix, arrival, c.manifest(), fcfg.recsys_batch)
+        .expect("traffic")
+        .take(n)
+}
+
+/// A node whose cards run at a quarter of the stock peaks.
+fn slow_node() -> NodeSpec {
+    let base = NodeSpec::default();
+    NodeSpec {
+        card: CardSpec {
+            peak_tops_int8: base.card.peak_tops_int8 / 4.0,
+            peak_tflops_fp16: base.card.peak_tflops_fp16 / 4.0,
+            lpddr_bw: base.card.lpddr_bw / 4.0,
+            sram_bw: base.card.sram_bw / 4.0,
+            ..base.card.clone()
+        },
+        ..base
+    }
+}
+
+fn assert_conserved(m: &ClusterMetrics) {
+    assert_eq!(
+        m.cluster.completed + m.shed(),
+        m.offered,
+        "requests lost or invented (completed {} + shed {} != offered {})",
+        m.cluster.completed,
+        m.shed(),
+        m.offered
+    );
+    let by_node: usize = m.per_node.iter().map(|n| n.metrics.completed).sum();
+    assert_eq!(by_node, m.cluster.completed, "per-node completion mismatch");
+    let node_items: usize = m.per_node.iter().map(|n| n.metrics.items).sum();
+    assert_eq!(node_items, m.cluster.items, "per-node items mismatch");
+    let node_offered: usize = m.per_node.iter().map(|n| n.offered).sum();
+    assert_eq!(node_offered + m.shed_unroutable, m.offered, "per-node offered mismatch");
+    let node_shed: usize = m.per_node.iter().map(|n| n.shed_admission + n.shed_failed).sum();
+    assert_eq!(node_shed, m.shed_admission + m.shed_failed);
+    let fam_offered: usize = m.per_family.iter().map(|f| f.offered).sum();
+    let fam_completed: usize = m.per_family.iter().map(|f| f.metrics.completed).sum();
+    let fam_shed: usize = m.per_family.iter().map(|f| f.shed).sum();
+    assert_eq!(fam_offered, m.offered);
+    assert_eq!(fam_completed, m.cluster.completed);
+    assert_eq!(fam_shed, m.shed());
+    assert_eq!(m.cluster.latency.count() as usize, m.cluster.completed);
+}
+
+#[test]
+fn cluster_conserves_requests_across_nodes_under_every_policy() {
+    let fcfg = fleet_cfg();
+    let cluster = cluster_of(&[NodeSpec::default(), NodeSpec::default()], &fcfg);
+    let reqs = traffic(&cluster, &fcfg, 60, Arrival::Burst);
+    for policy in NodePolicy::ALL {
+        let m = cluster.route(&reqs, policy, CARD, &Scenario::none()).unwrap();
+        assert_eq!(m.offered, 60);
+        assert_eq!(m.shed_failed + m.shed_unroutable, 0, "{:?}", policy);
+        assert_conserved(&m);
+        assert!(m.cluster_qps() > 0.0);
+        // both nodes actually carried traffic
+        assert!(m.per_node.iter().all(|n| n.metrics.completed > 0), "{policy:?}");
+    }
+    // identical specs share one prepared fleet (scheduling state lives in
+    // the router, so sharing cannot couple the nodes)
+    assert!(Arc::ptr_eq(&cluster.nodes()[0].fleet, &cluster.nodes()[1].fleet));
+    let hetero = cluster_of(&[NodeSpec::default(), slow_node()], &fleet_cfg());
+    assert!(!Arc::ptr_eq(&hetero.nodes()[0].fleet, &hetero.nodes()[1].fleet));
+}
+
+#[test]
+fn modeled_metrics_bit_deterministic_across_runs_and_workers() {
+    let fcfg = fleet_cfg();
+    let cluster = cluster_of(&[NodeSpec::default(), NodeSpec::default()], &fcfg);
+    let reqs = traffic(&cluster, &fcfg, 24, Arrival::Burst);
+    // serve() executes real numerics with 1 then 4 workers; route() never
+    // executes — all three must report bit-identical modeled metrics
+    let a = cluster
+        .serve(reqs.clone(), NodePolicy::WeightedCapacity, CARD, &Scenario::none(), 1)
+        .unwrap();
+    let b = cluster
+        .serve(reqs.clone(), NodePolicy::WeightedCapacity, CARD, &Scenario::none(), 4)
+        .unwrap();
+    let c = cluster.route(&reqs, NodePolicy::WeightedCapacity, CARD, &Scenario::none()).unwrap();
+    for m in [&a, &b, &c] {
+        assert_conserved(m);
+    }
+    assert_eq!(a.cluster.wall_s, b.cluster.wall_s);
+    assert_eq!(a.cluster.wall_s, c.cluster.wall_s);
+    assert_eq!(a.cluster.latency.p50(), b.cluster.latency.p50());
+    assert_eq!(a.cluster.latency.p99(), b.cluster.latency.p99());
+    assert_eq!(a.cluster.latency.p50(), c.cluster.latency.p50());
+    for ((na, nb), nc) in a.per_node.iter().zip(&b.per_node).zip(&c.per_node) {
+        assert_eq!(na.busy_s, nb.busy_s);
+        assert_eq!(na.busy_s, nc.busy_s);
+        assert_eq!(na.metrics.completed, nb.metrics.completed);
+        assert_eq!(na.nic_rx_busy_s, nc.nic_rx_busy_s);
+        assert_eq!(na.metrics.latency.p99(), nc.metrics.latency.p99());
+    }
+}
+
+#[test]
+fn nic_bound_regime_caps_cluster_qps_without_touching_card_costs() {
+    // a deliberately slow NIC makes the wire the bottleneck: halving its
+    // line rate must measurably lower cluster throughput while every
+    // card-level modeled cost stays bit-identical
+    let fcfg = fleet_cfg();
+    let nic_node = |bw_bits: f64| {
+        let mut n = NodeSpec::default();
+        n.nic.bw_bits = bw_bits;
+        n
+    };
+    let full = cluster_of(&[nic_node(80e6)], &fcfg);
+    let half = cluster_of(&[nic_node(40e6)], &fcfg);
+    let fast = cluster_of(&[NodeSpec::default()], &fcfg); // 50 Gbps stock
+    let reqs = traffic(&full, &fcfg, 40, Arrival::Burst);
+    let m_full = full.route(&reqs, NodePolicy::RoundRobin, CARD, &Scenario::none()).unwrap();
+    let m_half = half.route(&reqs, NodePolicy::RoundRobin, CARD, &Scenario::none()).unwrap();
+    let m_fast = fast.route(&reqs, NodePolicy::RoundRobin, CARD, &Scenario::none()).unwrap();
+    assert_eq!(m_full.shed(), 0);
+    assert_eq!(m_half.shed(), 0);
+    // NIC-bound: the slow-NIC tiers sit well below the stock-NIC tier...
+    assert!(
+        m_fast.cluster_qps() > 2.0 * m_full.cluster_qps(),
+        "80 Mbit/s tier ({}) must be NIC-bound vs 50 Gbit/s ({})",
+        m_full.cluster_qps(),
+        m_fast.cluster_qps()
+    );
+    // ...and halving the line rate roughly halves throughput
+    let ratio = m_full.cluster_qps() / m_half.cluster_qps();
+    assert!(ratio > 1.4, "halving NIC bandwidth changed QPS only {ratio:.2}x");
+    // card QPS is unchanged: identical modeled per-family request costs
+    // and identical card busy time for the same admitted set
+    assert_eq!(full.nodes()[0].fam_cost_s, half.nodes()[0].fam_cost_s);
+    assert_eq!(full.nodes()[0].fam_cost_s, fast.nodes()[0].fam_cost_s);
+    assert_eq!(m_full.per_node[0].busy_s, m_half.per_node[0].busy_s);
+    // the NIC occupancy accounting agrees with the bottleneck story
+    assert!(m_full.per_node[0].nic_rx_busy_s > 0.5 * m_full.cluster.wall_s);
+}
+
+#[test]
+fn weighted_routing_beats_round_robin_on_heterogeneous_cluster() {
+    // vendor-mix tier: one stock node + one node 4x slower. Round-robin
+    // alternates blindly and the slow node's backlog gates the span;
+    // weighted-by-modeled-capacity prices each node's own modeled costs
+    // and shifts load to the fast node — more throughput at equal shed
+    let fcfg = fleet_cfg();
+    let cluster = cluster_of(&[NodeSpec::default(), slow_node()], &fcfg);
+    let reqs = traffic(&cluster, &fcfg, 80, Arrival::Burst);
+    let rr = cluster.route(&reqs, NodePolicy::RoundRobin, CARD, &Scenario::none()).unwrap();
+    let wc = cluster.route(&reqs, NodePolicy::WeightedCapacity, CARD, &Scenario::none()).unwrap();
+    assert_eq!(rr.shed(), 0, "round-robin shed {} of {}", rr.shed(), rr.offered);
+    assert_eq!(wc.shed(), 0);
+    assert_conserved(&rr);
+    assert_conserved(&wc);
+    assert!(
+        wc.cluster_qps() > rr.cluster_qps(),
+        "weighted {} QPS must beat round-robin {} on a vendor-mix tier",
+        wc.cluster_qps(),
+        rr.cluster_qps()
+    );
+    // and it does so by sending the slow node fewer requests
+    assert!(
+        wc.per_node[1].offered < rr.per_node[1].offered,
+        "weighted must offload the slow node ({} vs {})",
+        wc.per_node[1].offered,
+        rr.per_node[1].offered
+    );
+    // the slow node's replicas really are modeled slower
+    assert!(cluster.nodes()[1].fam_cost_s[0] > cluster.nodes()[0].fam_cost_s[0]);
+}
+
+#[test]
+fn node_failure_sheds_in_flight_and_reroutes() {
+    let fcfg = fleet_cfg();
+    let cluster = cluster_of(&[NodeSpec::default(), NodeSpec::default()], &fcfg);
+    let reqs = traffic(&cluster, &fcfg, 40, Arrival::Burst);
+    let clean = cluster.route(&reqs, NodePolicy::RoundRobin, CARD, &Scenario::none()).unwrap();
+    assert_eq!(clean.shed(), 0);
+    // kill node 0 halfway through the modeled span: its undelivered
+    // requests are shed, the rest of the burst was already routed
+    let at = 0.5 * clean.cluster.wall_s;
+    let drill =
+        Scenario::new(vec![NodeEvent { at_s: at, node: 0, kind: EventKind::Fail }]);
+    let m = cluster.route(&reqs, NodePolicy::RoundRobin, CARD, &drill).unwrap();
+    assert_conserved(&m);
+    assert!(m.shed_failed > 0, "a mid-span failure must shed in-flight work");
+    assert_eq!(m.shed_admission, 0);
+    assert_eq!(m.shed_unroutable, 0);
+    assert!(m.cluster.completed < clean.cluster.completed);
+    let failed = &m.per_node[0];
+    assert_eq!(failed.failed_at_s, Some(at));
+    assert!(failed.shed_failed > 0);
+    assert!(failed.availability(m.cluster.wall_s) < 1.0);
+    assert_eq!(m.per_node[1].failed_at_s, None);
+    // determinism holds through scenarios too
+    let m2 = cluster.route(&reqs, NodePolicy::RoundRobin, CARD, &drill).unwrap();
+    assert_eq!(m.shed_failed, m2.shed_failed);
+    assert_eq!(m.cluster.wall_s, m2.cluster.wall_s);
+}
+
+#[test]
+fn drained_node_stops_taking_traffic_without_shedding() {
+    let fcfg = fleet_cfg();
+    let cluster = cluster_of(&[NodeSpec::default(), NodeSpec::default()], &fcfg);
+    let reqs = traffic(&cluster, &fcfg, 30, Arrival::Burst);
+    let drain =
+        Scenario::new(vec![NodeEvent { at_s: 0.0, node: 0, kind: EventKind::Drain }]);
+    let m = cluster.route(&reqs, NodePolicy::JoinShortestQueue, CARD, &drain).unwrap();
+    assert_conserved(&m);
+    assert_eq!(m.shed(), 0, "drain must not shed anything");
+    assert_eq!(m.per_node[0].offered, 0, "a drained node takes no new traffic");
+    assert_eq!(m.per_node[0].metrics.completed, 0);
+    assert_eq!(m.cluster.completed, 30);
+    assert_eq!(m.per_node[0].drained_at_s, Some(0.0));
+    // draining everything leaves requests unroutable, not lost
+    let all = Scenario::new(vec![
+        NodeEvent { at_s: 0.0, node: 0, kind: EventKind::Drain },
+        NodeEvent { at_s: 0.0, node: 1, kind: EventKind::Drain },
+    ]);
+    let m = cluster.route(&reqs, NodePolicy::RoundRobin, CARD, &all).unwrap();
+    assert_conserved(&m);
+    assert_eq!(m.shed_unroutable, 30);
+    assert_eq!(m.cluster.completed, 0);
+}
+
+#[test]
+fn capacity_planner_headroom_survives_single_node_failure() {
+    // the acceptance property: size the tier for 1.5x one node's measured
+    // throughput with one node of failure headroom, kill a node at target
+    // load, and admission ("SLA") shed stays zero
+    let cfg = Config::default();
+    let fcfg = fleet_cfg();
+    let mix = FamilyMix::parse("70/20/10").unwrap();
+    let report = plan_capacity(
+        Path::new(DIR),
+        &cfg,
+        &fcfg,
+        mix,
+        NodePolicy::WeightedCapacity,
+        CARD,
+        0.0, // auto: 1.5x measured node QPS
+        1,
+        200,
+    )
+    .unwrap();
+    assert!(report.node_qps > 0.0);
+    assert!(report.target_qps > report.node_qps, "the tier must need >1 node");
+    assert!(report.nodes_needed >= 2);
+    assert_eq!(report.nodes_total, report.nodes_needed + 1);
+    assert_eq!(
+        report.sla_shed_after_failure, 0,
+        "recommended headroom must keep SLA shed at zero under a node failure"
+    );
+    assert!(report.survives_single_node_failure);
+    assert!(report.drill_completed > 0);
+    // the Fig. 1 growth series carries the headroom and never shrinks
+    assert_eq!(report.growth.len(), 9);
+    for w in report.growth.windows(2) {
+        assert!(w[1].2 >= w[0].2);
+    }
+    assert!(report.growth[0].2 >= report.nodes_total);
+}

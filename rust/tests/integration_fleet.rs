@@ -275,6 +275,83 @@ fn vendor_mix_card_slows_its_replicas() {
 }
 
 #[test]
+fn open_loop_queueing_obeys_littles_law_and_p99_rises_with_utilization() {
+    // queueing sanity on the modeled clock: with Poisson arrivals the
+    // time-averaged number of requests in the system (sampled from the
+    // plan) must match arrival rate x mean latency (Little's law), and
+    // p99 latency must rise monotonically as utilization climbs
+    let eng = engine("sim");
+    let cfg = FleetConfig::default();
+    let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+    let mix = FamilyMix::parse("70/20/10").unwrap();
+
+    // saturation throughput from a burst trace sets the load points
+    let mut gen =
+        TrafficGen::new(5, mix, Arrival::Burst, eng.manifest(), cfg.recsys_batch).unwrap();
+    let burst = gen.take(200);
+    let sat = fleet.route(&burst, RoutePolicy::LatencyAware).unwrap();
+    let capacity_qps = sat.node_qps();
+    assert!(capacity_qps > 0.0);
+
+    let mut p99s = Vec::new();
+    for utilization in [0.3, 0.6, 0.9] {
+        let rate = utilization * capacity_qps;
+        let mut gen = TrafficGen::new(
+            5,
+            mix,
+            Arrival::Poisson { rate_qps: rate },
+            eng.manifest(),
+            cfg.recsys_batch,
+        )
+        .unwrap();
+        let reqs = gen.take(400);
+        let plan =
+            fbia::serving::fleet::router::plan(fleet.replicas(), &reqs, RoutePolicy::LatencyAware, &cfg)
+                .unwrap();
+        // per-request (arrival, finish) intervals from the plan
+        let spans: Vec<(f64, f64)> = plan
+            .planned
+            .iter()
+            .filter_map(|p| p.route.as_ref().map(|r| (p.arrival_s, r.finish_s)))
+            .collect();
+        assert_eq!(spans.len(), 400, "open-loop load points must not shed");
+        let t0 = reqs.first().unwrap().arrival_s();
+        let span = plan.span_s;
+        assert!(span > 0.0);
+        // L: time-average number in system, sampled at 2000 points
+        let samples = 2000;
+        let mut in_system = 0usize;
+        for k in 0..samples {
+            let t = t0 + span * (k as f64 + 0.5) / samples as f64;
+            in_system += spans.iter().filter(|&&(a, f)| a <= t && t < f).count();
+        }
+        let l = in_system as f64 / samples as f64;
+        // lambda x W over the same window
+        let lambda = spans.len() as f64 / span;
+        let w = spans.iter().map(|&(a, f)| f - a).sum::<f64>() / spans.len() as f64;
+        let lw = lambda * w;
+        assert!(
+            (l - lw).abs() <= 0.15 * lw.max(1e-12),
+            "Little's law violated at {utilization} utilization: L {l} vs lambda*W {lw}"
+        );
+        // p99 from the same latencies, exactly (no histogram buckets)
+        let mut lats: Vec<f64> = spans.iter().map(|&(a, f)| f - a).collect();
+        lats.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        p99s.push(lats[(0.99 * (lats.len() - 1) as f64) as usize]);
+    }
+    assert!(
+        p99s[0] <= p99s[1] && p99s[1] <= p99s[2],
+        "p99 must rise monotonically with utilization: {p99s:?}"
+    );
+    assert!(
+        p99s[2] > p99s[0],
+        "p99 at 0.9 utilization ({}) must exceed 0.3 utilization ({})",
+        p99s[2],
+        p99s[0]
+    );
+}
+
+#[test]
 fn fleet_numerics_match_across_backends_and_policies() {
     // the same request stream served on ref and sim fleets must agree on
     // the planning-independent facts: everything admitted, same counts

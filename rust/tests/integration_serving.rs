@@ -152,10 +152,10 @@ fn batcher_integration_no_loss_under_load() {
         b.push(gen.next());
     }
     let mut total = 0;
-    while let Some(batch) = b.pop(false) {
+    while let Some(batch) = b.pop(false).unwrap() {
         total += batch.requests.len();
     }
-    for batch in b.drain() {
+    for batch in b.drain().unwrap() {
         total += batch.requests.len();
     }
     assert_eq!(total + b.rejected, n);
