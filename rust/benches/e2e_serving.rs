@@ -14,7 +14,7 @@
 //! card latencies instead of host wall time.
 
 use fbia::runtime::Engine;
-use fbia::serving::{CvServer, NlpServer, RecsysServer};
+use fbia::serving::{CvServer, NlpServer, RecsysServer, ServeOptions};
 use fbia::util::bench::{bench_with, report, section};
 use fbia::util::cli::Args;
 use fbia::util::table::{ms, pct, Table};
@@ -48,11 +48,23 @@ fn main() {
         for precision in ["fp32", "int8"] {
             let server = Arc::new(RecsysServer::new(engine.clone(), batch, precision).unwrap());
             server.infer(&reqs[0]).unwrap(); // warmup
-            let mut runs = vec![("pipelined".to_string(), server.serve(reqs.clone()).unwrap())];
+            let mut runs = vec![(
+                "pipelined".to_string(),
+                server.serve_with(reqs.clone(), &ServeOptions::default()).unwrap(),
+            )];
             if threads > 1 {
                 runs.push((
                     format!("workers={threads}"),
-                    server.serve_workers(reqs.clone(), threads).unwrap(),
+                    server
+                        .serve_with(
+                            reqs.clone(),
+                            &ServeOptions {
+                                workers: threads,
+                                pipeline: false,
+                                ..ServeOptions::default()
+                            },
+                        )
+                        .unwrap(),
                 ));
             }
             for (mode, metrics) in runs {
@@ -97,11 +109,16 @@ fn main() {
             (0..32).map(|_| gen.next()).collect::<Vec<_>>()
         };
         // warmup every bucket
-        let _ = server.serve(mk(), 4, true, 1).unwrap();
+        let _ = server.serve_with(mk(), &ServeOptions::default()).unwrap();
         let mut t = Table::new(&["batching", "workers", "sentences/s", "p50", "pad waste"]);
         for (label, aware) in [("length-aware", true), ("naive", false)] {
             for &w in &thread_points {
-                let (metrics, waste) = server.serve(mk(), 4, aware, w).unwrap();
+                let (metrics, waste) = server
+                    .serve_with(
+                        mk(),
+                        &ServeOptions { length_aware: aware, workers: w, ..ServeOptions::default() },
+                    )
+                    .unwrap();
                 t.row(&[
                     label.to_string(),
                     w.to_string(),
@@ -121,9 +138,11 @@ fn main() {
         let mut t = Table::new(&["batch", "workers", "p50", "images/s", "speedup vs b1"]);
         let mut base = 0.0f64;
         for b in server.batch_sizes() {
-            let _ = server.serve(2, b, &mut gen, 1).unwrap(); // warmup
+            let _ = server.serve_with(2, b, &mut gen, &ServeOptions::default()).unwrap(); // warmup
             for &w in &thread_points {
-                let metrics = server.serve(10, b, &mut gen, w).unwrap();
+                let metrics = server
+                    .serve_with(10, b, &mut gen, &ServeOptions { workers: w, ..ServeOptions::default() })
+                    .unwrap();
                 if base == 0.0 {
                     base = metrics.items_per_s();
                 }

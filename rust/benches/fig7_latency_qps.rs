@@ -16,9 +16,9 @@
 use fbia::config::Config;
 use fbia::graph::models::ModelId;
 use fbia::runtime::{Clock, Engine};
-use fbia::serving::RecsysServer;
+use fbia::serving::{RecsysServer, ServeOptions};
 use fbia::sim::simulate_model;
-use fbia::util::bench::section;
+use fbia::util::bench::{section, BenchReport};
 use fbia::util::cli::Args;
 use fbia::util::json::Json;
 use fbia::util::table::{ms, pct, Table};
@@ -27,12 +27,12 @@ use std::sync::Arc;
 
 /// Serve the same request set at each thread count on the selected
 /// execution backend; returns the backend that actually ran, its clock,
-/// and (threads, qps, p50_s) points, 1-thread first.
+/// and (threads, qps, p50_s, p99_s) points, 1-thread first.
 fn dlrm_thread_scaling(
     threads: usize,
     requests: usize,
     backend: Option<&str>,
-) -> (&'static str, Clock, Vec<(usize, f64, f64)>) {
+) -> (&'static str, Clock, Vec<(usize, f64, f64, f64)>) {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     let engine = Arc::new(Engine::auto_with(&dir, backend).expect("engine"));
     let backend_name = engine.backend_name();
@@ -44,8 +44,15 @@ fn dlrm_thread_scaling(
     server.infer(&reqs[0]).expect("warmup");
     let mut points = Vec::new();
     for t in [1, threads] {
-        let metrics = server.serve_workers(reqs.clone(), t).expect("serve");
-        points.push((t, metrics.qps(), metrics.latency.p50()));
+        // `pipeline: false` keeps t=1 on the strictly sequential baseline
+        // the thread-scaling speedup is measured against
+        let metrics = server
+            .serve_with(
+                reqs.clone(),
+                &ServeOptions { workers: t, pipeline: false, ..ServeOptions::default() },
+            )
+            .expect("serve");
+        points.push((t, metrics.qps(), metrics.latency.p50(), metrics.latency.p99()));
         if threads <= 1 {
             break;
         }
@@ -111,7 +118,7 @@ fn main() {
     let (backend_name, clock, points) = dlrm_thread_scaling(threads, serve_requests, backend);
     let base_qps = points[0].1;
     let mut ts = Table::new(&["threads", "QPS", "p50", "speedup"]);
-    for &(t, qps, p50) in &points {
+    for &(t, qps, p50, _) in &points {
         ts.row(&[
             t.to_string(),
             format!("{qps:.1}"),
@@ -132,11 +139,24 @@ fn main() {
     }
 
     if let Some(path) = args.get("json") {
+        // shared BENCH_*.json schema: headline from the serving section
+        // (full-thread throughput, 1-thread budget-gated p50), figure rows
+        // and thread-scaling points as detail
         let p50_1thread = points[0].2;
-        let json = Json::obj(vec![
-            ("bench", Json::str("fig7_latency_qps")),
-            ("all_within_budget", Json::Bool(all_meet)),
-            (
+        let &(_, last_qps, _, last_p99) = points.last().expect("at least one point");
+        let mut bench = BenchReport::new("fig7_latency_qps", backend_name, clock.name());
+        bench.offered = serve_requests;
+        bench.completed = serve_requests;
+        bench.qps = last_qps;
+        bench.p50_ms = p50_1thread * 1e3;
+        bench.p99_ms = last_p99 * 1e3;
+        bench
+            .accept("all_within_budget", all_meet)
+            .accept(
+                "p50_within_budget",
+                clock != Clock::Modeled || p50_1thread <= dlrm_budget_s,
+            )
+            .with(
                 "dlrm_serving",
                 Json::obj(vec![
                     ("backend", Json::str(backend_name)),
@@ -154,11 +174,12 @@ fn main() {
                         Json::arr(
                             points
                                 .iter()
-                                .map(|&(t, qps, p50)| {
+                                .map(|&(t, qps, p50, p99)| {
                                     Json::obj(vec![
                                         ("threads", Json::num(t as f64)),
                                         ("qps", Json::num(qps)),
                                         ("p50_ms", Json::num(p50 * 1e3)),
+                                        ("p99_ms", Json::num(p99 * 1e3)),
                                     ])
                                 })
                                 .collect(),
@@ -169,8 +190,8 @@ fn main() {
                         Json::num(points.last().map(|p| p.1 / base_qps).unwrap_or(1.0)),
                     ),
                 ]),
-            ),
-            (
+            )
+            .with(
                 "rows",
                 Json::arr(
                     rows.iter()
@@ -188,9 +209,8 @@ fn main() {
                         })
                         .collect(),
                 ),
-            ),
-        ]);
-        std::fs::write(path, json.to_string()).expect("writing bench json");
-        println!("wrote {path}");
+            )
+            .write(path)
+            .expect("writing bench json");
     }
 }

@@ -5,6 +5,9 @@
 //! bench constructs these programmatically too.
 
 use crate::platform::{CardSpec, ClusterSpec, HostSpec, NicSpec, NodeSpec, PcieSpec};
+use crate::serving::cluster::NodePolicy;
+use crate::serving::fleet::{Placement, RoutePolicy};
+use crate::serving::policy::{card_policy_by_name, node_policy_by_name, placement_by_name};
 use crate::util::json::Json;
 use crate::util::error::{bail, Context, Result};
 use std::path::Path;
@@ -85,6 +88,15 @@ pub struct ServingConfig {
     pub worker_threads: usize,
     /// queue depth before backpressure.
     pub max_queue: usize,
+    /// default within-node card-routing policy (JSON: a name from
+    /// [`crate::serving::policy::CARD_POLICY_NAMES`]).
+    pub card_policy: RoutePolicy,
+    /// default cross-node routing policy for the cluster tier (JSON: a
+    /// name from [`crate::serving::policy::NODE_POLICY_NAMES`]).
+    pub node_policy: NodePolicy,
+    /// default replica placement (JSON: a name from
+    /// [`crate::serving::policy::PLACEMENT_NAMES`]).
+    pub placement: Placement,
 }
 
 impl Default for ServingConfig {
@@ -96,6 +108,9 @@ impl Default for ServingConfig {
             length_aware_batching: true,
             worker_threads: 6,
             max_queue: 1024,
+            card_policy: RoutePolicy::LatencyAware,
+            node_policy: NodePolicy::WeightedCapacity,
+            placement: Placement::SlsAffine,
         }
     }
 }
@@ -335,6 +350,20 @@ fn apply_serving(s: &mut ServingConfig, j: &Json) -> Result<()> {
             .map(|v| v.as_usize().context("seq_buckets entries must be usize"))
             .collect::<Result<_>>()?;
     }
+    // routing/placement policies resolve through the shared registry so a
+    // typo'd config name fails listing the valid set, same as the CLI
+    if let Some(v) = j.get("card_policy") {
+        let name = v.as_str().context("serving.card_policy must be a string")?;
+        s.card_policy = card_policy_by_name(name).context("serving.card_policy")?;
+    }
+    if let Some(v) = j.get("node_policy") {
+        let name = v.as_str().context("serving.node_policy must be a string")?;
+        s.node_policy = node_policy_by_name(name).context("serving.node_policy")?;
+    }
+    if let Some(v) = j.get("placement") {
+        let name = v.as_str().context("serving.placement must be a string")?;
+        s.placement = placement_by_name(name).context("serving.placement")?;
+    }
     Ok(())
 }
 
@@ -459,6 +488,39 @@ mod tests {
             r#"{"cluster": {"nodes": [{"cards": 2, "card_overrides": [{"card": 5}]}]}}"#,
         );
         assert!(e.contains("cluster.nodes[0].card_overrides"), "{e}");
+    }
+
+    #[test]
+    fn serving_policies_parse_through_the_registry() {
+        let j = Json::parse(
+            r#"{"serving": {"card_policy": "rr", "node_policy": "jsq",
+                            "placement": "spread"}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.serving.card_policy, RoutePolicy::RoundRobin);
+        assert_eq!(c.serving.node_policy, NodePolicy::JoinShortestQueue);
+        assert_eq!(c.serving.placement, Placement::Spread);
+        // untouched policies keep their defaults
+        assert_eq!(c.serving.card_policy.name(), "round-robin");
+        let d = Config::default();
+        assert_eq!(d.serving.card_policy, RoutePolicy::LatencyAware);
+        assert_eq!(d.serving.node_policy, NodePolicy::WeightedCapacity);
+        assert_eq!(d.serving.placement, Placement::SlsAffine);
+        // unknown names error with the config path and the valid set
+        let e = Config::from_json(
+            &Json::parse(r#"{"serving": {"card_policy": "bogus"}}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("serving.card_policy") && e.contains("latency-aware"), "{e}");
+        // non-string values are rejected, not coerced
+        let e = Config::from_json(
+            &Json::parse(r#"{"serving": {"placement": 3}}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("must be a string"), "{e}");
     }
 
     #[test]

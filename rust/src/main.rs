@@ -19,6 +19,14 @@
 //!                     NIC-limited nodes (`--nodes 3 --policy weighted`),
 //!                     inject node failures/drains (`--fail 0@0.5`), and
 //!                     size the tier with failure headroom (`--qps/--headroom`)
+//!   des               discrete-event core smoke: static vs queue-triggered
+//!                     dynamic batching on one seeded trace, with
+//!                     determinism and conservation checks (sim backend)
+//!
+//! `fleet`, `cluster` and `des` all drive their tiers through the unified
+//! [`Simulation`] builder; policy names resolve through
+//! [`fbia::serving::policy`], so an unknown name errors with the valid
+//! list everywhere.
 
 use fbia::capacity::GrowthScenario;
 use fbia::config::Config;
@@ -28,11 +36,14 @@ use fbia::numerics::weights::WeightGen;
 use fbia::runtime::{Clock, Engine, SimBackend};
 use fbia::serving::cluster::{self, Cluster, ClusterMetrics, EventKind, NodePolicy, Scenario};
 use fbia::serving::fleet::{
-    plan::plan_capacity, Arrival, FamilyMix, Fleet, FleetConfig, FleetMetrics, Placement,
+    plan::plan_capacity, Arrival, DynamicBatch, FamilyMix, Fleet, FleetConfig, FleetMetrics,
     RoutePolicy, TrafficGen,
 };
-use fbia::serving::{CvServer, NlpServer, RecsysServer, WEIGHT_SEED};
+use fbia::serving::policy::{card_policy_by_name, node_policy_by_name, placement_by_name};
+use fbia::serving::simulation::Simulation;
+use fbia::serving::{CvServer, NlpServer, RecsysServer, ServeOptions, WEIGHT_SEED};
 use fbia::sim::simulate_model;
+use fbia::util::bench::BenchReport;
 use fbia::util::cli::Args;
 use fbia::util::error::{bail, err, Result};
 use fbia::util::json::Json;
@@ -51,9 +62,10 @@ fn main() {
         Some("fleet") => cmd_fleet(&args),
         Some("capacity") => cmd_capacity(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("des") => cmd_des(&args),
         Some("info") | None => cmd_info(&args),
         Some(other) => Err(err!(
-            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster)"
+            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster, des)"
         )),
     };
     if let Err(e) = result {
@@ -195,13 +207,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Arc::new(RecsysServer::with_threads(eng.clone(), batch, precision, threads)?);
             let mut gen = RecsysGen::from_manifest(1, batch, eng.manifest())?;
             let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
-            // threads == 1 keeps the Fig. 6 pipelined path; > 1 serves with
+            // workers == 1 keeps the Fig. 6 pipelined path; > 1 serves with
             // N requests in flight
-            let metrics = if threads > 1 {
-                server.serve_workers(reqs, threads)?
-            } else {
-                server.serve(reqs)?
-            };
+            let metrics = server
+                .serve_with(reqs, &ServeOptions { workers: threads, ..ServeOptions::default() })?;
             print_metrics("dlrm", &metrics);
             print_budget_check(&metrics, ModelId::RecsysComplex);
         }
@@ -210,11 +219,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let m = eng.manifest();
             let mut gen = NlpGen::new(1, m.config_usize("xlmr", "vocab")?, 128, 100.0);
             let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
-            let (metrics, waste) = server.serve(
+            let (metrics, waste) = server.serve_with(
                 reqs,
-                args.get_usize("max-batch", 4),
-                !args.flag("naive-batching"),
-                threads,
+                &ServeOptions {
+                    max_batch: args.get_usize("max-batch", 4),
+                    length_aware: !args.flag("naive-batching"),
+                    workers: threads,
+                    ..ServeOptions::default()
+                },
             )?;
             print_metrics("xlmr", &metrics);
             print_budget_check(&metrics, ModelId::XlmR);
@@ -224,7 +236,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let server = Arc::new(CvServer::new(eng.clone())?);
             let mut gen = CvGen::new(1, server.image);
             let batch = args.get_usize("batch", 1);
-            let metrics = server.serve(n, batch, &mut gen, threads)?;
+            let metrics = server.serve_with(
+                n,
+                batch,
+                &mut gen,
+                &ServeOptions { workers: threads, ..ServeOptions::default() },
+            )?;
             print_metrics("cv", &metrics);
             print_budget_check(&metrics, ModelId::ResNeXt101);
         }
@@ -315,12 +332,14 @@ fn sim_engine(args: &Args, cfg: &Config) -> Result<Arc<Engine>> {
     Ok(Arc::new(Engine::auto_with_backend(dir, Arc::new(SimBackend::new(cfg.clone())))?))
 }
 
-/// FleetConfig from the shared CLI knobs.
-fn fleet_config(args: &Args) -> Result<FleetConfig> {
+/// FleetConfig from the shared CLI knobs; policy-shaped knobs default to
+/// the (possibly `--config` overridden) `serving` section and resolve
+/// through the [`fbia::serving::policy`] registry.
+fn fleet_config(args: &Args, cfg: &Config) -> Result<FleetConfig> {
     let d = FleetConfig::default();
     Ok(FleetConfig {
         replicas: args.get_usize("replicas", d.replicas).max(1),
-        placement: Placement::parse(args.get_or("placement", d.placement.name()))?,
+        placement: placement_by_name(args.get_or("placement", cfg.serving.placement.name()))?,
         recsys_batch: args.get_usize("batch", d.recsys_batch),
         recsys_precision: args.get_or("precision", &d.recsys_precision).to_string(),
         max_queue: args.get_usize("max-queue", d.max_queue).max(1),
@@ -334,6 +353,12 @@ fn fleet_config(args: &Args) -> Result<FleetConfig> {
                 Ok(x / 1e3)
             })
             .transpose()?,
+        des_seed: args.get_u64("des-seed", d.des_seed),
+        dynamic_batch: args.flag("dynamic-batch").then(|| DynamicBatch {
+            depth_hi: args.get_usize("batch-depth", DynamicBatch::default().depth_hi).max(1),
+            max_batch: args.get_usize("batch-cap", DynamicBatch::default().max_batch).max(2),
+            marginal: DynamicBatch::default().marginal,
+        }),
     })
 }
 
@@ -361,7 +386,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         }
         engine(args)?
     };
-    let fcfg = fleet_config(args)?;
+    let fcfg = fleet_config(args, &cfg)?;
     let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
     let arrival = match args.get_or("arrival", "burst") {
         "burst" => Arrival::Burst,
@@ -373,7 +398,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 1);
     let policies: Vec<RoutePolicy> = match args.get_or("policy", "all") {
         "all" => RoutePolicy::ALL.to_vec(),
-        p => vec![RoutePolicy::parse(p)?],
+        p => vec![card_policy_by_name(p)?],
     };
     let modeled = eng.clock() == Clock::Modeled;
 
@@ -389,15 +414,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         mix.label(),
     );
 
-    // policy sweep: route-only on the modeled clock (deterministic, cheap),
-    // full execution on wall clocks (there is nothing to report otherwise)
+    // policy sweep through the unified Simulation builder: route-only on
+    // the modeled clock (deterministic, cheap), full execution on wall
+    // clocks (there is nothing to report otherwise)
     let mut results: Vec<FleetMetrics> = Vec::new();
     for &p in &policies {
-        let m = if modeled {
-            fleet.route(&reqs, p)?
-        } else {
-            fleet.serve(reqs.clone(), p, threads)?
-        };
+        let mut sim = Simulation::fleet(Arc::clone(&fleet)).card_policy(p).trace(reqs.clone());
+        if !modeled {
+            sim = sim.execute(threads);
+        }
+        let m = sim.run()?.fleet.expect("fleet tier yields fleet metrics");
         results.push(m);
     }
     let mut t = Table::new(&[
@@ -419,7 +445,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 
     // detail breakdown for the requested (or default latency-aware) policy
     let detail_policy = match args.get("policy") {
-        Some(p) if p != "all" => RoutePolicy::parse(p)?,
+        Some(p) if p != "all" => card_policy_by_name(p)?,
         _ => RoutePolicy::LatencyAware,
     };
     if let Some(m) = results.iter().find(|m| m.policy == detail_policy) {
@@ -475,7 +501,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     // execute the detail policy's plan with real numerics (route-only
     // sweeps above never touch the kernels); skip with --no-execute
     if modeled && !args.flag("no-execute") {
-        let m = fleet.serve(reqs.clone(), detail_policy, threads)?;
+        let m = Simulation::fleet(Arc::clone(&fleet))
+            .card_policy(detail_policy)
+            .trace(reqs.clone())
+            .execute(threads)
+            .run()?
+            .fleet
+            .expect("fleet tier yields fleet metrics");
         println!(
             "\nexecuted {} admitted requests' numerics on {} ({} workers, modeled clock)",
             m.node.completed,
@@ -485,20 +517,31 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
 
     if let Some(path) = args.get("json") {
-        let json = Json::obj(vec![
-            ("bench", Json::str("fleet_smoke")),
-            ("backend", Json::str(eng.backend_name())),
-            ("clock", Json::str(eng.clock().name())),
-            ("cards", Json::num(fleet.replicas().cards as f64)),
-            ("replicas", Json::num(fcfg.replicas as f64)),
-            ("placement", Json::str(fcfg.placement.name())),
-            ("mix", Json::str(&mix.label())),
-            ("requests", Json::num(requests as f64)),
-            (
-                "latency_aware_beats_round_robin",
-                la_beats_rr.map(Json::Bool).unwrap_or(Json::Null),
-            ),
-            (
+        // shared BENCH_*.json schema: headline numbers from the detail
+        // policy, the full sweep under `policies`
+        let headline = results
+            .iter()
+            .find(|m| m.policy == detail_policy)
+            .or_else(|| results.first())
+            .ok_or_else(|| err!("fleet: no policy results to report"))?;
+        let mut bench = BenchReport::new("fleet_smoke", eng.backend_name(), eng.clock().name());
+        bench.offered = headline.offered;
+        bench.completed = headline.node.completed;
+        bench.shed = headline.shed;
+        bench.qps = headline.node_qps();
+        bench.p50_ms = headline.node.latency.p50() * 1e3;
+        bench.p99_ms = headline.node.latency.p99() * 1e3;
+        if let Some(holds) = la_beats_rr {
+            bench = bench.accept("latency_aware_beats_round_robin", holds);
+        }
+        let bench = bench
+            .with("cards", Json::num(fleet.replicas().cards as f64))
+            .with("replicas", Json::num(fcfg.replicas as f64))
+            .with("placement", Json::str(fcfg.placement.name()))
+            .with("mix", Json::str(&mix.label()))
+            .with("requests", Json::num(requests as f64))
+            .with("headline_policy", Json::str(detail_policy.name()))
+            .with(
                 "policies",
                 Json::arr(
                     results
@@ -566,11 +609,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                         })
                         .collect(),
                 ),
-            ),
-        ]);
-        std::fs::write(path, json.to_string())
-            .map_err(|e| err!("writing {path}: {e}"))?;
-        println!("wrote {path}");
+            );
+        bench.write(path)?;
     }
     Ok(())
 }
@@ -595,7 +635,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             );
         }
     }
-    let fcfg = fleet_config(args)?;
+    let fcfg = fleet_config(args, &cfg)?;
     let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
     let requests = args.get_usize("requests", 150).max(1);
     let seed = args.get_u64("seed", 1);
@@ -607,10 +647,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         None => (vec![cfg.node.clone(); args.get_usize("nodes", 3).max(1)], 1),
     };
     let headroom = args.get_usize("headroom", default_headroom);
-    let card_policy = RoutePolicy::parse(args.get_or("card-policy", "latency-aware"))?;
+    let card_policy =
+        card_policy_by_name(args.get_or("card-policy", cfg.serving.card_policy.name()))?;
     let policies: Vec<NodePolicy> = match args.get_or("policy", "all") {
         "all" => NodePolicy::ALL.to_vec(),
-        p => vec![NodePolicy::parse(p)?],
+        p => vec![node_policy_by_name(p)?],
     };
     let detail_policy = *policies.last().unwrap();
 
@@ -627,7 +668,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let burst = traffic.take(requests);
     let mut sweep: Vec<ClusterMetrics> = Vec::new();
     for &p in &policies {
-        sweep.push(cluster.route(&burst, p, card_policy, &Scenario::none())?);
+        let m = Simulation::cluster(Arc::clone(&cluster))
+            .node_policy(p)
+            .card_policy(card_policy)
+            .trace(burst.clone())
+            .run()?
+            .cluster
+            .expect("cluster tier yields cluster metrics");
+        sweep.push(m);
     }
     println!(
         "cluster: {} nodes, mix {} over {requests} requests (burst, card policy {})",
@@ -710,13 +758,16 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             kind: EventKind::Fail,
         });
     }
-    let scenario = Scenario::new(events);
-    let fail_run = if args.flag("no-execute") {
-        cluster.route(&open, detail_policy, card_policy, &scenario)?
-    } else {
+    let mut sim = Simulation::cluster(Arc::clone(&cluster))
+        .node_policy(detail_policy)
+        .card_policy(card_policy)
+        .scenario(Scenario::new(events))
+        .trace(open);
+    if !args.flag("no-execute") {
         // execute the admitted requests' real numerics too
-        cluster.serve(open.clone(), detail_policy, card_policy, &scenario, threads)?
-    };
+        sim = sim.execute(threads);
+    }
+    let fail_run = sim.run()?.cluster.expect("cluster tier yields cluster metrics");
     println!(
         "\nscenario ({} @ {:.0} QPS open-loop): completed {}, shed {} (admission {}, failed {}, unroutable {})",
         detail_policy.name(),
@@ -753,14 +804,29 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     tn.print();
 
     if let Some(path) = args.get("json") {
-        let json = Json::obj(vec![
-            ("bench", Json::str("cluster_smoke")),
-            ("backend", Json::str("sim")),
-            ("nodes", Json::num(cluster.node_count() as f64)),
-            ("mix", Json::str(&mix.label())),
-            ("requests", Json::num(requests as f64)),
-            ("card_policy", Json::str(card_policy.name())),
-            (
+        // shared BENCH_*.json schema: headline numbers from the fail-run
+        // (the scenario the tier must survive), sweep + capacity as detail
+        let mut bench = BenchReport::new("cluster_smoke", "sim", "modeled");
+        bench.offered = fail_run.offered;
+        bench.completed = fail_run.cluster.completed;
+        bench.shed = fail_run.shed();
+        bench.qps = fail_run.cluster_qps();
+        bench.p50_ms = fail_run.cluster.latency.p50() * 1e3;
+        bench.p99_ms = fail_run.cluster.latency.p99() * 1e3;
+        let bench = bench
+            .accept(
+                "headroom_satisfies_sla_under_single_node_failure",
+                report.survives_single_node_failure,
+            )
+            .accept(
+                "conservation",
+                fail_run.cluster.completed + fail_run.shed() == fail_run.offered,
+            )
+            .with("nodes", Json::num(cluster.node_count() as f64))
+            .with("mix", Json::str(&mix.label()))
+            .with("requests", Json::num(requests as f64))
+            .with("card_policy", Json::str(card_policy.name()))
+            .with(
                 "policies",
                 Json::arr(
                     sweep
@@ -778,8 +844,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                         })
                         .collect(),
                 ),
-            ),
-            (
+            )
+            .with(
                 "capacity",
                 Json::obj(vec![
                     ("node_qps", Json::num(report.node_qps)),
@@ -797,8 +863,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                         Json::Bool(report.survives_single_node_failure),
                     ),
                 ]),
-            ),
-            (
+            )
+            .with(
                 "fail_scenario",
                 Json::obj(vec![
                     ("policy", Json::str(fail_run.node_policy.name())),
@@ -821,10 +887,122 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                         ),
                     ),
                 ]),
-            ),
+            );
+        bench.write(path)?;
+    }
+    Ok(())
+}
+
+/// `fbia des`: the discrete-event core's acceptance drill. One seeded
+/// burst trace routed twice through the [`Simulation`] builder — once with
+/// static batching, once with queue-depth-triggered dynamic batch growth
+/// — plus a repeat of each run to demonstrate bit-determinism. Emits the
+/// shared BENCH schema with the `dynamic_batch_beats_static` flag CI gates
+/// on. Modeled clock only, like `fbia capacity`.
+fn cmd_des(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let requested = args
+        .get("backend")
+        .map(str::to_string)
+        .or_else(|| std::env::var("FBIA_BACKEND").ok());
+    if let Some(b) = requested {
+        if b != "sim" {
+            fbia::runtime::backend_by_name(&b)?;
+            bail!(
+                "fbia des compares batching policies on the modeled clock; \
+                 only --backend sim is supported (got '{b}')"
+            );
+        }
+    }
+    let eng = sim_engine(args, &cfg)?;
+    let mut static_cfg = fleet_config(args, &cfg)?;
+    static_cfg.dynamic_batch = None;
+    let dynb = DynamicBatch {
+        depth_hi: args.get_usize("batch-depth", DynamicBatch::default().depth_hi).max(1),
+        max_batch: args.get_usize("batch-cap", DynamicBatch::default().max_batch).max(2),
+        marginal: DynamicBatch::default().marginal,
+    };
+    let mut dyn_cfg = static_cfg.clone();
+    dyn_cfg.dynamic_batch = Some(dynb);
+    // single-family NLP burst: same-shape queue pressure is where growth
+    // windows pay; recsys never batches dynamically (multi-card fan-out)
+    let mix = FamilyMix::parse(args.get_or("mix", "0/100/0"))?;
+    let requests = args.get_usize("requests", 96).max(1);
+    let seed = args.get_u64("seed", 1);
+    let policy = card_policy_by_name(args.get_or("policy", cfg.serving.card_policy.name()))?;
+
+    let static_fleet = Arc::new(Fleet::new(eng.clone(), static_cfg.clone())?);
+    let dyn_fleet = Arc::new(Fleet::new(eng.clone(), dyn_cfg)?);
+    let mut traffic =
+        TrafficGen::new(seed, mix, Arrival::Burst, eng.manifest(), static_cfg.recsys_batch)?;
+    let reqs = traffic.take(requests);
+    let run = |fleet: &Arc<Fleet>| {
+        Simulation::fleet(Arc::clone(fleet)).card_policy(policy).trace(reqs.clone()).run()
+    };
+    let stat = run(&static_fleet)?;
+    let dynr = run(&dyn_fleet)?;
+    // the determinism the seeded heap promises: identical reruns
+    let stat2 = run(&static_fleet)?;
+    let dyn2 = run(&dyn_fleet)?;
+    let deterministic = stat.qps == stat2.qps
+        && stat.p99_ms == stat2.p99_ms
+        && stat.shed == stat2.shed
+        && dynr.qps == dyn2.qps
+        && dynr.p99_ms == dyn2.p99_ms
+        && dynr.shed == dyn2.shed;
+    let conserved = stat.conserved() && dynr.conserved();
+    let beats = dynr.qps > stat.qps && dynr.shed <= stat.shed;
+
+    println!(
+        "des: static vs dynamic batching, mix {} over {requests} requests (burst, {} policy, des seed {:#x})",
+        mix.label(),
+        policy.name(),
+        static_cfg.des_seed,
+    );
+    let mut t = Table::new(&["batching", "completed", "shed", "node QPS", "p50", "p99", "span"]);
+    for (name, r) in [
+        ("static".to_string(), &stat),
+        (format!("dynamic (depth>={}, cap {})", dynb.depth_hi, dynb.max_batch), &dynr),
+    ] {
+        t.row(&[
+            name,
+            r.completed.to_string(),
+            r.shed.to_string(),
+            format!("{:.1}", r.qps),
+            ms(r.p50_ms / 1e3),
+            ms(r.p99_ms / 1e3),
+            format!("{:.2}s", r.span_s),
         ]);
-        std::fs::write(path, json.to_string()).map_err(|e| err!("writing {path}: {e}"))?;
-        println!("wrote {path}");
+    }
+    t.print();
+    println!(
+        "\ndynamic vs static: {:.1} vs {:.1} node QPS at shed {} vs {} -> {}",
+        dynr.qps,
+        stat.qps,
+        dynr.shed,
+        stat.shed,
+        if beats { "reactive batching wins" } else { "NO WIN" },
+    );
+    println!(
+        "invariants: conservation {} | bit-deterministic rerun {}",
+        if conserved { "holds" } else { "VIOLATED" },
+        if deterministic { "holds" } else { "VIOLATED" },
+    );
+
+    if let Some(path) = args.get("json") {
+        dynr.bench_report("des_smoke", "sim")
+            .accept("dynamic_batch_beats_static", beats)
+            .accept("conservation", conserved)
+            .accept("deterministic", deterministic)
+            .with("mix", Json::str(&mix.label()))
+            .with("requests", Json::num(requests as f64))
+            .with("des_seed", Json::num(static_cfg.des_seed as f64))
+            .with("batch_depth_hi", Json::num(dynb.depth_hi as f64))
+            .with("batch_cap", Json::num(dynb.max_batch as f64))
+            .with("static_qps", Json::num(stat.qps))
+            .with("static_p99_ms", Json::num(stat.p99_ms))
+            .with("static_shed", Json::num(stat.shed as f64))
+            .write(path)?;
     }
     Ok(())
 }
@@ -850,11 +1028,11 @@ fn cmd_capacity(args: &Args) -> Result<()> {
         }
     }
     let eng = sim_engine(args, &cfg)?;
-    let fcfg = fleet_config(args)?;
+    let fcfg = fleet_config(args, &cfg)?;
     let requests = args.get_usize("requests", 96).max(1);
     let policy = match args.get("policy") {
-        Some(p) => RoutePolicy::parse(p)?,
-        None => RoutePolicy::LatencyAware,
+        Some(p) => card_policy_by_name(p)?,
+        None => cfg.serving.card_policy,
     };
     // replica placement is mix-independent: build the fleet once and route
     // both scenarios' traces through it

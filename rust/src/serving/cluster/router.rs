@@ -1,8 +1,8 @@
 //! The node-level router: dispatch the mixed stream across whole nodes.
 //!
 //! Two-tier dispatch: this router picks a *node* for every request, then
-//! the node's own card router ([`crate::serving::fleet::router`], reused a
-//! request at a time through [`NodePlanner`]) picks the replica and card.
+//! the node's own card router ([`crate::serving::fleet::router`], reused an
+//! event at a time through [`NodePlanner`]) picks the replica and card.
 //! Between the tiers sits the NIC: a request's bytes must clear the chosen
 //! node's ingress link before its card router even sees it, and its fp16
 //! response must clear the egress link before the caller counts it done —
@@ -10,14 +10,20 @@
 //! `NicSpec.bw_bits`, not by its cards (the paper's network-bandwidth
 //! requirement).
 //!
-//! Like the fleet router, planning is a deterministic pass over the stream
-//! in arrival order: identical inputs give bit-identical plans regardless
-//! of worker counts, because workers only execute numerics afterwards.
+//! The whole tier runs on one seeded event heap ([`crate::sim::des`]):
+//! scenario events (drain/fail), arrivals, NIC deliveries, card
+//! completions and batch-window timers all pop in modeled-time order, so a
+//! node failure kills exactly the work that was in flight *at that
+//! instant*, and dynamic batch growth composes with the NIC stages
+//! unchanged. Identical seeds and traces give bit-identical plans
+//! regardless of worker counts, because workers only execute numerics
+//! afterwards.
 
-use crate::serving::cluster::scenario::{EventKind, NodeEvent, Scenario};
+use crate::serving::cluster::scenario::{EventKind, Scenario};
 use crate::serving::cluster::{ClusterNode, WireModel};
-use crate::serving::fleet::router::{self as fleet_router, NodePlanner};
+use crate::serving::fleet::router::{self as fleet_router, NodePlanner, RouteStep};
 use crate::serving::fleet::{Decision, Family, FleetConfig, FleetRequest, RoutePolicy};
+use crate::sim::des::{class, EventHeap, EventId};
 use crate::sim::transfer::NicOccupancy;
 use crate::util::error::{bail, Result};
 
@@ -115,53 +121,38 @@ struct NodeState {
     failed_at: Option<f64>,
     /// Cumulative modeled seconds routed here (weighted-capacity signal).
     assigned_s: f64,
-    /// (planned index, delivery time) of admitted requests — consulted
-    /// when the node fails to shed what was still in flight.
-    inflight: Vec<(usize, f64)>,
+    /// Requests picked for this node but still crossing its ingress NIC —
+    /// the card router has not seen them yet, so they are invisible to
+    /// `planner.outstanding()`; join-shortest-queue must count them too.
+    pending: usize,
+    /// Planned indices of requests admitted here and not yet delivered —
+    /// what a failure sheds.
+    inflight: Vec<usize>,
     /// Busy/NIC seconds accumulated before a failure reset the live state.
     busy_snapshot_s: f64,
     nic_rx_snapshot_s: f64,
     nic_tx_snapshot_s: f64,
 }
 
-/// Apply one scenario event. Failing a node demotes its undelivered
-/// requests to [`Outcome::ShedFailed`] and cold-resets its planner and NIC
-/// (what replaces the node starts empty); draining only stops new traffic.
-fn apply_event(e: &NodeEvent, state: &mut NodeState, planned: &mut [ClusterPlanned]) {
-    match e.kind {
-        EventKind::Drain => {
-            if state.up {
-                state.up = false;
-                state.drained_at = Some(e.at_s);
-            }
-        }
-        EventKind::Fail => {
-            if state.failed_at.is_some() {
-                return;
-            }
-            state.up = false;
-            state.failed_at = Some(e.at_s);
-            for &(idx, delivered) in &state.inflight {
-                if delivered > e.at_s {
-                    if let Outcome::Completed { node, .. } = planned[idx].outcome {
-                        planned[idx].outcome = Outcome::ShedFailed { node };
-                    }
-                }
-            }
-            state.inflight.clear();
-            let busy: f64 = state.planner.busy_s().iter().sum();
-            let (rx, tx) = (state.nic.rx_busy_s(), state.nic.tx_busy_s());
-            state.busy_snapshot_s += busy;
-            state.nic_rx_snapshot_s += rx;
-            state.nic_tx_snapshot_s += tx;
-            state.planner.reset();
-            state.nic.reset();
-        }
-    }
+/// Cluster-tier event payloads (request index, node index).
+enum CEv {
+    /// Scenario event `j` (index into [`Scenario::events`]) fires.
+    Scenario(usize),
+    /// Request `i` arrives at the cluster's front door.
+    Arrive(usize),
+    /// Request `idx`'s bytes cleared `node`'s ingress NIC.
+    Deliver { idx: usize, node: usize },
+    /// Request `idx`'s card service on `node` finished.
+    CardDone { idx: usize, node: usize },
+    /// Request `idx`'s response cleared `node`'s egress NIC.
+    Delivered { idx: usize, node: usize },
+    /// A dynamic-batch growth window on `node` closed (batch started).
+    CloseBatch { node: usize, card: usize, gen: u64 },
 }
 
-/// Plan the two-tier routing of `reqs` (nondecreasing arrival order) over
-/// the cluster, applying `scenario` events as the stream reaches them.
+/// Simulate the two-tier routing of `reqs` over the cluster on a seeded
+/// event heap ([`FleetConfig::des_seed`]), with `scenario` drain/fail
+/// events applied at their modeled instants.
 pub fn plan(
     nodes: &[ClusterNode],
     reqs: &[FleetRequest],
@@ -189,119 +180,234 @@ pub fn plan(
             drained_at: None,
             failed_at: None,
             assigned_s: 0.0,
+            pending: 0,
             inflight: Vec::new(),
             busy_snapshot_s: 0.0,
             nic_rx_snapshot_s: 0.0,
             nic_tx_snapshot_s: 0.0,
         })
         .collect();
-    let events = scenario.events();
-    let mut ev = 0usize;
-    let mut rr = 0usize;
-    let mut planned: Vec<ClusterPlanned> = Vec::with_capacity(reqs.len());
-    let mut last_arrival = f64::NEG_INFINITY;
 
+    let mut heap: EventHeap<CEv> = EventHeap::new(cfg.des_seed);
+    let events = scenario.events();
+    for (j, e) in events.iter().enumerate() {
+        if !e.at_s.is_finite() {
+            bail!("scenario event {j} has a non-finite time {}", e.at_s);
+        }
+        heap.push_class(e.at_s, class::SCENARIO, CEv::Scenario(j));
+    }
+    let mut planned: Vec<ClusterPlanned> = Vec::with_capacity(reqs.len());
     for (i, req) in reqs.iter().enumerate() {
         let t = req.arrival_s();
-        if t < last_arrival {
-            bail!(
-                "cluster requests must arrive in nondecreasing order \
-                 ({t} after {last_arrival})"
-            );
+        if !t.is_finite() {
+            bail!("cluster request {i} has a non-finite arrival time {t}");
         }
-        last_arrival = t;
-        while ev < events.len() && events[ev].at_s <= t {
-            apply_event(&events[ev], &mut states[events[ev].node], &mut planned);
-            ev += 1;
-        }
-        let family = req.family();
+        planned.push(ClusterPlanned {
+            family: req.family(),
+            arrival_s: t,
+            items: req.items(),
+            // placeholder; every request's terminal outcome is written by
+            // its own events (or the failure that killed it)
+            outcome: Outcome::ShedUnroutable,
+        });
+        heap.push(t, CEv::Arrive(i));
+    }
 
-        // tier 1: pick a node (every policy breaks ties toward the lowest
-        // node id, so the choice is deterministic)
-        let pick = match node_policy {
-            NodePolicy::RoundRobin => {
-                let mut pick = None;
-                for step in 0..n {
-                    let k = (rr + step) % n;
-                    if states[k].up {
-                        pick = Some(k);
-                        rr = (k + 1) % n;
-                        break;
-                    }
-                }
-                pick
-            }
-            NodePolicy::JoinShortestQueue => {
-                let mut best: Option<(usize, usize)> = None;
-                for k in 0..n {
-                    if !states[k].up {
-                        continue;
-                    }
-                    states[k].planner.prune(t);
-                    let d = states[k].planner.outstanding();
-                    if best.map_or(true, |(bd, _)| d < bd) {
-                        best = Some((d, k));
-                    }
-                }
-                best.map(|(_, k)| k)
-            }
-            NodePolicy::WeightedCapacity => {
-                let mut best: Option<(f64, usize)> = None;
-                for k in 0..n {
-                    if !states[k].up {
-                        continue;
-                    }
-                    let proj = states[k].assigned_s + nodes[k].fam_cost_s[family.index()];
-                    if best.map_or(true, |(bp, _)| proj < bp) {
-                        best = Some((proj, k));
-                    }
-                }
-                best.map(|(_, k)| k)
-            }
-        };
+    // per-request handle to its *next* pending event (NIC delivery, card
+    // completion, or response delivery) — what a node failure cancels
+    let mut stage_ev: Vec<Option<EventId>> = vec![None; reqs.len()];
+    let mut decisions: Vec<Option<Decision>> = vec![None; reqs.len()];
+    let mut rr = 0usize;
 
-        let outcome = match pick {
-            None => Outcome::ShedUnroutable,
-            Some(k) => {
-                // tier 1.5: the request's bytes serialize on the node NIC
-                let (in_bytes, out_bytes) = wire.bytes(req);
-                let state = &mut states[k];
-                let t_node = state.nic.rx(t, in_bytes);
-                // tier 2: the node's own card router
-                match state.planner.route_one(nodes[k].replicas(), req, t_node, card_policy, cfg)
-                {
-                    None => Outcome::ShedAdmission { node: k },
-                    Some(r) => {
-                        let delivered = state.nic.tx(r.finish_s, out_bytes);
-                        state.assigned_s += nodes[k].fam_cost_s[family.index()];
-                        state.inflight.push((i, delivered));
-                        Outcome::Completed {
-                            node: k,
-                            decision: r.decision,
-                            latency_s: delivered - t,
-                            finish_s: delivered,
+    while let Some(e) = heap.pop() {
+        let t = e.at_s;
+        match e.kind {
+            CEv::Scenario(j) => {
+                let ev = &events[j];
+                let state = &mut states[ev.node];
+                match ev.kind {
+                    EventKind::Drain => {
+                        if state.up {
+                            state.up = false;
+                            state.drained_at = Some(t);
                         }
                     }
+                    EventKind::Fail => {
+                        if state.failed_at.is_some() {
+                            continue;
+                        }
+                        state.up = false;
+                        state.failed_at = Some(t);
+                        // everything still in flight here dies with the node
+                        for idx in state.inflight.drain(..) {
+                            if let Some(id) = stage_ev[idx].take() {
+                                heap.cancel(id);
+                            }
+                            planned[idx].outcome = Outcome::ShedFailed { node: ev.node };
+                        }
+                        state.pending = 0;
+                        let busy: f64 = state.planner.busy_s().iter().sum();
+                        state.busy_snapshot_s += busy;
+                        state.nic_rx_snapshot_s += state.nic.rx_busy_s();
+                        state.nic_tx_snapshot_s += state.nic.tx_busy_s();
+                        state.planner.reset();
+                        state.nic.reset();
+                    }
                 }
             }
-        };
-        planned.push(ClusterPlanned { family, arrival_s: t, items: req.items(), outcome });
+            CEv::Arrive(i) => {
+                let req = &reqs[i];
+                let family = req.family();
+                // tier 1: pick a node (every policy breaks ties toward the
+                // lowest node id, so the choice is deterministic)
+                let pick = match node_policy {
+                    NodePolicy::RoundRobin => {
+                        let mut pick = None;
+                        for step in 0..n {
+                            let k = (rr + step) % n;
+                            if states[k].up {
+                                pick = Some(k);
+                                rr = (k + 1) % n;
+                                break;
+                            }
+                        }
+                        pick
+                    }
+                    NodePolicy::JoinShortestQueue => {
+                        let mut best: Option<(usize, usize)> = None;
+                        for k in 0..n {
+                            if !states[k].up {
+                                continue;
+                            }
+                            states[k].planner.prune(t);
+                            let d = states[k].planner.outstanding() + states[k].pending;
+                            if best.map_or(true, |(bd, _)| d < bd) {
+                                best = Some((d, k));
+                            }
+                        }
+                        best.map(|(_, k)| k)
+                    }
+                    NodePolicy::WeightedCapacity => {
+                        let mut best: Option<(f64, usize)> = None;
+                        for k in 0..n {
+                            if !states[k].up {
+                                continue;
+                            }
+                            let proj = states[k].assigned_s + nodes[k].fam_cost_s[family.index()];
+                            if best.map_or(true, |(bp, _)| proj < bp) {
+                                best = Some((proj, k));
+                            }
+                        }
+                        best.map(|(_, k)| k)
+                    }
+                };
+                match pick {
+                    None => planned[i].outcome = Outcome::ShedUnroutable,
+                    Some(k) => {
+                        // tier 1.5: the bytes serialize on the node's NIC
+                        let (in_bytes, _) = wire.bytes(req);
+                        let state = &mut states[k];
+                        let t_node = state.nic.rx(t, in_bytes);
+                        state.assigned_s += nodes[k].fam_cost_s[family.index()];
+                        state.pending += 1;
+                        state.inflight.push(i);
+                        stage_ev[i] =
+                            Some(heap.push(t_node, CEv::Deliver { idx: i, node: k }));
+                    }
+                }
+            }
+            CEv::Deliver { idx, node } => {
+                stage_ev[idx] = None;
+                let state = &mut states[node];
+                state.pending -= 1;
+                // tier 2: the node's own card router, one event step
+                match state.planner.step(
+                    nodes[node].replicas(),
+                    &reqs[idx],
+                    idx,
+                    t,
+                    card_policy,
+                    cfg,
+                ) {
+                    RouteStep::Shed => {
+                        planned[idx].outcome = Outcome::ShedAdmission { node };
+                        state.inflight.retain(|&x| x != idx);
+                    }
+                    RouteStep::Routed { routed, opened } => {
+                        decisions[idx] = Some(routed.decision);
+                        stage_ev[idx] = Some(heap.push_class(
+                            routed.finish_s,
+                            class::COMPLETION,
+                            CEv::CardDone { idx, node },
+                        ));
+                        if let Some(tk) = opened {
+                            heap.push_class(
+                                tk.start_s,
+                                class::TIMER,
+                                CEv::CloseBatch { node, card: tk.card, gen: tk.gen },
+                            );
+                        }
+                    }
+                    RouteStep::Merged { routed, members } => {
+                        decisions[idx] = Some(routed.decision);
+                        // the grown batch finishes together: supersede the
+                        // members' (still unstarted) card completions
+                        for m in members {
+                            if let Some(id) = stage_ev[m].take() {
+                                heap.cancel(id);
+                            }
+                            stage_ev[m] = Some(heap.push_class(
+                                routed.finish_s,
+                                class::COMPLETION,
+                                CEv::CardDone { idx: m, node },
+                            ));
+                        }
+                        stage_ev[idx] = Some(heap.push_class(
+                            routed.finish_s,
+                            class::COMPLETION,
+                            CEv::CardDone { idx, node },
+                        ));
+                    }
+                }
+            }
+            CEv::CardDone { idx, node } => {
+                let state = &mut states[node];
+                state.planner.prune(t);
+                // the fp16 response serializes on the egress NIC
+                let (_, out_bytes) = wire.bytes(&reqs[idx]);
+                let delivered = state.nic.tx(t, out_bytes);
+                stage_ev[idx] = Some(heap.push_class(
+                    delivered,
+                    class::COMPLETION,
+                    CEv::Delivered { idx, node },
+                ));
+            }
+            CEv::Delivered { idx, node } => {
+                stage_ev[idx] = None;
+                let state = &mut states[node];
+                state.inflight.retain(|&x| x != idx);
+                planned[idx].outcome = Outcome::Completed {
+                    node,
+                    decision: decisions[idx].expect("delivered request must have a decision"),
+                    latency_s: t - planned[idx].arrival_s,
+                    finish_s: t,
+                };
+            }
+            CEv::CloseBatch { node, card, gen } => {
+                states[node].planner.close_batch(card, gen);
+            }
+        }
     }
 
-    // events after the last arrival can still kill in-flight work
-    while ev < events.len() {
-        apply_event(&events[ev], &mut states[events[ev].node], &mut planned);
-        ev += 1;
-    }
-
+    let first_arrival = planned.iter().map(|p| p.arrival_s).fold(f64::INFINITY, f64::min);
     let mut max_finish: Option<f64> = None;
     for p in &planned {
         if let Outcome::Completed { finish_s, .. } = p.outcome {
             max_finish = Some(max_finish.map_or(finish_s, |m: f64| m.max(finish_s)));
         }
     }
-    let span_s = match (reqs.first(), max_finish) {
-        (Some(first), Some(finish)) => (finish - first.arrival_s()).max(0.0),
+    let span_s = match max_finish {
+        Some(finish) if first_arrival.is_finite() => (finish - first_arrival).max(0.0),
         _ => 0.0,
     };
     let node_reports = states

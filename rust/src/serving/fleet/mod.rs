@@ -38,7 +38,7 @@ pub mod router;
 pub mod traffic;
 
 pub use replica::{Placement, ReplicaManager};
-pub use router::{Decision, NodePlanner, RoutePlan, RoutePolicy};
+pub use router::{BatchTicket, Decision, NodePlanner, RoutePlan, RoutePolicy, RouteStep};
 pub use traffic::{Arrival, FamilyMix, TrafficGen};
 
 use crate::graph::models::ModelId;
@@ -135,6 +135,30 @@ impl FleetRequest {
     }
 }
 
+/// Queue-depth-triggered dynamic batch growth — the reactive policy the
+/// event-heap core unlocks. A queued NLP/CV request opens a growth window
+/// until its modeled start; while the card's queue depth is at least
+/// `depth_hi`, later same-shape requests merge into the window at
+/// `marginal` × the solo compute cost instead of queueing their full cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DynamicBatch {
+    /// Minimum queue depth on the card before a merge is allowed (the
+    /// queue-pressure trigger; below it requests serve solo for latency).
+    pub depth_hi: usize,
+    /// Cap on members per grown batch (compiled batch variants bound it).
+    pub max_batch: usize,
+    /// Marginal compute cost of each member beyond the first, as a
+    /// fraction of the solo cost (batching amortizes weight traffic —
+    /// §IV-C; 1.0 would mean batching wins nothing).
+    pub marginal: f64,
+}
+
+impl Default for DynamicBatch {
+    fn default() -> DynamicBatch {
+        DynamicBatch { depth_hi: 2, max_batch: 4, marginal: 0.55 }
+    }
+}
+
 /// Fleet-wide knobs: how many replicas to place, where, and when to shed.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -153,6 +177,13 @@ pub struct FleetConfig {
     /// cost exceeds this budget. `None` disables the SLA check (the
     /// bounded queue still applies).
     pub sla_budget_s: Option<f64>,
+    /// Seed for the event heap's same-instant tie-breaks
+    /// ([`crate::sim::des::EventHeap`]). Runs sharing a seed and a trace
+    /// are bit-identical.
+    pub des_seed: u64,
+    /// Dynamic batch growth; `None` (the default) routes every request as
+    /// its own segment, exactly as the static planner did.
+    pub dynamic_batch: Option<DynamicBatch>,
 }
 
 impl Default for FleetConfig {
@@ -167,6 +198,8 @@ impl Default for FleetConfig {
             recsys_precision: "int8".to_string(),
             max_queue: 1024,
             sla_budget_s: None,
+            des_seed: 0xFB1A_0DE5,
+            dynamic_batch: None,
         }
     }
 }

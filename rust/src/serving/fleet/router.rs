@@ -1,24 +1,36 @@
 //! The fleet router: dispatch a mixed request stream to replicas.
 //!
-//! Routing is a deterministic planning pass over the stream in arrival
-//! order. Each card serializes its compute segments; each card's PCIe link
-//! serializes its transfer segments ([`LinkOccupancy`] — two requests
-//! landing on one card contend for the same x4 link). A DLRM request first
-//! fans its SLS segments out to the shard cards (the stage costs the
-//! slowest one, Fig. 6 left) and then runs the dense partition on its
-//! replica's card; NLP and CV requests are single segments.
+//! Routing runs on the discrete-event core ([`crate::sim::des`]): every
+//! request arrival, segment completion and policy timer is an event on the
+//! seeded heap, popped in modeled-time order. Each card serializes its
+//! compute segments; each card's PCIe link serializes its transfer segments
+//! ([`LinkOccupancy`] — two requests landing on one card contend for the
+//! same x4 link). A DLRM request first fans its SLS segments out to the
+//! shard cards (the stage costs the slowest one, Fig. 6 left) and then runs
+//! the dense partition on its replica's card; NLP and CV requests are
+//! single segments.
 //!
 //! Admission control sheds a request when its primary card's bounded queue
 //! is full, or — with an SLA budget configured — when queue depth × modeled
 //! cost would blow the budget (the request could not finish in time anyway,
 //! so shedding it early is strictly better than serving it late).
 //!
-//! Because the planner's only state is modeled costs and arrival times, the
-//! resulting metrics are bit-deterministic across runs and across worker
-//! counts on the modeled clock; the worker pool only executes numerics.
+//! Because the simulator's only state is modeled costs, arrival times and
+//! the seeded heap, the resulting metrics are bit-deterministic across runs
+//! and across worker counts on the modeled clock; the worker pool only
+//! executes numerics.
+//!
+//! The event clock also unlocks *reactive* policies the old arrival-ordered
+//! planning pass could not express: with [`FleetConfig::dynamic_batch`]
+//! set, a queued NLP/CV request opens a growth window until its modeled
+//! start, and later same-shape requests under queue pressure merge into it
+//! at a marginal cost instead of queueing their full solo cost
+//! (queue-depth-triggered dynamic batch growth, §IV-C).
 
-use crate::serving::fleet::{Family, FleetConfig, FleetRequest};
+use crate::runtime::ModeledCost;
 use crate::serving::fleet::replica::ReplicaManager;
+use crate::serving::fleet::{DynamicBatch, Family, FleetConfig, FleetRequest};
+use crate::sim::des::{class, EventHeap, EventId};
 use crate::sim::transfer::LinkOccupancy;
 use crate::util::error::{bail, Result};
 use std::collections::VecDeque;
@@ -70,7 +82,7 @@ pub enum Decision {
     Cv { replica: usize },
 }
 
-/// An admitted request's routing outcome on the planner's clock.
+/// An admitted request's routing outcome on the simulator's clock.
 #[derive(Debug, Clone, Copy)]
 pub struct Routed {
     pub decision: Decision,
@@ -99,6 +111,60 @@ pub struct RoutePlan {
     pub busy_s: Vec<f64>,
 }
 
+/// Handle to a dynamic-batch growth window a routed request opened. The
+/// driver must schedule a [`class::TIMER`] event at `start_s` and call
+/// [`NodePlanner::close_batch`] when it fires — once the batch has started
+/// on the card, nothing can join it.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchTicket {
+    pub card: usize,
+    pub gen: u64,
+    pub start_s: f64,
+}
+
+/// The outcome of one simulation step for one request.
+pub enum RouteStep {
+    /// Admission control (or bucket coverage) shed the request.
+    Shed,
+    /// Routed as its own service segment. `opened` is the growth window to
+    /// arm a close timer for, when dynamic batching applies.
+    Routed { routed: Routed, opened: Option<BatchTicket> },
+    /// Merged into an open batch window: `members` are the indices of the
+    /// earlier requests in the batch, whose completion events must be
+    /// rescheduled to the (shared, later) `routed.finish_s`.
+    Merged { routed: Routed, members: Vec<usize> },
+}
+
+/// A committed service segment on a card's timeline.
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    start_s: f64,
+    finish_s: f64,
+}
+
+/// What an open growth window batches over: same family, same replica,
+/// same compiled shape (bucket; 0 for CV) — members must share one net.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct BatchKey {
+    family: Family,
+    replica: usize,
+    bucket: usize,
+}
+
+/// An open dynamic-batch growth window on one card: the head request has
+/// committed but not started, and same-key requests may merge until
+/// `start_s` (or until the member cap / link headroom runs out).
+struct OpenBatch {
+    gen: u64,
+    key: BatchKey,
+    start_s: f64,
+    /// The head request's solo compute cost — each member added on top
+    /// costs `marginal × solo`.
+    solo_compute_s: f64,
+    /// Request indices in the batch, head first.
+    members: Vec<usize>,
+}
+
 /// Mutable planner state over the node.
 struct NodeState {
     compute_busy: Vec<f64>,
@@ -119,8 +185,8 @@ impl NodeState {
         }
     }
 
-    /// Drop segments finished by `t` (arrivals are nondecreasing, so a
-    /// front-prune is exact).
+    /// Drop segments finished by `t` (the simulator clock is monotone, so
+    /// a front-prune is exact).
     fn prune(&mut self, t: f64) {
         for q in &mut self.outstanding {
             while q.front().is_some_and(|&f| f <= t) {
@@ -139,36 +205,47 @@ impl NodeState {
     }
 
     /// Commit one segment: transfer serializes on the card's link, compute
-    /// on the card. Returns the segment's finish time.
-    fn commit(&mut self, card: usize, ready_s: f64, cost: crate::runtime::ModeledCost) -> f64 {
+    /// on the card. Returns the segment's start and finish times.
+    fn commit(&mut self, card: usize, ready_s: f64, cost: ModeledCost) -> Seg {
         let delivered = self.link.occupy(card, ready_s, cost.transfer_s);
         let start = delivered.max(self.compute_busy[card]);
         let finish = start + cost.compute_s;
         self.compute_busy[card] = finish;
         self.outstanding[card].push_back(finish);
         self.busy_s[card] += cost.compute_s;
-        finish
+        Seg { start_s: start, finish_s: finish }
     }
 }
 
-/// One node's routing state, reusable a request at a time.
+/// One node's routing state, driven an event at a time.
 ///
-/// [`plan`] drives it over a whole stream; the cluster tier
-/// ([`crate::serving::cluster`]) instead holds one planner per node and
-/// feeds each request to whichever node its node-level policy picked, so
-/// the per-node serve logic exists exactly once.
+/// [`plan`] drives it over a whole stream on its own event heap; the
+/// cluster tier ([`crate::serving::cluster`]) instead holds one planner per
+/// node, feeds each request to whichever node its node-level policy picked,
+/// and relays completion/timer events from its own heap — so the per-node
+/// serve logic exists exactly once.
 pub struct NodePlanner {
     state: NodeState,
     rr: [usize; 3],
+    /// Open dynamic-batch growth window per card.
+    open: Vec<Option<OpenBatch>>,
+    /// Window generation counter — survives [`NodePlanner::reset`] so a
+    /// stale close timer can never close a post-reset window.
+    next_gen: u64,
 }
 
 impl NodePlanner {
     pub fn new(cards: usize) -> NodePlanner {
-        NodePlanner { state: NodeState::new(cards), rr: [0; 3] }
+        NodePlanner {
+            state: NodeState::new(cards),
+            rr: [0; 3],
+            open: (0..cards).map(|_| None).collect(),
+            next_gen: 0,
+        }
     }
 
-    /// Drop segments finished by `t` (callers must feed nondecreasing
-    /// times — arrivals, or NIC delivery times, which inherit the order).
+    /// Drop segments finished by `t` — the completion-event handler
+    /// (callers feed nondecreasing times; the event heap guarantees it).
     pub fn prune(&mut self, t: f64) {
         self.state.prune(t);
     }
@@ -189,105 +266,245 @@ impl NodePlanner {
     /// snapshot it first if the caller wants to attribute the lost work.
     pub fn reset(&mut self) {
         let cards = self.state.busy_s.len();
+        let gen = self.next_gen;
         *self = NodePlanner::new(cards);
+        self.next_gen = gen;
     }
 
-    /// Route one request that becomes available to this node at `t`
-    /// (its arrival, or the time its bytes cleared the node's NIC).
-    /// Returns `None` when admission control sheds it. Identical to one
-    /// step of [`plan`].
-    pub fn route_one(
+    /// Close a growth window when its batch starts (the [`BatchTicket`]
+    /// timer firing). A stale generation is a no-op: the window was
+    /// already superseded.
+    pub fn close_batch(&mut self, card: usize, gen: u64) {
+        if self.open[card].as_ref().is_some_and(|b| b.gen == gen) {
+            self.open[card] = None;
+        }
+    }
+
+    /// Simulate one request that becomes available to this node at `t`
+    /// (its arrival, or the time its bytes cleared the node's NIC). `idx`
+    /// is the request's index in the driver's stream, used to label batch
+    /// members. One arrival-event step of [`plan`].
+    pub fn step(
         &mut self,
         replicas: &ReplicaManager,
         req: &FleetRequest,
+        idx: usize,
         t: f64,
         policy: RoutePolicy,
         cfg: &FleetConfig,
-    ) -> Option<Routed> {
-        let NodePlanner { state, rr } = self;
-        state.prune(t);
+    ) -> RouteStep {
+        self.state.prune(t);
         let family = req.family();
         match req {
             FleetRequest::Recsys { .. } => {
-                // candidate-independent SLS-stage estimate (slowest shard
-                // card, each priced with its current compute/link backlog)
-                // — hoisted so the per-candidate score is one lookup, not
-                // a shard scan per replica
-                let sls_done_est = replicas
-                    .sls
-                    .iter()
-                    .map(|s| state.ready(s.card, t) + s.cost.total_s())
-                    .fold(t, f64::max);
-                let ri = choose(policy, &mut rr[family.index()], replicas.recsys.len(), |i| {
-                    let r = &replicas.recsys[i];
-                    (r.card, state.ready(r.card, sls_done_est) + r.cost.total_s())
-                }, state);
+                let ri = {
+                    let NodePlanner { state, rr, .. } = self;
+                    // candidate-independent SLS-stage estimate (slowest
+                    // shard card, each priced with its current compute/link
+                    // backlog) — hoisted so the per-candidate score is one
+                    // lookup, not a shard scan per replica
+                    let sls_done_est = replicas
+                        .sls
+                        .iter()
+                        .map(|s| state.ready(s.card, t) + s.cost.total_s())
+                        .fold(t, f64::max);
+                    choose(policy, &mut rr[family.index()], replicas.recsys.len(), |i| {
+                        let r = &replicas.recsys[i];
+                        (r.card, state.ready(r.card, sls_done_est) + r.cost.total_s())
+                    }, state)
+                };
                 let r = &replicas.recsys[ri];
-                admit(state, r.card, replicas.recsys_request_cost_s(ri), cfg).then(|| {
-                    let mut sls_done = t;
-                    for shard in &replicas.sls {
-                        let fin = state.commit(shard.card, t, shard.cost);
-                        sls_done = sls_done.max(fin);
-                    }
-                    let finish = state.commit(r.card, sls_done, r.cost);
-                    Routed {
+                if !admit(&self.state, r.card, replicas.recsys_request_cost_s(ri), cfg) {
+                    return RouteStep::Shed;
+                }
+                // recsys never joins a growth window (its SLS fan-out is
+                // multi-card); committing plainly also closes any window on
+                // the cards it touches, keeping their timelines exact
+                let mut sls_done = t;
+                for shard in &replicas.sls {
+                    let seg = self.commit_plain(shard.card, t, shard.cost);
+                    sls_done = sls_done.max(seg.finish_s);
+                }
+                let seg = self.commit_plain(r.card, sls_done, r.cost);
+                RouteStep::Routed {
+                    routed: Routed {
                         decision: Decision::Recsys { replica: ri },
                         card: r.card,
-                        latency_s: finish - t,
-                        finish_s: finish,
-                    }
-                })
-            }
-            FleetRequest::Nlp { req, .. } => {
-                match replicas.nlp_bucket_for(req.tokens.len()) {
-                    // longer than every compiled bucket: shed at admission
-                    None => None,
-                    Some(bucket) => {
-                        // a replica without a net for this bucket projects
-                        // at infinity (never chosen while an alternative
-                        // exists) and sheds rather than being priced with
-                        // a placeholder
-                        let ri =
-                            choose(policy, &mut rr[family.index()], replicas.nlp.len(), |i| {
-                                let r = &replicas.nlp[i];
-                                let c = r
-                                    .cost(bucket)
-                                    .map(|c| c.total_s())
-                                    .unwrap_or(f64::INFINITY);
-                                (r.card, state.ready(r.card, t) + c)
-                            }, state);
-                        let r = &replicas.nlp[ri];
-                        r.cost(bucket).and_then(|cost| {
-                            admit(state, r.card, cost.total_s(), cfg).then(|| {
-                                let finish = state.commit(r.card, t, cost);
-                                Routed {
-                                    decision: Decision::Nlp { replica: ri, bucket },
-                                    card: r.card,
-                                    latency_s: finish - t,
-                                    finish_s: finish,
-                                }
-                            })
-                        })
-                    }
+                        latency_s: seg.finish_s - t,
+                        finish_s: seg.finish_s,
+                    },
+                    opened: None,
                 }
             }
+            FleetRequest::Nlp { req, .. } => {
+                // longer than every compiled bucket: shed at admission
+                let Some(bucket) = replicas.nlp_bucket_for(req.tokens.len()) else {
+                    return RouteStep::Shed;
+                };
+                let ri = {
+                    let NodePlanner { state, rr, .. } = self;
+                    // a replica without a net for this bucket projects at
+                    // infinity (never chosen while an alternative exists)
+                    // and sheds rather than being priced with a placeholder
+                    choose(policy, &mut rr[family.index()], replicas.nlp.len(), |i| {
+                        let r = &replicas.nlp[i];
+                        let c = r.cost(bucket).map(|c| c.total_s()).unwrap_or(f64::INFINITY);
+                        (r.card, state.ready(r.card, t) + c)
+                    }, state)
+                };
+                let r = &replicas.nlp[ri];
+                let Some(cost) = r.cost(bucket) else {
+                    return RouteStep::Shed;
+                };
+                if !admit(&self.state, r.card, cost.total_s(), cfg) {
+                    return RouteStep::Shed;
+                }
+                self.finish_single(
+                    idx,
+                    t,
+                    r.card,
+                    cost,
+                    Decision::Nlp { replica: ri, bucket },
+                    BatchKey { family, replica: ri, bucket },
+                    cfg,
+                )
+            }
             FleetRequest::Cv { .. } => {
-                let ri = choose(policy, &mut rr[family.index()], replicas.cv.len(), |i| {
-                    let r = &replicas.cv[i];
-                    (r.card, state.ready(r.card, t) + r.cost.total_s())
-                }, state);
+                let ri = {
+                    let NodePlanner { state, rr, .. } = self;
+                    choose(policy, &mut rr[family.index()], replicas.cv.len(), |i| {
+                        let r = &replicas.cv[i];
+                        (r.card, state.ready(r.card, t) + r.cost.total_s())
+                    }, state)
+                };
                 let r = &replicas.cv[ri];
-                admit(state, r.card, r.cost.total_s(), cfg).then(|| {
-                    let finish = state.commit(r.card, t, r.cost);
-                    Routed {
-                        decision: Decision::Cv { replica: ri },
-                        card: r.card,
-                        latency_s: finish - t,
-                        finish_s: finish,
-                    }
-                })
+                if !admit(&self.state, r.card, r.cost.total_s(), cfg) {
+                    return RouteStep::Shed;
+                }
+                self.finish_single(
+                    idx,
+                    t,
+                    r.card,
+                    r.cost,
+                    Decision::Cv { replica: ri },
+                    BatchKey { family, replica: ri, bucket: 0 },
+                    cfg,
+                )
             }
         }
+    }
+
+    /// Route a single-segment (NLP/CV) request: merge into an open batch
+    /// window when dynamic batching allows, otherwise commit a fresh
+    /// segment (possibly opening a window of its own).
+    fn finish_single(
+        &mut self,
+        idx: usize,
+        t: f64,
+        card: usize,
+        cost: ModeledCost,
+        decision: Decision,
+        key: BatchKey,
+        cfg: &FleetConfig,
+    ) -> RouteStep {
+        if let Some(dynb) = cfg.dynamic_batch {
+            if let Some((routed, members)) = self.try_merge(idx, t, card, key, cost, decision, dynb)
+            {
+                return RouteStep::Merged { routed, members };
+            }
+        }
+        let (seg, opened) = self.commit_open(idx, t, card, t, cost, key, cfg);
+        RouteStep::Routed {
+            routed: Routed { decision, card, latency_s: seg.finish_s - t, finish_s: seg.finish_s },
+            opened,
+        }
+    }
+
+    /// Commit a segment and close any window on the card (its timeline
+    /// just changed). Used for recsys stages, which never batch.
+    fn commit_plain(&mut self, card: usize, ready_s: f64, cost: ModeledCost) -> Seg {
+        self.open[card] = None;
+        self.state.commit(card, ready_s, cost)
+    }
+
+    /// Commit a segment; when dynamic batching is on and the segment has
+    /// to queue (`start > now`), open a growth window until its start.
+    fn commit_open(
+        &mut self,
+        idx: usize,
+        now_s: f64,
+        card: usize,
+        ready_s: f64,
+        cost: ModeledCost,
+        key: BatchKey,
+        cfg: &FleetConfig,
+    ) -> (Seg, Option<BatchTicket>) {
+        self.open[card] = None;
+        let seg = self.state.commit(card, ready_s, cost);
+        let opened = match cfg.dynamic_batch {
+            Some(_) if seg.start_s > now_s => {
+                let gen = self.next_gen;
+                self.next_gen += 1;
+                self.open[card] = Some(OpenBatch {
+                    gen,
+                    key,
+                    start_s: seg.start_s,
+                    solo_compute_s: cost.compute_s,
+                    members: vec![idx],
+                });
+                Some(BatchTicket { card, gen, start_s: seg.start_s })
+            }
+            _ => None,
+        };
+        (seg, opened)
+    }
+
+    /// Try to merge request `idx` into the card's open growth window.
+    /// Requires queue pressure (`depth >= depth_hi`), a matching batch key,
+    /// member headroom, and enough link headroom to deliver the joiner's
+    /// bytes before the batch starts. On success the whole batch finishes
+    /// together at the new (marginally later) finish, and the earlier
+    /// members' outstanding segments are retro-extended to it.
+    fn try_merge(
+        &mut self,
+        idx: usize,
+        t: f64,
+        card: usize,
+        key: BatchKey,
+        cost: ModeledCost,
+        decision: Decision,
+        dynb: DynamicBatch,
+    ) -> Option<(Routed, Vec<usize>)> {
+        let (start_s, solo, n_old) = match &self.open[card] {
+            Some(b) if b.key == key && b.members.len() < dynb.max_batch && t < b.start_s => {
+                (b.start_s, b.solo_compute_s, b.members.len())
+            }
+            _ => return None,
+        };
+        // the reactive trigger: only grow when the card is backed up
+        if self.state.depth(card) < dynb.depth_hi {
+            return None;
+        }
+        // the joiner's activations must clear the PCIe link before the
+        // batch starts, or growing it would delay the whole batch
+        if self.state.link.busy_until(card).max(t) + cost.transfer_s > start_s {
+            return None;
+        }
+        let _delivered = self.state.link.occupy(card, t, cost.transfer_s);
+        let new_finish = start_s + solo * (1.0 + dynb.marginal * n_old as f64);
+        self.state.compute_busy[card] = new_finish;
+        self.state.busy_s[card] += dynb.marginal * solo;
+        // retro-extend the existing members' segments to the shared finish
+        // (they are the card's newest entries; the queue stays nondecreasing
+        // because new_finish exceeds the previous batch finish)
+        for v in self.state.outstanding[card].iter_mut().rev().take(n_old) {
+            *v = new_finish;
+        }
+        self.state.outstanding[card].push_back(new_finish);
+        let b = self.open[card].as_mut().expect("window checked above");
+        let members = b.members.clone();
+        b.members.push(idx);
+        Some((Routed { decision, card, latency_s: new_finish - t, finish_s: new_finish }, members))
     }
 }
 
@@ -302,8 +519,20 @@ pub fn validate(replicas: &ReplicaManager, cfg: &FleetConfig) -> Result<()> {
     Ok(())
 }
 
-/// Plan the routing of `reqs` (nondecreasing arrival order) over the
-/// replica set.
+/// Node-tier event payloads.
+enum Ev {
+    /// Request `i` arrives at the node.
+    Arrive(usize),
+    /// Request `i`'s service segment completes.
+    Complete(usize),
+    /// A dynamic-batch growth window's batch starts.
+    CloseBatch { card: usize, gen: u64 },
+}
+
+/// Simulate the routing of `reqs` over the replica set on a seeded event
+/// heap ([`FleetConfig::des_seed`]): arrivals, completions and batch-window
+/// timers pop in modeled-time order, with seeded tie-breaks at equal
+/// instants — bit-deterministic for a given seed and trace.
 pub fn plan(
     replicas: &ReplicaManager,
     reqs: &[FleetRequest],
@@ -312,29 +541,85 @@ pub fn plan(
 ) -> Result<RoutePlan> {
     validate(replicas, cfg)?;
     let mut planner = NodePlanner::new(replicas.cards);
-    let mut planned = Vec::with_capacity(reqs.len());
-    let mut last_arrival = f64::NEG_INFINITY;
-    let mut max_finish: Option<f64> = None;
-    for req in reqs {
+    let mut heap: EventHeap<Ev> = EventHeap::new(cfg.des_seed);
+    let mut planned: Vec<PlannedRequest> = Vec::with_capacity(reqs.len());
+    for (i, req) in reqs.iter().enumerate() {
         let t = req.arrival_s();
-        if t < last_arrival {
-            bail!(
-                "fleet requests must arrive in nondecreasing order \
-                 ({t} after {last_arrival})"
-            );
+        if !t.is_finite() {
+            bail!("fleet request {i} has a non-finite arrival time {t}");
         }
-        last_arrival = t;
-        let route = planner.route_one(replicas, req, t, policy, cfg);
-        if let Some(r) = &route {
-            max_finish = Some(max_finish.map_or(r.finish_s, |m: f64| m.max(r.finish_s)));
-        }
-        planned.push(PlannedRequest { family: req.family(), arrival_s: t, items: req.items(), route });
+        planned.push(PlannedRequest {
+            family: req.family(),
+            arrival_s: t,
+            items: req.items(),
+            route: None,
+        });
+        heap.push(t, Ev::Arrive(i));
     }
-    let span_s = match (reqs.first(), max_finish) {
-        (Some(first), Some(finish)) => (finish - first.arrival_s()).max(0.0),
-        _ => 0.0,
+    let mut complete_ev: Vec<Option<EventId>> = vec![None; reqs.len()];
+    while let Some(e) = heap.pop() {
+        let t = e.at_s;
+        match e.kind {
+            Ev::Arrive(i) => match planner.step(replicas, &reqs[i], i, t, policy, cfg) {
+                RouteStep::Shed => {}
+                RouteStep::Routed { routed, opened } => {
+                    complete_ev[i] = Some(heap.push_class(
+                        routed.finish_s,
+                        class::COMPLETION,
+                        Ev::Complete(i),
+                    ));
+                    planned[i].route = Some(routed);
+                    if let Some(tk) = opened {
+                        heap.push_class(
+                            tk.start_s,
+                            class::TIMER,
+                            Ev::CloseBatch { card: tk.card, gen: tk.gen },
+                        );
+                    }
+                }
+                RouteStep::Merged { routed, members } => {
+                    // the batch grew: every member finishes together at the
+                    // new (later) finish — supersede their completions
+                    for m in members {
+                        if let Some(id) = complete_ev[m].take() {
+                            heap.cancel(id);
+                        }
+                        complete_ev[m] = Some(heap.push_class(
+                            routed.finish_s,
+                            class::COMPLETION,
+                            Ev::Complete(m),
+                        ));
+                        if let Some(r) = planned[m].route.as_mut() {
+                            r.finish_s = routed.finish_s;
+                            r.latency_s = routed.finish_s - planned[m].arrival_s;
+                        }
+                    }
+                    complete_ev[i] = Some(heap.push_class(
+                        routed.finish_s,
+                        class::COMPLETION,
+                        Ev::Complete(i),
+                    ));
+                    planned[i].route = Some(routed);
+                }
+            },
+            Ev::Complete(i) => {
+                complete_ev[i] = None;
+                planner.prune(t);
+            }
+            Ev::CloseBatch { card, gen } => planner.close_batch(card, gen),
+        }
+    }
+    let first_arrival = planned.iter().map(|p| p.arrival_s).fold(f64::INFINITY, f64::min);
+    let max_finish = planned
+        .iter()
+        .filter_map(|p| p.route.as_ref().map(|r| r.finish_s))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span_s = if first_arrival.is_finite() && max_finish.is_finite() {
+        (max_finish - first_arrival).max(0.0)
+    } else {
+        0.0
     };
-    Ok(RoutePlan { planned, span_s, busy_s: planner.state.busy_s.clone() })
+    Ok(RoutePlan { planned, span_s, busy_s: planner.busy_s().to_vec() })
 }
 
 /// Pick a replica index among `n` candidates. `score(i)` returns the
@@ -419,11 +704,11 @@ mod tests {
     fn node_state_serializes_compute_and_prunes() {
         let mut s = NodeState::new(2);
         let c = ModeledCost { compute_s: 1.0, transfer_s: 0.5, dram_occupancy: 1.0 };
-        let f1 = s.commit(0, 0.0, c);
+        let f1 = s.commit(0, 0.0, c).finish_s;
         assert!((f1 - 1.5).abs() < 1e-12);
         // second segment on the same card: transfer waits for the first
         // transfer (0.5..1.0), compute for the first compute (ends 1.5)
-        let f2 = s.commit(0, 0.0, c);
+        let f2 = s.commit(0, 0.0, c).finish_s;
         assert!((f2 - 2.5).abs() < 1e-12, "{f2}");
         assert_eq!(s.depth(0), 2);
         // the other card is untouched
@@ -450,5 +735,36 @@ mod tests {
         s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0, dram_occupancy: 1.0 });
         // bounded queue full
         assert!(!admit(&s, 0, 1e-6, &cfg));
+    }
+
+    #[test]
+    fn dynamic_batch_window_merges_and_retro_extends() {
+        let dynb = DynamicBatch { depth_hi: 1, max_batch: 4, marginal: 0.5 };
+        let cfg = FleetConfig { dynamic_batch: Some(dynb), ..FleetConfig::default() };
+        let key = BatchKey { family: Family::Nlp, replica: 0, bucket: 0 };
+        let cost = ModeledCost { compute_s: 1.0, transfer_s: 0.0, dram_occupancy: 1.0 };
+        let decision = Decision::Nlp { replica: 0, bucket: 0 };
+        let mut p = NodePlanner::new(1);
+        // first request starts immediately: nothing to grow, no window
+        let (seg0, opened0) = p.commit_open(0, 0.0, 0, 0.0, cost, key, &cfg);
+        assert!((seg0.finish_s - 1.0).abs() < 1e-12);
+        assert!(opened0.is_none());
+        // second queues behind it: a growth window opens until its start
+        let (seg1, opened1) = p.commit_open(1, 0.0, 0, 0.0, cost, key, &cfg);
+        assert!((seg1.start_s - 1.0).abs() < 1e-12);
+        let ticket = opened1.expect("queued request must open a window");
+        assert_eq!(ticket.card, 0);
+        assert!((ticket.start_s - 1.0).abs() < 1e-12);
+        // a third request at t=0.5 merges: batch of 2 costs 1.5x solo, and
+        // both members finish together at 1.0 + 1.5 = 2.5
+        let (routed, members) = p
+            .try_merge(2, 0.5, 0, key, cost, decision, dynb)
+            .expect("merge under queue pressure");
+        assert_eq!(members, vec![1]);
+        assert!((routed.finish_s - 2.5).abs() < 1e-12, "{}", routed.finish_s);
+        assert!((routed.latency_s - 2.0).abs() < 1e-12);
+        // after the window closes (batch started), nothing can join
+        p.close_batch(0, ticket.gen);
+        assert!(p.try_merge(3, 0.6, 0, key, cost, decision, dynb).is_none());
     }
 }

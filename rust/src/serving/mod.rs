@@ -16,6 +16,8 @@
 pub mod batcher;
 pub mod cluster;
 pub mod fleet;
+pub mod policy;
+pub mod simulation;
 
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
@@ -55,6 +57,75 @@ impl ServerMetrics {
 
     pub fn items_per_s(&self) -> f64 {
         self.items as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Unified serving options for the three family servers ([`RecsysServer`],
+/// [`NlpServer`], [`CvServer`]): one struct instead of three divergent
+/// positional signatures. Build with struct-update syntax over
+/// [`ServeOptions::default`]:
+///
+/// ```ignore
+/// let opts = ServeOptions { workers: 4, ..ServeOptions::default() };
+/// let metrics = server.serve_with(reqs, &opts)?;
+/// ```
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Closed-loop units in flight (whole requests, or formed batches for
+    /// NLP). `1` is the single-thread baseline.
+    pub workers: usize,
+    /// Recsys only: whether a single-worker run uses the Fig. 6
+    /// cross-request pipelined path (`true`, the serving default) or the
+    /// strictly sequential baseline the thread-scaling benches compare
+    /// against (`false`). Ignored when `workers > 1`.
+    pub pipeline: bool,
+    /// NLP dynamic-batcher cap (validated against the compiled batch
+    /// variants). Ignored by the recsys/cv servers, whose batch size is
+    /// fixed at construction / per call.
+    pub max_batch: usize,
+    /// NLP batcher mode: length-aware bucketing (`true`) vs naive FIFO.
+    pub length_aware: bool,
+    /// When `Some`, serving errors unless the engine's clock matches —
+    /// for call sites that only mean anything on one clock (modeled-time
+    /// benches, wall-time profiling).
+    pub clock: Option<Clock>,
+    /// When `Some`, serving errors unless the engine's backend matches.
+    pub backend: Option<String>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            workers: 1,
+            pipeline: true,
+            max_batch: 4,
+            length_aware: true,
+            clock: None,
+            backend: None,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Validate the clock/backend expectations against a server.
+    fn check(&self, clock: Clock, backend: &str) -> Result<()> {
+        if let Some(want) = self.clock {
+            if want != clock {
+                return Err(err!(
+                    "ServeOptions requires the {} clock but the engine is on the {} clock",
+                    want.name(),
+                    clock.name()
+                ));
+            }
+        }
+        if let Some(want) = &self.backend {
+            if want != backend {
+                return Err(err!(
+                    "ServeOptions requires backend '{want}' but the engine runs '{backend}'"
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -237,6 +308,8 @@ pub struct RecsysServer {
     sls_pool: Option<ThreadPool>,
     /// Which clock metrics are on; `modeled` is `Some` iff [`Clock::Modeled`].
     clock: Clock,
+    /// Engine backend name, for [`ServeOptions::backend`] validation.
+    backend: String,
     modeled: Option<RecsysModeled>,
     pub batch: usize,
     pub num_tables: usize,
@@ -304,6 +377,7 @@ impl RecsysServer {
         let sls_pool = (threads > 1 && shards.len() > 1)
             .then(|| ThreadPool::new(threads.min(shards.len())));
         let clock = engine.clock();
+        let backend = engine.backend_name().to_string();
         let modeled = match clock {
             Clock::Wall => None,
             Clock::Modeled => {
@@ -326,12 +400,27 @@ impl RecsysServer {
                 Some(RecsysModeled { sls_s, dense_s })
             }
         };
-        Ok(RecsysServer { shards, dense, sls_pool, clock, modeled, batch, num_tables, embed_dim })
+        Ok(RecsysServer {
+            shards,
+            dense,
+            sls_pool,
+            clock,
+            backend,
+            modeled,
+            batch,
+            num_tables,
+            embed_dim,
+        })
     }
 
     /// The clock this server's metrics are on.
     pub fn clock(&self) -> Clock {
         self.clock
+    }
+
+    /// The engine backend this server executes on.
+    pub fn backend_name(&self) -> &str {
+        &self.backend
     }
 
     /// Modeled per-request latency on the simulated node (SLS stage = max
@@ -426,12 +515,46 @@ impl RecsysServer {
         self.run_dense(&req.dense, &sparse)
     }
 
+    /// Unified entry point (see [`ServeOptions`]): `workers > 1` serves
+    /// with that many whole requests in flight; `workers == 1` uses the
+    /// Fig. 6 cross-request pipelined path unless `opts.pipeline` is off,
+    /// in which case it is the strictly sequential baseline.
+    pub fn serve_with(
+        self: &Arc<Self>,
+        reqs: Vec<RecsysRequest>,
+        opts: &ServeOptions,
+    ) -> Result<ServerMetrics> {
+        opts.check(self.clock, &self.backend)?;
+        if opts.workers > 1 || !opts.pipeline {
+            self.serve_concurrent(reqs, opts.workers.max(1))
+        } else {
+            self.serve_pipelined(reqs)
+        }
+    }
+
+    /// Deprecated positional forerunner of [`RecsysServer::serve_with`].
+    #[deprecated(note = "use serve_with(reqs, &ServeOptions::default())")]
+    pub fn serve(self: &Arc<Self>, reqs: Vec<RecsysRequest>) -> Result<ServerMetrics> {
+        self.serve_pipelined(reqs)
+    }
+
+    /// Deprecated positional forerunner of [`RecsysServer::serve_with`]
+    /// (`ServeOptions { workers, pipeline: false, .. }`).
+    #[deprecated(note = "use serve_with(reqs, &ServeOptions { workers, pipeline: false, .. })")]
+    pub fn serve_workers(
+        self: &Arc<Self>,
+        reqs: Vec<RecsysRequest>,
+        workers: usize,
+    ) -> Result<ServerMetrics> {
+        self.serve_concurrent(reqs, workers)
+    }
+
     /// Closed-loop serving of `reqs` with cross-request pipelining: request
     /// k's SLS overlaps request k-1's dense (Fig. 6 right). Returns metrics.
     /// On the modeled clock, the histogram records the modeled per-request
     /// latency and the wall time is the steady-state pipeline span (fill +
     /// bottleneck stage per subsequent request).
-    pub fn serve(self: &Arc<Self>, reqs: Vec<RecsysRequest>) -> Result<ServerMetrics> {
+    fn serve_pipelined(self: &Arc<Self>, reqs: Vec<RecsysRequest>) -> Result<ServerMetrics> {
         let (tx, rx) = mpsc::sync_channel::<(usize, Instant, HostTensor, HostTensor)>(2);
         let me = Arc::clone(self);
         let producer = std::thread::spawn(move || -> Result<()> {
@@ -480,7 +603,7 @@ impl RecsysServer {
     /// histograms are merged at the end. `workers == 1` is the strictly
     /// sequential single-thread baseline the fig7 thread-scaling points
     /// compare against.
-    pub fn serve_workers(
+    fn serve_concurrent(
         self: &Arc<Self>,
         reqs: Vec<RecsysRequest>,
         workers: usize,
@@ -529,6 +652,8 @@ pub struct NlpServer {
     /// (seq, batch) -> prepared model
     nets: Vec<(usize, usize, Arc<PreparedModel>)>,
     clock: Clock,
+    /// Engine backend name, for [`ServeOptions::backend`] validation.
+    backend: String,
     pub buckets: Vec<usize>,
     pub d_model: usize,
 }
@@ -565,12 +690,18 @@ impl NlpServer {
                 }
             }
         }
-        Ok(NlpServer { nets, clock, buckets, d_model })
+        let backend = engine.backend_name().to_string();
+        Ok(NlpServer { nets, clock, backend, buckets, d_model })
     }
 
     /// The clock this server's metrics are on.
     pub fn clock(&self) -> Clock {
         self.clock
+    }
+
+    /// The engine backend this server executes on.
+    pub fn backend_name(&self) -> &str {
+        &self.backend
     }
 
     /// Modeled seconds for one formed batch (the selected bucket×batch
@@ -624,11 +755,35 @@ impl NlpServer {
         Ok((0..n).map(|i| pooled[i * self.d_model..(i + 1) * self.d_model].to_vec()).collect())
     }
 
+    /// Unified entry point (see [`ServeOptions`]): serve a request stream
+    /// through the batcher per `opts` (`max_batch`, `length_aware`,
+    /// `workers`). Returns metrics plus the padded-vs-real token waste.
+    pub fn serve_with(
+        self: &Arc<Self>,
+        reqs: Vec<crate::workloads::NlpRequest>,
+        opts: &ServeOptions,
+    ) -> Result<(ServerMetrics, f64)> {
+        opts.check(self.clock, &self.backend)?;
+        self.serve_batched(reqs, opts.max_batch, opts.length_aware, opts.workers)
+    }
+
+    /// Deprecated positional forerunner of [`NlpServer::serve_with`].
+    #[deprecated(note = "use serve_with(reqs, &ServeOptions { max_batch, length_aware, workers, .. })")]
+    pub fn serve(
+        self: &Arc<Self>,
+        reqs: Vec<crate::workloads::NlpRequest>,
+        max_batch: usize,
+        length_aware: bool,
+        workers: usize,
+    ) -> Result<(ServerMetrics, f64)> {
+        self.serve_batched(reqs, max_batch, length_aware, workers)
+    }
+
     /// Serve a request stream through the batcher with `workers` batches in
     /// flight. Returns metrics plus the padded-vs-real token accounting
     /// (the batching-efficiency signal). `max_batch` is validated against
     /// the compiled batch variants before any batch forms.
-    pub fn serve(
+    fn serve_batched(
         self: &Arc<Self>,
         reqs: Vec<crate::workloads::NlpRequest>,
         max_batch: usize,
@@ -741,6 +896,8 @@ impl NlpServer {
 pub struct CvServer {
     nets: Vec<(usize, Arc<PreparedModel>)>,
     clock: Clock,
+    /// Engine backend name, for [`ServeOptions::backend`] validation.
+    backend: String,
     pub image: usize,
     pub classes: usize,
 }
@@ -772,6 +929,7 @@ impl CvServer {
         Ok(CvServer {
             nets,
             clock,
+            backend: engine.backend_name().to_string(),
             image: engine.manifest().config_usize("cv", "image")?,
             classes: engine.manifest().config_usize("cv", "classes")?,
         })
@@ -780,6 +938,11 @@ impl CvServer {
     /// The clock this server's metrics are on.
     pub fn clock(&self) -> Clock {
         self.clock
+    }
+
+    /// The engine backend this server executes on.
+    pub fn backend_name(&self) -> &str {
+        &self.backend
     }
 
     /// Modeled seconds per request at a batch size; 0.0 on wall clocks.
@@ -811,9 +974,34 @@ impl CvServer {
         Ok((logits, emb))
     }
 
+    /// Unified entry point (see [`ServeOptions`]): closed-loop throughput
+    /// for `n` requests at a batch size, with `opts.workers` in flight.
+    pub fn serve_with(
+        self: &Arc<Self>,
+        n: usize,
+        batch: usize,
+        gen: &mut crate::workloads::CvGen,
+        opts: &ServeOptions,
+    ) -> Result<ServerMetrics> {
+        opts.check(self.clock, &self.backend)?;
+        self.serve_closed_loop(n, batch, gen, opts.workers)
+    }
+
+    /// Deprecated positional forerunner of [`CvServer::serve_with`].
+    #[deprecated(note = "use serve_with(n, batch, gen, &ServeOptions { workers, .. })")]
+    pub fn serve(
+        self: &Arc<Self>,
+        n: usize,
+        batch: usize,
+        gen: &mut crate::workloads::CvGen,
+        workers: usize,
+    ) -> Result<ServerMetrics> {
+        self.serve_closed_loop(n, batch, gen, workers)
+    }
+
     /// Closed-loop throughput at a batch size with `workers` requests in
     /// flight (`workers == 1` → sequential baseline).
-    pub fn serve(
+    fn serve_closed_loop(
         self: &Arc<Self>,
         n: usize,
         batch: usize,

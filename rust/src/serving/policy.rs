@@ -1,0 +1,87 @@
+//! Policy registry: `*_by_name` lookups for the routing and placement
+//! policies, mirroring [`crate::runtime::backend_by_name`].
+//!
+//! The CLI (`fbia fleet`, `fbia cluster`), the config JSON parser and the
+//! [`Simulation`](crate::serving::simulation::Simulation) builder all
+//! resolve policy names through this module, so an unknown name fails the
+//! same way everywhere: an error listing the valid canonical names. The
+//! underlying `parse` methods keep accepting their short aliases (`rr`,
+//! `la`, `jsq`, ...) — the registry adds the single source of truth for
+//! what exists, not a new grammar.
+
+use crate::serving::cluster::NodePolicy;
+use crate::serving::fleet::{Placement, RoutePolicy};
+use crate::util::error::{err, Result};
+
+/// Canonical card-router (within-node) policy names.
+pub const CARD_POLICY_NAMES: &[&str] =
+    &["round-robin", "least-outstanding", "latency-aware"];
+
+/// Canonical node-router (cross-node) policy names.
+pub const NODE_POLICY_NAMES: &[&str] =
+    &["round-robin", "join-shortest-queue", "weighted-by-modeled-capacity"];
+
+/// Canonical replica-placement policy names.
+pub const PLACEMENT_NAMES: &[&str] = &["pack", "spread", "sls-affine"];
+
+/// Resolve a card-routing policy by name (aliases `rr`/`lo`/`la` accepted).
+pub fn card_policy_by_name(name: &str) -> Result<RoutePolicy> {
+    RoutePolicy::parse(name).map_err(|_| {
+        err!(
+            "unknown card policy '{name}' (valid policies: {})",
+            CARD_POLICY_NAMES.join(", ")
+        )
+    })
+}
+
+/// Resolve a node-routing policy by name (aliases `rr`/`jsq`/`weighted`/`wc`
+/// accepted).
+pub fn node_policy_by_name(name: &str) -> Result<NodePolicy> {
+    NodePolicy::parse(name).map_err(|_| {
+        err!(
+            "unknown node policy '{name}' (valid policies: {})",
+            NODE_POLICY_NAMES.join(", ")
+        )
+    })
+}
+
+/// Resolve a replica placement by name (alias `affine` accepted).
+pub fn placement_by_name(name: &str) -> Result<Placement> {
+    Placement::parse(name).map_err(|_| {
+        err!(
+            "unknown placement '{name}' (valid placements: {})",
+            PLACEMENT_NAMES.join(", ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_canonical_names_and_aliases() {
+        for name in CARD_POLICY_NAMES {
+            assert_eq!(card_policy_by_name(name).unwrap().name(), *name);
+        }
+        for name in NODE_POLICY_NAMES {
+            assert_eq!(node_policy_by_name(name).unwrap().name(), *name);
+        }
+        for name in PLACEMENT_NAMES {
+            assert_eq!(placement_by_name(name).unwrap().name(), *name);
+        }
+        assert_eq!(card_policy_by_name("la").unwrap(), RoutePolicy::LatencyAware);
+        assert_eq!(node_policy_by_name("jsq").unwrap(), NodePolicy::JoinShortestQueue);
+        assert_eq!(placement_by_name("affine").unwrap(), Placement::SlsAffine);
+    }
+
+    #[test]
+    fn unknown_names_list_the_valid_set() {
+        let e = card_policy_by_name("bogus").unwrap_err().to_string();
+        assert!(e.contains("bogus") && e.contains("latency-aware"), "{e}");
+        let e = node_policy_by_name("bogus").unwrap_err().to_string();
+        assert!(e.contains("bogus") && e.contains("join-shortest-queue"), "{e}");
+        let e = placement_by_name("bogus").unwrap_err().to_string();
+        assert!(e.contains("bogus") && e.contains("sls-affine"), "{e}");
+    }
+}

@@ -1,0 +1,230 @@
+//! The unified `Simulation` API: one builder over the discrete-event
+//! simulation core ([`crate::sim::des`]) for both serving tiers.
+//!
+//! `fbia fleet` (single node, card-level routing) and `fbia cluster`
+//! (multi-node, NIC-limited routing plus drain/fail scenarios) used to
+//! drive their planners through different entry points with different
+//! shapes. Both tiers now run on the same seeded event heap, and this
+//! module gives them the same surface: pick a tier, set policies, hand
+//! over a trace, `run()`, read one [`SimReport`].
+//!
+//! ```ignore
+//! let report = Simulation::fleet(fleet)
+//!     .card_policy(RoutePolicy::LatencyAware)
+//!     .trace(reqs)
+//!     .run()?;
+//! assert!(report.conserved());
+//! ```
+//!
+//! `run()` is a pure plan on the modeled clock — deterministic for a
+//! given `FleetConfig::des_seed`, no numerics executed. Chain
+//! `.execute(workers)` to also run every admitted request's real kernels
+//! on the engine backend (the metrics stay modeled-clock; execution only
+//! validates numerics and exercises the runtime).
+//!
+//! Event handlers (routing, link/NIC occupancy, SLA shedding, scenario
+//! drain/fail, dynamic batch growth) are registered by the tier routers
+//! on the shared heap — see `serving::fleet::router` and
+//! `serving::cluster::router` for the extension points.
+
+use crate::serving::cluster::{Cluster, ClusterMetrics, NodePolicy, Scenario};
+use crate::serving::fleet::{Fleet, FleetMetrics, FleetRequest, RoutePolicy};
+use crate::util::bench::BenchReport;
+use crate::util::error::{bail, Result};
+use std::sync::Arc;
+
+/// Which tier the simulation drives.
+enum Tier {
+    Fleet(Arc<Fleet>),
+    Cluster(Arc<Cluster>),
+}
+
+/// Builder for one simulation run; see the module docs.
+pub struct Simulation {
+    tier: Tier,
+    card_policy: RoutePolicy,
+    node_policy: NodePolicy,
+    scenario: Scenario,
+    trace: Vec<FleetRequest>,
+    execute_workers: Option<usize>,
+}
+
+impl Simulation {
+    /// Simulate the single-node tier: card-level routing across a fleet's
+    /// replica set.
+    pub fn fleet(fleet: Arc<Fleet>) -> Simulation {
+        Simulation {
+            tier: Tier::Fleet(fleet),
+            card_policy: RoutePolicy::LatencyAware,
+            node_policy: NodePolicy::WeightedCapacity,
+            scenario: Scenario::none(),
+            trace: Vec::new(),
+            execute_workers: None,
+        }
+    }
+
+    /// Simulate the multi-node tier: NIC-limited node routing in front of
+    /// per-node card routing.
+    pub fn cluster(cluster: Arc<Cluster>) -> Simulation {
+        Simulation {
+            tier: Tier::Cluster(cluster),
+            card_policy: RoutePolicy::LatencyAware,
+            node_policy: NodePolicy::WeightedCapacity,
+            scenario: Scenario::none(),
+            trace: Vec::new(),
+            execute_workers: None,
+        }
+    }
+
+    /// Within-node card-routing policy (both tiers).
+    pub fn card_policy(mut self, p: RoutePolicy) -> Simulation {
+        self.card_policy = p;
+        self
+    }
+
+    /// Cross-node routing policy (cluster tier; ignored by the fleet tier).
+    pub fn node_policy(mut self, p: NodePolicy) -> Simulation {
+        self.node_policy = p;
+        self
+    }
+
+    /// Drain/fail scenario events (cluster tier only — `run()` rejects a
+    /// non-empty scenario on the fleet tier rather than ignoring it).
+    pub fn scenario(mut self, s: Scenario) -> Simulation {
+        self.scenario = s;
+        self
+    }
+
+    /// The request trace to simulate (arrival times are modeled seconds).
+    pub fn trace(mut self, reqs: Vec<FleetRequest>) -> Simulation {
+        self.trace = reqs;
+        self
+    }
+
+    /// Also execute the admitted requests' real numerics with `workers`
+    /// in flight. Without this, `run()` plans only.
+    pub fn execute(mut self, workers: usize) -> Simulation {
+        self.execute_workers = Some(workers.max(1));
+        self
+    }
+
+    /// Run the simulation and fold the tier metrics into a [`SimReport`].
+    pub fn run(&self) -> Result<SimReport> {
+        match &self.tier {
+            Tier::Fleet(fleet) => {
+                if !self.scenario.is_empty() {
+                    bail!(
+                        "drain/fail scenarios are a cluster-tier feature; \
+                         the fleet tier has no nodes to drain"
+                    );
+                }
+                let m = match self.execute_workers {
+                    Some(w) => fleet.serve(self.trace.clone(), self.card_policy, w)?,
+                    None => fleet.route(&self.trace, self.card_policy)?,
+                };
+                Ok(SimReport::from_fleet(m))
+            }
+            Tier::Cluster(cluster) => {
+                let m = match self.execute_workers {
+                    Some(w) => cluster.serve(
+                        self.trace.clone(),
+                        self.node_policy,
+                        self.card_policy,
+                        &self.scenario,
+                        w,
+                    )?,
+                    None => cluster.route(
+                        &self.trace,
+                        self.node_policy,
+                        self.card_policy,
+                        &self.scenario,
+                    )?,
+                };
+                Ok(SimReport::from_cluster(m))
+            }
+        }
+    }
+}
+
+/// The unified result shape both tiers produce: headline numbers up
+/// front, the tier's full metrics behind an `Option`.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// "fleet" or "cluster".
+    pub tier: &'static str,
+    pub card_policy: RoutePolicy,
+    /// `Some` for cluster runs; the fleet tier has no node router.
+    pub node_policy: Option<NodePolicy>,
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub qps: f64,
+    pub items_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Modeled span of the run (first arrival to last completion).
+    pub span_s: f64,
+    /// Full fleet metrics (fleet-tier runs).
+    pub fleet: Option<FleetMetrics>,
+    /// Full cluster metrics (cluster-tier runs).
+    pub cluster: Option<ClusterMetrics>,
+}
+
+impl SimReport {
+    pub fn from_fleet(m: FleetMetrics) -> SimReport {
+        SimReport {
+            tier: "fleet",
+            card_policy: m.policy,
+            node_policy: None,
+            offered: m.offered,
+            completed: m.node.completed,
+            shed: m.shed,
+            qps: m.node_qps(),
+            items_per_s: m.node.items_per_s(),
+            p50_ms: m.node.latency.p50() * 1e3,
+            p99_ms: m.node.latency.p99() * 1e3,
+            span_s: m.node.wall_s,
+            fleet: Some(m),
+            cluster: None,
+        }
+    }
+
+    pub fn from_cluster(m: ClusterMetrics) -> SimReport {
+        SimReport {
+            tier: "cluster",
+            card_policy: m.card_policy,
+            node_policy: Some(m.node_policy),
+            offered: m.offered,
+            completed: m.cluster.completed,
+            shed: m.shed(),
+            qps: m.cluster_qps(),
+            items_per_s: m.cluster.items_per_s(),
+            p50_ms: m.cluster.latency.p50() * 1e3,
+            p99_ms: m.cluster.latency.p99() * 1e3,
+            span_s: m.cluster.wall_s,
+            fleet: None,
+            cluster: Some(m),
+        }
+    }
+
+    /// The conservation invariant every run must satisfy.
+    pub fn conserved(&self) -> bool {
+        self.completed + self.shed == self.offered
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.offered.max(1) as f64
+    }
+
+    /// Bridge into the shared `BENCH_*.json` schema.
+    pub fn bench_report(&self, name: &str, backend: &str) -> BenchReport {
+        let mut r = BenchReport::new(name, backend, "modeled");
+        r.offered = self.offered;
+        r.completed = self.completed;
+        r.shed = self.shed;
+        r.qps = self.qps;
+        r.p50_ms = self.p50_ms;
+        r.p99_ms = self.p99_ms;
+        r
+    }
+}

@@ -3,6 +3,7 @@
 //! uses — latency vs the Table I budget, relative QPS (Fig. 7), per-op
 //! runtime breakdown (Table II), PCIe traffic (§VI-C), core utilization.
 
+pub mod des;
 pub mod exec;
 pub mod transfer;
 

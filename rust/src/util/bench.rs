@@ -5,6 +5,7 @@
 //! 2. paper-style reporting: every bench target regenerates the rows/series
 //!    of one paper table or figure (DESIGN.md §5) via [`crate::util::table`].
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::time::Instant;
 
@@ -89,6 +90,110 @@ pub fn fmt_time(s: f64) -> String {
 pub fn section(title: &str) {
     println!();
     println!("=== {title} ===");
+}
+
+/// The shared `BENCH_*.json` schema: every emitter (`fig7` bench,
+/// `fbia fleet --json`, `fbia cluster --json`, `fbia des --json`) writes
+/// the same top-level fields so PR-over-PR trend tooling can diff the
+/// files without per-bench parsing. Detail payloads (policy sweeps,
+/// per-card tables, capacity plans) nest under emitter-specific `extra`
+/// keys; the headline numbers and acceptance flags always live at the top
+/// level.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// Bench identity ("fig7_latency_qps", "fleet_smoke", ...).
+    pub name: String,
+    /// Backend that produced the numbers ("ref" | "sim" | "pjrt").
+    pub backend: String,
+    /// Clock the numbers are on ("wall" | "modeled").
+    pub clock: String,
+    /// Requests offered / completed / shed (conservation:
+    /// completed + shed == offered).
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: usize,
+    /// Headline throughput and tail latency.
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Named acceptance checks ("la_beats_rr", "all_within_budget", ...);
+    /// the CI gates read these.
+    pub acceptance: Vec<(String, bool)>,
+    /// Emitter-specific detail, merged into the object as-is.
+    pub extra: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    /// A report skeleton; fill the metric fields then call
+    /// [`BenchReport::to_json`] / [`BenchReport::write`].
+    pub fn new(name: &str, backend: &str, clock: &str) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            backend: backend.to_string(),
+            clock: clock.to_string(),
+            offered: 0,
+            completed: 0,
+            shed: 0,
+            qps: 0.0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            acceptance: Vec::new(),
+            extra: Vec::new(),
+        }
+    }
+
+    /// Record one named acceptance flag (chainable).
+    pub fn accept(mut self, check: &str, holds: bool) -> BenchReport {
+        self.acceptance.push((check.to_string(), holds));
+        self
+    }
+
+    /// Attach one emitter-specific detail field (chainable).
+    pub fn with(mut self, key: &str, value: Json) -> BenchReport {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
+    /// Render the shared schema. `shed_rate` and the acceptance map are
+    /// derived here so every emitter agrees on their definitions.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("bench".to_string(), Json::str(&self.name)),
+            ("backend".to_string(), Json::str(&self.backend)),
+            ("clock".to_string(), Json::str(&self.clock)),
+            ("offered".to_string(), Json::num(self.offered as f64)),
+            ("completed".to_string(), Json::num(self.completed as f64)),
+            ("shed".to_string(), Json::num(self.shed as f64)),
+            (
+                "shed_rate".to_string(),
+                Json::num(self.shed as f64 / (self.offered as f64).max(1.0)),
+            ),
+            ("qps".to_string(), Json::num(self.qps)),
+            ("p50_ms".to_string(), Json::num(self.p50_ms)),
+            ("p99_ms".to_string(), Json::num(self.p99_ms)),
+            (
+                "acceptance".to_string(),
+                Json::Obj(
+                    self.acceptance
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Bool(*v)))
+                        .collect(),
+                ),
+            ),
+        ];
+        for (k, v) in &self.extra {
+            fields.push((k.clone(), v.clone()));
+        }
+        Json::Obj(fields.into_iter().collect())
+    }
+
+    /// Write the report to `path` (the `--json` flag's sink).
+    pub fn write(&self, path: &str) -> crate::util::error::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| crate::util::error::err!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+        Ok(())
+    }
 }
 
 #[cfg(test)]

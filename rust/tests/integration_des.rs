@@ -1,0 +1,265 @@
+//! Integration: the discrete-event simulation core and the unified
+//! `Simulation` API over it. Invariants — seeded tie-break determinism
+//! across des seeds and worker counts, timer cancellation for hedged
+//! work, Little's-law sanity for a queue built directly on the event
+//! heap — plus the API surface both tiers now share: one builder, one
+//! report shape, one conservation check, and the reactive
+//! dynamic-batching policy the event clock unlocks beating static.
+
+use fbia::config::Config;
+use fbia::platform::NodeSpec;
+use fbia::runtime::Engine;
+use fbia::serving::cluster::{Cluster, EventKind, NodeEvent, NodePolicy, Scenario};
+use fbia::serving::fleet::{
+    Arrival, DynamicBatch, FamilyMix, Fleet, FleetConfig, FleetRequest, RoutePolicy, TrafficGen,
+};
+use fbia::serving::simulation::{SimReport, Simulation};
+use fbia::sim::des::{class, EventHeap};
+use std::path::Path;
+use std::sync::Arc;
+
+fn engine() -> Arc<Engine> {
+    // no artifacts dir in CI: the builtin manifest on the sim backend
+    Arc::new(
+        Engine::auto_with(Path::new("/nonexistent/artifacts"), Some("sim")).expect("engine"),
+    )
+}
+
+fn traffic(eng: &Engine, cfg: &FleetConfig, mix: &str, n: usize) -> Vec<FleetRequest> {
+    let mix = FamilyMix::parse(mix).unwrap();
+    TrafficGen::new(11, mix, Arrival::Burst, eng.manifest(), cfg.recsys_batch)
+        .expect("traffic")
+        .take(n)
+}
+
+#[test]
+fn seeded_tiebreaks_deterministic_across_seeds_and_workers() {
+    // 3 des seeds x 3 worker counts: for a fixed seed, route() and
+    // serve(w) must agree bit-for-bit on every modeled number — the heap's
+    // tie-break order is a function of the seed, not of host scheduling
+    let eng = engine();
+    for des_seed in [1u64, 0xFB1A_0DE5, u64::MAX] {
+        let cfg = FleetConfig { des_seed, ..FleetConfig::default() };
+        let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+        let reqs = traffic(&eng, &cfg, "70/20/10", 40);
+        let base = Simulation::fleet(Arc::clone(&fleet))
+            .trace(reqs.clone())
+            .run()
+            .unwrap();
+        assert!(base.conserved(), "seed {des_seed:#x}: completed+shed != offered");
+        assert!(base.completed > 0);
+        for workers in [1usize, 2, 4] {
+            let run = Simulation::fleet(Arc::clone(&fleet))
+                .trace(reqs.clone())
+                .execute(workers)
+                .run()
+                .unwrap();
+            assert!(run.conserved());
+            assert_eq!(run.completed, base.completed, "seed {des_seed:#x} w{workers}");
+            assert_eq!(run.shed, base.shed);
+            assert_eq!(run.qps, base.qps, "qps must be bit-identical");
+            assert_eq!(run.p50_ms, base.p50_ms);
+            assert_eq!(run.p99_ms, base.p99_ms);
+            assert_eq!(run.span_s, base.span_s);
+        }
+    }
+}
+
+#[test]
+fn different_seeds_may_reorder_ties_but_conserve() {
+    // the seed only permutes equal-time pops: offered/completed accounting
+    // must not depend on it (a burst trace is all ties at t=0)
+    let eng = engine();
+    let mut reports: Vec<SimReport> = Vec::new();
+    for des_seed in [7u64, 8, 9] {
+        let cfg = FleetConfig { des_seed, ..FleetConfig::default() };
+        let fleet = Arc::new(Fleet::new(eng.clone(), cfg.clone()).unwrap());
+        let reqs = traffic(&eng, &cfg, "70/20/10", 40);
+        let r = Simulation::fleet(fleet).trace(reqs).run().unwrap();
+        assert!(r.conserved());
+        reports.push(r);
+    }
+    assert!(reports.iter().all(|r| r.offered == reports[0].offered));
+    assert!(reports.iter().all(|r| r.completed + r.shed == r.offered));
+}
+
+#[test]
+fn hedge_timer_cancellation_on_the_event_heap() {
+    // the hedged-request pattern: arm a hedge timer per request, cancel it
+    // when the primary completes first; a cancelled timer must never pop
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        Primary(usize),
+        Hedge(usize),
+    }
+    let mut heap: EventHeap<Ev> = EventHeap::new(42);
+    let mut hedge_ids = Vec::new();
+    for i in 0..8 {
+        let t = i as f64 * 0.1;
+        // primaries 0..4 are fast (beat the hedge), 4..8 slow (hedge fires)
+        let svc = if i < 4 { 0.05 } else { 0.5 };
+        heap.push_class(t + svc, class::COMPLETION, Ev::Primary(i));
+        hedge_ids.push(heap.push_class(t + 0.2, class::TIMER, Ev::Hedge(i)));
+    }
+    let mut primaries = 0;
+    let mut hedges_fired = 0;
+    let mut last = f64::NEG_INFINITY;
+    while let Some(e) = heap.pop() {
+        assert!(e.at_s >= last, "event clock must be monotone");
+        last = e.at_s;
+        match e.kind {
+            Ev::Primary(i) => {
+                primaries += 1;
+                // completion wins the race: cancel the hedge (fast half only
+                // — slow primaries finish after their hedge already fired)
+                if i < 4 {
+                    assert!(heap.cancel(hedge_ids[i]), "hedge {i} should be cancellable");
+                    assert!(!heap.cancel(hedge_ids[i]), "double-cancel must be a no-op");
+                }
+            }
+            Ev::Hedge(i) => {
+                assert!(i >= 4, "hedge {i} fired although its primary completed first");
+                hedges_fired += 1;
+            }
+        }
+    }
+    assert_eq!(primaries, 8);
+    assert_eq!(hedges_fired, 4);
+    assert_eq!(heap.now_s(), last);
+    assert!(heap.is_empty());
+}
+
+#[test]
+fn event_heap_queue_obeys_littles_law() {
+    // D/D/1 on the raw heap at 80% utilization: arrivals every 1.0s,
+    // deterministic 0.8s service, FIFO single server. L == lambda * W must
+    // hold exactly for the time-averaged occupancy over the busy window.
+    enum Ev {
+        Arrive(usize),
+        Complete(usize),
+    }
+    let n = 200usize;
+    let (inter, svc) = (1.0f64, 0.8f64);
+    let mut heap: EventHeap<Ev> = EventHeap::new(7);
+    for i in 0..n {
+        heap.push(i as f64 * inter, Ev::Arrive(i));
+    }
+    let mut server_free_at = 0.0f64;
+    let mut spans: Vec<(f64, f64)> = Vec::new(); // (arrival, completion)
+    while let Some(e) = heap.pop() {
+        match e.kind {
+            Ev::Arrive(i) => {
+                let start = server_free_at.max(e.at_s);
+                server_free_at = start + svc;
+                heap.push_class(server_free_at, class::COMPLETION, Ev::Complete(i));
+                spans.push((e.at_s, server_free_at));
+            }
+            Ev::Complete(_) => {}
+        }
+    }
+    assert_eq!(spans.len(), n);
+    let t_end = spans.last().unwrap().1;
+    let horizon = t_end; // first arrival is at 0
+    // L: time-integral of number-in-system / horizon (exact, piecewise)
+    let area: f64 = spans.iter().map(|&(a, f)| f - a).sum();
+    let l = area / horizon;
+    let lambda = n as f64 / horizon;
+    let w = area / n as f64;
+    assert!(
+        (l - lambda * w).abs() < 1e-9,
+        "Little's law must hold exactly: L {l} vs lambda*W {}",
+        lambda * w
+    );
+    // sub-critical D/D/1 never queues: every wait equals the service time
+    assert!(spans.iter().all(|&(a, f)| (f - a - svc).abs() < 1e-9));
+}
+
+#[test]
+fn dynamic_batching_beats_static_on_nlp_burst() {
+    // the reactive policy the event clock unlocks: same engine, same
+    // trace, the only difference is queue-depth-triggered batch growth
+    let eng = engine();
+    let static_cfg = FleetConfig::default();
+    assert!(static_cfg.dynamic_batch.is_none(), "default fleet must be static");
+    let dyn_cfg =
+        FleetConfig { dynamic_batch: Some(DynamicBatch::default()), ..static_cfg.clone() };
+    let reqs = traffic(&eng, &static_cfg, "0/100/0", 96);
+    let stat = Simulation::fleet(Arc::new(Fleet::new(eng.clone(), static_cfg).unwrap()))
+        .trace(reqs.clone())
+        .run()
+        .unwrap();
+    let dynr = Simulation::fleet(Arc::new(Fleet::new(eng.clone(), dyn_cfg).unwrap()))
+        .trace(reqs)
+        .run()
+        .unwrap();
+    assert!(stat.conserved() && dynr.conserved());
+    assert_eq!(stat.offered, 96);
+    assert_eq!(dynr.offered, 96);
+    assert!(dynr.shed <= stat.shed);
+    assert!(
+        dynr.qps > stat.qps,
+        "dynamic batching ({} QPS) must beat static ({} QPS) under same-shape burst pressure",
+        dynr.qps,
+        stat.qps
+    );
+}
+
+#[test]
+fn simulation_api_is_uniform_across_tiers() {
+    // one builder, one report shape: the same trace through both tiers
+    // yields reports that satisfy the same invariants, and tier-specific
+    // fields are populated exactly where they belong
+    let eng = engine();
+    let fcfg = FleetConfig { replicas: 2, ..FleetConfig::default() };
+    let fleet = Arc::new(Fleet::new(eng.clone(), fcfg.clone()).unwrap());
+    let reqs = traffic(&eng, &fcfg, "70/20/10", 30);
+
+    let f = Simulation::fleet(fleet)
+        .card_policy(RoutePolicy::LeastOutstanding)
+        .trace(reqs.clone())
+        .run()
+        .unwrap();
+    assert_eq!(f.tier, "fleet");
+    assert_eq!(f.card_policy, RoutePolicy::LeastOutstanding);
+    assert!(f.node_policy.is_none() && f.fleet.is_some() && f.cluster.is_none());
+    assert!(f.conserved());
+
+    let specs = vec![NodeSpec::default(); 2];
+    let cluster =
+        Arc::new(Cluster::new(Path::new("/nonexistent/artifacts"), &Config::default(), &specs, fcfg).unwrap());
+    let c = Simulation::cluster(Arc::clone(&cluster))
+        .node_policy(NodePolicy::JoinShortestQueue)
+        .card_policy(RoutePolicy::LeastOutstanding)
+        .trace(reqs.clone())
+        .run()
+        .unwrap();
+    assert_eq!(c.tier, "cluster");
+    assert_eq!(c.node_policy, Some(NodePolicy::JoinShortestQueue));
+    assert!(c.fleet.is_none() && c.cluster.is_some());
+    assert!(c.conserved());
+
+    // scenarios belong to the cluster tier; the fleet tier refuses them
+    let fleet2 = Arc::new(Fleet::new(eng.clone(), FleetConfig::default()).unwrap());
+    let err = Simulation::fleet(fleet2)
+        .scenario(Scenario::new(vec![NodeEvent { at_s: 0.1, node: 0, kind: EventKind::Fail }]))
+        .trace(reqs.clone())
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("cluster-tier"), "{err}");
+
+    // the same scenario on the cluster tier runs and still conserves
+    let killed = Simulation::cluster(cluster)
+        .scenario(Scenario::new(vec![NodeEvent { at_s: 0.0, node: 0, kind: EventKind::Drain }]))
+        .trace(reqs)
+        .run()
+        .unwrap();
+    assert!(killed.conserved());
+
+    // the bench bridge carries the headline numbers through unchanged
+    let bench = f.bench_report("des_check", "sim");
+    assert_eq!(bench.offered, f.offered);
+    assert_eq!(bench.completed, f.completed);
+    assert_eq!(bench.qps, f.qps);
+    assert_eq!(bench.clock, "modeled");
+}

@@ -7,7 +7,7 @@
 use fbia::numerics::ops_ref;
 use fbia::numerics::weights::WeightGen;
 use fbia::runtime::Engine;
-use fbia::serving::{batcher::Batcher, CvServer, NlpServer, RecsysServer, WEIGHT_SEED};
+use fbia::serving::{batcher::Batcher, CvServer, NlpServer, RecsysServer, ServeOptions, WEIGHT_SEED};
 use fbia::util::stats::cosine_similarity;
 use fbia::workloads::{CvGen, NlpGen, RecsysGen};
 use std::path::Path;
@@ -86,7 +86,7 @@ fn nlp_bucket_switching_end_to_end() {
     let vocab = e.manifest().config_usize("xlmr", "vocab").unwrap();
     let mut gen = NlpGen::new(3, vocab, 120, 100.0);
     let reqs: Vec<_> = (0..8).map(|_| gen.next()).collect();
-    let (metrics, waste) = server.serve(reqs, 4, true, 1).unwrap();
+    let (metrics, waste) = server.serve_with(reqs, &ServeOptions::default()).unwrap();
     assert_eq!(metrics.items, 8);
     assert!(metrics.completed >= 2); // at least two batches (length spread)
     assert!((0.0..1.0).contains(&waste));
@@ -101,10 +101,14 @@ fn nlp_max_batch_validated_up_front() {
     let mut gen = NlpGen::new(3, 100, 120, 100.0);
     let reqs: Vec<_> = (0..4).map(|_| gen.next()).collect();
     // one past the largest compiled variant: must fail before any batch runs
-    let err = server.serve(reqs.clone(), cap + 1, true, 1).unwrap_err();
+    let err = server
+        .serve_with(reqs.clone(), &ServeOptions { max_batch: cap + 1, ..ServeOptions::default() })
+        .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("compiled"), "{msg}");
-    assert!(server.serve(reqs, 0, true, 1).is_err());
+    assert!(server
+        .serve_with(reqs, &ServeOptions { max_batch: 0, ..ServeOptions::default() })
+        .is_err());
 }
 
 #[test]
@@ -252,7 +256,9 @@ fn sls_out_of_range_index_rejected_by_threaded_paths_too() {
     let sharded = Arc::new(RecsysServer::with_threads(e.clone(), 16, "fp32", 4).unwrap());
     assert!(sharded.infer(&req).is_err());
     let server = Arc::new(RecsysServer::new(e.clone(), 16, "fp32").unwrap());
-    assert!(server.serve_workers(vec![req], 4).is_err());
+    assert!(server
+        .serve_with(vec![req], &ServeOptions { workers: 4, ..ServeOptions::default() })
+        .is_err());
 }
 
 #[test]
@@ -290,7 +296,9 @@ fn serve_workers_matches_sequential_and_conserves_items() {
     let reqs = requests(&e, 43, batch, 12);
     // scores must be identical regardless of how requests were scheduled
     let expect: Vec<_> = reqs.iter().map(|r| server.infer(r).unwrap()).collect();
-    let metrics = server.serve_workers(reqs.clone(), 4).unwrap();
+    let metrics = server
+        .serve_with(reqs.clone(), &ServeOptions { workers: 4, ..ServeOptions::default() })
+        .unwrap();
     assert_eq!(metrics.completed, 12);
     assert_eq!(metrics.items, 12 * batch, "threaded metrics must conserve items");
     assert_eq!(metrics.latency.count(), 12);
@@ -306,8 +314,10 @@ fn nlp_threaded_serve_conserves_items() {
     let vocab = e.manifest().config_usize("xlmr", "vocab").unwrap();
     let mut gen = NlpGen::new(7, vocab, 120, 100.0);
     let reqs: Vec<_> = (0..16).map(|_| gen.next()).collect();
-    let (seq_m, seq_waste) = server.serve(reqs.clone(), 4, true, 1).unwrap();
-    let (par_m, par_waste) = server.serve(reqs, 4, true, 3).unwrap();
+    let (seq_m, seq_waste) = server.serve_with(reqs.clone(), &ServeOptions::default()).unwrap();
+    let (par_m, par_waste) = server
+        .serve_with(reqs, &ServeOptions { workers: 3, ..ServeOptions::default() })
+        .unwrap();
     assert_eq!(par_m.items, 16, "threaded metrics must conserve requests");
     assert_eq!(par_m.items, seq_m.items);
     assert_eq!(par_m.completed, seq_m.completed); // same batches formed
@@ -320,11 +330,13 @@ fn cv_threaded_serve_conserves_items() {
     let e = engine();
     let server = Arc::new(CvServer::new(e.clone()).unwrap());
     let mut gen = CvGen::new(1, server.image);
-    let metrics = server.serve(6, 4, &mut gen, 3).unwrap();
+    let metrics = server
+        .serve_with(6, 4, &mut gen, &ServeOptions { workers: 3, ..ServeOptions::default() })
+        .unwrap();
     assert_eq!(metrics.completed, 6);
     assert_eq!(metrics.items, 24);
     // unknown batch variant is rejected up front
-    assert!(server.serve(2, 3, &mut gen, 1).is_err());
+    assert!(server.serve_with(2, 3, &mut gen, &ServeOptions::default()).is_err());
 }
 
 #[test]

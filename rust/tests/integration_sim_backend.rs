@@ -7,7 +7,7 @@
 use fbia::graph::models::ModelId;
 use fbia::numerics::weights::WeightGen;
 use fbia::runtime::{Clock, Engine};
-use fbia::serving::{test_inputs_for, CvServer, NlpServer, RecsysServer, WEIGHT_SEED};
+use fbia::serving::{test_inputs_for, CvServer, NlpServer, RecsysServer, ServeOptions, WEIGHT_SEED};
 use fbia::workloads::{CvGen, NlpGen, RecsysGen};
 use std::path::Path;
 use std::sync::Arc;
@@ -64,7 +64,9 @@ fn sim_recsys_serving_identical_scores_and_modeled_metrics() {
     );
     // SLS shards are pinned one per card, in compiler shard order
     assert_eq!(sim_server.shard_devices(), vec![0, 1, 2, 3]);
-    let m = sim_server.serve_workers(vec![req], 1).unwrap();
+    let m = sim_server
+        .serve_with(vec![req], &ServeOptions { pipeline: false, ..ServeOptions::default() })
+        .unwrap();
     assert_eq!(m.clock, Clock::Modeled);
     assert!(m.wall_s > 0.0);
 }
@@ -79,7 +81,14 @@ fn sim_latencies_deterministic_across_runs_and_workers() {
 
     let runs: Vec<_> = [1usize, 1, 4, 4]
         .iter()
-        .map(|&w| server.serve_workers(reqs.clone(), w).unwrap())
+        .map(|&w| {
+            server
+                .serve_with(
+                    reqs.clone(),
+                    &ServeOptions { workers: w, pipeline: false, ..ServeOptions::default() },
+                )
+                .unwrap()
+        })
         .collect();
     // identical histograms across repeated runs AND across worker counts:
     // the modeled per-request latency does not depend on host scheduling
@@ -96,8 +105,8 @@ fn sim_latencies_deterministic_across_runs_and_workers() {
 
     // the pipelined path is deterministic too, and never slower per unit
     // than the serial path's full latency
-    let p1 = server.serve(reqs.clone()).unwrap();
-    let p2 = server.serve(reqs).unwrap();
+    let p1 = server.serve_with(reqs.clone(), &ServeOptions::default()).unwrap();
+    let p2 = server.serve_with(reqs, &ServeOptions::default()).unwrap();
     assert_eq!(p1.wall_s, p2.wall_s);
     assert_eq!(p1.latency.p50(), runs[0].latency.p50());
     assert!(p1.wall_s <= runs[0].wall_s + 1e-12);
@@ -135,9 +144,13 @@ fn sim_nlp_serving_deterministic_and_parity() {
         ref_server.run_batch(&batch).unwrap()
     );
     // metrics deterministic across runs and worker counts
-    let (a, wa) = sim_server.serve(mk(), 4, true, 1).unwrap();
-    let (b, wb) = sim_server.serve(mk(), 4, true, 3).unwrap();
-    let (c, _) = sim_server.serve(mk(), 4, true, 3).unwrap();
+    let (a, wa) = sim_server.serve_with(mk(), &ServeOptions::default()).unwrap();
+    let (b, wb) = sim_server
+        .serve_with(mk(), &ServeOptions { workers: 3, ..ServeOptions::default() })
+        .unwrap();
+    let (c, _) = sim_server
+        .serve_with(mk(), &ServeOptions { workers: 3, ..ServeOptions::default() })
+        .unwrap();
     assert_eq!(a.clock, Clock::Modeled);
     assert_eq!(a.latency.count(), b.latency.count());
     assert_eq!(a.latency.p50(), b.latency.p50());
@@ -161,8 +174,10 @@ fn sim_cv_serving_deterministic_and_parity() {
     assert_eq!(es, er);
     let mut g1 = CvGen::new(7, sim_server.image);
     let mut g2 = CvGen::new(7, sim_server.image);
-    let a = sim_server.serve(6, 4, &mut g1, 1).unwrap();
-    let b = sim_server.serve(6, 4, &mut g2, 3).unwrap();
+    let a = sim_server.serve_with(6, 4, &mut g1, &ServeOptions::default()).unwrap();
+    let b = sim_server
+        .serve_with(6, 4, &mut g2, &ServeOptions { workers: 3, ..ServeOptions::default() })
+        .unwrap();
     assert_eq!(a.clock, Clock::Modeled);
     assert_eq!(a.latency.p50(), b.latency.p50());
     assert_eq!(a.latency.p99(), b.latency.p99());
@@ -176,4 +191,34 @@ fn unknown_backend_rejected_with_valid_names() {
         .to_string();
     assert!(err.contains("unknown backend 'npu'"), "{err}");
     assert!(err.contains("ref") && err.contains("sim"), "{err}");
+}
+
+#[test]
+fn serve_options_validate_clock_and_backend_pins() {
+    let e = engine("sim");
+    let server = Arc::new(RecsysServer::new(e.clone(), 16, "int8").unwrap());
+    let mut gen = RecsysGen::from_manifest(1, 16, e.manifest()).unwrap();
+    let reqs = vec![gen.next()];
+    // pins that match the engine pass through
+    let opts = ServeOptions {
+        clock: Some(Clock::Modeled),
+        backend: Some("sim".to_string()),
+        ..ServeOptions::default()
+    };
+    assert!(server.serve_with(reqs.clone(), &opts).is_ok());
+    // a wrong pin fails up front, naming what the engine actually runs
+    let err = server
+        .serve_with(
+            reqs.clone(),
+            &ServeOptions { clock: Some(Clock::Wall), ..ServeOptions::default() },
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("modeled"), "{err:#}");
+    let err = server
+        .serve_with(
+            reqs,
+            &ServeOptions { backend: Some("ref".to_string()), ..ServeOptions::default() },
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("sim"), "{err:#}");
 }
