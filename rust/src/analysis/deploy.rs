@@ -1,0 +1,363 @@
+//! Deployment-feasibility rules (lint layer 4).
+//!
+//! An infeasible serving config used to surface only as a mysterious 100%
+//! shed rate deep inside a DES run. Everything checked here is knowable
+//! *statically*: the modeled latency floor of a family's model (so an SLA
+//! budget below it can never be met — §VII's operational lesson), the NIC
+//! line rate against the wire bytes a target QPS implies (§VI-C sizes
+//! those bytes; §III-A the 50 Gbps NIC), and structural config mistakes —
+//! zero-replica families that still carry traffic, queue bounds of zero,
+//! batch-growth windows that can never open, clusters that are all
+//! failure headroom.
+
+use super::{Diagnostic, Report, RuleId, Span};
+use crate::config::Config;
+use crate::graph::ops::OpKind;
+use crate::graph::TensorKind;
+use crate::serving::fleet::{Family, FamilyMix, FleetConfig};
+use crate::util::error::Result;
+use crate::workloads::AVG_LOOKUP_FRACTION;
+use std::collections::HashSet;
+
+/// Rules over [`Config`] alone — run by `Config::from_json` as a loading
+/// gate (bypass: `--no-lint` / [`Config::from_json_with`]).
+pub fn lint_config(cfg: &Config) -> Report {
+    let mut r = Report::new();
+    if cfg.serving.max_queue == 0 {
+        r.push(
+            Diagnostic::new(
+                RuleId::QueueBoundZero,
+                Span::Config { path: "serving.max_queue".into() },
+                "a queue bound of zero sheds every request before it is served",
+            )
+            .suggest("set serving.max_queue >= 1"),
+        );
+    }
+    if let Some(cl) = &cfg.cluster {
+        if !cl.nodes.is_empty() && cl.headroom >= cl.nodes.len() {
+            r.push(
+                Diagnostic::new(
+                    RuleId::HeadroomExceedsNodes,
+                    Span::Config { path: "cluster.headroom".into() },
+                    format!(
+                        "failure headroom {} leaves no load-carrying node in a {}-node tier",
+                        cl.headroom,
+                        cl.nodes.len()
+                    ),
+                )
+                .suggest("keep headroom below the node count"),
+            );
+        }
+    }
+    r
+}
+
+/// A planned deployment to vet: the fleet knobs, the family traffic mix,
+/// and (optionally) the offered load the NIC must carry.
+pub struct DeploySpec<'a> {
+    pub fleet: &'a FleetConfig,
+    pub mix: FamilyMix,
+    /// Target request rate; `None` skips the NIC-bandwidth rule.
+    pub offered_qps: Option<f64>,
+}
+
+/// Vet a deployment before simulating it. `Err` only when a rule needs the
+/// analytic simulator and it fails (e.g. the model cannot compile);
+/// findings land in the returned [`Report`].
+pub fn lint_deployment(cfg: &Config, d: &DeploySpec<'_>) -> Result<Report> {
+    let mut r = lint_config(cfg);
+    let fleet = d.fleet;
+    let active: Vec<Family> =
+        Family::ALL.iter().copied().filter(|&f| d.mix.share(f) > 0.0).collect();
+
+    if fleet.replicas == 0 {
+        for &f in &active {
+            r.push(
+                Diagnostic::new(
+                    RuleId::ZeroReplicaFamily,
+                    Span::Config { path: "fleet.replicas".into() },
+                    format!(
+                        "family '{}' carries {:.0}% of traffic but has zero replicas",
+                        f.name(),
+                        d.mix.share(f) * 100.0
+                    ),
+                )
+                .suggest("set fleet.replicas >= 1 or drop the family from the mix"),
+            );
+        }
+    }
+    if fleet.max_queue == 0 {
+        r.push(
+            Diagnostic::new(
+                RuleId::QueueBoundZero,
+                Span::Config { path: "fleet.max_queue".into() },
+                "a per-card queue bound of zero sheds every request",
+            )
+            .suggest("set fleet.max_queue >= 1"),
+        );
+    }
+    if let Some(db) = &fleet.dynamic_batch {
+        if db.depth_hi >= fleet.max_queue && fleet.max_queue > 0 {
+            r.push(
+                Diagnostic::new(
+                    RuleId::BatchWindowNeverOpens,
+                    Span::Config { path: "fleet.dynamic_batch.depth_hi".into() },
+                    format!(
+                        "growth trigger depth_hi ({}) is never reached: the queue bound sheds \
+                         at {} first, so dynamic batching degenerates to static",
+                        db.depth_hi, fleet.max_queue
+                    ),
+                )
+                .suggest("set depth_hi well below max_queue"),
+            );
+        }
+    }
+
+    // SLA budget vs the modeled single-request floor: queueing and batching
+    // only ever add latency on top of it, so a budget below the floor sheds
+    // 100% of admitted traffic regardless of routing policy.
+    if let Some(budget) = fleet.sla_budget_s {
+        for &f in &active {
+            let floor = family_floor_s(f, cfg, fleet)?;
+            if budget < floor {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::SlaBelowModeledFloor,
+                        Span::Config { path: "fleet.sla_budget_s".into() },
+                        format!(
+                            "budget {:.3} ms is below family '{}''s modeled request floor \
+                             {:.3} ms — every request would be shed",
+                            budget * 1e3,
+                            f.name(),
+                            floor * 1e3
+                        ),
+                    )
+                    .suggest("raise the SLA budget above the modeled floor or shrink the model"),
+                );
+            }
+        }
+    }
+
+    // NIC line rate vs the wire bytes the offered QPS implies (§VI-C
+    // transfer volumes; the tier's ingress ceiling is the NIC).
+    if let Some(qps) = d.offered_qps {
+        if qps > 0.0 {
+            let bits_per_req: f64 = Family::ALL
+                .iter()
+                .map(|&f| d.mix.share(f) * 8.0 * family_wire_bytes(f, cfg, fleet))
+                .sum();
+            let required = qps * bits_per_req;
+            let (available, path) = match &cfg.cluster {
+                Some(cl) => (cl.total_nic_bw_bits(), "cluster"),
+                None => (cfg.node.nic.bw_bits, "node.nic.bw_bits"),
+            };
+            if required > available {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::NicBandwidthInsufficient,
+                        Span::Config { path: path.into() },
+                        format!(
+                            "{qps:.0} req/s of this mix needs {:.2} Gbit/s on the wire but the \
+                             tier's NICs provide {:.2} Gbit/s",
+                            required / 1e9,
+                            available / 1e9
+                        ),
+                    )
+                    .suggest("add nodes / faster NICs, or lower the offered QPS"),
+                );
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// Modeled single-request latency of a family's Table I model under this
+/// config — the floor no routing policy can beat.
+fn family_floor_s(f: Family, cfg: &Config, fleet: &FleetConfig) -> Result<f64> {
+    let rep = match f {
+        Family::Recsys => {
+            crate::sim::simulate_model_batch(f.model_id(), fleet.recsys_batch.max(1), cfg, 1)?
+        }
+        _ => crate::sim::simulate_model(f.model_id(), cfg, 1)?,
+    };
+    Ok(rep.latency_s)
+}
+
+/// Per-request wire bytes of one family: the larger of the request's input
+/// payload and its output payload, from the graph's Input/Output tensors.
+/// With `transfers.partial_tensors` the SLS index tensors count only their
+/// used prefix (§VI-C), matching the sim backend's PCIe model.
+fn family_wire_bytes(f: Family, cfg: &Config, fleet: &FleetConfig) -> f64 {
+    let id = f.model_id();
+    let batch = if f == Family::Recsys { fleet.recsys_batch.max(1) } else { id.typical_batch() };
+    let g = id.build_batch(batch);
+    // index operands of SLS ops (input position 1) are the partial-tensor
+    // candidates
+    let idx_tensors: HashSet<usize> = g
+        .nodes
+        .iter()
+        .filter(|n| {
+            matches!(n.kind, OpKind::SparseLengthsSum { .. } | OpKind::SparseLengthsSumSingle)
+        })
+        .filter_map(|n| n.inputs.get(1).copied())
+        .collect();
+    let mut ingress = 0.0f64;
+    let mut egress = 0.0f64;
+    for t in &g.tensors {
+        match t.kind {
+            TensorKind::Input => {
+                let mut b = t.bytes() as f64;
+                if cfg.transfers.partial_tensors && idx_tensors.contains(&t.id) {
+                    b *= AVG_LOOKUP_FRACTION;
+                }
+                ingress += b;
+            }
+            TensorKind::Output => egress += t.bytes() as f64,
+            _ => {}
+        }
+    }
+    ingress.max(egress)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{ClusterSpec, NodeSpec};
+    use crate::serving::fleet::DynamicBatch;
+
+    fn deploy<'a>(fleet: &'a FleetConfig, qps: Option<f64>) -> DeploySpec<'a> {
+        DeploySpec { fleet, mix: FamilyMix::default(), offered_qps: qps }
+    }
+
+    #[test]
+    fn default_deployment_lints_clean() {
+        let cfg = Config::default();
+        let fleet = FleetConfig::default();
+        let r = lint_deployment(&cfg, &deploy(&fleet, None)).unwrap();
+        assert!(r.is_empty(), "{}", r.render());
+        assert!(lint_config(&cfg).is_empty());
+    }
+
+    #[test]
+    fn zero_replicas_with_traffic_is_an_error() {
+        let cfg = Config::default();
+        let fleet = FleetConfig { replicas: 0, ..FleetConfig::default() };
+        let r = lint_deployment(&cfg, &deploy(&fleet, None)).unwrap();
+        // all three families of the default 70/20/10 mix are hit
+        assert_eq!(r.by_rule(RuleId::ZeroReplicaFamily).len(), 3, "{}", r.render());
+        // a family with no traffic share is not
+        let d = DeploySpec {
+            fleet: &fleet,
+            mix: FamilyMix::new(1.0, 0.0, 0.0).unwrap(),
+            offered_qps: None,
+        };
+        let r = lint_deployment(&cfg, &d).unwrap();
+        assert_eq!(r.by_rule(RuleId::ZeroReplicaFamily).len(), 1);
+        assert!(r.render().contains("recsys"), "{}", r.render());
+    }
+
+    #[test]
+    fn queue_bound_zero_both_layers() {
+        let mut cfg = Config::default();
+        cfg.serving.max_queue = 0;
+        assert_eq!(lint_config(&cfg).by_rule(RuleId::QueueBoundZero).len(), 1);
+        let fleet = FleetConfig { max_queue: 0, ..FleetConfig::default() };
+        let r = lint_deployment(&cfg, &deploy(&fleet, None)).unwrap();
+        assert_eq!(r.by_rule(RuleId::QueueBoundZero).len(), 2, "{}", r.render());
+    }
+
+    #[test]
+    fn batch_window_that_never_opens_warns() {
+        let cfg = Config::default();
+        let mut fleet = FleetConfig {
+            dynamic_batch: Some(DynamicBatch { depth_hi: 5000, ..DynamicBatch::default() }),
+            ..FleetConfig::default()
+        };
+        let r = lint_deployment(&cfg, &deploy(&fleet, None)).unwrap();
+        let hits = r.by_rule(RuleId::BatchWindowNeverOpens);
+        assert_eq!(hits.len(), 1, "{}", r.render());
+        assert!(!r.has_errors(), "window lint must be a warning");
+        // a sane trigger is clean
+        fleet.dynamic_batch = Some(DynamicBatch::default());
+        assert!(lint_deployment(&cfg, &deploy(&fleet, None)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn sla_below_modeled_floor_rejected_before_any_des_run() {
+        let cfg = Config::default();
+        // 1 µs: no model serves in that
+        let mut fleet = FleetConfig { sla_budget_s: Some(1e-6), ..FleetConfig::default() };
+        let d = DeploySpec {
+            fleet: &fleet,
+            mix: FamilyMix::new(1.0, 0.0, 0.0).unwrap(),
+            offered_qps: None,
+        };
+        let r = lint_deployment(&cfg, &d).unwrap();
+        let hits = r.by_rule(RuleId::SlaBelowModeledFloor);
+        assert_eq!(hits.len(), 1, "{}", r.render());
+        assert!(hits[0].message.contains("recsys"), "{}", hits[0].message);
+        // a generous budget is clean
+        fleet.sla_budget_s = Some(10.0);
+        let d = DeploySpec {
+            fleet: &fleet,
+            mix: FamilyMix::new(1.0, 0.0, 0.0).unwrap(),
+            offered_qps: None,
+        };
+        assert!(lint_deployment(&cfg, &d).unwrap().is_empty());
+    }
+
+    #[test]
+    fn nic_bandwidth_rule_scales_with_offered_qps() {
+        let cfg = Config::default();
+        let fleet = FleetConfig::default();
+        let r = lint_deployment(&cfg, &deploy(&fleet, Some(1e9))).unwrap();
+        assert_eq!(r.by_rule(RuleId::NicBandwidthInsufficient).len(), 1, "{}", r.render());
+        assert!(lint_deployment(&cfg, &deploy(&fleet, Some(1.0))).unwrap().is_empty());
+        // a cluster aggregates its members' NICs
+        let ccfg = Config {
+            cluster: Some(ClusterSpec::uniform(3, NodeSpec::default(), 1)),
+            ..Config::default()
+        };
+        let solo_limit = {
+            let mut q = 1.0;
+            while lint_deployment(&cfg, &deploy(&fleet, Some(q))).unwrap().is_empty() {
+                q *= 2.0;
+            }
+            q
+        };
+        // the 3-node tier admits the single-node breaking load
+        assert!(
+            lint_deployment(&ccfg, &deploy(&fleet, Some(solo_limit / 2.0 * 3.0 * 0.9)))
+                .unwrap()
+                .is_empty()
+        );
+    }
+
+    #[test]
+    fn all_headroom_cluster_is_an_error() {
+        // constructed programmatically: Config::validate would refuse this
+        // JSON, but a hand-built ClusterSpec must still be caught
+        let cfg = Config {
+            cluster: Some(ClusterSpec { nodes: vec![NodeSpec::default(); 2], headroom: 2 }),
+            ..Config::default()
+        };
+        let r = lint_config(&cfg);
+        assert_eq!(r.by_rule(RuleId::HeadroomExceedsNodes).len(), 1, "{}", r.render());
+    }
+
+    #[test]
+    fn wire_bytes_honor_partial_tensors() {
+        let cfg = Config::default();
+        let fleet = FleetConfig::default();
+        let full = {
+            let mut c = cfg.clone();
+            c.transfers.partial_tensors = false;
+            family_wire_bytes(Family::Recsys, &c, &fleet)
+        };
+        let partial = family_wire_bytes(Family::Recsys, &cfg, &fleet);
+        assert!(partial < full, "partial {partial} full {full}");
+        // CV has no SLS tensors: the switch is a no-op
+        let cv = family_wire_bytes(Family::Cv, &cfg, &fleet);
+        assert!(cv > 0.0);
+    }
+}

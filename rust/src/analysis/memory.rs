@@ -1,0 +1,350 @@
+//! Static memory-fit proof (lint layer 3).
+//!
+//! The paper sizes models against the card up front: a DLRM whose
+//! embedding tables exceed the six cards' 16 GB LPDDR each simply cannot
+//! deploy on the node (§VI-B motivates the Fig. 6 model-parallel split
+//! with exactly this bound). [`lint_memory`] proves the bound statically:
+//! it runs the partitioner, computes each partition's peak *activation*
+//! footprint by liveness analysis over the topological order, and checks
+//! weights + activations against every card's DRAM — including vendor-mix
+//! slots ([`NodeSpec::card_overrides`]), which the partitioner's own
+//! capacity check ([`Plan::check`]) sizes against the base card only.
+//!
+//! [`lint_artifact`] is the same proof at the artifact level, run by
+//! [`crate::runtime::Engine::prepare_on`] before any weight upload.
+//!
+//! [`NodeSpec::card_overrides`]: crate::platform::NodeSpec
+//! [`Plan::check`]: crate::compiler::partition::Plan::check
+
+use super::{Diagnostic, Report, RuleId, Span};
+use crate::compiler::partition::{partition, PartitionKind};
+use crate::config::Config;
+use crate::graph::{Graph, NodeId, TensorKind};
+use crate::platform::CardSpec;
+use crate::runtime::artifact::{Artifact, InputKind};
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// Partition the model and prove every card's DRAM/SRAM budget holds.
+pub fn lint_memory(g: &Graph, cfg: &Config) -> Report {
+    let mut r = Report::new();
+    let plan = match partition(g, &cfg.compiler, &cfg.node) {
+        Ok(p) => p,
+        Err(e) => {
+            r.push(
+                Diagnostic::new(
+                    RuleId::PartitionFailed,
+                    Span::Model { model: g.name.clone() },
+                    format!("model cannot be partitioned onto this node spec: {e}"),
+                )
+                .suggest(
+                    "give the node more/larger cards, raise compiler.sls_cards, or shrink the model",
+                ),
+            );
+            return r;
+        }
+    };
+    let Ok(order) = g.topo_order() else {
+        return r; // cycle: already an Error from the structural pass
+    };
+
+    // peak live activation bytes per device partition
+    let peaks: Vec<usize> = plan
+        .partitions
+        .iter()
+        .map(|p| if p.card.is_some() { peak_activation_bytes(g, &order, &p.nodes) } else { 0 })
+        .collect();
+
+    // Per-card DRAM: SLS shards live on their assigned card; Dense/Full
+    // partitions are data-parallel *replicas on every card* (Fig. 6), so
+    // their weights and activations count against each card, not just the
+    // canonical slot the plan records.
+    let cards = cfg.node.cards;
+    let mut card_total = vec![0usize; cards];
+    let mut card_top: Vec<Option<(usize, usize)>> = vec![None; cards]; // (bytes, partition id)
+    fn add(card: usize, bytes: usize, pid: usize, tot: &mut [usize], top: &mut [Option<(usize, usize)>]) {
+        if card >= tot.len() {
+            return;
+        }
+        tot[card] += bytes;
+        match top[card] {
+            Some((b, _)) if bytes <= b => {}
+            _ => top[card] = Some((bytes, pid)),
+        }
+    }
+    for (p, &peak) in plan.partitions.iter().zip(&peaks) {
+        let bytes = p.weight_bytes + peak;
+        match (p.kind, p.card) {
+            (PartitionKind::Sls, Some(c)) => add(c, bytes, p.id, &mut card_total, &mut card_top),
+            (PartitionKind::Dense | PartitionKind::Full, Some(_)) => {
+                for c in 0..cards {
+                    add(c, bytes, p.id, &mut card_total, &mut card_top);
+                }
+            }
+            _ => {} // host partition: host DRAM, not card DRAM
+        }
+    }
+    for c in 0..cards {
+        let cap = cfg.node.card_spec(c).lpddr_bytes;
+        if card_total[c] > cap {
+            let (_, pid) = card_top[c].unwrap_or((0, 0));
+            r.push(
+                Diagnostic::new(
+                    RuleId::PartitionDramOverflow,
+                    Span::Partition { model: g.name.clone(), partition: pid, card: Some(c) },
+                    format!(
+                        "card {c} needs {} of weights+activations but has {} LPDDR",
+                        fmt_bytes(card_total[c]),
+                        fmt_bytes(cap)
+                    ),
+                )
+                .suggest("spread SLS shards over more cards or use a larger-memory card spec"),
+            );
+        }
+    }
+
+    // Per-node SRAM: the op's working set (all non-weight operands live at
+    // once) should fit on-chip, else it streams through LPDDR (§III-B says
+    // weights of tens of MB fit on-chip; activations share that budget).
+    for p in &plan.partitions {
+        let Some(c) = p.card else { continue };
+        let onchip = cfg.node.card_spec(c).onchip_bytes();
+        for &nid in &p.nodes {
+            let n = g.node(nid);
+            let distinct: BTreeSet<usize> = n
+                .inputs
+                .iter()
+                .chain(&n.outputs)
+                .copied()
+                .filter(|&t| g.tensor(t).kind != TensorKind::Weight)
+                .collect();
+            let working: usize = distinct.iter().map(|&t| g.tensor(t).bytes()).sum();
+            if working > onchip {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::ActivationSramSpill,
+                        Span::Node { graph: g.name.clone(), node: nid, name: n.name.clone() },
+                        format!(
+                            "activation working set {} exceeds card {c}'s {} on-chip memory; \
+                             the op will stream through LPDDR",
+                            fmt_bytes(working),
+                            fmt_bytes(onchip)
+                        ),
+                    )
+                    .suggest("reduce the batch size or split the op"),
+                );
+            }
+        }
+    }
+    r
+}
+
+/// Peak bytes of simultaneously-live non-weight tensors while executing
+/// `nodes` in topological order (classic interval liveness: each tensor is
+/// live from its producer to its last in-partition consumer; tensors that
+/// escape the partition — outputs, cross-partition reads — stay live to
+/// the end).
+pub fn peak_activation_bytes(g: &Graph, topo: &[NodeId], nodes: &[NodeId]) -> usize {
+    let members: HashSet<NodeId> = nodes.iter().copied().collect();
+    let order: Vec<NodeId> = topo.iter().copied().filter(|n| members.contains(n)).collect();
+    if order.is_empty() {
+        return 0;
+    }
+    let pos: HashMap<NodeId, usize> = order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+    let end = order.len() - 1;
+    let producers = g.producers();
+    let consumers = g.consumers();
+
+    // tensors touched by this partition
+    let mut touched: BTreeSet<usize> = BTreeSet::new();
+    for &nid in &order {
+        let n = g.node(nid);
+        touched.extend(n.inputs.iter().chain(&n.outputs).copied());
+    }
+
+    let mut diff = vec![0i64; order.len() + 1];
+    for &t in &touched {
+        let tn = g.tensor(t);
+        if tn.kind == TensorKind::Weight {
+            continue; // counted via Partition::weight_bytes
+        }
+        let def = producers[t].and_then(|p| pos.get(&p).copied()).unwrap_or(0);
+        let escapes = tn.kind == TensorKind::Output
+            || consumers[t].is_empty()
+            || consumers[t].iter().any(|c| !members.contains(c));
+        let last = if escapes {
+            end
+        } else {
+            consumers[t].iter().filter_map(|c| pos.get(c).copied()).max().unwrap_or(def)
+        };
+        diff[def] += tn.bytes() as i64;
+        diff[last + 1] -= tn.bytes() as i64;
+    }
+    let mut live = 0i64;
+    let mut peak = 0i64;
+    for d in &diff {
+        live += d;
+        peak = peak.max(live);
+    }
+    peak.max(0) as usize
+}
+
+/// Artifact-level memory proof: the resident weights an artifact will pin
+/// on `device` must fit that card's DRAM. Run by `Engine::prepare_on`
+/// before any upload.
+pub fn lint_artifact(art: &Artifact, card: &CardSpec, device: usize) -> Report {
+    let mut r = Report::new();
+    for spec in &art.inputs {
+        if spec.shape.iter().any(|&d| d == 0) {
+            r.push(Diagnostic::new(
+                RuleId::ShapeMismatch,
+                Span::Model { model: art.name.clone() },
+                format!("input '{}' declares a zero-sized dimension {:?}", spec.name, spec.shape),
+            ));
+        }
+    }
+    for spec in &art.outputs {
+        if spec.shape.iter().any(|&d| d == 0) {
+            r.push(Diagnostic::new(
+                RuleId::ShapeMismatch,
+                Span::Model { model: art.name.clone() },
+                format!("an output declares a zero-sized dimension {:?}", spec.shape),
+            ));
+        }
+    }
+    let resident: usize = art
+        .inputs
+        .iter()
+        .filter(|s| s.kind != InputKind::Input)
+        .map(|s| s.elements() * s.dtype.bytes())
+        .sum();
+    if resident > card.lpddr_bytes {
+        r.push(
+            Diagnostic::new(
+                RuleId::PartitionDramOverflow,
+                Span::Model { model: art.name.clone() },
+                format!(
+                    "resident weights {} exceed card {device}'s {} LPDDR",
+                    fmt_bytes(resident),
+                    fmt_bytes(card.lpddr_bytes)
+                ),
+            )
+            .suggest("shard the artifact or target a larger-memory card"),
+        );
+    }
+    r
+}
+
+fn fmt_bytes(b: usize) -> String {
+    const GB: f64 = (1u64 << 30) as f64;
+    const MB: f64 = (1u64 << 20) as f64;
+    let b = b as f64;
+    if b >= GB {
+        format!("{:.2} GiB", b / GB)
+    } else {
+        format!("{:.1} MiB", b / MB)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::ModelId;
+    use crate::graph::{DType, Shape};
+    use crate::runtime::artifact::{ArtDType, InputSpec, OutputSpec};
+    use std::path::PathBuf;
+
+    #[test]
+    fn builtin_models_fit_the_default_node() {
+        let cfg = Config::default();
+        for id in ModelId::ALL {
+            let r = lint_memory(&id.build(), &cfg);
+            assert!(r.is_empty(), "{}: \n{}", id.name(), r.render());
+        }
+    }
+
+    #[test]
+    fn dlrm_on_a_tiny_card_is_a_partition_failure() {
+        let mut cfg = Config::default();
+        cfg.node.card.lpddr_bytes = 1 << 30; // 1 GiB: tables cannot shard in
+        let r = lint_memory(&ModelId::RecsysComplex.build(), &cfg);
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(!r.by_rule(RuleId::PartitionFailed).is_empty(), "{}", r.render());
+    }
+
+    #[test]
+    fn vendor_mix_override_card_overflow_names_the_card() {
+        // base card passes the partitioner's own check; the tiny override
+        // slot only the per-card lint sees
+        let mut cfg = Config::default();
+        cfg.node.card_overrides.push((2, CardSpec { lpddr_bytes: 8 << 20, ..CardSpec::default() }));
+        let r = lint_memory(&ModelId::ResNeXt101.build(), &cfg);
+        let hits = r.by_rule(RuleId::PartitionDramOverflow);
+        assert_eq!(hits.len(), 1, "{}", r.render());
+        assert!(matches!(hits[0].span, Span::Partition { card: Some(2), .. }), "{:?}", hits[0].span);
+        assert!(hits[0].message.contains("card 2"));
+    }
+
+    #[test]
+    fn giant_activation_warns_sram_spill() {
+        let mut g = Graph::new("spill");
+        let x = g.add_tensor("x", Shape::new(&[1, 64 << 20]), DType::F32, TensorKind::Input);
+        let y = g.add_tensor("y", Shape::new(&[1, 64 << 20]), DType::F32, TensorKind::Output);
+        g.add_node("big_relu", crate::graph::ops::OpKind::Relu, vec![x], vec![y]);
+        let r = lint_memory(&g, &Config::default());
+        let hits = r.by_rule(RuleId::ActivationSramSpill);
+        assert_eq!(hits.len(), 1, "{}", r.render());
+        assert!(!r.has_errors()); // a spill is a perf warning, not an error
+    }
+
+    #[test]
+    fn peak_is_liveness_not_sum() {
+        // chain a -> b -> c of equal 1 MiB activations: peak is 2 MiB
+        // (producer + consumer), not 3
+        let mut g = Graph::new("chain");
+        let elems = (1 << 20) / 4;
+        let a = g.add_tensor("a", Shape::new(&[elems]), DType::F32, TensorKind::Input);
+        let b = g.add_tensor("b", Shape::new(&[elems]), DType::F32, TensorKind::Activation);
+        let c = g.add_tensor("c", Shape::new(&[elems]), DType::F32, TensorKind::Output);
+        g.add_node("r1", crate::graph::ops::OpKind::Relu, vec![a], vec![b]);
+        g.add_node("r2", crate::graph::ops::OpKind::Relu, vec![b], vec![c]);
+        let order = g.topo_order().unwrap();
+        let peak = peak_activation_bytes(&g, &order, &[0, 1]);
+        // c escapes (Output) so it is live from its def to the end; a is
+        // dead after r1: peak = b + c at the r2 step plus a at the r1 step
+        assert_eq!(peak, 2 << 20, "peak {peak}");
+    }
+
+    #[test]
+    fn oversized_artifact_rejected() {
+        let art = Artifact {
+            name: "huge".into(),
+            file: PathBuf::from("huge.bin"),
+            model: "huge".into(),
+            role: "full".into(),
+            batch: 1,
+            seq: None,
+            shard: None,
+            inputs: vec![
+                InputSpec {
+                    name: "w".into(),
+                    shape: vec![5 << 30, 1],
+                    dtype: ArtDType::F32,
+                    kind: InputKind::Weight,
+                },
+                InputSpec {
+                    name: "x".into(),
+                    shape: vec![1, 8],
+                    dtype: ArtDType::F32,
+                    kind: InputKind::Input,
+                },
+            ],
+            outputs: vec![OutputSpec { shape: vec![1, 8], dtype: ArtDType::F32 }],
+        };
+        let r = lint_artifact(&art, &CardSpec::default(), 0);
+        assert!(r.has_errors());
+        assert!(!r.by_rule(RuleId::PartitionDramOverflow).is_empty());
+        // request inputs do not count against resident DRAM
+        let small = Artifact { inputs: vec![art.inputs[1].clone()], ..art };
+        assert!(lint_artifact(&small, &CardSpec::default(), 0).is_empty());
+    }
+}

@@ -1,0 +1,369 @@
+//! Static analysis (`fbia lint`): the compile-time gate the paper's Glow
+//! toolchain provides (§V, §VI-B), reproduced for this crate's graphs and
+//! deployment configs.
+//!
+//! Four layers, mirroring the tentpole split:
+//!
+//! 1. a diagnostics framework ([`Diagnostic`] / [`Report`]) — rules are
+//!    *collected*, not fail-fast, and render as text or JSON;
+//! 2. per-op shape & dtype inference over [`Graph`] ([`shape`]);
+//! 3. a static memory-fit proof per [`crate::compiler::partition::Plan`]
+//!    partition ([`memory`]) — "model M cannot fit node spec N" becomes a
+//!    lint error naming the failing partition, before any `prepare()`;
+//! 4. deployment-feasibility rules over `FleetConfig`/`ClusterSpec`
+//!    ([`deploy`]) — SLA below the modeled floor, NIC too slow for the
+//!    byte demand, batching windows that can never open.
+//!
+//! `Engine::prepare` and `Config::from_json` run the analyzer and refuse
+//! on `Error`-severity diagnostics; `--no-lint` is the escape hatch. The
+//! rule catalog lives in `rust/docs/lints.md`.
+
+pub mod deploy;
+pub mod memory;
+pub mod shape;
+
+pub use deploy::{lint_config, lint_deployment, DeploySpec};
+pub use memory::{lint_artifact, lint_memory};
+pub use shape::lint_graph;
+
+use crate::config::Config;
+use crate::graph::models::ModelId;
+use crate::graph::{Graph, NodeId, TensorId};
+use crate::util::error::{bail, Result};
+use crate::util::json::Json;
+use std::fmt;
+
+/// How bad a finding is. `Error` findings fail `fbia lint` and are refused
+/// by the `Engine::prepare` / config-loading gates; `Warn` findings are
+/// reported but never block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Severity {
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Every lint rule the analyzer knows. One entry per rule in
+/// `rust/docs/lints.md`; `fbia lint --json` reports rules by
+/// [`RuleId::name`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RuleId {
+    /// Graph breaks a structural invariant: dangling tensor id, multiple
+    /// producers, write to a constant, or a cycle.
+    StructuralInvalid,
+    /// An op has the wrong number of inputs or outputs.
+    ArityMismatch,
+    /// A declared output tensor disagrees with the shape inferred from the
+    /// op's inputs and attributes.
+    ShapeMismatch,
+    /// A tensor's dtype is illegal for its op (e.g. fp16 weights on a
+    /// quantized FC, non-int32 SLS indices).
+    DtypeMismatch,
+    /// An activation is produced but never consumed.
+    UnconsumedIntermediate,
+    /// A node has no path to any `Output` tensor.
+    UnreachableNode,
+    /// `compiler::partition` cannot place the model on the node spec at all.
+    PartitionFailed,
+    /// Weights + peak live activations on one card exceed its LPDDR.
+    PartitionDramOverflow,
+    /// One op's activation working set exceeds on-chip SRAM (it will
+    /// stream through LPDDR; §VI-B).
+    ActivationSramSpill,
+    /// SLA budget below the modeled minimum request cost (§VII).
+    SlaBelowModeledFloor,
+    /// NIC bandwidth below the wire-byte demand at the offered QPS (§VI-C).
+    NicBandwidthInsufficient,
+    /// `dynamic_batch.depth_hi` at or above the queue bound: the growth
+    /// window can never open.
+    BatchWindowNeverOpens,
+    /// Cluster failure headroom at or above the node count.
+    HeadroomExceedsNodes,
+    /// A family carries traffic in the mix but has zero replicas.
+    ZeroReplicaFamily,
+    /// A queue bound of zero sheds every request.
+    QueueBoundZero,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 15] = [
+        RuleId::StructuralInvalid,
+        RuleId::ArityMismatch,
+        RuleId::ShapeMismatch,
+        RuleId::DtypeMismatch,
+        RuleId::UnconsumedIntermediate,
+        RuleId::UnreachableNode,
+        RuleId::PartitionFailed,
+        RuleId::PartitionDramOverflow,
+        RuleId::ActivationSramSpill,
+        RuleId::SlaBelowModeledFloor,
+        RuleId::NicBandwidthInsufficient,
+        RuleId::BatchWindowNeverOpens,
+        RuleId::HeadroomExceedsNodes,
+        RuleId::ZeroReplicaFamily,
+        RuleId::QueueBoundZero,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleId::StructuralInvalid => "structural-invalid",
+            RuleId::ArityMismatch => "arity-mismatch",
+            RuleId::ShapeMismatch => "shape-mismatch",
+            RuleId::DtypeMismatch => "dtype-mismatch",
+            RuleId::UnconsumedIntermediate => "unconsumed-intermediate",
+            RuleId::UnreachableNode => "unreachable-node",
+            RuleId::PartitionFailed => "partition-failed",
+            RuleId::PartitionDramOverflow => "partition-dram-overflow",
+            RuleId::ActivationSramSpill => "activation-sram-spill",
+            RuleId::SlaBelowModeledFloor => "sla-below-floor",
+            RuleId::NicBandwidthInsufficient => "nic-bandwidth-insufficient",
+            RuleId::BatchWindowNeverOpens => "batch-window-never-opens",
+            RuleId::HeadroomExceedsNodes => "headroom-exceeds-nodes",
+            RuleId::ZeroReplicaFamily => "zero-replica-family",
+            RuleId::QueueBoundZero => "queue-bound-zero",
+        }
+    }
+
+    /// The rule's fixed severity.
+    pub fn severity(&self) -> Severity {
+        match self {
+            RuleId::UnconsumedIntermediate
+            | RuleId::UnreachableNode
+            | RuleId::ActivationSramSpill
+            | RuleId::BatchWindowNeverOpens => Severity::Warn,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// Where a diagnostic points: a graph node, a tensor, a plan partition, a
+/// whole model, or a config field.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Span {
+    Node { graph: String, node: NodeId, name: String },
+    Tensor { graph: String, tensor: TensorId, name: String },
+    Partition { model: String, partition: usize, card: Option<usize> },
+    Model { model: String },
+    Config { path: String },
+}
+
+impl Span {
+    pub fn label(&self) -> String {
+        match self {
+            Span::Node { graph, node, name } => format!("{graph}/node {node} '{name}'"),
+            Span::Tensor { graph, tensor, name } => format!("{graph}/tensor {tensor} '{name}'"),
+            Span::Partition { model, partition, card } => match card {
+                Some(c) => format!("{model}/partition {partition} (card {c})"),
+                None => format!("{model}/partition {partition} (host)"),
+            },
+            Span::Model { model } => model.clone(),
+            Span::Config { path } => format!("config.{path}"),
+        }
+    }
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// One finding: rule, severity, where, what, and (optionally) how to fix it.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: RuleId,
+    pub severity: Severity,
+    pub span: Span,
+    pub message: String,
+    pub suggestion: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn new(rule: RuleId, span: Span, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { rule, severity: rule.severity(), span, message: message.into(), suggestion: None }
+    }
+
+    /// Attach a fix suggestion (chainable).
+    pub fn suggest(mut self, s: impl Into<String>) -> Diagnostic {
+        self.suggestion = Some(s.into());
+        self
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}] {}: {}", self.severity, self.rule.name(), self.span, self.message)
+    }
+}
+
+/// A collected set of diagnostics. Rules append; nothing here fails fast —
+/// [`Report::check`] converts `Error` findings into a [`Result`] at the
+/// gate boundaries (`Engine::prepare`, config loading, `fbia lint`).
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    /// Append another report's findings.
+    pub fn merge(&mut self, other: Report) {
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warn).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors() > 0
+    }
+
+    /// All findings for one rule (test + reporting helper).
+    pub fn by_rule(&self, rule: RuleId) -> Vec<&Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.rule == rule).collect()
+    }
+
+    /// Text rendering: one line per finding plus its suggestion.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.to_string());
+            out.push('\n');
+            if let Some(s) = &d.suggestion {
+                out.push_str("  help: ");
+                out.push_str(s);
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Machine-readable rendering (`fbia lint --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("errors", Json::num(self.errors() as f64)),
+            ("warnings", Json::num(self.warnings() as f64)),
+            (
+                "items",
+                Json::arr(
+                    self.diagnostics
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("rule", Json::str(d.rule.name())),
+                                ("severity", Json::str(d.severity.name())),
+                                ("span", Json::str(&d.span.label())),
+                                ("message", Json::str(&d.message)),
+                                (
+                                    "suggestion",
+                                    match &d.suggestion {
+                                        Some(s) => Json::str(s),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// The gate: `Err` iff any `Error`-severity finding was collected.
+    pub fn check(&self, what: &str) -> Result<()> {
+        if self.has_errors() {
+            bail!(
+                "{what}: {} lint error(s) (pass --no-lint to bypass)\n{}",
+                self.errors(),
+                self.render().trim_end()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Full static analysis of one builtin model under a node config: shape /
+/// dtype inference plus the memory-fit proof.
+pub fn lint_model(id: ModelId, cfg: &Config) -> Report {
+    lint_built_graph(&id.build(), cfg)
+}
+
+/// Same as [`lint_model`] but over an already-built graph (custom batch
+/// sizes, tests).
+pub fn lint_built_graph(g: &Graph, cfg: &Config) -> Report {
+    let mut r = shape::lint_graph(g);
+    r.merge(memory::lint_memory(g, cfg));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_names_are_unique_kebab_case() {
+        let mut seen = std::collections::HashSet::new();
+        for rule in RuleId::ALL {
+            let n = rule.name();
+            assert!(seen.insert(n), "duplicate rule name {n}");
+            assert!(n.chars().all(|c| c.is_ascii_lowercase() || c == '-'), "bad rule name {n}");
+        }
+    }
+
+    #[test]
+    fn report_counts_and_gate() {
+        let mut r = Report::new();
+        assert!(r.check("ok").is_ok());
+        r.push(Diagnostic::new(
+            RuleId::UnreachableNode,
+            Span::Model { model: "m".into() },
+            "dead code",
+        ));
+        assert_eq!((r.errors(), r.warnings()), (0, 1));
+        assert!(r.check("warn-only").is_ok(), "warnings must not trip the gate");
+        r.push(
+            Diagnostic::new(
+                RuleId::ShapeMismatch,
+                Span::Config { path: "x".into() },
+                "bad shape",
+            )
+            .suggest("fix it"),
+        );
+        assert!(r.has_errors());
+        let err = r.check("gated").unwrap_err().to_string();
+        assert!(err.contains("shape-mismatch"), "render missing rule: {err}");
+        assert!(err.contains("help: fix it"), "render missing suggestion: {err}");
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"rule\""), "json missing rule field: {json}");
+    }
+}

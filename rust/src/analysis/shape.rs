@@ -1,0 +1,1140 @@
+//! Per-op shape & dtype inference over [`Graph`] (lint layer 2).
+//!
+//! Every [`OpKind`] gets a rule that re-derives the output tensor from the
+//! inputs and op attributes and compares it against what the graph
+//! declares — the legality checking Glow does at compile time (§V). Rules
+//! are calibrated against the Table I builders in [`crate::graph::models`]:
+//! all seven builtin models must lint clean (a CI gate), so a rule is only
+//! as strict as the layouts those builders actually produce (e.g. pooling
+//! windows may overlap, so pooled spatial dims are checked as `<=` rather
+//! than recomputed; `Transpose` doubles as a reshape, so it checks element
+//! count, not a permutation).
+//!
+//! Host-only ops (`RoiAlign`, `NonMaxSuppression`) are opaque: the paper
+//! runs proposal generation on the host CPU (§VI-A) and their output
+//! shapes are data-dependent, so nothing is inferred for them.
+
+use super::{Diagnostic, Report, RuleId, Span};
+use crate::graph::ops::OpKind;
+use crate::graph::{DType, Graph, GraphError, Node, TensorId, TensorKind};
+
+/// Run the structural + per-op + graph-level passes, collecting (never
+/// fail-fast) every finding.
+pub fn lint_graph(g: &Graph) -> Report {
+    let mut r = Report::new();
+
+    // --- structural: dangling ids first, so later passes can index safely
+    let mut dangling = vec![false; g.nodes.len()];
+    for (ni, n) in g.nodes.iter().enumerate() {
+        for &t in n.inputs.iter().chain(n.outputs.iter()) {
+            if t >= g.tensors.len() {
+                dangling[ni] = true;
+                r.push(
+                    Diagnostic::new(
+                        RuleId::StructuralInvalid,
+                        node_span(g, n),
+                        format!(
+                            "references dangling tensor id {t} (graph has {} tensors)",
+                            g.tensors.len()
+                        ),
+                    )
+                    .suggest("add the tensor with Graph::add_tensor before wiring the node"),
+                );
+            }
+        }
+    }
+    let any_dangling = dangling.iter().any(|&d| d);
+
+    // remaining structural invariants (cycle, multiple producers, write to
+    // constant) — Graph::validate's own dangling check would fire first,
+    // so only consult it once ids are known to be in range
+    if !any_dangling {
+        if let Err(e) = g.validate() {
+            let span = match &e {
+                GraphError::DanglingTensor { node, .. } | GraphError::WriteToConstant { node, .. } => {
+                    node_span(g, g.node(*node))
+                }
+                GraphError::MultipleProducers { tensor } => tensor_span(g, *tensor),
+                GraphError::Cycle => Span::Model { model: g.name.clone() },
+            };
+            r.push(Diagnostic::new(RuleId::StructuralInvalid, span, e.to_string()));
+        }
+    }
+
+    // zero-sized dims are never legal and would poison element-count math
+    for t in &g.tensors {
+        if t.shape.0.iter().any(|&d| d == 0) {
+            r.push(Diagnostic::new(
+                RuleId::ShapeMismatch,
+                tensor_span(g, t.id),
+                format!("shape {:?} has a zero-sized dimension", t.shape.0),
+            ));
+        }
+    }
+
+    // --- per-op inference
+    for (ni, n) in g.nodes.iter().enumerate() {
+        if !dangling[ni] {
+            check_node(g, n, &mut r);
+        }
+    }
+
+    // --- graph-level passes (need producers/consumers; unsafe with
+    // out-of-range ids)
+    if !any_dangling {
+        let consumers = g.consumers();
+        for t in &g.tensors {
+            if t.kind == TensorKind::Activation && consumers[t.id].is_empty() {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::UnconsumedIntermediate,
+                        tensor_span(g, t.id),
+                        "activation is produced but never consumed",
+                    )
+                    .suggest("drop the dead tensor, or mark it TensorKind::Output if it is a result"),
+                );
+            }
+        }
+        // reverse reachability from the Output tensors; a graph with no
+        // Output tensors has no anchor, so the pass is skipped
+        let outputs: Vec<TensorId> =
+            g.tensors.iter().filter(|t| t.kind == TensorKind::Output).map(|t| t.id).collect();
+        if !outputs.is_empty() {
+            let producers = g.producers();
+            let mut live_t = vec![false; g.tensors.len()];
+            let mut live_n = vec![false; g.nodes.len()];
+            let mut work = outputs;
+            for &t in &work {
+                live_t[t] = true;
+            }
+            while let Some(t) = work.pop() {
+                if let Some(ni) = producers[t] {
+                    if !live_n[ni] {
+                        live_n[ni] = true;
+                        for &i in &g.nodes[ni].inputs {
+                            if !live_t[i] {
+                                live_t[i] = true;
+                                work.push(i);
+                            }
+                        }
+                    }
+                }
+            }
+            for (ni, n) in g.nodes.iter().enumerate() {
+                if !live_n[ni] {
+                    r.push(
+                        Diagnostic::new(
+                            RuleId::UnreachableNode,
+                            node_span(g, n),
+                            "no path from this node to any Output tensor",
+                        )
+                        .suggest("remove the dead subgraph or wire its result into an output"),
+                    );
+                }
+            }
+        }
+    }
+    r
+}
+
+fn node_span(g: &Graph, n: &Node) -> Span {
+    Span::Node { graph: g.name.clone(), node: n.id, name: n.name.clone() }
+}
+
+fn tensor_span(g: &Graph, t: TensorId) -> Span {
+    Span::Tensor { graph: g.name.clone(), tensor: t, name: g.tensor(t).name.clone() }
+}
+
+fn diag(g: &Graph, n: &Node, rule: RuleId, msg: String) -> Diagnostic {
+    Diagnostic::new(rule, node_span(g, n), msg)
+}
+
+fn is_float(dt: DType) -> bool {
+    matches!(dt, DType::F32 | DType::F16 | DType::Bf16)
+}
+
+fn is_int(dt: DType) -> bool {
+    matches!(dt, DType::I8 | DType::I4)
+}
+
+/// Arity gate: wrong input/output counts get one diagnostic and skip the
+/// shape rules (which would index out of the io lists).
+fn arity_ok(g: &Graph, n: &Node, r: &mut Report, ins: usize) -> bool {
+    if n.inputs.len() != ins || n.outputs.len() != 1 {
+        r.push(diag(
+            g,
+            n,
+            RuleId::ArityMismatch,
+            format!(
+                "{} expects {ins} input(s) and 1 output, got {} and {}",
+                n.kind.table_name(),
+                n.inputs.len(),
+                n.outputs.len()
+            ),
+        ));
+        return false;
+    }
+    true
+}
+
+/// Compare a declared tensor against the inferred shape.
+fn expect_shape(g: &Graph, n: &Node, r: &mut Report, declared: TensorId, want: &[usize]) {
+    let t = g.tensor(declared);
+    if t.shape.0 != want {
+        r.push(
+            diag(
+                g,
+                n,
+                RuleId::ShapeMismatch,
+                format!("declared '{}' shape {:?} but inferred {:?}", t.name, t.shape.0, want),
+            )
+            .suggest("fix the declared tensor shape or the op attributes"),
+        );
+    }
+}
+
+fn expect_float_out(g: &Graph, n: &Node, r: &mut Report, out: TensorId) {
+    let t = g.tensor(out);
+    if !is_float(t.dtype) {
+        r.push(diag(
+            g,
+            n,
+            RuleId::DtypeMismatch,
+            format!(
+                "{} output '{}' must be floating point, got {}",
+                n.kind.table_name(),
+                t.name,
+                t.dtype.name()
+            ),
+        ));
+    }
+}
+
+/// Elementwise/same-layout rule: one input, output mirrors its shape and
+/// dtype exactly.
+fn same_shape_unary(g: &Graph, n: &Node, r: &mut Report) {
+    if !arity_ok(g, n, r, 1) {
+        return;
+    }
+    let x = g.tensor(n.inputs[0]);
+    let want = x.shape.0.clone();
+    expect_shape(g, n, r, n.outputs[0], &want);
+    let y = g.tensor(n.outputs[0]);
+    if y.dtype != x.dtype {
+        r.push(diag(
+            g,
+            n,
+            RuleId::DtypeMismatch,
+            format!(
+                "{} output dtype {} disagrees with input dtype {}",
+                n.kind.table_name(),
+                y.dtype.name(),
+                x.dtype.name()
+            ),
+        ));
+    }
+}
+
+#[allow(clippy::too_many_lines)]
+fn check_node(g: &Graph, n: &Node, r: &mut Report) {
+    // host ops run on the CPU (§VI-A); their output shapes are
+    // data-dependent (NMS keeps a variable proposal set) — opaque here
+    if n.kind.host_only() {
+        return;
+    }
+    match n.kind {
+        OpKind::Fc | OpKind::QuantizedFc => {
+            if !arity_ok(g, n, r, 3) {
+                return;
+            }
+            let (x, w, b) =
+                (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]), g.tensor(n.inputs[2]));
+            if x.shape.rank() != 2 || w.shape.rank() != 2 || b.shape.rank() != 1 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "FC expects x [m,k], w [out,k], b [out]; got ranks {}/{}/{}",
+                        x.shape.rank(),
+                        w.shape.rank(),
+                        b.shape.rank()
+                    ),
+                ));
+                return;
+            }
+            if w.shape.dim(1) != x.shape.dim(1) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "reduction dim mismatch: x {:?} vs w {:?} (w must be [out, k])",
+                        x.shape.0, w.shape.0
+                    ),
+                ));
+            }
+            if b.shape.dim(0) != w.shape.dim(0) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("bias {:?} disagrees with w out dim {}", b.shape.0, w.shape.dim(0)),
+                ));
+            }
+            expect_shape(g, n, r, n.outputs[0], &[x.shape.dim(0), w.shape.dim(0)]);
+            if n.kind == OpKind::QuantizedFc && w.dtype != DType::I8 {
+                r.push(
+                    diag(
+                        g,
+                        n,
+                        RuleId::DtypeMismatch,
+                        format!("quantized FC weight '{}' must be int8, got {}", w.name, w.dtype.name()),
+                    )
+                    .suggest("quantize the weight or use OpKind::Fc"),
+                );
+            }
+            if n.kind == OpKind::Fc && !is_float(w.dtype) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("FC weight '{}' must be floating point, got {}", w.name, w.dtype.name()),
+                ));
+            }
+            expect_float_out(g, n, r, n.outputs[0]);
+        }
+        OpKind::SparseLengthsSum { .. } | OpKind::SparseLengthsSumSingle => {
+            if !arity_ok(g, n, r, 3) {
+                return;
+            }
+            let (tab, idx, len) =
+                (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]), g.tensor(n.inputs[2]));
+            if tab.shape.rank() != 2 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("embedding table '{}' must be rank-2 (rows, dim), got {:?}", tab.name, tab.shape.0),
+                ));
+                return;
+            }
+            if tab.kind != TensorKind::Weight {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::StructuralInvalid,
+                    format!("embedding table '{}' must be a Weight tensor", tab.name),
+                ));
+            }
+            for (what, t) in [("indices", idx), ("lengths", len)] {
+                if t.dtype != DType::I32 {
+                    r.push(diag(
+                        g,
+                        n,
+                        RuleId::DtypeMismatch,
+                        format!("SLS {what} '{}' must be int32, got {}", t.name, t.dtype.name()),
+                    ));
+                }
+            }
+            if len.shape.rank() != 1 || !(1..=2).contains(&idx.shape.rank()) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "SLS expects indices [batch, lookups] and lengths [batch]; got {:?} and {:?}",
+                        idx.shape.0, len.shape.0
+                    ),
+                ));
+                return;
+            }
+            let batch = len.shape.dim(0);
+            if idx.shape.dim(0) != batch {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("indices batch dim {} disagrees with lengths {:?}", idx.shape.dim(0), len.shape.0),
+                ));
+            }
+            expect_shape(g, n, r, n.outputs[0], &[batch, tab.shape.dim(1)]);
+            expect_float_out(g, n, r, n.outputs[0]);
+        }
+        OpKind::MatMul => {
+            if !arity_ok(g, n, r, 2) {
+                return;
+            }
+            let (x, w) = (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]));
+            if x.shape.rank() != 2 || w.shape.rank() != 2 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("MatMul expects rank-2 operands, got {:?} and {:?}", x.shape.0, w.shape.0),
+                ));
+                return;
+            }
+            if w.shape.dim(1) != x.shape.dim(1) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "reduction dim mismatch: x {:?} vs w {:?} (w is stored [rows, k])",
+                        x.shape.0, w.shape.0
+                    ),
+                ));
+            }
+            expect_shape(g, n, r, n.outputs[0], &[x.shape.dim(0), w.shape.dim(0)]);
+            expect_float_out(g, n, r, n.outputs[0]);
+        }
+        OpKind::BatchMatMul => {
+            if !arity_ok(g, n, r, 2) {
+                return;
+            }
+            let (a, b) = (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]));
+            if a.shape.rank() != 3 || b.shape.rank() != 3 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("BatchMatMul expects rank-3 operands, got {:?} and {:?}", a.shape.0, b.shape.0),
+                ));
+                return;
+            }
+            if b.shape.dim(0) != a.shape.dim(0) || b.shape.dim(1) != a.shape.dim(2) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "operands {:?} x {:?} do not contract as [b,m,k] x [b,k,n]",
+                        a.shape.0, b.shape.0
+                    ),
+                ));
+                return;
+            }
+            expect_shape(
+                g,
+                n,
+                r,
+                n.outputs[0],
+                &[a.shape.dim(0), a.shape.dim(1), b.shape.dim(2)],
+            );
+            expect_float_out(g, n, r, n.outputs[0]);
+        }
+        OpKind::Conv { groups, stride, kh, kw, quantized }
+        | OpKind::ConvAddFused { groups, stride, kh, kw, quantized } => {
+            if !arity_ok(g, n, r, 2) {
+                return;
+            }
+            if groups == 0 || stride == 0 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("conv groups ({groups}) and stride ({stride}) must be >= 1"),
+                ));
+                return;
+            }
+            let (x, w) = (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]));
+            if x.shape.rank() != 4 || w.shape.rank() != 4 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "conv expects NHWC x and [kh,kw,cin/g,cout] w; got ranks {} and {}",
+                        x.shape.rank(),
+                        w.shape.rank()
+                    ),
+                ));
+                return;
+            }
+            if w.shape.dim(0) != kh || w.shape.dim(1) != kw {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("weight {:?} disagrees with kernel attrs {kh}x{kw}", w.shape.0),
+                ));
+            }
+            if w.shape.dim(2) * groups != x.shape.dim(3) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "weight channel dim {} x groups {groups} != input channels {}",
+                        w.shape.dim(2),
+                        x.shape.dim(3)
+                    ),
+                ));
+            }
+            expect_shape(
+                g,
+                n,
+                r,
+                n.outputs[0],
+                &[
+                    x.shape.dim(0),
+                    x.shape.dim(1).div_ceil(stride),
+                    x.shape.dim(2).div_ceil(stride),
+                    w.shape.dim(3),
+                ],
+            );
+            if quantized && w.dtype != DType::I8 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("quantized conv weight '{}' must be int8, got {}", w.name, w.dtype.name()),
+                ));
+            }
+            if !quantized && !is_float(w.dtype) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("conv weight '{}' must be floating point, got {}", w.name, w.dtype.name()),
+                ));
+            }
+            expect_float_out(g, n, r, n.outputs[0]);
+        }
+        OpKind::Conv3D { groups, kt, kh, kw } => {
+            if !arity_ok(g, n, r, 2) {
+                return;
+            }
+            if groups == 0 {
+                r.push(diag(g, n, RuleId::ShapeMismatch, "conv3d groups must be >= 1".into()));
+                return;
+            }
+            let (x, w) = (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]));
+            if x.shape.rank() != 5 || w.shape.rank() != 5 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "conv3d expects [n,f,h,w,c] x and [kt,kh,kw,cin/g,cout] w; got ranks {} and {}",
+                        x.shape.rank(),
+                        w.shape.rank()
+                    ),
+                ));
+                return;
+            }
+            if w.shape.dim(0) != kt || w.shape.dim(1) != kh || w.shape.dim(2) != kw {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("weight {:?} disagrees with kernel attrs {kt}x{kh}x{kw}", w.shape.0),
+                ));
+            }
+            if w.shape.dim(3) * groups != x.shape.dim(4) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "weight channel dim {} x groups {groups} != input channels {}",
+                        w.shape.dim(3),
+                        x.shape.dim(4)
+                    ),
+                ));
+            }
+            let y = g.tensor(n.outputs[0]);
+            if y.shape.rank() != 5 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("conv3d output must be rank-5, got {:?}", y.shape.0),
+                ));
+                return;
+            }
+            if y.shape.dim(0) != x.shape.dim(0)
+                || y.shape.dim(1) != x.shape.dim(1)
+                || y.shape.dim(4) != w.shape.dim(4)
+            {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "output {:?} must keep batch/frames {:?} and take {} channels from the weight",
+                        y.shape.0,
+                        &x.shape.0[..2],
+                        w.shape.dim(4)
+                    ),
+                ));
+            }
+            if y.shape.dim(2) > x.shape.dim(2) || y.shape.dim(3) > x.shape.dim(3) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("output spatial dims {:?} exceed input {:?}", y.shape.0, x.shape.0),
+                ));
+            }
+            expect_float_out(g, n, r, n.outputs[0]);
+        }
+        OpKind::Add => {
+            if !arity_ok(g, n, r, 2) {
+                return;
+            }
+            let (a, b) = (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]));
+            if a.shape != b.shape {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("Add operands disagree: {:?} vs {:?}", a.shape.0, b.shape.0),
+                ));
+            }
+            let want = a.shape.0.clone();
+            expect_shape(g, n, r, n.outputs[0], &want);
+            let y = g.tensor(n.outputs[0]);
+            if y.dtype != a.dtype || a.dtype != b.dtype {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!(
+                        "Add dtypes disagree: {} + {} -> {}",
+                        a.dtype.name(),
+                        b.dtype.name(),
+                        y.dtype.name()
+                    ),
+                ));
+            }
+        }
+        OpKind::Mul => {
+            if !arity_ok(g, n, r, 2) {
+                return;
+            }
+            let (a, b) = (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]));
+            // either elementwise, or the SE channel-gate broadcast:
+            // [n, ..., c] * [n, c]
+            let broadcast = b.shape.rank() == 2
+                && a.shape.rank() >= 2
+                && b.shape.dim(0) == a.shape.dim(0)
+                && b.shape.dim(1) == a.shape.dim(a.shape.rank() - 1);
+            if a.shape != b.shape && !broadcast {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "Mul operands {:?} x {:?} are neither elementwise nor a [n,c] channel gate",
+                        a.shape.0, b.shape.0
+                    ),
+                ));
+            }
+            let want = a.shape.0.clone();
+            expect_shape(g, n, r, n.outputs[0], &want);
+            let y = g.tensor(n.outputs[0]);
+            if y.dtype != a.dtype {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("Mul output dtype {} disagrees with input {}", y.dtype.name(), a.dtype.name()),
+                ));
+            }
+        }
+        OpKind::Concat => {
+            if n.inputs.is_empty() || n.outputs.len() != 1 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ArityMismatch,
+                    format!(
+                        "Concat expects >=1 inputs and 1 output, got {} and {}",
+                        n.inputs.len(),
+                        n.outputs.len()
+                    ),
+                ));
+                return;
+            }
+            let y = g.tensor(n.outputs[0]);
+            let mut supply = 0usize;
+            for &i in &n.inputs {
+                let t = g.tensor(i);
+                supply += t.shape.elements();
+                if t.dtype != y.dtype {
+                    r.push(diag(
+                        g,
+                        n,
+                        RuleId::DtypeMismatch,
+                        format!(
+                            "Concat input '{}' dtype {} disagrees with output {}",
+                            t.name,
+                            t.dtype.name(),
+                            y.dtype.name()
+                        ),
+                    ));
+                }
+            }
+            // builders use Concat both to stack and to slice-and-pack
+            // (DLRM's interaction concat, XLM-R's pool), so the output may
+            // keep fewer elements than the inputs supply — never more
+            if y.shape.elements() > supply {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "Concat output {:?} ({} elements) exceeds the {} elements its inputs supply",
+                        y.shape.0,
+                        y.shape.elements(),
+                        supply
+                    ),
+                ));
+            }
+        }
+        OpKind::Transpose | OpKind::Softmax => {
+            if !arity_ok(g, n, r, 1) {
+                return;
+            }
+            let (x, y) = (g.tensor(n.inputs[0]), g.tensor(n.outputs[0]));
+            if x.shape.elements() != y.shape.elements() {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "{} must preserve element count: {:?} -> {:?}",
+                        n.kind.table_name(),
+                        x.shape.0,
+                        y.shape.0
+                    ),
+                ));
+            }
+            if x.dtype != y.dtype {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!(
+                        "{} must preserve dtype: {} -> {}",
+                        n.kind.table_name(),
+                        x.dtype.name(),
+                        y.dtype.name()
+                    ),
+                ));
+            }
+        }
+        OpKind::Tile => {
+            if !arity_ok(g, n, r, 1) {
+                return;
+            }
+            let (x, y) = (g.tensor(n.inputs[0]), g.tensor(n.outputs[0]));
+            let (xe, ye) = (x.shape.elements(), y.shape.elements());
+            if xe == 0 {
+                return; // zero-dim already reported
+            }
+            if ye < xe || ye % xe != 0 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("Tile output {:?} is not a whole multiple of input {:?}", y.shape.0, x.shape.0),
+                ));
+            }
+            if x.dtype != y.dtype {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("Tile must preserve dtype: {} -> {}", x.dtype.name(), y.dtype.name()),
+                ));
+            }
+        }
+        OpKind::Quantize => {
+            if !arity_ok(g, n, r, 1) {
+                return;
+            }
+            let (x, y) = (g.tensor(n.inputs[0]), g.tensor(n.outputs[0]));
+            let want = x.shape.0.clone();
+            expect_shape(g, n, r, n.outputs[0], &want);
+            if !is_float(x.dtype) || !is_int(y.dtype) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("Quantize must map float -> int8/int4, got {} -> {}", x.dtype.name(), y.dtype.name()),
+                ));
+            }
+        }
+        OpKind::Dequantize => {
+            if !arity_ok(g, n, r, 1) {
+                return;
+            }
+            let (x, y) = (g.tensor(n.inputs[0]), g.tensor(n.outputs[0]));
+            let want = x.shape.0.clone();
+            expect_shape(g, n, r, n.outputs[0], &want);
+            if !is_int(x.dtype) || !is_float(y.dtype) {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("Dequantize must map int8/int4 -> float, got {} -> {}", x.dtype.name(), y.dtype.name()),
+                ));
+            }
+        }
+        OpKind::ConvertTo => {
+            if !arity_ok(g, n, r, 1) {
+                return;
+            }
+            let x = g.tensor(n.inputs[0]);
+            let want = x.shape.0.clone();
+            expect_shape(g, n, r, n.outputs[0], &want);
+        }
+        OpKind::AvgPool { .. } | OpKind::MaxPool { .. } => {
+            if !arity_ok(g, n, r, 1) {
+                return;
+            }
+            let (x, y) = (g.tensor(n.inputs[0]), g.tensor(n.outputs[0]));
+            let rank = x.shape.rank();
+            if !(rank == 4 || rank == 5) || y.shape.rank() != rank {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "pool expects rank-4 (NHWC) or rank-5 (NFHWC) in and out, got {:?} -> {:?}",
+                        x.shape.0, y.shape.0
+                    ),
+                ));
+                return;
+            }
+            // batch (and frames, rank-5) and channels pass through; pooled
+            // spatial dims shrink or stay (windows may overlap, so `<=`)
+            let fixed: &[usize] = if rank == 4 { &[0, 3] } else { &[0, 1, 4] };
+            for &d in fixed {
+                if y.shape.dim(d) != x.shape.dim(d) {
+                    r.push(diag(
+                        g,
+                        n,
+                        RuleId::ShapeMismatch,
+                        format!("pool must preserve dim {d}: {:?} -> {:?}", x.shape.0, y.shape.0),
+                    ));
+                }
+            }
+            let spatial: &[usize] = if rank == 4 { &[1, 2] } else { &[2, 3] };
+            for &d in spatial {
+                if y.shape.dim(d) > x.shape.dim(d) {
+                    r.push(diag(
+                        g,
+                        n,
+                        RuleId::ShapeMismatch,
+                        format!("pooled spatial dim {d} grows: {:?} -> {:?}", x.shape.0, y.shape.0),
+                    ));
+                }
+            }
+            if x.dtype != y.dtype {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("pool must preserve dtype: {} -> {}", x.dtype.name(), y.dtype.name()),
+                ));
+            }
+        }
+        OpKind::AdaptiveAvgPool { .. } => {
+            if !arity_ok(g, n, r, 1) {
+                return;
+            }
+            let x = g.tensor(n.inputs[0]);
+            if x.shape.rank() < 2 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("adaptive pool needs a batched channels-last input, got {:?}", x.shape.0),
+                ));
+                return;
+            }
+            // global pool to [batch, channels]
+            let want = [x.shape.dim(0), x.shape.dim(x.shape.rank() - 1)];
+            expect_shape(g, n, r, n.outputs[0], &want);
+            let y = g.tensor(n.outputs[0]);
+            if x.dtype != y.dtype {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("pool must preserve dtype: {} -> {}", x.dtype.name(), y.dtype.name()),
+                ));
+            }
+        }
+        OpKind::LayerNorm => {
+            if !arity_ok(g, n, r, 2) {
+                return;
+            }
+            let (x, gain) = (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]));
+            if x.shape.rank() < 1 {
+                return;
+            }
+            let d = x.shape.dim(x.shape.rank() - 1);
+            // gain packs scale+shift: 2 * d_model parameters
+            if gain.shape.elements() != 2 * d {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!(
+                        "LayerNorm gain '{}' has {} params, expected 2 x {d} (scale + shift)",
+                        gain.name,
+                        gain.shape.elements()
+                    ),
+                ));
+            }
+            let want = x.shape.0.clone();
+            expect_shape(g, n, r, n.outputs[0], &want);
+            let y = g.tensor(n.outputs[0]);
+            if y.dtype != x.dtype {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("LayerNorm output dtype {} disagrees with input {}", y.dtype.name(), x.dtype.name()),
+                ));
+            }
+        }
+        OpKind::Gather => {
+            if !arity_ok(g, n, r, 2) {
+                return;
+            }
+            let (emb, ids) = (g.tensor(n.inputs[0]), g.tensor(n.inputs[1]));
+            if emb.shape.rank() != 2 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::ShapeMismatch,
+                    format!("Gather table '{}' must be rank-2 (vocab, dim), got {:?}", emb.name, emb.shape.0),
+                ));
+                return;
+            }
+            if ids.dtype != DType::I32 {
+                r.push(diag(
+                    g,
+                    n,
+                    RuleId::DtypeMismatch,
+                    format!("Gather ids '{}' must be int32, got {}", ids.name, ids.dtype.name()),
+                ));
+            }
+            expect_shape(g, n, r, n.outputs[0], &[ids.shape.elements(), emb.shape.dim(1)]);
+            expect_float_out(g, n, r, n.outputs[0]);
+        }
+        OpKind::Relu | OpKind::Gelu | OpKind::Swish | OpKind::Sigmoid | OpKind::BatchNorm => {
+            same_shape_unary(g, n, r);
+        }
+        // host ops handled by the early return; kept for exhaustiveness
+        OpKind::RoiAlign | OpKind::NonMaxSuppression => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    fn fc_graph() -> Graph {
+        let mut g = Graph::new("lint-fc");
+        let x = g.add_tensor("x", Shape::new(&[4, 16]), DType::F32, TensorKind::Input);
+        let w = g.add_tensor("w", Shape::new(&[8, 16]), DType::F16, TensorKind::Weight);
+        let b = g.add_tensor("b", Shape::new(&[8]), DType::F32, TensorKind::Weight);
+        let y = g.add_tensor("y", Shape::new(&[4, 8]), DType::F32, TensorKind::Output);
+        g.add_node("fc", OpKind::Fc, vec![x, w, b], vec![y]);
+        g
+    }
+
+    #[test]
+    fn clean_fc_passes() {
+        let r = lint_graph(&fc_graph());
+        assert!(r.is_empty(), "unexpected diagnostics:\n{}", r.render());
+    }
+
+    #[test]
+    fn fc_output_shape_mismatch_names_the_node() {
+        let mut g = fc_graph();
+        g.tensors[3].shape = Shape::new(&[4, 9]);
+        let r = lint_graph(&g);
+        assert!(r.has_errors());
+        let hits = r.by_rule(RuleId::ShapeMismatch);
+        assert!(!hits.is_empty());
+        match &hits[0].span {
+            Span::Node { node, name, .. } => {
+                assert_eq!(*node, 0);
+                assert_eq!(name, "fc");
+            }
+            other => panic!("expected node span, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fc_reduction_dim_mismatch_caught() {
+        let mut g = fc_graph();
+        g.tensors[1].shape = Shape::new(&[8, 12]); // w k-dim disagrees with x
+        let r = lint_graph(&g);
+        assert_eq!(r.by_rule(RuleId::ShapeMismatch).len(), 1);
+    }
+
+    #[test]
+    fn quantized_fc_requires_int8_weight() {
+        let mut g = fc_graph();
+        g.nodes[0].kind = OpKind::QuantizedFc;
+        let r = lint_graph(&g);
+        assert!(!r.by_rule(RuleId::DtypeMismatch).is_empty(), "{}", r.render());
+        g.tensors[1].dtype = DType::I8;
+        assert!(lint_graph(&g).is_empty());
+    }
+
+    #[test]
+    fn arity_mismatch_caught() {
+        let mut g = fc_graph();
+        g.nodes[0].inputs.pop();
+        let r = lint_graph(&g);
+        assert_eq!(r.by_rule(RuleId::ArityMismatch).len(), 1);
+    }
+
+    #[test]
+    fn dangling_id_caught_without_panicking() {
+        let mut g = fc_graph();
+        g.nodes[0].inputs[0] = 99;
+        let r = lint_graph(&g);
+        let hits = r.by_rule(RuleId::StructuralInvalid);
+        assert_eq!(hits.len(), 1);
+        assert!(matches!(hits[0].span, Span::Node { node: 0, .. }));
+    }
+
+    #[test]
+    fn dead_activation_and_unreachable_node_warned() {
+        let mut g = fc_graph();
+        let y0 = 3; // the fc output feeds a side branch that goes nowhere
+        let dead = g.add_tensor("dead", Shape::new(&[4, 8]), DType::F32, TensorKind::Activation);
+        g.add_node("dead_relu", OpKind::Relu, vec![y0], vec![dead]);
+        let r = lint_graph(&g);
+        assert!(!r.has_errors(), "{}", r.render());
+        assert_eq!(r.by_rule(RuleId::UnconsumedIntermediate).len(), 1);
+        assert_eq!(r.by_rule(RuleId::UnreachableNode).len(), 1);
+    }
+
+    #[test]
+    fn zero_dim_tensor_is_an_error() {
+        let mut g = fc_graph();
+        g.tensors[0].shape = Shape::new(&[0, 16]);
+        assert!(lint_graph(&g).has_errors());
+    }
+
+    #[test]
+    fn all_builtin_models_infer_clean() {
+        for id in crate::graph::models::ModelId::ALL {
+            let r = lint_graph(&id.build());
+            assert!(r.is_empty(), "{}: \n{}", id.name(), r.render());
+        }
+    }
+
+    // ---- property tests ---------------------------------------------------
+
+    use crate::util::prop::{check, Gen as PropGen};
+    use crate::util::rng::Rng;
+
+    /// A random FC chain plus a corruption plan: which node to damage
+    /// (`target`) and how (`mode` 0 = output dim, 1 = weight dtype,
+    /// 2 = dangling input id).
+    #[derive(Clone, Debug)]
+    struct ChainSpec {
+        batch: usize,
+        widths: Vec<usize>,
+        target: usize,
+        mode: u64,
+    }
+
+    struct ChainGen;
+    impl PropGen for ChainGen {
+        type Value = ChainSpec;
+        fn generate(&self, rng: &mut Rng) -> ChainSpec {
+            let depth = rng.range(1, 5) as usize;
+            let widths = (0..=depth).map(|_| rng.range(1, 32) as usize).collect();
+            ChainSpec {
+                batch: rng.range(1, 8) as usize,
+                widths,
+                target: rng.below(depth as u64) as usize,
+                mode: rng.below(3),
+            }
+        }
+    }
+
+    /// Build the chain; returns the graph plus, per layer, its (node id,
+    /// weight tensor id, output tensor id).
+    fn build_chain(spec: &ChainSpec) -> (Graph, Vec<(usize, usize, usize)>) {
+        let mut g = Graph::new("prop-chain");
+        let mut x =
+            g.add_tensor("x", Shape::new(&[spec.batch, spec.widths[0]]), DType::F32, TensorKind::Input);
+        let mut layers = Vec::new();
+        let depth = spec.widths.len() - 1;
+        for i in 0..depth {
+            let (fan_in, fan_out) = (spec.widths[i], spec.widths[i + 1]);
+            let w = g.add_tensor(
+                &format!("w{i}"),
+                Shape::new(&[fan_out, fan_in]),
+                DType::F16,
+                TensorKind::Weight,
+            );
+            let b = g.add_tensor(&format!("b{i}"), Shape::new(&[fan_out]), DType::F32, TensorKind::Weight);
+            let kind =
+                if i + 1 == depth { TensorKind::Output } else { TensorKind::Activation };
+            let y = g.add_tensor(&format!("y{i}"), Shape::new(&[spec.batch, fan_out]), DType::F32, kind);
+            let n = g.add_node(&format!("fc{i}"), OpKind::Fc, vec![x, w, b], vec![y]);
+            layers.push((n, w, y));
+            x = y;
+        }
+        (g, layers)
+    }
+
+    #[test]
+    fn prop_random_valid_chains_lint_clean() {
+        check("valid chains lint clean", 40, &ChainGen, |spec| {
+            let (g, _) = build_chain(spec);
+            let r = lint_graph(&g);
+            if r.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("clean graph flagged:\n{}", r.render()))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_single_field_corruptions_always_caught() {
+        check("corruptions caught and attributed", 60, &ChainGen, |spec| {
+            let (mut g, layers) = build_chain(spec);
+            let (node, w, y) = layers[spec.target];
+            match spec.mode {
+                0 => g.tensors[y].shape.0[0] += 1, // declared output dim drifts
+                1 => g.tensors[w].dtype = DType::I32, // illegal weight dtype
+                _ => g.nodes[node].inputs[0] = g.tensors.len() + 7, // dangling id
+            }
+            let r = lint_graph(&g);
+            if !r.has_errors() {
+                return Err(format!("corruption mode {} not caught", spec.mode));
+            }
+            let named = r.diagnostics.iter().any(
+                |d| matches!(&d.span, Span::Node { node: n, .. } if *n == node),
+            );
+            if named {
+                Ok(())
+            } else {
+                Err(format!(
+                    "offending node {node} not named (mode {}):\n{}",
+                    spec.mode,
+                    r.render()
+                ))
+            }
+        });
+    }
+}

@@ -56,7 +56,7 @@ pub fn sweep_cores(
     }
     let best = points
         .iter()
-        .min_by(|a, b| a.stage_time_s.partial_cmp(&b.stage_time_s).unwrap())
+        .min_by(|a, b| a.stage_time_s.total_cmp(&b.stage_time_s))
         .cloned()
         .expect("non-empty sweep");
     Allocation { points, best }

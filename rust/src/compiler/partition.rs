@@ -175,7 +175,9 @@ pub fn partition_recsys(g: &Graph, cfg: &CompilerConfig, node: &NodeSpec) -> Res
     let mut card_load = vec![0f64; sls_cards];
     let mut card_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); sls_cards];
     if cfg.sls_length_aware {
-        items.sort_by(|a, b| b.load.partial_cmp(&a.load).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a NaN load (degenerate
+        // profile, e.g. avg_lookups = 0.0/0.0) must not panic the compiler
+        items.sort_by(|a, b| b.load.total_cmp(&a.load));
         for it in &items {
             let mut best: Option<usize> = None;
             for c in 0..sls_cards {
@@ -394,10 +396,8 @@ mod tests {
             }
         }
         let node = default_node();
-        let mut aware = CompilerConfig::default();
-        aware.sls_length_aware = true;
-        let mut naive = CompilerConfig::default();
-        naive.sls_length_aware = false;
+        let aware = CompilerConfig { sls_length_aware: true, ..CompilerConfig::default() };
+        let naive = CompilerConfig { sls_length_aware: false, ..CompilerConfig::default() };
 
         let imbalance = |plan: &Plan| {
             let loads: Vec<f64> = plan.sls_partitions().map(|p| p.lookup_load).collect();
@@ -475,8 +475,7 @@ mod tests {
             spec.num_tables = tables;
             spec.rows_per_table = rows;
             let g = dlrm(&spec, 32);
-            let mut cfg = CompilerConfig::default();
-            cfg.sls_cards = sls_cards;
+            let cfg = CompilerConfig { sls_cards, ..CompilerConfig::default() };
             let node = NodeSpec::default();
             match partition_recsys(&g, &cfg, &node) {
                 Ok(plan) => plan.check(&g, &node).map_err(|e| e.to_string()),
@@ -487,14 +486,36 @@ mod tests {
         });
     }
 
+    /// Regression: a degenerate lookup profile (zero or NaN `avg_lookups`
+    /// from an empty profiling window) must not panic the length-aware
+    /// sort — `total_cmp` gives NaN a total order where
+    /// `partial_cmp().unwrap()` aborted.
+    #[test]
+    fn degenerate_lookup_loads_do_not_panic_the_sort() {
+        let mut spec = DlrmSpec::base();
+        spec.num_tables = 8;
+        spec.rows_per_table = 1_000_000;
+        let mut g = dlrm(&spec, 32);
+        for (i, n) in g.nodes.iter_mut().enumerate() {
+            if let OpKind::SparseLengthsSum { ref mut avg_lookups } = n.kind {
+                *avg_lookups = if i % 2 == 0 { f64::NAN } else { 0.0 };
+            }
+        }
+        let cfg = CompilerConfig::default();
+        let plan = partition_recsys(&g, &cfg, &default_node()).unwrap();
+        plan.check(&g, &default_node()).unwrap();
+        // every SLS node still placed exactly once despite the junk loads
+        let placed: usize = plan.sls_partitions().map(|p| p.nodes.len()).sum();
+        assert_eq!(placed, 8);
+    }
+
     /// Property: total SLS weight bytes are preserved by partitioning.
     #[test]
     fn prop_no_weight_lost() {
         let g = ModelId::RecsysBase.build();
         let node = default_node();
         check("weights preserved", 8, &UsizeIn { lo: 1, hi: 5 }, |&cards| {
-            let mut cfg = CompilerConfig::default();
-            cfg.sls_cards = cards;
+            let cfg = CompilerConfig { sls_cards: cards, ..CompilerConfig::default() };
             let plan = match partition_recsys(&g, &cfg, &node) {
                 Ok(p) => p,
                 Err(_) => return Ok(()),

@@ -131,13 +131,23 @@ pub struct Config {
 impl Config {
     /// Load from a JSON file; missing keys keep defaults (partial configs).
     pub fn from_file(path: &Path) -> Result<Config> {
+        Config::from_file_with(path, true)
+    }
+
+    /// [`Config::from_file`] with the static-analysis gate switchable
+    /// (`lint: false` is the CLI's `--no-lint` escape hatch).
+    pub fn from_file_with(path: &Path, lint: bool) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
         let json = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
-        Config::from_json(&json)
+        Config::from_json_with(&json, lint)
     }
 
     pub fn from_json(j: &Json) -> Result<Config> {
+        Config::from_json_with(j, true)
+    }
+
+    pub fn from_json_with(j: &Json, lint: bool) -> Result<Config> {
         let mut c = Config::default();
         if let Some(n) = j.get("node") {
             apply_node(&mut c.node, n)?;
@@ -155,6 +165,9 @@ impl Config {
             c.cluster = Some(parse_cluster(x, &c.node)?);
         }
         c.validate()?;
+        if lint {
+            crate::analysis::lint_config(&c).check("config")?;
+        }
         Ok(c)
     }
 

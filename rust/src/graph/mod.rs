@@ -70,8 +70,14 @@ impl Shape {
         self.0.len()
     }
 
+    /// Dimension `i`. Panics with the full shape in the message on an
+    /// out-of-range axis, so a bad rank assumption names itself instead of
+    /// surfacing as a bare slice index.
     pub fn dim(&self, i: usize) -> usize {
-        self.0[i]
+        match self.0.get(i) {
+            Some(&d) => d,
+            None => panic!("shape dim {i} out of range for rank-{} shape {:?}", self.rank(), self.0),
+        }
     }
 }
 
@@ -143,12 +149,30 @@ impl Graph {
         id
     }
 
+    /// Tensor by id. Panics with the graph name and id on a dangling
+    /// reference — the analyzer's `structural-invalid` lint catches these
+    /// without panicking; this message is for code that indexes directly.
     pub fn tensor(&self, id: TensorId) -> &Tensor {
-        &self.tensors[id]
+        match self.tensors.get(id) {
+            Some(t) => t,
+            None => panic!(
+                "tensor id {id} out of range for graph '{}' ({} tensors)",
+                self.name,
+                self.tensors.len()
+            ),
+        }
     }
 
+    /// Node by id. Panics with the graph name and id on an out-of-range id.
     pub fn node(&self, id: NodeId) -> &Node {
-        &self.nodes[id]
+        match self.nodes.get(id) {
+            Some(n) => n,
+            None => panic!(
+                "node id {id} out of range for graph '{}' ({} nodes)",
+                self.name,
+                self.nodes.len()
+            ),
+        }
     }
 
     /// The node producing each tensor (None for graph inputs/weights).
@@ -362,6 +386,26 @@ mod tests {
         assert_eq!(g.param_count(), 16 * 8 + 16);
         assert!(g.total_flops() > 0.0);
         assert!(g.arithmetic_intensity() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "tensor id 99 out of range for graph 'tiny'")]
+    fn tensor_access_panics_with_context() {
+        let g = tiny();
+        let _ = g.tensor(99);
+    }
+
+    #[test]
+    #[should_panic(expected = "node id 7 out of range for graph 'tiny'")]
+    fn node_access_panics_with_context() {
+        let g = tiny();
+        let _ = g.node(7);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape dim 3 out of range for rank-2 shape")]
+    fn shape_dim_panics_with_context() {
+        let _ = Shape::new(&[4, 8]).dim(3);
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //!   simulator ([`sim`] + [`platform`]), a runtime with pluggable execution
 //!   backends ([`runtime`] — a hermetic pure-Rust reference interpreter by
 //!   default, PJRT execution of the AOT artifacts behind `--features
-//!   pjrt`), quantization/reference numerics ([`numerics`]), and the
-//!   serving stack ([`serving`]).
+//!   pjrt`), quantization/reference numerics ([`numerics`]), the
+//!   serving stack ([`serving`]), and a static analyzer ([`analysis`])
+//!   that proves shape/dtype consistency and memory fit and vets
+//!   deployment configs before anything is prepared or simulated.
 //!
 //! Python is never on the request path — and with the builtin manifest
 //! ([`runtime::builtin`]) it is not needed at build time either: the
@@ -24,6 +26,7 @@
 //! this repo builds) and the experiment index mapping every paper table and
 //! figure to a bench target.
 
+pub mod analysis;
 pub mod capacity;
 pub mod compiler;
 pub mod config;

@@ -22,6 +22,14 @@
 //!   des               discrete-event core smoke: static vs queue-triggered
 //!                     dynamic batching on one seeded trace, with
 //!                     determinism and conservation checks (sim backend)
+//!   lint              static analysis, nothing prepared or simulated:
+//!                     per-op shape/dtype inference over the model graphs,
+//!                     a memory-fit proof against the node spec, and
+//!                     deployment-config rules (`--model dlrm` or
+//!                     `--all-models`, `--sla-ms/--qps/--mix` for the
+//!                     deployment layer, `--json out.json` for the BENCH
+//!                     schema). The same analyzer gates `--config` loading
+//!                     and every `prepare`; `--no-lint` bypasses the gates
 //!
 //! `fleet`, `cluster` and `des` all drive their tiers through the unified
 //! [`Simulation`] builder; policy names resolve through
@@ -63,9 +71,10 @@ fn main() {
         Some("capacity") => cmd_capacity(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("des") => cmd_des(&args),
+        Some("lint") => cmd_lint(&args),
         Some("info") | None => cmd_info(&args),
         Some(other) => Err(err!(
-            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster, des)"
+            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster, des, lint)"
         )),
     };
     if let Err(e) = result {
@@ -76,7 +85,8 @@ fn main() {
 
 fn load_config(args: &Args) -> Result<Config> {
     match args.get("config") {
-        Some(path) => Config::from_file(Path::new(path)),
+        // the static analyzer vets configs at load time; --no-lint bypasses
+        Some(path) => Config::from_file_with(Path::new(path), !args.flag("no-lint")),
         None => Ok(Config::default()),
     }
 }
@@ -182,7 +192,10 @@ fn cmd_compile_report(args: &Args) -> Result<()> {
 /// error with the valid list.
 fn engine(args: &Args) -> Result<Arc<Engine>> {
     let dir = args.get_or("artifacts", "artifacts");
-    let eng = Engine::auto_with(Path::new(dir), args.get("backend"))?;
+    let mut eng = Engine::auto_with(Path::new(dir), args.get("backend"))?;
+    if args.flag("no-lint") {
+        eng.set_lint(false);
+    }
     let manifest_dir = eng.manifest().dir.display().to_string();
     eprintln!(
         "[fbia] backend: {} ({} devices, {} clock, manifest: {manifest_dir})",
@@ -329,7 +342,11 @@ fn cmd_validate(args: &Args) -> Result<()> {
 /// manifest resolution (AOT artifacts when present, builtin otherwise).
 fn sim_engine(args: &Args, cfg: &Config) -> Result<Arc<Engine>> {
     let dir = Path::new(args.get_or("artifacts", "artifacts"));
-    Ok(Arc::new(Engine::auto_with_backend(dir, Arc::new(SimBackend::new(cfg.clone())))?))
+    let mut eng = Engine::auto_with_backend(dir, Arc::new(SimBackend::new(cfg.clone())))?;
+    if args.flag("no-lint") {
+        eng.set_lint(false);
+    }
+    Ok(Arc::new(eng))
 }
 
 /// FleetConfig from the shared CLI knobs; policy-shaped knobs default to
@@ -1003,6 +1020,75 @@ fn cmd_des(args: &Args) -> Result<()> {
             .with("static_p99_ms", Json::num(stat.p99_ms))
             .with("static_shed", Json::num(stat.shed as f64))
             .write(path)?;
+    }
+    Ok(())
+}
+
+/// `fbia lint`: the static analyzer standalone — nothing is prepared,
+/// executed or simulated unless a rule needs the analytic cost model
+/// (`--sla-ms` floors). Lints every builtin model (or `--model <id>`)
+/// through shape/dtype inference and the memory-fit proof, then the
+/// deployment layer from the shared fleet knobs. Exits nonzero on any
+/// Error-severity diagnostic, so CI can gate on it; `--json` emits the
+/// shared BENCH schema with a `zero_diagnostics` acceptance flag.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let models: Vec<ModelId> = match args.get("model") {
+        Some(m) if !args.flag("all-models") => vec![parse_model(m)?],
+        _ => ModelId::ALL.to_vec(),
+    };
+    let mut total = fbia::analysis::Report::new();
+    let mut t = Table::new(&["model", "nodes", "errors", "warnings"]);
+    let mut model_rows: Vec<Json> = Vec::new();
+    for id in &models {
+        let g = id.build();
+        let r = fbia::analysis::lint_built_graph(&g, &cfg);
+        t.row(&[
+            id.name().to_string(),
+            g.nodes.len().to_string(),
+            r.errors().to_string(),
+            r.warnings().to_string(),
+        ]);
+        model_rows.push(Json::obj(vec![
+            ("model", Json::str(id.name())),
+            ("errors", Json::num(r.errors() as f64)),
+            ("warnings", Json::num(r.warnings() as f64)),
+        ]));
+        total.merge(r);
+    }
+    t.print();
+
+    // deployment layer: the fleet knobs against the (possibly --config
+    // overridden) node/cluster; --qps adds the NIC-bandwidth rule
+    let fcfg = fleet_config(args, &cfg)?;
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
+    let qps = args
+        .get("qps")
+        .map(|v| v.parse::<f64>().map_err(|_| err!("--qps must be a number")))
+        .transpose()?;
+    total.merge(fcfg.lint(&cfg, mix, qps)?);
+
+    if total.is_empty() {
+        println!(
+            "\nlint: {} model(s) + deployment config clean ({} rules)",
+            models.len(),
+            fbia::analysis::RuleId::ALL.len()
+        );
+    } else {
+        println!("\n{}", total.render().trim_end());
+        println!("\nlint: {} error(s), {} warning(s)", total.errors(), total.warnings());
+    }
+
+    if let Some(path) = args.get("json") {
+        BenchReport::new("lint_smoke", "static", "none")
+            .accept("zero_diagnostics", total.is_empty())
+            .accept("no_errors", !total.has_errors())
+            .with("models", Json::arr(model_rows))
+            .with("diagnostics", total.to_json())
+            .write(path)?;
+    }
+    if total.has_errors() {
+        bail!("lint found {} error(s)", total.errors());
     }
     Ok(())
 }

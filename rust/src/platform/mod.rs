@@ -252,8 +252,7 @@ mod tests {
         assert!((c.total_nic_bw_bits() - 3.0 * 50e9).abs() < 1e-3);
         assert!((c.total_tops_int8() - 3.0 * NodeSpec::default().total_tops_int8()).abs() < 1e-9);
         // heterogeneous tiers aggregate per node
-        let mut small = NodeSpec::default();
-        small.cards = 2;
+        let mut small = NodeSpec { cards: 2, ..NodeSpec::default() };
         small.nic.bw_bits = 25e9;
         let mixed = ClusterSpec { nodes: vec![NodeSpec::default(), small], headroom: 0 };
         assert!((mixed.total_nic_bw_bits() - 75e9).abs() < 1e-3);

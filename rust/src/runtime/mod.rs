@@ -110,6 +110,9 @@ pub struct Engine {
     manifest: Arc<Manifest>,
     backend: Arc<dyn Backend>,
     node: device::Node,
+    /// Run the static analyzer over every artifact before `prepare`
+    /// (on by default; the CLI's `--no-lint` switches it off).
+    lint: bool,
 }
 
 impl Engine {
@@ -183,7 +186,13 @@ impl Engine {
     /// paper's default six-card node otherwise.
     pub fn with_backend(manifest: Manifest, backend: Arc<dyn Backend>) -> Engine {
         let node = device::Node::new(backend.node_spec().unwrap_or_default());
-        Engine { manifest: Arc::new(manifest), backend, node }
+        Engine { manifest: Arc::new(manifest), backend, node, lint: true }
+    }
+
+    /// Switch the pre-`prepare` static-analysis gate on or off (`fbia
+    /// ... --no-lint` turns it off; it is on by default).
+    pub fn set_lint(&mut self, on: bool) {
+        self.lint = on;
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -243,6 +252,12 @@ impl Engine {
                 "device {device} out of range for a {}-card node",
                 self.node.len()
             );
+        }
+        // static-analysis gate: refuse artifacts that cannot fit the card
+        // before any weights move (escape hatch: `--no-lint`)
+        if self.lint {
+            crate::analysis::lint_artifact(&art, &self.node.device(device).card, device)
+                .check(&format!("prepare '{}'", art.name))?;
         }
         // weights must cover every non-Input spec, in order
         let expected: Vec<&str> = art

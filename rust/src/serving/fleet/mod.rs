@@ -186,6 +186,25 @@ pub struct FleetConfig {
     pub dynamic_batch: Option<DynamicBatch>,
 }
 
+impl FleetConfig {
+    /// Vet this fleet plan statically before any DES run: SLA budget vs
+    /// the modeled per-family floor, NIC line rate vs the wire bytes
+    /// `offered_qps` implies, and structural mistakes (zero replicas,
+    /// zero queue bounds, batch windows that never open). Convenience
+    /// wrapper over [`crate::analysis::lint_deployment`].
+    pub fn lint(
+        &self,
+        cfg: &crate::config::Config,
+        mix: FamilyMix,
+        offered_qps: Option<f64>,
+    ) -> Result<crate::analysis::Report> {
+        crate::analysis::lint_deployment(
+            cfg,
+            &crate::analysis::DeploySpec { fleet: self, mix, offered_qps },
+        )
+    }
+}
+
 impl Default for FleetConfig {
     fn default() -> FleetConfig {
         FleetConfig {

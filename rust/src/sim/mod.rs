@@ -249,7 +249,7 @@ pub fn op_breakdown(compiled: &CompiledModel) -> Vec<(String, f64)> {
     }
     let mut rows: Vec<(String, f64)> =
         time.into_iter().map(|(k, v)| (k.to_string(), v / total)).collect();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     rows
 }
 

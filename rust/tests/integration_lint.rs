@@ -1,0 +1,177 @@
+//! Integration: the static analyzer end to end — the acceptance criteria
+//! the PR gates on. Every builtin model and the default deployment config
+//! must lint clean; a DLRM declared against a too-small card spec and an
+//! SLA budget below the modeled floor must both be *rejected by lint*,
+//! before any prepare/simulation runs; the `Engine::prepare` and config
+//! loading gates refuse Error findings unless `--no-lint` switches them
+//! off.
+
+use fbia::analysis::{self, RuleId, Span};
+use fbia::config::Config;
+use fbia::graph::models::ModelId;
+use fbia::platform::CardSpec;
+use fbia::runtime::artifact::{ArtDType, Artifact, InputKind, InputSpec, OutputSpec};
+use fbia::runtime::Engine;
+use fbia::serving::fleet::{FamilyMix, FleetConfig};
+use fbia::util::json::Json;
+use std::path::PathBuf;
+
+#[test]
+fn every_builtin_model_lints_clean_on_the_default_node() {
+    let cfg = Config::default();
+    for id in ModelId::ALL {
+        let r = analysis::lint_model(id, &cfg);
+        assert!(r.is_empty(), "{} is not lint-clean:\n{}", id.name(), r.render());
+    }
+}
+
+#[test]
+fn default_deployment_lints_clean() {
+    let cfg = Config::default();
+    let r = FleetConfig::default()
+        .lint(&cfg, FamilyMix::default(), None)
+        .expect("deployment lint");
+    assert!(r.is_empty(), "{}", r.render());
+}
+
+#[test]
+fn dlrm_on_a_too_small_card_is_rejected_before_prepare() {
+    // the acceptance case: a model that cannot fit the node spec becomes a
+    // named lint error, not a runtime surprise
+    let mut cfg = Config::default();
+    cfg.node.card.lpddr_bytes = 1 << 30; // 1 GiB cards: no DLRM table fits
+    let r = analysis::lint_model(ModelId::RecsysComplex, &cfg);
+    assert!(r.has_errors(), "expected a fit failure:\n{}", r.render());
+    let hits = r.by_rule(RuleId::PartitionFailed);
+    assert!(!hits.is_empty(), "{}", r.render());
+    assert!(
+        matches!(&hits[0].span, Span::Model { model } if model.contains("recsys")),
+        "span should name the model: {:?}",
+        hits[0].span
+    );
+}
+
+#[test]
+fn sla_below_modeled_floor_is_rejected_before_any_des_run() {
+    let cfg = Config::default();
+    let fleet = FleetConfig { sla_budget_s: Some(1e-6), ..FleetConfig::default() };
+    let mix = FamilyMix::new(1.0, 0.0, 0.0).unwrap();
+    let r = fleet.lint(&cfg, mix, None).expect("deployment lint");
+    let hits = r.by_rule(RuleId::SlaBelowModeledFloor);
+    assert_eq!(hits.len(), 1, "{}", r.render());
+    assert!(
+        matches!(&hits[0].span, Span::Config { path } if path == "fleet.sla_budget_s"),
+        "span should name the config field: {:?}",
+        hits[0].span
+    );
+    // the gate form used by callers that want a hard stop
+    assert!(r.check("fleet plan").is_err());
+}
+
+#[test]
+fn prepare_gate_refuses_oversized_artifacts_unless_disabled() {
+    let art = Artifact {
+        name: "oversized".into(),
+        file: PathBuf::from("oversized.bin"),
+        model: "oversized".into(),
+        role: "full".into(),
+        batch: 1,
+        seq: None,
+        shard: None,
+        inputs: vec![
+            InputSpec {
+                name: "w".into(),
+                shape: vec![5 << 30, 1], // 20 GiB fp32 > 16 GiB LPDDR
+                dtype: ArtDType::F32,
+                kind: InputKind::Weight,
+            },
+            InputSpec {
+                name: "x".into(),
+                shape: vec![1, 8],
+                dtype: ArtDType::F32,
+                kind: InputKind::Input,
+            },
+        ],
+        outputs: vec![OutputSpec { shape: vec![1, 8], dtype: ArtDType::F32 }],
+    };
+
+    let mut eng = Engine::builtin();
+    let err = eng.prepare_on(art.clone(), Vec::new(), 0).unwrap_err().to_string();
+    assert!(err.contains("lint error"), "gate should fire first: {err}");
+    assert!(err.contains("partition-dram-overflow"), "rule should be named: {err}");
+
+    // --no-lint: the gate steps aside and the normal weight checks take over
+    eng.set_lint(false);
+    let err = eng.prepare_on(art, Vec::new(), 0).unwrap_err().to_string();
+    assert!(err.contains("weight mismatch"), "expected the pre-existing check: {err}");
+}
+
+#[test]
+fn builtin_artifacts_pass_the_prepare_gate() {
+    // with lint on (the default), every builtin artifact's resident bytes
+    // fit the default card — the gate is invisible for correct configs
+    let eng = Engine::builtin();
+    for art in &eng.manifest().artifacts.clone() {
+        let r = analysis::lint_artifact(art, &CardSpec::default(), 0);
+        assert!(r.is_empty(), "{}:\n{}", art.name, r.render());
+    }
+}
+
+#[test]
+fn config_loading_gate_catches_what_validate_misses() {
+    // max_queue == 0 passes Config::validate (it only checks serving knob
+    // positivity elsewhere) but sheds every request — the lint gate stops it
+    let j = Json::parse(r#"{"serving": {"max_queue": 0}}"#).unwrap();
+    let err = Config::from_json(&j).unwrap_err().to_string();
+    assert!(err.contains("queue-bound-zero"), "lint should name the rule: {err}");
+    assert!(err.contains("--no-lint"), "error should advertise the escape hatch: {err}");
+
+    // the escape hatch loads the same JSON untouched
+    let cfg = Config::from_json_with(&j, false).expect("escape hatch");
+    assert_eq!(cfg.serving.max_queue, 0);
+
+    // a default-shaped config passes the gate unchanged
+    let ok = Json::parse(r#"{"serving": {"max_queue": 64}}"#).unwrap();
+    assert_eq!(Config::from_json(&ok).unwrap().serving.max_queue, 64);
+}
+
+#[test]
+fn vendor_mix_override_overflow_names_the_card() {
+    // a heterogeneous node where card 2 is tiny: the per-card DRAM proof
+    // uses card_spec overrides, which Plan::check (base card only) misses
+    let mut cfg = Config::default();
+    cfg.node.card_overrides.push((2, CardSpec { lpddr_bytes: 8 << 20, ..CardSpec::default() }));
+    let r = analysis::lint_model(ModelId::ResNeXt101, &cfg);
+    let hits = r.by_rule(RuleId::PartitionDramOverflow);
+    assert_eq!(hits.len(), 1, "{}", r.render());
+    assert!(
+        matches!(hits[0].span, Span::Partition { card: Some(2), .. }),
+        "span should pin card 2: {:?}",
+        hits[0].span
+    );
+}
+
+#[test]
+fn nic_rule_fires_only_at_infeasible_qps() {
+    let cfg = Config::default();
+    let fleet = FleetConfig::default();
+    let hot = fleet.lint(&cfg, FamilyMix::default(), Some(1e9)).unwrap();
+    assert_eq!(hot.by_rule(RuleId::NicBandwidthInsufficient).len(), 1, "{}", hot.render());
+    let cold = fleet.lint(&cfg, FamilyMix::default(), Some(1.0)).unwrap();
+    assert!(cold.is_empty(), "{}", cold.render());
+}
+
+#[test]
+fn report_json_roundtrips_through_the_shared_parser() {
+    let mut cfg = Config::default();
+    cfg.node.card.lpddr_bytes = 1 << 30;
+    let r = analysis::lint_model(ModelId::RecsysComplex, &cfg);
+    let j = Json::parse(&r.to_json().to_string()).expect("self-emitted JSON parses");
+    assert_eq!(j.get("errors").and_then(Json::as_usize), Some(r.errors()));
+    let items = j.get("items").and_then(Json::as_arr).expect("items array");
+    assert_eq!(items.len(), r.diagnostics.len());
+    assert_eq!(
+        items[0].get("rule").and_then(Json::as_str),
+        Some(RuleId::PartitionFailed.name())
+    );
+}
