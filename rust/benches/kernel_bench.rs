@@ -1,0 +1,270 @@
+//! Bench: raw kernel speed — the cache-blocked reference kernels (fc,
+//! conv2d, sls) at f32 and int8 — plus the zero-allocation property of the
+//! prepared reference serving path, proven with a counting allocator.
+//!
+//!     cargo bench --bench kernel_bench
+//!     cargo bench --bench kernel_bench -- --json BENCH_kernels.json
+//!
+//! The JSON records per-kernel GFLOP/s at both precisions, the int8
+//! speedup, and `zero_alloc_*` acceptance flags: after warmup (arena pools
+//! converged), N steady-state `RefPrepared::run` calls must perform zero
+//! heap allocations.
+
+use fbia::numerics::arena;
+use fbia::numerics::ops_ref;
+use fbia::numerics::quant::quantize_rowwise_int8;
+use fbia::numerics::weights::WeightGen;
+use fbia::numerics::HostTensor;
+use fbia::runtime::{Engine, Precision, PrepareOptions};
+use fbia::serving::WEIGHT_SEED;
+use fbia::util::bench::{bench_with, report, section, BenchReport, BenchResult};
+use fbia::util::cli::Args;
+use fbia::util::json::Json;
+use fbia::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: every heap allocation in the process bumps a counter,
+// so "zero allocations in steady state" is a measured fact, not a claim.
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// One measured kernel: name, shape label, result, and work per call in
+/// floating-point (or int-mac) operations, for the GFLOP/s column.
+struct Kernel {
+    name: &'static str,
+    shape: String,
+    flops: f64,
+    result: BenchResult,
+}
+
+impl Kernel {
+    fn gflops(&self) -> f64 {
+        self.flops / self.result.mean_s.max(1e-12) / 1e9
+    }
+}
+
+fn main() {
+    let args = Args::from_env(false);
+
+    // deterministic inputs; the RNG seed is fixed so runs are comparable
+    let mut rng = Rng::new(7);
+    let mut kernels: Vec<Kernel> = Vec::new();
+
+    // -- FC: the DLRM/XLM-R MLP shape (m = batch rows, k = n = d_model) ----
+    let (m, k, n) = (32usize, 256usize, 256usize);
+    let mut x = vec![0f32; m * k];
+    let mut w = vec![0f32; n * k];
+    rng.fill_normal_f32(&mut x, 1.0);
+    rng.fill_normal_f32(&mut w, 0.05);
+    let b = vec![0.01f32; n];
+    let mut y = vec![0f32; m * n];
+    let fc_flops = 2.0 * (m * k * n) as f64;
+
+    section("FC (blocked, single thread)");
+    let r = bench_with("fc f32", 3, 0.3, &mut || {
+        ops_ref::fc_into(&x, &w, &b, m, k, n, &mut y);
+        std::hint::black_box(&y);
+    });
+    report(&r);
+    kernels.push(Kernel { name: "fc_f32", shape: format!("{m}x{k}x{n}"), flops: fc_flops, result: r });
+
+    let q = quantize_rowwise_int8(&w, n, k);
+    let mut xq = Vec::new();
+    let r = bench_with("fc int8 (quant_fc)", 3, 0.3, &mut || {
+        ops_ref::quant_fc_into(&x, &q.q, &q.scale, &q.zp, &b, m, k, n, &mut xq, &mut y);
+        std::hint::black_box(&y);
+    });
+    report(&r);
+    kernels.push(Kernel { name: "fc_int8", shape: format!("{m}x{k}x{n}"), flops: fc_flops, result: r });
+
+    // -- conv2d: a mid-trunk CV block shape --------------------------------
+    let (cn, ch, cw, cin, kh, kw, cout) = (1usize, 32usize, 32usize, 32usize, 3usize, 3usize, 32usize);
+    let mut cx = vec![0f32; cn * ch * cw * cin];
+    let mut cwt = vec![0f32; cout * kh * kw * cin];
+    rng.fill_normal_f32(&mut cx, 1.0);
+    rng.fill_normal_f32(&mut cwt, 0.05);
+    let cb = vec![0.01f32; cout];
+    let mut cy = vec![0f32; cn * ch * cw * cout];
+    let conv_flops = 2.0 * (cn * ch * cw * cout * kh * kw * cin) as f64;
+
+    section("conv2d (channel-tiled, single thread)");
+    let r = bench_with("conv2d f32", 3, 0.3, &mut || {
+        ops_ref::conv2d_into(&cx, &cwt, &cb, cn, ch, cw, cin, kh, kw, cout, 1, 1, &mut cy);
+        std::hint::black_box(&cy);
+    });
+    report(&r);
+    kernels.push(Kernel {
+        name: "conv2d_f32",
+        shape: format!("{cn}x{ch}x{cw}x{cin}->{cout} {kh}x{kw}"),
+        flops: conv_flops,
+        result: r,
+    });
+
+    // -- SLS: the DLRM embedding shape (memory-bound; int8 wins on bytes) --
+    let (rows, dim, batch, lookups) = (25_000usize, 64usize, 32usize, 32usize);
+    let mut table = vec![0f32; rows * dim];
+    rng.fill_normal_f32(&mut table, 0.1);
+    let indices: Vec<i32> =
+        (0..batch * lookups).map(|_| rng.below(rows as u64) as i32).collect();
+    let lengths = vec![lookups as i32; batch];
+    let mut pooled = vec![0f32; batch * dim];
+    // flops = one accumulate per looked-up element
+    let sls_flops = (batch * lookups * dim) as f64;
+
+    section("SLS (row streaming)");
+    let r = bench_with("sls f32", 3, 0.3, &mut || {
+        ops_ref::sls_into(&table, dim, &indices, &lengths, batch, lookups, &mut pooled)
+            .expect("sls");
+        std::hint::black_box(&pooled);
+    });
+    report(&r);
+    kernels.push(Kernel {
+        name: "sls_f32",
+        shape: format!("{rows}x{dim} b{batch} L{lookups}"),
+        flops: sls_flops,
+        result: r,
+    });
+
+    let tq = quantize_rowwise_int8(&table, rows, dim);
+    let r = bench_with("sls int8 (rowwise q8)", 3, 0.3, &mut || {
+        ops_ref::sls_q8_into(
+            &tq.q, &tq.scale, &tq.zp, dim, &indices, &lengths, batch, lookups, &mut pooled,
+        )
+        .expect("sls_q8");
+        std::hint::black_box(&pooled);
+    });
+    report(&r);
+    kernels.push(Kernel {
+        name: "sls_int8",
+        shape: format!("{rows}x{dim} b{batch} L{lookups}"),
+        flops: sls_flops,
+        result: r,
+    });
+
+    let mean = |name: &str| -> f64 {
+        kernels.iter().find(|kk| kk.name == name).expect("kernel").result.mean_s
+    };
+    let fc_speedup = mean("fc_f32") / mean("fc_int8").max(1e-12);
+    let sls_speedup = mean("sls_f32") / mean("sls_int8").max(1e-12);
+
+    println!();
+    println!("int8 speedup: fc {fc_speedup:.2}x, sls {sls_speedup:.2}x");
+
+    // -- zero-allocation proof on the prepared reference serving path ------
+    // prepare once, run many: after warmup the arena pools have converged
+    // and N more runs must not touch the heap at all.
+    section("zero-alloc steady state (RefPrepared::run, dlrm dense b16)");
+    let engine = Engine::builtin();
+    let mut zero_alloc = Vec::new();
+    for (label, precision) in [("f32", Precision::F32), ("int8", Precision::Int8)] {
+        let name = match precision {
+            Precision::F32 => "dlrm_dense_b16_fp32",
+            Precision::Int8 => "dlrm_dense_b16_int8",
+        };
+        let weights = WeightGen::new(WEIGHT_SEED).weights_for(engine.manifest().get(name).expect("artifact"));
+        let prepared = engine
+            .prepare_with(name, weights, PrepareOptions { precision })
+            .expect("prepare");
+        let mut gen = Rng::new(11);
+        let mut dense = vec![0f32; 16 * 256];
+        let mut sparse = vec![0f32; 16 * 8 * 64];
+        gen.fill_normal_f32(&mut dense, 1.0);
+        gen.fill_normal_f32(&mut sparse, 0.1);
+        let dense = HostTensor::f32(dense, &[16, 256]);
+        let sparse = HostTensor::f32(sparse, &[16, 8, 64]);
+        let inputs = [&dense, &sparse];
+        // warmup: converge the arena pools (first runs grow them)
+        for _ in 0..8 {
+            let out = prepared.run_refs(&inputs).expect("warmup run");
+            arena::recycle_outputs(out);
+        }
+        let runs = 64usize;
+        let before = allocs();
+        for _ in 0..runs {
+            let out = prepared.run_refs(&inputs).expect("run");
+            arena::recycle_outputs(out);
+        }
+        let delta = allocs() - before;
+        let clean = delta == 0;
+        println!(
+            "  {label:<5} {runs} steady-state runs -> {delta} heap allocations {}",
+            if clean { "(zero-alloc holds)" } else { "(NOT zero-alloc)" }
+        );
+        zero_alloc.push((label, clean, delta, runs));
+    }
+
+    if let Some(path) = args.get("json") {
+        let mut bench = BenchReport::new("kernel_bench", "ref", "wall");
+        for (label, clean, _, _) in &zero_alloc {
+            bench = bench.accept(&format!("zero_alloc_{label}"), *clean);
+        }
+        bench
+            .with(
+                "kernels",
+                Json::arr(
+                    kernels
+                        .iter()
+                        .map(|kk| {
+                            Json::obj(vec![
+                                ("name", Json::str(kk.name)),
+                                ("shape", Json::str(&kk.shape)),
+                                ("mean_us", Json::num(kk.result.mean_s * 1e6)),
+                                ("min_us", Json::num(kk.result.min_s * 1e6)),
+                                ("gflops", Json::num(kk.gflops())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )
+            .with(
+                "int8_speedup",
+                Json::obj(vec![
+                    ("fc", Json::num(fc_speedup)),
+                    ("sls", Json::num(sls_speedup)),
+                ]),
+            )
+            .with(
+                "steady_state_allocs",
+                Json::arr(
+                    zero_alloc
+                        .iter()
+                        .map(|(label, _, delta, runs)| {
+                            Json::obj(vec![
+                                ("precision", Json::str(label)),
+                                ("runs", Json::num(*runs as f64)),
+                                ("heap_allocations", Json::num(*delta as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )
+            .write(path)
+            .expect("writing bench json");
+    }
+}

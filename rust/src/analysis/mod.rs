@@ -20,10 +20,12 @@
 
 pub mod deploy;
 pub mod memory;
+pub mod quantization;
 pub mod shape;
 
 pub use deploy::{lint_config, lint_deployment, DeploySpec};
 pub use memory::{lint_artifact, lint_memory};
+pub use quantization::lint_quantization;
 pub use shape::lint_graph;
 
 use crate::config::Config;
@@ -97,10 +99,14 @@ pub enum RuleId {
     ZeroReplicaFamily,
     /// A queue bound of zero sheds every request.
     QueueBoundZero,
+    /// A weight's estimated int8 quantization error exceeds the error
+    /// budget: it serves at f32 under `--precision int8`, forfeiting the
+    /// int8 engine's throughput on that layer (§V-A).
+    QuantizationAccuracyBudget,
 }
 
 impl RuleId {
-    pub const ALL: [RuleId; 15] = [
+    pub const ALL: [RuleId; 16] = [
         RuleId::StructuralInvalid,
         RuleId::ArityMismatch,
         RuleId::ShapeMismatch,
@@ -116,6 +122,7 @@ impl RuleId {
         RuleId::HeadroomExceedsNodes,
         RuleId::ZeroReplicaFamily,
         RuleId::QueueBoundZero,
+        RuleId::QuantizationAccuracyBudget,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -135,6 +142,7 @@ impl RuleId {
             RuleId::HeadroomExceedsNodes => "headroom-exceeds-nodes",
             RuleId::ZeroReplicaFamily => "zero-replica-family",
             RuleId::QueueBoundZero => "queue-bound-zero",
+            RuleId::QuantizationAccuracyBudget => "quantization-accuracy-budget",
         }
     }
 
@@ -144,7 +152,8 @@ impl RuleId {
             RuleId::UnconsumedIntermediate
             | RuleId::UnreachableNode
             | RuleId::ActivationSramSpill
-            | RuleId::BatchWindowNeverOpens => Severity::Warn,
+            | RuleId::BatchWindowNeverOpens
+            | RuleId::QuantizationAccuracyBudget => Severity::Warn,
             _ => Severity::Error,
         }
     }

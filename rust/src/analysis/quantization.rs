@@ -1,0 +1,86 @@
+//! `quantization-accuracy-budget` (`fbia lint --precision int8`): the
+//! static side of the runtime's int8 serving plan.
+//!
+//! `Engine::prepare` at [`crate::runtime::Precision::Int8`] quantizes
+//! eligible weights row-wise and gates the result against an f32 reference
+//! ([`crate::numerics::validate::int8_plan`]). This lint runs the *same*
+//! per-layer decision procedure statically — no weights materialized,
+//! nothing prepared — so a deployment can see, before serving, which
+//! layers will quantize and which fall back to f32 because their estimated
+//! error ([`crate::compiler::quantize::estimate_int8_error`] over the
+//! contraction dim) exceeds the budget
+//! ([`crate::compiler::quantize::DEFAULT_ERROR_BUDGET`]).
+//!
+//! Fallbacks are `Warn`, not `Error`: the runtime serves them at f32
+//! within the accuracy gate, so nothing is broken — but each one costs the
+//! int8 engine's throughput advantage, which is exactly what a capacity
+//! plan wants surfaced.
+
+use crate::analysis::{Diagnostic, Report, RuleId, Span};
+use crate::compiler::quantize::DEFAULT_ERROR_BUDGET;
+use crate::numerics::validate::int8_plan;
+use crate::runtime::artifact::Manifest;
+
+/// Lint every artifact's int8 serving plan: one `Warn` per weight whose
+/// estimated quantization error exceeds the budget (it will serve at f32).
+pub fn lint_quantization(manifest: &Manifest) -> Report {
+    let mut r = Report::new();
+    for art in &manifest.artifacts {
+        for d in int8_plan(art) {
+            if d.quantize {
+                continue;
+            }
+            r.push(
+                Diagnostic::new(
+                    RuleId::QuantizationAccuracyBudget,
+                    Span::Model { model: art.name.clone() },
+                    format!(
+                        "weight '{}' (k={}) estimated int8 error {:.4} exceeds the \
+                         {DEFAULT_ERROR_BUDGET} budget; it serves at f32",
+                        d.name, d.k, d.est_error
+                    ),
+                )
+                .suggest(
+                    "shrink the contraction dim (shard the FC) or accept the f32 fallback",
+                ),
+            );
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Severity;
+    use crate::runtime::builtin::builtin_manifest;
+
+    #[test]
+    fn builtin_manifest_fallbacks_are_warnings_only() {
+        let m = builtin_manifest();
+        let r = lint_quantization(&m);
+        // the builtin nets contain known over-budget contractions (xlmr
+        // ffn2 k=1024, dlrm top_w1 k=512), so the rule must fire...
+        assert!(!r.is_empty(), "expected f32-fallback findings");
+        // ...but only ever as warnings: fallbacks serve correctly at f32
+        assert_eq!(r.errors(), 0);
+        assert!(r.warnings() > 0);
+        for d in &r.diagnostics {
+            assert_eq!(d.rule, RuleId::QuantizationAccuracyBudget);
+            assert_eq!(d.severity, Severity::Warn);
+        }
+        // every xlmr variant's ffn2 is over budget at d_model 256 / ffn 1024
+        let msgs = r.render();
+        assert!(msgs.contains("w2"), "missing ffn2 fallback: {msgs}");
+    }
+
+    #[test]
+    fn pre_quantized_artifacts_have_no_findings() {
+        // pre-quantized artifacts carry WeightQ FC weights (plus 1-D
+        // scale/zp vectors), all outside the prepare-time plan — nothing to
+        // warn about
+        let m = builtin_manifest();
+        let art = m.artifacts.iter().find(|a| a.name.ends_with("_int8")).unwrap();
+        assert!(int8_plan(art).is_empty(), "plan not empty for {}", art.name);
+    }
+}

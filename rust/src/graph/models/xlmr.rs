@@ -14,12 +14,25 @@ pub struct XlmrSpec {
     pub vocab: usize,
     /// fp16 deployment (§V-B: "The NLP results in this paper reflect FP16").
     pub fp16: bool,
+    /// int8 serving path: the `d_model`-contraction GEMMs (q/k/v/o
+    /// projections + ffn1) run as row-wise quantized FCs on the int8
+    /// engine; the wide-contraction ffn2 keeps fp16, mirroring the runtime's
+    /// per-layer error-budget fallback.
+    pub int8_fc: bool,
 }
 
 impl XlmrSpec {
     /// The paper's 24-layer variant: 558 M params.
     pub fn paper() -> Self {
-        XlmrSpec { layers: 24, d_model: 1024, heads: 16, ffn: 4096, vocab: 250_000, fp16: true }
+        XlmrSpec {
+            layers: 24,
+            d_model: 1024,
+            heads: 16,
+            ffn: 4096,
+            vocab: 250_000,
+            fp16: true,
+            int8_fc: false,
+        }
     }
 
     pub fn param_count(&self) -> usize {
@@ -40,9 +53,15 @@ fn wdt(spec: &XlmrSpec) -> DType {
 fn add_matmul(g: &mut Graph, name: &str, x: TensorId, w_rows: usize, w_cols: usize, spec: &XlmrSpec) -> TensorId {
     let xs = g.tensor(x).shape.clone();
     let m = xs.dim(0);
-    let w = g.add_tensor(&format!("{name}.w"), Shape::new(&[w_rows, w_cols]), wdt(spec), TensorKind::Weight);
+    // int8 serving quantizes the d_model-contraction GEMMs; wider
+    // contractions (ffn2, k = ffn) exceed the per-layer error budget and
+    // stay on the fp16 engine
+    let int8 = spec.int8_fc && w_cols == spec.d_model;
+    let dt = if int8 { DType::I8 } else { wdt(spec) };
+    let w = g.add_tensor(&format!("{name}.w"), Shape::new(&[w_rows, w_cols]), dt, TensorKind::Weight);
     let y = g.add_tensor(&format!("{name}.y"), Shape::new(&[m, w_rows]), DType::F32, TensorKind::Activation);
-    g.add_node(name, OpKind::MatMul, vec![x, w], vec![y]);
+    let kind = if int8 { OpKind::QuantizedFc } else { OpKind::MatMul };
+    g.add_node(name, kind, vec![x, w], vec![y]);
     y
 }
 

@@ -41,7 +41,7 @@ use fbia::config::Config;
 use fbia::graph::models::ModelId;
 use fbia::numerics::validate;
 use fbia::numerics::weights::WeightGen;
-use fbia::runtime::{Clock, Engine, SimBackend};
+use fbia::runtime::{Clock, Engine, Precision, SimBackend};
 use fbia::serving::cluster::{self, Cluster, ClusterMetrics, EventKind, NodePolicy, Scenario};
 use fbia::serving::fleet::{
     plan::plan_capacity, Arrival, DynamicBatch, FamilyMix, Fleet, FleetConfig, FleetMetrics,
@@ -215,6 +215,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     match args.get_or("model", "dlrm") {
         "dlrm" | "recsys" => {
             let batch = args.get_usize("batch", 32);
+            // DLRM defaults to int8 (the paper's production path); xlm-r/cv
+            // below default to f32 and opt into --precision int8
             let precision = args.get_or("precision", "int8");
             let server =
                 Arc::new(RecsysServer::with_threads(eng.clone(), batch, precision, threads)?);
@@ -228,7 +230,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             print_budget_check(&metrics, ModelId::RecsysComplex);
         }
         "xlmr" | "nlp" => {
-            let server = Arc::new(NlpServer::new(eng.clone())?);
+            let precision = Precision::parse(args.get_or("precision", "f32"))?;
+            let server = Arc::new(NlpServer::with_precision(eng.clone(), precision)?);
             let m = eng.manifest();
             let mut gen = NlpGen::new(1, m.config_usize("xlmr", "vocab")?, 128, 100.0);
             let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
@@ -246,7 +249,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("  pad waste : {}", pct(waste));
         }
         "cv" => {
-            let server = Arc::new(CvServer::new(eng.clone())?);
+            let precision = Precision::parse(args.get_or("precision", "f32"))?;
+            let server = Arc::new(CvServer::with_precision(eng.clone(), precision)?);
             let mut gen = CvGen::new(1, server.image);
             let batch = args.get_usize("batch", 1);
             let metrics = server.serve_with(
@@ -1067,6 +1071,45 @@ fn cmd_lint(args: &Args) -> Result<()> {
         .map(|v| v.parse::<f64>().map_err(|_| err!("--qps must be a number")))
         .transpose()?;
     total.merge(fcfg.lint(&cfg, mix, qps)?);
+
+    // `--precision int8`: the quantization-accuracy-budget rule — the
+    // static per-layer view of the runtime's int8 serving plan (which
+    // weights quantize, which fall back to f32 and why)
+    if Precision::parse(args.get_or("precision", "f32"))? == Precision::Int8 {
+        let dir = Path::new(args.get_or("artifacts", "artifacts"));
+        let manifest = if dir.join("manifest.json").exists() {
+            fbia::runtime::artifact::Manifest::load(dir)?
+        } else {
+            fbia::runtime::builtin::builtin_manifest()
+        };
+        println!("\nint8 serving plan (per-layer estimated error vs budget):");
+        let mut tq = Table::new(&["artifact", "weight", "k", "est err", "decision"]);
+        // batch variants share weights — show each (weight, k) once, under
+        // the first artifact that carries it
+        let mut seen = std::collections::HashSet::new();
+        for art in &manifest.artifacts {
+            for d in validate::int8_plan(art) {
+                if !seen.insert((d.name.clone(), d.k)) {
+                    continue;
+                }
+                tq.row(&[
+                    art.name.clone(),
+                    d.name.clone(),
+                    d.k.to_string(),
+                    format!("{:.4}", d.est_error),
+                    if d.table {
+                        "int8 (table)".into()
+                    } else if d.quantize {
+                        "int8".into()
+                    } else {
+                        "f32 fallback".into()
+                    },
+                ]);
+            }
+        }
+        tq.print();
+        total.merge(fbia::analysis::lint_quantization(&manifest));
+    }
 
     if total.is_empty() {
         println!(

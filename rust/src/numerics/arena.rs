@@ -1,0 +1,240 @@
+//! Per-worker scratch arena for the reference serving hot path.
+//!
+//! The PR 7 profile of `RefPrepared::run` was dominated not by arithmetic
+//! but by allocator traffic: every op allocated a fresh `Vec<f32>` per
+//! request. The arena recycles those buffers per worker thread, so
+//! steady-state serving performs **zero heap allocations per request**:
+//!
+//! - [`Arena::take`]/[`Arena::give`] hand out and reclaim `Vec<f32>`
+//!   scratch buffers LIFO. Because one prepared model issues the same
+//!   deterministic sequence of takes per request, buffer capacities
+//!   converge after the first few requests and `take` stops allocating.
+//! - Activations effectively ping-pong between the two top-of-stack
+//!   buffers; [`Arena::reserve`] pre-sizes them from the evaluator's
+//!   peak-activation bound
+//!   ([`crate::numerics::validate::peak_scratch_bytes`], the interpreter
+//!   analogue of the static analyzer's
+//!   [`crate::analysis::memory::peak_activation_bytes`] sweep, computed
+//!   once at `prepare()`), so even the first request avoids most growth.
+//! - Output tensors come from [`take_outputs`] and return through
+//!   [`recycle_outputs`]: the serving loops hand their consumed
+//!   `Vec<HostTensor>` back to the worker's arena instead of dropping it.
+//!
+//! The arena is thread-local ([`with_arena`]) — serving workers never
+//! contend on it, and a `PreparedModel` stays `Send + Sync` with no locks
+//! on the hot path. Buffers are plain `Vec`s, so nothing here is `unsafe`;
+//! "arena" refers to the recycling discipline, not raw bump allocation.
+
+use super::HostTensor;
+use std::cell::RefCell;
+
+/// Recycling pool of scratch buffers for one worker thread.
+#[derive(Default)]
+pub struct Arena {
+    free_f32: Vec<Vec<f32>>,
+    free_i32: Vec<Vec<i32>>,
+    free_str: Vec<String>,
+    free_shapes: Vec<Vec<usize>>,
+    free_outputs: Vec<Vec<HostTensor>>,
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Arena::default()
+    }
+
+    /// Take a zeroed f32 buffer of exactly `len` elements. Reuses the most
+    /// recently returned buffer (LIFO), growing it only if its capacity is
+    /// short — after warm-up this never allocates.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free_f32.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a scratch buffer to the pool.
+    pub fn give(&mut self, v: Vec<f32>) {
+        self.free_f32.push(v);
+    }
+
+    /// Pre-size the ping-pong activation buffers: ensure at least two free
+    /// buffers of `bytes` capacity each (the analyzer's peak-activation
+    /// bound). Idempotent; never shrinks.
+    pub fn reserve(&mut self, bytes: usize) {
+        let elems = bytes / std::mem::size_of::<f32>();
+        for slot in 0..2 {
+            match self.free_f32.get_mut(slot) {
+                Some(v) => {
+                    if v.capacity() < elems {
+                        v.reserve(elems - v.len());
+                    }
+                }
+                None => self.free_f32.push(Vec::with_capacity(elems)),
+            }
+        }
+    }
+
+    /// Take an empty i32 scratch (capacity recycled) — the activation
+    /// quantization buffer of `quant_fc_into`.
+    pub fn take_i32(&mut self) -> Vec<i32> {
+        let mut v = self.free_i32.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return an i32 scratch to the pool.
+    pub fn give_i32(&mut self, v: Vec<i32>) {
+        self.free_i32.push(v);
+    }
+
+    /// Take an empty usize scratch (MLP width lists) — shares the shape
+    /// pool, since shapes are the other usize vecs in flight.
+    pub fn take_usize(&mut self) -> Vec<usize> {
+        let mut v = self.free_shapes.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return a usize scratch to the (shape) pool.
+    pub fn give_usize(&mut self, v: Vec<usize>) {
+        self.free_shapes.push(v);
+    }
+
+    /// Take an empty name scratch — weight names are formatted into pooled
+    /// `String`s so per-request lookups allocate nothing after warm-up.
+    pub fn take_str(&mut self) -> String {
+        let mut s = self.free_str.pop().unwrap_or_default();
+        s.clear();
+        s
+    }
+
+    /// Return a name scratch to the pool.
+    pub fn give_str(&mut self, s: String) {
+        self.free_str.push(s);
+    }
+
+    /// Build an f32 output tensor with a pooled shape vec (the shape copy
+    /// would otherwise be the one allocation left per output tensor).
+    pub fn tensor_f32(&mut self, data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        let mut s = self.free_shapes.pop().unwrap_or_default();
+        s.clear();
+        s.extend_from_slice(shape);
+        HostTensor::F32(data, s)
+    }
+
+    /// Take a (cleared) output-tensor list shell.
+    pub fn take_outputs(&mut self) -> Vec<HostTensor> {
+        let mut v = self.free_outputs.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Reclaim a consumed output list: f32 payloads and shape vecs go back
+    /// to their pools, the shell to the output pool. Non-f32 tensors are
+    /// dropped.
+    pub fn reclaim_outputs(&mut self, mut outs: Vec<HostTensor>) {
+        for t in outs.drain(..) {
+            if let HostTensor::F32(buf, shape) = t {
+                self.give(buf);
+                self.free_shapes.push(shape);
+            }
+        }
+        self.free_outputs.push(outs);
+    }
+
+    /// Reclaim a single consumed tensor (payload + shape vec). Non-f32
+    /// tensors are dropped.
+    pub fn reclaim_tensor(&mut self, t: HostTensor) {
+        if let HostTensor::F32(buf, shape) = t {
+            self.give(buf);
+            self.free_shapes.push(shape);
+        }
+    }
+
+    /// Number of pooled scratch buffers (test introspection).
+    pub fn pooled(&self) -> usize {
+        self.free_f32.len()
+    }
+}
+
+thread_local! {
+    static TL_ARENA: RefCell<Arena> = RefCell::new(Arena::new());
+}
+
+/// Run `f` with this thread's arena. Do not call re-entrantly (the
+/// reference eval path takes the arena once at its entry point and passes
+/// `&mut Arena` down).
+pub fn with_arena<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+    TL_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Hand a consumed output list back to this thread's arena — called by the
+/// serving loops once a request's outputs have been read, closing the
+/// zero-allocation cycle.
+pub fn recycle_outputs(outs: Vec<HostTensor>) {
+    with_arena(|a| a.reclaim_outputs(outs));
+}
+
+/// Single-tensor form of [`recycle_outputs`], for call sites that consume
+/// one output tensor by value.
+pub fn recycle_tensor(t: HostTensor) {
+    with_arena(|a| a.reclaim_tensor(t));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_returned_buffer() {
+        let mut a = Arena::new();
+        let v = a.take(128);
+        let p = v.as_ptr();
+        a.give(v);
+        let v2 = a.take(64); // smaller fits in the same allocation
+        assert_eq!(v2.as_ptr(), p);
+        assert_eq!(v2.len(), 64);
+        assert!(v2.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn take_zeroes_recycled_contents() {
+        let mut a = Arena::new();
+        let mut v = a.take(8);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        a.give(v);
+        assert!(a.take(8).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reserve_preallocates_two_buffers() {
+        let mut a = Arena::new();
+        a.reserve(1024);
+        assert_eq!(a.pooled(), 2);
+        let v = a.take(256); // 1024 bytes
+        assert!(v.capacity() >= 256);
+        a.give(v);
+        a.reserve(512); // idempotent, never shrinks
+        assert_eq!(a.pooled(), 2);
+    }
+
+    #[test]
+    fn outputs_round_trip() {
+        let mut a = Arena::new();
+        let mut outs = a.take_outputs();
+        outs.push(HostTensor::f32(a.take(16), &[16]));
+        a.reclaim_outputs(outs);
+        assert_eq!(a.pooled(), 1);
+        let outs2 = a.take_outputs();
+        assert!(outs2.is_empty());
+    }
+
+    #[test]
+    fn thread_local_recycle() {
+        let before = with_arena(|a| a.pooled());
+        recycle_outputs(vec![HostTensor::f32(vec![0.0; 4], &[4])]);
+        assert_eq!(with_arena(|a| a.pooled()), before + 1);
+    }
+}

@@ -7,6 +7,7 @@
 //! re-implementation used by `fbia validate-numerics` and the integration
 //! tests.
 
+pub mod arena;
 pub mod ops_ref;
 pub mod quant;
 pub mod validate;

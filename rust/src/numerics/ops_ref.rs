@@ -29,6 +29,22 @@ fn kernel_pool() -> &'static ThreadPool {
     })
 }
 
+/// Register-tile dimensions of the blocked GEMM micro-kernel: MR rows of x
+/// against NR rows of w accumulate in an MR×NR register block while both
+/// operands stream sequentially through K. Every loaded x element is reused
+/// NR times and every w element MR times, lifting arithmetic intensity
+/// ~MR·NR/(MR+NR)× over the naive loop — without changing the per-element
+/// accumulation order (t stays innermost and ascending), so blocked results
+/// are bit-identical to the naive reference.
+const GEMM_MR: usize = 4;
+const GEMM_NR: usize = 4;
+
+/// Output-channel register-tile width of the blocked convolution: for one
+/// output pixel, CONV_NR adjacent channels accumulate together so each
+/// input activation is loaded once and the weight reads become stride-1
+/// (the HWIO layout is contiguous in `cout`).
+const CONV_NR: usize = 8;
+
 /// y = x @ w^T + b. x: [m,k], w: [n,k], b: [n] → y: [m,n].
 ///
 /// Large calls are tiled across output rows on [`kernel_pool`] (the
@@ -77,27 +93,83 @@ pub fn fc(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<
 
 /// Single-thread reference `fc` — the fallback for small GEMMs and the
 /// per-tile kernel of the parallel path (so both compute identical bits).
+/// Cache-blocked via [`fc_into`]; bit-identical to the naive loop.
 pub fn fc_serial(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0f32; m * n];
+    fc_into(x, w, b, m, k, n, &mut y);
+    y
+}
+
+/// Blocked `fc` writing into a caller-provided buffer — the serving hot
+/// path's allocation-free entry point (buffers come from the per-worker
+/// [`crate::numerics::arena::Arena`]).
+pub fn fc_into(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), n * k);
     assert_eq!(b.len(), n);
-    let mut y = vec![0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            let mut acc = 0f32;
-            let xi = &x[i * k..(i + 1) * k];
+    assert_eq!(y.len(), m * n);
+    let mb = m - m % GEMM_MR;
+    let nb = n - n % GEMM_NR;
+    for ib in (0..mb).step_by(GEMM_MR) {
+        for jb in (0..nb).step_by(GEMM_NR) {
+            let mut acc = [[0f32; GEMM_NR]; GEMM_MR];
+            for t in 0..k {
+                let mut xs = [0f32; GEMM_MR];
+                let mut ws = [0f32; GEMM_NR];
+                for (ii, v) in xs.iter_mut().enumerate() {
+                    *v = x[(ib + ii) * k + t];
+                }
+                for (jj, v) in ws.iter_mut().enumerate() {
+                    *v = w[(jb + jj) * k + t];
+                }
+                for ii in 0..GEMM_MR {
+                    for jj in 0..GEMM_NR {
+                        acc[ii][jj] += xs[ii] * ws[jj];
+                    }
+                }
+            }
+            for ii in 0..GEMM_MR {
+                for jj in 0..GEMM_NR {
+                    y[(ib + ii) * n + jb + jj] = acc[ii][jj] + b[jb + jj];
+                }
+            }
+        }
+        fc_naive_into(x, w, b, ib, ib + GEMM_MR, nb, n, k, n, y);
+    }
+    fc_naive_into(x, w, b, mb, m, 0, n, k, n, y);
+}
+
+/// Naive edge loop for the row/column remainders of [`fc_into`] — same
+/// t-ascending accumulation as the register tile, so edges match too.
+#[allow(clippy::too_many_arguments)]
+fn fc_naive_into(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+    y: &mut [f32],
+) {
+    for i in i0..i1 {
+        let xi = &x[i * k..(i + 1) * k];
+        for j in j0..j1 {
             let wj = &w[j * k..(j + 1) * k];
+            let mut acc = 0f32;
             for t in 0..k {
                 acc += xi[t] * wj[t];
             }
             y[i * n + j] = acc + b[j];
         }
     }
-    y
 }
 
 /// Quantized FC matching `ref.quant_fc`: dynamic symmetric activation
 /// quantization + int32 GEMM + float epilogue.
+#[allow(clippy::too_many_arguments)]
 pub fn quant_fc(
     x: &[f32],
     wq: &[i8],
@@ -108,16 +180,99 @@ pub fn quant_fc(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
+    let mut xq = Vec::new();
+    let mut y = vec![0f32; m * n];
+    quant_fc_into(x, wq, scale, zp, bias, m, k, n, &mut xq, &mut y);
+    y
+}
+
+/// Blocked `quant_fc` writing into caller buffers: `xq` is a reusable
+/// activation-quantization scratch (cleared and refilled; zero-alloc once
+/// its capacity has converged), `y` the [m,n] output. Same MR×NR register
+/// tile as [`fc_into`] over i32 accumulators; the float epilogue
+/// `(acc + rowsum·zp)·(xs·scale) + bias` is evaluated in exactly the
+/// reference order, so results are bit-identical to the naive loop.
+#[allow(clippy::too_many_arguments)]
+pub fn quant_fc_into(
+    x: &[f32],
+    wq: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    xq: &mut Vec<i32>,
+    y: &mut [f32],
+) {
     assert_eq!(x.len(), m * k);
     assert_eq!(wq.len(), n * k);
+    assert_eq!(scale.len(), n);
+    assert_eq!(zp.len(), n);
+    assert_eq!(bias.len(), n);
+    assert_eq!(y.len(), m * n);
     let absmax = x.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-8);
     let xs = absmax / 127.0;
-    let xq: Vec<i32> = x.iter().map(|&v| (v / xs).round().clamp(-127.0, 127.0) as i32).collect();
-    let mut y = vec![0f32; m * n];
-    for i in 0..m {
+    xq.clear();
+    xq.extend(x.iter().map(|&v| (v / xs).round().clamp(-127.0, 127.0) as i32));
+    let mb = m - m % GEMM_MR;
+    let nb = n - n % GEMM_NR;
+    for ib in (0..mb).step_by(GEMM_MR) {
+        let mut rowsum = [0i32; GEMM_MR];
+        for (ii, rs) in rowsum.iter_mut().enumerate() {
+            *rs = xq[(ib + ii) * k..(ib + ii + 1) * k].iter().sum();
+        }
+        for jb in (0..nb).step_by(GEMM_NR) {
+            let mut acc = [[0i32; GEMM_NR]; GEMM_MR];
+            for t in 0..k {
+                let mut xs_t = [0i32; GEMM_MR];
+                let mut ws_t = [0i32; GEMM_NR];
+                for (ii, v) in xs_t.iter_mut().enumerate() {
+                    *v = xq[(ib + ii) * k + t];
+                }
+                for (jj, v) in ws_t.iter_mut().enumerate() {
+                    *v = wq[(jb + jj) * k + t] as i32;
+                }
+                for ii in 0..GEMM_MR {
+                    for jj in 0..GEMM_NR {
+                        acc[ii][jj] += xs_t[ii] * ws_t[jj];
+                    }
+                }
+            }
+            for ii in 0..GEMM_MR {
+                for jj in 0..GEMM_NR {
+                    let j = jb + jj;
+                    let acc_f = acc[ii][jj] as f32 + rowsum[ii] as f32 * zp[j];
+                    y[(ib + ii) * n + j] = acc_f * (xs * scale[j]) + bias[j];
+                }
+            }
+        }
+        quant_fc_naive_into(xq, wq, scale, zp, bias, ib, ib + GEMM_MR, nb, n, k, n, xs, y);
+    }
+    quant_fc_naive_into(xq, wq, scale, zp, bias, mb, m, 0, n, k, n, xs, y);
+}
+
+/// Naive edge loop for the remainders of [`quant_fc_into`].
+#[allow(clippy::too_many_arguments)]
+fn quant_fc_naive_into(
+    xq: &[i32],
+    wq: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+    xs: f32,
+    y: &mut [f32],
+) {
+    for i in i0..i1 {
         let row = &xq[i * k..(i + 1) * k];
         let rowsum: i32 = row.iter().sum();
-        for j in 0..n {
+        for j in j0..j1 {
             let wj = &wq[j * k..(j + 1) * k];
             let mut acc: i32 = 0;
             for t in 0..k {
@@ -127,7 +282,6 @@ pub fn quant_fc(
             y[i * n + j] = acc_f * (xs * scale[j]) + bias[j];
         }
     }
-    y
 }
 
 /// SparseLengthsSum: table [rows, dim], indices [batch, max_len],
@@ -145,12 +299,34 @@ pub fn sls(
     batch: usize,
     max_len: usize,
 ) -> Result<Vec<f32>> {
+    let mut out = vec![0f32; batch * dim];
+    sls_into(table, dim, indices, lengths, batch, max_len, &mut out)?;
+    Ok(out)
+}
+
+/// `sls` writing into a caller-provided `[batch, dim]` slice — the
+/// zero-allocation form used by the serving hot path. Rows stream
+/// row-major into the pooled output (sequential reads of the table row,
+/// sequential accumulate into the batch row); indices are bounds-checked
+/// in place with no temporaries. On `Err` the output contents are
+/// unspecified (the request is rejected and the buffer recycled).
+pub fn sls_into(
+    table: &[f32],
+    dim: usize,
+    indices: &[i32],
+    lengths: &[i32],
+    batch: usize,
+    max_len: usize,
+    out: &mut [f32],
+) -> Result<()> {
     assert_eq!(indices.len(), batch * max_len);
     assert_eq!(lengths.len(), batch);
+    assert_eq!(out.len(), batch * dim);
     let rows = table.len() / dim;
-    let mut out = vec![0f32; batch * dim];
+    out.fill(0.0);
     for b in 0..batch {
         let l = (lengths[b].max(0) as usize).min(max_len);
+        let acc = &mut out[b * dim..(b + 1) * dim];
         for j in 0..l {
             let idx = indices[b * max_len + j];
             if idx < 0 || idx as usize >= rows {
@@ -162,11 +338,57 @@ pub fn sls(
             let idx = idx as usize;
             let row = &table[idx * dim..(idx + 1) * dim];
             for d in 0..dim {
-                out[b * dim + d] += row[d];
+                acc[d] += row[d];
             }
         }
     }
-    Ok(out)
+    Ok(())
+}
+
+/// SparseLengthsSum over a row-wise int8 table (fbgemm-style): each looked
+/// up row dequantizes on the fly as `(q + zp[r]) · scale[r]` and streams
+/// into the f32 accumulator — the table stays int8 in memory (4× fewer
+/// bytes through the cache hierarchy than f32), which is where the SLS
+/// speedup comes from since pooling is memory-bound.
+#[allow(clippy::too_many_arguments)]
+pub fn sls_q8_into(
+    q: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    dim: usize,
+    indices: &[i32],
+    lengths: &[i32],
+    batch: usize,
+    max_len: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    assert_eq!(indices.len(), batch * max_len);
+    assert_eq!(lengths.len(), batch);
+    assert_eq!(out.len(), batch * dim);
+    let rows = q.len() / dim;
+    assert_eq!(scale.len(), rows);
+    assert_eq!(zp.len(), rows);
+    out.fill(0.0);
+    for b in 0..batch {
+        let l = (lengths[b].max(0) as usize).min(max_len);
+        let acc = &mut out[b * dim..(b + 1) * dim];
+        for j in 0..l {
+            let idx = indices[b * max_len + j];
+            if idx < 0 || idx as usize >= rows {
+                bail!(
+                    "sls: embedding index {idx} out of range for table with {rows} rows \
+                     (batch row {b}, lookup {j})"
+                );
+            }
+            let idx = idx as usize;
+            let row = &q[idx * dim..(idx + 1) * dim];
+            let (s, z) = (scale[idx], zp[idx]);
+            for d in 0..dim {
+                acc[d] += (row[d] as f32 + z) * s;
+            }
+        }
+    }
+    Ok(())
 }
 
 /// ReLU in place.
@@ -223,8 +445,28 @@ pub fn softmax(x: &mut [f32], rows: usize, d: usize) {
 /// Scaled dot-product attention over [heads, seq, hd].
 pub fn attention(q: &[f32], k: &[f32], v: &[f32], heads: usize, seq: usize, hd: usize) -> Vec<f32> {
     let mut out = vec![0f32; heads * seq * hd];
-    let scale = 1.0 / (hd as f32).sqrt();
     let mut scores = vec![0f32; seq * seq];
+    attention_into(q, k, v, heads, seq, hd, &mut scores, &mut out);
+    out
+}
+
+/// `attention` writing into caller buffers: `scores` is a reusable
+/// [seq, seq] scratch, `out` the [heads, seq, hd] output — the
+/// zero-allocation form for the serving hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    heads: usize,
+    seq: usize,
+    hd: usize,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    assert_eq!(scores.len(), seq * seq);
+    assert_eq!(out.len(), heads * seq * hd);
+    let scale = 1.0 / (hd as f32).sqrt();
     for h in 0..heads {
         let qh = &q[h * seq * hd..];
         let kh = &k[h * seq * hd..];
@@ -238,7 +480,7 @@ pub fn attention(q: &[f32], k: &[f32], v: &[f32], heads: usize, seq: usize, hd: 
                 scores[i * seq + j] = acc * scale;
             }
         }
-        softmax(&mut scores, seq, seq);
+        softmax(scores, seq, seq);
         for i in 0..seq {
             for t in 0..hd {
                 let mut acc = 0f32;
@@ -249,17 +491,35 @@ pub fn attention(q: &[f32], k: &[f32], v: &[f32], heads: usize, seq: usize, hd: 
             }
         }
     }
-    out
 }
 
 /// DLRM dot interaction (ref.py::dot_interaction): dense [b, d] +
 /// sparse [b, f-1, d] → [b, d + f(f-1)/2].
 pub fn dot_interaction(dense: &[f32], sparse: &[f32], batch: usize, d: usize, num_sparse: usize) -> Vec<f32> {
     let f = num_sparse + 1;
+    let mut out = vec![0f32; batch * (d + f * (f - 1) / 2)];
+    let mut feats = vec![0f32; f * d];
+    dot_interaction_into(dense, sparse, batch, d, num_sparse, &mut feats, &mut out);
+    out
+}
+
+/// `dot_interaction` writing into caller buffers: `feats` is a reusable
+/// [f, d] gather scratch, `out` the [b, d + f(f-1)/2] output — the
+/// zero-allocation form for the serving hot path.
+pub fn dot_interaction_into(
+    dense: &[f32],
+    sparse: &[f32],
+    batch: usize,
+    d: usize,
+    num_sparse: usize,
+    feats: &mut [f32],
+    out: &mut [f32],
+) {
+    let f = num_sparse + 1;
     let pairs = f * (f - 1) / 2;
     let out_dim = d + pairs;
-    let mut out = vec![0f32; batch * out_dim];
-    let mut feats = vec![0f32; f * d];
+    assert_eq!(feats.len(), f * d);
+    assert_eq!(out.len(), batch * out_dim);
     for b in 0..batch {
         // assemble [f, d]: dense row then sparse rows
         feats[..d].copy_from_slice(&dense[b * d..(b + 1) * d]);
@@ -283,7 +543,6 @@ pub fn dot_interaction(dense: &[f32], sparse: &[f32], batch: usize, d: usize, nu
             }
         }
     }
-    out
 }
 
 /// 2D convolution, NHWC x HWIO → NHWC, SAME padding.
@@ -374,6 +633,27 @@ pub fn conv2d_serial(
     conv2d_ch_range(x, w, b, n, h, wd, cin, kh, kw, cout, stride, groups, 0, cout)
 }
 
+/// Serial blocked `conv2d` writing into a caller-provided buffer — the
+/// zero-allocation form for the serving hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    groups: usize,
+    y: &mut [f32],
+) {
+    conv2d_ch_range_into(x, w, b, n, h, wd, cin, kh, kw, cout, stride, groups, 0, cout, y);
+}
+
 /// One output-channel tile `[co0, co1)` of the convolution, laid out
 /// `[n, oh, ow, co1-co0]`. Both the serial and the tiled `conv2d` paths
 /// compute every element through this one loop, which is what makes tiling
@@ -397,19 +677,56 @@ fn conv2d_ch_range(
 ) -> Vec<f32> {
     let oh = h.div_ceil(stride);
     let ow = wd.div_ceil(stride);
+    let mut y = vec![0f32; n * oh * ow * (co1 - co0)];
+    conv2d_ch_range_into(x, w, b, n, h, wd, cin, kh, kw, cout, stride, groups, co0, co1, &mut y);
+    y
+}
+
+/// Blocked core of the convolution: for each output pixel, [`CONV_NR`]
+/// adjacent channels (never crossing a group boundary) accumulate together,
+/// so each input activation loads once per channel block and the HWIO
+/// weight reads are stride-1 in `co`. Per channel the accumulation order is
+/// unchanged — bias then (ky, kx, ci) ascending — keeping results
+/// bit-identical to the unblocked loop.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_ch_range_into(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    groups: usize,
+    co0: usize,
+    co1: usize,
+    y: &mut [f32],
+) {
+    let oh = h.div_ceil(stride);
+    let ow = wd.div_ceil(stride);
     let cing = cin / groups;
     let coutg = cout / groups;
     let span = co1 - co0;
+    assert_eq!(y.len(), n * oh * ow * span);
     // SAME padding offsets
     let pad_h = ((oh - 1) * stride + kh).saturating_sub(h) / 2;
     let pad_w = ((ow - 1) * stride + kw).saturating_sub(wd) / 2;
-    let mut y = vec![0f32; n * oh * ow * span];
     for ni in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
-                for co in co0..co1 {
+                let mut co = co0;
+                while co < co1 {
                     let g = co / coutg;
-                    let mut acc = b[co];
+                    // channel block: clipped at the tile end and at the next
+                    // group boundary so every channel shares one input slice
+                    let ce = (co + CONV_NR).min(co1).min((g + 1) * coutg);
+                    let nrr = ce - co;
+                    let mut acc = [0f32; CONV_NR];
+                    acc[..nrr].copy_from_slice(&b[co..ce]);
                     for ky in 0..kh {
                         let iy = (oy * stride + ky) as isize - pad_h as isize;
                         if iy < 0 || iy >= h as isize {
@@ -420,26 +737,36 @@ fn conv2d_ch_range(
                             if ix < 0 || ix >= wd as isize {
                                 continue;
                             }
+                            let xbase =
+                                ((ni * h + iy as usize) * wd + ix as usize) * cin + g * cing;
                             for ci in 0..cing {
-                                let xi = x[((ni * h + iy as usize) * wd + ix as usize) * cin
-                                    + g * cing
-                                    + ci];
-                                let wi = w[((ky * kw + kx) * cing + ci) * cout + co];
-                                acc += xi * wi;
+                                let xi = x[xbase + ci];
+                                let wbase = ((ky * kw + kx) * cing + ci) * cout + co;
+                                for (cc, a) in acc[..nrr].iter_mut().enumerate() {
+                                    *a += xi * w[wbase + cc];
+                                }
                             }
                         }
                     }
-                    y[((ni * oh + oy) * ow + ox) * span + (co - co0)] = acc;
+                    let obase = ((ni * oh + oy) * ow + ox) * span + (co - co0);
+                    y[obase..obase + nrr].copy_from_slice(&acc[..nrr]);
+                    co = ce;
                 }
             }
         }
     }
-    y
 }
 
 /// Global average pool NHWC → [n, c].
 pub fn global_avgpool(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
     let mut y = vec![0f32; n * c];
+    global_avgpool_into(x, n, h, w, c, &mut y);
+    y
+}
+
+/// `global_avgpool` writing into a caller-provided [n, c] buffer.
+pub fn global_avgpool_into(x: &[f32], n: usize, h: usize, w: usize, c: usize, y: &mut [f32]) {
+    assert_eq!(y.len(), n * c);
     let inv = 1.0 / (h * w) as f32;
     for ni in 0..n {
         for ci in 0..c {
@@ -452,7 +779,6 @@ pub fn global_avgpool(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<
             y[ni * c + ci] = acc * inv;
         }
     }
-    y
 }
 
 #[cfg(test)]
@@ -707,5 +1033,234 @@ mod tests {
         assert!(x[0].abs() < 1e-7);
         assert!((x[1] - 0.8412).abs() < 1e-3, "{}", x[1]);
         assert!((x[2] + 0.1588).abs() < 1e-3, "{}", x[2]);
+    }
+
+    // ---- blocked-kernel determinism: the pre-blocking naive loops live on
+    // here as oracles; the register-tiled kernels must match them
+    // bit-for-bit on every shape, including the remainder paths ----
+
+    fn fc_naive(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for t in 0..k {
+                    acc += x[i * k + t] * w[j * k + t];
+                }
+                y[i * n + j] = acc + b[j];
+            }
+        }
+        y
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn quant_fc_naive(
+        x: &[f32],
+        wq: &[i8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let absmax = x.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-8);
+        let xs = absmax / 127.0;
+        let xq: Vec<i32> =
+            x.iter().map(|&v| (v / xs).round().clamp(-127.0, 127.0) as i32).collect();
+        let mut y = vec![0f32; m * n];
+        for i in 0..m {
+            let rowsum: i32 = xq[i * k..(i + 1) * k].iter().sum();
+            for j in 0..n {
+                let mut acc: i32 = 0;
+                for t in 0..k {
+                    acc += xq[i * k + t] * wq[j * k + t] as i32;
+                }
+                let acc_f = acc as f32 + rowsum as f32 * zp[j];
+                y[i * n + j] = acc_f * (xs * scale[j]) + bias[j];
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn fc_blocked_bit_identical_to_naive_on_odd_shapes() {
+        // covers: m=1 latency shapes, K not a multiple of any block, n
+        // smaller than the register tile, and exact-tile shapes
+        let shapes = [(1, 37, 5), (1, 256, 1), (3, 8, 5), (4, 64, 4), (5, 33, 7), (6, 129, 12)];
+        let mut rng = Rng::new(31);
+        for &(m, k, n) in &shapes {
+            let x = randv(&mut rng, m * k);
+            let w = randv(&mut rng, n * k);
+            let b = randv(&mut rng, n);
+            assert_eq!(fc_serial(&x, &w, &b, m, k, n), fc_naive(&x, &w, &b, m, k, n), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn fc_into_matches_fc_serial() {
+        let (m, k, n) = (7, 41, 13);
+        let mut rng = Rng::new(33);
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, n * k);
+        let b = randv(&mut rng, n);
+        let mut y = vec![0f32; m * n];
+        fc_into(&x, &w, &b, m, k, n, &mut y);
+        assert_eq!(y, fc_serial(&x, &w, &b, m, k, n));
+    }
+
+    #[test]
+    fn quant_fc_blocked_bit_identical_to_naive_on_odd_shapes() {
+        let shapes = [(1, 37, 5), (4, 32, 16), (5, 13, 9), (8, 64, 3)];
+        let mut rng = Rng::new(35);
+        for &(m, k, n) in &shapes {
+            let x = randv(&mut rng, m * k);
+            let w = randv(&mut rng, n * k);
+            let b = randv(&mut rng, n);
+            let q = quantize_rowwise_int8(&w, n, k);
+            assert_eq!(
+                quant_fc(&x, &q.q, &q.scale, &q.zp, &b, m, k, n),
+                quant_fc_naive(&x, &q.q, &q.scale, &q.zp, &b, m, k, n),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn quant_fc_into_scratch_converges() {
+        // the xq scratch must stop growing after the first call — the
+        // zero-allocation contract of the serving hot path
+        let (m, k, n) = (4, 32, 8);
+        let mut rng = Rng::new(37);
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, n * k);
+        let b = randv(&mut rng, n);
+        let q = quantize_rowwise_int8(&w, n, k);
+        let mut xq = Vec::new();
+        let mut y = vec![0f32; m * n];
+        quant_fc_into(&x, &q.q, &q.scale, &q.zp, &b, m, k, n, &mut xq, &mut y);
+        let cap = xq.capacity();
+        quant_fc_into(&x, &q.q, &q.scale, &q.zp, &b, m, k, n, &mut xq, &mut y);
+        assert_eq!(xq.capacity(), cap);
+        assert_eq!(y, quant_fc(&x, &q.q, &q.scale, &q.zp, &b, m, k, n));
+    }
+
+    #[test]
+    fn sls_into_matches_sls_and_clears_stale_output() {
+        let table = vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        let indices = vec![0, 1, 2, 2];
+        let lengths = vec![2, 1];
+        let mut out = vec![99.0f32; 4]; // stale recycled contents
+        sls_into(&table, 2, &indices, &lengths, 2, 2, &mut out).unwrap();
+        assert_eq!(out, sls(&table, 2, &indices, &lengths, 2, 2).unwrap());
+    }
+
+    #[test]
+    fn sls_q8_close_to_f32() {
+        let mut rng = Rng::new(39);
+        let (rows, dim) = (50, 16);
+        let table = randv(&mut rng, rows * dim);
+        let q = quantize_rowwise_int8(&table, rows, dim);
+        let indices: Vec<i32> = (0..8).map(|_| (rng.next_u64() % rows as u64) as i32).collect();
+        let lengths = vec![4, 4];
+        let f32_out = sls(&table, dim, &indices, &lengths, 2, 4).unwrap();
+        let mut q_out = vec![0f32; 2 * dim];
+        sls_q8_into(&q.q, &q.scale, &q.zp, dim, &indices, &lengths, 2, 4, &mut q_out).unwrap();
+        for (a, e) in q_out.iter().zip(&f32_out) {
+            // 4 lookups, each within half an int8 LSB of a unit-normal row
+            assert!((a - e).abs() < 0.05, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn sls_q8_rejects_out_of_range_index() {
+        let q = quantize_rowwise_int8(&[0.0; 6], 3, 2);
+        let mut out = vec![0f32; 2];
+        let err = sls_q8_into(&q.q, &q.scale, &q.zp, 2, &[0, 3], &[2], 1, 2, &mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn conv2d_blocked_channel_tile_boundaries() {
+        // cout below, straddling, and far above CONV_NR; grouped so channel
+        // blocks are clipped at group boundaries (cout/groups = 3 < CONV_NR)
+        let cases = [(5usize, 1usize), (9, 1), (12, 3), (20, 2)];
+        let mut rng = Rng::new(41);
+        for &(cout, groups) in &cases {
+            let (n, h, wd, cin, k) = (1, 5, 5, groups * 2, 3);
+            let x = randv(&mut rng, n * h * wd * cin);
+            let w = randv(&mut rng, k * k * (cin / groups) * cout);
+            let b = randv(&mut rng, cout);
+            let y = conv2d_serial(&x, &w, &b, n, h, wd, cin, k, k, cout, 1, groups);
+            // oracle: per-channel naive accumulation (bias, then ky/kx/ci)
+            let cing = cin / groups;
+            let coutg = cout / groups;
+            let pad = (k - 1) / 2;
+            for oy in 0..h {
+                for ox in 0..wd {
+                    for co in 0..cout {
+                        let g = co / coutg;
+                        let mut acc = b[co];
+                        for ky in 0..k {
+                            let iy = (oy + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = (ox + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                for ci in 0..cing {
+                                    let xi = x[((iy as usize) * wd + ix as usize) * cin
+                                        + g * cing
+                                        + ci];
+                                    acc += xi * w[((ky * k + kx) * cing + ci) * cout + co];
+                                }
+                            }
+                        }
+                        assert_eq!(y[(oy * wd + ox) * cout + co], acc, "cout {cout} co {co}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv2d_into_matches_serial() {
+        let (n, h, wd, cin, cout) = (1, 6, 6, 4, 7);
+        let mut rng = Rng::new(43);
+        let x = randv(&mut rng, n * h * wd * cin);
+        let w = randv(&mut rng, 3 * 3 * cin * cout);
+        let b = randv(&mut rng, cout);
+        let mut y = vec![0f32; n * h * wd * cout];
+        conv2d_into(&x, &w, &b, n, h, wd, cin, 3, 3, cout, 1, 1, &mut y);
+        assert_eq!(y, conv2d_serial(&x, &w, &b, n, h, wd, cin, 3, 3, cout, 1, 1));
+    }
+
+    #[test]
+    fn attention_into_matches_attention() {
+        let mut rng = Rng::new(45);
+        let (h, s, d) = (2, 6, 4);
+        let q = randv(&mut rng, h * s * d);
+        let k = randv(&mut rng, h * s * d);
+        let v = randv(&mut rng, h * s * d);
+        let mut scores = vec![0f32; s * s];
+        let mut out = vec![0f32; h * s * d];
+        attention_into(&q, &k, &v, h, s, d, &mut scores, &mut out);
+        assert_eq!(out, attention(&q, &k, &v, h, s, d));
+    }
+
+    #[test]
+    fn dot_interaction_into_matches() {
+        let mut rng = Rng::new(47);
+        let (b, d, ns) = (2, 4, 3);
+        let dense = randv(&mut rng, b * d);
+        let sparse = randv(&mut rng, b * ns * d);
+        let f = ns + 1;
+        let mut feats = vec![0f32; f * d];
+        let mut out = vec![0f32; b * (d + f * (f - 1) / 2)];
+        dot_interaction_into(&dense, &sparse, b, d, ns, &mut feats, &mut out);
+        assert_eq!(out, dot_interaction(&dense, &sparse, b, d, ns));
     }
 }

@@ -26,8 +26,13 @@ pub fn quantize_rowwise_int8(w: &[f32], rows: usize, cols: usize) -> RowwiseInt8
             wmin = wmin.min(v);
             wmax = wmax.max(v);
         }
+        // The epsilon clamp keeps all-zero / constant rows non-degenerate:
+        // wmax == wmin would otherwise give scale 0 and an infinite
+        // zero-point, poisoning every dequantized value with NaN.
         let s = ((wmax - wmin) / 255.0).max(1e-8);
         let z = (wmin / s).round() + 128.0;
+        debug_assert!(s.is_finite() && s > 0.0, "int8 row {r}: degenerate scale {s}");
+        debug_assert!(z.is_finite(), "int8 row {r}: degenerate zero-point {z}");
         scale[r] = s;
         zp[r] = z;
         for (c, &v) in row.iter().enumerate() {
@@ -74,7 +79,11 @@ pub fn quantize_rowwise_int4(w: &[f32], rows: usize, cols: usize) -> RowwiseInt4
             lo = lo.min(v);
             hi = hi.max(v);
         }
+        // Same degenerate-row guard as the int8 path: constant rows hit
+        // hi == lo and must still produce a positive finite scale.
         let s = ((hi - lo) / 15.0).max(1e-8);
+        debug_assert!(s.is_finite() && s > 0.0, "int4 row {r}: degenerate scale {s}");
+        debug_assert!(lo.is_finite(), "int4 row {r}: degenerate bias {lo}");
         scale[r] = s;
         bias[r] = lo;
         for c in 0..cols {
@@ -143,6 +152,66 @@ mod tests {
         let deq = dequantize_rowwise_int8(&q);
         for v in deq {
             assert!((v - 3.5).abs() < 0.05, "{v}");
+        }
+    }
+
+    #[test]
+    fn int8_all_zero_row_is_not_degenerate() {
+        // Regression: wmax == wmin == 0 must clamp scale to a positive
+        // epsilon (not 0, which would make zp infinite and dequant NaN).
+        let w = vec![0.0f32; 16];
+        let q = quantize_rowwise_int8(&w, 2, 8);
+        for r in 0..2 {
+            assert!(q.scale[r] > 0.0 && q.scale[r].is_finite(), "scale {}", q.scale[r]);
+            assert!(q.zp[r].is_finite(), "zp {}", q.zp[r]);
+        }
+        for v in dequantize_rowwise_int8(&q) {
+            assert_eq!(v, 0.0); // exact, not merely close
+        }
+    }
+
+    #[test]
+    fn int8_negative_constant_row() {
+        // zero-anchored range [-2, 0]: constant negative rows reconstruct
+        // within half an LSB and keep zp on the representable grid.
+        let w = vec![-2.0f32; 8];
+        let q = quantize_rowwise_int8(&w, 1, 8);
+        assert!(q.zp[0].is_finite() && q.zp[0].abs() <= 256.0);
+        for v in dequantize_rowwise_int8(&q) {
+            assert!((v + 2.0).abs() <= 0.5 * q.scale[0], "{v}");
+        }
+    }
+
+    #[test]
+    fn int8_sub_epsilon_range_row_bounded() {
+        // Row spread below the epsilon clamp: quantized values must stay in
+        // range and reconstruction error stays within one (clamped) LSB.
+        let w = vec![1e-9f32, -1e-9, 5e-10, 0.0];
+        let q = quantize_rowwise_int8(&w, 1, 4);
+        assert_eq!(q.scale[0], 1e-8);
+        let deq = dequantize_rowwise_int8(&q);
+        for (a, b) in deq.iter().zip(&w) {
+            assert!((a - b).abs() <= 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int4_all_zero_and_constant_rows_not_degenerate() {
+        // Same audit for the int4 path: hi == lo rows (all-zero and
+        // constant negative) keep a positive scale and finite bias.
+        let mut w = vec![0.0f32; 8];
+        w.extend_from_slice(&[-1.25f32; 8]);
+        let q = quantize_rowwise_int4(&w, 2, 8);
+        for r in 0..2 {
+            assert!(q.scale[r] > 0.0 && q.scale[r].is_finite());
+            assert!(q.bias[r].is_finite());
+        }
+        let deq = dequantize_rowwise_int4(&q);
+        for v in &deq[..8] {
+            assert_eq!(*v, 0.0);
+        }
+        for v in &deq[8..] {
+            assert!((v + 1.25).abs() <= q.scale[1], "{v}");
         }
     }
 

@@ -6,8 +6,19 @@
 //! disagreement isolates a numerics bug in the artifact/runtime path — the
 //! same role the paper's FakeLowP reference implementations play against the
 //! vendor kernels.
+//!
+//! The same evaluator is the serving hot path of `RefBackend`/`SimBackend`,
+//! so it is written to be allocation-free per request in steady state:
+//! every intermediate activation, scratch string (weight-name formatting)
+//! and output tensor comes from the per-worker recycling
+//! [`Arena`](crate::numerics::arena::Arena), and an [`EvalCtx`] carries the
+//! optional pre-quantized int8 weights (built once at `prepare()`, served
+//! many times — §V-B "quantize once").
 
+use crate::compiler::quantize::{estimate_int8_error, DEFAULT_ERROR_BUDGET};
+use crate::numerics::arena::Arena;
 use crate::numerics::ops_ref as ops;
+use crate::numerics::quant::{quantize_rowwise_int8, RowwiseInt8};
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::{Artifact, InputKind, Manifest};
@@ -53,11 +64,37 @@ pub fn compare(artifact: &str, reference: &[f32], measured: &[f32]) -> Validatio
 /// weights story of §VI-C, host-side).
 pub type WeightEnv = Arc<HashMap<String, HostTensor>>;
 
+/// Pre-quantized int8 weights keyed by the *original f32 weight name* —
+/// built once at `prepare()` by [`quantize_for_serving`], consulted by the
+/// evaluator on every FC/SLS so the f32 tensor never enters the hot path.
+pub type QuantMap = HashMap<String, RowwiseInt8>;
+
+/// Per-evaluation context: the worker's scratch arena plus the optional
+/// int8 weight plan. `quant: None` is the pure-f32 path.
+pub struct EvalCtx<'a> {
+    pub quant: Option<&'a QuantMap>,
+    pub arena: &'a mut Arena,
+}
+
+impl<'a> EvalCtx<'a> {
+    pub fn f32_only(arena: &'a mut Arena) -> EvalCtx<'a> {
+        EvalCtx { quant: None, arena }
+    }
+}
+
 /// A named-tensor environment for reference evaluation: the shared weight
 /// map plus per-request inputs, borrowed from the caller.
 pub struct Env<'a> {
     weights: WeightEnv,
-    inputs: HashMap<&'a str, &'a HostTensor>,
+    inputs: ReqInputs<'a>,
+}
+
+/// How request tensors are held: a map for the cold validation paths, or a
+/// positional spec-order slice for the serving hot path (no per-request
+/// `HashMap` allocation; lookups scan the artifact's few input specs).
+enum ReqInputs<'a> {
+    Map(HashMap<&'a str, &'a HostTensor>),
+    SpecOrder { artifact: &'a Artifact, vals: &'a [&'a HostTensor] },
 }
 
 impl<'a> Env<'a> {
@@ -87,12 +124,12 @@ impl<'a> Env<'a> {
         if it.next().is_some() {
             bail!("too many request inputs for {}", artifact.name);
         }
-        Ok(Env { weights: Arc::new(weights), inputs: req })
+        Ok(Env { weights: Arc::new(weights), inputs: ReqInputs::Map(req) })
     }
 
     /// Validate explicit weight tensors (as uploaded to a backend) against
     /// the spec — presence, order — and index them by name. Done once per
-    /// prepared model; the result feeds [`Env::from_weights`] on every run.
+    /// prepared model; the result feeds [`Env::positional`] on every run.
     pub fn weight_env(
         artifact: &Artifact,
         weights: Vec<(String, HostTensor)>,
@@ -118,8 +155,8 @@ impl<'a> Env<'a> {
     }
 
     /// Bind a prebuilt weight env to one request's inputs (spec order for
-    /// `kind == Input`). Per-request cost: one `Arc` bump + O(#request
-    /// tensors) borrowed inserts. No tensor data moves.
+    /// `kind == Input`). Per-request cost: one `Arc` bump + a small borrowed
+    /// map. Prefer [`Env::positional`] on the hot path.
     pub fn from_weights(
         artifact: &'a Artifact,
         weights: &WeightEnv,
@@ -138,7 +175,25 @@ impl<'a> Env<'a> {
         if it.next().is_some() {
             bail!("too many request inputs for {}", artifact.name);
         }
-        Ok(Env { weights: Arc::clone(weights), inputs: req })
+        Ok(Env { weights: Arc::clone(weights), inputs: ReqInputs::Map(req) })
+    }
+
+    /// Bind a prebuilt weight env to positional request inputs — the
+    /// zero-allocation form of [`Env::from_weights`]: no per-request map,
+    /// lookups scan the spec list (a handful of entries).
+    pub fn positional(
+        artifact: &'a Artifact,
+        weights: &WeightEnv,
+        inputs: &'a [&'a HostTensor],
+    ) -> Result<Env<'a>> {
+        let n = artifact.inputs.iter().filter(|s| s.kind == InputKind::Input).count();
+        if inputs.len() != n {
+            bail!("{}: expected {n} request inputs, got {}", artifact.name, inputs.len());
+        }
+        Ok(Env {
+            weights: Arc::clone(weights),
+            inputs: ReqInputs::SpecOrder { artifact, vals: inputs },
+        })
     }
 
     /// Borrow a full spec-order input list (weights *and* request tensors,
@@ -157,11 +212,28 @@ impl<'a> Env<'a> {
         for (spec, t) in artifact.inputs.iter().zip(all) {
             req.insert(spec.name.as_str(), t);
         }
-        Ok(Env { weights: Arc::new(HashMap::new()), inputs: req })
+        Ok(Env { weights: Arc::new(HashMap::new()), inputs: ReqInputs::Map(req) })
     }
 
     fn get(&self, name: &str) -> Option<&HostTensor> {
-        self.inputs.get(name).copied().or_else(|| self.weights.get(name))
+        let req = match &self.inputs {
+            ReqInputs::Map(m) => m.get(name).copied(),
+            ReqInputs::SpecOrder { artifact, vals } => {
+                let mut i = 0usize;
+                let mut found = None;
+                for spec in &artifact.inputs {
+                    if spec.kind == InputKind::Input {
+                        if spec.name == name {
+                            found = vals.get(i).copied();
+                            break;
+                        }
+                        i += 1;
+                    }
+                }
+                found
+            }
+        };
+        req.or_else(|| self.weights.get(name))
     }
 
     pub fn f32(&self, name: &str) -> Result<&[f32]> {
@@ -195,16 +267,29 @@ pub fn supports(model: &str, role: &str) -> bool {
 }
 
 /// Evaluate the reference model for an artifact over an already-built
-/// environment; returns outputs in the artifact's declared order. This is
-/// the single numerics path shared by `fbia validate-numerics` and the
-/// [`crate::runtime::RefBackend`] interpreter. Dispatch arms must stay in
-/// sync with [`supports`] directly above.
+/// environment; returns outputs in the artifact's declared order. Pure-f32
+/// convenience over [`eval_with`], using the calling thread's arena.
 pub fn eval(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+    crate::numerics::arena::with_arena(|a| {
+        eval_with(manifest, artifact, env, &mut EvalCtx::f32_only(a))
+    })
+}
+
+/// The single numerics path shared by `fbia validate-numerics` and the
+/// [`crate::runtime::RefBackend`] interpreter: evaluate with an explicit
+/// context (scratch arena + optional int8 weight plan). Dispatch arms must
+/// stay in sync with [`supports`] directly above.
+pub fn eval_with(
+    manifest: &Manifest,
+    artifact: &Artifact,
+    env: &Env,
+    ctx: &mut EvalCtx,
+) -> Result<Vec<HostTensor>> {
     match (artifact.model.as_str(), artifact.role.as_str()) {
-        ("dlrm", "sls") => dlrm_sls_ref(manifest, artifact, env),
-        ("dlrm", "dense") => dlrm_dense_ref(manifest, artifact, env),
-        ("xlmr", _) => xlmr_ref(manifest, artifact, env),
-        ("cv", _) => cv_ref(manifest, artifact, env),
+        ("dlrm", "sls") => dlrm_sls_ref(manifest, artifact, env, ctx),
+        ("dlrm", "dense") => dlrm_dense_ref(manifest, artifact, env, ctx),
+        ("xlmr", _) => xlmr_ref(manifest, artifact, env, ctx),
+        ("cv", _) => cv_ref(manifest, artifact, env, ctx),
         other => bail!("no reference model for {other:?}"),
     }
 }
@@ -222,37 +307,279 @@ pub fn reference_outputs(
 }
 
 // ---------------------------------------------------------------------------
+// int8 serving plan (quantize once at prepare, serve many)
+// ---------------------------------------------------------------------------
+
+/// One weight's int8 decision: quantize (within the per-layer error budget)
+/// or keep f32. Shared by `prepare(precision=int8)` and the
+/// `quantization-accuracy-budget` lint rule.
+#[derive(Debug, Clone)]
+pub struct Int8Decision {
+    pub name: String,
+    /// Reduction depth the estimated error scales with (FC k-dim, or the
+    /// embedding dim for tables).
+    pub k: usize,
+    pub est_error: f64,
+    pub quantize: bool,
+    /// SLS embedding table (dequantize-on-gather) vs FC GEMM operand.
+    pub table: bool,
+}
+
+/// The int8 serving plan for an artifact: FC weights quantize row-wise when
+/// [`estimate_int8_error`] over their k-dim fits [`DEFAULT_ERROR_BUDGET`]
+/// (mirroring `compiler::quantize`); SLS embedding tables always quantize
+/// (pooling error is a few half-LSBs). Embedding gathers (`tok_emb`,
+/// `pos_emb`), single-row final logit layers (the compiler's skip-last-FC
+/// rule) and conv weights (4-D) stay f32.
+pub fn int8_plan(art: &Artifact) -> Vec<Int8Decision> {
+    let mut plan = Vec::new();
+    for spec in &art.inputs {
+        if spec.kind != InputKind::Weight || spec.shape.len() != 2 {
+            continue;
+        }
+        let name = spec.name.as_str();
+        if name == "tok_emb" || name == "pos_emb" {
+            continue;
+        }
+        let (rows, k) = (spec.shape[0], spec.shape[1]);
+        if name.starts_with("table") {
+            plan.push(Int8Decision {
+                name: name.to_string(),
+                k,
+                est_error: 0.5 / 127.0,
+                quantize: true,
+                table: true,
+            });
+            continue;
+        }
+        if rows < 2 {
+            continue; // final logit layer: keep f32 (skip-last-FC policy)
+        }
+        let est = estimate_int8_error(k);
+        plan.push(Int8Decision {
+            name: name.to_string(),
+            k,
+            est_error: est,
+            quantize: est <= DEFAULT_ERROR_BUDGET,
+            table: false,
+        });
+    }
+    plan
+}
+
+/// Pre-quantize an artifact's eligible weights row-wise for int8 serving.
+/// Runs once at `prepare()`; the result is consulted by [`eval_with`] on
+/// every request, so weights are never re-quantized on the hot path.
+pub fn quantize_for_serving(art: &Artifact, weights: &WeightEnv) -> QuantMap {
+    let mut qm = QuantMap::new();
+    for dec in int8_plan(art) {
+        if !dec.quantize {
+            continue;
+        }
+        if let Some(HostTensor::F32(data, shape)) = weights.get(&dec.name) {
+            qm.insert(dec.name, quantize_rowwise_int8(data, shape[0], shape[1]));
+        }
+    }
+    qm
+}
+
+/// End-to-end error budget for an int8-served family: per-layer budgets
+/// compose in quadrature across the quantized layers (independent rounding
+/// errors), so the family-level gate scales with √(#quantized).
+pub fn int8_family_budget(n_quantized: usize) -> f64 {
+    DEFAULT_ERROR_BUDGET * (n_quantized.max(1) as f64).sqrt()
+}
+
+/// Relative L2 distance of `measured` from `reference` — the metric the
+/// int8 accuracy gate compares against [`int8_family_budget`].
+pub fn relative_l2(measured: &[f32], reference: &[f32]) -> f64 {
+    assert_eq!(measured.len(), reference.len());
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (m, r) in measured.iter().zip(reference) {
+        num += (*m as f64 - *r as f64).powi(2);
+        den += (*r as f64).powi(2);
+    }
+    (num / den.max(1e-12)).sqrt()
+}
+
+/// Upper bound (bytes) on the largest single f32 scratch buffer the
+/// evaluator takes for this artifact — the interpreter-side analogue of the
+/// static analyzer's peak-activation liveness sweep
+/// ([`crate::analysis::memory::peak_activation_bytes`]). `prepare()` feeds
+/// it to [`Arena::reserve`] so the ping-pong activation buffers are sized
+/// before the first request. Best-effort: a short bound only means the
+/// first few requests grow a buffer once.
+pub fn peak_scratch_bytes(manifest: &Manifest, art: &Artifact) -> usize {
+    let b = art.batch;
+    let cfg = |model: &str, key: &str| manifest.config_usize(model, key).unwrap_or(0);
+    let elems = match (art.model.as_str(), art.role.as_str()) {
+        ("dlrm", "sls") => {
+            let dim = cfg("dlrm", "embed_dim");
+            let nt = art.inputs.iter().filter(|s| s.name.starts_with("table")).count();
+            b * nt.max(1) * dim
+        }
+        ("dlrm", "dense") => {
+            let nt = cfg("dlrm", "num_tables");
+            let d = cfg("dlrm", "embed_dim");
+            let inter = d + (nt + 1) * nt / 2;
+            let mut widest = cfg("dlrm", "dense_in").max(inter);
+            for key in ["bottom_mlp", "top_mlp"] {
+                let mut w = Vec::new();
+                if read_widths_into(manifest, "dlrm", key, &mut w).is_ok() {
+                    widest = widest.max(w.into_iter().max().unwrap_or(0));
+                }
+            }
+            b * widest
+        }
+        ("xlmr", _) => {
+            let wide = cfg("xlmr", "d_model").max(cfg("xlmr", "ffn"));
+            b * art.seq.unwrap_or(1) * wide
+        }
+        ("cv", _) => {
+            // sweep block input resolutions the way cv_ref walks them
+            let image = cfg("cv", "image");
+            let (mut h, mut w) = (image.div_ceil(2), image.div_ceil(2));
+            let mut peak = b * h * w * cfg("cv", "stem_ch");
+            if let Some(arr) = manifest
+                .configs
+                .get("cv")
+                .and_then(|m| m.get("stages"))
+                .and_then(crate::util::json::Json::as_arr)
+            {
+                for (si, s) in arr.iter().enumerate() {
+                    let ch = s.idx(0).and_then(|v| v.as_usize()).unwrap_or(0);
+                    let blocks = s.idx(1).and_then(|v| v.as_usize()).unwrap_or(0);
+                    for bi in 0..blocks {
+                        // pw1 expands to `ch` at the block's input resolution
+                        peak = peak.max(b * h * w * ch);
+                        if bi == 0 && si > 0 {
+                            h = h.div_ceil(2);
+                            w = w.div_ceil(2);
+                        }
+                    }
+                }
+            }
+            peak
+        }
+        _ => 0,
+    };
+    elems * std::mem::size_of::<f32>()
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers for the allocation-free evaluator
+// ---------------------------------------------------------------------------
+
+/// Format a weight name into a pooled scratch string (no allocation after
+/// capacity convergence).
+fn fmt_name<'s>(buf: &'s mut String, args: std::fmt::Arguments<'_>) -> &'s str {
+    use std::fmt::Write as _;
+    buf.clear();
+    let _ = buf.write_fmt(args);
+    buf.as_str()
+}
+
+/// Concatenate prefix + suffix into a pooled scratch string.
+fn fmt2<'s>(buf: &'s mut String, prefix: &str, suffix: &str) -> &'s str {
+    buf.clear();
+    buf.push_str(prefix);
+    buf.push_str(suffix);
+    buf.as_str()
+}
+
+/// One FC through the precision dispatch: the pre-quantized int8 weight
+/// when the serving plan covers `wname`, the f32 tensor otherwise. Writes
+/// into `y` ([m, n]).
+#[allow(clippy::too_many_arguments)]
+fn fc_dispatch(
+    env: &Env,
+    ctx: &mut EvalCtx,
+    wname: &str,
+    bname: &str,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [f32],
+) -> Result<()> {
+    let b = env.f32(bname)?;
+    let q = ctx.quant.and_then(|qm| qm.get(wname));
+    if let Some(q) = q {
+        let mut xq = ctx.arena.take_i32();
+        ops::quant_fc_into(x, &q.q, &q.scale, &q.zp, b, m, k, n, &mut xq, y);
+        ctx.arena.give_i32(xq);
+    } else {
+        ops::fc_into(x, env.f32(wname)?, b, m, k, n, y);
+    }
+    Ok(())
+}
+
+fn read_widths_into(
+    manifest: &Manifest,
+    model: &str,
+    key: &str,
+    out: &mut Vec<usize>,
+) -> Result<()> {
+    let arr = manifest
+        .configs
+        .get(model)
+        .and_then(|m| m.get(key))
+        .and_then(crate::util::json::Json::as_arr)
+        .ok_or_else(|| err!("manifest configs.{model}.{key} missing"))?;
+    out.clear();
+    out.extend(arr.iter().filter_map(crate::util::json::Json::as_usize));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // DLRM
 // ---------------------------------------------------------------------------
 
-fn dlrm_sls_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+fn dlrm_sls_ref(
+    manifest: &Manifest,
+    artifact: &Artifact,
+    env: &Env,
+    ctx: &mut EvalCtx,
+) -> Result<Vec<HostTensor>> {
     let dim = manifest.config_usize("dlrm", "embed_dim")?;
     let batch = artifact.batch;
-    let tables: Vec<usize> = artifact
-        .inputs
-        .iter()
-        .filter(|s| s.name.starts_with("table"))
-        .map(|s| crate::runtime::artifact::table_index(&s.name, "table"))
-        .collect::<Result<_>>()?;
-    let mut out = vec![0f32; batch * tables.len() * dim];
-    for (ti, t) in tables.iter().enumerate() {
-        let table = env.f32(&format!("table{t}"))?;
-        let idx = env.i32(&format!("idx{t}"))?;
-        let len = env.i32(&format!("len{t}"))?;
-        let max_len = env.shape(&format!("idx{t}"))?[1];
-        let pooled = ops::sls(table, dim, idx, len, batch, max_len)
-            .with_context(|| format!("artifact {}, table{t}", artifact.name))?;
+    let n_tables = artifact.inputs.iter().filter(|s| s.name.starts_with("table")).count();
+    let mut out = ctx.arena.take(batch * n_tables * dim);
+    let mut pooled = ctx.arena.take(batch * dim);
+    let mut nm = ctx.arena.take_str();
+    let mut ti = 0usize;
+    for spec in artifact.inputs.iter().filter(|s| s.name.starts_with("table")) {
+        let t = crate::runtime::artifact::table_index(&spec.name, "table")?;
+        let idx = env.i32(fmt_name(&mut nm, format_args!("idx{t}")))?;
+        let len = env.i32(fmt_name(&mut nm, format_args!("len{t}")))?;
+        let max_len = env.shape(fmt_name(&mut nm, format_args!("idx{t}")))?[1];
+        let q = ctx.quant.and_then(|qm| qm.get(&spec.name));
+        let r = if let Some(q) = q {
+            ops::sls_q8_into(&q.q, &q.scale, &q.zp, dim, idx, len, batch, max_len, &mut pooled)
+        } else {
+            ops::sls_into(env.f32(&spec.name)?, dim, idx, len, batch, max_len, &mut pooled)
+        };
+        r.with_context(|| format!("artifact {}, table{t}", artifact.name))?;
         // interleave into [batch, n_tables, dim]
         for b in 0..batch {
-            let dst = (b * tables.len() + ti) * dim;
+            let dst = (b * n_tables + ti) * dim;
             out[dst..dst + dim].copy_from_slice(&pooled[b * dim..(b + 1) * dim]);
         }
+        ti += 1;
     }
-    Ok(vec![HostTensor::f32(out, &[batch, tables.len(), dim])])
+    ctx.arena.give(pooled);
+    ctx.arena.give_str(nm);
+    let mut outs = ctx.arena.take_outputs();
+    let t = ctx.arena.tensor_f32(out, &[batch, n_tables, dim]);
+    outs.push(t);
+    Ok(outs)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn mlp_ref(
     env: &Env,
+    ctx: &mut EvalCtx,
     prefix: &str,
     widths: &[usize],
     mut x: Vec<f32>,
@@ -261,67 +588,93 @@ fn mlp_ref(
     quantized: bool,
     final_act: bool,
 ) -> Result<(Vec<f32>, usize)> {
+    let mut nm = ctx.arena.take_str();
     for (i, &h) in widths.iter().enumerate() {
-        x = if quantized {
-            ops::quant_fc(
-                &x,
-                env.i8(&format!("{prefix}_wq{i}"))?,
-                env.f32(&format!("{prefix}_scale{i}"))?,
-                env.f32(&format!("{prefix}_zp{i}"))?,
-                env.f32(&format!("{prefix}_b{i}"))?,
-                m,
-                d_in,
-                h,
-            )
+        let mut y = ctx.arena.take(m * h);
+        if quantized {
+            // the artifact ships pre-quantized weights (InputKind::WeightQ)
+            let wq = env.i8(fmt_name(&mut nm, format_args!("{prefix}_wq{i}")))?;
+            let scale = env.f32(fmt_name(&mut nm, format_args!("{prefix}_scale{i}")))?;
+            let zp = env.f32(fmt_name(&mut nm, format_args!("{prefix}_zp{i}")))?;
+            let b = env.f32(fmt_name(&mut nm, format_args!("{prefix}_b{i}")))?;
+            let mut xq = ctx.arena.take_i32();
+            ops::quant_fc_into(&x, wq, scale, zp, b, m, d_in, h, &mut xq, &mut y);
+            ctx.arena.give_i32(xq);
         } else {
-            ops::fc(&x, env.f32(&format!("{prefix}_w{i}"))?, env.f32(&format!("{prefix}_b{i}"))?, m, d_in, h)
-        };
-        if i + 1 < widths.len() || final_act {
-            ops::relu(&mut x);
+            let q = {
+                let wname = fmt_name(&mut nm, format_args!("{prefix}_w{i}"));
+                ctx.quant.and_then(|qm| qm.get(wname))
+            };
+            let b = env.f32(fmt_name(&mut nm, format_args!("{prefix}_b{i}")))?;
+            if let Some(q) = q {
+                // prepare-time row-wise quantization (int8 serving path)
+                let mut xq = ctx.arena.take_i32();
+                ops::quant_fc_into(&x, &q.q, &q.scale, &q.zp, b, m, d_in, h, &mut xq, &mut y);
+                ctx.arena.give_i32(xq);
+            } else {
+                let w = env.f32(fmt_name(&mut nm, format_args!("{prefix}_w{i}")))?;
+                ops::fc_into(&x, w, b, m, d_in, h, &mut y);
+            }
         }
+        if i + 1 < widths.len() || final_act {
+            ops::relu(&mut y);
+        }
+        ctx.arena.give(std::mem::replace(&mut x, y));
         d_in = h;
     }
+    ctx.arena.give_str(nm);
     Ok((x, d_in))
 }
 
-fn dlrm_dense_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+fn dlrm_dense_ref(
+    manifest: &Manifest,
+    artifact: &Artifact,
+    env: &Env,
+    ctx: &mut EvalCtx,
+) -> Result<Vec<HostTensor>> {
     let batch = artifact.batch;
-    let quantized = artifact
-        .inputs
-        .iter()
-        .any(|s| s.kind == InputKind::WeightQ);
+    let quantized = artifact.inputs.iter().any(|s| s.kind == InputKind::WeightQ);
     let dense_in = manifest.config_usize("dlrm", "dense_in")?;
     let num_tables = manifest.config_usize("dlrm", "num_tables")?;
     let embed_dim = manifest.config_usize("dlrm", "embed_dim")?;
-    let bottom: Vec<usize> = read_widths(manifest, "dlrm", "bottom_mlp")?;
-    let top: Vec<usize> = read_widths(manifest, "dlrm", "top_mlp")?;
+    let mut bottom = ctx.arena.take_usize();
+    read_widths_into(manifest, "dlrm", "bottom_mlp", &mut bottom)?;
+    let mut top = ctx.arena.take_usize();
+    read_widths_into(manifest, "dlrm", "top_mlp", &mut top)?;
 
-    let dense = env.f32("dense")?.to_vec();
+    let mut dense = ctx.arena.take(batch * dense_in);
+    dense.copy_from_slice(env.f32("dense")?);
     let sparse = env.f32("sparse")?;
 
-    let (bot, _) = mlp_ref(env, "bot", &bottom, dense, dense_in, batch, quantized, true)?;
-    let inter = ops::dot_interaction(&bot, sparse, batch, embed_dim, num_tables);
+    let (bot, _) = mlp_ref(env, ctx, "bot", &bottom, dense, dense_in, batch, quantized, true)?;
     let inter_dim = embed_dim + (num_tables + 1) * num_tables / 2;
-    let (mut logit, _) = mlp_ref(env, "top", &top, inter, inter_dim, batch, quantized, false)?;
+    let mut inter = ctx.arena.take(batch * inter_dim);
+    let mut feats = ctx.arena.take((num_tables + 1) * embed_dim);
+    ops::dot_interaction_into(&bot, sparse, batch, embed_dim, num_tables, &mut feats, &mut inter);
+    ctx.arena.give(feats);
+    ctx.arena.give(bot);
+    let (mut logit, _) = mlp_ref(env, ctx, "top", &top, inter, inter_dim, batch, quantized, false)?;
     ops::sigmoid(&mut logit);
-    Ok(vec![HostTensor::f32(logit, &[batch, 1])])
-}
-
-fn read_widths(manifest: &Manifest, model: &str, key: &str) -> Result<Vec<usize>> {
-    manifest
-        .configs
-        .get(model)
-        .and_then(|m| m.get(key))
-        .and_then(crate::util::json::Json::as_arr)
-        .map(|a| a.iter().filter_map(crate::util::json::Json::as_usize).collect())
-        .ok_or_else(|| err!("manifest configs.{model}.{key} missing"))
+    ctx.arena.give_usize(bottom);
+    ctx.arena.give_usize(top);
+    let mut outs = ctx.arena.take_outputs();
+    let t = ctx.arena.tensor_f32(logit, &[batch, 1]);
+    outs.push(t);
+    Ok(outs)
 }
 
 // ---------------------------------------------------------------------------
 // XLM-R
 // ---------------------------------------------------------------------------
 
-fn xlmr_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+#[allow(clippy::manual_memcpy)]
+fn xlmr_ref(
+    manifest: &Manifest,
+    artifact: &Artifact,
+    env: &Env,
+    ctx: &mut EvalCtx,
+) -> Result<Vec<HostTensor>> {
+    use std::fmt::Write as _;
     let batch = artifact.batch;
     let seq = artifact.seq.ok_or_else(|| err!("xlmr artifact missing seq"))?;
     let layers = manifest.config_usize("xlmr", "layers")?;
@@ -337,7 +690,7 @@ fn xlmr_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<H
 
     let bs = batch * seq;
     let vocab = tok.len() / d;
-    let mut x = vec![0f32; bs * d];
+    let mut x = ctx.arena.take(bs * d);
     for b in 0..batch {
         for s in 0..seq {
             // token ids are request data: reject out-of-vocab instead of
@@ -358,19 +711,31 @@ fn xlmr_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<H
         }
     }
 
+    let mut nm = ctx.arena.take_str();
+    let mut nb = ctx.arena.take_str();
+    let mut p = ctx.arena.take_str();
     for l in 0..layers {
-        let p = format!("l{l}_");
+        p.clear();
+        let _ = write!(p, "l{l}_");
         // pre-LN attention
-        let mut y = x.clone();
-        ops::layernorm(&mut y, env.f32(&format!("{p}ln1_g"))?, env.f32(&format!("{p}ln1_b"))?, bs, d, 1e-5);
-        let q = ops::fc(&y, env.f32(&format!("{p}wq"))?, env.f32(&format!("{p}bq"))?, bs, d, d);
-        let k = ops::fc(&y, env.f32(&format!("{p}wk"))?, env.f32(&format!("{p}bk"))?, bs, d, d);
-        let v = ops::fc(&y, env.f32(&format!("{p}wv"))?, env.f32(&format!("{p}bv"))?, bs, d, d);
+        let mut y = ctx.arena.take(bs * d);
+        y.copy_from_slice(&x);
+        let g = env.f32(fmt2(&mut nm, &p, "ln1_g"))?;
+        let gb = env.f32(fmt2(&mut nb, &p, "ln1_b"))?;
+        ops::layernorm(&mut y, g, gb, bs, d, 1e-5);
+        let mut q = ctx.arena.take(bs * d);
+        let mut k = ctx.arena.take(bs * d);
+        let mut v = ctx.arena.take(bs * d);
+        fc_dispatch(env, ctx, fmt2(&mut nm, &p, "wq"), fmt2(&mut nb, &p, "bq"), &y, bs, d, d, &mut q)?;
+        fc_dispatch(env, ctx, fmt2(&mut nm, &p, "wk"), fmt2(&mut nb, &p, "bk"), &y, bs, d, d, &mut k)?;
+        fc_dispatch(env, ctx, fmt2(&mut nm, &p, "wv"), fmt2(&mut nb, &p, "bv"), &y, bs, d, d, &mut v)?;
         // [b, s, h, hd] -> per (b, h) attention
-        let mut ctx = vec![0f32; bs * d];
-        let mut qh = vec![0f32; seq * hd];
-        let mut kh = vec![0f32; seq * hd];
-        let mut vh = vec![0f32; seq * hd];
+        let mut ctxbuf = ctx.arena.take(bs * d);
+        let mut qh = ctx.arena.take(seq * hd);
+        let mut kh = ctx.arena.take(seq * hd);
+        let mut vh = ctx.arena.take(seq * hd);
+        let mut att = ctx.arena.take(seq * hd);
+        let mut scores = ctx.arena.take(seq * seq);
         for b in 0..batch {
             for h in 0..heads {
                 for s in 0..seq {
@@ -379,31 +744,51 @@ fn xlmr_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<H
                     kh[s * hd..(s + 1) * hd].copy_from_slice(&k[src..src + hd]);
                     vh[s * hd..(s + 1) * hd].copy_from_slice(&v[src..src + hd]);
                 }
-                let att = ops::attention(&qh, &kh, &vh, 1, seq, hd);
+                ops::attention_into(&qh, &kh, &vh, 1, seq, hd, &mut scores, &mut att);
                 for s in 0..seq {
                     let dst = (b * seq + s) * d + h * hd;
-                    ctx[dst..dst + hd].copy_from_slice(&att[s * hd..(s + 1) * hd]);
+                    ctxbuf[dst..dst + hd].copy_from_slice(&att[s * hd..(s + 1) * hd]);
                 }
             }
         }
-        let o = ops::fc(&ctx, env.f32(&format!("{p}wo"))?, env.f32(&format!("{p}bo"))?, bs, d, d);
+        ctx.arena.give(scores);
+        ctx.arena.give(att);
+        ctx.arena.give(vh);
+        ctx.arena.give(kh);
+        ctx.arena.give(qh);
+        ctx.arena.give(v);
+        ctx.arena.give(k);
+        ctx.arena.give(q);
+        // output projection reuses y
+        fc_dispatch(env, ctx, fmt2(&mut nm, &p, "wo"), fmt2(&mut nb, &p, "bo"), &ctxbuf, bs, d, d, &mut y)?;
         for i in 0..bs * d {
-            x[i] += o[i];
+            x[i] += y[i];
         }
-        // FFN
-        let mut y = x.clone();
-        ops::layernorm(&mut y, env.f32(&format!("{p}ln2_g"))?, env.f32(&format!("{p}ln2_b"))?, bs, d, 1e-5);
-        let mut h1 = ops::fc(&y, env.f32(&format!("{p}w1"))?, env.f32(&format!("{p}b1"))?, bs, d, ffn);
+        ctx.arena.give(ctxbuf);
+        // FFN (reuse y for the normed copy)
+        y.copy_from_slice(&x);
+        let g = env.f32(fmt2(&mut nm, &p, "ln2_g"))?;
+        let gb = env.f32(fmt2(&mut nb, &p, "ln2_b"))?;
+        ops::layernorm(&mut y, g, gb, bs, d, 1e-5);
+        let mut h1 = ctx.arena.take(bs * ffn);
+        fc_dispatch(env, ctx, fmt2(&mut nm, &p, "w1"), fmt2(&mut nb, &p, "b1"), &y, bs, d, ffn, &mut h1)?;
         ops::gelu(&mut h1);
-        let h2 = ops::fc(&h1, env.f32(&format!("{p}w2"))?, env.f32(&format!("{p}b2"))?, bs, ffn, d);
+        let mut h2 = ctx.arena.take(bs * d);
+        fc_dispatch(env, ctx, fmt2(&mut nm, &p, "w2"), fmt2(&mut nb, &p, "b2"), &h1, bs, ffn, d, &mut h2)?;
         for i in 0..bs * d {
             x[i] += h2[i];
         }
+        ctx.arena.give(h2);
+        ctx.arena.give(h1);
+        ctx.arena.give(y);
     }
+    ctx.arena.give_str(p);
+    ctx.arena.give_str(nb);
+    ctx.arena.give_str(nm);
 
     ops::layernorm(&mut x, env.f32("ln_f_g")?, env.f32("ln_f_b")?, bs, d, 1e-5);
     // masked mean pool over valid positions
-    let mut pooled = vec![0f32; batch * d];
+    let mut pooled = ctx.arena.take(batch * d);
     for b in 0..batch {
         let valid = (pad_len[b].max(0) as usize).min(seq).max(0);
         let denom = valid.max(1) as f32;
@@ -416,38 +801,57 @@ fn xlmr_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<H
             pooled[b * d + t] /= denom;
         }
     }
-    Ok(vec![
-        HostTensor::f32(pooled, &[batch, d]),
-        HostTensor::f32(x, &[batch, seq, d]),
-    ])
+    let mut outs = ctx.arena.take_outputs();
+    let tp = ctx.arena.tensor_f32(pooled, &[batch, d]);
+    outs.push(tp);
+    let tx = ctx.arena.tensor_f32(x, &[batch, seq, d]);
+    outs.push(tx);
+    Ok(outs)
 }
 
 // ---------------------------------------------------------------------------
 // CV trunk
 // ---------------------------------------------------------------------------
 
-fn cv_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<HostTensor>> {
+fn cv_ref(
+    manifest: &Manifest,
+    artifact: &Artifact,
+    env: &Env,
+    ctx: &mut EvalCtx,
+) -> Result<Vec<HostTensor>> {
+    use std::fmt::Write as _;
     let batch = artifact.batch;
     let image = manifest.config_usize("cv", "image")?;
     let classes = manifest.config_usize("cv", "classes")?;
     let stem_ch = manifest.config_usize("cv", "stem_ch")?;
     let groups = manifest.config_usize("cv", "groups")?;
-    let stages: Vec<(usize, usize)> = manifest
-        .configs
-        .get("cv")
-        .and_then(|m| m.get("stages"))
-        .and_then(crate::util::json::Json::as_arr)
-        .map(|a| {
-            a.iter()
-                .filter_map(|s| {
-                    Some((s.idx(0)?.as_usize()?, s.idx(1)?.as_usize()?))
-                })
-                .collect()
-        })
-        .ok_or_else(|| err!("manifest configs.cv.stages missing"))?;
+    // stages fit a fixed array so request evaluation does not allocate
+    let mut stages = [(0usize, 0usize); 8];
+    let mut n_stages = 0usize;
+    {
+        let arr = manifest
+            .configs
+            .get("cv")
+            .and_then(|m| m.get("stages"))
+            .and_then(crate::util::json::Json::as_arr)
+            .ok_or_else(|| err!("manifest configs.cv.stages missing"))?;
+        for s in arr {
+            if let (Some(ch), Some(blocks)) =
+                (s.idx(0).and_then(|v| v.as_usize()), s.idx(1).and_then(|v| v.as_usize()))
+            {
+                if n_stages == stages.len() {
+                    bail!("cv stages exceed the supported maximum of {}", stages.len());
+                }
+                stages[n_stages] = (ch, blocks);
+                n_stages += 1;
+            }
+        }
+    }
 
     let img = env.f32("image")?;
-    let mut x = ops::conv2d(
+    let (mut h, mut w) = (image.div_ceil(2), image.div_ceil(2));
+    let mut x = ctx.arena.take(batch * h * w * stem_ch);
+    ops::conv2d_into(
         img,
         env.f32("stem_w")?,
         env.f32("stem_b")?,
@@ -460,61 +864,71 @@ fn cv_ref(manifest: &Manifest, artifact: &Artifact, env: &Env) -> Result<Vec<Hos
         stem_ch,
         2,
         1,
+        &mut x,
     );
     ops::relu(&mut x);
-    let mut h = image.div_ceil(2);
-    let mut w = h;
     let mut cin = stem_ch;
-    for (si, &(ch, blocks)) in stages.iter().enumerate() {
+    let mut nm = ctx.arena.take_str();
+    let mut nb = ctx.arena.take_str();
+    let mut pfx = ctx.arena.take_str();
+    for (si, &(ch, blocks)) in stages[..n_stages].iter().enumerate() {
         for bi in 0..blocks {
-            let p = format!("s{si}b{bi}");
+            pfx.clear();
+            let _ = write!(pfx, "s{si}b{bi}");
             let stride = if bi == 0 && si > 0 { 2 } else { 1 };
-            let mut y = ops::conv2d(
-                &x,
-                env.f32(&format!("{p}_pw1_w"))?,
-                env.f32(&format!("{p}_pw1_b"))?,
-                batch, h, w, cin, 1, 1, ch, 1, 1,
-            );
+            let mut y = ctx.arena.take(batch * h * w * ch);
+            let w1 = env.f32(fmt2(&mut nm, &pfx, "_pw1_w"))?;
+            let b1 = env.f32(fmt2(&mut nb, &pfx, "_pw1_b"))?;
+            ops::conv2d_into(&x, w1, b1, batch, h, w, cin, 1, 1, ch, 1, 1, &mut y);
             ops::relu(&mut y);
-            let mut y2 = ops::conv2d(
-                &y,
-                env.f32(&format!("{p}_gw_w"))?,
-                env.f32(&format!("{p}_gw_b"))?,
-                batch, h, w, ch, 3, 3, ch, stride, groups,
-            );
-            ops::relu(&mut y2);
             let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
-            let y3 = ops::conv2d(
-                &y2,
-                env.f32(&format!("{p}_pw2_w"))?,
-                env.f32(&format!("{p}_pw2_b"))?,
-                batch, oh, ow, ch, 1, 1, ch, 1, 1,
-            );
+            let mut y2 = ctx.arena.take(batch * oh * ow * ch);
+            let gw = env.f32(fmt2(&mut nm, &pfx, "_gw_w"))?;
+            let gb = env.f32(fmt2(&mut nb, &pfx, "_gw_b"))?;
+            ops::conv2d_into(&y, gw, gb, batch, h, w, ch, 3, 3, ch, stride, groups, &mut y2);
+            ops::relu(&mut y2);
+            ctx.arena.give(y);
+            let mut y3 = ctx.arena.take(batch * oh * ow * ch);
+            let pw2 = env.f32(fmt2(&mut nm, &pfx, "_pw2_w"))?;
+            let pb2 = env.f32(fmt2(&mut nb, &pfx, "_pw2_b"))?;
+            ops::conv2d_into(&y2, pw2, pb2, batch, oh, ow, ch, 1, 1, ch, 1, 1, &mut y3);
+            ctx.arena.give(y2);
             // residual
-            let res = if cin != ch || stride != 1 {
-                ops::conv2d(
-                    &x,
-                    env.f32(&format!("{p}_proj_w"))?,
-                    env.f32(&format!("{p}_proj_b"))?,
-                    batch, h, w, cin, 1, 1, ch, stride, 1,
-                )
+            if cin != ch || stride != 1 {
+                let mut res = ctx.arena.take(batch * oh * ow * ch);
+                let pw = env.f32(fmt2(&mut nm, &pfx, "_proj_w"))?;
+                let pb = env.f32(fmt2(&mut nb, &pfx, "_proj_b"))?;
+                ops::conv2d_into(&x, pw, pb, batch, h, w, cin, 1, 1, ch, stride, 1, &mut res);
+                for i in 0..y3.len() {
+                    y3[i] += res[i];
+                }
+                ctx.arena.give(res);
             } else {
-                x.clone()
-            };
-            let mut sum: Vec<f32> = y3.iter().zip(&res).map(|(a, b)| a + b).collect();
-            ops::relu(&mut sum);
-            x = sum;
+                for i in 0..y3.len() {
+                    y3[i] += x[i];
+                }
+            }
+            ops::relu(&mut y3);
+            ctx.arena.give(std::mem::replace(&mut x, y3));
             h = oh;
             w = ow;
             cin = ch;
         }
     }
-    let emb = ops::global_avgpool(&x, batch, h, w, cin);
-    let logits = ops::fc(&emb, env.f32("head_w")?, env.f32("head_b")?, batch, cin, classes);
-    Ok(vec![
-        HostTensor::f32(logits, &[batch, classes]),
-        HostTensor::f32(emb, &[batch, cin]),
-    ])
+    ctx.arena.give_str(pfx);
+    let mut emb = ctx.arena.take(batch * cin);
+    ops::global_avgpool_into(&x, batch, h, w, cin, &mut emb);
+    ctx.arena.give(x);
+    let mut logits = ctx.arena.take(batch * classes);
+    fc_dispatch(env, ctx, "head_w", "head_b", &emb, batch, cin, classes, &mut logits)?;
+    ctx.arena.give_str(nb);
+    ctx.arena.give_str(nm);
+    let mut outs = ctx.arena.take_outputs();
+    let tl = ctx.arena.tensor_f32(logits, &[batch, classes]);
+    outs.push(tl);
+    let te = ctx.arena.tensor_f32(emb, &[batch, cin]);
+    outs.push(te);
+    Ok(outs)
 }
 
 #[cfg(test)]
@@ -540,5 +954,47 @@ mod tests {
         let a: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
         let b: Vec<f32> = a.iter().map(|x| x + 1e-5).collect();
         assert!(compare("t", &a, &b).passed);
+    }
+
+    #[test]
+    fn relative_l2_basics() {
+        let r = [1.0f32, 2.0, 2.0];
+        assert_eq!(relative_l2(&r, &r), 0.0);
+        let off = [1.1f32, 2.2, 2.2];
+        let e = relative_l2(&off, &r);
+        assert!((e - 0.1).abs() < 1e-6, "{e}");
+    }
+
+    #[test]
+    fn int8_plan_respects_budget_and_skip_rules() {
+        let m = crate::runtime::builtin::builtin_manifest();
+        // XLM-R: projections (k=256) quantize, FFN w2 (k=1024) stays f32,
+        // embeddings and layernorms are never in the plan
+        let art = m.get("xlmr_s64_b4").unwrap();
+        let plan = int8_plan(art);
+        assert!(!plan.is_empty());
+        let by_name =
+            |n: &str| plan.iter().find(|d| d.name == n).unwrap_or_else(|| panic!("{n} missing"));
+        assert!(by_name("l0_wq").quantize);
+        assert!(by_name("l0_w1").quantize);
+        assert!(!by_name("l0_w2").quantize, "k=1024 exceeds the per-layer budget");
+        assert!(plan.iter().all(|d| d.name != "tok_emb" && d.name != "pos_emb"));
+        // DLRM sls: every table quantizes
+        let sls = m.get("dlrm_sls_shard0_b16").unwrap();
+        let plan = int8_plan(sls);
+        assert!(plan.iter().all(|d| d.table && d.quantize));
+        assert!(!plan.is_empty());
+        // DLRM dense f32: the single-row logit layer is skipped entirely
+        let dense = m.get("dlrm_dense_b16_fp32").unwrap();
+        let plan = int8_plan(dense);
+        assert!(plan.iter().all(|d| d.name != "top_w2"));
+        assert!(plan.iter().any(|d| d.quantize));
+    }
+
+    #[test]
+    fn family_budget_grows_with_depth() {
+        assert!(int8_family_budget(1) >= DEFAULT_ERROR_BUDGET);
+        assert!(int8_family_budget(20) > int8_family_budget(5));
+        assert!(int8_family_budget(20) < 0.2);
     }
 }

@@ -50,6 +50,45 @@ impl Clock {
     }
 }
 
+/// Numeric precision a model is prepared at (§V-B). `F32` is the reference
+/// path; `Int8` pre-quantizes eligible FC weights and embedding tables
+/// row-wise at `prepare()` (quantize once, serve many) and dequantizes only
+/// at family output boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    /// Short label for the CLI and bench reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a `--precision` flag value.
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" | "fp32" => Ok(Precision::F32),
+            "int8" => Ok(Precision::Int8),
+            other => Err(crate::err!(
+                "unknown precision '{other}' (expected f32 or int8)"
+            )),
+        }
+    }
+}
+
+/// Options for [`Backend::prepare_with`]; `Default` is the f32 path every
+/// pre-existing call site gets.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrepareOptions {
+    pub precision: Precision,
+}
+
 /// Modeled per-run cost of a prepared model on its pinned card, split into
 /// the two resources a run occupies: the card's compute engines and its
 /// PCIe link. [`Clock::Modeled`] backends report both so multi-request
@@ -111,6 +150,27 @@ pub trait Backend: Send + Sync {
         weights: Vec<(String, HostTensor)>,
         device: &Device,
     ) -> Result<Box<dyn PreparedExec>>;
+
+    /// [`Backend::prepare`] with explicit [`PrepareOptions`]. The default
+    /// implementation serves only the f32 path; backends with an int8
+    /// serving path (ref, sim) override it.
+    fn prepare_with(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        weights: Vec<(String, HostTensor)>,
+        device: &Device,
+        options: PrepareOptions,
+    ) -> Result<Box<dyn PreparedExec>> {
+        if options.precision != Precision::F32 {
+            return Err(crate::err!(
+                "backend {} does not support {} serving",
+                self.name(),
+                options.precision.name()
+            ));
+        }
+        self.prepare(manifest, art, weights, device)
+    }
 
     /// One-shot execution with *every* input host-side (weights + request
     /// tensors in spec order) — the "before" configuration of the §Perf
@@ -190,17 +250,34 @@ impl Backend for RefBackend {
         manifest: &Arc<Manifest>,
         art: &Artifact,
         weights: Vec<(String, HostTensor)>,
+        device: &Device,
+    ) -> Result<Box<dyn PreparedExec>> {
+        self.prepare_with(manifest, art, weights, device, PrepareOptions::default())
+    }
+
+    fn prepare_with(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        weights: Vec<(String, HostTensor)>,
         _device: &Device,
+        options: PrepareOptions,
     ) -> Result<Box<dyn PreparedExec>> {
         self.compile(manifest, art)?;
         // Validate + index the weight half of the evaluation environment
         // once, here; every subsequent run() shares it by Arc and never
         // copies a weight buffer again (host-side "device-resident", §VI-C).
         let weights = validate::Env::weight_env(art, weights)?;
+        let quant = match options.precision {
+            Precision::F32 => None,
+            Precision::Int8 => Some(prepare_int8(manifest, art, &weights)?),
+        };
         Ok(Box::new(RefPrepared {
+            reserve_bytes: validate::peak_scratch_bytes(manifest, art),
             manifest: Arc::clone(manifest),
             art: art.clone(),
             weights,
+            quant,
         }))
     }
 
@@ -217,19 +294,81 @@ impl Backend for RefBackend {
     }
 }
 
+/// Deterministic seed for the int8 accuracy-gate inputs (distinct from the
+/// weight seed so the gate does not see weight-correlated inputs).
+const GATE_SEED: u64 = 0xFB1A_6A7E;
+
+/// Build + gate the int8 serving plan at `prepare()`: quantize eligible
+/// weights row-wise once, then run the quantized evaluator against the f32
+/// reference on synthesized inputs and require the relative L2 error of
+/// every output to fit the family budget (§V-B/V-C — no int8 model goes
+/// live without clearing the accuracy gate).
+fn prepare_int8(
+    manifest: &Arc<Manifest>,
+    art: &Artifact,
+    weights: &validate::WeightEnv,
+) -> Result<validate::QuantMap> {
+    let quant = validate::quantize_for_serving(art, weights);
+    if quant.is_empty() {
+        // nothing eligible (e.g. an already-quantized WeightQ artifact):
+        // serving proceeds on the artifact's own numerics, nothing to gate
+        return Ok(quant);
+    }
+    let inputs = crate::serving::test_inputs_for(manifest, art, GATE_SEED)?;
+    let refs: Vec<&HostTensor> = inputs.iter().collect();
+    let env = validate::Env::from_weights(art, weights, &refs)?;
+    let f32_outs = validate::eval(manifest, art, &env)?;
+    let q_outs = crate::numerics::arena::with_arena(|a| {
+        validate::eval_with(
+            manifest,
+            art,
+            &env,
+            &mut validate::EvalCtx { quant: Some(&quant), arena: a },
+        )
+    })?;
+    let budget = validate::int8_family_budget(quant.len());
+    for (i, (q, f)) in q_outs.iter().zip(&f32_outs).enumerate() {
+        let (q, f) = match (q.as_f32(), f.as_f32()) {
+            (Some(q), Some(f)) => (q, f),
+            _ => continue,
+        };
+        let rel = validate::relative_l2(q, f);
+        if rel > budget {
+            return Err(crate::err!(
+                "int8 accuracy gate failed for {}: output {i} relative L2 \
+                 {rel:.4} exceeds budget {budget:.4} ({} quantized weights)",
+                art.name,
+                quant.len()
+            ));
+        }
+    }
+    Ok(quant)
+}
+
 /// Weights held host-side ("device-resident" for the interpreter) + the
 /// artifact spec and manifest configs needed at execution time. The weight
 /// env is prebuilt at `prepare()`; `run` only binds borrowed request
-/// tensors to it — no per-request weight memcpy.
+/// tensors to it — no per-request weight memcpy. `quant` is the int8
+/// serving plan (present only for [`Precision::Int8`]); `reserve_bytes`
+/// pre-sizes each worker's arena on first contact.
 struct RefPrepared {
     manifest: Arc<Manifest>,
     art: Artifact,
     weights: validate::WeightEnv,
+    quant: Option<validate::QuantMap>,
+    reserve_bytes: usize,
 }
 
 impl PreparedExec for RefPrepared {
     fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-        let env = validate::Env::from_weights(&self.art, &self.weights, inputs)?;
-        validate::eval(&self.manifest, &self.art, &env)
+        // Positional env + pooled scratch: zero heap allocations per request
+        // in steady state (the arena recycles activations, name strings and
+        // output shells; `reserve` is an idempotent capacity check).
+        let env = validate::Env::positional(&self.art, &self.weights, inputs)?;
+        crate::numerics::arena::with_arena(|a| {
+            a.reserve(self.reserve_bytes);
+            let mut ctx = validate::EvalCtx { quant: self.quant.as_ref(), arena: a };
+            validate::eval_with(&self.manifest, &self.art, &env, &mut ctx)
+        })
     }
 }

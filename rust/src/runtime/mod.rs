@@ -32,7 +32,9 @@ pub mod device;
 pub mod pjrt;
 pub mod sim_backend;
 
-pub use backend::{Backend, Clock, ModeledCost, PreparedExec, RefBackend};
+pub use backend::{
+    Backend, Clock, ModeledCost, Precision, PrepareOptions, PreparedExec, RefBackend,
+};
 pub use sim_backend::SimBackend;
 
 use crate::numerics::HostTensor;
@@ -234,9 +236,22 @@ impl Engine {
         name: &str,
         weights: Vec<(String, HostTensor)>,
     ) -> Result<PreparedModel> {
+        self.prepare_with(name, weights, PrepareOptions::default())
+    }
+
+    /// [`Engine::prepare`] with explicit [`PrepareOptions`] — the
+    /// `--precision int8` entry point: the backend pre-quantizes eligible
+    /// weights at prepare time and gates the result against the f32
+    /// reference before anything serves.
+    pub fn prepare_with(
+        &self,
+        name: &str,
+        weights: Vec<(String, HostTensor)>,
+        options: PrepareOptions,
+    ) -> Result<PreparedModel> {
         let art = self.manifest.get(name)?.clone();
         let device = self.node.place(&art);
-        self.prepare_on(art, weights, device)
+        self.prepare_on_with(art, weights, device, options)
     }
 
     /// [`Engine::prepare`] with an explicit card (multi-card load-balancing
@@ -246,6 +261,17 @@ impl Engine {
         art: Artifact,
         weights: Vec<(String, HostTensor)>,
         device: usize,
+    ) -> Result<PreparedModel> {
+        self.prepare_on_with(art, weights, device, PrepareOptions::default())
+    }
+
+    /// The full-control prepare: explicit card + [`PrepareOptions`].
+    pub fn prepare_on_with(
+        &self,
+        art: Artifact,
+        weights: Vec<(String, HostTensor)>,
+        device: usize,
+        options: PrepareOptions,
     ) -> Result<PreparedModel> {
         if device >= self.node.len() {
             bail!(
@@ -276,10 +302,14 @@ impl Engine {
                 bail!("weight {wname} shape {:?} != spec {:?}", t.shape(), spec.shape);
             }
         }
-        let exec = self
-            .backend
-            .prepare(&self.manifest, &art, weights, self.node.device(device))?;
-        Ok(PreparedModel { art, exec, device })
+        let exec = self.backend.prepare_with(
+            &self.manifest,
+            &art,
+            weights,
+            self.node.device(device),
+            options,
+        )?;
+        Ok(PreparedModel { art, exec, device, precision: options.precision })
     }
 
     /// One-shot execute with all inputs host-side (no resident weights) —
@@ -329,6 +359,8 @@ pub struct PreparedModel {
     exec: Box<dyn PreparedExec>,
     /// Card index this model's weights live on (node placement rule).
     pub device: usize,
+    /// Numeric precision the model was prepared at (§V-B).
+    pub precision: Precision,
 }
 
 impl PreparedModel {
@@ -461,6 +493,35 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("valid backends"), "{err}");
+    }
+
+    #[test]
+    fn int8_prepare_gates_and_tracks_f32() {
+        let e = Engine::builtin();
+        for name in ["dlrm_dense_b16_fp32", "dlrm_sls_shard0_b16", "xlmr_s32_b1", "cv_trunk_b1"] {
+            let art = e.manifest().get(name).unwrap().clone();
+            let q = e
+                .prepare_with(
+                    name,
+                    WeightGen::new(7).weights_for(&art),
+                    PrepareOptions { precision: Precision::Int8 },
+                )
+                .unwrap_or_else(|err| panic!("{name}: int8 prepare failed: {err}"));
+            assert_eq!(q.precision, Precision::Int8);
+            let f = e.prepare(name, WeightGen::new(7).weights_for(&art)).unwrap();
+            assert_eq!(f.precision, Precision::F32);
+            let inputs =
+                crate::serving::test_inputs_for(e.manifest(), &art, 3).unwrap();
+            let qa = q.run(&inputs).unwrap();
+            let fa = f.run(&inputs).unwrap();
+            for (a, b) in qa.iter().zip(&fa) {
+                let rel = crate::numerics::validate::relative_l2(
+                    a.as_f32().unwrap(),
+                    b.as_f32().unwrap(),
+                );
+                assert!(rel < 0.2, "{name}: int8 drifted rel L2 {rel}");
+            }
+        }
     }
 
     #[test]

@@ -27,7 +27,9 @@ use crate::graph::{Graph, NodeId};
 use crate::numerics::HostTensor;
 use crate::platform::{CardSpec, NodeSpec};
 use crate::runtime::artifact::{Artifact, InputKind, Manifest};
-use crate::runtime::backend::{Backend, Clock, ModeledCost, PreparedExec, RefBackend};
+use crate::runtime::backend::{
+    Backend, Clock, ModeledCost, Precision, PrepareOptions, PreparedExec, RefBackend,
+};
 use crate::runtime::device::Device;
 use crate::sim::transfer::TransferModel;
 use crate::util::error::{bail, err, Context, Result};
@@ -60,6 +62,17 @@ impl SimBackend {
         self.model_cost(manifest, art, device).map(|c| c.total_s())
     }
 
+    /// [`SimBackend::model_run_s`] at an explicit serving precision.
+    pub fn model_run_s_at(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        device: &Device,
+        precision: Precision,
+    ) -> Result<f64> {
+        self.model_cost_at(manifest, art, device, precision).map(|c| c.total_s())
+    }
+
     /// [`SimBackend::model_run_s`] with the compute/transfer split kept
     /// apart — the on-card makespan is costed on the *pinned device's own*
     /// [`CardSpec`] (vendor-mix nodes give cards different specs), the PCIe
@@ -70,6 +83,20 @@ impl SimBackend {
         manifest: &Arc<Manifest>,
         art: &Artifact,
         device: &Device,
+    ) -> Result<ModeledCost> {
+        self.model_cost_at(manifest, art, device, Precision::F32)
+    }
+
+    /// [`SimBackend::model_cost`] at an explicit serving precision: int8
+    /// serving moves the eligible GEMMs onto the card's int8 engine column
+    /// ([`CardSpec::peak_ops`] with `int8 = true`) and halves their weight
+    /// bytes, so the roofline shifts exactly where the runtime quantizes.
+    pub fn model_cost_at(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        device: &Device,
+        precision: Precision,
     ) -> Result<ModeledCost> {
         // §VI-B co-residency: in the deployed recsys scheme every card up
         // to `sls_cards` hosts an SLS shard *and* a dense replica, so a
@@ -84,7 +111,8 @@ impl SimBackend {
         } else {
             1.0
         };
-        let (graph, nodes, cores) = self.cost_graph(manifest, art, &device.card, co_resident)?;
+        let (graph, nodes, cores) =
+            self.cost_graph(manifest, art, &device.card, co_resident, precision)?;
         let plan = parallelize::parallelize(&graph, &device.card, self.cfg.compiler.parallelize);
         let sched = placement::schedule_shared_dram(
             &graph,
@@ -110,6 +138,7 @@ impl SimBackend {
         art: &Artifact,
         card: &CardSpec,
         co_resident: bool,
+        precision: Precision,
     ) -> Result<(Graph, Vec<NodeId>, usize)> {
         let cores = card.accel_cores.max(1);
         // §VI-B core split between the co-resident SLS and dense partitions;
@@ -118,7 +147,7 @@ impl SimBackend {
             .clamp(1, cores.saturating_sub(1).max(1));
         match (art.model.as_str(), art.role.as_str()) {
             ("dlrm", "sls") => {
-                let spec = dlrm_spec(manifest, art)?;
+                let spec = dlrm_spec(manifest, art, precision)?;
                 let g = dlrm(&spec, art.batch);
                 // this shard runs only its own tables' SLS ops; tables are
                 // homogeneous, so any `n_tables` of the graph's SLS nodes
@@ -137,7 +166,7 @@ impl SimBackend {
                 Ok((g, nodes, if co_resident { sls_cores } else { cores }))
             }
             ("dlrm", "dense") => {
-                let spec = dlrm_spec(manifest, art)?;
+                let spec = dlrm_spec(manifest, art, precision)?;
                 let g = dlrm(&spec, art.batch);
                 // dense partition = everything that is not an embedding
                 // lookup and not host-resident (Fig. 6 right box); it runs
@@ -162,6 +191,8 @@ impl SimBackend {
                     vocab: manifest.config_usize("xlmr", "vocab")?,
                     // §V-B: "The NLP results in this paper reflect FP16"
                     fp16: true,
+                    // int8 serving quantizes the d_model-contraction GEMMs
+                    int8_fc: precision == Precision::Int8,
                 };
                 let g = xlmr(&spec, art.batch, seq);
                 let nodes: Vec<NodeId> =
@@ -288,7 +319,7 @@ impl Backend for SimBackend {
         self.inner.compile(manifest, art)?;
         // "compilation" additionally checks the cost model can be built
         // (co-residency only changes core counts, not constructibility)
-        self.cost_graph(manifest, art, &self.cfg.node.card, true).map(|_| ())
+        self.cost_graph(manifest, art, &self.cfg.node.card, true, Precision::F32).map(|_| ())
     }
 
     fn prepare(
@@ -298,10 +329,23 @@ impl Backend for SimBackend {
         weights: Vec<(String, HostTensor)>,
         device: &Device,
     ) -> Result<Box<dyn PreparedExec>> {
+        self.prepare_with(manifest, art, weights, device, PrepareOptions::default())
+    }
+
+    fn prepare_with(
+        &self,
+        manifest: &Arc<Manifest>,
+        art: &Artifact,
+        weights: Vec<(String, HostTensor)>,
+        device: &Device,
+        options: PrepareOptions,
+    ) -> Result<Box<dyn PreparedExec>> {
         let cost = self
-            .model_cost(manifest, art, device)
+            .model_cost_at(manifest, art, device, options.precision)
             .with_context(|| format!("modeling artifact {} on card {}", art.name, device.id))?;
-        let exec = self.inner.prepare(manifest, art, weights, device)?;
+        // numerics (including int8 quantization + the accuracy gate) are
+        // the reference backend's — outputs stay bit-identical to `ref`
+        let exec = self.inner.prepare_with(manifest, art, weights, device, options)?;
         Ok(Box::new(SimPrepared { exec, cost }))
     }
 
@@ -318,9 +362,12 @@ impl Backend for SimBackend {
 /// Build the cost-model DLRM spec from the manifest configs. The cost graph
 /// stores tables in their deployed quantized form (§V-B), regardless of the
 /// f32 tensors the reference numerics carry.
-fn dlrm_spec(manifest: &Arc<Manifest>, art: &Artifact) -> Result<DlrmSpec> {
+fn dlrm_spec(manifest: &Arc<Manifest>, art: &Artifact, precision: Precision) -> Result<DlrmSpec> {
     let max_lookups = manifest.config_usize("dlrm", "max_lookups")?;
-    let quantized_fc = art.inputs.iter().any(|s| s.kind == InputKind::WeightQ);
+    // FCs run int8 when the artifact ships pre-quantized weights OR the
+    // runtime quantizes at prepare() (--precision int8 on an fp32 artifact)
+    let quantized_fc = art.inputs.iter().any(|s| s.kind == InputKind::WeightQ)
+        || precision == Precision::Int8;
     Ok(DlrmSpec {
         name: "dlrm_cost",
         num_tables: manifest.config_usize("dlrm", "num_tables")?,
@@ -396,6 +443,25 @@ mod tests {
         let q = b.model_run_s(&m, m.get("dlrm_dense_b32_int8").unwrap(), dev).unwrap();
         let f = b.model_run_s(&m, m.get("dlrm_dense_b32_fp32").unwrap(), dev).unwrap();
         assert!(q <= f, "int8 {q} fp32 {f}");
+    }
+
+    #[test]
+    fn int8_precision_never_models_slower() {
+        let b = sim();
+        let m = Arc::new(builtin_manifest());
+        let node = Node::new(b.config().node.clone());
+        let dev = node.device(0);
+        for name in ["dlrm_dense_b16_fp32", "xlmr_s32_b1"] {
+            let art = m.get(name).unwrap();
+            let f = b.model_run_s_at(&m, art, dev, Precision::F32).unwrap();
+            let q = b.model_run_s_at(&m, art, dev, Precision::Int8).unwrap();
+            assert!(q <= f, "{name}: int8 {q} fp32 {f}");
+        }
+        // the dense MLP is compute-bound enough that int8 strictly wins
+        let art = m.get("dlrm_dense_b64_fp32").unwrap();
+        let f = b.model_run_s_at(&m, art, dev, Precision::F32).unwrap();
+        let q = b.model_run_s_at(&m, art, dev, Precision::Int8).unwrap();
+        assert!(q < f, "b64 dense: int8 {q} fp32 {f}");
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! keeps the planner functional (metrics are then measured, not modeled).
 
 use crate::runtime::artifact::table_index;
-use crate::runtime::{Clock, Engine, ModeledCost, PreparedModel};
+use crate::runtime::{Clock, Engine, ModeledCost, Precision, PrepareOptions, PreparedModel};
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
 use crate::serving::batcher::{bucket_for, pad_batch, NlpBatch};
@@ -172,6 +172,12 @@ impl ReplicaManager {
             }
         };
 
+        // recsys precision: "int8" selects the pre-quantized dense artifact
+        // and quantizes the SLS tables row-wise at prepare, same as
+        // RecsysServer
+        let recsys_prec = Precision::parse(&cfg.recsys_precision)?;
+        let recsys_opts = PrepareOptions { precision: recsys_prec };
+
         // --- DLRM SLS shards (shared, one per compiled shard) ------------
         let mut shard_arts: Vec<_> = manifest
             .select("dlrm", "sls")
@@ -210,20 +216,24 @@ impl ReplicaManager {
             }
             let card = placer.next(Some(shard_idx));
             let weights = WeightGen::new(WEIGHT_SEED).weights_for(&art);
-            let model = Arc::new(engine.prepare_on(art, weights, card)?);
+            let model = Arc::new(engine.prepare_on_with(art, weights, card, recsys_opts)?);
             let cost = cost_of(&model)?;
             sls.push(SlsShard { tables, card, cost, model });
         }
 
         // --- DLRM dense replicas -----------------------------------------
-        let dense_name =
-            format!("dlrm_dense_b{}_{}", cfg.recsys_batch, cfg.recsys_precision);
+        let dense_suffix = match recsys_prec {
+            Precision::F32 => "fp32",
+            Precision::Int8 => "int8",
+        };
+        let dense_name = format!("dlrm_dense_b{}_{}", cfg.recsys_batch, dense_suffix);
         let dense_art = manifest.get(&dense_name)?.clone();
         let mut recsys = Vec::new();
         for _ in 0..cfg.replicas {
             let card = placer.next(None);
             let weights = WeightGen::new(WEIGHT_SEED).weights_for(&dense_art);
-            let model = Arc::new(engine.prepare_on(dense_art.clone(), weights, card)?);
+            let model =
+                Arc::new(engine.prepare_on_with(dense_art.clone(), weights, card, recsys_opts)?);
             let cost = cost_of(&model)?;
             recsys.push(RecsysReplica { card, cost, model });
         }

@@ -19,10 +19,11 @@ pub mod fleet;
 pub mod policy;
 pub mod simulation;
 
+use crate::numerics::arena;
 use crate::numerics::weights::WeightGen;
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::table_index;
-use crate::runtime::{Clock, Engine, PreparedModel};
+use crate::runtime::{Clock, Engine, Precision, PrepareOptions, PreparedModel};
 use crate::util::error::{err, Context, Result};
 use crate::util::stats::Histogram;
 use crate::util::threadpool::ThreadPool;
@@ -91,6 +92,11 @@ pub struct ServeOptions {
     pub clock: Option<Clock>,
     /// When `Some`, serving errors unless the engine's backend matches.
     pub backend: Option<String>,
+    /// When `Some`, serving errors unless the server's models were
+    /// prepared at this precision (see [`Precision`] and the servers'
+    /// `with_precision` constructors) — for benches that only mean
+    /// anything on one numerics path.
+    pub precision: Option<Precision>,
 }
 
 impl Default for ServeOptions {
@@ -102,13 +108,14 @@ impl Default for ServeOptions {
             length_aware: true,
             clock: None,
             backend: None,
+            precision: None,
         }
     }
 }
 
 impl ServeOptions {
-    /// Validate the clock/backend expectations against a server.
-    fn check(&self, clock: Clock, backend: &str) -> Result<()> {
+    /// Validate the clock/backend/precision expectations against a server.
+    fn check(&self, clock: Clock, backend: &str, precision: Precision) -> Result<()> {
         if let Some(want) = self.clock {
             if want != clock {
                 return Err(err!(
@@ -122,6 +129,15 @@ impl ServeOptions {
             if want != backend {
                 return Err(err!(
                     "ServeOptions requires backend '{want}' but the engine runs '{backend}'"
+                ));
+            }
+        }
+        if let Some(want) = self.precision {
+            if want != precision {
+                return Err(err!(
+                    "ServeOptions requires {} serving but the models were prepared at {}",
+                    want.name(),
+                    precision.name()
                 ));
             }
         }
@@ -311,6 +327,8 @@ pub struct RecsysServer {
     /// Engine backend name, for [`ServeOptions::backend`] validation.
     backend: String,
     modeled: Option<RecsysModeled>,
+    /// Serving precision the models were prepared at.
+    precision: Precision,
     pub batch: usize,
     pub num_tables: usize,
     pub embed_dim: usize,
@@ -336,6 +354,11 @@ impl RecsysServer {
         let mut gen = WeightGen::new(WEIGHT_SEED);
         let num_tables = engine.manifest().config_usize("dlrm", "num_tables")?;
         let embed_dim = engine.manifest().config_usize("dlrm", "embed_dim")?;
+        // "int8" selects the pre-quantized dense artifact AND quantizes the
+        // SLS embedding tables row-wise at prepare() (quantize once, serve
+        // many — §V-A); "fp32" is the float reference path end to end
+        let prec = Precision::parse(precision)?;
+        let opts = PrepareOptions { precision: prec };
 
         let mut shards = Vec::new();
         for art in engine.manifest().select("dlrm", "sls") {
@@ -361,7 +384,7 @@ impl RecsysServer {
                 ));
             }
             let weights = gen.weights_for(art);
-            let prepared = engine.prepare(&art.name, weights)?;
+            let prepared = engine.prepare_with(&art.name, weights, opts)?;
             shards.push((tables, Arc::new(prepared)));
         }
         if shards.is_empty() {
@@ -369,10 +392,14 @@ impl RecsysServer {
         }
         shards.sort_by_key(|(t, _)| t[0]);
 
-        let dense_name = format!("dlrm_dense_b{batch}_{precision}");
+        let suffix = match prec {
+            Precision::F32 => "fp32",
+            Precision::Int8 => "int8",
+        };
+        let dense_name = format!("dlrm_dense_b{batch}_{suffix}");
         let art = engine.manifest().get(&dense_name)?.clone();
         let weights = gen.weights_for(&art);
-        let dense = Arc::new(engine.prepare(&dense_name, weights)?);
+        let dense = Arc::new(engine.prepare_with(&dense_name, weights, opts)?);
 
         let sls_pool = (threads > 1 && shards.len() > 1)
             .then(|| ThreadPool::new(threads.min(shards.len())));
@@ -407,10 +434,16 @@ impl RecsysServer {
             clock,
             backend,
             modeled,
+            precision: prec,
             batch,
             num_tables,
             embed_dim,
         })
+    }
+
+    /// The precision this server's models were prepared at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// The clock this server's metrics are on.
@@ -448,15 +481,18 @@ impl RecsysServer {
     fn run_sls_sequential(&self, req: &RecsysRequest) -> Result<HostTensor> {
         let b = self.batch;
         let d = self.embed_dim;
-        let mut sparse = vec![0f32; b * self.num_tables * d];
+        // arena-backed gather buffer + shape: the sequential path allocates
+        // nothing per request once the worker's pools are warm
+        let mut sparse = arena::with_arena(|a| a.take(b * self.num_tables * d));
         for (tables, shard) in &self.shards {
             let out = shard.run_refs(&sls_shard_inputs(req, tables))?;
             let pooled = out[0]
                 .as_f32()
                 .ok_or_else(|| err!("sls output not f32"))?;
             self.scatter_shard(&mut sparse, tables, pooled);
+            arena::recycle_outputs(out);
         }
-        Ok(HostTensor::f32(sparse, &[b, self.num_tables, d]))
+        Ok(arena::with_arena(|a| a.tensor_f32(sparse, &[b, self.num_tables, d])))
     }
 
     /// Per-card shards of ONE request in flight together. Shard jobs must be
@@ -487,6 +523,7 @@ impl RecsysServer {
                 .as_f32()
                 .ok_or_else(|| err!("sls output not f32"))?;
             self.scatter_shard(&mut sparse, &self.shards[si].0, pooled);
+            arena::recycle_outputs(out);
             seen += 1;
         }
         if seen != self.shards.len() {
@@ -506,13 +543,17 @@ impl RecsysServer {
             .dense
             .run_refs(&[dense, sparse])
             .context("dense partition")?;
-        Ok(out.swap_remove(0))
+        let scores = out.swap_remove(0);
+        arena::recycle_outputs(out);
+        Ok(scores)
     }
 
     /// Full inference for one request.
     pub fn infer(&self, req: &RecsysRequest) -> Result<HostTensor> {
         let sparse = self.run_sls(req)?;
-        self.run_dense(&req.dense, &sparse)
+        let scores = self.run_dense(&req.dense, &sparse)?;
+        arena::recycle_tensor(sparse);
+        Ok(scores)
     }
 
     /// Unified entry point (see [`ServeOptions`]): `workers > 1` serves
@@ -524,7 +565,7 @@ impl RecsysServer {
         reqs: Vec<RecsysRequest>,
         opts: &ServeOptions,
     ) -> Result<ServerMetrics> {
-        opts.check(self.clock, &self.backend)?;
+        opts.check(self.clock, &self.backend, self.precision)?;
         if opts.workers > 1 || !opts.pipeline {
             self.serve_concurrent(reqs, opts.workers.max(1))
         } else {
@@ -570,7 +611,9 @@ impl RecsysServer {
         let wall0 = Instant::now();
         let mut completed = 0usize;
         for (_i, t0, dense, sparse) in rx.iter() {
-            let _scores = self.run_dense(&dense, &sparse)?;
+            let scores = self.run_dense(&dense, &sparse)?;
+            arena::recycle_tensor(scores);
+            arena::recycle_tensor(sparse);
             let dt = match self.modeled {
                 None => t0.elapsed().as_secs_f64(),
                 Some(m) => m.request_s(),
@@ -621,7 +664,7 @@ impl RecsysServer {
             let mut latency = Histogram::latency();
             for req in &reqs {
                 let t0 = Instant::now();
-                self.infer(req)?;
+                arena::recycle_tensor(self.infer(req)?);
                 let dt = match modeled {
                     None => t0.elapsed().as_secs_f64(),
                     Some(m) => m.request_s(),
@@ -635,7 +678,10 @@ impl RecsysServer {
         let reqs = Arc::new(reqs);
         let (latency, completed, items) = fan_out_workers(workers, n, false, clock, move |i| {
             let modeled_s = me.modeled.map(|m| m.request_s()).unwrap_or(0.0);
-            me.infer(&reqs[i]).map(|_| (me.batch, modeled_s))
+            me.infer(&reqs[i]).map(|scores| {
+                arena::recycle_tensor(scores);
+                (me.batch, modeled_s)
+            })
         })?;
         let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
         Ok(ServerMetrics { latency, completed, items, wall_s, clock })
@@ -654,19 +700,31 @@ pub struct NlpServer {
     clock: Clock,
     /// Engine backend name, for [`ServeOptions::backend`] validation.
     backend: String,
+    /// Serving precision the nets were prepared at.
+    precision: Precision,
     pub buckets: Vec<usize>,
     pub d_model: usize,
 }
 
 impl NlpServer {
+    /// f32 reference serving; see [`NlpServer::with_precision`] for int8.
     pub fn new(engine: Arc<Engine>) -> Result<NlpServer> {
+        NlpServer::with_precision(engine, Precision::F32)
+    }
+
+    /// Prepare every bucket×batch net at `precision`. At [`Precision::Int8`]
+    /// the d_model-contraction FC weights quantize row-wise at prepare()
+    /// (ffn2 stays f32 under the per-layer error budget) and each net is
+    /// accuracy-gated against its f32 reference before serving.
+    pub fn with_precision(engine: Arc<Engine>, precision: Precision) -> Result<NlpServer> {
+        let opts = PrepareOptions { precision };
         let mut gen = WeightGen::new(WEIGHT_SEED);
         let mut nets = Vec::new();
         let mut buckets = Vec::new();
         for art in engine.manifest().select("xlmr", "full") {
             let seq = art.seq.ok_or_else(|| err!("xlmr artifact missing seq"))?;
             let weights = gen.weights_for(art);
-            let prepared = engine.prepare(&art.name, weights)?;
+            let prepared = engine.prepare_with(&art.name, weights, opts)?;
             nets.push((seq, art.batch, Arc::new(prepared)));
             if !buckets.contains(&seq) {
                 buckets.push(seq);
@@ -691,7 +749,7 @@ impl NlpServer {
             }
         }
         let backend = engine.backend_name().to_string();
-        Ok(NlpServer { nets, clock, backend, buckets, d_model })
+        Ok(NlpServer { nets, clock, backend, precision, buckets, d_model })
     }
 
     /// The clock this server's metrics are on.
@@ -702,6 +760,11 @@ impl NlpServer {
     /// The engine backend this server executes on.
     pub fn backend_name(&self) -> &str {
         &self.backend
+    }
+
+    /// The precision this server's nets were prepared at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Modeled seconds for one formed batch (the selected bucket×batch
@@ -752,7 +815,13 @@ impl NlpServer {
             HostTensor::i32(lens, &[rows]),
         ])?;
         let pooled = out[0].as_f32().ok_or_else(|| err!("pooled not f32"))?;
-        Ok((0..n).map(|i| pooled[i * self.d_model..(i + 1) * self.d_model].to_vec()).collect())
+        let rows = (0..n)
+            .map(|i| pooled[i * self.d_model..(i + 1) * self.d_model].to_vec())
+            .collect();
+        // run_batch executes and consumes on the same thread, so the output
+        // buffers go straight back to this worker's arena
+        arena::recycle_outputs(out);
+        Ok(rows)
     }
 
     /// Unified entry point (see [`ServeOptions`]): serve a request stream
@@ -763,7 +832,7 @@ impl NlpServer {
         reqs: Vec<crate::workloads::NlpRequest>,
         opts: &ServeOptions,
     ) -> Result<(ServerMetrics, f64)> {
-        opts.check(self.clock, &self.backend)?;
+        opts.check(self.clock, &self.backend, self.precision)?;
         self.serve_batched(reqs, opts.max_batch, opts.length_aware, opts.workers)
     }
 
@@ -898,17 +967,28 @@ pub struct CvServer {
     clock: Clock,
     /// Engine backend name, for [`ServeOptions::backend`] validation.
     backend: String,
+    /// Serving precision the nets were prepared at.
+    precision: Precision,
     pub image: usize,
     pub classes: usize,
 }
 
 impl CvServer {
+    /// f32 reference serving; see [`CvServer::with_precision`] for int8.
     pub fn new(engine: Arc<Engine>) -> Result<CvServer> {
+        CvServer::with_precision(engine, Precision::F32)
+    }
+
+    /// Prepare every batch variant at `precision` ([`Precision::Int8`]
+    /// quantizes the classifier head row-wise at prepare(); conv weights
+    /// stay f32 — they are 4-D and outside the row-wise scheme).
+    pub fn with_precision(engine: Arc<Engine>, precision: Precision) -> Result<CvServer> {
+        let opts = PrepareOptions { precision };
         let mut gen = WeightGen::new(WEIGHT_SEED);
         let mut nets = Vec::new();
         for art in engine.manifest().select("cv", "full") {
             let weights = gen.weights_for(art);
-            let prepared = engine.prepare(&art.name, weights)?;
+            let prepared = engine.prepare_with(&art.name, weights, opts)?;
             nets.push((art.batch, Arc::new(prepared)));
         }
         if nets.is_empty() {
@@ -930,6 +1010,7 @@ impl CvServer {
             nets,
             clock,
             backend: engine.backend_name().to_string(),
+            precision,
             image: engine.manifest().config_usize("cv", "image")?,
             classes: engine.manifest().config_usize("cv", "classes")?,
         })
@@ -943,6 +1024,11 @@ impl CvServer {
     /// The engine backend this server executes on.
     pub fn backend_name(&self) -> &str {
         &self.backend
+    }
+
+    /// The precision this server's nets were prepared at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Modeled seconds per request at a batch size; 0.0 on wall clocks.
@@ -971,6 +1057,7 @@ impl CvServer {
         let mut out = net.run_refs(&[image])?;
         let emb = out.pop().ok_or_else(|| err!("cv output missing embedding"))?;
         let logits = out.pop().ok_or_else(|| err!("cv output missing logits"))?;
+        arena::recycle_outputs(out);
         Ok((logits, emb))
     }
 
@@ -983,7 +1070,7 @@ impl CvServer {
         gen: &mut crate::workloads::CvGen,
         opts: &ServeOptions,
     ) -> Result<ServerMetrics> {
-        opts.check(self.clock, &self.backend)?;
+        opts.check(self.clock, &self.backend, self.precision)?;
         self.serve_closed_loop(n, batch, gen, opts.workers)
     }
 
@@ -1033,7 +1120,9 @@ impl CvServer {
                 let req = gen.next(batch);
                 gen_s += g0.elapsed().as_secs_f64();
                 let t0 = Instant::now();
-                self.infer(&req.image)?;
+                let (logits, emb) = self.infer(&req.image)?;
+                arena::recycle_tensor(logits);
+                arena::recycle_tensor(emb);
                 let dt = match clock {
                     Clock::Wall => t0.elapsed().as_secs_f64(),
                     Clock::Modeled => modeled_req_s,
@@ -1050,7 +1139,11 @@ impl CvServer {
         let me = Arc::clone(self);
         let reqs = Arc::new(reqs);
         let (latency, completed, items) = fan_out_workers(workers, n, false, clock, move |i| {
-            me.infer(&reqs[i].image).map(|_| (batch, modeled_req_s))
+            me.infer(&reqs[i].image).map(|(logits, emb)| {
+                arena::recycle_tensor(logits);
+                arena::recycle_tensor(emb);
+                (batch, modeled_req_s)
+            })
         })?;
         let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
         Ok(ServerMetrics { latency, completed, items, wall_s, clock })

@@ -1,0 +1,331 @@
+//! Integration: the int8 serving path end-to-end — prepare-time row-wise
+//! quantization vs the f32 reference on every model family, bit-determinism
+//! of the cache-blocked kernels against their naive/serial forms, and the
+//! zero-allocation property of the prepared reference hot path.
+
+use fbia::numerics::ops_ref;
+use fbia::numerics::quant::quantize_rowwise_int8;
+use fbia::numerics::validate::{int8_family_budget, int8_plan, relative_l2};
+use fbia::numerics::weights::WeightGen;
+use fbia::numerics::{arena, HostTensor};
+use fbia::runtime::{Engine, Precision, PrepareOptions};
+use fbia::serving::{test_inputs_for, RecsysServer, ServeOptions, WEIGHT_SEED};
+use fbia::util::rng::Rng;
+use fbia::util::stats::cosine_similarity;
+use fbia::workloads::RecsysGen;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Thread-local counting allocator: counts only THIS thread's heap
+// allocations, so the zero-alloc assertion is immune to other test threads
+// running concurrently in the same binary.
+// ---------------------------------------------------------------------------
+
+struct TlCountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for TlCountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: TlCountingAlloc = TlCountingAlloc;
+
+fn my_allocs() -> usize {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// int8-vs-f32 accuracy harness: every family, through the public Engine API
+// ---------------------------------------------------------------------------
+
+/// Prepare `name` at f32 and at int8 with identical weights, run identical
+/// inputs through both, and require every f32 output pair to sit within the
+/// family budget the prepare-time accuracy gate enforces.
+fn check_family(name: &str) {
+    let e = Engine::builtin();
+    let art = e.manifest().get(name).expect("artifact").clone();
+    let n_quantized = int8_plan(&art).iter().filter(|d| d.quantize).count();
+    assert!(n_quantized > 0, "{name}: expected at least one quantizable weight");
+
+    let wf = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+    let wq = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+    let pf = e.prepare_with(name, wf, PrepareOptions::default()).expect("f32 prepare");
+    let pq = e
+        .prepare_with(name, wq, PrepareOptions { precision: Precision::Int8 })
+        .expect("int8 prepare (accuracy gate)");
+    assert_eq!(pf.precision, Precision::F32);
+    assert_eq!(pq.precision, Precision::Int8);
+
+    let inputs = test_inputs_for(e.manifest(), &art, 0xC0FFEE).expect("inputs");
+    let of = pf.run(&inputs).expect("f32 run");
+    let oq = pq.run(&inputs).expect("int8 run");
+    assert_eq!(of.len(), oq.len());
+
+    let budget = int8_family_budget(n_quantized);
+    let mut any_differ = false;
+    for (i, (f, q)) in of.iter().zip(&oq).enumerate() {
+        let (f, q) = match (f.as_f32(), q.as_f32()) {
+            (Some(f), Some(q)) => (f, q),
+            _ => continue,
+        };
+        let rel = relative_l2(q, f);
+        assert!(
+            rel <= budget,
+            "{name} output {i}: relative L2 {rel:.4} exceeds family budget {budget:.4} \
+             ({n_quantized} quantized weights)"
+        );
+        assert!(
+            cosine_similarity(q, f) > 0.98,
+            "{name} output {i}: int8 cosine vs f32 too low"
+        );
+        any_differ |= f != q;
+    }
+    assert!(any_differ, "{name}: int8 outputs identical to f32 — quantization was a no-op");
+}
+
+#[test]
+fn dlrm_sls_int8_within_budget() {
+    check_family("dlrm_sls_shard0_b16");
+}
+
+#[test]
+fn dlrm_dense_int8_within_budget() {
+    check_family("dlrm_dense_b16_fp32");
+}
+
+#[test]
+fn xlmr_int8_within_budget() {
+    check_family("xlmr_s32_b1");
+}
+
+#[test]
+fn cv_int8_within_budget() {
+    check_family("cv_trunk_b1");
+}
+
+#[test]
+fn serve_options_precision_mismatch_is_rejected() {
+    let e = Arc::new(Engine::builtin());
+    let batch = 16;
+    let server = Arc::new(RecsysServer::new(e.clone(), batch, "fp32").unwrap());
+    let mut gen = RecsysGen::from_manifest(5, batch, e.manifest()).unwrap();
+    let reqs = vec![gen.next()];
+    let err = server
+        .serve_with(reqs, &ServeOptions { precision: Some(Precision::Int8), ..Default::default() })
+        .unwrap_err();
+    assert!(err.to_string().contains("int8"), "unhelpful precision error: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Bit-determinism of the blocked kernels
+// ---------------------------------------------------------------------------
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0f32; n];
+    rng.fill_normal_f32(&mut v, 1.0);
+    v
+}
+
+/// Textbook fc loop: per output element, accumulate over t then add bias —
+/// the order the blocked kernel must reproduce exactly.
+fn fc_naive(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += x[i * k + t] * w[j * k + t];
+            }
+            y[i * n + j] = acc + b[j];
+        }
+    }
+    y
+}
+
+#[test]
+fn blocked_fc_bit_identical_to_naive_on_odd_shapes() {
+    let mut rng = Rng::new(41);
+    // shapes chosen to exercise every edge: below MR, below NR, exact
+    // multiples, and remainders on both dimensions
+    for &(m, k, n) in &[(1, 1, 1), (1, 7, 3), (3, 5, 2), (4, 4, 4), (5, 9, 13), (7, 16, 4), (33, 17, 9)] {
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, n * k);
+        let b = randv(&mut rng, n);
+        let naive = fc_naive(&x, &w, &b, m, k, n);
+        let mut y = vec![0f32; m * n];
+        ops_ref::fc_into(&x, &w, &b, m, k, n, &mut y);
+        assert_eq!(y, naive, "fc_into diverged from naive at {m}x{k}x{n}");
+        assert_eq!(ops_ref::fc(&x, &w, &b, m, k, n), naive, "fc diverged at {m}x{k}x{n}");
+    }
+}
+
+/// The documented quant_fc formula, evaluated in exactly the reference
+/// order: symmetric activation quantization, i32 GEMM, float epilogue
+/// `(acc + rowsum·zp)·(xs·scale) + bias`.
+#[allow(clippy::too_many_arguments)]
+fn quant_fc_naive(
+    x: &[f32],
+    wq: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let absmax = x.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-8);
+    let xs = absmax / 127.0;
+    let xq: Vec<i32> = x.iter().map(|&v| (v / xs).round().clamp(-127.0, 127.0) as i32).collect();
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        let row = &xq[i * k..(i + 1) * k];
+        let rowsum: i32 = row.iter().sum();
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            for t in 0..k {
+                acc += row[t] * wq[j * k + t] as i32;
+            }
+            let acc_f = acc as f32 + rowsum as f32 * zp[j];
+            y[i * n + j] = acc_f * (xs * scale[j]) + bias[j];
+        }
+    }
+    y
+}
+
+#[test]
+fn blocked_quant_fc_bit_identical_to_naive_on_odd_shapes() {
+    let mut rng = Rng::new(43);
+    for &(m, k, n) in &[(1, 4, 2), (3, 5, 7), (4, 8, 4), (5, 9, 13), (6, 33, 10)] {
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, n * k);
+        let b = randv(&mut rng, n);
+        let q = quantize_rowwise_int8(&w, n, k);
+        let naive = quant_fc_naive(&x, &q.q, &q.scale, &q.zp, &b, m, k, n);
+        let mut y = vec![0f32; m * n];
+        let mut xq = Vec::new();
+        ops_ref::quant_fc_into(&x, &q.q, &q.scale, &q.zp, &b, m, k, n, &mut xq, &mut y);
+        assert_eq!(y, naive, "quant_fc_into diverged from naive at {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn parallel_kernels_bit_identical_to_serial_above_threshold() {
+    let mut rng = Rng::new(47);
+    // fc: odd dims just above the parallel cutover -> uneven row tiles
+    let (m, k, n) = (65, 257, 256);
+    let x = randv(&mut rng, m * k);
+    let w = randv(&mut rng, n * k);
+    let b = randv(&mut rng, n);
+    let serial = ops_ref::fc_serial(&x, &w, &b, m, k, n);
+    for _ in 0..3 {
+        assert_eq!(ops_ref::fc(&x, &w, &b, m, k, n), serial);
+    }
+
+    // conv2d: odd spatial dims and an odd channel count -> uneven channel
+    // tiles across the pool
+    let (cn, h, wd, cin, kk, cout) = (1, 33, 31, 64, 3, 65);
+    let x = randv(&mut rng, cn * h * wd * cin);
+    let w = randv(&mut rng, kk * kk * cin * cout);
+    let b = randv(&mut rng, cout);
+    let serial = ops_ref::conv2d_serial(&x, &w, &b, cn, h, wd, cin, kk, kk, cout, 1, 1);
+    assert_eq!(ops_ref::conv2d(&x, &w, &b, cn, h, wd, cin, kk, kk, cout, 1, 1), serial);
+}
+
+#[test]
+fn sls_q8_bit_identical_to_sls_over_dequantized_table() {
+    let mut rng = Rng::new(53);
+    let (rows, dim, batch, max_len) = (500, 48, 7, 11);
+    let mut table = vec![0f32; rows * dim];
+    rng.fill_normal_f32(&mut table, 0.1);
+    let q = quantize_rowwise_int8(&table, rows, dim);
+    // the dequantized table: exactly the values sls_q8 streams row by row
+    let dq: Vec<f32> = (0..rows * dim)
+        .map(|i| (q.q[i] as f32 + q.zp[i / dim]) * q.scale[i / dim])
+        .collect();
+    let indices: Vec<i32> = (0..batch * max_len).map(|_| rng.below(rows as u64) as i32).collect();
+    let lengths: Vec<i32> = (0..batch).map(|b| (b % (max_len + 1)) as i32).collect();
+    let mut out_q = vec![0f32; batch * dim];
+    let mut out_f = vec![0f32; batch * dim];
+    ops_ref::sls_q8_into(&q.q, &q.scale, &q.zp, dim, &indices, &lengths, batch, max_len, &mut out_q)
+        .unwrap();
+    ops_ref::sls_into(&dq, dim, &indices, &lengths, batch, max_len, &mut out_f).unwrap();
+    assert_eq!(out_q, out_f);
+}
+
+#[test]
+fn recsys_outputs_identical_across_worker_counts() {
+    let batch = 16;
+    let mut servers = Vec::new();
+    for threads in [1usize, 4] {
+        let e = Arc::new(Engine::builtin());
+        servers.push(Arc::new(RecsysServer::with_threads(e, batch, "int8", threads).unwrap()));
+    }
+    let e = Engine::builtin();
+    let mut gen = RecsysGen::from_manifest(13, batch, e.manifest()).unwrap();
+    for _ in 0..3 {
+        let req = gen.next();
+        let a = servers[0].infer(&req).unwrap();
+        let b = servers[1].infer(&req).unwrap();
+        assert_eq!(
+            a.as_f32().unwrap(),
+            b.as_f32().unwrap(),
+            "sharded-parallel SLS changed the scores"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-allocation steady state on the prepared reference path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn steady_state_ref_serving_is_alloc_free() {
+    let e = Engine::builtin();
+    for (name, precision) in
+        [("dlrm_dense_b16_fp32", Precision::F32), ("dlrm_dense_b16_fp32", Precision::Int8)]
+    {
+        let art = e.manifest().get(name).unwrap().clone();
+        let weights = WeightGen::new(WEIGHT_SEED).weights_for(&art);
+        let prepared = e.prepare_with(name, weights, PrepareOptions { precision }).unwrap();
+        let mut rng = Rng::new(17);
+        let mut dense = vec![0f32; 16 * 256];
+        let mut sparse = vec![0f32; 16 * 8 * 64];
+        rng.fill_normal_f32(&mut dense, 1.0);
+        rng.fill_normal_f32(&mut sparse, 0.1);
+        let dense = HostTensor::f32(dense, &[16, 256]);
+        let sparse = HostTensor::f32(sparse, &[16, 8, 64]);
+        let inputs = [&dense, &sparse];
+        // warmup until the arena pools stop growing
+        for _ in 0..8 {
+            let out = prepared.run_refs(&inputs).unwrap();
+            arena::recycle_outputs(out);
+        }
+        let before = my_allocs();
+        for _ in 0..32 {
+            let out = prepared.run_refs(&inputs).unwrap();
+            arena::recycle_outputs(out);
+        }
+        let delta = my_allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "{name} at {}: {delta} heap allocations across 32 steady-state runs",
+            precision.name()
+        );
+    }
+}
