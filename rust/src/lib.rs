@@ -13,9 +13,11 @@
 //!   backends ([`runtime`] — a hermetic pure-Rust reference interpreter by
 //!   default, PJRT execution of the AOT artifacts behind `--features
 //!   pjrt`), quantization/reference numerics ([`numerics`]), the
-//!   serving stack ([`serving`]), and a static analyzer ([`analysis`])
+//!   serving stack ([`serving`]), a static analyzer ([`analysis`])
 //!   that proves shape/dtype consistency and memory fit and vets
-//!   deployment configs before anything is prepared or simulated.
+//!   deployment configs before anything is prepared or simulated, and an
+//!   observability layer ([`obs`]) that attributes every request's modeled
+//!   latency to pipeline stages and exports Perfetto-loadable traces.
 //!
 //! Python is never on the request path — and with the builtin manifest
 //! ([`runtime::builtin`]) it is not needed at build time either: the
@@ -32,6 +34,7 @@ pub mod compiler;
 pub mod config;
 pub mod graph;
 pub mod numerics;
+pub mod obs;
 pub mod platform;
 pub mod runtime;
 pub mod serving;

@@ -22,6 +22,12 @@
 //!   des               discrete-event core smoke: static vs queue-triggered
 //!                     dynamic batching on one seeded trace, with
 //!                     determinism and conservation checks (sim backend)
+//!   trace             replay a seeded cluster scenario with request-level
+//!                     tracing on (`--mix/--policy/--out trace.json`):
+//!                     verifies tracing-off bit-identity, stage-sum and
+//!                     utilization invariants, compares a NIC-throttled
+//!                     rerun against the unconstrained stage breakdown,
+//!                     and writes a Perfetto-loadable Chrome trace JSON
 //!   lint              static analysis, nothing prepared or simulated:
 //!                     per-op shape/dtype inference over the model graphs,
 //!                     a memory-fit proof against the node spec, and
@@ -41,6 +47,7 @@ use fbia::config::Config;
 use fbia::graph::models::ModelId;
 use fbia::numerics::validate;
 use fbia::numerics::weights::WeightGen;
+use fbia::obs::{chrome_trace, SegKind, Stage, StageStats};
 use fbia::runtime::{Clock, Engine, Precision, SimBackend};
 use fbia::serving::cluster::{self, Cluster, ClusterMetrics, EventKind, NodePolicy, Scenario};
 use fbia::serving::fleet::{
@@ -71,16 +78,44 @@ fn main() {
         Some("capacity") => cmd_capacity(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("des") => cmd_des(&args),
+        Some("trace") => cmd_trace(&args),
         Some("lint") => cmd_lint(&args),
         Some("info") | None => cmd_info(&args),
         Some(other) => Err(err!(
-            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster, des, lint)"
+            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster, des, trace, lint)"
         )),
     };
     if let Err(e) = result {
         eprintln!("fbia: error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Shared stage-latency-attribution table ([`fbia::obs`]): one row per
+/// labeled scope, "mean/p99" milliseconds per stage plus the dominant
+/// stage — the regime label (compute-bound, NIC-bound, queue-bound).
+fn print_stage_table(title: &str, rows: &[(String, &StageStats)]) {
+    println!("\n{title}");
+    let mut t = Table::new(&[
+        "scope", "queue", "batch wait", "transfer", "compute", "network", "dominant",
+    ]);
+    for (label, s) in rows {
+        if s.count() == 0 {
+            continue;
+        }
+        let cell =
+            |stage: Stage| format!("{:.2}/{:.2}", s.mean(stage) * 1e3, s.p99(stage) * 1e3);
+        t.row(&[
+            label.clone(),
+            cell(Stage::Queue),
+            cell(Stage::BatchWait),
+            cell(Stage::Transfer),
+            cell(Stage::Compute),
+            cell(Stage::Network),
+            s.dominant().map(|d| d.name().to_string()).unwrap_or_default(),
+        ]);
+    }
+    t.print();
 }
 
 fn load_config(args: &Args) -> Result<Config> {
@@ -497,6 +532,17 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             ]);
         }
         tf.print();
+        if m.node.stages.count() > 0 {
+            let mut rows: Vec<(String, &StageStats)> =
+                vec![("node".to_string(), &m.node.stages)];
+            for f in &m.per_family {
+                rows.push((f.family.name().to_string(), &f.metrics.stages));
+            }
+            print_stage_table(
+                &format!("stage latency attribution ({}, mean/p99 ms):", detail_policy.name()),
+                &rows,
+            );
+        }
     }
 
     // the acceptance check this subsystem exists for: cost-aware routing
@@ -729,21 +775,26 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         headroom,
         requests,
     )?;
-    println!(
-        "\ncapacity: one node sustains {:.1} QPS; {:.1} QPS target -> {} nodes + {} headroom = {}",
-        report.node_qps,
-        report.target_qps,
-        report.nodes_needed,
-        report.headroom,
-        report.nodes_total
-    );
-    println!(
-        "failure drill (kill 1 of {} at target load): SLA shed {}, in-flight lost {} -> {}",
-        report.nodes_total,
-        report.sla_shed_after_failure,
-        report.failure_shed,
-        if report.survives_single_node_failure { "headroom holds" } else { "HEADROOM INSUFFICIENT" }
-    );
+    println!("\ncapacity plan (failure drill kills 1 of {} at target load):", report.nodes_total);
+    let mut tc = Table::new(&[
+        "node QPS", "target QPS", "nodes", "headroom", "total", "SLA shed", "in-flight lost",
+        "verdict",
+    ]);
+    tc.row(&[
+        format!("{:.1}", report.node_qps),
+        format!("{:.1}", report.target_qps),
+        report.nodes_needed.to_string(),
+        report.headroom.to_string(),
+        report.nodes_total.to_string(),
+        report.sla_shed_after_failure.to_string(),
+        report.failure_shed.to_string(),
+        if report.survives_single_node_failure {
+            "headroom holds".to_string()
+        } else {
+            "HEADROOM INSUFFICIENT".to_string()
+        },
+    ]);
+    tc.print();
     let mut tg = Table::new(&["quarter", "demand (QPS)", "nodes (incl. headroom)"]);
     for (q, demand, nodes) in &report.growth {
         tg.row(&[q.to_string(), format!("{demand:.0}"), nodes.to_string()]);
@@ -790,18 +841,22 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let fail_run = sim.run()?.cluster.expect("cluster tier yields cluster metrics");
     println!(
-        "\nscenario ({} @ {:.0} QPS open-loop): completed {}, shed {} (admission {}, failed {}, unroutable {})",
+        "\nscenario ({} @ {:.0} QPS open-loop): completed {}, shed {} \
+         (queue-full {}, sla {}, no-bucket {}, failed {}, unroutable {})",
         detail_policy.name(),
         horizon_rate,
         fail_run.cluster.completed,
         fail_run.shed(),
-        fail_run.shed_admission,
+        fail_run.shed_causes.queue_full,
+        fail_run.shed_causes.sla,
+        fail_run.shed_causes.no_bucket,
         fail_run.shed_failed,
         fail_run.shed_unroutable
     );
     let span = fail_run.cluster.wall_s;
     let mut tn = Table::new(&[
-        "node", "offered", "completed", "shed", "busy", "NIC rx", "availability", "state",
+        "node", "offered", "completed", "shed", "busy", "card util", "NIC rx", "availability",
+        "state",
     ]);
     for nm in &fail_run.per_node {
         let state = if nm.failed_at_s.is_some() {
@@ -811,18 +866,33 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         } else {
             "up"
         };
+        // mean compute utilization across the node's cards over the span
+        let util = if span > 0.0 {
+            (nm.busy_s / (span * specs[nm.node].cards as f64)).min(1.0)
+        } else {
+            0.0
+        };
         tn.row(&[
             nm.node.to_string(),
             nm.offered.to_string(),
             nm.metrics.completed.to_string(),
             (nm.shed_admission + nm.shed_failed).to_string(),
             ms(nm.busy_s),
+            pct(util),
             ms(nm.nic_rx_busy_s),
             pct(nm.availability(span)),
             state.to_string(),
         ]);
     }
     tn.print();
+    if fail_run.cluster.stages.count() > 0 {
+        let mut rows: Vec<(String, &StageStats)> =
+            vec![("cluster".to_string(), &fail_run.cluster.stages)];
+        for f in &fail_run.per_family {
+            rows.push((f.family.name().to_string(), &f.metrics.stages));
+        }
+        print_stage_table("stage latency attribution (fail scenario, mean/p99 ms):", &rows);
+    }
 
     if let Some(path) = args.get("json") {
         // shared BENCH_*.json schema: headline numbers from the fail-run
@@ -894,9 +964,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                     ("completed", Json::num(fail_run.cluster.completed as f64)),
                     ("cluster_qps", Json::num(fail_run.cluster_qps())),
                     ("shed_admission", Json::num(fail_run.shed_admission as f64)),
+                    ("shed_queue_full", Json::num(fail_run.shed_causes.queue_full as f64)),
+                    ("shed_sla", Json::num(fail_run.shed_causes.sla as f64)),
+                    ("shed_no_bucket", Json::num(fail_run.shed_causes.no_bucket as f64)),
                     ("shed_failed", Json::num(fail_run.shed_failed as f64)),
                     ("shed_unroutable", Json::num(fail_run.shed_unroutable as f64)),
                     ("shed_rate", Json::num(fail_run.shed_rate())),
+                    ("stages", fail_run.cluster.stages.to_json()),
                     (
                         "availability",
                         Json::arr(
@@ -996,6 +1070,15 @@ fn cmd_des(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    if stat.stages.count() > 0 || dynr.stages.count() > 0 {
+        print_stage_table(
+            "stage latency attribution (mean/p99 ms):",
+            &[
+                ("static".to_string(), &stat.stages),
+                ("dynamic".to_string(), &dynr.stages),
+            ],
+        );
+    }
     println!(
         "\ndynamic vs static: {:.1} vs {:.1} node QPS at shed {} vs {} -> {}",
         dynr.qps,
@@ -1026,6 +1109,257 @@ fn cmd_des(args: &Args) -> Result<()> {
             .write(path)?;
     }
     Ok(())
+}
+
+/// `fbia trace`: the observability drill ([`fbia::obs`]). Replays one
+/// seeded cluster scenario twice — untraced and traced — and checks the
+/// tracing cost contract (bit-identical reports, in-bounds utilization,
+/// stage sums matching latency), then reruns the same seed with every
+/// node's NIC bandwidth throttled until the wire provably dominates the
+/// cards, demonstrating the stage breakdown separates the NIC-bound regime
+/// from the compute-bound one. Writes the Perfetto-loadable Chrome trace
+/// JSON to `--out` (default trace.json) and validates its schema by
+/// parsing it back. Exits nonzero if any acceptance flag fails, so CI can
+/// gate on it. Modeled clock only, like `fbia cluster`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let requested = args
+        .get("backend")
+        .map(str::to_string)
+        .or_else(|| std::env::var("FBIA_BACKEND").ok());
+    if let Some(b) = requested {
+        if b != "sim" {
+            fbia::runtime::backend_by_name(&b)?;
+            bail!(
+                "fbia trace replays modeled-clock scenarios; \
+                 only --backend sim is supported (got '{b}')"
+            );
+        }
+    }
+    let fcfg = fleet_config(args, &cfg)?;
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
+    let requests = args.get_usize("requests", 120).max(1);
+    let seed = args.get_u64("seed", 1);
+    let dir = Path::new(args.get_or("artifacts", "artifacts"));
+    let specs = match &cfg.cluster {
+        Some(cl) => cl.nodes.clone(),
+        None => vec![cfg.node.clone(); args.get_usize("nodes", 2).max(1)],
+    };
+    let node_policy = node_policy_by_name(args.get_or("policy", "weighted"))?;
+    let card_policy =
+        card_policy_by_name(args.get_or("card-policy", cfg.serving.card_policy.name()))?;
+    let out = args.get_or("out", "trace.json");
+
+    let cluster = Arc::new(Cluster::new(dir, &cfg, &specs, fcfg.clone())?);
+    // Open-loop Poisson arrivals well under capacity: with the tier mostly
+    // idle, queueing is negligible and the breakdown shows the *intrinsic*
+    // regime (compute-bound stock, network-bound throttled) instead of
+    // saturation queueing drowning both.
+    let mean_cost_s = {
+        let costs = &cluster.nodes()[0].fam_cost_s;
+        let total: f64 = reqs_mean_cost(costs, mix);
+        total.max(1e-6)
+    };
+    let n_nodes = cluster.node_count();
+    let rate_qps = n_nodes as f64 / (12.0 * mean_cost_s);
+    let mut traffic = TrafficGen::new(
+        seed,
+        mix,
+        Arrival::Poisson { rate_qps },
+        cluster.manifest(),
+        fcfg.recsys_batch,
+    )?;
+    let reqs = traffic.take(requests);
+    println!(
+        "trace: {} nodes, mix {} over {requests} requests ({:.0} QPS open-loop, {} / {})",
+        n_nodes,
+        mix.label(),
+        rate_qps,
+        node_policy.name(),
+        card_policy.name()
+    );
+
+    let sim = |cl: &Arc<Cluster>| {
+        Simulation::cluster(Arc::clone(cl))
+            .node_policy(node_policy)
+            .card_policy(card_policy)
+            .trace(reqs.clone())
+    };
+    // the cost contract: a rerun is bit-identical, and turning tracing ON
+    // must not perturb a single report bit either
+    let plain = sim(&cluster).run()?;
+    let plain2 = sim(&cluster).run()?;
+    let (traced, tracer) = sim(&cluster).run_traced()?;
+    let same = |a: &fbia::serving::simulation::SimReport,
+                b: &fbia::serving::simulation::SimReport| {
+        a.qps.to_bits() == b.qps.to_bits()
+            && a.p50_ms.to_bits() == b.p50_ms.to_bits()
+            && a.p99_ms.to_bits() == b.p99_ms.to_bits()
+            && a.span_s.to_bits() == b.span_s.to_bits()
+            && a.completed == b.completed
+            && a.shed == b.shed
+    };
+    let bit_identical = same(&plain, &plain2) && same(&plain, &traced);
+
+    // every completed request's stage decomposition sums to its latency
+    let stage_sums = tracer
+        .requests()
+        .iter()
+        .filter(|r| r.completed())
+        .all(|r| (r.stage.total_s() - r.latency_s()).abs() <= 1e-9 * r.latency_s().max(1.0));
+    // merged occupancy on every recorded track stays within the span
+    let mut tracks: Vec<(SegKind, usize, usize)> = Vec::new();
+    for s in tracer.segs() {
+        if !tracks.contains(&(s.kind, s.node, s.lane)) {
+            tracks.push((s.kind, s.node, s.lane));
+        }
+    }
+    let util_le_one =
+        tracks.iter().all(|&(k, n, l)| tracer.utilization(k, n, l) <= 1.0 + 1e-9);
+
+    if traced.stages.count() > 0 {
+        print_stage_table(
+            "stage latency attribution (unconstrained, mean/p99 ms):",
+            &[("cluster".to_string(), &traced.stages)],
+        );
+    }
+    println!("\nresource occupancy (merged busy over {:.3}s span):", tracer.span_s());
+    let mut tu = Table::new(&["resource", "node", "lane", "busy", "utilization"]);
+    for &(k, n, l) in &tracks {
+        tu.row(&[
+            k.name().to_string(),
+            n.to_string(),
+            l.to_string(),
+            ms(tracer.busy_s(k, n, l)),
+            pct(tracer.utilization(k, n, l)),
+        ]);
+    }
+    tu.print();
+
+    // same seed, NIC throttled: halve bw_bits (and keep halving) until the
+    // mix's mean wire time provably dominates its mean modeled card cost,
+    // flipping the dominant stage from compute to network
+    let mean_wire_bytes = reqs
+        .iter()
+        .map(|r| {
+            let (i, o) = cluster.wire().bytes(r);
+            (i + o) as f64
+        })
+        .sum::<f64>()
+        / reqs.len().max(1) as f64;
+    let mut bw_bits = specs[0].nic.bw_bits / 2.0;
+    while mean_wire_bytes * 8.0 / bw_bits < 4.0 * mean_cost_s && bw_bits > 1.0 {
+        bw_bits /= 2.0;
+    }
+    let mut slow_specs = specs.clone();
+    for s in &mut slow_specs {
+        s.nic.bw_bits = bw_bits;
+    }
+    let slow_cluster = Arc::new(Cluster::new(dir, &cfg, &slow_specs, fcfg.clone())?);
+    let slow = sim(&slow_cluster).run()?;
+    let compute_bound = traced.stages.dominant() == Some(Stage::Compute);
+    let network_bound = slow.stages.dominant() == Some(Stage::Network);
+    println!(
+        "\nNIC throttle drill: bw {:.2e} -> {:.2e} bits/s; dominant stage {} -> {}",
+        specs[0].nic.bw_bits,
+        bw_bits,
+        traced.stages.dominant().map(Stage::name).unwrap_or("-"),
+        slow.stages.dominant().map(Stage::name).unwrap_or("-"),
+    );
+    if slow.stages.count() > 0 {
+        print_stage_table(
+            "stage latency attribution (NIC-throttled, mean/p99 ms):",
+            &[("cluster".to_string(), &slow.stages)],
+        );
+    }
+
+    // export + schema sanity: parse the file back and require the Chrome
+    // trace-event essentials on every event
+    let doc = chrome_trace(&tracer);
+    std::fs::write(out, doc.to_string()).map_err(|e| err!("writing {out}: {e}"))?;
+    let parsed = Json::parse(
+        &std::fs::read_to_string(out).map_err(|e| err!("reading back {out}: {e}"))?,
+    )
+    .map_err(|e| err!("{out} is not valid JSON: {e}"))?;
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err!("{out}: missing traceEvents array"))?;
+    let schema_valid = !events.is_empty()
+        && events.iter().all(|e| {
+            e.get("ph").and_then(Json::as_str).is_some()
+                && e.get("ts").and_then(Json::as_f64).is_some()
+                && e.get("pid").and_then(Json::as_f64).is_some()
+                && e.get("tid").and_then(Json::as_f64).is_some()
+        });
+    println!(
+        "\nwrote {out}: {} events ({} occupancy segments, {} request spans) — load in Perfetto (ui.perfetto.dev)",
+        events.len(),
+        tracer.segs().len(),
+        tracer.requests().len(),
+    );
+
+    let checks = [
+        ("tracing_off_bit_identical", bit_identical),
+        ("stage_sums_match_latency", stage_sums),
+        ("utilization_le_one", util_le_one),
+        ("compute_bound_unconstrained", compute_bound),
+        ("network_bound_when_bw_halved", network_bound),
+        ("trace_schema_valid", schema_valid),
+        ("conservation", traced.conserved() && slow.conserved()),
+    ];
+    println!();
+    for (name, holds) in &checks {
+        println!("  {:<32} {}", name, if *holds { "holds" } else { "VIOLATED" });
+    }
+
+    if let Some(path) = args.get("json") {
+        let mut bench = traced.bench_report("trace_smoke", "sim");
+        for (name, holds) in &checks {
+            bench = bench.accept(name, *holds);
+        }
+        bench
+            .with("nodes", Json::num(n_nodes as f64))
+            .with("mix", Json::str(&mix.label()))
+            .with("requests", Json::num(requests as f64))
+            .with("rate_qps", Json::num(rate_qps))
+            .with("node_policy", Json::str(node_policy.name()))
+            .with("card_policy", Json::str(card_policy.name()))
+            .with("trace_out", Json::str(out))
+            .with("trace_events", Json::num(events.len() as f64))
+            .with(
+                "nic_throttle",
+                Json::obj(vec![
+                    ("bw_bits_stock", Json::num(specs[0].nic.bw_bits)),
+                    ("bw_bits_throttled", Json::num(bw_bits)),
+                    (
+                        "dominant_unconstrained",
+                        Json::str(traced.stages.dominant().map(Stage::name).unwrap_or("-")),
+                    ),
+                    (
+                        "dominant_throttled",
+                        Json::str(slow.stages.dominant().map(Stage::name).unwrap_or("-")),
+                    ),
+                    ("stages_throttled", slow.stages.to_json()),
+                ]),
+            )
+            .write(path)?;
+    }
+    if let Some((name, _)) = checks.iter().find(|(_, holds)| !holds) {
+        bail!("trace acceptance check '{name}' failed");
+    }
+    Ok(())
+}
+
+/// Mix-weighted mean modeled request cost (seconds) over one node's
+/// per-family cost estimates (indexed recsys/nlp/cv like `fam_cost_s`).
+fn reqs_mean_cost(fam_cost_s: &[f64; 3], mix: FamilyMix) -> f64 {
+    let w = [mix.recsys, mix.nlp, mix.cv];
+    let total: f64 = w.iter().sum();
+    if total <= 0.0 {
+        return fam_cost_s.iter().sum::<f64>() / 3.0;
+    }
+    fam_cost_s.iter().zip(w.iter()).map(|(c, w)| c * w).sum::<f64>() / total
 }
 
 /// `fbia lint`: the static analyzer standalone — nothing is prepared,

@@ -1,0 +1,29 @@
+//! Observability: request-level tracing, stage latency attribution, and
+//! occupancy timelines for the serving tiers (the paper's §VI/§VII
+//! performance-optimization tooling — knowing *why* a deployment is slow,
+//! not just *that* p99 regressed).
+//!
+//! Two layers with very different cost contracts:
+//!
+//! - **Stage attribution** ([`StageBreakdown`]/[`StageStats`]) is always on.
+//!   It is pure arithmetic over timestamps the routers already compute —
+//!   `Copy` fields carried on each routing decision, no allocations on the
+//!   planning path, no event-heap interaction — so enabling it cannot
+//!   perturb any existing report bit.
+//! - **Tracing** ([`Tracer`]) is opt-in. When no tracer is passed the
+//!   routers skip every recording branch (`Option` checks on `Copy` data
+//!   only), reports are bit-identical to an untraced run, and the planning
+//!   loop performs zero additional allocations. When enabled, the tracer
+//!   records per-request lifecycle spans and per-card / per-NIC / DRAM
+//!   occupancy segments on the modeled clock, exportable as a Chrome
+//!   trace-event JSON ([`chrome_trace`]) loadable in Perfetto.
+//!
+//! See `rust/docs/observability.md` for the span model and stage taxonomy.
+
+mod export;
+mod stages;
+mod trace;
+
+pub use export::chrome_trace;
+pub use stages::{Stage, StageBreakdown, StageStats};
+pub use trace::{RequestTrace, SegKind, SegRecord, Tracer};

@@ -1,0 +1,228 @@
+//! Stage taxonomy and per-stage latency attribution.
+//!
+//! Every completed request's end-to-end latency decomposes into five
+//! stages on the modeled clock:
+//!
+//! - `queue` — waiting for admission/dispatch (head-of-line blocking,
+//!   NIC ingress queueing at the cluster tier). Computed as the residual
+//!   `latency - (batch_wait + transfer + compute + network)`, clamped at
+//!   zero, so the components always sum exactly to the reported latency.
+//! - `batch_wait` — time parked in an open dynamic-batch window before
+//!   the batch dispatched.
+//! - `transfer` — PCIe link time on the request's critical path (the
+//!   slowest SLS shard's transfer plus the dense segment's, for recsys).
+//! - `compute` — card compute on the critical path, including any
+//!   retroactive extension from late dynamic-batch joiners.
+//! - `network` — NIC wire time (ingress + egress serialization); zero at
+//!   the single-node fleet tier.
+
+use crate::util::json::Json;
+use crate::util::stats::exact_quantile;
+
+/// One stage of the request lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Queue,
+    BatchWait,
+    Transfer,
+    Compute,
+    Network,
+}
+
+impl Stage {
+    /// All stages, in lifecycle order.
+    pub const ALL: [Stage; 5] =
+        [Stage::Queue, Stage::BatchWait, Stage::Transfer, Stage::Compute, Stage::Network];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::BatchWait => "batch_wait",
+            Stage::Transfer => "transfer",
+            Stage::Compute => "compute",
+            Stage::Network => "network",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Stage::Queue => 0,
+            Stage::BatchWait => 1,
+            Stage::Transfer => 2,
+            Stage::Compute => 3,
+            Stage::Network => 4,
+        }
+    }
+}
+
+/// Per-request stage decomposition in seconds. The invariant
+/// [`StageBreakdown::attribute`] maintains: the five components sum to the
+/// end-to-end latency (queue is the clamped residual).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageBreakdown {
+    pub queue_s: f64,
+    pub batch_wait_s: f64,
+    pub transfer_s: f64,
+    pub compute_s: f64,
+    pub network_s: f64,
+}
+
+impl StageBreakdown {
+    /// Build a breakdown from the modeled costs on the critical path,
+    /// attributing whatever the explicit stages don't cover to queueing.
+    pub fn attribute(
+        latency_s: f64,
+        batch_wait_s: f64,
+        transfer_s: f64,
+        compute_s: f64,
+        network_s: f64,
+    ) -> Self {
+        let queue_s = (latency_s - batch_wait_s - transfer_s - compute_s - network_s).max(0.0);
+        StageBreakdown { queue_s, batch_wait_s, transfer_s, compute_s, network_s }
+    }
+
+    pub fn get(&self, stage: Stage) -> f64 {
+        match stage {
+            Stage::Queue => self.queue_s,
+            Stage::BatchWait => self.batch_wait_s,
+            Stage::Transfer => self.transfer_s,
+            Stage::Compute => self.compute_s,
+            Stage::Network => self.network_s,
+        }
+    }
+
+    /// Sum of all five stages — equals the end-to-end latency when built
+    /// via [`StageBreakdown::attribute`] and the residual was non-negative.
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.batch_wait_s + self.transfer_s + self.compute_s + self.network_s
+    }
+}
+
+/// Aggregated stage samples: exact mean + p99 per stage. Keeps raw samples
+/// because the bucketed [`crate::util::stats::Histogram`] is too coarse for
+/// sub-millisecond transfer stages — the sample count is bounded by the
+/// trace length, so memory stays proportional to requests routed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageStats {
+    samples: [Vec<f64>; 5],
+}
+
+impl StageStats {
+    pub fn add(&mut self, b: &StageBreakdown) {
+        for stage in Stage::ALL {
+            self.samples[stage.index()].push(b.get(stage));
+        }
+    }
+
+    pub fn merge(&mut self, other: &StageStats) {
+        for (mine, theirs) in self.samples.iter_mut().zip(&other.samples) {
+            mine.extend_from_slice(theirs);
+        }
+    }
+
+    /// Number of requests sampled.
+    pub fn count(&self) -> usize {
+        self.samples[0].len()
+    }
+
+    pub fn mean(&self, stage: Stage) -> f64 {
+        let xs = &self.samples[stage.index()];
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
+    pub fn p99(&self, stage: Stage) -> f64 {
+        exact_quantile(&self.samples[stage.index()], 0.99)
+    }
+
+    /// The stage with the largest mean — the regime label ("NIC-bound",
+    /// "compute-bound", ...). `None` until a sample lands.
+    pub fn dominant(&self) -> Option<Stage> {
+        if self.count() == 0 {
+            return None;
+        }
+        let mut best = Stage::Queue;
+        for stage in Stage::ALL {
+            if self.mean(stage) > self.mean(best) {
+                best = stage;
+            }
+        }
+        Some(best)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::with_capacity(6);
+        pairs.push(("samples", Json::num(self.count() as f64)));
+        for stage in Stage::ALL {
+            pairs.push((
+                stage.name(),
+                Json::obj(vec![
+                    ("mean_ms", Json::num(self.mean(stage) * 1e3)),
+                    ("p99_ms", Json::num(self.p99(stage) * 1e3)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribute_clamps_residual_and_sums_to_latency() {
+        let b = StageBreakdown::attribute(1.0, 0.1, 0.2, 0.3, 0.1);
+        assert!((b.queue_s - 0.3).abs() < 1e-12);
+        assert!((b.total_s() - 1.0).abs() < 1e-12);
+        // over-attributed components clamp queue at zero, not negative
+        let b = StageBreakdown::attribute(0.5, 0.2, 0.2, 0.2, 0.2);
+        assert_eq!(b.queue_s, 0.0);
+    }
+
+    #[test]
+    fn stats_mean_and_p99_are_exact() {
+        let mut s = StageStats::default();
+        for i in 1..=100 {
+            s.add(&StageBreakdown {
+                queue_s: i as f64,
+                batch_wait_s: 0.0,
+                transfer_s: 0.0,
+                compute_s: 2.0 * i as f64,
+                network_s: 0.0,
+            });
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean(Stage::Queue) - 50.5).abs() < 1e-12);
+        assert_eq!(s.p99(Stage::Queue), 99.0);
+        assert_eq!(s.p99(Stage::Compute), 198.0);
+        assert_eq!(s.dominant(), Some(Stage::Compute));
+    }
+
+    #[test]
+    fn stats_merge_equals_combined() {
+        let b1 = StageBreakdown::attribute(1.0, 0.0, 0.25, 0.5, 0.0);
+        let b2 = StageBreakdown::attribute(2.0, 0.5, 0.25, 1.0, 0.0);
+        let mut all = StageStats::default();
+        all.add(&b1);
+        all.add(&b2);
+        let mut a = StageStats::default();
+        a.add(&b1);
+        let mut b = StageStats::default();
+        b.add(&b2);
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn empty_stats_are_inert() {
+        let s = StageStats::default();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(Stage::Network), 0.0);
+        assert_eq!(s.p99(Stage::Network), 0.0);
+        assert_eq!(s.dominant(), None);
+    }
+}

@@ -1,0 +1,231 @@
+//! The opt-in [`Tracer`]: per-request lifecycle spans plus per-card,
+//! per-NIC, and shared-DRAM occupancy segments on the modeled clock.
+//!
+//! Routers accept an `Option<&mut Tracer>`; `None` (the default) skips all
+//! recording — no allocation, no timestamp rounding, no event-heap
+//! interaction — so an untraced run is bit-identical to today's reports.
+
+use super::StageBreakdown;
+
+/// What a recorded occupancy segment occupied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    /// Card compute lane (`lane` = card index on the node).
+    Compute,
+    /// PCIe link to a card (`lane` = card index on the node).
+    Link,
+    /// NIC ingress serialization (`lane` unused, cluster tier only).
+    NicRx,
+    /// NIC egress serialization (`lane` unused, cluster tier only).
+    NicTx,
+}
+
+impl SegKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SegKind::Compute => "compute",
+            SegKind::Link => "pcie",
+            SegKind::NicRx => "nic rx",
+            SegKind::NicTx => "nic tx",
+        }
+    }
+}
+
+/// One occupancy interval on a modeled resource.
+#[derive(Debug, Clone, Copy)]
+pub struct SegRecord {
+    pub kind: SegKind,
+    /// Cluster node index (0 at the fleet tier).
+    pub node: usize,
+    /// Card index for `Compute`/`Link`; 0 for NIC segments.
+    pub lane: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Trace index of the request this work belongs to.
+    pub req: usize,
+    /// Shared-DRAM bandwidth occupancy held over the segment (0..=1 per
+    /// stream; only compute segments carry it).
+    pub dram: f64,
+}
+
+/// One request's lifecycle: arrival through completion (or shed), with its
+/// stage decomposition.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub req: usize,
+    pub family: &'static str,
+    pub node: usize,
+    pub card: usize,
+    pub arrival_s: f64,
+    pub finish_s: f64,
+    pub stage: StageBreakdown,
+    /// `"completed"` or a shed-cause name (`"shed-sla"`, ...).
+    pub outcome: &'static str,
+}
+
+impl RequestTrace {
+    pub fn completed(&self) -> bool {
+        self.outcome == "completed"
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// Recording sink for one traced run.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    segs: Vec<SegRecord>,
+    requests: Vec<RequestTrace>,
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Tracer::default()
+    }
+
+    pub fn seg(&mut self, seg: SegRecord) {
+        self.segs.push(seg);
+    }
+
+    /// Absorb segments recorded by a node-local planner tape, stamping the
+    /// cluster node index (planners don't know which node they are).
+    pub fn extend_segs(&mut self, node: usize, segs: Vec<SegRecord>) {
+        self.segs.extend(segs.into_iter().map(|mut s| {
+            s.node = node;
+            s
+        }));
+    }
+
+    pub fn request(&mut self, req: RequestTrace) {
+        self.requests.push(req);
+    }
+
+    pub fn segs(&self) -> &[SegRecord] {
+        &self.segs
+    }
+
+    pub fn requests(&self) -> &[RequestTrace] {
+        &self.requests
+    }
+
+    /// End of the modeled run: the latest timestamp any record touches.
+    pub fn span_s(&self) -> f64 {
+        let seg_end = self.segs.iter().map(|s| s.end_s).fold(0.0, f64::max);
+        let req_end = self.requests.iter().map(|r| r.finish_s).fold(0.0, f64::max);
+        seg_end.max(req_end)
+    }
+
+    /// Raw occupancy intervals for one resource track, sorted by start.
+    pub fn timeline(&self, kind: SegKind, node: usize, lane: usize) -> Vec<(f64, f64)> {
+        let mut iv: Vec<(f64, f64)> = self
+            .segs
+            .iter()
+            .filter(|s| s.kind == kind && s.node == node && s.lane == lane)
+            .map(|s| (s.start_s, s.end_s))
+            .collect();
+        iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        iv
+    }
+
+    /// Busy time on one resource track with overlapping intervals merged,
+    /// so `busy <= span` always holds.
+    pub fn busy_s(&self, kind: SegKind, node: usize, lane: usize) -> f64 {
+        let mut busy = 0.0;
+        let mut cur: Option<(f64, f64)> = None;
+        for (s, e) in self.timeline(kind, node, lane) {
+            match cur {
+                Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+                Some((cs, ce)) => {
+                    busy += ce - cs;
+                    cur = Some((s, e));
+                }
+                None => cur = Some((s, e)),
+            }
+        }
+        if let Some((cs, ce)) = cur {
+            busy += ce - cs;
+        }
+        busy
+    }
+
+    /// Fraction of the run a resource track was busy; in [0, 1] by
+    /// construction (merged busy time over the full trace span).
+    pub fn utilization(&self, kind: SegKind, node: usize, lane: usize) -> f64 {
+        let span = self.span_s();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.busy_s(kind, node, lane) / span
+        }
+    }
+
+    /// Shared-DRAM occupancy timeline for one node: `(ts, occupancy)`
+    /// steps from the dram-weighted compute segments, for counter tracks.
+    pub fn dram_timeline(&self, node: usize) -> Vec<(f64, f64)> {
+        let mut deltas: Vec<(f64, f64)> = Vec::new();
+        for s in &self.segs {
+            if s.node == node && s.dram > 0.0 {
+                deltas.push((s.start_s, s.dram));
+                deltas.push((s.end_s, -s.dram));
+            }
+        }
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut out: Vec<(f64, f64)> = Vec::with_capacity(deltas.len());
+        let mut level = 0.0;
+        for (t, d) in deltas {
+            level += d;
+            match out.last_mut() {
+                Some(last) if last.0 == t => last.1 = level,
+                _ => out.push((t, level)),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(kind: SegKind, lane: usize, start: f64, end: f64, dram: f64) -> SegRecord {
+        SegRecord { kind, node: 0, lane, start_s: start, end_s: end, req: 0, dram }
+    }
+
+    #[test]
+    fn busy_merges_overlaps_and_bounds_utilization() {
+        let mut t = Tracer::new();
+        t.seg(seg(SegKind::Compute, 0, 0.0, 2.0, 0.0));
+        t.seg(seg(SegKind::Compute, 0, 1.0, 3.0, 0.0)); // overlaps
+        t.seg(seg(SegKind::Compute, 0, 5.0, 6.0, 0.0)); // gap
+        t.seg(seg(SegKind::Compute, 1, 0.0, 10.0, 0.0)); // other lane
+        assert!((t.busy_s(SegKind::Compute, 0, 0) - 4.0).abs() < 1e-12);
+        assert_eq!(t.span_s(), 10.0);
+        let u = t.utilization(SegKind::Compute, 0, 0);
+        assert!(u > 0.0 && u <= 1.0);
+        assert!((t.utilization(SegKind::Compute, 0, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extend_segs_stamps_node() {
+        let mut t = Tracer::new();
+        t.extend_segs(3, vec![seg(SegKind::Link, 2, 0.0, 1.0, 0.0)]);
+        assert_eq!(t.segs()[0].node, 3);
+        assert!((t.busy_s(SegKind::Link, 3, 2) - 1.0).abs() < 1e-12);
+        assert_eq!(t.busy_s(SegKind::Link, 0, 2), 0.0);
+    }
+
+    #[test]
+    fn dram_timeline_accumulates_and_releases() {
+        let mut t = Tracer::new();
+        t.seg(seg(SegKind::Compute, 0, 0.0, 2.0, 0.5));
+        t.seg(seg(SegKind::Compute, 1, 1.0, 3.0, 0.25));
+        let tl = t.dram_timeline(0);
+        assert_eq!(tl.len(), 4);
+        assert_eq!(tl[0], (0.0, 0.5));
+        assert_eq!(tl[1], (1.0, 0.75));
+        assert_eq!(tl[2], (2.0, 0.25));
+        assert!((tl[3].1 - 0.0).abs() < 1e-12);
+    }
+}

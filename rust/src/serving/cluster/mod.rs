@@ -41,11 +41,14 @@ pub use router::{ClusterPlan, ClusterPlanned, NodePolicy, NodeReport, Outcome};
 pub use scenario::{parse_events, EventKind, NodeEvent, Scenario};
 
 use crate::config::{Config, TransferConfig};
+use crate::obs::{StageStats, Tracer};
 use crate::platform::NodeSpec;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::{Clock, Engine, SimBackend};
 use crate::serving::fleet::replica::ReplicaManager;
-use crate::serving::fleet::{Family, FamilyMetrics, Fleet, FleetConfig, FleetRequest, RoutePolicy};
+use crate::serving::fleet::{
+    Family, FamilyMetrics, Fleet, FleetConfig, FleetRequest, RoutePolicy, ShedCounts,
+};
 use crate::serving::ServerMetrics;
 use crate::util::error::{bail, err, Result};
 use crate::util::stats::Histogram;
@@ -197,6 +200,9 @@ pub struct ClusterMetrics {
     /// Shed by a node's own admission control (bounded queue / SLA / no
     /// serving bucket) — the "SLA shed" the capacity planner drives to 0.
     pub shed_admission: usize,
+    /// `shed_admission` split by cause (`shed_causes.total() ==
+    /// shed_admission`).
+    pub shed_causes: ShedCounts,
     /// In flight on a node when it failed.
     pub shed_failed: usize,
     /// No node available to route to.
@@ -312,8 +318,30 @@ impl Cluster {
         card_policy: RoutePolicy,
         scenario: &Scenario,
     ) -> Result<ClusterMetrics> {
-        let plan =
-            router::plan(&self.nodes, reqs, node_policy, card_policy, &self.fleet_cfg, scenario, &self.wire)?;
+        self.route_traced(reqs, node_policy, card_policy, scenario, None)
+    }
+
+    /// [`Cluster::route`] with an optional tracing sink ([`crate::obs`]):
+    /// `Some` records per-request spans plus NIC/link/compute occupancy
+    /// timelines; `None` is the zero-cost path with bit-identical metrics.
+    pub fn route_traced(
+        &self,
+        reqs: &[FleetRequest],
+        node_policy: NodePolicy,
+        card_policy: RoutePolicy,
+        scenario: &Scenario,
+        tracer: Option<&mut Tracer>,
+    ) -> Result<ClusterMetrics> {
+        let plan = router::plan_traced(
+            &self.nodes,
+            reqs,
+            node_policy,
+            card_policy,
+            &self.fleet_cfg,
+            scenario,
+            &self.wire,
+            tracer,
+        )?;
         Ok(self.assemble(&plan, node_policy, card_policy))
     }
 
@@ -354,6 +382,7 @@ impl Cluster {
             items: 0,
             wall_s: span,
             clock: Clock::Modeled,
+            stages: StageStats::default(),
         };
         let mut cluster = mk();
         let mut per_node: Vec<NodeMetrics> = plan
@@ -378,25 +407,30 @@ impl Cluster {
             .map(|&f| FamilyMetrics { family: f, metrics: mk(), offered: 0, shed: 0 })
             .collect();
         let (mut shed_admission, mut shed_failed, mut shed_unroutable) = (0usize, 0usize, 0usize);
+        let mut shed_causes = ShedCounts::default();
         for p in &plan.planned {
             let fam = &mut per_family[p.family.index()];
             fam.offered += 1;
             match p.outcome {
-                Outcome::Completed { node, latency_s, .. } => {
+                Outcome::Completed { node, latency_s, stage, .. } => {
                     cluster.latency.add(latency_s);
                     cluster.completed += 1;
                     cluster.items += p.items;
+                    cluster.stages.add(&stage);
                     fam.metrics.latency.add(latency_s);
                     fam.metrics.completed += 1;
                     fam.metrics.items += p.items;
+                    fam.metrics.stages.add(&stage);
                     let nm = &mut per_node[node];
                     nm.offered += 1;
                     nm.metrics.latency.add(latency_s);
                     nm.metrics.completed += 1;
                     nm.metrics.items += p.items;
+                    nm.metrics.stages.add(&stage);
                 }
-                Outcome::ShedAdmission { node } => {
+                Outcome::ShedAdmission { node, cause } => {
                     shed_admission += 1;
+                    shed_causes.count(cause);
                     fam.shed += 1;
                     per_node[node].offered += 1;
                     per_node[node].shed_admission += 1;
@@ -421,6 +455,7 @@ impl Cluster {
             per_family,
             offered: plan.planned.len(),
             shed_admission,
+            shed_causes,
             shed_failed,
             shed_unroutable,
         }

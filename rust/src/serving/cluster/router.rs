@@ -19,10 +19,11 @@
 //! regardless of worker counts, because workers only execute numerics
 //! afterwards.
 
+use crate::obs::{RequestTrace, SegKind, SegRecord, StageBreakdown, Tracer};
 use crate::serving::cluster::scenario::{EventKind, Scenario};
 use crate::serving::cluster::{ClusterNode, WireModel};
 use crate::serving::fleet::router::{self as fleet_router, NodePlanner, RouteStep};
-use crate::serving::fleet::{Decision, Family, FleetConfig, FleetRequest, RoutePolicy};
+use crate::serving::fleet::{Decision, Family, FleetConfig, FleetRequest, RoutePolicy, ShedCause};
 use crate::sim::des::{class, EventHeap, EventId};
 use crate::sim::transfer::NicOccupancy;
 use crate::util::error::{bail, Result};
@@ -71,10 +72,18 @@ impl NodePolicy {
 #[derive(Debug, Clone, Copy)]
 pub enum Outcome {
     /// Routed, served, response delivered back over the node's NIC.
-    Completed { node: usize, decision: Decision, latency_s: f64, finish_s: f64 },
+    Completed {
+        node: usize,
+        decision: Decision,
+        latency_s: f64,
+        finish_s: f64,
+        /// Stage decomposition of `latency_s`; NIC queueing folds into the
+        /// queue residual, wire serialization into `network_s`.
+        stage: StageBreakdown,
+    },
     /// The chosen node's card router shed it (bounded queue / SLA / no
     /// serving bucket).
-    ShedAdmission { node: usize },
+    ShedAdmission { node: usize, cause: ShedCause },
     /// Admitted, but its node failed before the response was delivered.
     ShedFailed { node: usize },
     /// No node was available to route to (everything drained or failed).
@@ -162,6 +171,24 @@ pub fn plan(
     scenario: &Scenario,
     wire: &WireModel,
 ) -> Result<ClusterPlan> {
+    plan_traced(nodes, reqs, node_policy, card_policy, cfg, scenario, wire, None)
+}
+
+/// [`plan`] with an optional tracing sink ([`crate::obs`]). `None` is the
+/// zero-cost path — bit-identical outcomes to an untraced run. `Some`
+/// additionally records NIC/link/compute occupancy segments (per node) and
+/// per-request lifecycle spans; the event schedule is untouched either way.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_traced(
+    nodes: &[ClusterNode],
+    reqs: &[FleetRequest],
+    node_policy: NodePolicy,
+    card_policy: RoutePolicy,
+    cfg: &FleetConfig,
+    scenario: &Scenario,
+    wire: &WireModel,
+    mut tracer: Option<&mut Tracer>,
+) -> Result<ClusterPlan> {
     if nodes.is_empty() {
         bail!("cluster needs at least one node");
     }
@@ -187,6 +214,11 @@ pub fn plan(
             nic_tx_snapshot_s: 0.0,
         })
         .collect();
+    if tracer.is_some() {
+        for s in &mut states {
+            s.planner.enable_tape();
+        }
+    }
 
     let mut heap: EventHeap<CEv> = EventHeap::new(cfg.des_seed);
     let events = scenario.events();
@@ -217,6 +249,11 @@ pub fn plan(
     // completion, or response delivery) — what a node failure cancels
     let mut stage_ev: Vec<Option<EventId>> = vec![None; reqs.len()];
     let mut decisions: Vec<Option<Decision>> = vec![None; reqs.len()];
+    // per-request card-tier stage attribution, finalized at delivery (NIC
+    // queueing becomes the queue residual, wire time becomes network_s)
+    let mut stages: Vec<StageBreakdown> = vec![StageBreakdown::default(); reqs.len()];
+    let mut card_finish: Vec<f64> = vec![0.0; reqs.len()];
+    let mut cards: Vec<usize> = vec![0; reqs.len()];
     let mut rr = 0usize;
 
     while let Some(e) = heap.pop() {
@@ -307,7 +344,21 @@ pub fn plan(
                         // tier 1.5: the bytes serialize on the node's NIC
                         let (in_bytes, _) = wire.bytes(req);
                         let state = &mut states[k];
+                        let rx_from = state.nic.rx_until().max(t);
                         let t_node = state.nic.rx(t, in_bytes);
+                        if let Some(tr) = tracer.as_deref_mut() {
+                            if t_node > rx_from {
+                                tr.seg(SegRecord {
+                                    kind: SegKind::NicRx,
+                                    node: k,
+                                    lane: 0,
+                                    start_s: rx_from,
+                                    end_s: t_node,
+                                    req: i,
+                                    dram: 0.0,
+                                });
+                            }
+                        }
                         state.assigned_s += nodes[k].fam_cost_s[family.index()];
                         state.pending += 1;
                         state.inflight.push(i);
@@ -329,12 +380,15 @@ pub fn plan(
                     card_policy,
                     cfg,
                 ) {
-                    RouteStep::Shed => {
-                        planned[idx].outcome = Outcome::ShedAdmission { node };
+                    RouteStep::Shed(cause) => {
+                        planned[idx].outcome = Outcome::ShedAdmission { node, cause };
                         state.inflight.retain(|&x| x != idx);
                     }
                     RouteStep::Routed { routed, opened } => {
                         decisions[idx] = Some(routed.decision);
+                        stages[idx] = routed.stage;
+                        card_finish[idx] = routed.finish_s;
+                        cards[idx] = routed.card;
                         stage_ev[idx] = Some(heap.push_class(
                             routed.finish_s,
                             class::COMPLETION,
@@ -350,12 +404,18 @@ pub fn plan(
                     }
                     RouteStep::Merged { routed, members } => {
                         decisions[idx] = Some(routed.decision);
+                        stages[idx] = routed.stage;
+                        card_finish[idx] = routed.finish_s;
+                        cards[idx] = routed.card;
                         // the grown batch finishes together: supersede the
                         // members' (still unstarted) card completions
                         for m in members {
                             if let Some(id) = stage_ev[m].take() {
                                 heap.cancel(id);
                             }
+                            // the member's batch ran longer: extra compute
+                            stages[m].compute_s += routed.finish_s - card_finish[m];
+                            card_finish[m] = routed.finish_s;
                             stage_ev[m] = Some(heap.push_class(
                                 routed.finish_s,
                                 class::COMPLETION,
@@ -375,7 +435,21 @@ pub fn plan(
                 state.planner.prune(t);
                 // the fp16 response serializes on the egress NIC
                 let (_, out_bytes) = wire.bytes(&reqs[idx]);
+                let tx_from = state.nic.tx_until().max(t);
                 let delivered = state.nic.tx(t, out_bytes);
+                if let Some(tr) = tracer.as_deref_mut() {
+                    if delivered > tx_from {
+                        tr.seg(SegRecord {
+                            kind: SegKind::NicTx,
+                            node,
+                            lane: 0,
+                            start_s: tx_from,
+                            end_s: delivered,
+                            req: idx,
+                            dram: 0.0,
+                        });
+                    }
+                }
                 stage_ev[idx] = Some(heap.push_class(
                     delivered,
                     class::COMPLETION,
@@ -386,11 +460,24 @@ pub fn plan(
                 stage_ev[idx] = None;
                 let state = &mut states[node];
                 state.inflight.retain(|&x| x != idx);
+                let latency_s = t - planned[idx].arrival_s;
+                // pure wire time is network; NIC *queueing* (both ways)
+                // lands in the queue residual, like any other contention
+                let (in_bytes, out_bytes) = wire.bytes(&reqs[idx]);
+                let network_s = state.nic.time_s(in_bytes) + state.nic.time_s(out_bytes);
+                let s = stages[idx];
                 planned[idx].outcome = Outcome::Completed {
                     node,
                     decision: decisions[idx].expect("delivered request must have a decision"),
-                    latency_s: t - planned[idx].arrival_s,
+                    latency_s,
                     finish_s: t,
+                    stage: StageBreakdown::attribute(
+                        latency_s,
+                        s.batch_wait_s,
+                        s.transfer_s,
+                        s.compute_s,
+                        network_s,
+                    ),
                 };
             }
             CEv::CloseBatch { node, card, gen } => {
@@ -420,6 +507,38 @@ pub fn plan(
             failed_at_s: s.failed_at,
         })
         .collect();
+    if let Some(tr) = tracer {
+        for (k, s) in states.iter_mut().enumerate() {
+            let tape = s.planner.take_tape();
+            tr.extend_segs(k, tape);
+        }
+        for (i, p) in planned.iter().enumerate() {
+            let (node, card, finish_s, stage, outcome) = match p.outcome {
+                Outcome::Completed { node, finish_s, stage, .. } => {
+                    (node, cards[i], finish_s, stage, "completed")
+                }
+                Outcome::ShedAdmission { node, cause } => {
+                    (node, 0, p.arrival_s, StageBreakdown::default(), cause.name())
+                }
+                Outcome::ShedFailed { node } => {
+                    (node, 0, p.arrival_s, StageBreakdown::default(), "shed-failed")
+                }
+                Outcome::ShedUnroutable => {
+                    (0, 0, p.arrival_s, StageBreakdown::default(), "shed-unroutable")
+                }
+            };
+            tr.request(RequestTrace {
+                req: i,
+                family: p.family.name(),
+                node,
+                card,
+                arrival_s: p.arrival_s,
+                finish_s,
+                stage,
+                outcome,
+            });
+        }
+    }
     Ok(ClusterPlan { planned, span_s, nodes: node_reports })
 }
 

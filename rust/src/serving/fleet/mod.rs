@@ -38,10 +38,13 @@ pub mod router;
 pub mod traffic;
 
 pub use replica::{Placement, ReplicaManager};
-pub use router::{BatchTicket, Decision, NodePlanner, RoutePlan, RoutePolicy, RouteStep};
+pub use router::{
+    BatchTicket, Decision, NodePlanner, RoutePlan, RoutePolicy, RouteStep, ShedCause, ShedCounts,
+};
 pub use traffic::{Arrival, FamilyMix, TrafficGen};
 
 use crate::graph::models::ModelId;
+use crate::obs::{StageStats, Tracer};
 use crate::runtime::{Clock, Engine};
 use crate::serving::ServerMetrics;
 use crate::util::error::{bail, err, Result};
@@ -264,6 +267,8 @@ pub struct FleetMetrics {
     pub per_card: Vec<CardMetrics>,
     pub offered: usize,
     pub shed: usize,
+    /// `shed` split by cause (`shed_causes.total() == shed` always holds).
+    pub shed_causes: ShedCounts,
 }
 
 impl FleetMetrics {
@@ -311,13 +316,25 @@ impl Fleet {
     /// modeled clock: on a wall-clock backend there is nothing truthful to
     /// report without running the requests.
     pub fn route(&self, reqs: &[FleetRequest], policy: RoutePolicy) -> Result<FleetMetrics> {
+        self.route_traced(reqs, policy, None)
+    }
+
+    /// [`Fleet::route`] with an optional tracing sink ([`crate::obs`]).
+    /// `None` is bit-identical to [`Fleet::route`]; `Some` additionally
+    /// records occupancy timelines and per-request spans.
+    pub fn route_traced(
+        &self,
+        reqs: &[FleetRequest],
+        policy: RoutePolicy,
+        tracer: Option<&mut Tracer>,
+    ) -> Result<FleetMetrics> {
         if self.engine.clock() != Clock::Modeled {
             bail!(
                 "fleet route-only planning needs a modeled clock (--backend sim); \
                  use serve() on wall-clock backends"
             );
         }
-        let plan = router::plan(&self.replicas, reqs, policy, &self.cfg)?;
+        let plan = router::plan_traced(&self.replicas, reqs, policy, &self.cfg, tracer)?;
         let latencies: Vec<f64> = plan
             .planned
             .iter()
@@ -381,6 +398,7 @@ impl Fleet {
             items: 0,
             wall_s: span_s,
             clock,
+            stages: StageStats::default(),
         };
         let mut node = mk();
         let mut families: Vec<FamilyMetrics> = Family::ALL
@@ -402,19 +420,30 @@ impl Fleet {
                     node.latency.add(dt);
                     node.completed += 1;
                     node.items += p.items;
+                    node.stages.add(&r.stage);
                     fam.metrics.latency.add(dt);
                     fam.metrics.completed += 1;
                     fam.metrics.items += p.items;
+                    fam.metrics.stages.add(&r.stage);
                     let card = &mut per_card[r.card];
                     card.metrics.latency.add(dt);
                     card.metrics.completed += 1;
                     card.metrics.items += p.items;
+                    card.metrics.stages.add(&r.stage);
                 }
             }
         }
         let offered = plan.planned.len();
         let shed = offered - node.completed;
-        FleetMetrics { policy, node, per_family: families, per_card, offered, shed }
+        FleetMetrics {
+            policy,
+            node,
+            per_family: families,
+            per_card,
+            offered,
+            shed,
+            shed_causes: plan.shed,
+        }
     }
 
     /// Execute the admitted requests' numerics over a worker pool; returns

@@ -27,6 +27,7 @@
 //! at a marginal cost instead of queueing their full solo cost
 //! (queue-depth-triggered dynamic batch growth, §IV-C).
 
+use crate::obs::{RequestTrace, SegKind, SegRecord, StageBreakdown, Tracer};
 use crate::runtime::ModeledCost;
 use crate::serving::fleet::replica::ReplicaManager;
 use crate::serving::fleet::{DynamicBatch, Family, FleetConfig, FleetRequest};
@@ -34,6 +35,59 @@ use crate::sim::des::{class, EventHeap, EventId};
 use crate::sim::transfer::LinkOccupancy;
 use crate::util::error::{bail, Result};
 use std::collections::VecDeque;
+
+/// Why admission control (or bucket coverage) shed a request. Named causes
+/// keep availability drills distinguishable: a full bounded queue means the
+/// node is saturated, an SLA shed means the request could not have finished
+/// in budget anyway, and a missing bucket means no compiled net covers the
+/// request's shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedCause {
+    /// The primary card's bounded queue was full.
+    QueueFull,
+    /// (queue depth + 1) × modeled cost exceeded the SLA budget.
+    SlaBudget,
+    /// No compiled bucket/net covers the request's shape.
+    NoBucket,
+}
+
+impl ShedCause {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedCause::QueueFull => "shed-queue-full",
+            ShedCause::SlaBudget => "shed-sla",
+            ShedCause::NoBucket => "shed-no-bucket",
+        }
+    }
+}
+
+/// Per-cause shed counters; the tiers' conservation checks gate on the sum.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShedCounts {
+    pub queue_full: usize,
+    pub sla: usize,
+    pub no_bucket: usize,
+}
+
+impl ShedCounts {
+    pub fn count(&mut self, cause: ShedCause) {
+        match cause {
+            ShedCause::QueueFull => self.queue_full += 1,
+            ShedCause::SlaBudget => self.sla += 1,
+            ShedCause::NoBucket => self.no_bucket += 1,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.queue_full + self.sla + self.no_bucket
+    }
+
+    pub fn merge(&mut self, other: &ShedCounts) {
+        self.queue_full += other.queue_full;
+        self.sla += other.sla;
+        self.no_bucket += other.no_bucket;
+    }
+}
 
 /// Dispatch policy for choosing among a family's replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,6 +144,9 @@ pub struct Routed {
     pub card: usize,
     pub latency_s: f64,
     pub finish_s: f64,
+    /// Stage decomposition of `latency_s` on the critical path (queue is
+    /// the residual, so the components sum to the latency exactly).
+    pub stage: StageBreakdown,
 }
 
 /// One planned request: family/arrival always, route only when admitted.
@@ -99,6 +156,8 @@ pub struct PlannedRequest {
     pub arrival_s: f64,
     pub items: usize,
     pub route: Option<Routed>,
+    /// Why the request was shed, when `route` is `None`.
+    pub shed_cause: Option<ShedCause>,
 }
 
 /// The full plan: per-request outcomes plus node-level accounting.
@@ -109,6 +168,8 @@ pub struct RoutePlan {
     pub span_s: f64,
     /// Modeled compute seconds per card (SLS segments included).
     pub busy_s: Vec<f64>,
+    /// Per-cause shed accounting (sums to the number of unrouted requests).
+    pub shed: ShedCounts,
 }
 
 /// Handle to a dynamic-batch growth window a routed request opened. The
@@ -125,7 +186,7 @@ pub struct BatchTicket {
 /// The outcome of one simulation step for one request.
 pub enum RouteStep {
     /// Admission control (or bucket coverage) shed the request.
-    Shed,
+    Shed(ShedCause),
     /// Routed as its own service segment. `opened` is the growth window to
     /// arm a close timer for, when dynamic batching applies.
     Routed { routed: Routed, opened: Option<BatchTicket> },
@@ -138,6 +199,10 @@ pub enum RouteStep {
 /// A committed service segment on a card's timeline.
 #[derive(Debug, Clone, Copy)]
 struct Seg {
+    /// When the PCIe transfer started on the card's link.
+    xfer_start_s: f64,
+    /// When the link delivered the inputs (compute cannot start earlier).
+    delivered_s: f64,
     start_s: f64,
     finish_s: f64,
 }
@@ -207,13 +272,14 @@ impl NodeState {
     /// Commit one segment: transfer serializes on the card's link, compute
     /// on the card. Returns the segment's start and finish times.
     fn commit(&mut self, card: usize, ready_s: f64, cost: ModeledCost) -> Seg {
+        let xfer_start = self.link.busy_until(card).max(ready_s);
         let delivered = self.link.occupy(card, ready_s, cost.transfer_s);
         let start = delivered.max(self.compute_busy[card]);
         let finish = start + cost.compute_s;
         self.compute_busy[card] = finish;
         self.outstanding[card].push_back(finish);
         self.busy_s[card] += cost.compute_s;
-        Seg { start_s: start, finish_s: finish }
+        Seg { xfer_start_s: xfer_start, delivered_s: delivered, start_s: start, finish_s: finish }
     }
 }
 
@@ -232,6 +298,10 @@ pub struct NodePlanner {
     /// Window generation counter — survives [`NodePlanner::reset`] so a
     /// stale close timer can never close a post-reset window.
     next_gen: u64,
+    /// Occupancy tape ([`crate::obs`]): `None` (the default) records
+    /// nothing and allocates nothing — an empty `Vec` is never even
+    /// constructed on the planning path, so untraced runs are untouched.
+    tape: Option<Vec<SegRecord>>,
 }
 
 impl NodePlanner {
@@ -241,6 +311,54 @@ impl NodePlanner {
             rr: [0; 3],
             open: (0..cards).map(|_| None).collect(),
             next_gen: 0,
+            tape: None,
+        }
+    }
+
+    /// Start recording PCIe-link and card-compute occupancy segments. The
+    /// tape survives [`NodePlanner::reset`] so work a failed node already
+    /// did stays visible in the timelines.
+    pub fn enable_tape(&mut self) {
+        if self.tape.is_none() {
+            self.tape = Some(Vec::new());
+        }
+    }
+
+    /// Drain the recorded occupancy segments (empty when tracing was off).
+    /// Recording stays enabled if it was.
+    pub fn take_tape(&mut self) -> Vec<SegRecord> {
+        match self.tape.as_mut() {
+            Some(tape) => std::mem::take(tape),
+            None => Vec::new(),
+        }
+    }
+
+    /// Record one committed segment's link and compute occupancy. A no-op
+    /// (two `Copy` comparisons, no allocation) while the tape is disabled.
+    fn record_seg(&mut self, card: usize, seg: Seg, cost: ModeledCost, req: usize) {
+        if let Some(tape) = self.tape.as_mut() {
+            if cost.transfer_s > 0.0 {
+                tape.push(SegRecord {
+                    kind: SegKind::Link,
+                    node: 0,
+                    lane: card,
+                    start_s: seg.xfer_start_s,
+                    end_s: seg.delivered_s,
+                    req,
+                    dram: 0.0,
+                });
+            }
+            if cost.compute_s > 0.0 {
+                tape.push(SegRecord {
+                    kind: SegKind::Compute,
+                    node: 0,
+                    lane: card,
+                    start_s: seg.start_s,
+                    end_s: seg.finish_s,
+                    req,
+                    dram: cost.dram_occupancy,
+                });
+            }
         }
     }
 
@@ -267,8 +385,10 @@ impl NodePlanner {
     pub fn reset(&mut self) {
         let cards = self.state.busy_s.len();
         let gen = self.next_gen;
+        let tape = self.tape.take();
         *self = NodePlanner::new(cards);
         self.next_gen = gen;
+        self.tape = tape;
     }
 
     /// Close a growth window when its batch starts (the [`BatchTicket`]
@@ -314,24 +434,39 @@ impl NodePlanner {
                     }, state)
                 };
                 let r = &replicas.recsys[ri];
-                if !admit(&self.state, r.card, replicas.recsys_request_cost_s(ri), cfg) {
-                    return RouteStep::Shed;
+                if let Some(cause) = admit(&self.state, r.card, replicas.recsys_request_cost_s(ri), cfg) {
+                    return RouteStep::Shed(cause);
                 }
                 // recsys never joins a growth window (its SLS fan-out is
                 // multi-card); committing plainly also closes any window on
-                // the cards it touches, keeping their timelines exact
+                // the cards it touches, keeping their timelines exact.
+                // The stage decomposition follows the critical path: the
+                // slowest shard's transfer+compute, then the dense segment's.
                 let mut sls_done = t;
+                let (mut crit_transfer, mut crit_compute) = (0.0f64, 0.0f64);
                 for shard in &replicas.sls {
-                    let seg = self.commit_plain(shard.card, t, shard.cost);
-                    sls_done = sls_done.max(seg.finish_s);
+                    let seg = self.commit_plain(idx, shard.card, t, shard.cost);
+                    if seg.finish_s > sls_done {
+                        sls_done = seg.finish_s;
+                        crit_transfer = shard.cost.transfer_s;
+                        crit_compute = shard.cost.compute_s;
+                    }
                 }
-                let seg = self.commit_plain(r.card, sls_done, r.cost);
+                let seg = self.commit_plain(idx, r.card, sls_done, r.cost);
+                let latency_s = seg.finish_s - t;
                 RouteStep::Routed {
                     routed: Routed {
                         decision: Decision::Recsys { replica: ri },
                         card: r.card,
-                        latency_s: seg.finish_s - t,
+                        latency_s,
                         finish_s: seg.finish_s,
+                        stage: StageBreakdown::attribute(
+                            latency_s,
+                            0.0,
+                            crit_transfer + r.cost.transfer_s,
+                            crit_compute + r.cost.compute_s,
+                            0.0,
+                        ),
                     },
                     opened: None,
                 }
@@ -339,7 +474,7 @@ impl NodePlanner {
             FleetRequest::Nlp { req, .. } => {
                 // longer than every compiled bucket: shed at admission
                 let Some(bucket) = replicas.nlp_bucket_for(req.tokens.len()) else {
-                    return RouteStep::Shed;
+                    return RouteStep::Shed(ShedCause::NoBucket);
                 };
                 let ri = {
                     let NodePlanner { state, rr, .. } = self;
@@ -354,10 +489,10 @@ impl NodePlanner {
                 };
                 let r = &replicas.nlp[ri];
                 let Some(cost) = r.cost(bucket) else {
-                    return RouteStep::Shed;
+                    return RouteStep::Shed(ShedCause::NoBucket);
                 };
-                if !admit(&self.state, r.card, cost.total_s(), cfg) {
-                    return RouteStep::Shed;
+                if let Some(cause) = admit(&self.state, r.card, cost.total_s(), cfg) {
+                    return RouteStep::Shed(cause);
                 }
                 self.finish_single(
                     idx,
@@ -378,8 +513,8 @@ impl NodePlanner {
                     }, state)
                 };
                 let r = &replicas.cv[ri];
-                if !admit(&self.state, r.card, r.cost.total_s(), cfg) {
-                    return RouteStep::Shed;
+                if let Some(cause) = admit(&self.state, r.card, r.cost.total_s(), cfg) {
+                    return RouteStep::Shed(cause);
                 }
                 self.finish_single(
                     idx,
@@ -414,17 +549,33 @@ impl NodePlanner {
             }
         }
         let (seg, opened) = self.commit_open(idx, t, card, t, cost, key, cfg);
+        let latency_s = seg.finish_s - t;
         RouteStep::Routed {
-            routed: Routed { decision, card, latency_s: seg.finish_s - t, finish_s: seg.finish_s },
+            routed: Routed {
+                decision,
+                card,
+                latency_s,
+                finish_s: seg.finish_s,
+                // the residual (link backlog + compute backlog) is queueing
+                stage: StageBreakdown::attribute(
+                    latency_s,
+                    0.0,
+                    cost.transfer_s,
+                    cost.compute_s,
+                    0.0,
+                ),
+            },
             opened,
         }
     }
 
     /// Commit a segment and close any window on the card (its timeline
     /// just changed). Used for recsys stages, which never batch.
-    fn commit_plain(&mut self, card: usize, ready_s: f64, cost: ModeledCost) -> Seg {
+    fn commit_plain(&mut self, idx: usize, card: usize, ready_s: f64, cost: ModeledCost) -> Seg {
         self.open[card] = None;
-        self.state.commit(card, ready_s, cost)
+        let seg = self.state.commit(card, ready_s, cost);
+        self.record_seg(card, seg, cost, idx);
+        seg
     }
 
     /// Commit a segment; when dynamic batching is on and the segment has
@@ -441,6 +592,7 @@ impl NodePlanner {
     ) -> (Seg, Option<BatchTicket>) {
         self.open[card] = None;
         let seg = self.state.commit(card, ready_s, cost);
+        self.record_seg(card, seg, cost, idx);
         let opened = match cfg.dynamic_batch {
             Some(_) if seg.start_s > now_s => {
                 let gen = self.next_gen;
@@ -487,13 +639,35 @@ impl NodePlanner {
         }
         // the joiner's activations must clear the PCIe link before the
         // batch starts, or growing it would delay the whole batch
-        if self.state.link.busy_until(card).max(t) + cost.transfer_s > start_s {
+        let xfer_start = self.state.link.busy_until(card).max(t);
+        if xfer_start + cost.transfer_s > start_s {
             return None;
         }
-        let _delivered = self.state.link.occupy(card, t, cost.transfer_s);
+        let delivered = self.state.link.occupy(card, t, cost.transfer_s);
+        let old_finish = self.state.compute_busy[card];
         let new_finish = start_s + solo * (1.0 + dynb.marginal * n_old as f64);
         self.state.compute_busy[card] = new_finish;
         self.state.busy_s[card] += dynb.marginal * solo;
+        if self.tape.is_some() {
+            // the joiner's transfer, plus the batch compute growing from
+            // the superseded finish to the shared one
+            let seg = Seg {
+                xfer_start_s: xfer_start,
+                delivered_s: delivered,
+                start_s: old_finish,
+                finish_s: new_finish,
+            };
+            self.record_seg(
+                card,
+                seg,
+                ModeledCost {
+                    compute_s: new_finish - old_finish,
+                    transfer_s: cost.transfer_s,
+                    dram_occupancy: cost.dram_occupancy,
+                },
+                idx,
+            );
+        }
         // retro-extend the existing members' segments to the shared finish
         // (they are the card's newest entries; the queue stays nondecreasing
         // because new_finish exceeds the previous batch finish)
@@ -504,7 +678,17 @@ impl NodePlanner {
         let b = self.open[card].as_mut().expect("window checked above");
         let members = b.members.clone();
         b.members.push(idx);
-        Some((Routed { decision, card, latency_s: new_finish - t, finish_s: new_finish }, members))
+        let latency_s = new_finish - t;
+        // the merge precondition guarantees t + transfer <= start_s, so
+        // the batch-wait term is non-negative and the residual is zero
+        let stage = StageBreakdown::attribute(
+            latency_s,
+            start_s - t - cost.transfer_s,
+            cost.transfer_s,
+            new_finish - start_s,
+            0.0,
+        );
+        Some((Routed { decision, card, latency_s, finish_s: new_finish, stage }, members))
     }
 }
 
@@ -539,8 +723,26 @@ pub fn plan(
     policy: RoutePolicy,
     cfg: &FleetConfig,
 ) -> Result<RoutePlan> {
+    plan_traced(replicas, reqs, policy, cfg, None)
+}
+
+/// [`plan`] with an optional tracing sink. `None` is the zero-cost path:
+/// no tape, no request traces, bit-identical outcomes and allocations to
+/// a tracerless run. `Some` additionally records occupancy segments and
+/// per-request lifecycle spans — the routing arithmetic and event-heap
+/// schedule are untouched either way.
+pub fn plan_traced(
+    replicas: &ReplicaManager,
+    reqs: &[FleetRequest],
+    policy: RoutePolicy,
+    cfg: &FleetConfig,
+    tracer: Option<&mut Tracer>,
+) -> Result<RoutePlan> {
     validate(replicas, cfg)?;
     let mut planner = NodePlanner::new(replicas.cards);
+    if tracer.is_some() {
+        planner.enable_tape();
+    }
     let mut heap: EventHeap<Ev> = EventHeap::new(cfg.des_seed);
     let mut planned: Vec<PlannedRequest> = Vec::with_capacity(reqs.len());
     for (i, req) in reqs.iter().enumerate() {
@@ -553,15 +755,20 @@ pub fn plan(
             arrival_s: t,
             items: req.items(),
             route: None,
+            shed_cause: None,
         });
         heap.push(t, Ev::Arrive(i));
     }
+    let mut shed = ShedCounts::default();
     let mut complete_ev: Vec<Option<EventId>> = vec![None; reqs.len()];
     while let Some(e) = heap.pop() {
         let t = e.at_s;
         match e.kind {
             Ev::Arrive(i) => match planner.step(replicas, &reqs[i], i, t, policy, cfg) {
-                RouteStep::Shed => {}
+                RouteStep::Shed(cause) => {
+                    planned[i].shed_cause = Some(cause);
+                    shed.count(cause);
+                }
                 RouteStep::Routed { routed, opened } => {
                     complete_ev[i] = Some(heap.push_class(
                         routed.finish_s,
@@ -590,6 +797,10 @@ pub fn plan(
                             Ev::Complete(m),
                         ));
                         if let Some(r) = planned[m].route.as_mut() {
+                            // the batch grew under this member: the extra
+                            // time is compute (the batch runs longer), so the
+                            // member's stage sums keep matching its latency
+                            r.stage.compute_s += routed.finish_s - r.finish_s;
                             r.finish_s = routed.finish_s;
                             r.latency_s = routed.finish_s - planned[m].arrival_s;
                         }
@@ -619,7 +830,34 @@ pub fn plan(
     } else {
         0.0
     };
-    Ok(RoutePlan { planned, span_s, busy_s: planner.busy_s().to_vec() })
+    if let Some(tr) = tracer {
+        tr.extend_segs(0, planner.take_tape());
+        for (i, p) in planned.iter().enumerate() {
+            tr.request(match (&p.route, p.shed_cause) {
+                (Some(r), _) => RequestTrace {
+                    req: i,
+                    family: p.family.name(),
+                    node: 0,
+                    card: r.card,
+                    arrival_s: p.arrival_s,
+                    finish_s: r.finish_s,
+                    stage: r.stage,
+                    outcome: "completed",
+                },
+                (None, cause) => RequestTrace {
+                    req: i,
+                    family: p.family.name(),
+                    node: 0,
+                    card: 0,
+                    arrival_s: p.arrival_s,
+                    finish_s: p.arrival_s,
+                    stage: StageBreakdown::default(),
+                    outcome: cause.map(ShedCause::name).unwrap_or("shed"),
+                },
+            });
+        }
+    }
+    Ok(RoutePlan { planned, span_s, busy_s: planner.busy_s().to_vec(), shed })
 }
 
 /// Pick a replica index among `n` candidates. `score(i)` returns the
@@ -673,14 +911,17 @@ fn choose<F: Fn(usize) -> (usize, f64)>(
 
 /// Admission: bounded queue on the primary card, then the SLA rule — shed
 /// when (queue depth + 1) × modeled request cost exceeds the budget.
-fn admit(state: &NodeState, card: usize, request_cost_s: f64, cfg: &FleetConfig) -> bool {
+/// Returns the shed cause, or `None` when the request is admitted.
+fn admit(state: &NodeState, card: usize, request_cost_s: f64, cfg: &FleetConfig) -> Option<ShedCause> {
     let depth = state.depth(card);
     if depth >= cfg.max_queue {
-        return false;
+        return Some(ShedCause::QueueFull);
     }
     match cfg.sla_budget_s {
-        Some(budget) => (depth + 1) as f64 * request_cost_s <= budget,
-        None => true,
+        Some(budget) if (depth + 1) as f64 * request_cost_s > budget => {
+            Some(ShedCause::SlaBudget)
+        }
+        _ => None,
     }
 }
 
@@ -725,16 +966,34 @@ mod tests {
         let mut s = NodeState::new(1);
         let cfg = FleetConfig { max_queue: 2, sla_budget_s: Some(1.0), ..FleetConfig::default() };
         // empty card, cheap request: admitted
-        assert!(admit(&s, 0, 0.4, &cfg));
+        assert_eq!(admit(&s, 0, 0.4, &cfg), None);
         // cost alone exceeding the budget: shed even on an empty card
-        assert!(!admit(&s, 0, 1.5, &cfg));
+        assert_eq!(admit(&s, 0, 1.5, &cfg), Some(ShedCause::SlaBudget));
         s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0, dram_occupancy: 1.0 });
         // depth 1: (1+1) * 0.6 > 1.0 -> shed
-        assert!(!admit(&s, 0, 0.6, &cfg));
-        assert!(admit(&s, 0, 0.4, &cfg));
+        assert_eq!(admit(&s, 0, 0.6, &cfg), Some(ShedCause::SlaBudget));
+        assert_eq!(admit(&s, 0, 0.4, &cfg), None);
         s.commit(0, 0.0, ModeledCost { compute_s: 1.0, transfer_s: 0.0, dram_occupancy: 1.0 });
         // bounded queue full
-        assert!(!admit(&s, 0, 1e-6, &cfg));
+        assert_eq!(admit(&s, 0, 1e-6, &cfg), Some(ShedCause::QueueFull));
+    }
+
+    #[test]
+    fn shed_counts_sum_and_merge() {
+        let mut a = ShedCounts::default();
+        a.count(ShedCause::QueueFull);
+        a.count(ShedCause::SlaBudget);
+        a.count(ShedCause::SlaBudget);
+        let mut b = ShedCounts::default();
+        b.count(ShedCause::NoBucket);
+        a.merge(&b);
+        assert_eq!(a.queue_full, 1);
+        assert_eq!(a.sla, 2);
+        assert_eq!(a.no_bucket, 1);
+        assert_eq!(a.total(), 4);
+        for c in [ShedCause::QueueFull, ShedCause::SlaBudget, ShedCause::NoBucket] {
+            assert!(c.name().starts_with("shed-"));
+        }
     }
 
     #[test]
@@ -763,6 +1022,11 @@ mod tests {
         assert_eq!(members, vec![1]);
         assert!((routed.finish_s - 2.5).abs() < 1e-12, "{}", routed.finish_s);
         assert!((routed.latency_s - 2.0).abs() < 1e-12);
+        // the joiner's stage decomposition covers its whole latency:
+        // batch-wait until the batch starts, then the grown compute
+        assert!((routed.stage.total_s() - routed.latency_s).abs() < 1e-12);
+        assert!((routed.stage.batch_wait_s - 0.5).abs() < 1e-12);
+        assert!((routed.stage.compute_s - 1.5).abs() < 1e-12);
         // after the window closes (batch started), nothing can join
         p.close_batch(0, ticket.gen);
         assert!(p.try_merge(3, 0.6, 0, key, cost, decision, dynb).is_none());

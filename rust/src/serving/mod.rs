@@ -21,6 +21,7 @@ pub mod simulation;
 
 use crate::numerics::arena;
 use crate::numerics::weights::WeightGen;
+use crate::obs::StageStats;
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::table_index;
 use crate::runtime::{Clock, Engine, Precision, PrepareOptions, PreparedModel};
@@ -49,6 +50,10 @@ pub struct ServerMetrics {
     /// Which clock `latency`/`wall_s` are on ([`Clock::Modeled`] for the
     /// sim backend — deterministic, card-accurate; wall otherwise).
     pub clock: Clock,
+    /// Per-stage latency attribution ([`crate::obs`]). Populated by the
+    /// modeled-clock routing tiers (fleet/cluster); empty for the
+    /// wall-clock family servers, whose latency has no modeled stages.
+    pub stages: StageStats,
 }
 
 impl ServerMetrics {
@@ -637,6 +642,7 @@ impl RecsysServer {
             items: completed * self.batch,
             wall_s,
             clock: self.clock,
+            stages: StageStats::default(),
         })
     }
 
@@ -672,7 +678,14 @@ impl RecsysServer {
                 latency.add(dt);
             }
             let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
-            return Ok(ServerMetrics { latency, completed: n, items: n * self.batch, wall_s, clock });
+            return Ok(ServerMetrics {
+                latency,
+                completed: n,
+                items: n * self.batch,
+                wall_s,
+                clock,
+                stages: StageStats::default(),
+            });
         }
         let me = Arc::clone(self);
         let reqs = Arc::new(reqs);
@@ -684,7 +697,14 @@ impl RecsysServer {
             })
         })?;
         let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
-        Ok(ServerMetrics { latency, completed, items, wall_s, clock })
+        Ok(ServerMetrics {
+            latency,
+            completed,
+            items,
+            wall_s,
+            clock,
+            stages: StageStats::default(),
+        })
     }
 }
 
@@ -910,7 +930,17 @@ impl NlpServer {
                 Clock::Modeled => modeled_total,
             };
             let waste = 1.0 - real as f64 / padded.max(1) as f64;
-            return Ok((ServerMetrics { latency, completed, items, wall_s, clock }, waste));
+            return Ok((
+                ServerMetrics {
+                    latency,
+                    completed,
+                    items,
+                    wall_s,
+                    clock,
+                    stages: StageStats::default(),
+                },
+                waste,
+            ));
         }
 
         // workers share the formed batches, so materialize them first
@@ -953,7 +983,10 @@ impl NlpServer {
             }
         };
         let waste = 1.0 - real as f64 / padded.max(1) as f64;
-        Ok((ServerMetrics { latency, completed, items, wall_s, clock }, waste))
+        Ok((
+            ServerMetrics { latency, completed, items, wall_s, clock, stages: StageStats::default() },
+            waste,
+        ))
     }
 }
 
@@ -1131,7 +1164,14 @@ impl CvServer {
             }
             let wall_s = modeled_wall
                 .unwrap_or_else(|| (wall0.elapsed().as_secs_f64() - gen_s).max(0.0));
-            return Ok(ServerMetrics { latency, completed: n, items: n * batch, wall_s, clock });
+            return Ok(ServerMetrics {
+                latency,
+                completed: n,
+                items: n * batch,
+                wall_s,
+                clock,
+                stages: StageStats::default(),
+            });
         }
         // workers share the request set, so it must be materialized
         let reqs: Vec<crate::workloads::CvRequest> = (0..n).map(|_| gen.next(batch)).collect();
@@ -1146,7 +1186,14 @@ impl CvServer {
             })
         })?;
         let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
-        Ok(ServerMetrics { latency, completed, items, wall_s, clock })
+        Ok(ServerMetrics {
+            latency,
+            completed,
+            items,
+            wall_s,
+            clock,
+            stages: StageStats::default(),
+        })
     }
 }
 

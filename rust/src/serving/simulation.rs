@@ -27,10 +27,12 @@
 //! on the shared heap — see `serving::fleet::router` and
 //! `serving::cluster::router` for the extension points.
 
+use crate::obs::{Stage, StageStats, Tracer};
 use crate::serving::cluster::{Cluster, ClusterMetrics, NodePolicy, Scenario};
 use crate::serving::fleet::{Fleet, FleetMetrics, FleetRequest, RoutePolicy};
 use crate::util::bench::BenchReport;
 use crate::util::error::{bail, Result};
+use crate::util::json::Json;
 use std::sync::Arc;
 
 /// Which tier the simulation drives.
@@ -144,6 +146,40 @@ impl Simulation {
             }
         }
     }
+
+    /// [`Simulation::run`] with tracing ([`crate::obs`]): also returns the
+    /// [`Tracer`] holding per-request lifecycle spans and per-card / NIC /
+    /// DRAM occupancy timelines. The event schedule is identical to an
+    /// untraced run — same seed, same plan, bit-identical report.
+    pub fn run_traced(&self) -> Result<(SimReport, Tracer)> {
+        if self.execute_workers.is_some() {
+            bail!("run_traced() is a planning pass; drop .execute() to trace");
+        }
+        let mut tracer = Tracer::new();
+        let report = match &self.tier {
+            Tier::Fleet(fleet) => {
+                if !self.scenario.is_empty() {
+                    bail!(
+                        "drain/fail scenarios are a cluster-tier feature; \
+                         the fleet tier has no nodes to drain"
+                    );
+                }
+                let m = fleet.route_traced(&self.trace, self.card_policy, Some(&mut tracer))?;
+                SimReport::from_fleet(m)
+            }
+            Tier::Cluster(cluster) => {
+                let m = cluster.route_traced(
+                    &self.trace,
+                    self.node_policy,
+                    self.card_policy,
+                    &self.scenario,
+                    Some(&mut tracer),
+                )?;
+                SimReport::from_cluster(m)
+            }
+        };
+        Ok((report, tracer))
+    }
 }
 
 /// The unified result shape both tiers produce: headline numbers up
@@ -164,6 +200,16 @@ pub struct SimReport {
     pub p99_ms: f64,
     /// Modeled span of the run (first arrival to last completion).
     pub span_s: f64,
+    /// `shed` split by cause; [`SimReport::conserved`] gates on the sum.
+    /// The first three are admission-control causes (both tiers); the last
+    /// two are cluster-tier outcomes (node failure, no routable node).
+    pub shed_queue_full: usize,
+    pub shed_sla: usize,
+    pub shed_no_bucket: usize,
+    pub shed_failed: usize,
+    pub shed_unroutable: usize,
+    /// Stage-level latency attribution over the completed requests.
+    pub stages: StageStats,
     /// Full fleet metrics (fleet-tier runs).
     pub fleet: Option<FleetMetrics>,
     /// Full cluster metrics (cluster-tier runs).
@@ -184,6 +230,12 @@ impl SimReport {
             p50_ms: m.node.latency.p50() * 1e3,
             p99_ms: m.node.latency.p99() * 1e3,
             span_s: m.node.wall_s,
+            shed_queue_full: m.shed_causes.queue_full,
+            shed_sla: m.shed_causes.sla,
+            shed_no_bucket: m.shed_causes.no_bucket,
+            shed_failed: 0,
+            shed_unroutable: 0,
+            stages: m.node.stages.clone(),
             fleet: Some(m),
             cluster: None,
         }
@@ -202,21 +254,40 @@ impl SimReport {
             p50_ms: m.cluster.latency.p50() * 1e3,
             p99_ms: m.cluster.latency.p99() * 1e3,
             span_s: m.cluster.wall_s,
+            shed_queue_full: m.shed_causes.queue_full,
+            shed_sla: m.shed_causes.sla,
+            shed_no_bucket: m.shed_causes.no_bucket,
+            shed_failed: m.shed_failed,
+            shed_unroutable: m.shed_unroutable,
+            stages: m.cluster.stages.clone(),
             fleet: None,
             cluster: Some(m),
         }
     }
 
-    /// The conservation invariant every run must satisfy.
+    /// The conservation invariant every run must satisfy: requests are
+    /// neither lost nor double-counted, and the cause split accounts for
+    /// every shed request.
     pub fn conserved(&self) -> bool {
-        self.completed + self.shed == self.offered
+        let causes = self.shed_queue_full
+            + self.shed_sla
+            + self.shed_no_bucket
+            + self.shed_failed
+            + self.shed_unroutable;
+        self.completed + self.shed == self.offered && causes == self.shed
     }
 
     pub fn shed_rate(&self) -> f64 {
         self.shed as f64 / self.offered.max(1) as f64
     }
 
-    /// Bridge into the shared `BENCH_*.json` schema.
+    /// Mean seconds attributed to `stage` over the completed requests.
+    pub fn stage_mean_s(&self, stage: Stage) -> f64 {
+        self.stages.mean(stage)
+    }
+
+    /// Bridge into the shared `BENCH_*.json` schema. The shed-cause split
+    /// and the stage breakdown ride along as `extra` detail objects.
     pub fn bench_report(&self, name: &str, backend: &str) -> BenchReport {
         let mut r = BenchReport::new(name, backend, "modeled");
         r.offered = self.offered;
@@ -225,6 +296,16 @@ impl SimReport {
         r.qps = self.qps;
         r.p50_ms = self.p50_ms;
         r.p99_ms = self.p99_ms;
-        r
+        r.with(
+            "shed_causes",
+            Json::obj(vec![
+                ("queue_full", Json::num(self.shed_queue_full as f64)),
+                ("sla", Json::num(self.shed_sla as f64)),
+                ("no_bucket", Json::num(self.shed_no_bucket as f64)),
+                ("failed", Json::num(self.shed_failed as f64)),
+                ("unroutable", Json::num(self.shed_unroutable as f64)),
+            ]),
+        )
+        .with("stages", self.stages.to_json())
     }
 }

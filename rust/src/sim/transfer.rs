@@ -135,6 +135,17 @@ impl NicOccupancy {
         self.tx_until
     }
 
+    /// When the ingress link frees up (0.0 while untouched) — tracing uses
+    /// this to reconstruct where an rx segment started.
+    pub fn rx_until(&self) -> f64 {
+        self.rx_until
+    }
+
+    /// When the egress link frees up (0.0 while untouched).
+    pub fn tx_until(&self) -> f64 {
+        self.tx_until
+    }
+
     /// Seconds of ingress line time consumed so far.
     pub fn rx_busy_s(&self) -> f64 {
         self.rx_busy_s

@@ -197,6 +197,21 @@ impl Histogram {
     }
 }
 
+/// Exact small-sample quantile (nearest-rank, matching
+/// [`Histogram::percentile`]'s `ceil(q*n)` convention): `q` in `[0, 1]`,
+/// sorts a copy of the samples. The log-bucketed [`Histogram`] has ~1.5%
+/// relative resolution — too coarse for sub-millisecond stage latencies —
+/// so per-stage p99s go through here instead.
+pub fn exact_quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Cosine similarity — the paper's embedding-quality metric (§V-A).
 pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -320,6 +335,26 @@ mod tests {
         h.add(50.0);
         assert_eq!(h.count(), 2);
         assert!(h.percentile(10.0) >= 1e-3);
+    }
+
+    #[test]
+    fn exact_quantile_matches_sorted_slice_ground_truth() {
+        // odd/even sizes, unsorted input, duplicate values
+        let xs = vec![5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(exact_quantile(&xs, 0.0), 1.0);
+        assert_eq!(exact_quantile(&xs, 0.2), 1.0); // ceil(0.2*5)=1 -> 1st
+        assert_eq!(exact_quantile(&xs, 0.5), 3.0); // ceil(0.5*5)=3 -> 3rd
+        assert_eq!(exact_quantile(&xs, 0.99), 5.0);
+        assert_eq!(exact_quantile(&xs, 1.0), 5.0);
+        let xs = vec![2.0, 2.0, 1.0, 1.0];
+        assert_eq!(exact_quantile(&xs, 0.5), 1.0); // ceil(0.5*4)=2 -> 2nd
+        assert_eq!(exact_quantile(&xs, 0.75), 2.0);
+        assert_eq!(exact_quantile(&[], 0.5), 0.0);
+        assert_eq!(exact_quantile(&[7.5], 0.99), 7.5);
+        // agrees with the nearest-rank formula on a bigger sample
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        assert_eq!(exact_quantile(&xs, 0.99), 990.0);
+        assert_eq!(exact_quantile(&xs, 0.501), 501.0);
     }
 
     #[test]
