@@ -7,7 +7,9 @@
 //!   serve             serve a model for N requests over the active backend
 //!                     (`--backend {ref,sim,pjrt}` selects execution,
 //!                     `--threads N` keeps N requests in flight; `sim` runs
-//!                     reference numerics on the modeled card clock)
+//!                     reference numerics on the modeled card clock;
+//!                     `--window-ms W` adds windowed telemetry on the
+//!                     single-worker streaming path)
 //!   validate-numerics run the §V-C reference-vs-backend validation
 //!   fleet             route a mixed recsys/nlp/cv stream across the cards
 //!                     (`--mix 70/20/10 --policy la --replicas 4`); on
@@ -23,11 +25,24 @@
 //!                     dynamic batching on one seeded trace, with
 //!                     determinism and conservation checks (sim backend)
 //!   trace             replay a seeded cluster scenario with request-level
-//!                     tracing on (`--mix/--policy/--out trace.json`):
+//!                     tracing on (`--mix/--policy/--out trace.json`,
+//!                     optional `--fail/--drain` node events):
 //!                     verifies tracing-off bit-identity, stage-sum and
 //!                     utilization invariants, compares a NIC-throttled
 //!                     rerun against the unconstrained stage breakdown,
 //!                     and writes a Perfetto-loadable Chrome trace JSON
+//!   monitor           windowed telemetry + SLO drill on the same replay
+//!                     plumbing as `trace`: derives fixed-width series from
+//!                     a node-fail scenario (probe-calibrated so the kill
+//!                     always has in-flight work to shed), evaluates
+//!                     multi-window error-budget burn rules, and checks the
+//!                     alert fires within bounded windows, clears after
+//!                     recovery, reconciles with the report totals, and is
+//!                     bit-deterministic (`--window-ms/--p99-budget-ms`)
+//!   bench-diff        regression gate: diff fresh BENCH_*.json reports
+//!                     against the committed baselines in bench/baselines
+//!                     with per-metric direction-aware tolerances
+//!                     (`--tol qps=0.10`); exits nonzero on any regression
 //!   lint              static analysis, nothing prepared or simulated:
 //!                     per-op shape/dtype inference over the model graphs,
 //!                     a memory-fit proof against the node spec, and
@@ -47,24 +62,30 @@ use fbia::config::Config;
 use fbia::graph::models::ModelId;
 use fbia::numerics::validate;
 use fbia::numerics::weights::WeightGen;
-use fbia::obs::{chrome_trace, SegKind, Stage, StageStats};
+use fbia::obs::{
+    chrome_trace, chrome_trace_monitored, MonitorReport, SegKind, SloSpec, Stage, StageStats,
+    Tracer, WindowedSeries,
+};
+use fbia::platform::NodeSpec;
 use fbia::runtime::{Clock, Engine, Precision, SimBackend};
-use fbia::serving::cluster::{self, Cluster, ClusterMetrics, EventKind, NodePolicy, Scenario};
+use fbia::serving::cluster::{
+    self, Cluster, ClusterMetrics, EventKind, NodeEvent, NodePolicy, Scenario,
+};
 use fbia::serving::fleet::{
-    plan::plan_capacity, Arrival, DynamicBatch, FamilyMix, Fleet, FleetConfig, FleetMetrics,
-    RoutePolicy, TrafficGen,
+    plan::plan_capacity, Arrival, DynamicBatch, Family, FamilyMix, Fleet, FleetConfig,
+    FleetMetrics, FleetRequest, RoutePolicy, TrafficGen,
 };
 use fbia::serving::policy::{card_policy_by_name, node_policy_by_name, placement_by_name};
-use fbia::serving::simulation::Simulation;
+use fbia::serving::simulation::{SimReport, Simulation};
 use fbia::serving::{CvServer, NlpServer, RecsysServer, ServeOptions, WEIGHT_SEED};
 use fbia::sim::simulate_model;
-use fbia::util::bench::BenchReport;
+use fbia::util::bench::{compare, BenchReport};
 use fbia::util::cli::Args;
 use fbia::util::error::{bail, err, Result};
 use fbia::util::json::Json;
 use fbia::util::table::{f2, ms, pct, Table};
 use fbia::workloads::{CvGen, NlpGen, RecsysGen};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 fn main() {
@@ -79,10 +100,12 @@ fn main() {
         Some("cluster") => cmd_cluster(&args),
         Some("des") => cmd_des(&args),
         Some("trace") => cmd_trace(&args),
+        Some("monitor") => cmd_monitor(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         Some("lint") => cmd_lint(&args),
         Some("info") | None => cmd_info(&args),
         Some(other) => Err(err!(
-            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster, des, trace, lint)"
+            "unknown subcommand '{other}' (try: info, simulate, compile-report, serve, validate-numerics, fleet, capacity, cluster, des, trace, monitor, bench-diff, lint)"
         )),
     };
     if let Err(e) = result {
@@ -247,7 +270,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `--threads N` (default 1): N whole requests in flight; for DLRM the
     // per-card SLS shards of each request also fan out across N threads
     let threads = args.get_usize("threads", 1).max(1);
-    match args.get_or("model", "dlrm") {
+    // `--window-ms W`: windowed telemetry on the streaming (single-worker)
+    // serve paths — wall seconds on real backends, modeled seconds on sim
+    let window_s = args
+        .get("window-ms")
+        .map(|v| {
+            let w: f64 = v.parse().map_err(|_| err!("--window-ms must be a number (ms)"))?;
+            if !w.is_finite() || w <= 0.0 {
+                bail!("--window-ms must be positive (got {w})");
+            }
+            Ok(w * 1e-3)
+        })
+        .transpose()?;
+    let metrics = match args.get_or("model", "dlrm") {
         "dlrm" | "recsys" => {
             let batch = args.get_usize("batch", 32);
             // DLRM defaults to int8 (the paper's production path); xlm-r/cv
@@ -259,10 +294,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let reqs: Vec<_> = (0..n).map(|_| gen.next()).collect();
             // workers == 1 keeps the Fig. 6 pipelined path; > 1 serves with
             // N requests in flight
-            let metrics = server
-                .serve_with(reqs, &ServeOptions { workers: threads, ..ServeOptions::default() })?;
+            let metrics = server.serve_with(
+                reqs,
+                &ServeOptions { workers: threads, window_s, ..ServeOptions::default() },
+            )?;
             print_metrics("dlrm", &metrics);
             print_budget_check(&metrics, ModelId::RecsysComplex);
+            metrics
         }
         "xlmr" | "nlp" => {
             let precision = Precision::parse(args.get_or("precision", "f32"))?;
@@ -276,12 +314,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     max_batch: args.get_usize("max-batch", 4),
                     length_aware: !args.flag("naive-batching"),
                     workers: threads,
+                    window_s,
                     ..ServeOptions::default()
                 },
             )?;
             print_metrics("xlmr", &metrics);
             print_budget_check(&metrics, ModelId::XlmR);
             println!("  pad waste : {}", pct(waste));
+            metrics
         }
         "cv" => {
             let precision = Precision::parse(args.get_or("precision", "f32"))?;
@@ -292,12 +332,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 n,
                 batch,
                 &mut gen,
-                &ServeOptions { workers: threads, ..ServeOptions::default() },
+                &ServeOptions { workers: threads, window_s, ..ServeOptions::default() },
             )?;
             print_metrics("cv", &metrics);
             print_budget_check(&metrics, ModelId::ResNeXt101);
+            metrics
         }
         other => bail!("serve: unknown model '{other}' (dlrm | xlmr | cv)"),
+    };
+    match (&metrics.windows, window_s) {
+        (Some(w), _) => print_window_table("windowed telemetry:", w),
+        (None, Some(_)) => println!(
+            "  (windowed telemetry needs the streaming path: --threads 1; \
+             fan-out completion order is scheduler-dependent)"
+        ),
+        (None, None) => {}
     }
     Ok(())
 }
@@ -1111,6 +1160,145 @@ fn cmd_des(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared replay plumbing for the observability subcommands (`fbia trace`,
+/// `fbia monitor`): one seeded, modeled-clock cluster scenario — node
+/// specs, policies, an open-loop Poisson trace at a deliberate fraction of
+/// tier capacity, and the optional `--fail`/`--drain` event list — built
+/// from one flag set so the two commands cannot drift apart.
+struct Replay {
+    fcfg: FleetConfig,
+    mix: FamilyMix,
+    requests: usize,
+    dir: PathBuf,
+    specs: Vec<NodeSpec>,
+    node_policy: NodePolicy,
+    card_policy: RoutePolicy,
+    cluster: Arc<Cluster>,
+    /// Mix-weighted mean modeled request cost on node 0 (seconds).
+    mean_cost_s: f64,
+    rate_qps: f64,
+    reqs: Vec<FleetRequest>,
+    /// Last arrival time of the generated trace.
+    horizon_s: f64,
+    /// Parsed `--fail`/`--drain` events (empty when neither flag is given;
+    /// each command picks its own default drill).
+    events: Vec<NodeEvent>,
+}
+
+/// Build the [`Replay`] for `cmd` from the shared flag set. `load_divisor`
+/// sets the open-loop Poisson rate to `nodes / (load_divisor × mean
+/// request cost)` — large divisors keep the tier mostly idle (the
+/// *intrinsic* regime, what `trace` wants), small ones leave queues with
+/// work in them (what `monitor`'s failure drill kills).
+fn replay(
+    args: &Args,
+    cmd: &str,
+    purpose: &str,
+    cfg: &Config,
+    default_nodes: usize,
+    default_requests: usize,
+    load_divisor: f64,
+) -> Result<Replay> {
+    let requested = args
+        .get("backend")
+        .map(str::to_string)
+        .or_else(|| std::env::var("FBIA_BACKEND").ok());
+    if let Some(b) = requested {
+        if b != "sim" {
+            fbia::runtime::backend_by_name(&b)?;
+            bail!(
+                "fbia {cmd} {purpose} on the modeled clock; \
+                 only --backend sim is supported (got '{b}')"
+            );
+        }
+    }
+    let fcfg = fleet_config(args, cfg)?;
+    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
+    let requests = args.get_usize("requests", default_requests).max(1);
+    let seed = args.get_u64("seed", 1);
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let specs = match &cfg.cluster {
+        Some(cl) => cl.nodes.clone(),
+        None => vec![cfg.node.clone(); args.get_usize("nodes", default_nodes).max(1)],
+    };
+    let node_policy = node_policy_by_name(args.get_or("policy", "weighted"))?;
+    let card_policy =
+        card_policy_by_name(args.get_or("card-policy", cfg.serving.card_policy.name()))?;
+    let cluster = Arc::new(Cluster::new(&dir, cfg, &specs, fcfg.clone())?);
+    let mean_cost_s = reqs_mean_cost(&cluster.nodes()[0].fam_cost_s, mix).max(1e-6);
+    let rate_qps = cluster.node_count() as f64 / (load_divisor * mean_cost_s);
+    let mut traffic = TrafficGen::new(
+        seed,
+        mix,
+        Arrival::Poisson { rate_qps },
+        cluster.manifest(),
+        fcfg.recsys_batch,
+    )?;
+    let reqs = traffic.take(requests);
+    let horizon_s = reqs.last().map(|r| r.arrival_s()).unwrap_or(0.0);
+    let mut events = Vec::new();
+    if let Some(s) = args.get("drain") {
+        events.extend(cluster::parse_events(EventKind::Drain, s)?);
+    }
+    if let Some(s) = args.get("fail") {
+        events.extend(cluster::parse_events(EventKind::Fail, s)?);
+    }
+    Ok(Replay {
+        fcfg,
+        mix,
+        requests,
+        dir,
+        specs,
+        node_policy,
+        card_policy,
+        cluster,
+        mean_cost_s,
+        rate_qps,
+        reqs,
+        horizon_s,
+        events,
+    })
+}
+
+/// The headline bits two [`SimReport`]s must share for the tracing /
+/// monitoring cost contract ("telemetry off ⇒ bit-identical run").
+fn reports_bit_identical(a: &SimReport, b: &SimReport) -> bool {
+    a.qps.to_bits() == b.qps.to_bits()
+        && a.p50_ms.to_bits() == b.p50_ms.to_bits()
+        && a.p99_ms.to_bits() == b.p99_ms.to_bits()
+        && a.span_s.to_bits() == b.span_s.to_bits()
+        && a.completed == b.completed
+        && a.shed == b.shed
+}
+
+/// Shared windowed-telemetry table ([`fbia::obs::metrics`]): one row per
+/// fixed-width window, sampled down to ~16 rows for long series.
+fn print_window_table(title: &str, s: &WindowedSeries) {
+    if s.windows == 0 {
+        return;
+    }
+    println!("\n{title}");
+    let mut t = Table::new(&[
+        "window", "start", "offered", "done", "shed", "QPS", "p50 ms", "p99 ms", "card", "NIC",
+    ]);
+    let step = s.windows.div_ceil(16).max(1);
+    for w in (0..s.windows).step_by(step) {
+        t.row(&[
+            w.to_string(),
+            format!("{:.3}s", w as f64 * s.width_s),
+            s.offered[w].to_string(),
+            s.completed[w].to_string(),
+            s.shed(w).to_string(),
+            format!("{:.1}", s.qps[w]),
+            format!("{:.2}", s.p50_ms[w]),
+            format!("{:.2}", s.p99_ms[w]),
+            pct(s.card_util[w]),
+            pct(s.nic_util[w]),
+        ]);
+    }
+    t.print();
+}
+
 /// `fbia trace`: the observability drill ([`fbia::obs`]). Replays one
 /// seeded cluster scenario twice — untraced and traced — and checks the
 /// tracing cost contract (bit-identical reports, in-bounds utilization,
@@ -1123,83 +1311,39 @@ fn cmd_des(args: &Args) -> Result<()> {
 /// gate on it. Modeled clock only, like `fbia cluster`.
 fn cmd_trace(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let requested = args
-        .get("backend")
-        .map(str::to_string)
-        .or_else(|| std::env::var("FBIA_BACKEND").ok());
-    if let Some(b) = requested {
-        if b != "sim" {
-            fbia::runtime::backend_by_name(&b)?;
-            bail!(
-                "fbia trace replays modeled-clock scenarios; \
-                 only --backend sim is supported (got '{b}')"
-            );
-        }
-    }
-    let fcfg = fleet_config(args, &cfg)?;
-    let mix = FamilyMix::parse(args.get_or("mix", "70/20/10"))?;
-    let requests = args.get_usize("requests", 120).max(1);
-    let seed = args.get_u64("seed", 1);
-    let dir = Path::new(args.get_or("artifacts", "artifacts"));
-    let specs = match &cfg.cluster {
-        Some(cl) => cl.nodes.clone(),
-        None => vec![cfg.node.clone(); args.get_usize("nodes", 2).max(1)],
-    };
-    let node_policy = node_policy_by_name(args.get_or("policy", "weighted"))?;
-    let card_policy =
-        card_policy_by_name(args.get_or("card-policy", cfg.serving.card_policy.name()))?;
+    let rp = replay(args, "trace", "replays scenarios", &cfg, 2, 120, 12.0)?;
+    // The large load divisor keeps the tier mostly idle: queueing is
+    // negligible and the breakdown shows the *intrinsic* regime
+    // (compute-bound stock, network-bound throttled) instead of saturation
+    // queueing drowning both.
     let out = args.get_or("out", "trace.json");
-
-    let cluster = Arc::new(Cluster::new(dir, &cfg, &specs, fcfg.clone())?);
-    // Open-loop Poisson arrivals well under capacity: with the tier mostly
-    // idle, queueing is negligible and the breakdown shows the *intrinsic*
-    // regime (compute-bound stock, network-bound throttled) instead of
-    // saturation queueing drowning both.
-    let mean_cost_s = {
-        let costs = &cluster.nodes()[0].fam_cost_s;
-        let total: f64 = reqs_mean_cost(costs, mix);
-        total.max(1e-6)
-    };
-    let n_nodes = cluster.node_count();
-    let rate_qps = n_nodes as f64 / (12.0 * mean_cost_s);
-    let mut traffic = TrafficGen::new(
-        seed,
-        mix,
-        Arrival::Poisson { rate_qps },
-        cluster.manifest(),
-        fcfg.recsys_batch,
-    )?;
-    let reqs = traffic.take(requests);
     println!(
-        "trace: {} nodes, mix {} over {requests} requests ({:.0} QPS open-loop, {} / {})",
-        n_nodes,
-        mix.label(),
-        rate_qps,
-        node_policy.name(),
-        card_policy.name()
+        "trace: {} nodes, mix {} over {} requests ({:.0} QPS open-loop, {} / {})",
+        rp.cluster.node_count(),
+        rp.mix.label(),
+        rp.requests,
+        rp.rate_qps,
+        rp.node_policy.name(),
+        rp.card_policy.name()
     );
 
     let sim = |cl: &Arc<Cluster>| {
-        Simulation::cluster(Arc::clone(cl))
-            .node_policy(node_policy)
-            .card_policy(card_policy)
-            .trace(reqs.clone())
+        let mut s = Simulation::cluster(Arc::clone(cl))
+            .node_policy(rp.node_policy)
+            .card_policy(rp.card_policy)
+            .trace(rp.reqs.clone());
+        if !rp.events.is_empty() {
+            s = s.scenario(Scenario::new(rp.events.clone()));
+        }
+        s
     };
     // the cost contract: a rerun is bit-identical, and turning tracing ON
     // must not perturb a single report bit either
-    let plain = sim(&cluster).run()?;
-    let plain2 = sim(&cluster).run()?;
-    let (traced, tracer) = sim(&cluster).run_traced()?;
-    let same = |a: &fbia::serving::simulation::SimReport,
-                b: &fbia::serving::simulation::SimReport| {
-        a.qps.to_bits() == b.qps.to_bits()
-            && a.p50_ms.to_bits() == b.p50_ms.to_bits()
-            && a.p99_ms.to_bits() == b.p99_ms.to_bits()
-            && a.span_s.to_bits() == b.span_s.to_bits()
-            && a.completed == b.completed
-            && a.shed == b.shed
-    };
-    let bit_identical = same(&plain, &plain2) && same(&plain, &traced);
+    let plain = sim(&rp.cluster).run()?;
+    let plain2 = sim(&rp.cluster).run()?;
+    let (traced, tracer) = sim(&rp.cluster).run_traced()?;
+    let bit_identical =
+        reports_bit_identical(&plain, &plain2) && reports_bit_identical(&plain, &traced);
 
     // every completed request's stage decomposition sums to its latency
     let stage_sums = tracer
@@ -1239,29 +1383,30 @@ fn cmd_trace(args: &Args) -> Result<()> {
     // same seed, NIC throttled: halve bw_bits (and keep halving) until the
     // mix's mean wire time provably dominates its mean modeled card cost,
     // flipping the dominant stage from compute to network
-    let mean_wire_bytes = reqs
+    let mean_wire_bytes = rp
+        .reqs
         .iter()
         .map(|r| {
-            let (i, o) = cluster.wire().bytes(r);
+            let (i, o) = rp.cluster.wire().bytes(r);
             (i + o) as f64
         })
         .sum::<f64>()
-        / reqs.len().max(1) as f64;
-    let mut bw_bits = specs[0].nic.bw_bits / 2.0;
-    while mean_wire_bytes * 8.0 / bw_bits < 4.0 * mean_cost_s && bw_bits > 1.0 {
+        / rp.reqs.len().max(1) as f64;
+    let mut bw_bits = rp.specs[0].nic.bw_bits / 2.0;
+    while mean_wire_bytes * 8.0 / bw_bits < 4.0 * rp.mean_cost_s && bw_bits > 1.0 {
         bw_bits /= 2.0;
     }
-    let mut slow_specs = specs.clone();
+    let mut slow_specs = rp.specs.clone();
     for s in &mut slow_specs {
         s.nic.bw_bits = bw_bits;
     }
-    let slow_cluster = Arc::new(Cluster::new(dir, &cfg, &slow_specs, fcfg.clone())?);
+    let slow_cluster = Arc::new(Cluster::new(&rp.dir, &cfg, &slow_specs, rp.fcfg.clone())?);
     let slow = sim(&slow_cluster).run()?;
     let compute_bound = traced.stages.dominant() == Some(Stage::Compute);
     let network_bound = slow.stages.dominant() == Some(Stage::Network);
     println!(
         "\nNIC throttle drill: bw {:.2e} -> {:.2e} bits/s; dominant stage {} -> {}",
-        specs[0].nic.bw_bits,
+        rp.specs[0].nic.bw_bits,
         bw_bits,
         traced.stages.dominant().map(Stage::name).unwrap_or("-"),
         slow.stages.dominant().map(Stage::name).unwrap_or("-"),
@@ -1319,18 +1464,18 @@ fn cmd_trace(args: &Args) -> Result<()> {
             bench = bench.accept(name, *holds);
         }
         bench
-            .with("nodes", Json::num(n_nodes as f64))
-            .with("mix", Json::str(&mix.label()))
-            .with("requests", Json::num(requests as f64))
-            .with("rate_qps", Json::num(rate_qps))
-            .with("node_policy", Json::str(node_policy.name()))
-            .with("card_policy", Json::str(card_policy.name()))
+            .with("nodes", Json::num(rp.cluster.node_count() as f64))
+            .with("mix", Json::str(&rp.mix.label()))
+            .with("requests", Json::num(rp.requests as f64))
+            .with("rate_qps", Json::num(rp.rate_qps))
+            .with("node_policy", Json::str(rp.node_policy.name()))
+            .with("card_policy", Json::str(rp.card_policy.name()))
             .with("trace_out", Json::str(out))
             .with("trace_events", Json::num(events.len() as f64))
             .with(
                 "nic_throttle",
                 Json::obj(vec![
-                    ("bw_bits_stock", Json::num(specs[0].nic.bw_bits)),
+                    ("bw_bits_stock", Json::num(rp.specs[0].nic.bw_bits)),
                     ("bw_bits_throttled", Json::num(bw_bits)),
                     (
                         "dominant_unconstrained",
@@ -1360,6 +1505,429 @@ fn reqs_mean_cost(fam_cost_s: &[f64; 3], mix: FamilyMix) -> f64 {
         return fam_cost_s.iter().sum::<f64>() / 3.0;
     }
     fam_cost_s.iter().zip(w.iter()).map(|(c, w)| c * w).sum::<f64>() / total
+}
+
+/// Scan a probe run for the busiest admitted moment on `node`: sweep the
+/// completed requests' `[arrival, finish]` intervals and return the
+/// in-flight count `k` and midpoint `t*` of the widest interval holding a
+/// maximal simultaneous count with midpoint ≤ `t_max` (capping `t*` keeps
+/// enough run after the kill for burn rules to observe recovery). Failing
+/// the node at `t*` kills that admitted-but-undelivered work: the
+/// monitored rerun shares every event before `t*` with the probe (same
+/// seed, same trace — DES runs are bit-reproducible), so the kill and the
+/// alerts it trips are deterministic too.
+fn probe_inflight_peak(tracer: &Tracer, node: usize, t_max: f64) -> (usize, f64) {
+    let mut edges: Vec<(f64, i64)> = Vec::new();
+    for r in tracer.requests() {
+        if r.node == node && r.completed() && r.finish_s > r.arrival_s {
+            edges.push((r.arrival_s, 1));
+            edges.push((r.finish_s, -1));
+        }
+    }
+    // ties: process the -1 first so touching intervals don't overcount
+    edges.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    let mut cur = 0i64;
+    // (in-flight count, interval width, interval midpoint)
+    let mut best = (0i64, -1.0f64, 0.0f64);
+    for i in 0..edges.len().saturating_sub(1) {
+        cur += edges[i].1;
+        let (a, b) = (edges[i].0, edges[i + 1].0);
+        let mid = 0.5 * (a + b);
+        if cur > 0 && mid <= t_max && (cur, b - a) > (best.0, best.1) {
+            best = (cur, b - a, mid);
+        }
+    }
+    (best.0.max(0) as usize, best.2)
+}
+
+/// One monitored drill: everything [`cmd_monitor`]'s acceptance checks
+/// need from a single DES seed.
+struct Drill {
+    report: SimReport,
+    tracer: Tracer,
+    monitor: MonitorReport,
+    /// Second monitored run of the identical scenario (bit-determinism).
+    monitor2: MonitorReport,
+    /// Same scenario with all telemetry off (cost contract).
+    plain: SimReport,
+    window_s: f64,
+    /// `--fail`/`--drain` given (`false`) or the calibrated default drill
+    /// (`true`) — the burn-alert acceptance checks only apply to the latter.
+    calibrated: bool,
+    /// Time of the (first) fail event; NaN when the scenario has none.
+    fail_at_s: f64,
+    /// In-flight peak the probe found (calibrated drill only).
+    probed_k: usize,
+}
+
+/// Run the monitored drill for `rp` at `des_seed`. With no user
+/// `--fail`/`--drain` events, calibrates the default drill: a probe run
+/// (no scenario, traced) finds node 0's in-flight peak `(k, t*)`, the
+/// window width is sized so the `k` kills at `t*` dominate their window
+/// (`2k` expected arrivals per window, far over the 1% availability
+/// budget), and the scenario becomes a single node-0 Fail at `t*`.
+fn monitor_drill(
+    rp: &Replay,
+    cfg: &Config,
+    spec: &SloSpec,
+    des_seed: u64,
+    window_override_s: Option<f64>,
+) -> Result<Drill> {
+    let cluster = if des_seed == rp.fcfg.des_seed {
+        Arc::clone(&rp.cluster)
+    } else {
+        let mut fcfg = rp.fcfg.clone();
+        fcfg.des_seed = des_seed;
+        Arc::new(Cluster::new(&rp.dir, cfg, &rp.specs, fcfg)?)
+    };
+    let sim = |events: &[NodeEvent]| {
+        let mut s = Simulation::cluster(Arc::clone(&cluster))
+            .node_policy(rp.node_policy)
+            .card_policy(rp.card_policy)
+            .trace(rp.reqs.clone());
+        if !events.is_empty() {
+            s = s.scenario(Scenario::new(events.to_vec()));
+        }
+        s
+    };
+    let calibrated = rp.events.is_empty();
+    let (events, probed_k) = if calibrated {
+        let (_, probe) = sim(&[]).run_traced()?;
+        let (k, t_star) = probe_inflight_peak(&probe, 0, 0.7 * rp.horizon_s);
+        // nothing in flight on node 0 anywhere (pathological custom flags):
+        // fail mid-run anyway and let the acceptance checks report it
+        let (k, t_star) = if k == 0 { (1, 0.35 * rp.horizon_s) } else { (k, t_star) };
+        (vec![NodeEvent { at_s: t_star, node: 0, kind: EventKind::Fail }], k)
+    } else {
+        (rp.events.clone(), 0)
+    };
+    let fail_at_s = events
+        .iter()
+        .filter(|e| e.kind == EventKind::Fail)
+        .map(|e| e.at_s)
+        .fold(f64::NAN, |acc, t| if acc.is_nan() { t } else { acc.min(t) });
+    // width: small enough that the kill dominates its window (~2k expected
+    // arrivals), large enough that the run still spans >= ~24 windows
+    let window_s = window_override_s
+        .unwrap_or_else(|| {
+            (rp.horizon_s / 24.0).min(2.0 * probed_k.max(1) as f64 / rp.rate_qps)
+        })
+        .max(1e-6);
+    let (report, tracer, monitor) = sim(&events).run_monitored(window_s, spec)?;
+    let (_, _, monitor2) = sim(&events).run_monitored(window_s, spec)?;
+    let plain = sim(&events).run()?;
+    Ok(Drill {
+        report,
+        tracer,
+        monitor,
+        monitor2,
+        plain,
+        window_s,
+        calibrated,
+        fail_at_s,
+        probed_k,
+    })
+}
+
+/// `fbia monitor`: windowed telemetry + SLO burn-rate monitoring over one
+/// seeded cluster scenario ([`fbia::obs::metrics`] / [`fbia::obs::slo`]).
+/// Shares `fbia trace`'s replay plumbing (same flags, same seeded trace) at
+/// a heavier load divisor so queues hold work worth killing. By default it
+/// calibrates its own failure drill — probe the unperturbed run for node
+/// 0's in-flight peak, fail the node right there — and checks that the
+/// availability burn alert fires within the detection bound, clears after
+/// recovery, and does both deterministically (bit-identical alert streams
+/// on a rerun, fires-and-clears again under a different DES seed). With
+/// explicit `--fail`/`--drain` events it monitors that scenario instead
+/// and keeps the invariant checks (windowed conservation, telemetry-off
+/// bit-identity). `--out` writes the Chrome trace with SLO counter tracks;
+/// `--json` emits the shared BENCH schema. Exits nonzero if any acceptance
+/// check fails, so CI can gate on it. Modeled clock only.
+fn cmd_monitor(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rp = replay(args, "monitor", "monitors scenarios", &cfg, 3, 360, 4.0)?;
+    // load divisor 4: per-node utilization ~25% with 3 nodes up, ~37.5%
+    // after one dies — busy enough to keep in-flight work, enough headroom
+    // that the survivors absorb the rerouted load without shedding (the
+    // alert must *clear*)
+    let p99_budget_ms = match args.get("p99-budget-ms") {
+        Some(v) => {
+            let b: f64 =
+                v.parse().map_err(|_| err!("--p99-budget-ms must be a number (ms)"))?;
+            if !b.is_finite() || b <= 0.0 {
+                bail!("--p99-budget-ms must be positive (got {b})");
+            }
+            b
+        }
+        // loosest Table I family budget: the mix shares one tier, so the
+        // latency objective watches the slackest contract
+        None => Family::ALL
+            .iter()
+            .map(|f| f.latency_budget_s() * 1e3)
+            .fold(f64::MIN, f64::max),
+    };
+    let spec = SloSpec::deployment_default(p99_budget_ms);
+    let window_override_s = args
+        .get("window-ms")
+        .map(|v| {
+            let w: f64 = v.parse().map_err(|_| err!("--window-ms must be a number (ms)"))?;
+            if !w.is_finite() || w <= 0.0 {
+                bail!("--window-ms must be positive (got {w})");
+            }
+            Ok(w * 1e-3)
+        })
+        .transpose()?;
+
+    let d = monitor_drill(&rp, &cfg, &spec, rp.fcfg.des_seed, window_override_s)?;
+    println!(
+        "monitor: {} nodes, mix {} over {} requests ({:.0} QPS open-loop, {} / {}), \
+         {:.1} ms windows",
+        rp.cluster.node_count(),
+        rp.mix.label(),
+        rp.requests,
+        rp.rate_qps,
+        rp.node_policy.name(),
+        rp.card_policy.name(),
+        d.window_s * 1e3,
+    );
+    if d.calibrated {
+        println!(
+            "default drill: probe found {} in flight on node 0; failing it at {:.4}s",
+            d.probed_k, d.fail_at_s,
+        );
+    } else if rp.events.is_empty() {
+        println!("scenario: none (steady state)");
+    } else {
+        for e in &rp.events {
+            println!("scenario: {} node {} at {:.4}s", e.kind.name(), e.node, e.at_s);
+        }
+    }
+    println!(
+        "\nheadline: {} offered, {} completed, {} shed ({} to node failure) — \
+         {:.1} QPS, p50 {:.2} ms, p99 {:.2} ms",
+        d.report.offered,
+        d.report.completed,
+        d.report.shed,
+        d.report.shed_failed,
+        d.report.qps,
+        d.report.p50_ms,
+        d.report.p99_ms,
+    );
+    print_window_table("windowed telemetry (fixed-width, derived post-hoc):", &d.monitor.series);
+
+    println!("\nSLO spec: {}", spec.to_json());
+    if d.monitor.alerts.is_empty() {
+        println!("alerts: none (no burn rule tripped)");
+    } else {
+        println!("alerts:");
+        for a in &d.monitor.alerts {
+            println!("  {}", a.describe());
+        }
+    }
+
+    // acceptance: invariants on any scenario, the burn-alert lifecycle on
+    // the calibrated drill (whose kill is constructed to trip it)
+    let mut checks: Vec<(&str, bool)> = vec![
+        ("windows_conserve_totals", d.report.windows_reconcile()),
+        ("metrics_off_bit_identical", reports_bit_identical(&d.plain, &d.report)),
+        ("alerts_bit_deterministic", d.monitor == d.monitor2),
+        ("conservation", d.report.conserved()),
+    ];
+    let mut reseeded: Option<Drill> = None;
+    if d.calibrated {
+        let w_fail = (d.fail_at_s / d.window_s) as usize;
+        // sheds are attributed at *arrival*, so the burn can show up a few
+        // windows before the kill; allow the detection bound on both sides
+        let slack = spec.max_detection_windows();
+        let from = w_fail.saturating_sub(slack);
+        let fires = d.monitor.fires_within("availability", from, 2 * slack);
+        checks.push(("burn_alert_fires_within_bound", fires));
+        checks.push(("burn_alert_clears_after_recovery", d.monitor.cleared("availability")));
+        // same drill re-calibrated under a different DES tie-break seed:
+        // detection and recovery must hold there too, not just at one seed
+        let d2 = monitor_drill(&rp, &cfg, &spec, rp.fcfg.des_seed ^ 0x5EED, window_override_s)?;
+        let w2 = (d2.fail_at_s / d2.window_s) as usize;
+        let fires2 = d2.monitor.fires_within("availability", w2.saturating_sub(slack), 2 * slack);
+        checks.push((
+            "fires_and_clears_across_des_seeds",
+            fires2 && d2.monitor.cleared("availability") && d2.monitor == d2.monitor2,
+        ));
+        reseeded = Some(d2);
+    }
+    println!();
+    for (name, holds) in &checks {
+        println!("  {:<36} {}", name, if *holds { "holds" } else { "VIOLATED" });
+    }
+
+    if let Some(out) = args.get("out") {
+        let doc = chrome_trace_monitored(&d.tracer, Some(&d.monitor));
+        std::fs::write(out, doc.to_string()).map_err(|e| err!("writing {out}: {e}"))?;
+        println!(
+            "\nwrote {out}: {} trace events + SLO counter tracks — load in Perfetto",
+            d.tracer.segs().len() + d.tracer.requests().len(),
+        );
+    }
+
+    if let Some(path) = args.get("json") {
+        let mut bench = d.report.bench_report("monitor_smoke", "sim");
+        for (name, holds) in &checks {
+            bench = bench.accept(name, *holds);
+        }
+        let mut bench = bench
+            .with("nodes", Json::num(rp.cluster.node_count() as f64))
+            .with("mix", Json::str(&rp.mix.label()))
+            .with("requests", Json::num(rp.requests as f64))
+            .with("rate_qps", Json::num(rp.rate_qps))
+            .with("node_policy", Json::str(rp.node_policy.name()))
+            .with("card_policy", Json::str(rp.card_policy.name()))
+            .with("window_ms", Json::num(d.window_s * 1e3))
+            .with("p99_budget_ms", Json::num(p99_budget_ms))
+            .with("slo", spec.to_json())
+            .with("alert_count", Json::num(d.monitor.alerts.len() as f64));
+        if d.calibrated {
+            bench = bench
+                .with("fail_at_s", Json::num(d.fail_at_s))
+                .with("probed_in_flight", Json::num(d.probed_k as f64))
+                .with("killed_in_flight", Json::num(d.report.shed_failed as f64));
+            if let Some(d2) = &reseeded {
+                bench = bench.with(
+                    "reseeded",
+                    Json::obj(vec![
+                        ("fail_at_s", Json::num(d2.fail_at_s)),
+                        ("killed_in_flight", Json::num(d2.report.shed_failed as f64)),
+                        ("alert_count", Json::num(d2.monitor.alerts.len() as f64)),
+                    ]),
+                );
+            }
+        }
+        bench.write(path)?;
+    }
+    if let Some((name, _)) = checks.iter().find(|(_, holds)| !holds) {
+        bail!("monitor acceptance check '{name}' failed");
+    }
+    Ok(())
+}
+
+/// `fbia bench-diff`: the bench regression gate
+/// ([`fbia::util::bench::compare`]). Diffs fresh `BENCH_*.json` reports
+/// (positional paths and/or `--fresh a.json,b.json`) against the committed
+/// baselines in `--baseline-dir` (default `bench/baselines`), matching on
+/// the `bench` identity field. Baselines are partial by design — only the
+/// metrics a baseline pins are gated (see `bench/baselines/README.md` for
+/// the refresh procedure). `--tol metric=rel` relaxes one metric's
+/// relative tolerance; `--json` writes the machine verdict. Exits nonzero
+/// on any regression, missing pinned metric, or fresh report without a
+/// committed baseline — the blocking CI step.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let base_dir = Path::new(args.get_or("baseline-dir", "bench/baselines"));
+    let mut fresh_paths: Vec<String> = args.positional.clone();
+    if let Some(list) = args.get("fresh") {
+        fresh_paths
+            .extend(list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from));
+    }
+    if fresh_paths.is_empty() {
+        bail!(
+            "usage: fbia bench-diff [--baseline-dir bench/baselines] <BENCH_*.json>... \
+             (or --fresh a.json,b.json)"
+        );
+    }
+
+    let mut tol = compare::Tolerances::default();
+    if let Some(spec) = args.get("tol") {
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (metric, rel) = part.split_once('=').ok_or_else(|| {
+                err!("--tol entries are metric=rel (e.g. qps=0.10); got '{part}'")
+            })?;
+            let rel_v: f64 = rel
+                .trim()
+                .parse()
+                .map_err(|_| err!("--tol {metric}: '{rel}' is not a number"))?;
+            tol.set_rel(metric.trim(), rel_v)?;
+        }
+    }
+
+    // committed baselines, indexed by their `bench` identity field
+    let entries = std::fs::read_dir(base_dir)
+        .map_err(|e| err!("reading baseline dir {}: {e}", base_dir.display()))?;
+    let mut base_paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    base_paths.sort();
+    let mut baselines: Vec<(String, Json)> = Vec::new();
+    for p in &base_paths {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| err!("reading {}: {e}", p.display()))?;
+        let doc = Json::parse(&text).map_err(|e| err!("{}: {e}", p.display()))?;
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("{}: baseline has no 'bench' field", p.display()))?
+            .to_string();
+        baselines.push((bench, doc));
+    }
+    if baselines.is_empty() {
+        bail!("no *.json baselines in {}", base_dir.display());
+    }
+
+    let mut t = Table::new(&["bench", "metric", "baseline", "fresh", "delta", "verdict"]);
+    let mut failures: Vec<String> = Vec::new();
+    let mut diffs: Vec<Json> = Vec::new();
+    for path in &fresh_paths {
+        let text = std::fs::read_to_string(path).map_err(|e| err!("reading {path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| err!("{path}: {e}"))?;
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("{path}: fresh report has no 'bench' field"))?;
+        let Some((_, base)) = baselines.iter().find(|(b, _)| b == bench) else {
+            // a bench without a baseline must fail loudly, or new benches
+            // would silently escape the gate forever
+            failures.push(format!(
+                "{bench}: no committed baseline in {} (seed one per bench/baselines/README.md)",
+                base_dir.display()
+            ));
+            continue;
+        };
+        let d = compare::compare(base, &doc, &tol)?;
+        for m in &d.metrics {
+            t.row(&[
+                d.bench.clone(),
+                m.metric.clone(),
+                format!("{:.4}", m.base),
+                format!("{:.4}", m.fresh),
+                format!("{:+.2}%", 100.0 * m.delta_rel),
+                (if m.within { "ok" } else { "REGRESSED" }).to_string(),
+            ]);
+        }
+        failures.extend(d.failures());
+        diffs.push(d.to_json());
+    }
+    t.print();
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::obj(vec![
+            ("pass", Json::Bool(failures.is_empty())),
+            ("diffs", Json::arr(diffs)),
+            ("failures", Json::arr(failures.iter().map(|f| Json::str(f)).collect())),
+        ]);
+        std::fs::write(path, doc.to_string()).map_err(|e| err!("writing {path}: {e}"))?;
+    }
+    if failures.is_empty() {
+        println!(
+            "\nbench-diff: {} report(s) within tolerance of the committed baselines",
+            fresh_paths.len()
+        );
+        Ok(())
+    } else {
+        eprintln!();
+        for f in &failures {
+            eprintln!("bench-diff: {f}");
+        }
+        bail!("{} bench regression(s) against committed baselines", failures.len());
+    }
 }
 
 /// `fbia lint`: the static analyzer standalone — nothing is prepared,

@@ -9,7 +9,7 @@
 
 use std::collections::BTreeSet;
 
-use super::{SegKind, Stage, Tracer};
+use super::{MonitorReport, SegKind, Stage, Tracer};
 use crate::util::json::Json;
 
 /// Thread-id scheme within a node's process: compute lanes are the card
@@ -45,9 +45,64 @@ fn event(ph: &str, name: &str, ts_us: f64, pid: usize, tid: usize) -> Vec<(&'sta
     ]
 }
 
+/// Synthetic process id for the fleet-wide SLO/telemetry tracks (real
+/// node processes use their node index).
+const SLO_PID: usize = 9000;
+
 /// Render a traced run as a Chrome trace-event JSON document:
 /// `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
 pub fn chrome_trace(t: &Tracer) -> Json {
+    chrome_trace_monitored(t, None)
+}
+
+/// [`chrome_trace`] plus, when a monitor report is supplied, per-window
+/// counter tracks (QPS, p99, shed, card/NIC utilization) and instant
+/// events for every SLO burn-rate fire/clear, under a dedicated
+/// "slo monitor" process.
+pub fn chrome_trace_monitored(t: &Tracer, monitor: Option<&MonitorReport>) -> Json {
+    let mut events = trace_events(t);
+    if let Some(m) = monitor {
+        let mut e = event("M", "process_name", 0.0, SLO_PID, 0);
+        e.push(("args", Json::obj(vec![("name", Json::str("slo monitor"))])));
+        events.push(Json::obj(e));
+        let s = &m.series;
+        for w in 0..s.windows {
+            let ts = w as f64 * s.width_s * US;
+            let tracks: [(&str, f64); 5] = [
+                ("qps", s.qps[w]),
+                ("p99_ms", s.p99_ms[w]),
+                ("shed", s.shed(w) as f64),
+                ("card_util", s.card_util[w]),
+                ("nic_util", s.nic_util[w]),
+            ];
+            for (name, v) in tracks {
+                let mut e = event("C", name, ts, SLO_PID, 0);
+                e.push(("args", Json::obj(vec![("value", Json::num(v))])));
+                events.push(Json::obj(e));
+            }
+        }
+        for a in &m.alerts {
+            let name = format!("{} {}/{}", a.kind.name(), a.objective, a.rule);
+            let mut e = event("i", &name, a.t_s * US, SLO_PID, 0);
+            e.push(("s", Json::str("g")));
+            e.push((
+                "args",
+                Json::obj(vec![
+                    ("burn_long", Json::num(a.burn_long)),
+                    ("burn_short", Json::num(a.burn_short)),
+                    ("window", Json::num(a.window as f64)),
+                ]),
+            ));
+            events.push(Json::obj(e));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+fn trace_events(t: &Tracer) -> Vec<Json> {
     let mut events: Vec<Json> = Vec::new();
 
     // --- metadata: stable names for every process and thread track ------
@@ -137,10 +192,7 @@ pub fn chrome_trace(t: &Tracer) -> Json {
         }
     }
 
-    Json::obj(vec![
-        ("traceEvents", Json::Arr(events)),
-        ("displayTimeUnit", Json::str("ms")),
-    ])
+    events
 }
 
 #[cfg(test)]
@@ -195,6 +247,50 @@ mod tests {
                 evs.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some(ph)),
                 "no {ph} event emitted"
             );
+        }
+    }
+
+    #[test]
+    fn monitored_trace_adds_counter_tracks_and_alert_instants() {
+        use crate::obs::metrics::{Registry, WindowedSeries};
+        use crate::obs::slo::{evaluate, MonitorReport, SloSpec};
+        let mut reg = Registry::new(1.0);
+        for w in 0..6usize {
+            let t = w as f64 + 0.5;
+            for _ in 0..100 {
+                reg.inc("offered", t);
+                if w == 3 {
+                    reg.inc("shed_failed", t);
+                } else {
+                    reg.inc("completed", t);
+                    reg.observe("latency_ms", t, 4.0);
+                }
+            }
+        }
+        let series = WindowedSeries::from_registry(&reg, 0, 0);
+        let spec = SloSpec::deployment_default(50.0);
+        let monitor =
+            MonitorReport { alerts: evaluate(&series, &spec), series, spec };
+        assert!(!monitor.alerts.is_empty());
+        let doc = chrome_trace_monitored(&Tracer::new(), Some(&monitor));
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let count = |ph: &str, name: &str| {
+            evs.iter()
+                .filter(|e| {
+                    e.get("ph").and_then(Json::as_str) == Some(ph)
+                        && e.get("name").and_then(Json::as_str).is_some_and(|n| n.contains(name))
+                })
+                .count()
+        };
+        // one qps counter sample per window, fire + clear instants present
+        assert_eq!(count("C", "qps"), 6);
+        assert_eq!(count("C", "card_util"), 6);
+        assert!(count("i", "fire availability") >= 1);
+        assert!(count("i", "clear availability") >= 1);
+        for e in evs {
+            for key in ["ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "event missing {key}: {e}");
+            }
         }
     }
 

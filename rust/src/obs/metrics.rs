@@ -1,0 +1,561 @@
+//! Typed metric registry and fixed-width windowed telemetry.
+//!
+//! The paper's deployment sections treat load as a *time series* — the
+//! diurnal demand curve, degradation under failure, utilization headroom —
+//! not a point-in-time aggregate. This module turns a run into fixed-width
+//! windows: per-window QPS, latency quantiles (via
+//! [`QuantileSketch`](crate::util::stats::QuantileSketch)), card/NIC
+//! utilization, and shed-by-cause counts.
+//!
+//! Two feeds exist:
+//!
+//! - **Modeled clock** — [`WindowedSeries::from_tracer`] derives every
+//!   window post-hoc from the [`Tracer`](crate::obs::trace::Tracer) the DES
+//!   routers already populate. Deriving from the plan (instead of
+//!   instrumenting the planner) keeps the PR 9 cost contract intact: with
+//!   observability off the hot loop is bit-identical and allocation-free.
+//! - **Wall clock** — the real servers push completions through a
+//!   [`WindowFeed`] as they stream (`ServeOptions::window_s`).
+//!
+//! Window semantics: window `w` covers `[w*width, (w+1)*width)`. Offered
+//! and shed requests are attributed to their **arrival** window (both
+//! routers stamp shed requests with `finish_s == arrival_s`); completions
+//! and their latency samples to their **finish** window. Summing any count
+//! series over all windows therefore reconciles bit-exactly with the
+//! corresponding `SimReport` total — a property the integration suite pins.
+
+use crate::obs::trace::{SegKind, Tracer};
+use crate::util::json::Json;
+use crate::util::stats::QuantileSketch;
+use std::collections::BTreeMap;
+
+/// Fixed window geometry: width in (modeled or wall) seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowSpec {
+    pub width_s: f64,
+}
+
+impl WindowSpec {
+    pub fn new(width_s: f64) -> WindowSpec {
+        assert!(width_s > 0.0 && width_s.is_finite(), "window width {width_s} must be positive");
+        WindowSpec { width_s }
+    }
+
+    /// Window index covering time `t_s` (clamped at zero).
+    pub fn index(&self, t_s: f64) -> usize {
+        let w = (t_s / self.width_s).floor();
+        if w > 0.0 {
+            w as usize
+        } else {
+            0
+        }
+    }
+
+    /// Start time of window `w`.
+    pub fn start_s(&self, w: usize) -> f64 {
+        w as f64 * self.width_s
+    }
+}
+
+/// Monotone per-window event counts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CounterSeries {
+    per_window: Vec<u64>,
+    total: u64,
+}
+
+impl CounterSeries {
+    pub fn inc(&mut self, w: usize) {
+        self.add(w, 1);
+    }
+
+    pub fn add(&mut self, w: usize, k: u64) {
+        if self.per_window.len() <= w {
+            self.per_window.resize(w + 1, 0);
+        }
+        self.per_window[w] += k;
+        self.total += k;
+    }
+
+    pub fn window(&self, w: usize) -> u64 {
+        self.per_window.get(w).copied().unwrap_or(0)
+    }
+
+    /// Sum over all windows — reconciles with the run total by
+    /// construction (every increment lands in exactly one window).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn windows(&self) -> usize {
+        self.per_window.len()
+    }
+}
+
+/// Per-window accumulated quantity (e.g. busy-seconds for utilization).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GaugeSeries {
+    per_window: Vec<f64>,
+}
+
+impl GaugeSeries {
+    pub fn add(&mut self, w: usize, v: f64) {
+        if self.per_window.len() <= w {
+            self.per_window.resize(w + 1, 0.0);
+        }
+        self.per_window[w] += v;
+    }
+
+    pub fn window(&self, w: usize) -> f64 {
+        self.per_window.get(w).copied().unwrap_or(0.0)
+    }
+
+    pub fn windows(&self) -> usize {
+        self.per_window.len()
+    }
+}
+
+/// Per-window value distribution, one quantile sketch per window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSeries {
+    eps: f64,
+    per_window: Vec<QuantileSketch>,
+}
+
+impl HistogramSeries {
+    pub fn new(eps: f64) -> HistogramSeries {
+        HistogramSeries { eps, per_window: Vec::new() }
+    }
+
+    pub fn observe(&mut self, w: usize, v: f64) {
+        while self.per_window.len() <= w {
+            self.per_window.push(QuantileSketch::new(self.eps));
+        }
+        self.per_window[w].add(v);
+    }
+
+    pub fn window(&self, w: usize) -> Option<&QuantileSketch> {
+        self.per_window.get(w)
+    }
+
+    pub fn windows(&self) -> usize {
+        self.per_window.len()
+    }
+}
+
+/// Rank-error fraction of per-window latency sketches. Smoke-sized windows
+/// hold well under `1/eps` samples, so their quantiles are exact.
+pub const WINDOW_SKETCH_EPS: f64 = 0.005;
+
+/// Typed metric registry: named counters, gauges, and windowed histograms
+/// sharing one [`WindowSpec`]. Time-stamped feed calls map to window
+/// indices internally; names are `BTreeMap`-keyed so iteration (and hence
+/// every derived report) is deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Registry {
+    spec: WindowSpec,
+    counters: BTreeMap<String, CounterSeries>,
+    gauges: BTreeMap<String, GaugeSeries>,
+    hists: BTreeMap<String, HistogramSeries>,
+}
+
+impl Registry {
+    pub fn new(width_s: f64) -> Registry {
+        Registry {
+            spec: WindowSpec::new(width_s),
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        }
+    }
+
+    pub fn spec(&self) -> WindowSpec {
+        self.spec
+    }
+
+    /// Count one event at time `t_s`.
+    pub fn inc(&mut self, name: &str, t_s: f64) {
+        let w = self.spec.index(t_s);
+        self.counters.entry(name.to_string()).or_default().inc(w);
+    }
+
+    /// Accumulate `v` into the gauge window covering `t_s`.
+    pub fn gauge_add(&mut self, name: &str, t_s: f64, v: f64) {
+        let w = self.spec.index(t_s);
+        self.gauges.entry(name.to_string()).or_default().add(w, v);
+    }
+
+    /// Distribute the span `[start_s, end_s)` across the windows it
+    /// overlaps, accumulating the overlap seconds into each — the feed
+    /// behind busy-seconds/utilization gauges.
+    pub fn add_span(&mut self, name: &str, start_s: f64, end_s: f64) {
+        if end_s <= start_s {
+            return;
+        }
+        let gauge = self.gauges.entry(name.to_string()).or_default();
+        let (w0, w1) = (self.spec.index(start_s), self.spec.index(end_s));
+        for w in w0..=w1 {
+            let ws = self.spec.start_s(w);
+            let overlap = end_s.min(ws + self.spec.width_s) - start_s.max(ws);
+            if overlap > 0.0 {
+                gauge.add(w, overlap);
+            }
+        }
+    }
+
+    /// Record a distribution sample at time `t_s`.
+    pub fn observe(&mut self, name: &str, t_s: f64, v: f64) {
+        let w = self.spec.index(t_s);
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(|| HistogramSeries::new(WINDOW_SKETCH_EPS))
+            .observe(w, v);
+    }
+
+    pub fn counter(&self, name: &str) -> Option<&CounterSeries> {
+        self.counters.get(name)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<&GaugeSeries> {
+        self.gauges.get(name)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistogramSeries> {
+        self.hists.get(name)
+    }
+
+    /// Number of windows spanned by any registered series.
+    pub fn windows(&self) -> usize {
+        let c = self.counters.values().map(CounterSeries::windows).max().unwrap_or(0);
+        let g = self.gauges.values().map(GaugeSeries::windows).max().unwrap_or(0);
+        let h = self.hists.values().map(HistogramSeries::windows).max().unwrap_or(0);
+        c.max(g).max(h)
+    }
+}
+
+/// Integer totals of a [`WindowedSeries`] — the quantities that must
+/// reconcile bit-exactly with `SimReport`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeriesTotals {
+    pub offered: u64,
+    pub completed: u64,
+    pub shed_queue_full: u64,
+    pub shed_sla: u64,
+    pub shed_no_bucket: u64,
+    pub shed_failed: u64,
+    pub shed_unroutable: u64,
+}
+
+impl SeriesTotals {
+    pub fn shed(&self) -> u64 {
+        self.shed_queue_full
+            + self.shed_sla
+            + self.shed_no_bucket
+            + self.shed_failed
+            + self.shed_unroutable
+    }
+}
+
+/// The fixed-schema product of a monitored run: every per-window series the
+/// SLO layer, the CLI tables, the chrome-trace counter tracks, and the
+/// bench extras consume. All vectors have length `windows`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowedSeries {
+    pub width_s: f64,
+    pub windows: usize,
+    /// Arrivals per window (completed + shed, attributed at arrival).
+    pub offered: Vec<u64>,
+    /// Completions per window (attributed at finish).
+    pub completed: Vec<u64>,
+    pub shed_queue_full: Vec<u64>,
+    pub shed_sla: Vec<u64>,
+    pub shed_no_bucket: Vec<u64>,
+    pub shed_failed: Vec<u64>,
+    pub shed_unroutable: Vec<u64>,
+    /// Completions per window / width.
+    pub qps: Vec<f64>,
+    pub p50_ms: Vec<f64>,
+    pub p99_ms: Vec<f64>,
+    /// Latency sketch per window (ms) — the SLO layer reads budget
+    /// exceedance fractions off these.
+    pub latency_ms: Vec<QuantileSketch>,
+    /// Compute busy-seconds / (width × cards); 0 when card count unknown.
+    pub card_util: Vec<f64>,
+    /// NIC rx+tx busy-seconds / (width × ports); 0 at the fleet tier.
+    pub nic_util: Vec<f64>,
+}
+
+impl WindowedSeries {
+    /// Derive the full windowed series from a run trace. `cards` and
+    /// `nic_ports` normalize the utilization gauges (0 disables one).
+    pub fn from_tracer(
+        tracer: &Tracer,
+        width_s: f64,
+        cards: usize,
+        nic_ports: usize,
+    ) -> WindowedSeries {
+        let mut reg = Registry::new(width_s);
+        for r in tracer.requests() {
+            reg.inc("offered", r.arrival_s);
+            if r.completed() {
+                reg.inc("completed", r.finish_s);
+                reg.observe("latency_ms", r.finish_s, r.latency_s() * 1e3);
+            } else {
+                // both routers stamp shed requests finish_s == arrival_s,
+                // so cause counts attribute to the arrival window
+                let name = match r.outcome {
+                    "shed-queue-full" => "shed_queue_full",
+                    "shed-sla" => "shed_sla",
+                    "shed-no-bucket" => "shed_no_bucket",
+                    "shed-failed" => "shed_failed",
+                    _ => "shed_unroutable",
+                };
+                reg.inc(name, r.arrival_s);
+            }
+        }
+        for s in tracer.segs() {
+            match s.kind {
+                SegKind::Compute => reg.add_span("card_busy_s", s.start_s, s.end_s),
+                SegKind::NicRx | SegKind::NicTx => reg.add_span("nic_busy_s", s.start_s, s.end_s),
+                SegKind::Link => {}
+            }
+        }
+        WindowedSeries::from_registry(&reg, cards, nic_ports)
+    }
+
+    /// Assemble the fixed schema out of a fed [`Registry`], padding every
+    /// series to the common window count.
+    pub fn from_registry(reg: &Registry, cards: usize, nic_ports: usize) -> WindowedSeries {
+        let windows = reg.windows();
+        let width_s = reg.spec().width_s;
+        let counts = |name: &str| -> Vec<u64> {
+            (0..windows).map(|w| reg.counter(name).map_or(0, |c| c.window(w))).collect()
+        };
+        let offered = counts("offered");
+        let completed = counts("completed");
+        let latency_ms: Vec<QuantileSketch> = (0..windows)
+            .map(|w| {
+                reg.hist("latency_ms")
+                    .and_then(|h| h.window(w))
+                    .cloned()
+                    .unwrap_or_else(|| QuantileSketch::new(WINDOW_SKETCH_EPS))
+            })
+            .collect();
+        let qps = completed.iter().map(|&c| c as f64 / width_s).collect();
+        let p50_ms = latency_ms.iter().map(|sk| sk.quantile(0.5)).collect();
+        let p99_ms = latency_ms.iter().map(|sk| sk.quantile(0.99)).collect();
+        let util = |name: &str, n: usize| -> Vec<f64> {
+            (0..windows)
+                .map(|w| {
+                    if n == 0 {
+                        0.0
+                    } else {
+                        reg.gauge(name).map_or(0.0, |g| g.window(w)) / (width_s * n as f64)
+                    }
+                })
+                .collect()
+        };
+        WindowedSeries {
+            width_s,
+            windows,
+            offered,
+            completed,
+            shed_queue_full: counts("shed_queue_full"),
+            shed_sla: counts("shed_sla"),
+            shed_no_bucket: counts("shed_no_bucket"),
+            shed_failed: counts("shed_failed"),
+            shed_unroutable: counts("shed_unroutable"),
+            qps,
+            p50_ms,
+            p99_ms,
+            latency_ms,
+            card_util: util("card_busy_s", cards),
+            nic_util: util("nic_busy_s", nic_ports),
+        }
+    }
+
+    /// Total sheds in window `w`, across all causes.
+    pub fn shed(&self, w: usize) -> u64 {
+        self.shed_queue_full[w]
+            + self.shed_sla[w]
+            + self.shed_no_bucket[w]
+            + self.shed_failed[w]
+            + self.shed_unroutable[w]
+    }
+
+    /// Sum every count series over all windows.
+    pub fn totals(&self) -> SeriesTotals {
+        let sum = |xs: &[u64]| xs.iter().sum::<u64>();
+        SeriesTotals {
+            offered: sum(&self.offered),
+            completed: sum(&self.completed),
+            shed_queue_full: sum(&self.shed_queue_full),
+            shed_sla: sum(&self.shed_sla),
+            shed_no_bucket: sum(&self.shed_no_bucket),
+            shed_failed: sum(&self.shed_failed),
+            shed_unroutable: sum(&self.shed_unroutable),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nums_u = |xs: &[u64]| Json::arr(xs.iter().map(|&x| Json::num(x as f64)).collect());
+        let nums_f = |xs: &[f64]| Json::arr(xs.iter().map(|&x| Json::num(x)).collect());
+        Json::obj(vec![
+            ("width_ms", Json::num(self.width_s * 1e3)),
+            ("windows", Json::num(self.windows as f64)),
+            ("offered", nums_u(&self.offered)),
+            ("completed", nums_u(&self.completed)),
+            (
+                "shed",
+                Json::obj(vec![
+                    ("queue_full", nums_u(&self.shed_queue_full)),
+                    ("sla", nums_u(&self.shed_sla)),
+                    ("no_bucket", nums_u(&self.shed_no_bucket)),
+                    ("failed", nums_u(&self.shed_failed)),
+                    ("unroutable", nums_u(&self.shed_unroutable)),
+                ]),
+            ),
+            ("qps", nums_f(&self.qps)),
+            ("p50_ms", nums_f(&self.p50_ms)),
+            ("p99_ms", nums_f(&self.p99_ms)),
+            ("card_util", nums_f(&self.card_util)),
+            ("nic_util", nums_f(&self.nic_util)),
+        ])
+    }
+}
+
+/// Incremental completion feed for the real servers on the wall (or
+/// modeled) clock: push each completion as it happens, then [`finish`]
+/// into a [`WindowedSeries`]. Closed-loop servers admit every request, so
+/// offered == completed and both attribute at completion time.
+///
+/// [`finish`]: WindowFeed::finish
+#[derive(Debug, Clone)]
+pub struct WindowFeed {
+    reg: Registry,
+}
+
+impl WindowFeed {
+    pub fn new(width_s: f64) -> WindowFeed {
+        WindowFeed { reg: Registry::new(width_s) }
+    }
+
+    pub fn complete(&mut self, t_s: f64, latency_s: f64) {
+        self.reg.inc("offered", t_s);
+        self.reg.inc("completed", t_s);
+        self.reg.observe("latency_ms", t_s, latency_s * 1e3);
+    }
+
+    pub fn finish(self) -> WindowedSeries {
+        WindowedSeries::from_registry(&self.reg, 0, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{RequestTrace, SegRecord};
+    use crate::obs::StageBreakdown;
+
+    #[test]
+    fn window_spec_maps_times_to_windows() {
+        let spec = WindowSpec::new(0.5);
+        assert_eq!(spec.index(0.0), 0);
+        assert_eq!(spec.index(0.49), 0);
+        assert_eq!(spec.index(0.5), 1);
+        assert_eq!(spec.index(-1.0), 0);
+        assert_eq!(spec.start_s(3), 1.5);
+    }
+
+    #[test]
+    fn counter_series_totals_reconcile() {
+        let mut c = CounterSeries::default();
+        c.inc(0);
+        c.inc(2);
+        c.add(2, 3);
+        assert_eq!(c.windows(), 3);
+        assert_eq!(c.window(1), 0);
+        assert_eq!(c.window(2), 4);
+        assert_eq!(c.total(), 5);
+        assert_eq!((0..c.windows()).map(|w| c.window(w)).sum::<u64>(), c.total());
+    }
+
+    #[test]
+    fn span_distributes_busy_seconds_across_windows() {
+        let mut reg = Registry::new(1.0);
+        reg.add_span("busy", 0.5, 2.5); // 0.5s in w0, 1.0s in w1, 0.5s in w2
+        let g = reg.gauge("busy").unwrap();
+        assert!((g.window(0) - 0.5).abs() < 1e-12);
+        assert!((g.window(1) - 1.0).abs() < 1e-12);
+        assert!((g.window(2) - 0.5).abs() < 1e-12);
+        // span ending exactly on a boundary adds nothing past it
+        reg.add_span("edge", 0.0, 1.0);
+        assert_eq!(reg.gauge("edge").unwrap().windows(), 1);
+    }
+
+    fn req(arrival_s: f64, finish_s: f64, outcome: &'static str) -> RequestTrace {
+        RequestTrace {
+            req: 0,
+            family: "recsys",
+            node: 0,
+            card: 0,
+            arrival_s,
+            finish_s,
+            stage: StageBreakdown::default(),
+            outcome,
+        }
+    }
+
+    #[test]
+    fn tracer_series_reconciles_and_attributes_windows() {
+        let mut t = Tracer::new();
+        t.request(req(0.1, 0.2, "completed")); // w0 -> w0
+        t.request(req(0.9, 1.4, "completed")); // offered w0, completed w1
+        t.request(req(1.1, 1.1, "shed-queue-full")); // w1
+        t.request(req(2.2, 2.2, "shed-failed")); // w2
+        t.seg(SegRecord {
+            kind: SegKind::Compute,
+            node: 0,
+            lane: 0,
+            start_s: 0.0,
+            end_s: 1.5,
+            req: 0,
+            dram: 0.0,
+        });
+        let s = WindowedSeries::from_tracer(&t, 1.0, 1, 0);
+        assert_eq!(s.windows, 3);
+        assert_eq!(s.offered, vec![2, 1, 1]);
+        assert_eq!(s.completed, vec![1, 1, 0]);
+        assert_eq!(s.shed_queue_full, vec![0, 1, 0]);
+        assert_eq!(s.shed_failed, vec![0, 0, 1]);
+        let tot = s.totals();
+        assert_eq!(tot.offered, 4);
+        assert_eq!(tot.completed + tot.shed(), tot.offered);
+        assert!((s.qps[0] - 1.0).abs() < 1e-12);
+        // 100ms completion in w0; 500ms in w1
+        assert!((s.p99_ms[0] - 100.0).abs() < 1e-9);
+        assert!((s.p99_ms[1] - 500.0).abs() < 1e-9);
+        assert!((s.card_util[0] - 1.0).abs() < 1e-12);
+        assert!((s.card_util[1] - 0.5).abs() < 1e-12);
+        assert_eq!(s.nic_util, vec![0.0, 0.0, 0.0]);
+        // every series padded to the same length
+        assert_eq!(s.p50_ms.len(), s.windows);
+        assert_eq!(s.latency_ms.len(), s.windows);
+    }
+
+    #[test]
+    fn window_feed_matches_series_schema() {
+        let mut f = WindowFeed::new(0.25);
+        for i in 0..8 {
+            f.complete(i as f64 * 0.1, 0.005);
+        }
+        let s = f.finish();
+        assert_eq!(s.totals().offered, 8);
+        assert_eq!(s.totals().completed, 8);
+        assert_eq!(s.windows, 3);
+        assert!((s.p50_ms[0] - 5.0).abs() < 1e-9);
+        let js = s.to_json();
+        assert_eq!(js.get("windows").and_then(Json::as_usize), Some(3));
+        assert_eq!(js.get("offered").and_then(Json::as_arr).map(|a| a.len()), Some(3));
+    }
+}

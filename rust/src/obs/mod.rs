@@ -1,9 +1,10 @@
-//! Observability: request-level tracing, stage latency attribution, and
-//! occupancy timelines for the serving tiers (the paper's §VI/§VII
-//! performance-optimization tooling — knowing *why* a deployment is slow,
-//! not just *that* p99 regressed).
+//! Observability: request-level tracing, stage latency attribution,
+//! occupancy timelines, and windowed telemetry with SLO monitoring for the
+//! serving tiers (the paper's §VI/§VII performance-optimization and
+//! deployment-operations tooling — knowing *why* a deployment is slow, and
+//! catching it degrading *as it happens*, not just that p99 regressed).
 //!
-//! Two layers with very different cost contracts:
+//! Three layers with distinct cost contracts:
 //!
 //! - **Stage attribution** ([`StageBreakdown`]/[`StageStats`]) is always on.
 //!   It is pure arithmetic over timestamps the routers already compute —
@@ -17,13 +18,25 @@
 //!   records per-request lifecycle spans and per-card / per-NIC / DRAM
 //!   occupancy segments on the modeled clock, exportable as a Chrome
 //!   trace-event JSON ([`chrome_trace`]) loadable in Perfetto.
+//! - **Windowed telemetry + SLO** ([`WindowedSeries`]/[`SloSpec`]) derives
+//!   fixed-width time-series (QPS, latency quantiles, utilization,
+//!   shed-by-cause) *post-hoc from the trace*, then runs declarative
+//!   error-budget burn-rate rules over them ([`evaluate`]) to emit
+//!   deterministic alert events. Because it reads the plan rather than
+//!   instrumenting the planner, it inherits tracing's cost contract: off
+//!   means bit-identical and allocation-free.
 //!
-//! See `rust/docs/observability.md` for the span model and stage taxonomy.
+//! See `rust/docs/observability.md` for the span model and stage taxonomy,
+//! and `rust/docs/metrics.md` for window semantics and the SLO layer.
 
 mod export;
+pub mod metrics;
+pub mod slo;
 mod stages;
 mod trace;
 
-pub use export::chrome_trace;
-pub use stages::{Stage, StageBreakdown, StageStats};
+pub use export::{chrome_trace, chrome_trace_monitored};
+pub use metrics::{Registry, SeriesTotals, WindowFeed, WindowSpec, WindowedSeries};
+pub use slo::{evaluate, AlertEvent, AlertKind, BurnRule, MonitorReport, Objective, SloSpec};
+pub use stages::{Stage, StageBreakdown, StageStats, STAGE_SAMPLE_CAP};
 pub use trace::{RequestTrace, SegKind, SegRecord, Tracer};

@@ -1,0 +1,396 @@
+//! Declarative SLOs and multi-window error-budget burn-rate alerting.
+//!
+//! An [`Objective`] defines what fraction of requests may be "bad" (the
+//! error budget): availability (shed = bad) or a p-latency budget
+//! (completion over budget = bad). A [`BurnRule`] watches how fast that
+//! budget burns: the event-weighted bad fraction over a trailing `long`
+//! window span, divided by the budget, must reach `factor` — and the same
+//! over the `short` span, so an alert both catches sustained burns and
+//! resets quickly once the burn stops (the standard multi-window
+//! burn-rate construction from the SRE literature).
+//!
+//! [`evaluate`] is a pure function of a [`WindowedSeries`] and a
+//! [`SloSpec`]: alert events are emitted at window granularity in
+//! chronological order, so determinism is inherited from the plan — the
+//! same seed and topology produce bit-identical alert streams regardless
+//! of worker count.
+
+use crate::obs::metrics::WindowedSeries;
+use crate::util::json::Json;
+
+/// What counts as a "bad" event for an objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ObjectiveKind {
+    /// Good = admitted and completed; bad = shed (any cause). `target` is
+    /// the availability goal, e.g. 0.99 → 1% error budget.
+    Availability { target: f64 },
+    /// Good = completed under `budget_ms`; bad = over it. `target` is the
+    /// fraction that must be under budget, e.g. 0.95.
+    LatencyBudget { budget_ms: f64, target: f64 },
+}
+
+/// A named service-level objective over the windowed series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Objective {
+    pub name: String,
+    pub kind: ObjectiveKind,
+}
+
+impl Objective {
+    pub fn availability(target: f64) -> Objective {
+        assert!(target > 0.0 && target < 1.0, "availability target {target} outside (0,1)");
+        Objective { name: "availability".to_string(), kind: ObjectiveKind::Availability { target } }
+    }
+
+    pub fn latency_budget(budget_ms: f64, target: f64) -> Objective {
+        assert!(target > 0.0 && target < 1.0, "latency target {target} outside (0,1)");
+        Objective {
+            name: "latency".to_string(),
+            kind: ObjectiveKind::LatencyBudget { budget_ms, target },
+        }
+    }
+
+    /// Allowed bad fraction (1 - target).
+    pub fn budget(&self) -> f64 {
+        match self.kind {
+            ObjectiveKind::Availability { target } => 1.0 - target,
+            ObjectiveKind::LatencyBudget { target, .. } => 1.0 - target,
+        }
+    }
+
+    /// Per-window `(bad, total)` event counts for this objective.
+    fn events(&self, s: &WindowedSeries) -> Vec<(u64, u64)> {
+        (0..s.windows)
+            .map(|w| match self.kind {
+                ObjectiveKind::Availability { .. } => (s.shed(w), s.offered[w]),
+                ObjectiveKind::LatencyBudget { budget_ms, .. } => {
+                    let sk = &s.latency_ms[w];
+                    let total = sk.count();
+                    (total - sk.rank_le(budget_ms), total)
+                }
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self.kind {
+            ObjectiveKind::Availability { target } => Json::obj(vec![
+                ("name", Json::str(&self.name)),
+                ("kind", Json::str("availability")),
+                ("target", Json::num(target)),
+            ]),
+            ObjectiveKind::LatencyBudget { budget_ms, target } => Json::obj(vec![
+                ("name", Json::str(&self.name)),
+                ("kind", Json::str("latency_budget")),
+                ("budget_ms", Json::num(budget_ms)),
+                ("target", Json::num(target)),
+            ]),
+        }
+    }
+}
+
+/// One multi-window burn-rate rule: fire when the budget burns at ≥
+/// `factor`× the sustainable rate over both trailing spans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurnRule {
+    pub label: String,
+    /// Trailing window count for the sustained condition.
+    pub long: usize,
+    /// Trailing window count for the reset condition.
+    pub short: usize,
+    pub factor: f64,
+}
+
+impl BurnRule {
+    pub fn new(label: &str, long: usize, short: usize, factor: f64) -> BurnRule {
+        assert!(long >= short && short >= 1, "burn rule spans long {long} >= short {short} >= 1");
+        assert!(factor > 0.0, "burn factor must be positive");
+        BurnRule { label: label.to_string(), long, short, factor }
+    }
+
+    /// Event-weighted burn rate over the trailing `k` windows ending at
+    /// `w` (clamped to run start): bad/total/budget; 0 with no events.
+    fn burn(events: &[(u64, u64)], w: usize, k: usize, budget: f64) -> f64 {
+        let lo = (w + 1).saturating_sub(k);
+        let (mut bad, mut total) = (0u64, 0u64);
+        for &(b, t) in &events[lo..=w] {
+            bad += b;
+            total += t;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            bad as f64 / total as f64 / budget
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("long_windows", Json::num(self.long as f64)),
+            ("short_windows", Json::num(self.short as f64)),
+            ("factor", Json::num(self.factor)),
+        ])
+    }
+}
+
+/// Fire/clear edge of one (objective, rule) alert state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertKind {
+    Fire,
+    Clear,
+}
+
+impl AlertKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertKind::Fire => "fire",
+            AlertKind::Clear => "clear",
+        }
+    }
+}
+
+/// A deterministic alert event on the run timeline, emitted at the end of
+/// the window whose evaluation flipped the state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertEvent {
+    pub objective: String,
+    pub rule: String,
+    pub kind: AlertKind,
+    pub window: usize,
+    /// End of the triggering window: `(window + 1) * width_s`.
+    pub t_s: f64,
+    pub burn_long: f64,
+    pub burn_short: f64,
+}
+
+impl AlertEvent {
+    pub fn describe(&self) -> String {
+        format!(
+            "[{:>9.4}s] {} {}/{} at window {} (burn long {:.1}x short {:.1}x)",
+            self.t_s,
+            self.kind.name().to_uppercase(),
+            self.objective,
+            self.rule,
+            self.window,
+            self.burn_long,
+            self.burn_short,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("objective", Json::str(&self.objective)),
+            ("rule", Json::str(&self.rule)),
+            ("kind", Json::str(self.kind.name())),
+            ("window", Json::num(self.window as f64)),
+            ("t_s", Json::num(self.t_s)),
+            ("burn_long", Json::num(self.burn_long)),
+            ("burn_short", Json::num(self.burn_short)),
+        ])
+    }
+}
+
+/// A set of objectives and the burn rules applied to each.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    pub objectives: Vec<Objective>,
+    pub rules: Vec<BurnRule>,
+}
+
+impl SloSpec {
+    /// The deployment default: 99% availability and 95%-under-p99-budget,
+    /// each watched by a fast page rule (3-window sustain, 1-window reset,
+    /// 8× burn) and a slow ticket rule (12/3 at 4×).
+    pub fn deployment_default(p99_budget_ms: f64) -> SloSpec {
+        SloSpec {
+            objectives: vec![
+                Objective::availability(0.99),
+                Objective::latency_budget(p99_budget_ms, 0.95),
+            ],
+            rules: vec![BurnRule::new("fast", 3, 1, 8.0), BurnRule::new("slow", 12, 3, 4.0)],
+        }
+    }
+
+    /// The loosest bound on detection latency: no rule needs more than
+    /// this many windows of history to reach its firing condition.
+    pub fn max_detection_windows(&self) -> usize {
+        self.rules.iter().map(|r| r.long).max().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("objectives", Json::arr(self.objectives.iter().map(Objective::to_json).collect())),
+            ("rules", Json::arr(self.rules.iter().map(BurnRule::to_json).collect())),
+        ])
+    }
+}
+
+/// Evaluate every (objective, rule) state machine over the series and
+/// return the fire/clear edges in chronological order (window-major, then
+/// spec order — fully deterministic).
+pub fn evaluate(series: &WindowedSeries, spec: &SloSpec) -> Vec<AlertEvent> {
+    let per_objective: Vec<Vec<(u64, u64)>> =
+        spec.objectives.iter().map(|o| o.events(series)).collect();
+    let mut firing = vec![false; spec.objectives.len() * spec.rules.len()];
+    let mut out = Vec::new();
+    for w in 0..series.windows {
+        for (oi, obj) in spec.objectives.iter().enumerate() {
+            let events = &per_objective[oi];
+            let budget = obj.budget();
+            for (ri, rule) in spec.rules.iter().enumerate() {
+                let burn_long = BurnRule::burn(events, w, rule.long, budget);
+                let burn_short = BurnRule::burn(events, w, rule.short, budget);
+                let now = burn_long >= rule.factor && burn_short >= rule.factor;
+                let state = &mut firing[oi * spec.rules.len() + ri];
+                if now != *state {
+                    *state = now;
+                    out.push(AlertEvent {
+                        objective: obj.name.clone(),
+                        rule: rule.label.clone(),
+                        kind: if now { AlertKind::Fire } else { AlertKind::Clear },
+                        window: w,
+                        t_s: (w + 1) as f64 * series.width_s,
+                        burn_long,
+                        burn_short,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Everything a monitored run produces beyond the `SimReport`: the
+/// windowed series, the spec it was judged against, and the alert stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorReport {
+    pub series: WindowedSeries,
+    pub spec: SloSpec,
+    pub alerts: Vec<AlertEvent>,
+}
+
+impl MonitorReport {
+    /// First Fire event for `objective` (any rule).
+    pub fn first_fire(&self, objective: &str) -> Option<&AlertEvent> {
+        self.alerts
+            .iter()
+            .find(|a| a.objective == objective && a.kind == AlertKind::Fire)
+    }
+
+    /// True when `objective` fired within `bound` windows of `from_window`.
+    pub fn fires_within(&self, objective: &str, from_window: usize, bound: usize) -> bool {
+        self.first_fire(objective)
+            .is_some_and(|a| a.window >= from_window && a.window <= from_window + bound)
+    }
+
+    /// True when every rule of `objective` that ever fired ended cleared.
+    pub fn cleared(&self, objective: &str) -> bool {
+        let mut last: std::collections::BTreeMap<&str, AlertKind> =
+            std::collections::BTreeMap::new();
+        for a in &self.alerts {
+            if a.objective == objective {
+                last.insert(a.rule.as_str(), a.kind);
+            }
+        }
+        last.values().all(|&k| k == AlertKind::Clear)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("windows", self.series.to_json()),
+            ("slo", self.spec.to_json()),
+            ("alerts", Json::arr(self.alerts.iter().map(AlertEvent::to_json).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::{Registry, WindowedSeries};
+
+    /// 12 windows, 100 offered each; sheds only in window 5.
+    fn shed_burst_series(shed_in_w5: u64) -> WindowedSeries {
+        let mut reg = Registry::new(1.0);
+        for w in 0..12usize {
+            let t = w as f64 + 0.5;
+            for i in 0..100u64 {
+                reg.inc("offered", t);
+                if w == 5 && i < shed_in_w5 {
+                    reg.inc("shed_failed", t);
+                } else {
+                    reg.inc("completed", t);
+                    reg.observe("latency_ms", t, 5.0);
+                }
+            }
+        }
+        WindowedSeries::from_registry(&reg, 0, 0)
+    }
+
+    #[test]
+    fn burn_alert_fires_on_burst_and_clears_after() {
+        let spec = SloSpec::deployment_default(50.0);
+        let s = shed_burst_series(40);
+        let report = MonitorReport { alerts: evaluate(&s, &spec), series: s, spec };
+        // fast rule: burn_short at w5 = 0.4/0.01 = 40x >= 8, long covers
+        // w3..w5 = 0.4/3/0.01 = 13x >= 8 -> fires exactly at the burst
+        let fire = report.first_fire("availability").expect("must fire");
+        assert_eq!(fire.window, 5);
+        assert_eq!(fire.rule, "fast");
+        assert!(report.fires_within("availability", 5, 3));
+        // short window moves past the burst -> clears
+        assert!(report.cleared("availability"));
+        let clear = report
+            .alerts
+            .iter()
+            .find(|a| a.kind == AlertKind::Clear && a.objective == "availability")
+            .expect("must clear");
+        assert!(clear.window > 5 && clear.window <= 8);
+        // healthy latency objective never fires
+        assert!(report.first_fire("latency").is_none());
+    }
+
+    #[test]
+    fn no_alerts_below_budget_and_evaluation_is_deterministic() {
+        let spec = SloSpec::deployment_default(50.0);
+        let s = shed_burst_series(0);
+        assert!(evaluate(&s, &spec).is_empty());
+        let s = shed_burst_series(25);
+        assert_eq!(evaluate(&s, &spec), evaluate(&s, &spec));
+    }
+
+    #[test]
+    fn latency_budget_objective_counts_over_budget_completions() {
+        let mut reg = Registry::new(1.0);
+        for w in 0..6usize {
+            let t = w as f64 + 0.5;
+            for i in 0..50u64 {
+                reg.inc("offered", t);
+                reg.inc("completed", t);
+                // window 2: every completion blows the 10ms budget
+                let ms = if w == 2 { 80.0 + i as f64 } else { 2.0 };
+                reg.observe("latency_ms", t, ms);
+            }
+        }
+        let s = WindowedSeries::from_registry(&reg, 0, 0);
+        // long span dilutes the burst by 3x: 50/150 bad / 0.05 budget = 6.7x
+        let spec = SloSpec {
+            objectives: vec![Objective::latency_budget(10.0, 0.95)],
+            rules: vec![BurnRule::new("fast", 3, 1, 4.0)],
+        };
+        let alerts = evaluate(&s, &spec);
+        assert!(!alerts.is_empty());
+        assert_eq!(alerts[0].kind, AlertKind::Fire);
+        assert_eq!(alerts[0].window, 2);
+        assert_eq!(alerts.last().unwrap().kind, AlertKind::Clear);
+    }
+
+    #[test]
+    fn spec_json_round_trips_shape() {
+        let spec = SloSpec::deployment_default(25.0);
+        let js = spec.to_json();
+        assert_eq!(js.get("rules").and_then(Json::as_arr).map(|r| r.len()), Some(2));
+        assert_eq!(spec.max_detection_windows(), 12);
+    }
+}

@@ -17,7 +17,7 @@
 //!   the single-node fleet tier.
 
 use crate::util::json::Json;
-use crate::util::stats::exact_quantile;
+use crate::util::stats::{exact_quantile, QuantileSketch};
 
 /// One stage of the request lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,44 +98,119 @@ impl StageBreakdown {
     }
 }
 
-/// Aggregated stage samples: exact mean + p99 per stage. Keeps raw samples
-/// because the bucketed [`crate::util::stats::Histogram`] is too coarse for
-/// sub-millisecond transfer stages — the sample count is bounded by the
-/// trace length, so memory stays proportional to requests routed.
+/// Raw samples kept per stage before [`StageStats`] spills into a
+/// [`QuantileSketch`]. Below the cap every statistic is exact (the bucketed
+/// [`crate::util::stats::Histogram`] is too coarse for sub-millisecond
+/// transfer stages); above it, memory stays `O(1/eps)` per stage however
+/// long the run, at the cost of an `eps/2` rank error on the p99.
+pub const STAGE_SAMPLE_CAP: usize = 8192;
+
+/// Rank-error fraction of the spill sketches: p99 within ±0.1% rank.
+const STAGE_SKETCH_EPS: f64 = 0.002;
+
+/// Aggregated stage samples: exact mean, and a p99 that is exact up to
+/// [`STAGE_SAMPLE_CAP`] requests and sketch-approximate beyond it.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StageStats {
     samples: [Vec<f64>; 5],
+    /// Engaged once `count` passes [`STAGE_SAMPLE_CAP`]; raw samples are
+    /// drained into it and later adds bypass `samples` entirely.
+    spill: Option<Box<[QuantileSketch; 5]>>,
+    count: usize,
+    sums: [f64; 5],
 }
 
 impl StageStats {
     pub fn add(&mut self, b: &StageBreakdown) {
+        self.count += 1;
         for stage in Stage::ALL {
-            self.samples[stage.index()].push(b.get(stage));
+            self.sums[stage.index()] += b.get(stage);
+        }
+        if let Some(spill) = &mut self.spill {
+            for stage in Stage::ALL {
+                spill[stage.index()].add(b.get(stage));
+            }
+        } else {
+            for stage in Stage::ALL {
+                self.samples[stage.index()].push(b.get(stage));
+            }
+            if self.count > STAGE_SAMPLE_CAP {
+                self.spill_to_sketch();
+            }
         }
     }
 
     pub fn merge(&mut self, other: &StageStats) {
-        for (mine, theirs) in self.samples.iter_mut().zip(&other.samples) {
-            mine.extend_from_slice(theirs);
+        self.count += other.count;
+        for i in 0..self.sums.len() {
+            self.sums[i] += other.sums[i];
         }
+        if self.spill.is_none() && other.spill.is_none() && self.count <= STAGE_SAMPLE_CAP {
+            for (mine, theirs) in self.samples.iter_mut().zip(&other.samples) {
+                mine.extend_from_slice(theirs);
+            }
+            return;
+        }
+        if self.spill.is_none() {
+            self.spill_to_sketch();
+        }
+        let spill = self.spill.as_mut().expect("spilled above");
+        if let Some(theirs) = &other.spill {
+            for (sk, other_sk) in spill.iter_mut().zip(theirs.iter()) {
+                sk.merge(other_sk);
+            }
+        } else {
+            for (sk, xs) in spill.iter_mut().zip(&other.samples) {
+                for &x in xs {
+                    sk.add(x);
+                }
+            }
+        }
+    }
+
+    fn spill_to_sketch(&mut self) {
+        let mut sketches: Box<[QuantileSketch; 5]> =
+            Box::new(std::array::from_fn(|_| QuantileSketch::new(STAGE_SKETCH_EPS)));
+        for (sk, xs) in sketches.iter_mut().zip(self.samples.iter_mut()) {
+            for &x in xs.iter() {
+                sk.add(x);
+            }
+            xs.clear();
+            xs.shrink_to_fit();
+        }
+        self.spill = Some(sketches);
     }
 
     /// Number of requests sampled.
     pub fn count(&self) -> usize {
-        self.samples[0].len()
+        self.count
+    }
+
+    /// True once raw samples spilled into the sketch (p99 now approximate).
+    pub fn capped(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    /// Raw samples + sketch items currently held — bounded by
+    /// `STAGE_SAMPLE_CAP` per stage regardless of run length.
+    pub fn footprint(&self) -> usize {
+        self.samples.iter().map(Vec::len).sum::<usize>()
+            + self.spill.as_ref().map_or(0, |sp| sp.iter().map(QuantileSketch::footprint).sum())
     }
 
     pub fn mean(&self, stage: Stage) -> f64 {
-        let xs = &self.samples[stage.index()];
-        if xs.is_empty() {
+        if self.count == 0 {
             0.0
         } else {
-            xs.iter().sum::<f64>() / xs.len() as f64
+            self.sums[stage.index()] / self.count as f64
         }
     }
 
     pub fn p99(&self, stage: Stage) -> f64 {
-        exact_quantile(&self.samples[stage.index()], 0.99)
+        match &self.spill {
+            Some(spill) => spill[stage.index()].quantile(0.99),
+            None => exact_quantile(&self.samples[stage.index()], 0.99),
+        }
     }
 
     /// The stage with the largest mean — the regime label ("NIC-bound",
@@ -215,6 +290,34 @@ mod tests {
         b.add(&b2);
         a.merge(&b);
         assert_eq!(a, all);
+    }
+
+    #[test]
+    fn stats_cap_bounds_memory_and_keeps_p99_close() {
+        let n = 4 * STAGE_SAMPLE_CAP;
+        let mut s = StageStats::default();
+        for i in 0..n {
+            // deterministic shuffle of 0..n, one distinct value per request
+            let v = ((i * 104_729) % n) as f64;
+            s.add(&StageBreakdown { queue_s: v, ..StageBreakdown::default() });
+        }
+        assert!(s.capped());
+        assert_eq!(s.count(), n);
+        assert!(s.footprint() <= 5 * STAGE_SAMPLE_CAP, "footprint {}", s.footprint());
+        // mean stays exact (running sum), p99 within the sketch rank bound
+        let exact_mean = (n - 1) as f64 / 2.0;
+        assert!((s.mean(Stage::Queue) - exact_mean).abs() < 1e-9);
+        let p99 = s.p99(Stage::Queue);
+        let target = (0.99 * n as f64).ceil();
+        assert!((p99 - target).abs() <= 0.002 * n as f64, "p99 {p99} vs {target}");
+        // merging a raw-sample batch into a capped one routes via the sketch
+        let mut extra = StageStats::default();
+        for _ in 0..10 {
+            extra.add(&StageBreakdown { queue_s: 1e9, ..StageBreakdown::default() });
+        }
+        s.merge(&extra);
+        assert_eq!(s.count(), n + 10);
+        assert_eq!(s.p99(Stage::Compute), 0.0);
     }
 
     #[test]

@@ -383,6 +383,7 @@ impl Cluster {
             wall_s: span,
             clock: Clock::Modeled,
             stages: StageStats::default(),
+            windows: None,
         };
         let mut cluster = mk();
         let mut per_node: Vec<NodeMetrics> = plan

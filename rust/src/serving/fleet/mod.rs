@@ -399,6 +399,7 @@ impl Fleet {
             wall_s: span_s,
             clock,
             stages: StageStats::default(),
+            windows: None,
         };
         let mut node = mk();
         let mut families: Vec<FamilyMetrics> = Family::ALL

@@ -21,7 +21,7 @@ pub mod simulation;
 
 use crate::numerics::arena;
 use crate::numerics::weights::WeightGen;
-use crate::obs::StageStats;
+use crate::obs::{StageStats, WindowFeed, WindowedSeries};
 use crate::numerics::HostTensor;
 use crate::runtime::artifact::table_index;
 use crate::runtime::{Clock, Engine, Precision, PrepareOptions, PreparedModel};
@@ -54,6 +54,10 @@ pub struct ServerMetrics {
     /// modeled-clock routing tiers (fleet/cluster); empty for the
     /// wall-clock family servers, whose latency has no modeled stages.
     pub stages: StageStats,
+    /// Fixed-width windowed telemetry ([`crate::obs::metrics`]), collected
+    /// when [`ServeOptions::window_s`] is set on a streaming
+    /// (single-worker) serve path; `None` otherwise.
+    pub windows: Option<WindowedSeries>,
 }
 
 impl ServerMetrics {
@@ -102,6 +106,13 @@ pub struct ServeOptions {
     /// `with_precision` constructors) — for benches that only mean
     /// anything on one numerics path.
     pub precision: Option<Precision>,
+    /// When `Some`, the streaming (single-worker) serve paths collect
+    /// fixed-width windowed telemetry at this width into
+    /// [`ServerMetrics::windows`] — wall seconds on the wall clock,
+    /// modeled seconds on the sim backend. Fan-out paths ignore it: their
+    /// completion order is scheduler-dependent, and the windowed series is
+    /// only reported where it is deterministic.
+    pub window_s: Option<f64>,
 }
 
 impl Default for ServeOptions {
@@ -114,6 +125,7 @@ impl Default for ServeOptions {
             clock: None,
             backend: None,
             precision: None,
+            window_s: None,
         }
     }
 }
@@ -572,16 +584,16 @@ impl RecsysServer {
     ) -> Result<ServerMetrics> {
         opts.check(self.clock, &self.backend, self.precision)?;
         if opts.workers > 1 || !opts.pipeline {
-            self.serve_concurrent(reqs, opts.workers.max(1))
+            self.serve_concurrent(reqs, opts.workers.max(1), opts.window_s)
         } else {
-            self.serve_pipelined(reqs)
+            self.serve_pipelined(reqs, opts.window_s)
         }
     }
 
     /// Deprecated positional forerunner of [`RecsysServer::serve_with`].
     #[deprecated(note = "use serve_with(reqs, &ServeOptions::default())")]
     pub fn serve(self: &Arc<Self>, reqs: Vec<RecsysRequest>) -> Result<ServerMetrics> {
-        self.serve_pipelined(reqs)
+        self.serve_pipelined(reqs, None)
     }
 
     /// Deprecated positional forerunner of [`RecsysServer::serve_with`]
@@ -592,7 +604,7 @@ impl RecsysServer {
         reqs: Vec<RecsysRequest>,
         workers: usize,
     ) -> Result<ServerMetrics> {
-        self.serve_concurrent(reqs, workers)
+        self.serve_concurrent(reqs, workers, None)
     }
 
     /// Closed-loop serving of `reqs` with cross-request pipelining: request
@@ -600,7 +612,11 @@ impl RecsysServer {
     /// On the modeled clock, the histogram records the modeled per-request
     /// latency and the wall time is the steady-state pipeline span (fill +
     /// bottleneck stage per subsequent request).
-    fn serve_pipelined(self: &Arc<Self>, reqs: Vec<RecsysRequest>) -> Result<ServerMetrics> {
+    fn serve_pipelined(
+        self: &Arc<Self>,
+        reqs: Vec<RecsysRequest>,
+        window_s: Option<f64>,
+    ) -> Result<ServerMetrics> {
         let (tx, rx) = mpsc::sync_channel::<(usize, Instant, HostTensor, HostTensor)>(2);
         let me = Arc::clone(self);
         let producer = std::thread::spawn(move || -> Result<()> {
@@ -613,6 +629,7 @@ impl RecsysServer {
         });
 
         let mut latency = Histogram::latency();
+        let mut feed = window_s.map(WindowFeed::new);
         let wall0 = Instant::now();
         let mut completed = 0usize;
         for (_i, t0, dense, sparse) in rx.iter() {
@@ -624,6 +641,15 @@ impl RecsysServer {
                 Some(m) => m.request_s(),
             };
             latency.add(dt);
+            if let Some(f) = feed.as_mut() {
+                // tandem-queue completion times: fill, then one per
+                // bottleneck period (matches the modeled wall below)
+                let t_s = match self.modeled {
+                    None => wall0.elapsed().as_secs_f64(),
+                    Some(m) => m.request_s() + completed as f64 * m.bottleneck_s(),
+                };
+                f.complete(t_s, dt);
+            }
             completed += 1;
         }
         producer.join().map_err(|_| err!("producer panicked"))??;
@@ -643,6 +669,7 @@ impl RecsysServer {
             wall_s,
             clock: self.clock,
             stages: StageStats::default(),
+            windows: feed.map(WindowFeed::finish),
         })
     }
 
@@ -656,6 +683,7 @@ impl RecsysServer {
         self: &Arc<Self>,
         reqs: Vec<RecsysRequest>,
         workers: usize,
+        window_s: Option<f64>,
     ) -> Result<ServerMetrics> {
         let n = reqs.len();
         let clock = self.clock;
@@ -668,7 +696,8 @@ impl RecsysServer {
         let wall0 = Instant::now();
         if workers <= 1 {
             let mut latency = Histogram::latency();
-            for req in &reqs {
+            let mut feed = window_s.map(WindowFeed::new);
+            for (i, req) in reqs.iter().enumerate() {
                 let t0 = Instant::now();
                 arena::recycle_tensor(self.infer(req)?);
                 let dt = match modeled {
@@ -676,6 +705,13 @@ impl RecsysServer {
                     Some(m) => m.request_s(),
                 };
                 latency.add(dt);
+                if let Some(f) = feed.as_mut() {
+                    let t_s = match modeled {
+                        None => wall0.elapsed().as_secs_f64(),
+                        Some(m) => (i + 1) as f64 * m.request_s(),
+                    };
+                    f.complete(t_s, dt);
+                }
             }
             let wall_s = modeled_wall.unwrap_or_else(|| wall0.elapsed().as_secs_f64());
             return Ok(ServerMetrics {
@@ -685,6 +721,7 @@ impl RecsysServer {
                 wall_s,
                 clock,
                 stages: StageStats::default(),
+                windows: feed.map(WindowFeed::finish),
             });
         }
         let me = Arc::clone(self);
@@ -704,6 +741,7 @@ impl RecsysServer {
             wall_s,
             clock,
             stages: StageStats::default(),
+            windows: None,
         })
     }
 }
@@ -853,7 +891,7 @@ impl NlpServer {
         opts: &ServeOptions,
     ) -> Result<(ServerMetrics, f64)> {
         opts.check(self.clock, &self.backend, self.precision)?;
-        self.serve_batched(reqs, opts.max_batch, opts.length_aware, opts.workers)
+        self.serve_batched(reqs, opts.max_batch, opts.length_aware, opts.workers, opts.window_s)
     }
 
     /// Deprecated positional forerunner of [`NlpServer::serve_with`].
@@ -865,7 +903,7 @@ impl NlpServer {
         length_aware: bool,
         workers: usize,
     ) -> Result<(ServerMetrics, f64)> {
-        self.serve_batched(reqs, max_batch, length_aware, workers)
+        self.serve_batched(reqs, max_batch, length_aware, workers, None)
     }
 
     /// Serve a request stream through the batcher with `workers` batches in
@@ -878,6 +916,7 @@ impl NlpServer {
         max_batch: usize,
         length_aware: bool,
         workers: usize,
+        window_s: Option<f64>,
     ) -> Result<(ServerMetrics, f64)> {
         if max_batch == 0 {
             return Err(err!("max_batch must be >= 1"));
@@ -897,6 +936,7 @@ impl NlpServer {
         if workers <= 1 {
             // stream: run each batch as it forms (O(max_batch) memory)
             let mut latency = Histogram::latency();
+            let mut feed = window_s.map(WindowFeed::new);
             let (mut completed, mut items, mut padded, mut real) = (0usize, 0usize, 0usize, 0usize);
             let mut modeled_total = 0.0f64;
             let mut run = |batch: &NlpBatch| -> Result<()> {
@@ -906,10 +946,17 @@ impl NlpServer {
                     Clock::Wall => t0.elapsed().as_secs_f64(),
                     Clock::Modeled => self.modeled_batch_s(batch),
                 };
+                modeled_total += dt;
+                let finish_s = match clock {
+                    Clock::Wall => wall0.elapsed().as_secs_f64(),
+                    Clock::Modeled => modeled_total,
+                };
                 for _ in 0..batch.requests.len() {
                     latency.add(dt);
+                    if let Some(f) = feed.as_mut() {
+                        f.complete(finish_s, dt);
+                    }
                 }
-                modeled_total += dt;
                 completed += 1;
                 items += batch.requests.len();
                 padded += batch.padded_tokens();
@@ -938,6 +985,7 @@ impl NlpServer {
                     wall_s,
                     clock,
                     stages: StageStats::default(),
+                    windows: feed.map(WindowFeed::finish),
                 },
                 waste,
             ));
@@ -984,7 +1032,15 @@ impl NlpServer {
         };
         let waste = 1.0 - real as f64 / padded.max(1) as f64;
         Ok((
-            ServerMetrics { latency, completed, items, wall_s, clock, stages: StageStats::default() },
+            ServerMetrics {
+                latency,
+                completed,
+                items,
+                wall_s,
+                clock,
+                stages: StageStats::default(),
+                windows: None,
+            },
             waste,
         ))
     }
@@ -1104,7 +1160,7 @@ impl CvServer {
         opts: &ServeOptions,
     ) -> Result<ServerMetrics> {
         opts.check(self.clock, &self.backend, self.precision)?;
-        self.serve_closed_loop(n, batch, gen, opts.workers)
+        self.serve_closed_loop(n, batch, gen, opts.workers, opts.window_s)
     }
 
     /// Deprecated positional forerunner of [`CvServer::serve_with`].
@@ -1116,7 +1172,7 @@ impl CvServer {
         gen: &mut crate::workloads::CvGen,
         workers: usize,
     ) -> Result<ServerMetrics> {
-        self.serve_closed_loop(n, batch, gen, workers)
+        self.serve_closed_loop(n, batch, gen, workers, None)
     }
 
     /// Closed-loop throughput at a batch size with `workers` requests in
@@ -1127,6 +1183,7 @@ impl CvServer {
         batch: usize,
         gen: &mut crate::workloads::CvGen,
         workers: usize,
+        window_s: Option<f64>,
     ) -> Result<ServerMetrics> {
         // batch is part of the request contract: validate against the
         // compiled variants before generating anything
@@ -1148,7 +1205,8 @@ impl CvServer {
             let wall0 = Instant::now();
             let mut gen_s = 0.0f64;
             let mut latency = Histogram::latency();
-            for _ in 0..n {
+            let mut feed = window_s.map(WindowFeed::new);
+            for i in 0..n {
                 let g0 = Instant::now();
                 let req = gen.next(batch);
                 gen_s += g0.elapsed().as_secs_f64();
@@ -1161,6 +1219,13 @@ impl CvServer {
                     Clock::Modeled => modeled_req_s,
                 };
                 latency.add(dt);
+                if let Some(f) = feed.as_mut() {
+                    let t_s = match clock {
+                        Clock::Wall => (wall0.elapsed().as_secs_f64() - gen_s).max(0.0),
+                        Clock::Modeled => (i + 1) as f64 * modeled_req_s,
+                    };
+                    f.complete(t_s, dt);
+                }
             }
             let wall_s = modeled_wall
                 .unwrap_or_else(|| (wall0.elapsed().as_secs_f64() - gen_s).max(0.0));
@@ -1171,6 +1236,7 @@ impl CvServer {
                 wall_s,
                 clock,
                 stages: StageStats::default(),
+                windows: feed.map(WindowFeed::finish),
             });
         }
         // workers share the request set, so it must be materialized
@@ -1193,6 +1259,7 @@ impl CvServer {
             wall_s,
             clock,
             stages: StageStats::default(),
+            windows: None,
         })
     }
 }

@@ -27,7 +27,9 @@
 //! on the shared heap — see `serving::fleet::router` and
 //! `serving::cluster::router` for the extension points.
 
-use crate::obs::{Stage, StageStats, Tracer};
+use crate::obs::{
+    AlertEvent, MonitorReport, SloSpec, Stage, StageStats, Tracer, WindowedSeries,
+};
 use crate::serving::cluster::{Cluster, ClusterMetrics, NodePolicy, Scenario};
 use crate::serving::fleet::{Fleet, FleetMetrics, FleetRequest, RoutePolicy};
 use crate::util::bench::BenchReport;
@@ -180,6 +182,32 @@ impl Simulation {
         };
         Ok((report, tracer))
     }
+
+    /// [`Simulation::run_traced`] plus windowed telemetry and SLO
+    /// monitoring: derives a fixed-width [`WindowedSeries`] from the trace
+    /// (so the planner hot loop is untouched — see [`crate::obs::metrics`]),
+    /// evaluates `spec`'s burn-rate rules over it, and folds both into the
+    /// report (`report.windows` / `report.alerts`) alongside the full
+    /// [`MonitorReport`] and the [`Tracer`] for chrome-trace export.
+    pub fn run_monitored(
+        &self,
+        window_s: f64,
+        spec: &SloSpec,
+    ) -> Result<(SimReport, Tracer, MonitorReport)> {
+        let (mut report, tracer) = self.run_traced()?;
+        let (cards, nic_ports) = match &self.tier {
+            Tier::Fleet(fleet) => (fleet.replicas().cards, 0),
+            Tier::Cluster(cluster) => {
+                let nodes = cluster.nodes();
+                (nodes.iter().map(|n| n.spec.cards).sum(), 2 * nodes.len())
+            }
+        };
+        let series = WindowedSeries::from_tracer(&tracer, window_s, cards, nic_ports);
+        let alerts = crate::obs::evaluate(&series, spec);
+        report.windows = Some(series.clone());
+        report.alerts = alerts.clone();
+        Ok((report, tracer, MonitorReport { series, spec: spec.clone(), alerts }))
+    }
 }
 
 /// The unified result shape both tiers produce: headline numbers up
@@ -210,6 +238,11 @@ pub struct SimReport {
     pub shed_unroutable: usize,
     /// Stage-level latency attribution over the completed requests.
     pub stages: StageStats,
+    /// Fixed-width windowed telemetry ([`Simulation::run_monitored`] runs
+    /// only); its totals reconcile bit-exactly with the counts above.
+    pub windows: Option<WindowedSeries>,
+    /// SLO burn-rate alert events (monitored runs only).
+    pub alerts: Vec<AlertEvent>,
     /// Full fleet metrics (fleet-tier runs).
     pub fleet: Option<FleetMetrics>,
     /// Full cluster metrics (cluster-tier runs).
@@ -236,6 +269,8 @@ impl SimReport {
             shed_failed: 0,
             shed_unroutable: 0,
             stages: m.node.stages.clone(),
+            windows: None,
+            alerts: Vec::new(),
             fleet: Some(m),
             cluster: None,
         }
@@ -260,6 +295,8 @@ impl SimReport {
             shed_failed: m.shed_failed,
             shed_unroutable: m.shed_unroutable,
             stages: m.cluster.stages.clone(),
+            windows: None,
+            alerts: Vec::new(),
             fleet: None,
             cluster: Some(m),
         }
@@ -281,6 +318,27 @@ impl SimReport {
         self.shed as f64 / self.offered.max(1) as f64
     }
 
+    /// Windowed-series conservation: every count series, summed over all
+    /// windows, equals the corresponding run total — bit-exactly (these
+    /// are integer counts; each request lands in exactly one window).
+    /// `true` when no windowed telemetry was collected.
+    pub fn windows_reconcile(&self) -> bool {
+        match &self.windows {
+            None => true,
+            Some(s) => {
+                let t = s.totals();
+                t.offered == self.offered as u64
+                    && t.completed == self.completed as u64
+                    && t.shed() == self.shed as u64
+                    && t.shed_queue_full == self.shed_queue_full as u64
+                    && t.shed_sla == self.shed_sla as u64
+                    && t.shed_no_bucket == self.shed_no_bucket as u64
+                    && t.shed_failed == self.shed_failed as u64
+                    && t.shed_unroutable == self.shed_unroutable as u64
+            }
+        }
+    }
+
     /// Mean seconds attributed to `stage` over the completed requests.
     pub fn stage_mean_s(&self, stage: Stage) -> f64 {
         self.stages.mean(stage)
@@ -296,16 +354,24 @@ impl SimReport {
         r.qps = self.qps;
         r.p50_ms = self.p50_ms;
         r.p99_ms = self.p99_ms;
-        r.with(
-            "shed_causes",
-            Json::obj(vec![
-                ("queue_full", Json::num(self.shed_queue_full as f64)),
-                ("sla", Json::num(self.shed_sla as f64)),
-                ("no_bucket", Json::num(self.shed_no_bucket as f64)),
-                ("failed", Json::num(self.shed_failed as f64)),
-                ("unroutable", Json::num(self.shed_unroutable as f64)),
-            ]),
-        )
-        .with("stages", self.stages.to_json())
+        let mut r = r
+            .with(
+                "shed_causes",
+                Json::obj(vec![
+                    ("queue_full", Json::num(self.shed_queue_full as f64)),
+                    ("sla", Json::num(self.shed_sla as f64)),
+                    ("no_bucket", Json::num(self.shed_no_bucket as f64)),
+                    ("failed", Json::num(self.shed_failed as f64)),
+                    ("unroutable", Json::num(self.shed_unroutable as f64)),
+                ]),
+            )
+            .with("stages", self.stages.to_json());
+        if let Some(w) = &self.windows {
+            r = r.with("windows", w.to_json()).with(
+                "alerts",
+                Json::arr(self.alerts.iter().map(AlertEvent::to_json).collect()),
+            );
+        }
+        r
     }
 }

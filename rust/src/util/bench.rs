@@ -196,6 +196,244 @@ impl BenchReport {
     }
 }
 
+/// Regression gating: diff a fresh `BENCH_*.json` against a committed
+/// baseline with per-metric direction-aware tolerances (`fbia bench-diff`,
+/// the blocking CI step).
+///
+/// Semantics: every metric that a [`Tolerances`] rule names **and** the
+/// baseline contains is checked; baselines may therefore be partial (pin
+/// only what is known-stable) and grow as maintainers refresh them from
+/// green CI artifacts. Improvements always pass — only movement in the
+/// regression direction counts against the tolerance. Acceptance flags are
+/// one-way: a flag that is `true` in the baseline must still be `true` in
+/// the fresh report.
+pub mod compare {
+    use crate::util::error::{err, Result};
+    use crate::util::json::Json;
+
+    /// Which direction of movement is a regression.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Direction {
+        /// Throughput-like: smaller is a regression.
+        HigherIsBetter,
+        /// Latency/shed-like: larger is a regression.
+        LowerIsBetter,
+        /// Identity-like (workload size): any difference is a regression.
+        Exact,
+    }
+
+    /// One metric's gate: regression direction plus tolerance. A fresh
+    /// value regressing by more than `abs_tol + rel_tol * |baseline|`
+    /// fails the gate.
+    #[derive(Debug, Clone)]
+    pub struct MetricRule {
+        pub metric: String,
+        pub direction: Direction,
+        pub rel_tol: f64,
+        pub abs_tol: f64,
+    }
+
+    /// The rule set applied by a diff. [`Tolerances::default`] covers the
+    /// shared `BENCH_*.json` schema:
+    ///
+    /// | metric      | direction | rel    | abs   |
+    /// |-------------|-----------|--------|-------|
+    /// | `offered`   | exact     | —      | —     |
+    /// | `completed` | higher    | 2%     | 2     |
+    /// | `shed`      | lower     | 2%     | 2     |
+    /// | `shed_rate` | lower     | 5%     | 0.005 |
+    /// | `qps`       | higher    | 5%     | 0     |
+    /// | `p50_ms`    | lower     | 5%     | 0.05  |
+    /// | `p99_ms`    | lower     | 5%     | 0.05  |
+    ///
+    /// The small absolute slacks keep near-zero baselines (a handful of
+    /// shed requests, sub-ms latencies) from failing on one-count wiggle.
+    #[derive(Debug, Clone)]
+    pub struct Tolerances {
+        pub rules: Vec<MetricRule>,
+    }
+
+    impl Default for Tolerances {
+        fn default() -> Tolerances {
+            let rule = |metric: &str, direction: Direction, rel_tol: f64, abs_tol: f64| {
+                MetricRule { metric: metric.to_string(), direction, rel_tol, abs_tol }
+            };
+            Tolerances {
+                rules: vec![
+                    rule("offered", Direction::Exact, 0.0, 0.0),
+                    rule("completed", Direction::HigherIsBetter, 0.02, 2.0),
+                    rule("shed", Direction::LowerIsBetter, 0.02, 2.0),
+                    rule("shed_rate", Direction::LowerIsBetter, 0.05, 0.005),
+                    rule("qps", Direction::HigherIsBetter, 0.05, 0.0),
+                    rule("p50_ms", Direction::LowerIsBetter, 0.05, 0.05),
+                    rule("p99_ms", Direction::LowerIsBetter, 0.05, 0.05),
+                ],
+            }
+        }
+    }
+
+    impl Tolerances {
+        /// Override one metric's relative tolerance (CLI `--tol`). Errors
+        /// on a metric no rule covers, so typos don't silently un-gate.
+        pub fn set_rel(&mut self, metric: &str, rel_tol: f64) -> Result<()> {
+            match self.rules.iter_mut().find(|r| r.metric == metric) {
+                Some(r) => {
+                    r.rel_tol = rel_tol;
+                    Ok(())
+                }
+                None => Err(err!(
+                    "no tolerance rule for metric '{metric}' (known: {})",
+                    self.rules.iter().map(|r| r.metric.as_str()).collect::<Vec<_>>().join(", ")
+                )),
+            }
+        }
+    }
+
+    /// One checked metric's outcome.
+    #[derive(Debug, Clone)]
+    pub struct MetricDiff {
+        pub metric: String,
+        pub base: f64,
+        pub fresh: f64,
+        /// Signed relative change, `(fresh - base) / |base|`.
+        pub delta_rel: f64,
+        pub within: bool,
+    }
+
+    /// The full verdict for one bench file pair.
+    #[derive(Debug, Clone)]
+    pub struct DiffReport {
+        pub bench: String,
+        pub metrics: Vec<MetricDiff>,
+        /// Acceptance flags true in the baseline but not in the fresh run.
+        pub flag_regressions: Vec<String>,
+        /// Metrics the baseline pins but the fresh report lacks.
+        pub missing: Vec<String>,
+    }
+
+    impl DiffReport {
+        pub fn pass(&self) -> bool {
+            self.missing.is_empty()
+                && self.flag_regressions.is_empty()
+                && self.metrics.iter().all(|m| m.within)
+        }
+
+        /// Human-readable failure lines (empty when passing).
+        pub fn failures(&self) -> Vec<String> {
+            let mut out = Vec::new();
+            for m in &self.metrics {
+                if !m.within {
+                    out.push(format!(
+                        "{}: {} regressed {:.6} -> {:.6} ({:+.1}%)",
+                        self.bench,
+                        m.metric,
+                        m.base,
+                        m.fresh,
+                        100.0 * m.delta_rel
+                    ));
+                }
+            }
+            for f in &self.flag_regressions {
+                out.push(format!("{}: acceptance flag '{f}' no longer holds", self.bench));
+            }
+            for m in &self.missing {
+                out.push(format!("{}: metric '{m}' pinned by baseline but absent", self.bench));
+            }
+            out
+        }
+
+        pub fn to_json(&self) -> Json {
+            Json::obj(vec![
+                ("bench", Json::str(&self.bench)),
+                ("pass", Json::Bool(self.pass())),
+                (
+                    "metrics",
+                    Json::arr(
+                        self.metrics
+                            .iter()
+                            .map(|m| {
+                                Json::obj(vec![
+                                    ("metric", Json::str(&m.metric)),
+                                    ("base", Json::num(m.base)),
+                                    ("fresh", Json::num(m.fresh)),
+                                    ("delta_rel", Json::num(m.delta_rel)),
+                                    ("within", Json::Bool(m.within)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "flag_regressions",
+                    Json::arr(self.flag_regressions.iter().map(|f| Json::str(f)).collect()),
+                ),
+                ("missing", Json::arr(self.missing.iter().map(|m| Json::str(m)).collect())),
+            ])
+        }
+    }
+
+    /// Diff `fresh` against `baseline` (both parsed `BENCH_*.json`
+    /// objects) under `tol`. Errors only on malformed inputs (missing
+    /// `bench` field, mismatched bench identities) — regressions are
+    /// reported in the returned [`DiffReport`], not as errors.
+    pub fn compare(baseline: &Json, fresh: &Json, tol: &Tolerances) -> Result<DiffReport> {
+        let bench = baseline
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("baseline has no 'bench' field"))?
+            .to_string();
+        let fresh_bench = fresh
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("fresh report has no 'bench' field"))?;
+        if fresh_bench != bench {
+            return Err(err!(
+                "bench identity mismatch: baseline is '{bench}', fresh is '{fresh_bench}'"
+            ));
+        }
+        let mut metrics = Vec::new();
+        let mut missing = Vec::new();
+        for rule in &tol.rules {
+            let Some(base) = baseline.get(&rule.metric).and_then(Json::as_f64) else {
+                continue; // baseline doesn't pin this metric
+            };
+            let Some(fresh_v) = fresh.get(&rule.metric).and_then(Json::as_f64) else {
+                missing.push(rule.metric.clone());
+                continue;
+            };
+            let worse = match rule.direction {
+                Direction::HigherIsBetter => base - fresh_v,
+                Direction::LowerIsBetter => fresh_v - base,
+                Direction::Exact => (fresh_v - base).abs(),
+            };
+            let within = worse <= rule.abs_tol + rule.rel_tol * base.abs();
+            metrics.push(MetricDiff {
+                metric: rule.metric.clone(),
+                base,
+                fresh: fresh_v,
+                delta_rel: (fresh_v - base) / base.abs().max(1e-12),
+                within,
+            });
+        }
+        let mut flag_regressions = Vec::new();
+        if let Some(flags) = baseline.get("acceptance").and_then(Json::as_obj) {
+            for (name, holds) in flags {
+                if holds.as_bool() != Some(true) {
+                    continue;
+                }
+                let still = fresh
+                    .path(&format!("acceptance.{name}"))
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                if !still {
+                    flag_regressions.push(name.clone());
+                }
+            }
+        }
+        Ok(DiffReport { bench, metrics, flag_regressions, missing })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,5 +456,111 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" µs"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    fn sample_report() -> Json {
+        let mut r = BenchReport::new("unit_diff", "sim", "modeled").accept("conserves", true);
+        r.offered = 1000;
+        r.completed = 980;
+        r.shed = 20;
+        r.qps = 5000.0;
+        r.p50_ms = 4.0;
+        r.p99_ms = 9.0;
+        r.to_json()
+    }
+
+    fn with_metric(mut j: Json, key: &str, v: f64) -> Json {
+        if let Json::Obj(m) = &mut j {
+            m.insert(key.to_string(), Json::num(v));
+        }
+        j
+    }
+
+    #[test]
+    fn diff_passes_on_identical_and_improved_reports() {
+        let base = sample_report();
+        let tol = compare::Tolerances::default();
+        let same = compare::compare(&base, &base, &tol).unwrap();
+        assert!(same.pass(), "identical report must pass: {:?}", same.failures());
+        // Improvements in every direction-aware metric also pass.
+        let better = with_metric(
+            with_metric(with_metric(base.clone(), "qps", 9000.0), "p99_ms", 2.0),
+            "shed",
+            0.0,
+        );
+        let d = compare::compare(&base, &better, &tol).unwrap();
+        assert!(d.pass(), "improvements must pass: {:?}", d.failures());
+    }
+
+    #[test]
+    fn diff_fails_on_ten_percent_qps_regression() {
+        let base = sample_report();
+        let fresh = with_metric(base.clone(), "qps", 5000.0 * 0.89);
+        let d = compare::compare(&base, &fresh, &compare::Tolerances::default()).unwrap();
+        assert!(!d.pass());
+        let qps = d.metrics.iter().find(|m| m.metric == "qps").unwrap();
+        assert!(!qps.within);
+        assert!(d.failures().iter().any(|f| f.contains("qps")));
+        // A 3% dip stays inside the default 5% gate.
+        let mild = with_metric(base.clone(), "qps", 5000.0 * 0.97);
+        assert!(compare::compare(&base, &mild, &compare::Tolerances::default()).unwrap().pass());
+    }
+
+    #[test]
+    fn diff_fails_on_acceptance_flag_and_exact_mismatch() {
+        let base = sample_report();
+        // Acceptance flag true -> false is a regression.
+        let mut b = BenchReport::new("unit_diff", "sim", "modeled").accept("conserves", false);
+        b.offered = 1000;
+        b.completed = 980;
+        b.shed = 20;
+        b.qps = 5000.0;
+        b.p50_ms = 4.0;
+        b.p99_ms = 9.0;
+        let broken = b.to_json();
+        let d = compare::compare(&base, &broken, &compare::Tolerances::default()).unwrap();
+        assert_eq!(d.flag_regressions, vec!["conserves".to_string()]);
+        assert!(!d.pass());
+        // `offered` is gated exactly: a different workload size fails.
+        let resized = with_metric(base.clone(), "offered", 999.0);
+        assert!(!compare::compare(&base, &resized, &compare::Tolerances::default()).unwrap().pass());
+        // Different bench identity is a hard error, not a diff result.
+        let other = BenchReport::new("other_bench", "sim", "modeled").to_json();
+        assert!(compare::compare(&base, &other, &compare::Tolerances::default()).is_err());
+    }
+
+    #[test]
+    fn diff_checks_only_baseline_pinned_metrics() {
+        // A partial baseline (no latency numbers) must not fail a fresh
+        // report over metrics it never pinned.
+        let base = Json::obj(vec![
+            ("bench", Json::str("unit_diff")),
+            ("offered", Json::num(1000.0)),
+            ("acceptance", Json::obj(vec![("conserves", Json::Bool(true))])),
+        ]);
+        let fresh = sample_report();
+        let d = compare::compare(&base, &fresh, &compare::Tolerances::default()).unwrap();
+        assert!(d.pass(), "{:?}", d.failures());
+        assert_eq!(d.metrics.len(), 1, "only 'offered' is pinned");
+        // But a pinned metric missing from the fresh report fails.
+        let base2 = with_metric(base, "qps", 5000.0);
+        let mut thin = fresh.clone();
+        if let Json::Obj(m) = &mut thin {
+            m.remove("qps");
+        }
+        let d2 = compare::compare(&base2, &thin, &compare::Tolerances::default()).unwrap();
+        assert_eq!(d2.missing, vec!["qps".to_string()]);
+        assert!(!d2.pass());
+    }
+
+    #[test]
+    fn tolerance_override_rejects_unknown_metric() {
+        let mut tol = compare::Tolerances::default();
+        tol.set_rel("qps", 0.20).unwrap();
+        assert!(tol.set_rel("no_such_metric", 0.1).is_err());
+        // The widened gate now admits a 15% dip.
+        let base = sample_report();
+        let fresh = with_metric(base.clone(), "qps", 5000.0 * 0.85);
+        assert!(compare::compare(&base, &fresh, &tol).unwrap().pass());
     }
 }

@@ -197,6 +197,223 @@ impl Histogram {
     }
 }
 
+/// Streaming quantile sketch: a deterministic CKMS-style compressed
+/// summary with a provable nearest-rank error bound.
+///
+/// The summary is a sorted list of `(value, weight)` items; every item's
+/// value is one of the inserted samples and its weight counts the samples
+/// it absorbed (all `<=` its value, all `>` the previous item's value —
+/// ranges stay contiguous and disjoint). Compression merges adjacent items
+/// while the combined weight stays under `eps * n / 2`, so a quantile
+/// query returns an actual sample whose rank overshoots the exact
+/// nearest-rank target by fewer than `eps * n / 2` positions. Memory is
+/// `O(1/eps)` items regardless of stream length.
+///
+/// Everything is deterministic in insert order (no randomization), and two
+/// sketches with the same `eps` merge deterministically — the properties
+/// the windowed telemetry layer needs for bit-reproducible reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    eps: f64,
+    /// Sorted `(value, absorbed sample count)` summary.
+    items: Vec<(f64, u64)>,
+    /// Recent inserts, merged into `items` every [`QuantileSketch::BUF`].
+    buf: Vec<f64>,
+    n: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new(QuantileSketch::DEFAULT_EPS)
+    }
+}
+
+impl QuantileSketch {
+    /// Default rank-error fraction: p99 of a long stream lands within
+    /// ±0.25% of the exact rank.
+    pub const DEFAULT_EPS: f64 = 0.005;
+    /// Insert buffer length between compactions.
+    const BUF: usize = 64;
+
+    /// `eps` is the rank-error fraction (see the type docs); must be in
+    /// `(0, 0.5)`.
+    pub fn new(eps: f64) -> QuantileSketch {
+        assert!(eps > 0.0 && eps < 0.5, "eps {eps} outside (0, 0.5)");
+        QuantileSketch {
+            eps,
+            items: Vec::new(),
+            buf: Vec::new(),
+            n: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.buf.push(x);
+        if self.buf.len() >= Self::BUF {
+            self.flush();
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Exact stream minimum (tracked outside the summary).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact stream maximum.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Summary + buffer entries currently held — the memory footprint, in
+    /// samples. Bounded by `O(1/eps)` however long the stream runs.
+    pub fn footprint(&self) -> usize {
+        self.items.len() + self.buf.len()
+    }
+
+    /// Merge `other`'s samples into `self` (deterministic in operand
+    /// order). The stricter (smaller) `eps` of the two wins.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.n == 0 {
+            return;
+        }
+        self.eps = self.eps.min(other.eps);
+        self.flush();
+        let mut theirs = other.clone();
+        theirs.flush();
+        let merged = merge_weighted(&self.items, &theirs.items);
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.items = merged;
+        self.compress();
+    }
+
+    /// Approximate quantile, `q` in `[0, 1]`, matching [`exact_quantile`]'s
+    /// nearest-rank `ceil(q*n)` convention. Returns an inserted sample
+    /// whose rank is within `eps*n/2` above the exact target; `q <= 0` and
+    /// `q >= 1` return the exact min/max.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut sorted_buf = self.buf.clone();
+        sorted_buf.sort_by(f64::total_cmp);
+        let mut cum = 0u64;
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut last = self.min;
+        while i < self.items.len() || j < sorted_buf.len() {
+            let take_item = match (self.items.get(i), sorted_buf.get(j)) {
+                (Some(&(v, _)), Some(&b)) => v <= b,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            let (v, w) = if take_item {
+                let it = self.items[i];
+                i += 1;
+                it
+            } else {
+                let b = sorted_buf[j];
+                j += 1;
+                (b, 1)
+            };
+            cum += w;
+            last = v;
+            if cum >= target {
+                return v;
+            }
+        }
+        last
+    }
+
+    /// Approximate count of samples `<= v` (rank error below `eps*n/2`).
+    pub fn rank_le(&self, v: f64) -> u64 {
+        let mut cum = 0u64;
+        for &(x, w) in &self.items {
+            if x <= v {
+                cum += w;
+            } else {
+                break;
+            }
+        }
+        cum + self.buf.iter().filter(|&&b| b <= v).count() as u64
+    }
+
+    /// Approximate fraction of samples `<= v`; 0 for an empty sketch.
+    pub fn fraction_le(&self, v: f64) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.rank_le(v) as f64 / self.n as f64
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        self.buf.sort_by(f64::total_cmp);
+        let fresh: Vec<(f64, u64)> = self.buf.drain(..).map(|x| (x, 1)).collect();
+        self.items = merge_weighted(&self.items, &fresh);
+        self.compress();
+    }
+
+    fn compress(&mut self) {
+        let wcap = ((self.eps * self.n as f64 / 2.0) as u64).max(1);
+        let mut out: Vec<(f64, u64)> = Vec::with_capacity(self.items.len());
+        for &(v, w) in &self.items {
+            match out.last_mut() {
+                // absorbing a neighbor keeps the upper value, so every
+                // item still bounds its range from above
+                Some(last) if last.1 + w <= wcap => {
+                    last.0 = v;
+                    last.1 += w;
+                }
+                _ => out.push((v, w)),
+            }
+        }
+        self.items = out;
+    }
+}
+
+/// Merge two sorted weighted lists into one (stable: `a` wins ties).
+fn merge_weighted(a: &[(f64, u64)], b: &[(f64, u64)]) -> Vec<(f64, u64)> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let take_a = match (a.get(i), b.get(j)) {
+            (Some(&(av, _)), Some(&(bv, _))) => av <= bv,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if take_a {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out
+}
+
 /// Exact small-sample quantile (nearest-rank, matching
 /// [`Histogram::percentile`]'s `ceil(q*n)` convention): `q` in `[0, 1]`,
 /// sorts a copy of the samples. The log-bucketed [`Histogram`] has ~1.5%
@@ -355,6 +572,120 @@ mod tests {
         let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
         assert_eq!(exact_quantile(&xs, 0.99), 990.0);
         assert_eq!(exact_quantile(&xs, 0.501), 501.0);
+    }
+
+    /// SplitMix64 — deterministic pseudo-random stream for sketch tests.
+    fn splitmix(seed: &mut u64) -> f64 {
+        *seed = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = *seed;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Ground truth: the sketch answer must sit between the exact
+    /// quantiles at `q` and `q + eps/2` (plus one rank of slack for the
+    /// ceil convention) — the bound promised by the type docs.
+    fn assert_sketch_within_eps(xs: &[f64], sk: &QuantileSketch, eps: f64) {
+        let n = xs.len() as f64;
+        for q in [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let got = sk.quantile(q);
+            let lo = exact_quantile(xs, q);
+            let hi = exact_quantile(xs, (q + eps / 2.0 + 1.5 / n).min(1.0));
+            assert!(
+                got >= lo && got <= hi,
+                "q={q}: sketch {got} outside exact [{lo}, {hi}]"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_matches_exact_quantile_within_eps() {
+        let eps = 0.01;
+        // uniform, heavy-tailed, and duplicate-rich streams
+        let mut seed = 7u64;
+        let streams: Vec<Vec<f64>> = vec![
+            (0..50_000).map(|_| splitmix(&mut seed)).collect(),
+            (0..50_000).map(|_| splitmix(&mut seed).powi(8) * 1e3).collect(),
+            (0..50_000).map(|_| (splitmix(&mut seed) * 10.0).floor()).collect(),
+        ];
+        for xs in &streams {
+            let mut sk = QuantileSketch::new(eps);
+            for &x in xs {
+                sk.add(x);
+            }
+            assert_eq!(sk.count(), xs.len() as u64);
+            assert_sketch_within_eps(xs, &sk, eps);
+            // exact extremes survive compression
+            let mut sorted = xs.clone();
+            sorted.sort_by(f64::total_cmp);
+            assert_eq!(sk.min(), sorted[0]);
+            assert_eq!(sk.max(), *sorted.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn sketch_is_exact_below_the_buffer_and_for_small_streams() {
+        // fewer samples than one compaction's weight cap => every item
+        // keeps weight 1 and queries reproduce exact_quantile bit-for-bit
+        let xs: Vec<f64> = (1..=200).map(|i| (i * 37 % 211) as f64).collect();
+        let mut sk = QuantileSketch::new(0.005);
+        for &x in &xs {
+            sk.add(x);
+        }
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(sk.quantile(q), exact_quantile(&xs, q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn sketch_footprint_is_bounded() {
+        let eps = 0.01;
+        let mut sk = QuantileSketch::new(eps);
+        let mut seed = 3u64;
+        for _ in 0..200_000 {
+            sk.add(splitmix(&mut seed));
+        }
+        // compress guarantees adjacent items can't both fit under the
+        // weight cap, so the summary holds < 4/eps items (+ buffer)
+        let cap = (4.0 / eps) as usize + 64;
+        assert!(sk.footprint() <= cap, "{} > {cap}", sk.footprint());
+    }
+
+    #[test]
+    fn sketch_merge_matches_single_stream_bound() {
+        let eps = 0.01;
+        let mut seed = 11u64;
+        let xs: Vec<f64> = (0..60_000).map(|_| splitmix(&mut seed) * 50.0).collect();
+        let (mut a, mut b) = (QuantileSketch::new(eps), QuantileSketch::new(eps));
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 { a.add(x) } else { b.add(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), xs.len() as u64);
+        assert_sketch_within_eps(&xs, &a, 2.0 * eps); // merge may double rank error
+        // deterministic: the same merge again gives the identical sketch
+        let (mut a2, mut b2) = (QuantileSketch::new(eps), QuantileSketch::new(eps));
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 { a2.add(x) } else { b2.add(x) }
+        }
+        a2.merge(&b2);
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn sketch_rank_le_counts_samples() {
+        let mut sk = QuantileSketch::new(0.02);
+        for i in 1..=10_000 {
+            sk.add(i as f64);
+        }
+        let got = sk.rank_le(2_500.0) as f64;
+        assert!((got - 2_500.0).abs() <= 0.02 * 10_000.0 / 2.0, "{got}");
+        assert_eq!(sk.rank_le(0.0), 0);
+        assert_eq!(sk.rank_le(1e9), 10_000);
+        assert!((sk.fraction_le(5_000.0) - 0.5).abs() < 0.011);
+        assert_eq!(QuantileSketch::default().fraction_le(1.0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Integration: windowed telemetry and SLO burn-rate monitoring
+//! ([`fbia::obs::metrics`] / [`fbia::obs::slo`]) plus the bench regression
+//! gate ([`fbia::util::bench::compare`]). Pins the ISSUE-10 acceptance
+//! criteria: windowed series reconcile bit-exactly with `SimReport`
+//! totals, a node-fail drill trips the availability burn alert within
+//! bounded windows and clears after recovery — deterministically across
+//! DES seeds — monitoring off leaves reports bit-identical, and an
+//! injected ≥10% QPS regression fails the bench diff.
+
+use fbia::config::Config;
+use fbia::obs::{MonitorReport, SloSpec, Tracer, STAGE_SAMPLE_CAP};
+use fbia::platform::NodeSpec;
+use fbia::runtime::Engine;
+use fbia::serving::cluster::{Cluster, EventKind, NodeEvent, NodePolicy, Scenario};
+use fbia::serving::fleet::{
+    Arrival, Family, FamilyMix, Fleet, FleetConfig, FleetRequest, TrafficGen,
+};
+use fbia::serving::simulation::{SimReport, Simulation};
+use fbia::serving::{RecsysServer, ServeOptions};
+use fbia::util::bench::compare;
+use fbia::util::json::Json;
+use fbia::workloads::RecsysGen;
+use std::path::Path;
+use std::sync::Arc;
+
+fn engine() -> Arc<Engine> {
+    Arc::new(
+        Engine::auto_with(Path::new("/nonexistent/artifacts"), Some("sim")).expect("engine"),
+    )
+}
+
+fn cluster(specs: &[NodeSpec], fcfg: FleetConfig) -> Arc<Cluster> {
+    Arc::new(
+        Cluster::new(Path::new("/nonexistent/artifacts"), &Config::default(), specs, fcfg)
+            .expect("cluster"),
+    )
+}
+
+/// Mix-weighted mean modeled request cost over one node's per-family costs.
+fn mean_cost_s(fam_cost_s: &[f64; 3], mix: FamilyMix) -> f64 {
+    let w = [mix.recsys, mix.nlp, mix.cv];
+    let total: f64 = w.iter().sum();
+    fam_cost_s.iter().zip(w.iter()).map(|(c, w)| c * w).sum::<f64>() / total
+}
+
+/// The loosest Table I family budget in ms — the monitor CLI's default.
+fn loose_budget_ms() -> f64 {
+    Family::ALL.iter().map(|f| f.latency_budget_s() * 1e3).fold(f64::MIN, f64::max)
+}
+
+/// The CLI's probe calibration (see `fbia monitor`): peak simultaneous
+/// in-flight count on `node` and the midpoint of the widest interval
+/// holding it, restricted to midpoints ≤ `t_max`.
+fn inflight_peak(tracer: &Tracer, node: usize, t_max: f64) -> (usize, f64) {
+    let mut edges: Vec<(f64, i64)> = Vec::new();
+    for r in tracer.requests() {
+        if r.node == node && r.completed() && r.finish_s > r.arrival_s {
+            edges.push((r.arrival_s, 1));
+            edges.push((r.finish_s, -1));
+        }
+    }
+    edges.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    let mut cur = 0i64;
+    let mut best = (0i64, -1.0f64, 0.0f64);
+    for i in 0..edges.len().saturating_sub(1) {
+        cur += edges[i].1;
+        let (a, b) = (edges[i].0, edges[i + 1].0);
+        let mid = 0.5 * (a + b);
+        if cur > 0 && mid <= t_max && (cur, b - a) > (best.0, best.1) {
+            best = (cur, b - a, mid);
+        }
+    }
+    (best.0.max(0) as usize, best.2)
+}
+
+/// One calibrated node-fail drill at `des_seed` (3 nodes, open-loop
+/// Poisson at 1/4 of tier capacity — enough in-flight work to kill,
+/// enough headroom that the survivors absorb the reroute and the alert
+/// can clear). Returns the monitored report pair plus the fail geometry.
+struct Drill {
+    report: SimReport,
+    monitor: MonitorReport,
+    monitor2: MonitorReport,
+    plain: SimReport,
+    window_s: f64,
+    fail_at_s: f64,
+}
+
+fn fail_drill(des_seed: u64, spec: &SloSpec) -> Drill {
+    let eng = engine();
+    let fcfg = FleetConfig { des_seed, ..FleetConfig::default() };
+    let mix = FamilyMix::parse("70/20/10").unwrap();
+    let specs = vec![NodeSpec::default(); 3];
+    let cl = cluster(&specs, fcfg.clone());
+    let cost = mean_cost_s(&cl.nodes()[0].fam_cost_s, mix);
+    let rate_qps = specs.len() as f64 / (4.0 * cost);
+    let reqs: Vec<FleetRequest> =
+        TrafficGen::new(11, mix, Arrival::Poisson { rate_qps }, eng.manifest(), fcfg.recsys_batch)
+            .unwrap()
+            .take(360);
+    let horizon_s = reqs.last().unwrap().arrival_s();
+
+    let sim = |events: &[NodeEvent]| {
+        let mut s = Simulation::cluster(Arc::clone(&cl))
+            .node_policy(NodePolicy::WeightedCapacity)
+            .trace(reqs.clone());
+        if !events.is_empty() {
+            s = s.scenario(Scenario::new(events.to_vec()));
+        }
+        s
+    };
+    let (_, probe) = sim(&[]).run_traced().unwrap();
+    let (k, t_star) = inflight_peak(&probe, 0, 0.7 * horizon_s);
+    assert!(k > 0, "probe must find in-flight work on node 0 at 25% utilization");
+    let events = vec![NodeEvent { at_s: t_star, node: 0, kind: EventKind::Fail }];
+    let window_s = (horizon_s / 24.0).min(2.0 * k as f64 / rate_qps).max(1e-6);
+
+    let (report, _, monitor) = sim(&events).run_monitored(window_s, spec).unwrap();
+    let (_, _, monitor2) = sim(&events).run_monitored(window_s, spec).unwrap();
+    let plain = sim(&events).run().unwrap();
+    Drill { report, monitor, monitor2, plain, window_s, fail_at_s: t_star }
+}
+
+// ---------------------------------------------------------------------------
+// Windowed conservation on both tiers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn windowed_series_reconciles_on_both_tiers() {
+    let eng = engine();
+    let fcfg = FleetConfig::default();
+    let mix = FamilyMix::parse("70/20/10").unwrap();
+    let reqs: Vec<FleetRequest> =
+        TrafficGen::new(11, mix, Arrival::Burst, eng.manifest(), fcfg.recsys_batch)
+            .unwrap()
+            .take(80);
+    let spec = SloSpec::deployment_default(loose_budget_ms());
+
+    // fleet tier (burst: admission sheds exercise the cause series)
+    let fleet = Arc::new(Fleet::new(eng.clone(), fcfg.clone()).unwrap());
+    let (report, _, monitor) = Simulation::fleet(fleet)
+        .trace(reqs.clone())
+        .run_monitored(0.002, &spec)
+        .unwrap();
+    assert!(report.conserved());
+    assert!(report.windows_reconcile(), "fleet windows must reconcile with totals");
+    let s = report.windows.as_ref().unwrap();
+    assert!(s.windows > 0);
+    assert_eq!(s.totals().offered as usize, report.offered);
+    assert_eq!(s.totals().completed as usize, report.completed);
+    assert_eq!(s.totals().shed() as usize, report.shed);
+    assert_eq!(&monitor.series, s, "report carries the same series as the monitor");
+    // every vector padded to the common length
+    assert_eq!(s.qps.len(), s.windows);
+    assert_eq!(s.p99_ms.len(), s.windows);
+    assert_eq!(s.card_util.len(), s.windows);
+
+    // cluster tier, including NIC utilization series
+    let specs = vec![NodeSpec::default(); 2];
+    let cl = cluster(&specs, fcfg);
+    let (report, _, _) =
+        Simulation::cluster(cl).trace(reqs).run_monitored(0.002, &spec).unwrap();
+    assert!(report.conserved());
+    assert!(report.windows_reconcile(), "cluster windows must reconcile with totals");
+    let s = report.windows.as_ref().unwrap();
+    assert!(s.card_util.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u)));
+    assert!(s.nic_util.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u)));
+    // small runs keep raw stage samples; retention is bounded either way
+    assert!(!report.stages.capped());
+    assert!(report.stages.footprint() <= 5 * STAGE_SAMPLE_CAP);
+}
+
+// ---------------------------------------------------------------------------
+// The node-fail drill: fire within bound, clear after recovery, determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn node_fail_trips_burn_alert_within_bound_and_clears() {
+    let spec = SloSpec::deployment_default(loose_budget_ms());
+    let d = fail_drill(FleetConfig::default().des_seed, &spec);
+
+    assert!(d.report.conserved());
+    assert!(d.report.shed_failed > 0, "the calibrated kill must shed in-flight work");
+    assert!(d.report.windows_reconcile());
+
+    // fires within the detection bound around the kill window (sheds are
+    // attributed at arrival, so allow the bound on both sides)
+    let w_fail = (d.fail_at_s / d.window_s) as usize;
+    let slack = spec.max_detection_windows();
+    assert!(
+        d.monitor.fires_within("availability", w_fail.saturating_sub(slack), 2 * slack),
+        "availability burn alert must fire near window {w_fail}; alerts: {:?}",
+        d.monitor.alerts.iter().map(|a| a.describe()).collect::<Vec<_>>()
+    );
+    // ...and every rule that fired has cleared by the end of the series
+    assert!(
+        d.monitor.cleared("availability"),
+        "availability must clear after recovery; alerts: {:?}",
+        d.monitor.alerts.iter().map(|a| a.describe()).collect::<Vec<_>>()
+    );
+
+    // bit-determinism: the identical scenario yields an identical monitor
+    // report (series, spec, and alert stream compared structurally)
+    assert_eq!(d.monitor, d.monitor2, "monitored rerun must be bit-identical");
+
+    // monitoring off: the plain run's report is bit-identical
+    assert_eq!(d.plain.completed, d.report.completed);
+    assert_eq!(d.plain.shed, d.report.shed);
+    assert_eq!(d.plain.shed_failed, d.report.shed_failed);
+    assert_eq!(d.plain.qps.to_bits(), d.report.qps.to_bits());
+    assert_eq!(d.plain.p50_ms.to_bits(), d.report.p50_ms.to_bits());
+    assert_eq!(d.plain.p99_ms.to_bits(), d.report.p99_ms.to_bits());
+    assert_eq!(d.plain.span_s.to_bits(), d.report.span_s.to_bits());
+}
+
+#[test]
+fn burn_alert_lifecycle_holds_across_des_seeds() {
+    // the drill is re-calibrated per seed (its own probe, t*, and window
+    // width); detection and recovery must hold at each, and each must be
+    // internally bit-deterministic
+    let spec = SloSpec::deployment_default(loose_budget_ms());
+    for des_seed in [FleetConfig::default().des_seed ^ 0x5EED, 7u64] {
+        let d = fail_drill(des_seed, &spec);
+        let w_fail = (d.fail_at_s / d.window_s) as usize;
+        let slack = spec.max_detection_windows();
+        assert!(
+            d.monitor.fires_within("availability", w_fail.saturating_sub(slack), 2 * slack),
+            "seed {des_seed:#x}: alert must fire near window {w_fail}; alerts: {:?}",
+            d.monitor.alerts.iter().map(|a| a.describe()).collect::<Vec<_>>()
+        );
+        assert!(d.monitor.cleared("availability"), "seed {des_seed:#x}: alert must clear");
+        assert_eq!(d.monitor, d.monitor2, "seed {des_seed:#x}: rerun must be bit-identical");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bench regression gate, end to end off a real report
+// ---------------------------------------------------------------------------
+
+fn with_metric(mut doc: Json, key: &str, v: f64) -> Json {
+    if let Json::Obj(m) = &mut doc {
+        m.insert(key.to_string(), Json::num(v));
+    }
+    doc
+}
+
+#[test]
+fn bench_diff_gates_injected_qps_regression() {
+    let spec = SloSpec::deployment_default(loose_budget_ms());
+    let d = fail_drill(FleetConfig::default().des_seed, &spec);
+    let baseline = d
+        .report
+        .bench_report("monitor_drill", "sim")
+        .accept("windows_conserve_totals", d.report.windows_reconcile())
+        .to_json();
+    let tol = compare::Tolerances::default();
+
+    // identical fresh report passes
+    let same = compare::compare(&baseline, &baseline, &tol).unwrap();
+    assert!(same.pass(), "identical report must pass: {:?}", same.failures());
+
+    // a 10% QPS drop (well past the 5% tolerance) fails the gate
+    let qps = baseline.get("qps").and_then(Json::as_f64).unwrap();
+    let slower = with_metric(baseline.clone(), "qps", qps * 0.90);
+    let diff = compare::compare(&baseline, &slower, &tol).unwrap();
+    assert!(!diff.pass(), "a 10% QPS regression must fail the gate");
+    assert!(diff.failures().iter().any(|f| f.contains("qps")), "{:?}", diff.failures());
+
+    // ...while a 10% improvement passes (direction-aware)
+    let faster = with_metric(baseline.clone(), "qps", qps * 1.10);
+    assert!(compare::compare(&baseline, &faster, &tol).unwrap().pass());
+}
+
+// ---------------------------------------------------------------------------
+// Wall-clock tier: the streaming server feed reconciles too
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_window_feed_reconciles_on_sim_backend() {
+    let eng = engine();
+    let batch = 16;
+    let server = Arc::new(RecsysServer::new(eng.clone(), batch, "int8").unwrap());
+    let mut gen = RecsysGen::from_manifest(9, batch, eng.manifest()).unwrap();
+    let reqs: Vec<_> = (0..12).map(|_| gen.next()).collect();
+    let opts =
+        ServeOptions { workers: 1, window_s: Some(1e-4), ..ServeOptions::default() };
+
+    let m = server.serve_with(reqs.clone(), &opts).unwrap();
+    let s = m.windows.as_ref().expect("single-worker streaming path collects windows");
+    assert_eq!(s.totals().completed as usize, m.completed);
+    assert_eq!(s.totals().offered as usize, m.completed, "closed loop: offered == completed");
+    assert!(s.windows > 0);
+
+    // modeled clock: the series is deterministic across runs...
+    let m2 = server.serve_with(reqs.clone(), &opts).unwrap();
+    assert_eq!(m.windows, m2.windows, "modeled-clock window series must be deterministic");
+
+    // ...and turning the feed off changes nothing observable
+    let off = server
+        .serve_with(reqs, &ServeOptions { workers: 1, ..ServeOptions::default() })
+        .unwrap();
+    assert!(off.windows.is_none());
+    assert_eq!(off.completed, m.completed);
+    assert_eq!(off.wall_s.to_bits(), m.wall_s.to_bits());
+    assert_eq!(off.latency.p50().to_bits(), m.latency.p50().to_bits());
+}
